@@ -1,0 +1,103 @@
+"""AOT pipeline: lower every L2/L1 entry point to HLO TEXT under artifacts/.
+
+HLO *text* (never ``.serialize()``): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and gen_hlo.py there).
+
+Run once via ``make artifacts`` — Python never executes on the request
+path. Also writes ``artifacts/manifest.json`` recording the shapes baked
+into each artifact so the rust loader can sanity-check.
+
+Usage: cd python && python -m compile.aot [--out ../artifacts]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import mv_poly
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def model_artifacts():
+    """(name, fn, abstract args) for every model entry point."""
+    out = []
+    for mname, spec in M.MODELS.items():
+        eps = M.make_entry_points(spec)
+        d, i, k, b = spec.dim, spec.in_dim, 10, M.BATCH
+        out.append((f"{mname}_grad", eps["grad"], (f32(d), f32(b, i), f32(b, k))))
+        out.append(
+            (f"{mname}_signgrad", eps["signgrad"], (f32(d), f32(b, i), f32(b, k)))
+        )
+        out.append((f"{mname}_logits", eps["logits"], (f32(d), f32(b, i))))
+    return out
+
+
+def kernel_artifacts():
+    """The standalone mv_poly kernel at the vote dimensions rust uses."""
+    out = []
+    for d in (1024, 8192, 25600):
+        # 8192 = pad(7850 linear), 25600 = pad(25450 mlp) to BLOCK=512.
+        def entry(x, coeffs):
+            return (mv_poly.mv_poly_eval(x, coeffs),)
+
+        out.append(
+            (f"mv_poly_d{d}", entry, (i32(d), i32(mv_poly.MAX_COEFFS + 1)))
+        )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact-name filter"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {}
+    for name, fn, abstract_args in model_artifacts() + kernel_artifacts():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*abstract_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "inputs": [list(a.shape) for a in abstract_args],
+            "dtypes": [str(a.dtype) for a in abstract_args],
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

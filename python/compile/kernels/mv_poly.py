@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: majority-vote polynomial evaluation over F_p.
+
+The server-side vote readout of Hi-SAFE evaluates
+
+    F(x)_j = sum_k c_k * x_j^k  (mod p)        for j = 1..d
+
+on a model-sized vector ``x`` of canonical field elements (d ~ 10^4..10^5)
+with a tiny coefficient vector (deg(F) <= 32 for every group size the
+paper sweeps). The kernel is a **vectorized Horner scan over VMEM-resident
+int32 tiles**:
+
+* ``BlockSpec`` splits the d-vector into ``BLOCK``-lane tiles streamed
+  HBM->VMEM; the coefficient vector is broadcast to every tile (index_map
+  pins it to block 0).
+* Each tile performs the full Horner recurrence ``acc = (acc*x + c_k) % p``
+  entirely in VMEM — no HBM round-trips between Horner steps. This is the
+  TPU re-think of the paper's per-coordinate loop (DESIGN.md
+  §Hardware-Adaptation): registers -> VMEM tile, threadblock -> grid row.
+* The loop over coefficients is statically unrolled (``MAX_COEFFS`` is a
+  compile-time bound); unused high coefficients are zero and cost one
+  fused multiply-add-mod each — deg <= 32 keeps that negligible.
+
+Layout convention shared with the rust loader (`runtime::MvPolyKernel`):
+``coeffs`` has ``MAX_COEFFS + 1`` slots; slots ``[0, MAX_COEFFS)`` are the
+polynomial coefficients (zero-padded), and the **last slot carries p** so
+the artifact keeps a two-input signature.
+
+Overflow note: all values are canonical (< p <= 131), so
+``acc * x + c < 131^2 + 131 << 2^31`` — exact in int32.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is assessed analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Compile-time bounds shared with rust (runtime.rs::MvPolyKernel).
+MAX_COEFFS = 32
+BLOCK = 512
+
+
+def _horner_kernel(x_ref, c_ref, o_ref):
+    """One VMEM tile: full Horner recurrence, statically unrolled."""
+    x = x_ref[...]
+    p = c_ref[MAX_COEFFS]
+    acc = jnp.zeros_like(x)
+    # Horner from the highest stored coefficient down to c_0.
+    for k in reversed(range(MAX_COEFFS)):
+        acc = (acc * x + c_ref[k]) % p
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mv_poly_eval(x, coeffs, *, interpret=True):
+    """Evaluate F on canonical int32 inputs.
+
+    Args:
+      x: int32[d] canonical field elements, d divisible by BLOCK (callers
+         pad; the rust side bakes d per artifact).
+      coeffs: int32[MAX_COEFFS + 1]; see module docstring for layout.
+
+    Returns:
+      int32[d] with ``F(x) mod p`` (canonical).
+    """
+    d = x.shape[0]
+    if d % BLOCK != 0:
+        raise ValueError(f"d = {d} must be a multiple of BLOCK = {BLOCK}")
+    if coeffs.shape != (MAX_COEFFS + 1,):
+        raise ValueError(f"coeffs must have shape ({MAX_COEFFS + 1},)")
+    grid = (d // BLOCK,)
+    return pl.pallas_call(
+        _horner_kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            # broadcast the whole coefficient vector to every tile
+            pl.BlockSpec((MAX_COEFFS + 1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=interpret,
+    )(x, coeffs)
+
+
+def pack_coeffs(coeffs, p):
+    """Pack a python coefficient list + modulus into the kernel layout."""
+    if len(coeffs) > MAX_COEFFS:
+        raise ValueError(f"deg(F) too large: {len(coeffs) - 1} > {MAX_COEFFS - 1}")
+    out = [0] * (MAX_COEFFS + 1)
+    out[: len(coeffs)] = [int(c) % int(p) for c in coeffs]
+    out[MAX_COEFFS] = int(p)
+    return jnp.array(out, dtype=jnp.int32)

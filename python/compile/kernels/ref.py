@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package has a reference here written with plain
+jax.numpy ops and no Pallas; pytest sweeps shapes/dtypes with hypothesis
+and asserts exact equality (integer kernels) / allclose (float kernels).
+"""
+
+import jax.numpy as jnp
+
+
+def mv_poly_ref(x, coeffs, p):
+    """Horner evaluation of sum_k coeffs[k] x^k mod p, canonical output.
+
+    Args:
+      x: int array of canonical field elements.
+      coeffs: 1-D int array/list of polynomial coefficients (index = power).
+      p: modulus.
+    """
+    x = jnp.asarray(x, dtype=jnp.int32)  # products < p² ≤ 101² fit easily
+    acc = jnp.zeros_like(x)
+    for c in reversed(list(coeffs)):
+        acc = (acc * x + int(c)) % int(p)
+    return acc.astype(jnp.int32)
+
+
+def sign_ref(g):
+    """SIGNSGD sign with sign(0) = +1."""
+    g = jnp.asarray(g)
+    return jnp.where(g < 0.0, -1.0, 1.0).astype(jnp.float32)
+
+
+def majority_vote_ref(signs, tie_to=-1):
+    """Plain SIGNSGD-MV: sign of the column sum of an (n, d) ±1 matrix.
+
+    tie_to: value for zero sums (-1 = the paper's 1-bit policy; 0 = 2-bit).
+    """
+    s = jnp.sum(jnp.asarray(signs, dtype=jnp.int32), axis=0)
+    vote = jnp.sign(s)
+    return jnp.where(s == 0, int(tie_to), vote).astype(jnp.int32)

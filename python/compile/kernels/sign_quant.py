@@ -1,0 +1,39 @@
+"""L1 Pallas kernel: 1-bit sign quantization (Eq. 4).
+
+``x_i(t) = sign(g_i(t))`` with the SIGNSGD convention sign(0) = +1 —
+matching the rust trainer's ``fl::model::sign_vec``. The kernel tiles the
+gradient into VMEM blocks and emits ±1.0f32 (the sign vector is consumed
+by the field encoder / vote pipeline, which wants a dense ±1 array rather
+than packed bits at this layer).
+
+interpret=True: see mv_poly.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 512
+
+
+def _sign_kernel(g_ref, o_ref):
+    g = g_ref[...]
+    o_ref[...] = jnp.where(g < 0.0, -1.0, 1.0).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sign_quantize(g, *, interpret=True):
+    """±1 quantization of a flat f32 gradient (length multiple of BLOCK)."""
+    d = g.shape[0]
+    if d % BLOCK != 0:
+        raise ValueError(f"d = {d} must be a multiple of BLOCK = {BLOCK}")
+    return pl.pallas_call(
+        _sign_kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        grid=(d // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=interpret,
+    )(g)

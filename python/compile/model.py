@@ -1,0 +1,127 @@
+"""L2: JAX models for the FL workload — forward, loss, gradient, and the
+sign-gradient path that calls the L1 Pallas kernels.
+
+Parameters are FLAT f32 vectors (the vote dimension `d` of the protocol);
+(un)flattening happens inside the jitted functions so the rust side only
+ever handles one tensor per model. Layouts match the rust reference models
+in `rust/src/fl/model.rs` exactly:
+
+* linear:  [W (k×in) row-major, b (k)]
+* mlp:     [W1 (h×in), b1 (h), W2 (k×h), b2 (k)]
+
+so the two backends are cross-checkable coordinate by coordinate.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import sign_quant
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSpec:
+    in_dim: int
+    n_classes: int
+
+    @property
+    def dim(self):
+        return self.in_dim * self.n_classes + self.n_classes
+
+    def unflatten(self, params):
+        w = params[: self.in_dim * self.n_classes].reshape(
+            self.n_classes, self.in_dim
+        )
+        b = params[self.in_dim * self.n_classes :]
+        return w, b
+
+    def logits(self, params, x):
+        w, b = self.unflatten(params)
+        return x @ w.T + b
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpSpec:
+    in_dim: int
+    hidden: int
+    n_classes: int
+
+    @property
+    def dim(self):
+        return (
+            self.hidden * self.in_dim
+            + self.hidden
+            + self.n_classes * self.hidden
+            + self.n_classes
+        )
+
+    def unflatten(self, params):
+        h, i, k = self.hidden, self.in_dim, self.n_classes
+        at = 0
+        w1 = params[at : at + h * i].reshape(h, i)
+        at += h * i
+        b1 = params[at : at + h]
+        at += h
+        w2 = params[at : at + k * h].reshape(k, h)
+        at += k * h
+        b2 = params[at : at + k]
+        return w1, b1, w2, b2
+
+    def logits(self, params, x):
+        w1, b1, w2, b2 = self.unflatten(params)
+        hid = jax.nn.relu(x @ w1.T + b1)
+        return hid @ w2.T + b2
+
+
+def cross_entropy(logits, y_onehot):
+    """Mean softmax cross-entropy (y is one-hot f32)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def make_entry_points(spec):
+    """Build the jittable functions the AOT pipeline lowers.
+
+    Returns dict of name -> (fn, abstract-arg builder). All fns return
+    tuples (lowered with return_tuple=True for the rust loader).
+    """
+
+    def loss_fn(params, x, y):
+        return cross_entropy(spec.logits(params, x), y)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def grad_entry(params, x, y):
+        loss, g = grad_fn(params, x, y)
+        return (loss, g)
+
+    def signgrad_entry(params, x, y):
+        """Gradient + L1 Pallas sign quantization (Eq. 4) fused into one
+        artifact: the sign kernel lowers into the same HLO module."""
+        loss, g = grad_fn(params, x, y)
+        d = g.shape[0]
+        pad = (-d) % sign_quant.BLOCK
+        gp = jnp.pad(g, (0, pad))
+        s = sign_quant.sign_quantize(gp)[:d]
+        return (loss, s)
+
+    def logits_entry(params, x):
+        return (spec.logits(params, x),)
+
+    return {
+        "grad": grad_entry,
+        "signgrad": signgrad_entry,
+        "logits": logits_entry,
+    }
+
+
+# The model zoo the artifacts are built from. Dimensions mirror the
+# experiment presets (mnist/fmnist: 784-in; cifar-like: 3072-in).
+MODELS = {
+    "mnist_linear": LinearSpec(in_dim=784, n_classes=10),
+    "mnist_mlp": MlpSpec(in_dim=784, hidden=32, n_classes=10),
+    "cifar_mlp": MlpSpec(in_dim=3072, hidden=32, n_classes=10),
+}
+
+BATCH = 100

@@ -1,0 +1,93 @@
+"""L2 correctness: model entry points — shapes, gradients, sign path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((M.BATCH, 784)).astype(np.float32)
+    y = np.zeros((M.BATCH, 10), np.float32)
+    y[np.arange(M.BATCH), rng.integers(0, 10, M.BATCH)] = 1.0
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("name", ["mnist_linear", "mnist_mlp"])
+def test_entry_point_shapes(name, batch):
+    spec = M.MODELS[name]
+    eps = M.make_entry_points(spec)
+    params = jnp.zeros(spec.dim, jnp.float32)
+    x, y = batch
+    loss, g = eps["grad"](params, x, y)
+    assert loss.shape == ()
+    assert g.shape == (spec.dim,)
+    (logits,) = eps["logits"](params, x)
+    assert logits.shape == (M.BATCH, 10)
+    loss2, s = eps["signgrad"](params, x, y)
+    assert s.shape == (spec.dim,)
+    assert jnp.allclose(loss, loss2)
+    assert set(np.unique(np.asarray(s))).issubset({-1.0, 1.0})
+
+
+def test_signgrad_is_sign_of_grad(batch):
+    spec = M.MODELS["mnist_linear"]
+    eps = M.make_entry_points(spec)
+    rng = np.random.default_rng(3)
+    params = jnp.asarray(rng.standard_normal(spec.dim).astype(np.float32) * 0.05)
+    x, y = batch
+    _, g = eps["grad"](params, x, y)
+    _, s = eps["signgrad"](params, x, y)
+    want = np.where(np.asarray(g) < 0, -1.0, 1.0)
+    np.testing.assert_array_equal(np.asarray(s), want)
+
+
+def test_grad_matches_finite_difference(batch):
+    spec = M.MODELS["mnist_linear"]
+    eps = M.make_entry_points(spec)
+    x, y = batch
+    rng = np.random.default_rng(1)
+    params = rng.standard_normal(spec.dim).astype(np.float32) * 0.05
+
+    def loss_np(p):
+        l, _ = eps["grad"](jnp.asarray(p), x, y)
+        return float(l)
+
+    _, g = eps["grad"](jnp.asarray(params), x, y)
+    g = np.asarray(g)
+    eps_fd = 1e-3
+    for j in rng.integers(0, spec.dim, size=10):
+        pp = params.copy()
+        pp[j] += eps_fd
+        lp = loss_np(pp)
+        pp[j] -= 2 * eps_fd
+        lm = loss_np(pp)
+        fd = (lp - lm) / (2 * eps_fd)
+        assert abs(fd - g[j]) < 2e-2 * (1 + abs(fd)), f"coord {j}: {fd} vs {g[j]}"
+
+
+def test_param_layout_matches_rust_convention():
+    """W row-major [class][pixel] then bias — the layout rust unpacks."""
+    spec = M.MODELS["mnist_linear"]
+    params = np.zeros(spec.dim, np.float32)
+    # set W[3][5] = 2.0 and b[7] = 1.5 using the documented layout
+    params[3 * 784 + 5] = 2.0
+    params[784 * 10 + 7] = 1.5
+    x = np.zeros((M.BATCH, 784), np.float32)
+    x[:, 5] = 1.0
+    (logits,) = M.make_entry_points(spec)["logits"](
+        jnp.asarray(params), jnp.asarray(x)
+    )
+    assert float(logits[0, 3]) == 2.0
+    assert float(logits[0, 7]) == 1.5
+    assert float(logits[0, 0]) == 0.0
+
+
+def test_mlp_dim_matches_rust():
+    assert M.MODELS["mnist_mlp"].dim == 784 * 32 + 32 + 320 + 10
+    assert M.MODELS["cifar_mlp"].dim == 3072 * 32 + 32 + 320 + 10
+    assert M.MODELS["mnist_linear"].dim == 7850

@@ -1,0 +1,86 @@
+"""L1 correctness: mv_poly Pallas kernel vs the pure-jnp oracle.
+
+hypothesis sweeps dimensions, moduli, coefficient vectors and inputs;
+equality is exact (integer arithmetic).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mv_poly, ref
+
+PRIMES = [3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 61, 101]
+
+
+def eval_poly_int(x, coeffs, p):
+    """Plain-python oracle (independent of jax)."""
+    acc = 0
+    for c in reversed(coeffs):
+        acc = (acc * x + c) % p
+    return acc
+
+
+@given(
+    p=st.sampled_from(PRIMES),
+    deg=st.integers(min_value=0, max_value=mv_poly.MAX_COEFFS - 1),
+    blocks=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_kernel_matches_ref_and_python(p, deg, blocks, seed):
+    rng = np.random.default_rng(seed)
+    d = blocks * mv_poly.BLOCK
+    coeffs = [int(c) for c in rng.integers(0, p, size=deg + 1)]
+    x = rng.integers(0, p, size=d).astype(np.int32)
+    packed = mv_poly.pack_coeffs(coeffs, p)
+
+    out = np.asarray(mv_poly.mv_poly_eval(jnp.asarray(x), packed))
+    want_ref = np.asarray(ref.mv_poly_ref(x, coeffs, p))
+    np.testing.assert_array_equal(out, want_ref)
+    # spot-check against the plain-python oracle
+    for j in rng.integers(0, d, size=8):
+        assert out[j] == eval_poly_int(int(x[j]), coeffs, p)
+
+
+@pytest.mark.parametrize(
+    "n,p,coeffs",
+    [
+        # Table III (1-bit tie-breaking): exact published polynomials.
+        (2, 3, [2, 2, 1]),            # x^2 + 2x + 2 (mod 3)
+        (3, 5, [0, 4, 0, 2]),         # 2x^3 + 4x (mod 5)
+        (4, 5, [4, 1, 0, 3, 1]),      # x^4 + 3x^3 + x + 4 (mod 5)
+        (5, 7, [0, 3, 0, 2, 0, 3]),   # 3x^5 + 2x^3 + 3x (mod 7)
+        (6, 7, [6, 4, 0, 5, 0, 4, 1]),  # x^6+4x^5+5x^3+4x+6 (mod 7)
+    ],
+)
+def test_kernel_computes_correct_majority_votes(n, p, coeffs):
+    """Lemma 1 through the kernel: F(sum) == sign(sum) on the support."""
+    packed = mv_poly.pack_coeffs(coeffs, p)
+    sums = list(range(-n, n + 1, 2))
+    x = np.array([s % p for s in sums] * mv_poly.BLOCK, dtype=np.int32)[
+        : mv_poly.BLOCK
+    ]
+    out = np.asarray(mv_poly.mv_poly_eval(jnp.asarray(x), packed))
+    for j, s in enumerate(sums):
+        got = int(out[j])
+        centered = got - p if got > p // 2 else got
+        want = 1 if s > 0 else (-1 if s < 0 else -1)  # tie -> -1 (1-bit)
+        assert centered == want, f"n={n} sum={s}: F={centered} != {want}"
+
+
+def test_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        mv_poly.mv_poly_eval(
+            jnp.zeros(100, jnp.int32), mv_poly.pack_coeffs([1], 5)
+        )
+    with pytest.raises(ValueError):
+        mv_poly.pack_coeffs([0] * (mv_poly.MAX_COEFFS + 1), 5)
+
+
+def test_zero_polynomial():
+    packed = mv_poly.pack_coeffs([0], 7)
+    x = jnp.arange(mv_poly.BLOCK, dtype=jnp.int32) % 7
+    out = np.asarray(mv_poly.mv_poly_eval(x, packed))
+    np.testing.assert_array_equal(out, np.zeros(mv_poly.BLOCK, np.int32))

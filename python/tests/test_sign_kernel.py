@@ -1,0 +1,36 @@
+"""L1 correctness: sign_quant Pallas kernel vs oracle (sign(0) = +1)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sign_quant
+
+
+@given(
+    blocks=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+    scale=st.sampled_from([1e-6, 1.0, 1e6]),
+)
+@settings(max_examples=30, deadline=None)
+def test_sign_matches_ref(blocks, seed, scale):
+    rng = np.random.default_rng(seed)
+    d = blocks * sign_quant.BLOCK
+    g = (rng.standard_normal(d) * scale).astype(np.float32)
+    # plant exact zeros and negative zeros
+    g[:: 17] = 0.0
+    g[1:: 23] = -0.0
+    out = np.asarray(sign_quant.sign_quantize(jnp.asarray(g)))
+    want = np.asarray(ref.sign_ref(g))
+    np.testing.assert_array_equal(out, want)
+    assert set(np.unique(out)).issubset({-1.0, 1.0})
+    # zero maps to +1 (SIGNSGD convention, matches rust sign_vec)
+    assert out[0] == 1.0
+
+
+def test_majority_vote_ref_tie_policies():
+    signs = np.array([[1, 1, -1], [1, -1, -1], [-1, 1, 1], [-1, -1, 1]])
+    one_bit = np.asarray(ref.majority_vote_ref(signs, tie_to=-1))
+    two_bit = np.asarray(ref.majority_vote_ref(signs, tie_to=0))
+    np.testing.assert_array_equal(one_bit, [-1, -1, -1])
+    np.testing.assert_array_equal(two_bit, [0, 0, 0])

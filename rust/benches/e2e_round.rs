@@ -1,0 +1,88 @@
+//! Bench: end-to-end FL round throughput (Figs. 2–5 workloads).
+//!
+//! One full round = 24 users' minibatch gradients + sign quantization +
+//! secure hierarchical aggregation + model update, on the pure-rust
+//! linear model (7,850 params) and — when artifacts exist — the AOT JAX
+//! MLP (25,450 params) including PJRT execution.
+
+use hisafe::fl::data::{partition_users, synthetic, DataKind, Partition};
+use hisafe::fl::model::{sign_vec, LinearSoftmax, Model};
+use hisafe::poly::TiePolicy;
+use hisafe::protocol::{run_sync, run_threaded, HiSafeConfig};
+use hisafe::runtime::JaxModel;
+use hisafe::util::bench::{section, Bencher};
+use hisafe::util::rng::{Rng, Xoshiro256pp};
+
+fn round<M: Model>(
+    model: &M,
+    params: &mut [f32],
+    tr: &hisafe::fl::data::Dataset,
+    shards: &[Vec<usize>],
+    cfg: HiSafeConfig,
+    rng: &mut Xoshiro256pp,
+    seed: u64,
+    batch_size: usize,
+) -> f32 {
+    let selected = rng.sample_indices(shards.len(), cfg.n);
+    let signs: Vec<Vec<i8>> = selected
+        .iter()
+        .map(|&u| {
+            let shard = &shards[u];
+            let batch: Vec<usize> = (0..batch_size)
+                .map(|_| shard[rng.gen_below(shard.len() as u64) as usize])
+                .collect();
+            let (_, g) = model.loss_grad(params, tr, &batch);
+            sign_vec(&g)
+        })
+        .collect();
+    let out = run_sync(&signs, cfg, seed);
+    for (p, &v) in params.iter_mut().zip(&out.global_vote) {
+        *p -= 0.005 * v as f32;
+    }
+    params[0]
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let (tr, _te) = synthetic(DataKind::FmnistLike, 3000, 100, 5);
+    let shards = partition_users(&tr, 100, Partition::TwoClass, 5);
+    let cfg = HiSafeConfig::hierarchical(24, 8, TiePolicy::OneBit);
+
+    section("end-to-end round, rust linear model (d = 7,850)");
+    let model = LinearSoftmax::new(784, 10);
+    let mut params = model.init_params(1);
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let mut seed = 0u64;
+    let s = b.bench("round n=24 l=8 batch=100 (grad+sign+secure agg+update)", || {
+        seed += 1;
+        round(&model, &mut params, &tr, &shards, cfg, &mut rng, seed, 100)
+    });
+    println!("  → {:.2} rounds/s", 1.0 / s.median.as_secs_f64());
+
+    section("threaded coordinator vs in-process (n=24, d=7,850, signs only)");
+    let signs: Vec<Vec<i8>> = (0..24)
+        .map(|_| (0..7850).map(|_| rng.gen_sign()).collect())
+        .collect();
+    b.bench("run_sync", || {
+        seed += 1;
+        run_sync(&signs, cfg, seed).global_vote[0]
+    });
+    b.bench("run_threaded (25 OS threads + channels)", || {
+        seed += 1;
+        run_threaded(&signs, cfg, seed).global_vote[0]
+    });
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        section("end-to-end round, AOT JAX MLP via PJRT (d = 25,450)");
+        let jax = JaxModel::new("artifacts", "mnist_mlp", 25_450, 784, 10, 100)
+            .expect("artifacts present");
+        let mut params = jax.init_params(1);
+        let s = b.bench("round n=24 l=8 batch=100 (PJRT grads + secure agg)", || {
+            seed += 1;
+            round(&jax, &mut params, &tr, &shards, cfg, &mut rng, seed, 100)
+        });
+        println!("  → {:.2} rounds/s", 1.0 / s.median.as_secs_f64());
+    } else {
+        println!("(artifacts missing — skipping PJRT end-to-end; run `make artifacts`)");
+    }
+}

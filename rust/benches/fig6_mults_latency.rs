@@ -1,0 +1,50 @@
+//! Bench: Fig. 6 — per-user secure-multiplication cost (6a) and serial
+//! latency (6b), flat vs optimal subgrouping, as n grows.
+//!
+//! Analytic series from the real polynomial/schedule, plus a measured
+//! end-to-end latency of the subround loop at d = 1024 for both configs.
+
+use hisafe::cost;
+use hisafe::mpc::secure_group_vote;
+use hisafe::poly::TiePolicy;
+use hisafe::protocol::{run_sync, HiSafeConfig};
+use hisafe::util::bench::{section, Bencher};
+use hisafe::util::rng::{Rng, Xoshiro256pp};
+
+fn main() {
+    section("Fig. 6a: per-user masked uploads R (flat vs subgrouped)");
+    println!("{:>4} {:>8} {:>10}", "n", "flat", "subgrouped");
+    for n in [12usize, 16, 20, 24, 28, 30, 36, 40, 50, 60, 70, 80, 90, 100] {
+        let flat = cost::config_cost(n, 1, TiePolicy::OneBit, false);
+        let best = cost::optimal_ell(n, TiePolicy::OneBit, false);
+        println!("{:>4} {:>8} {:>10}", n, flat.group.openings, best.group.openings);
+    }
+
+    section("Fig. 6b: latency — serial Beaver subrounds");
+    println!("{:>4} {:>8} {:>10}", "n", "flat", "subgrouped");
+    for n in [12usize, 16, 20, 24, 28, 30, 36, 40, 50, 60, 70, 80, 90, 100] {
+        let flat = cost::config_cost(n, 1, TiePolicy::OneBit, false);
+        let best = cost::optimal_ell(n, TiePolicy::OneBit, false);
+        println!("{:>4} {:>8} {:>10}", n, flat.group.depth, best.group.depth);
+    }
+
+    section("measured wall-clock per aggregation round (d = 1024)");
+    let mut b = Bencher::new();
+    let d = 1024usize;
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    for n in [12usize, 24, 60, 100] {
+        let signs: Vec<Vec<i8>> =
+            (0..n).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect();
+        let mut seed = 0u64;
+        b.bench(&format!("flat secure round n={n}"), || {
+            seed += 1;
+            secure_group_vote(&signs, TiePolicy::OneBit, false, seed).votes[0]
+        });
+        let best = cost::optimal_ell(n, TiePolicy::OneBit, false);
+        let cfg = HiSafeConfig::hierarchical(n, best.ell, TiePolicy::OneBit);
+        b.bench(&format!("subgrouped secure round n={n} (l={})", best.ell), || {
+            seed += 1;
+            run_sync(&signs, cfg, seed).global_vote[0]
+        });
+    }
+}

@@ -1,0 +1,109 @@
+//! Bench: MPC engine micro-benchmarks — the L3 hot path.
+//!
+//! Throughput targets (§Perf): ≥ 10⁷ coordinate-multiplications/s in the
+//! Beaver recombination; the full n=24/ℓ=8 round on the MNIST MLP
+//! dimension under 50 ms.
+
+use hisafe::beaver::Dealer;
+use hisafe::field::Fp;
+use hisafe::mpc::secure_group_vote;
+use hisafe::poly::TiePolicy;
+use hisafe::protocol::{run_sync, HiSafeConfig};
+use hisafe::util::bench::{black_box, section, Bencher};
+use hisafe::util::rng::{Rng, Xoshiro256pp};
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Xoshiro256pp::seed_from_u64(11);
+
+    section("field vector kernels (d = 65,536)");
+    let fp = Fp::new(29);
+    let d = 65_536usize;
+    let xs: Vec<u64> = (0..d).map(|_| rng.gen_field(29)).collect();
+    let ys: Vec<u64> = (0..d).map(|_| rng.gen_field(29)).collect();
+    let mut acc = vec![0u64; d];
+    let s = b.bench("vec_mul_add_assign (Beaver recombination kernel)", || {
+        fp.vec_mul_add_assign(&mut acc, &xs, &ys);
+        acc[0]
+    });
+    println!(
+        "  → {:.1} M coordinate-mults/s",
+        s.throughput(d as f64) / 1e6
+    );
+    b.bench("vec_add_assign (share aggregation)", || {
+        fp.vec_add_assign(&mut acc, &xs);
+        acc[0]
+    });
+
+    section("beaver dealer (offline)");
+    b.bench("gen_round n1=3, 2 mults, d=25,450", || {
+        let mut dealer = Dealer::new(fp, 7);
+        black_box(dealer.gen_round(25_450, 3, 2))
+    });
+
+    section("one secure group vote (online), d = 25,450");
+    let d_model = 25_450usize;
+    for n1 in [3usize, 4, 6] {
+        let signs: Vec<Vec<i8>> = (0..n1)
+            .map(|_| (0..d_model).map(|_| rng.gen_sign()).collect())
+            .collect();
+        let mut seed = 0u64;
+        b.bench(&format!("secure_group_vote n1={n1}"), || {
+            seed += 1;
+            secure_group_vote(&signs, TiePolicy::OneBit, false, seed).votes[0]
+        });
+    }
+
+    section("online-only (pre-dealt triples): Table V's split, d = 25,450");
+    {
+        use hisafe::mpc::{secure_group_vote_prepared, EvalPlan};
+        use hisafe::poly::MvPolynomial;
+        use std::sync::Arc;
+        let n1 = 3usize;
+        let mv = MvPolynomial::build_fermat(n1, TiePolicy::OneBit);
+        let plan = Arc::new(EvalPlan::new(&mv, d_model, false));
+        let signs: Vec<Vec<i8>> = (0..n1)
+            .map(|_| (0..d_model).map(|_| rng.gen_sign()).collect())
+            .collect();
+        // pre-deal a pool of triple sets so each iteration consumes fresh ones
+        let mut dealer = Dealer::new(plan.fp, 3);
+        let pool: Vec<_> = (0..64)
+            .map(|_| dealer.gen_round(d_model, n1, plan.triples_needed()))
+            .collect();
+        let mut i = 0usize;
+        let s = b.bench("online secure eval n1=3 (triples pre-dealt)", || {
+            i += 1;
+            secure_group_vote_prepared(&signs, Arc::clone(&plan), pool[i % 64].clone())
+                .votes[0]
+        });
+        println!(
+            "  (includes one clone of the triple set per iter: {:.2} ms)",
+            s.median.as_secs_f64() * 1e3
+        );
+    }
+
+    section("full rounds at model dimension (n=24, d=25,450)");
+    let signs: Vec<Vec<i8>> = (0..24)
+        .map(|_| (0..d_model).map(|_| rng.gen_sign()).collect())
+        .collect();
+    let mut seed = 0u64;
+    let hier = b.bench("hierarchical round l=8 (paper's optimum)", || {
+        seed += 1;
+        run_sync(&signs, HiSafeConfig::hierarchical(24, 8, TiePolicy::OneBit), seed)
+            .global_vote[0]
+    });
+    let flat = b.bench("flat round l=1", || {
+        seed += 1;
+        run_sync(&signs, HiSafeConfig::flat(24, TiePolicy::OneBit), seed).global_vote[0]
+    });
+    println!(
+        "\nhierarchical speedup over flat: {:.1}x  (hier {:.1} ms vs flat {:.1} ms)",
+        flat.median.as_secs_f64() / hier.median.as_secs_f64(),
+        hier.median.as_secs_f64() * 1e3,
+        flat.median.as_secs_f64() * 1e3
+    );
+    assert!(
+        hier.median.as_secs_f64() < 0.25,
+        "hierarchical round too slow for the perf target"
+    );
+}

@@ -1,0 +1,50 @@
+//! Bench: majority-vote polynomial construction (Table III content,
+//! Table IV complexity claim `O(n log p)` vs `O(n₁ log p₁)`).
+//!
+//! Prints the polynomials (regenerating Table III) and times both
+//! constructions across group sizes, demonstrating the subgrouping
+//! reduction: constructing F for n₁ = 3 is orders cheaper than for n = 100.
+
+use hisafe::poly::{MvPolynomial, TiePolicy};
+use hisafe::util::bench::{black_box, section, Bencher};
+
+fn main() {
+    section("Table III: precomputed majority-vote polynomials");
+    for n in 2..=6 {
+        let a = MvPolynomial::build_fermat(n, TiePolicy::OneBit);
+        let b = MvPolynomial::build_fermat(n, TiePolicy::TwoBit);
+        println!(
+            "n={n}: 1-bit: {:<40} 2-bit: {}",
+            a.poly.display(),
+            b.poly.display()
+        );
+    }
+
+    let mut b = Bencher::new();
+    section("Table IV: construction cost — flat group sizes");
+    for n in [12usize, 24, 36, 60, 100] {
+        b.bench(&format!("fermat_construct n={n} (flat)"), || {
+            black_box(MvPolynomial::build_fermat(black_box(n), TiePolicy::OneBit))
+        });
+    }
+    section("Table IV: construction cost — optimal subgroup sizes");
+    for n1 in [3usize, 4, 5, 6] {
+        b.bench(&format!("fermat_construct n1={n1} (subgrouped)"), || {
+            black_box(MvPolynomial::build_fermat(black_box(n1), TiePolicy::OneBit))
+        });
+    }
+    section("cross-check: Lagrange construction (must equal Fermat)");
+    for n in [6usize, 24] {
+        b.bench(&format!("lagrange_construct n={n}"), || {
+            black_box(MvPolynomial::build_lagrange(black_box(n), TiePolicy::OneBit))
+        });
+    }
+
+    // report the Table-IV ratio
+    let flat = b.results().iter().find(|s| s.name.contains("n=100")).unwrap();
+    let sub = b.results().iter().find(|s| s.name.contains("n1=3")).unwrap();
+    println!(
+        "\nconstruction speedup n=100 flat vs n1=3 subgrouped: {:.0}x",
+        flat.median.as_secs_f64() / sub.median.as_secs_f64()
+    );
+}

@@ -1,0 +1,96 @@
+//! Bench: Tables VII/VIII/IX — the communication-cost sweep, regenerated
+//! from the implementation and compared row-by-row against the published
+//! numbers. Also prints where the paper's rows disagree with its own
+//! formula (documented in EXPERIMENTS.md).
+
+use hisafe::cost;
+use hisafe::poly::TiePolicy;
+use hisafe::util::bench::section;
+
+fn main() {
+    section("Table VII: optimal configurations (ours, exact construction)");
+    println!(
+        "{:>4} {:>4} {:>4} {:>6} {:>4} {:>8} {:>9} {:>6} {:>9}",
+        "n", "l*", "n1", "depth", "R", "C_T", "CT_red%", "C_u", "Cu_red%"
+    );
+    for (n, _ell_p, _n1_p, _d_p, _r_p, _ct_p, _ctr_p, _cu_p, _cur_p) in
+        cost::paper_table7()
+    {
+        let flat = cost::config_cost(n, 1, TiePolicy::OneBit, false);
+        let best = cost::optimal_ell(n, TiePolicy::OneBit, false);
+        println!(
+            "{:>4} {:>4} {:>4} {:>6} {:>4} {:>8} {:>8.1}% {:>6} {:>8.1}%",
+            n,
+            best.ell,
+            best.group.n1,
+            best.group.depth,
+            best.group.openings,
+            best.c_t_bits,
+            cost::reduction_pct(flat.c_t_bits, best.c_t_bits),
+            best.group.c_u_bits,
+            cost::reduction_pct(flat.group.c_u_bits, best.group.c_u_bits),
+        );
+    }
+    println!("(paper row reductions: C_T 52.0/47.8/44.4/50.5/43.6%, C_u 94.0–98.4% — ours are ≥ theirs because our flat baseline uses the true deg(F) = p−1)");
+
+    section("Tables VIII/IX: sweep, ours vs published");
+    println!(
+        "{:>4} {:>4} | {:>4} {:>5} {:>4} {:>6} {:>6} | {:>6} {:>6} {:>6} | {}",
+        "n", "l", "p1", "depth", "R", "C_u", "C_T", "R_pap", "Cu_pap", "CT_pap", "match"
+    );
+    let mut matches = 0usize;
+    let mut total = 0usize;
+    for row in cost::paper_tables() {
+        if row.n % row.ell != 0 {
+            continue;
+        }
+        let c = cost::config_cost(row.n, row.ell, TiePolicy::OneBit, false);
+        let m = c.group.openings == row.r
+            && c.group.c_u_bits == row.c_u
+            && c.c_t_bits == row.c_t;
+        total += 1;
+        matches += usize::from(m);
+        println!(
+            "{:>4} {:>4} | {:>4} {:>5} {:>4} {:>6} {:>6} | {:>6} {:>6} {:>6} | {}",
+            row.n,
+            row.ell,
+            c.group.p1,
+            c.group.depth,
+            c.group.openings,
+            c.group.c_u_bits,
+            c.c_t_bits,
+            row.r,
+            row.c_u,
+            row.c_t,
+            if m { "=" } else { "≠" }
+        );
+    }
+    println!("\nexact row matches: {matches}/{total} (deltas analysed in EXPERIMENTS.md — the paper's R column does not follow a single consistent formula; every published n₁ ≤ 6 row matches ours exactly)");
+
+    section("paper-row self-consistency audit (C_u = R·logp ∧ C_T = l·C_u)");
+    let rows = cost::paper_tables();
+    let incons: Vec<_> = rows
+        .iter()
+        .filter(|r| {
+            r.c_u != (r.r as u64) * r.log_p1 as u64 || r.c_t != r.ell as u64 * r.c_u
+        })
+        .collect();
+    println!(
+        "{} of {} published rows are internally inconsistent:",
+        incons.len(),
+        rows.len()
+    );
+    for r in incons {
+        println!(
+            "  n={:<3} l={:<2}: published R·logp = {}·{} = {} vs C_u = {}; l·C_u = {} vs C_T = {}",
+            r.n,
+            r.ell,
+            r.r,
+            r.log_p1,
+            r.r as u64 * r.log_p1 as u64,
+            r.c_u,
+            r.ell as u64 * r.c_u,
+            r.c_t
+        );
+    }
+}

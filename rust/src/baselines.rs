@@ -1,0 +1,234 @@
+//! Baseline aggregation methods from Table I, implemented for the
+//! quantitative comparison in `examples/baseline_compare.rs`.
+//!
+//! * [`masking`] — Bonawitz-style pairwise additive masking [18]: a real
+//!   secure-sum (PRG-expanded pairwise masks over `Z_2^32`) whose defining
+//!   weakness for sign-based FL is that the server *learns the exact sum*
+//!   of the sign vectors before taking the majority — the leakage Hi-SAFE
+//!   eliminates.
+//! * [`dp_signsgd`] — DP-SIGNSGD [21]: Gaussian noise added to the local
+//!   gradient before the sign; the server sees every (noisy) sign.
+//! * [`he_cost`] — RLWE/CKKS communication cost model [22] (ciphertext
+//!   expansion only; Table I compares magnitudes, and HE cannot evaluate
+//!   the nonlinear vote anyway — the paper's point).
+
+use crate::util::rng::{ChaCha20Rng, Rng};
+
+// ---------------------------------------------------------------- masking
+
+pub mod masking {
+    //! Pairwise additive masking secure-sum over `Z_{2^32}`.
+    //!
+    //! Users `i < j` share a pairwise seed; user `i` adds the PRG stream,
+    //! user `j` subtracts it. The masks cancel in the server's sum, which
+    //! therefore equals `Σᵢ xᵢ` exactly — individual vectors are hidden,
+    //! but the **summation value is revealed** (Table I row 1).
+
+    use super::*;
+
+    /// Outcome of one masked secure-sum round.
+    #[derive(Debug)]
+    pub struct MaskedSumOutcome {
+        /// The exact sum the server reconstructs (the leaked quantity).
+        pub sum: Vec<i64>,
+        /// Majority vote derived from the sum (tie → −1, as Hi-SAFE A).
+        pub votes: Vec<i8>,
+        /// Per-user uplink bits (one 32-bit masked word per coordinate).
+        pub uplink_bits_per_user: u64,
+    }
+
+    /// Run a masked secure sum of ±1 vectors. Internally verifies that the
+    /// masked aggregate equals the plain sum (mask cancellation).
+    pub fn secure_sum(signs: &[Vec<i8>], seed: u64) -> MaskedSumOutcome {
+        let n = signs.len();
+        let d = signs[0].len();
+        // pairwise seeds from a root key (stands in for the DH key
+        // agreement of [18])
+        let mut masked: Vec<Vec<u32>> = signs
+            .iter()
+            .map(|s| s.iter().map(|&v| v as i32 as u32).collect())
+            .collect();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let mut prg = ChaCha20Rng::seed_from_u64(
+                    seed ^ ((i as u64) << 32 | j as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                );
+                for t in 0..d {
+                    let m = prg.next_u32();
+                    masked[i][t] = masked[i][t].wrapping_add(m);
+                    masked[j][t] = masked[j][t].wrapping_sub(m);
+                }
+            }
+        }
+        // server sums masked words; masks cancel mod 2^32
+        let mut sum = vec![0i64; d];
+        for t in 0..d {
+            let mut acc = 0u32;
+            for row in &masked {
+                acc = acc.wrapping_add(row[t]);
+            }
+            // lift from Z_2^32: |true sum| ≤ n < 2^31
+            sum[t] = (acc as i32) as i64;
+        }
+        let votes = sum
+            .iter()
+            .map(|&s| if s > 0 { 1i8 } else { -1 })
+            .collect();
+        MaskedSumOutcome { sum, votes, uplink_bits_per_user: 32 * d as u64 }
+    }
+}
+
+// ------------------------------------------------------------- dp-signsgd
+
+pub mod dp_signsgd {
+    //! DP-SIGNSGD [21]: clip, add Gaussian noise calibrated to (ε, δ)-DP,
+    //! then sign. The *noisy signs* remain visible to the server.
+
+    use super::*;
+
+    /// Gaussian-mechanism noise multiplier for (ε, δ)-DP (standard
+    /// analytic form σ = √(2 ln(1.25/δ)) / ε, sensitivity 1 after clip).
+    pub fn noise_multiplier(epsilon: f64, delta: f64) -> f64 {
+        (2.0 * (1.25 / delta).ln()).sqrt() / epsilon
+    }
+
+    /// Clip a gradient to L2 norm ≤ `clip` and add `σ·clip` Gaussian noise.
+    pub fn privatize(grad: &[f32], clip: f64, sigma: f64, rng: &mut ChaCha20Rng) -> Vec<f32> {
+        let norm: f64 = grad.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>().sqrt();
+        let scale = if norm > clip { clip / norm } else { 1.0 };
+        grad.iter()
+            .map(|&g| (g as f64 * scale + sigma * clip * rng.gen_gaussian()) as f32)
+            .collect()
+    }
+
+    /// Per-user uplink: still 1 bit per coordinate (the method's virtue).
+    pub fn uplink_bits_per_user(d: usize) -> u64 {
+        d as u64
+    }
+}
+
+// ---------------------------------------------------------------- he cost
+
+pub mod he_cost {
+    //! Communication cost model for CKKS-style RLWE HE [22].
+    //!
+    //! A ciphertext is two ring elements of degree `N` with `log q`-bit
+    //! coefficients; up to `N/2` values pack per ciphertext. Defaults match
+    //! a light CKKS parameter set (N = 4096, log q = 109) — already the
+    //! *smallest* secure choice, i.e. the comparison is generous to HE.
+
+    /// CKKS parameter set.
+    #[derive(Debug, Clone, Copy)]
+    pub struct HeParams {
+        pub poly_degree: usize,
+        pub log_q: u32,
+    }
+
+    impl Default for HeParams {
+        fn default() -> Self {
+            HeParams { poly_degree: 4096, log_q: 109 }
+        }
+    }
+
+    impl HeParams {
+        pub fn ciphertext_bits(&self) -> u64 {
+            2 * self.poly_degree as u64 * self.log_q as u64
+        }
+
+        pub fn slots(&self) -> usize {
+            self.poly_degree / 2
+        }
+
+        /// Per-user uplink bits to ship a `d`-dimensional update encrypted.
+        pub fn uplink_bits_per_user(&self, d: usize) -> u64 {
+            let cts = d.div_ceil(self.slots()) as u64;
+            cts * self.ciphertext_bits()
+        }
+
+        /// Expansion factor vs the 1-bit sign update.
+        pub fn expansion_vs_sign(&self, d: usize) -> f64 {
+            self.uplink_bits_per_user(d) as f64 / d as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::plain_group_vote;
+    use crate::poly::TiePolicy;
+    use crate::util::prop::forall;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn masked_sum_equals_plain_sum() {
+        forall("masking: Σ masked = Σ plain", 50, |g| {
+            let n = g.usize_range(2, 20);
+            let d = g.usize_range(1, 32);
+            let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+            let out = masking::secure_sum(&signs, g.u64());
+            for t in 0..d {
+                let want: i64 = signs.iter().map(|s| s[t] as i64).sum();
+                prop_assert_eq!(out.sum[t], want, "coord {t}");
+            }
+            // vote matches plain MV with tie→−1
+            prop_assert_eq!(
+                out.votes,
+                plain_group_vote(&signs, TiePolicy::OneBit)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn masking_leaks_sum_but_hisafe_does_not() {
+        // The structural difference Table I highlights: masking's outcome
+        // includes the exact per-coordinate sum; Hi-SAFE's transcript
+        // contains only sign values and uniform openings.
+        let signs: Vec<Vec<i8>> = vec![vec![1], vec![1], vec![1], vec![-1], vec![1]];
+        let masked = masking::secure_sum(&signs, 3);
+        assert_eq!(masked.sum, vec![3]); // reveals the 4-vs-1 split exactly
+        let hisafe = crate::mpc::secure_group_vote(&signs, TiePolicy::OneBit, false, 3);
+        assert_eq!(hisafe.raw, vec![1]); // reveals only sign(+3) = +1
+    }
+
+    #[test]
+    fn masking_single_coordinate_cost() {
+        let signs: Vec<Vec<i8>> = vec![vec![1; 100], vec![-1; 100]];
+        let out = masking::secure_sum(&signs, 1);
+        assert_eq!(out.uplink_bits_per_user, 3200);
+    }
+
+    #[test]
+    fn dp_noise_multiplier_sane() {
+        let sigma = dp_signsgd::noise_multiplier(1.0, 1e-5);
+        assert!(sigma > 4.0 && sigma < 5.0, "σ = {sigma}");
+        // stronger privacy → more noise
+        assert!(dp_signsgd::noise_multiplier(0.5, 1e-5) > sigma);
+    }
+
+    #[test]
+    fn dp_privatize_clips_and_perturbs() {
+        let mut rng = ChaCha20Rng::seed_from_u64(5);
+        let grad = vec![10.0f32; 100]; // L2 = 100
+        let noisy = dp_signsgd::privatize(&grad, 1.0, 0.0, &mut rng);
+        let norm: f64 = noisy.iter().map(|&g| (g as f64).powi(2)).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-4, "clipped norm {norm}");
+        let noisy2 = dp_signsgd::privatize(&grad, 1.0, 4.0, &mut rng);
+        assert_ne!(noisy, noisy2);
+    }
+
+    #[test]
+    fn he_expansion_is_catastrophic_for_1bit_updates() {
+        // Table I "Very Low" comm efficiency: ≥ ~400× expansion over the
+        // 1-bit sign update even with packing.
+        let he = he_cost::HeParams::default();
+        let d = 7850; // linear model on 784 inputs
+        assert_eq!(he.ciphertext_bits(), 2 * 4096 * 109);
+        let exp = he.expansion_vs_sign(d);
+        assert!(exp > 400.0, "expansion {exp}");
+        // Hi-SAFE per-coordinate uplink at n₁=3 is 12 bits — 70x+ less
+        // than HE's per-coordinate cost.
+        assert!(he.uplink_bits_per_user(d) as f64 / d as f64 > 12.0 * 30.0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Beaver multiplication triples (Beaver, CRYPTO'91) — the offline phase
+//! of Hi-SAFE's secure polynomial evaluation (Section III-B2, Table V).
+//!
+//! A triple is `(a, b, c)` with `c = a·b (mod p)`, additively shared among
+//! the `n₁` users of a subgroup. One fresh triple is consumed per secure
+//! multiplication; with masks `δ = x − a`, `ε = y − b` publicly opened,
+//! each user can locally form its share of `x·y`.
+//!
+//! The paper treats triple generation as an offline MPC black box
+//! ("generated via MPC", Table V measures it at <0.01 s). We implement a
+//! **trusted-dealer simulation** ([`Dealer`]): a ChaCha20-seeded dealer
+//! samples `a, b` uniformly and distributes additive shares. Lemma 2 only
+//! requires that `a, b` be uniform and unknown to the corrupted coalition
+//! (≥1 honest share suffices), which the dealer model preserves — see
+//! DESIGN.md §Substitutions.
+
+use crate::field::Fp;
+use crate::sharing::share_vec;
+use crate::util::rng::{ChaCha20Rng, Rng};
+
+/// One party's share of one vector Beaver triple.
+#[derive(Debug, Clone)]
+pub struct TripleShare {
+    pub a: Vec<u64>,
+    pub b: Vec<u64>,
+    pub c: Vec<u64>,
+}
+
+impl TripleShare {
+    pub fn dim(&self) -> usize {
+        self.a.len()
+    }
+}
+
+/// Offline-phase triple dealer.
+pub struct Dealer {
+    fp: Fp,
+    rng: ChaCha20Rng,
+    /// Number of vector triples generated (for the Table-V accounting).
+    pub generated: usize,
+}
+
+impl Dealer {
+    pub fn new(fp: Fp, seed: u64) -> Dealer {
+        Dealer { fp, rng: ChaCha20Rng::seed_from_u64(seed), generated: 0 }
+    }
+
+    /// Generate one vector triple of dimension `d`, shared among
+    /// `n_parties`. Returns one [`TripleShare`] per party.
+    pub fn gen_triple(&mut self, d: usize, n_parties: usize) -> Vec<TripleShare> {
+        let p = self.fp.modulus();
+        let mut a = vec![0u64; d];
+        let mut b = vec![0u64; d];
+        self.rng.fill_field(p, &mut a);
+        self.rng.fill_field(p, &mut b);
+        let c = self.fp.vec_mul(&a, &b);
+        let sa = share_vec(self.fp, &a, n_parties, &mut self.rng);
+        let sb = share_vec(self.fp, &b, n_parties, &mut self.rng);
+        let sc = share_vec(self.fp, &c, n_parties, &mut self.rng);
+        self.generated += 1;
+        sa.into_iter()
+            .zip(sb)
+            .zip(sc)
+            .map(|((a, b), c)| TripleShare { a, b, c })
+            .collect()
+    }
+
+    /// Generate the `n_mults` triples one subgroup needs for one round:
+    /// `out[party][mult]`.
+    pub fn gen_round(
+        &mut self,
+        d: usize,
+        n_parties: usize,
+        n_mults: usize,
+    ) -> Vec<Vec<TripleShare>> {
+        let mut per_party: Vec<Vec<TripleShare>> =
+            (0..n_parties).map(|_| Vec::with_capacity(n_mults)).collect();
+        for _ in 0..n_mults {
+            for (pid, ts) in self.gen_triple(d, n_parties).into_iter().enumerate() {
+                per_party[pid].push(ts);
+            }
+        }
+        per_party
+    }
+
+    /// Field ops performed per `gen_round` call — `Θ(ℓ·d_sub·n₁²)` across
+    /// all subgroups in the paper's Table V accounting (sharing each of
+    /// 3 vectors to n parties dominates).
+    pub fn round_cost_field_ops(d: usize, n_parties: usize, n_mults: usize) -> usize {
+        n_mults * d * (3 * n_parties + 1)
+    }
+}
+
+/// Per-party triple stash with consumption audit: the protocol must use
+/// each triple exactly once (freshness is what makes openings uniform,
+/// Lemma 2).
+#[derive(Debug)]
+pub struct TripleStore {
+    triples: Vec<TripleShare>,
+    next: usize,
+}
+
+impl TripleStore {
+    pub fn new(triples: Vec<TripleShare>) -> TripleStore {
+        TripleStore { triples, next: 0 }
+    }
+
+    /// Take the next fresh triple; panics if exhausted (protocol bug).
+    pub fn take(&mut self) -> &TripleShare {
+        let i = self.next;
+        assert!(
+            i < self.triples.len(),
+            "TripleStore exhausted: {} triples, requested #{}",
+            self.triples.len(),
+            i + 1
+        );
+        self.next += 1;
+        &self.triples[i]
+    }
+
+    /// Triple for a known multiplication index (subround batching path).
+    pub fn get(&self, idx: usize) -> &TripleShare {
+        &self.triples[idx]
+    }
+
+    pub fn consumed(&self) -> usize {
+        self.next
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.triples.len() - self.next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::next_prime;
+    use crate::sharing::reconstruct_vec;
+    use crate::util::prop::forall;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn triples_satisfy_c_eq_ab() {
+        forall("beaver c = a·b", 100, |g| {
+            let p = g.prime(101);
+            let fp = Fp::new(p);
+            let d = g.usize_range(1, 32);
+            let n = g.usize_range(2, 10);
+            let mut dealer = Dealer::new(fp, g.u64());
+            let shares = dealer.gen_triple(d, n);
+            prop_assert_eq!(shares.len(), n);
+            let a = reconstruct_vec(fp, &shares.iter().map(|t| t.a.clone()).collect::<Vec<_>>());
+            let b = reconstruct_vec(fp, &shares.iter().map(|t| t.b.clone()).collect::<Vec<_>>());
+            let c = reconstruct_vec(fp, &shares.iter().map(|t| t.c.clone()).collect::<Vec<_>>());
+            prop_assert_eq!(c, fp.vec_mul(&a, &b));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_round_layout() {
+        let fp = Fp::new(next_prime(6));
+        let mut dealer = Dealer::new(fp, 42);
+        let round = dealer.gen_round(8, 6, 5);
+        assert_eq!(round.len(), 6); // parties
+        for party in &round {
+            assert_eq!(party.len(), 5); // mults
+            for t in party {
+                assert_eq!(t.dim(), 8);
+            }
+        }
+        assert_eq!(dealer.generated, 5);
+        // reconstruct mult #3 and check the invariant across the layout
+        let a = reconstruct_vec(fp, &round.iter().map(|p| p[3].a.clone()).collect::<Vec<_>>());
+        let b = reconstruct_vec(fp, &round.iter().map(|p| p[3].b.clone()).collect::<Vec<_>>());
+        let c = reconstruct_vec(fp, &round.iter().map(|p| p[3].c.clone()).collect::<Vec<_>>());
+        assert_eq!(c, fp.vec_mul(&a, &b));
+    }
+
+    #[test]
+    fn store_audits_consumption() {
+        let fp = Fp::new(5);
+        let mut dealer = Dealer::new(fp, 7);
+        let mut shares = dealer.gen_round(4, 3, 2);
+        let mut store = TripleStore::new(shares.remove(0));
+        assert_eq!(store.remaining(), 2);
+        store.take();
+        store.take();
+        assert_eq!(store.consumed(), 2);
+        assert_eq!(store.remaining(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "TripleStore exhausted")]
+    fn store_panics_on_reuse_beyond_budget() {
+        let fp = Fp::new(5);
+        let mut dealer = Dealer::new(fp, 7);
+        let mut shares = dealer.gen_round(4, 3, 1);
+        let mut store = TripleStore::new(shares.remove(0));
+        store.take();
+        store.take(); // second take must panic: no triple reuse
+    }
+}

@@ -1,0 +1,327 @@
+//! Experiment configuration: JSON-backed configs + the paper's presets
+//! (Figs. 2–5, Table VI hyperparameters).
+//!
+//! The launcher (`hisafe train --preset fig4a` or `--config path.json`)
+//! resolves a [`ExperimentConfig`], which fully determines a training run
+//! (dataset, split, participants, aggregator, seeds).
+
+use crate::fl::data::{DataKind, Partition};
+use crate::poly::TiePolicy;
+use crate::protocol::HiSafeConfig;
+use crate::util::json::{self, Json};
+
+/// Aggregator specification (string-friendly mirror of
+/// [`crate::fl::trainer::Aggregator`], resolved at run time).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AggSpec {
+    HiSafe { ell: usize, intra: TiePolicy, inter: TiePolicy },
+    PlainMv { policy: TiePolicy },
+    DpSign { clip: f64, sigma: f64 },
+    MaskedSum,
+    FedAvg,
+}
+
+/// A complete experiment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub dataset: DataKind,
+    pub partition: Partition,
+    /// Total users `N`.
+    pub n_users: usize,
+    /// Participants per round `n = C·N`.
+    pub participants: usize,
+    pub rounds: usize,
+    pub lr: f64,
+    pub batch_size: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub eval_every: usize,
+    /// Seeds for independent trials (paper: 3 trials).
+    pub seeds: Vec<u64>,
+    pub agg: AggSpec,
+    /// Model: "linear" or "mlp_<hidden>".
+    pub model: String,
+}
+
+impl ExperimentConfig {
+    /// Resolve the aggregator into the trainer's enum.
+    pub fn aggregator(&self) -> crate::fl::trainer::Aggregator {
+        use crate::fl::trainer::Aggregator as A;
+        match &self.agg {
+            AggSpec::HiSafe { ell, intra, inter } => A::HiSafe(HiSafeConfig {
+                n: self.participants,
+                ell: *ell,
+                intra: *intra,
+                inter: *inter,
+                sparse: false,
+            }),
+            AggSpec::PlainMv { policy } => A::PlainMv(*policy),
+            AggSpec::DpSign { clip, sigma } => A::DpSign { clip: *clip, sigma: *sigma },
+            AggSpec::MaskedSum => A::MaskedSum,
+            AggSpec::FedAvg => A::FedAvg,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", self.name.clone())
+            .set("dataset", self.dataset.name())
+            .set("partition", self.partition.name())
+            .set("n_users", self.n_users)
+            .set("participants", self.participants)
+            .set("rounds", self.rounds)
+            .set("lr", self.lr)
+            .set("batch_size", self.batch_size)
+            .set("n_train", self.n_train)
+            .set("n_test", self.n_test)
+            .set("eval_every", self.eval_every)
+            .set("seeds", self.seeds.clone().into_iter().collect::<Vec<u64>>())
+            .set("model", self.model.clone());
+        let mut a = Json::obj();
+        match &self.agg {
+            AggSpec::HiSafe { ell, intra, inter } => {
+                a.set("kind", "hisafe")
+                    .set("ell", *ell)
+                    .set("intra", intra.name())
+                    .set("inter", inter.name());
+            }
+            AggSpec::PlainMv { policy } => {
+                a.set("kind", "plain_mv").set("policy", policy.name());
+            }
+            AggSpec::DpSign { clip, sigma } => {
+                a.set("kind", "dp_sign").set("clip", *clip).set("sigma", *sigma);
+            }
+            AggSpec::MaskedSum => {
+                a.set("kind", "masked_sum");
+            }
+            AggSpec::FedAvg => {
+                a.set("kind", "fedavg");
+            }
+        }
+        j.set("agg", a);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig, String> {
+        let get_str = |k: &str| -> Result<&str, String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("missing/invalid string field '{k}'"))
+        };
+        let get_usize = |k: &str, dflt: usize| -> Result<usize, String> {
+            match j.get(k) {
+                None => Ok(dflt),
+                Some(v) => v.as_usize().ok_or_else(|| format!("field '{k}' must be usize")),
+            }
+        };
+        let agg_j = j.get("agg").ok_or("missing 'agg'")?;
+        let kind = agg_j.get("kind").and_then(Json::as_str).ok_or("missing agg.kind")?;
+        let tie = |key: &str| -> Result<TiePolicy, String> {
+            let s = agg_j.get(key).and_then(Json::as_str).unwrap_or("one_bit");
+            TiePolicy::from_name(s).ok_or_else(|| format!("bad tie policy '{s}'"))
+        };
+        let agg = match kind {
+            "hisafe" => AggSpec::HiSafe {
+                ell: agg_j.get("ell").and_then(Json::as_usize).ok_or("missing agg.ell")?,
+                intra: tie("intra")?,
+                inter: tie("inter")?,
+            },
+            "plain_mv" => AggSpec::PlainMv { policy: tie("policy")? },
+            "dp_sign" => AggSpec::DpSign {
+                clip: agg_j.get("clip").and_then(Json::as_f64).unwrap_or(1.0),
+                sigma: agg_j.get("sigma").and_then(Json::as_f64).unwrap_or(1.0),
+            },
+            "masked_sum" => AggSpec::MaskedSum,
+            "fedavg" => AggSpec::FedAvg,
+            other => return Err(format!("unknown aggregator kind '{other}'")),
+        };
+        let seeds = match j.get("seeds") {
+            None => vec![0, 1, 2],
+            Some(Json::Arr(v)) => v
+                .iter()
+                .map(|x| x.as_u64().ok_or_else(|| "seeds must be u64".to_string()))
+                .collect::<Result<Vec<_>, _>>()?,
+            Some(_) => return Err("'seeds' must be an array".into()),
+        };
+        Ok(ExperimentConfig {
+            name: get_str("name")?.to_string(),
+            dataset: DataKind::from_name(get_str("dataset")?)
+                .ok_or_else(|| format!("unknown dataset '{}'", get_str("dataset").unwrap()))?,
+            partition: Partition::from_name(get_str("partition")?)
+                .ok_or_else(|| format!("unknown partition '{}'", get_str("partition").unwrap()))?,
+            n_users: get_usize("n_users", 100)?,
+            participants: get_usize("participants", 24)?,
+            rounds: get_usize("rounds", 150)?,
+            lr: j.get("lr").and_then(Json::as_f64).unwrap_or(0.005),
+            batch_size: get_usize("batch_size", 100)?,
+            n_train: get_usize("n_train", 6000)?,
+            n_test: get_usize("n_test", 1000)?,
+            eval_every: get_usize("eval_every", 5)?,
+            seeds,
+            agg,
+            model: j.get("model").and_then(Json::as_str).unwrap_or("linear").to_string(),
+        })
+    }
+
+    pub fn from_file(path: &str) -> Result<ExperimentConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let j = json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+/// The paper's figure presets. Hyperparameters follow Table VI (lr 0.001
+/// MNIST / 0.005 FMNIST / 0.0001 CIFAR, batch 100, 1 local epoch);
+/// dataset sizes are scaled down ~10× (6k train) so every figure
+/// regenerates in minutes on CPU — curves are about *relative* behaviour
+/// of tie policies/subgrouping, preserved under scaling.
+pub fn preset(name: &str) -> Option<ExperimentConfig> {
+    let base = |name: &str, dataset: DataKind, partition: Partition, n: usize,
+                lr: f64, intra: TiePolicy| ExperimentConfig {
+        name: name.to_string(),
+        dataset,
+        partition,
+        n_users: 100,
+        participants: n,
+        rounds: 150,
+        lr,
+        batch_size: 100,
+        n_train: 6000,
+        n_test: 1000,
+        eval_every: 5,
+        seeds: vec![0, 1, 2],
+        agg: AggSpec::HiSafe {
+            // ℓ chosen so n₁ = n/ℓ is EVEN: intra-subgroup ties are only
+            // possible for even n₁ (odd n₁ makes the 1-bit and 2-bit
+            // policies coincide — Table III), and the figures compare the
+            // two policies. n=24 → ℓ=6 (n₁=4); n=12 → ℓ=3 (n₁=4).
+            ell: if n == 24 { 6 } else { 3 },
+            intra,
+            inter: TiePolicy::OneBit,
+        },
+        model: "linear".to_string(),
+    };
+    use DataKind::*;
+    use Partition::*;
+    use TiePolicy::*;
+    Some(match name {
+        // Fig. 2: FMNIST n=24 non-IID, 1-bit vs 2-bit intra ties.
+        "fig2a" => base("fig2a", FmnistLike, TwoClass, 24, 0.005, OneBit),
+        "fig2b" => base("fig2b", FmnistLike, TwoClass, 24, 0.005, TwoBit),
+        // Fig. 3: MNIST IID n=12.
+        "fig3a" => base("fig3a", MnistLike, Iid, 12, 0.001, OneBit),
+        "fig3b" => base("fig3b", MnistLike, Iid, 12, 0.001, TwoBit),
+        // Fig. 4: FMNIST non-IID n=24 (same family as fig2, kept separate
+        // to mirror the paper's figure numbering).
+        "fig4a" => base("fig4a", FmnistLike, TwoClass, 24, 0.005, OneBit),
+        "fig4b" => base("fig4b", FmnistLike, TwoClass, 24, 0.005, TwoBit),
+        // Fig. 5: CIFAR non-IID n=24 (MLP head; lr from Table VI).
+        // Fig. 5 note: Table VI's CIFAR lr (0.0001) is tuned for the
+        // paper's CNN on real CIFAR; on the synthetic analogue + MLP it
+        // moves parameters too little to learn in 200 rounds, so we use
+        // 0.001 (documented in EXPERIMENTS.md §Substitutions).
+        "fig5a" => {
+            let mut c = base("fig5a", CifarLike, TwoClass, 24, 0.001, OneBit);
+            c.model = "mlp_32".to_string();
+            c.rounds = 150;
+            c.n_train = 4000;
+            c.eval_every = 10;
+            c
+        }
+        "fig5b" => {
+            let mut c = base("fig5b", CifarLike, TwoClass, 24, 0.001, TwoBit);
+            c.model = "mlp_32".to_string();
+            c.rounds = 150;
+            c.n_train = 4000;
+            c.eval_every = 10;
+            c
+        }
+        // Baseline presets for Table-I style comparisons.
+        "baseline_plain" => {
+            let mut c = base("baseline_plain", FmnistLike, TwoClass, 24, 0.005, OneBit);
+            c.agg = AggSpec::PlainMv { policy: OneBit };
+            c
+        }
+        "baseline_dp" => {
+            let mut c = base("baseline_dp", FmnistLike, TwoClass, 24, 0.005, OneBit);
+            c.agg = AggSpec::DpSign { clip: 1.0, sigma: 0.05 };
+            c
+        }
+        "baseline_masking" => {
+            let mut c = base("baseline_masking", FmnistLike, TwoClass, 24, 0.005, OneBit);
+            c.agg = AggSpec::MaskedSum;
+            c
+        }
+        "baseline_fedavg" => {
+            // float-gradient averaging needs a ~100× larger step than the
+            // ±1 sign update to move comparably per round
+            let mut c = base("baseline_fedavg", FmnistLike, TwoClass, 24, 0.5, OneBit);
+            c.agg = AggSpec::FedAvg;
+            c
+        }
+        _ => return None,
+    })
+}
+
+/// Names of all built-in presets.
+pub fn preset_names() -> Vec<&'static str> {
+    vec![
+        "fig2a", "fig2b", "fig3a", "fig3b", "fig4a", "fig4b", "fig5a", "fig5b",
+        "baseline_plain", "baseline_dp", "baseline_masking", "baseline_fedavg",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_all_resolve() {
+        for name in preset_names() {
+            let c = preset(name).unwrap_or_else(|| panic!("preset {name}"));
+            assert_eq!(c.name, name);
+            // aggregator resolves without panicking and n matches
+            let _ = c.aggregator();
+            assert!(c.participants <= c.n_users);
+            if let AggSpec::HiSafe { ell, .. } = c.agg {
+                assert_eq!(c.participants % ell, 0, "{name}: ℓ ∤ n");
+            }
+        }
+        assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_all_presets() {
+        for name in preset_names() {
+            let c = preset(name).unwrap();
+            let j = c.to_json();
+            let text = j.to_string_pretty();
+            let back = ExperimentConfig::from_json(&crate::util::json::parse(&text).unwrap())
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(back, c, "{name} roundtrip");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_bad_configs() {
+        let bad = crate::util::json::parse(
+            r#"{"name":"x","dataset":"mnist_like","partition":"iid","agg":{"kind":"warp"}}"#,
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
+        let missing_agg = crate::util::json::parse(
+            r#"{"name":"x","dataset":"mnist_like","partition":"iid"}"#,
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_json(&missing_agg).is_err());
+    }
+
+    #[test]
+    fn table6_learning_rates() {
+        assert_eq!(preset("fig3a").unwrap().lr, 0.001); // MNIST
+        assert_eq!(preset("fig2a").unwrap().lr, 0.005); // FMNIST
+        assert_eq!(preset("fig5a").unwrap().lr, 0.001); // CIFAR (see preset note)
+        assert_eq!(preset("fig2a").unwrap().batch_size, 100);
+    }
+}

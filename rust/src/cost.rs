@@ -1,0 +1,449 @@
+//! Analytic communication/latency cost model — regenerates Fig. 6 and
+//! Tables IV, VII, VIII, IX.
+//!
+//! Definitions (Section V-C):
+//! * `p₁ = next_prime(n₁)`, `⌈log p₁⌉` bits per field element;
+//! * `R` = masked field elements each user uploads = 2 openings per Beaver
+//!   multiplication, one multiplication per power `x²..x^deg(F)`
+//!   (Algorithm 1's full schedule);
+//! * latency = serial subround depth of the power schedule;
+//! * `C_u = R·⌈log p₁⌉` bits (per-user uplink per vote coordinate);
+//! * `C_T = ℓ·R·⌈log p₁⌉` bits — the paper's "total" is ℓ·C_u (equals the
+//!   server's total broadcast volume; true all-user uplink is n·C_u).
+//!
+//! The model is **derived from the real polynomial and schedule**, not
+//! hardcoded — and the integration tests assert the *measured* protocol
+//! byte counts ([`crate::metrics::CommStats`]) match this model exactly.
+//! Where the paper's own table rows are internally inconsistent with its
+//! formulas, [`paper_tables`] embeds the published numbers so the benches
+//! can print side-by-side deltas (see EXPERIMENTS.md).
+
+use crate::poly::{MvPolynomial, PowerSchedule, TiePolicy};
+
+/// Cost profile of one subgroup of size `n₁`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GroupCost {
+    pub n1: usize,
+    pub p1: u64,
+    /// `⌈log₂ p₁⌉` — bits per field element.
+    pub elem_bits: u32,
+    /// Degree of the majority-vote polynomial actually constructed.
+    pub deg: usize,
+    /// Secure multiplications (Beaver triples per round).
+    pub mults: usize,
+    /// Masked elements uploaded per user (`R` in the paper's tables).
+    pub openings: usize,
+    /// Serial subrounds (true schedule depth).
+    pub depth: usize,
+    /// The paper's latency formula `⌈log p₁⌉ − 1` for comparison.
+    pub depth_paper_formula: u32,
+    /// Per-user uplink bits per vote coordinate: `C_u = R·⌈log p₁⌉`.
+    pub c_u_bits: u64,
+}
+
+/// Cost profile of a full configuration `(n, ℓ)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigCost {
+    pub n: usize,
+    pub ell: usize,
+    pub group: GroupCost,
+    /// Paper's total: `C_T = ℓ·C_u` (server broadcast volume).
+    pub c_t_bits: u64,
+    /// True all-user uplink: `n·C_u`.
+    pub c_t_all_users_bits: u64,
+}
+
+/// Cost of one subgroup of `n₁` users under `policy`.
+/// `sparse = false` reproduces the paper's Algorithm-1 accounting.
+pub fn group_cost(n1: usize, policy: TiePolicy, sparse: bool) -> GroupCost {
+    let mv = MvPolynomial::build_fermat(n1, policy);
+    let deg = mv.degree();
+    let schedule = if sparse {
+        PowerSchedule::sparse(&mv.poly.needed_powers())
+    } else {
+        PowerSchedule::full(deg)
+    };
+    let p1 = mv.fp.modulus();
+    let elem_bits = mv.fp.bits();
+    let openings = schedule.openings();
+    GroupCost {
+        n1,
+        p1,
+        elem_bits,
+        deg,
+        mults: schedule.mults(),
+        openings,
+        depth: schedule.depth(),
+        depth_paper_formula: elem_bits.saturating_sub(1),
+        c_u_bits: openings as u64 * elem_bits as u64,
+    }
+}
+
+/// Cost of configuration `(n, ℓ)`.
+pub fn config_cost(n: usize, ell: usize, policy: TiePolicy, sparse: bool) -> ConfigCost {
+    assert!(ell >= 1 && n % ell == 0, "ℓ = {ell} must divide n = {n}");
+    let group = group_cost(n / ell, policy, sparse);
+    let c_u = group.c_u_bits;
+    ConfigCost {
+        n,
+        ell,
+        group,
+        c_t_bits: ell as u64 * c_u,
+        c_t_all_users_bits: n as u64 * c_u,
+    }
+}
+
+/// All divisors of `n` (candidate subgroup counts), ascending.
+pub fn divisors(n: usize) -> Vec<usize> {
+    let mut d: Vec<usize> = (1..=n).filter(|k| n % k == 0).collect();
+    d.sort_unstable();
+    d
+}
+
+/// Minimum subgroup size. `n₁ = 2` would make the residual-leakage
+/// probability `2^−(n₁−1)` (Remark 4) a full 50% per coordinate and the
+/// tie-merged vote nearly input-revealing, so — matching the paper's
+/// tables, whose smallest subgroup is 3 — the optimizer floors `n₁` at 3.
+pub const MIN_SUBGROUP: usize = 3;
+
+/// Find the `ℓ*` minimizing the paper's `C_T` (ties broken toward larger
+/// `ℓ`, matching Table VII: lower per-user cost preferred). Subgroups
+/// smaller than [`MIN_SUBGROUP`] are excluded (privacy floor).
+pub fn optimal_ell(n: usize, policy: TiePolicy, sparse: bool) -> ConfigCost {
+    divisors(n)
+        .into_iter()
+        .filter(|&ell| n / ell >= MIN_SUBGROUP)
+        .map(|ell| config_cost(n, ell, policy, sparse))
+        .min_by(|a, b| {
+            a.c_t_bits
+                .cmp(&b.c_t_bits)
+                .then(b.ell.cmp(&a.ell)) // prefer larger ℓ on ties (lower C_u)
+        })
+        .expect("n ≥ 2 has at least ℓ = 1")
+}
+
+/// Percentage reduction of `x` relative to baseline `b` (paper's
+/// parenthesized columns).
+pub fn reduction_pct(baseline: u64, x: u64) -> f64 {
+    if baseline == 0 {
+        return 0.0;
+    }
+    100.0 * (baseline as f64 - x as f64) / baseline as f64
+}
+
+// ------------------------------------------------------------ paper data
+
+/// One published row of Tables VIII/IX: `(n, ℓ, p₁, ⌈log p₁⌉, depth, R,
+/// C_T, C_u)` exactly as printed (including internally inconsistent rows —
+/// see EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy)]
+pub struct PaperRow {
+    pub n: usize,
+    pub ell: usize,
+    pub p1: u64,
+    pub log_p1: u32,
+    pub depth: u32,
+    pub r: usize,
+    pub c_t: u64,
+    pub c_u: u64,
+}
+
+/// Tables VIII + IX as published.
+pub fn paper_tables() -> Vec<PaperRow> {
+    const ROWS: &[(usize, usize, u64, u32, u32, usize, u64, u64)] = &[
+        (12, 1, 13, 4, 3, 18, 72, 72),
+        (12, 2, 7, 3, 2, 10, 60, 30),
+        (12, 3, 5, 3, 2, 6, 54, 18),
+        (12, 4, 5, 3, 2, 4, 48, 12),
+        (15, 1, 17, 5, 4, 18, 90, 90),
+        (15, 3, 7, 3, 2, 8, 48, 24),
+        (15, 5, 5, 3, 2, 4, 60, 12),
+        (16, 1, 17, 5, 4, 20, 100, 100),
+        (16, 2, 11, 4, 3, 14, 112, 56),
+        (16, 4, 5, 3, 2, 6, 72, 18),
+        (20, 1, 23, 5, 4, 32, 160, 160),
+        (20, 2, 11, 4, 3, 16, 128, 64),
+        (20, 4, 7, 3, 2, 8, 96, 24),
+        (20, 5, 5, 3, 2, 6, 90, 18),
+        (24, 1, 29, 5, 4, 40, 200, 200),
+        (24, 2, 13, 4, 3, 18, 144, 72),
+        (24, 3, 11, 4, 3, 14, 168, 56),
+        (24, 4, 7, 3, 2, 10, 120, 30),
+        (24, 6, 7, 3, 2, 6, 108, 18),
+        (24, 8, 5, 3, 2, 4, 96, 12),
+        (28, 1, 29, 5, 4, 40, 200, 200),
+        (28, 2, 17, 5, 4, 22, 220, 110),
+        (28, 4, 11, 4, 3, 14, 224, 56),
+        (28, 7, 5, 3, 2, 6, 126, 18),
+        (30, 1, 31, 5, 4, 38, 190, 190),
+        (30, 2, 17, 4, 3, 20, 200, 100),
+        (30, 3, 11, 4, 3, 16, 192, 64),
+        (30, 5, 7, 3, 2, 10, 150, 30),
+        (30, 6, 7, 3, 2, 8, 144, 24),
+        (30, 10, 5, 3, 2, 4, 120, 12),
+        (36, 1, 37, 6, 5, 46, 276, 276),
+        (36, 2, 19, 5, 4, 26, 260, 130),
+        (36, 3, 13, 4, 3, 18, 216, 72),
+        (36, 4, 11, 4, 3, 14, 224, 56),
+        (36, 6, 7, 3, 2, 10, 180, 30),
+        (36, 9, 5, 3, 2, 6, 162, 18),
+        (36, 12, 5, 3, 2, 4, 144, 12),
+        (40, 1, 41, 6, 5, 48, 288, 288),
+        (40, 2, 23, 5, 4, 32, 320, 160),
+        (40, 4, 11, 4, 3, 16, 256, 64),
+        (40, 5, 11, 4, 3, 14, 280, 56),
+        (40, 8, 7, 3, 2, 8, 192, 24),
+        (40, 10, 5, 3, 2, 6, 180, 18),
+        (50, 1, 51, 6, 5, 60, 360, 360),
+        (50, 2, 29, 5, 4, 34, 340, 170),
+        (50, 5, 11, 4, 3, 16, 320, 64),
+        (50, 10, 7, 3, 2, 8, 240, 24),
+        (60, 1, 61, 6, 5, 72, 432, 432),
+        (60, 2, 31, 5, 4, 38, 380, 190),
+        (60, 3, 23, 5, 3, 32, 480, 160),
+        (60, 5, 13, 4, 3, 18, 360, 72),
+        (60, 6, 11, 4, 2, 16, 384, 64),
+        (60, 10, 7, 3, 2, 10, 300, 30),
+        (60, 12, 7, 3, 2, 8, 288, 24),
+        (60, 20, 5, 3, 2, 4, 240, 12),
+        (70, 1, 71, 7, 6, 84, 588, 588),
+        (70, 2, 37, 6, 5, 44, 528, 264),
+        (70, 5, 17, 5, 4, 22, 550, 110),
+        (70, 7, 11, 4, 3, 16, 448, 64),
+        (70, 10, 11, 4, 3, 14, 560, 56),
+        (70, 14, 7, 3, 3, 8, 336, 24),
+        (80, 1, 81, 7, 6, 92, 644, 644),
+        (80, 2, 41, 6, 5, 48, 576, 288),
+        (80, 4, 23, 5, 4, 32, 640, 160),
+        (80, 5, 17, 5, 4, 20, 500, 100),
+        (80, 8, 11, 4, 3, 16, 512, 64),
+        (80, 10, 11, 4, 3, 14, 560, 56),
+        (80, 16, 7, 3, 2, 8, 384, 24),
+        (80, 20, 5, 3, 2, 6, 360, 18),
+        (90, 1, 91, 7, 6, 104, 728, 728),
+        (90, 2, 47, 6, 5, 54, 648, 324),
+        (90, 3, 31, 5, 4, 38, 570, 190),
+        (90, 5, 19, 5, 4, 26, 650, 130),
+        (90, 6, 17, 5, 4, 18, 540, 90),
+        (90, 9, 11, 4, 3, 16, 576, 64),
+        (90, 10, 11, 4, 3, 14, 560, 56),
+        (90, 15, 7, 3, 2, 10, 450, 30),
+        (90, 18, 7, 3, 2, 8, 432, 24),
+        (90, 30, 5, 3, 2, 4, 360, 12),
+        (100, 1, 101, 7, 6, 114, 798, 798),
+        (100, 2, 51, 6, 5, 60, 720, 360),
+        (100, 4, 29, 5, 4, 34, 680, 170),
+        (100, 5, 23, 5, 4, 32, 800, 160),
+        (100, 10, 11, 4, 3, 16, 640, 64),
+        (100, 20, 7, 3, 2, 8, 480, 24),
+        (100, 25, 5, 3, 2, 6, 450, 18),
+    ];
+    ROWS.iter()
+        .map(|&(n, ell, p1, log_p1, depth, r, c_t, c_u)| PaperRow {
+            n, ell, p1, log_p1, depth, r, c_t, c_u,
+        })
+        .collect()
+}
+
+/// Table VII as published: `(n, ℓ*, n₁, depth, mults("#multiplications"),
+/// C_T, C_T_red%, C_u, C_u_red%)`.
+pub fn paper_table7() -> Vec<(usize, usize, usize, u32, usize, u64, f64, u64, f64)> {
+    vec![
+        (24, 8, 3, 2, 4, 96, 52.0, 12, 94.0),
+        (36, 12, 3, 2, 4, 144, 47.8, 12, 95.7),
+        (60, 20, 3, 2, 4, 240, 44.4, 12, 97.2),
+        (90, 30, 3, 2, 4, 360, 50.5, 12, 98.4),
+        (100, 25, 4, 2, 6, 450, 43.6, 18, 97.7),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::secure_group_vote;
+    use crate::protocol::{run_sync, HiSafeConfig};
+    use crate::util::prop::forall;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn n1_3_matches_paper_exactly() {
+        // The headline subgroup (n₁ = 3, p₁ = 5) where our model and every
+        // paper table agree: R = 4, depth = 2, C_u = 12.
+        let g = group_cost(3, TiePolicy::OneBit, false);
+        assert_eq!(g.p1, 5);
+        assert_eq!(g.elem_bits, 3);
+        assert_eq!(g.deg, 3);
+        assert_eq!(g.mults, 2);
+        assert_eq!(g.openings, 4);
+        assert_eq!(g.depth, 2);
+        assert_eq!(g.c_u_bits, 12);
+    }
+
+    #[test]
+    fn n1_4_matches_paper() {
+        // Table VII n=100 row: n₁ = 4, "#multiplications" = 6, C_u = 18.
+        let g = group_cost(4, TiePolicy::OneBit, false);
+        assert_eq!(g.p1, 5);
+        assert_eq!(g.deg, 4);
+        assert_eq!(g.openings, 6);
+        assert_eq!(g.c_u_bits, 18);
+        assert_eq!(g.depth, 2);
+    }
+
+    #[test]
+    fn table7_star_configs_reproduced() {
+        // For each Table VII row, our optimizer must pick a config whose
+        // C_u matches the published value, and ℓ* must match where the
+        // paper's own table is self-consistent.
+        for (n, ell_star, n1, _depth, r, c_t, _ctr, c_u, _cur) in paper_table7() {
+            let best = optimal_ell(n, TiePolicy::OneBit, false);
+            assert_eq!(best.group.c_u_bits, c_u, "n={n} C_u");
+            assert_eq!(best.c_t_bits, c_t, "n={n} C_T");
+            assert_eq!(best.ell, ell_star, "n={n} ℓ*");
+            assert_eq!(best.group.n1, n1, "n={n} n₁");
+            assert_eq!(best.group.openings, r, "n={n} R");
+        }
+    }
+
+    #[test]
+    fn measured_comm_matches_model() {
+        // The protocol's byte counters must equal the analytic model —
+        // this ties Tables VII–IX to the actual implementation.
+        forall("measured ≡ analytic cost", 25, |g| {
+            let ell = g.usize_range(1, 4);
+            let n1 = g.usize_range(2, 6);
+            let n = ell * n1;
+            let policy = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let cfg = HiSafeConfig { n, ell, intra: policy, inter: TiePolicy::OneBit, sparse: false };
+            let d = g.usize_range(1, 4);
+            let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+            let out = run_sync(&signs, cfg, g.u64());
+            let model = config_cost(n, ell, policy, false);
+            // stats count d coordinates; model is per-coordinate
+            prop_assert_eq!(
+                out.stats.c_u_bits(),
+                model.group.c_u_bits * d as u64,
+                "C_u n={n} ell={ell} d={d} {policy:?}"
+            );
+            prop_assert_eq!(
+                out.stats.c_t_paper_bits(),
+                model.c_t_bits * d as u64,
+                "C_T n={n} ell={ell} d={d}"
+            );
+            prop_assert_eq!(out.stats.subrounds as usize, model.group.depth);
+            prop_assert_eq!(
+                out.stats.mults as usize,
+                model.group.mults * ell,
+                "mults"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_group_cost_equals_group_vote_stats() {
+        let g = group_cost(6, TiePolicy::OneBit, false);
+        let signs: Vec<Vec<i8>> = (0..6).map(|i| vec![if i < 3 { 1i8 } else { -1 }]).collect();
+        let out = secure_group_vote(&signs, TiePolicy::OneBit, false, 9);
+        assert_eq!(out.stats.c_u_bits(), g.c_u_bits);
+        assert_eq!(out.stats.subrounds as usize, g.depth);
+    }
+
+    #[test]
+    fn headline_reductions_hold() {
+        // Abstract claims: per-user reduction > 94% for n ≥ 24; total
+        // reduction ≈ 52% at n = 24 — relative to the flat baseline.
+        for n in [24usize, 36, 60, 90] {
+            let flat = config_cost(n, 1, TiePolicy::OneBit, false);
+            let best = optimal_ell(n, TiePolicy::OneBit, false);
+            let cu_red = reduction_pct(flat.group.c_u_bits, best.group.c_u_bits);
+            assert!(cu_red > 94.0, "n={n}: C_u reduction {cu_red:.1}% ≤ 94%");
+        }
+        // Paper claims 52.0% total reduction at n=24 against its flat
+        // baseline (R=40 ⇒ deg≈21). Our exact construction gives the flat
+        // polynomial its true degree (28 for p=29), so the flat baseline is
+        // costlier and the measured reduction is *larger* (64.4%) — the
+        // paper's figure is a lower bound under our accounting.
+        let flat24 = config_cost(24, 1, TiePolicy::OneBit, false);
+        let best24 = optimal_ell(24, TiePolicy::OneBit, false);
+        let ct_red = reduction_pct(flat24.c_t_bits, best24.c_t_bits);
+        assert!(ct_red >= 52.0, "n=24 C_T reduction {ct_red:.1}% < paper's 52%");
+    }
+
+    #[test]
+    fn per_user_cost_bounded_under_subgrouping() {
+        // Fig. 6a claim: with optimal subgrouping the per-user secure
+        // multiplication count stays ≤ 6 elements... in our accounting:
+        // openings ≤ 6 ⇔ mults ≤ 3 for n₁ ∈ {3, 4}.
+        for n in [12usize, 24, 36, 40, 60, 80, 90, 100] {
+            let best = optimal_ell(n, TiePolicy::OneBit, false);
+            assert!(
+                best.group.openings <= 6,
+                "n={n}: optimal config has {} openings",
+                best.group.openings
+            );
+            assert!(best.group.depth <= 2, "n={n}: depth {}", best.group.depth);
+        }
+    }
+
+    #[test]
+    fn flat_cost_grows_with_n_subgrouped_constant() {
+        // Fig. 6 shape: flat per-user cost grows ~linearly in n; optimal
+        // subgrouped cost is constant.
+        let flat: Vec<u64> = [12usize, 24, 48, 96]
+            .iter()
+            .map(|&n| config_cost(n, 1, TiePolicy::OneBit, false).group.c_u_bits)
+            .collect();
+        assert!(flat.windows(2).all(|w| w[1] > w[0]), "flat not increasing: {flat:?}");
+        let sub: Vec<u64> = [12usize, 24, 48, 96]
+            .iter()
+            .map(|&n| optimal_ell(n, TiePolicy::OneBit, false).group.c_u_bits)
+            .collect();
+        assert!(sub.iter().all(|&c| c == sub[0]), "subgrouped not constant: {sub:?}");
+    }
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(24), vec![1, 2, 3, 4, 6, 8, 12, 24]);
+        assert_eq!(divisors(7), vec![1, 7]);
+    }
+
+    #[test]
+    fn paper_row_internal_consistency_audit() {
+        // Count how many published rows satisfy the paper's own formula
+        // C_T = ℓ·R·⌈log p₁⌉ and C_u = R·⌈log p₁⌉. (Several don't — we
+        // document rather than reproduce the typos.)
+        let rows = paper_tables();
+        let mut consistent = 0;
+        for r in &rows {
+            if r.c_u == (r.r as u64) * r.log_p1 as u64
+                && r.c_t == r.ell as u64 * r.c_u
+            {
+                consistent += 1;
+            }
+        }
+        // The majority of rows must be self-consistent (sanity that we
+        // transcribed them correctly).
+        assert!(
+            consistent * 10 >= rows.len() * 8,
+            "only {consistent}/{} rows self-consistent",
+            rows.len()
+        );
+    }
+
+    #[test]
+    fn sparse_ablation_never_worse() {
+        for n1 in 2..=16usize {
+            for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+                let full = group_cost(n1, policy, false);
+                let sparse = group_cost(n1, policy, true);
+                assert!(
+                    sparse.c_u_bits <= full.c_u_bits,
+                    "n1={n1} {policy:?}: sparse {} > full {}",
+                    sparse.c_u_bits,
+                    full.c_u_bits
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,499 @@
+//! Prime-field arithmetic `F_p` — the algebraic substrate of Hi-SAFE.
+//!
+//! Hi-SAFE evaluates majority-vote polynomials over `F_p` with `p` the
+//! smallest prime greater than the (sub)group size, so `p` is tiny
+//! (5..101 in the paper's sweeps) but the *vectors* are model-sized
+//! (`d ≈ 10^5`). Elements are canonical `u64` in `[0, p)`; products fit in
+//! `u64` for any `p < 2^32`, and the hot path uses a precomputed
+//! Barrett-style reduction ([`Fp::mul`]) instead of hardware division.
+//!
+//! Everything here is `no_std`-shaped plain math with no dependencies; it is
+//! exercised by exhaustive unit tests (small `p`) and by the in-tree
+//! property harness ([`crate::util::prop`]) for field axioms.
+
+use std::fmt;
+
+/// A prime-field context: the modulus plus precomputed reduction constants.
+///
+/// `Fp` is cheap to copy (16 bytes) and is passed by value everywhere.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Fp {
+    /// The prime modulus.
+    p: u64,
+    /// Barrett constant: `floor(2^64 / p)` (for p > 1).
+    barrett: u64,
+}
+
+impl fmt::Debug for Fp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "F_{}", self.p)
+    }
+}
+
+impl Fp {
+    /// Create a field context. Panics if `p` is not prime (this is a
+    /// programming error everywhere in Hi-SAFE: moduli come from
+    /// [`next_prime`]).
+    pub fn new(p: u64) -> Self {
+        assert!(is_prime(p), "Fp::new: {p} is not prime");
+        assert!(p < (1 << 32), "Fp::new: p must fit in 32 bits, got {p}");
+        Fp { p, barrett: if p > 1 { u64::MAX / p } else { 0 } }
+    }
+
+    /// The modulus.
+    #[inline(always)]
+    pub fn modulus(self) -> u64 {
+        self.p
+    }
+
+    /// Bit length `⌈log2 p⌉` used for field-element wire representation
+    /// (the paper's `⌈log p₁⌉`).
+    #[inline]
+    pub fn bits(self) -> u32 {
+        64 - (self.p - 1).leading_zeros().min(63)
+    }
+
+    /// Reduce an arbitrary `u64` into `[0, p)`.
+    ///
+    /// Barrett-style: one multiply-high + one multiply + at most one
+    /// correction subtraction. Exact for all inputs because
+    /// `q = floor(x * floor(2^64/p) / 2^64) ∈ {floor(x/p) - 1, floor(x/p)}`.
+    #[inline(always)]
+    pub fn reduce(self, x: u64) -> u64 {
+        let q = ((x as u128 * self.barrett as u128) >> 64) as u64;
+        let mut r = x.wrapping_sub(q.wrapping_mul(self.p));
+        while r >= self.p {
+            r -= self.p;
+        }
+        r
+    }
+
+    /// Map a signed integer into the canonical representative in `[0, p)`.
+    #[inline(always)]
+    pub fn from_i64(self, x: i64) -> u64 {
+        let m = x.rem_euclid(self.p as i64);
+        m as u64
+    }
+
+    /// Centered lift: map `[0, p)` to the representative in
+    /// `(-p/2, p/2]`. Used to read out vote results (`p-1 ↦ -1`).
+    #[inline(always)]
+    pub fn lift(self, x: u64) -> i64 {
+        debug_assert!(x < self.p);
+        if x > self.p / 2 {
+            x as i64 - self.p as i64
+        } else {
+            x as i64
+        }
+    }
+
+    /// Addition in `F_p`. Inputs must be canonical.
+    #[inline(always)]
+    pub fn add(self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.p && b < self.p);
+        let s = a + b;
+        if s >= self.p {
+            s - self.p
+        } else {
+            s
+        }
+    }
+
+    /// Subtraction in `F_p`. Inputs must be canonical.
+    #[inline(always)]
+    pub fn sub(self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.p && b < self.p);
+        if a >= b {
+            a - b
+        } else {
+            a + self.p - b
+        }
+    }
+
+    /// Negation in `F_p`.
+    #[inline(always)]
+    pub fn neg(self, a: u64) -> u64 {
+        debug_assert!(a < self.p);
+        if a == 0 {
+            0
+        } else {
+            self.p - a
+        }
+    }
+
+    /// Multiplication in `F_p` (Barrett reduction; no division).
+    #[inline(always)]
+    pub fn mul(self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.p && b < self.p);
+        self.reduce(a * b)
+    }
+
+    /// Exponentiation by square-and-multiply.
+    pub fn pow(self, mut base: u64, mut exp: u64) -> u64 {
+        debug_assert!(base < self.p);
+        let mut acc = 1u64 % self.p;
+        while exp > 0 {
+            if exp & 1 == 1 {
+                acc = self.mul(acc, base);
+            }
+            base = self.mul(base, base);
+            exp >>= 1;
+        }
+        acc
+    }
+
+    /// Multiplicative inverse via Fermat's Little Theorem (`a^(p-2)`).
+    /// Panics on zero.
+    pub fn inv(self, a: u64) -> u64 {
+        assert!(a % self.p != 0, "Fp::inv of zero");
+        self.pow(a % self.p, self.p - 2)
+    }
+
+    /// `sign` of a centered element: `+1`, `0`, or `-1`.
+    #[inline]
+    pub fn sign_of(self, x: u64) -> i8 {
+        let l = self.lift(x);
+        if l > 0 {
+            1
+        } else if l < 0 {
+            -1
+        } else {
+            0
+        }
+    }
+
+    // ---- vector (model-dimension) operations: the L3 hot path ----
+
+    /// `dst[i] = (dst[i] + src[i]) mod p` — share aggregation.
+    #[inline]
+    pub fn vec_add_assign(self, dst: &mut [u64], src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = self.add(*d, *s);
+        }
+    }
+
+    /// `dst[i] = (dst[i] - src[i]) mod p`.
+    #[inline]
+    pub fn vec_sub_assign(self, dst: &mut [u64], src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = self.sub(*d, *s);
+        }
+    }
+
+    /// Element-wise `dst[i] += a[i]*b[i] mod p` — the Beaver recombination
+    /// kernel (`δ·[b] + ε·[a]` terms).
+    #[inline]
+    pub fn vec_mul_add_assign(self, dst: &mut [u64], a: &[u64], b: &[u64]) {
+        debug_assert_eq!(dst.len(), a.len());
+        debug_assert_eq!(dst.len(), b.len());
+        for i in 0..dst.len() {
+            dst[i] = self.add(dst[i], self.reduce(a[i] * b[i]));
+        }
+    }
+
+    /// Element-wise product `out[i] = a[i]*b[i] mod p`.
+    #[inline]
+    pub fn vec_mul(self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        debug_assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(&x, &y)| self.reduce(x * y)).collect()
+    }
+
+    /// Scalar-vector `dst[i] += k*src[i] mod p`.
+    #[inline]
+    pub fn vec_scale_add_assign(self, dst: &mut [u64], k: u64, src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        if k == 0 {
+            return;
+        }
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = self.add(*d, self.reduce(k * *s));
+        }
+    }
+
+    /// Reduce every lane of a raw vector into canonical form.
+    #[inline]
+    pub fn vec_reduce_in_place(self, v: &mut [u64]) {
+        for x in v.iter_mut() {
+            *x = self.reduce(*x);
+        }
+    }
+
+    /// True when raw (unreduced) accumulation of `terms` products of
+    /// canonical elements cannot overflow u64 — the fused fast path used
+    /// by the MPC hot loops (§Perf). Every Hi-SAFE field (`p ≤ 131`)
+    /// qualifies by ~9 orders of magnitude.
+    #[inline]
+    pub fn fused_headroom(self, terms: u64) -> bool {
+        let p2 = (self.p as u128 - 1) * (self.p as u128 - 1);
+        terms as u128 * p2 < u64::MAX as u128
+    }
+
+    /// `acc[i] += k·src[i]` WITHOUT reduction (caller guarantees headroom
+    /// via [`Self::fused_headroom`] and reduces once at the end).
+    #[inline]
+    pub fn vec_scale_add_raw(self, acc: &mut [u64], k: u64, src: &[u64]) {
+        debug_assert_eq!(acc.len(), src.len());
+        if k == 0 {
+            return;
+        }
+        for (a, &s) in acc.iter_mut().zip(src) {
+            *a += k * s;
+        }
+    }
+
+    /// `acc[i] += src[i]` without reduction (raw accumulation).
+    #[inline]
+    pub fn vec_add_raw(self, acc: &mut [u64], src: &[u64]) {
+        debug_assert_eq!(acc.len(), src.len());
+        for (a, &s) in acc.iter_mut().zip(src) {
+            *a += s;
+        }
+    }
+
+    /// Map a ±1 sign vector (`i8`) into canonical field elements.
+    pub fn encode_signs(self, signs: &[i8]) -> Vec<u64> {
+        signs.iter().map(|&s| self.from_i64(s as i64)).collect()
+    }
+
+    /// Centered lift of a whole vector.
+    pub fn lift_vec(self, v: &[u64]) -> Vec<i64> {
+        v.iter().map(|&x| self.lift(x)).collect()
+    }
+}
+
+/// Deterministic Miller–Rabin primality test, exact for all `u64`.
+///
+/// Witness set {2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37} is sufficient
+/// for n < 3.3·10^24 (Sorenson & Webster), hence for all u64.
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for &q in &[2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n == q {
+            return true;
+        }
+        if n % q == 0 {
+            return false;
+        }
+    }
+    let mut d = n - 1;
+    let mut r = 0u32;
+    while d % 2 == 0 {
+        d /= 2;
+        r += 1;
+    }
+    'witness: for &a in &[2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = mod_pow_u64(a % n, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..r - 1 {
+            x = mod_mul_u64(x, x, n);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+#[inline]
+fn mod_mul_u64(a: u64, b: u64, m: u64) -> u64 {
+    ((a as u128 * b as u128) % m as u128) as u64
+}
+
+fn mod_pow_u64(mut b: u64, mut e: u64, m: u64) -> u64 {
+    let mut acc = 1u64 % m;
+    b %= m;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = mod_mul_u64(acc, b, m);
+        }
+        b = mod_mul_u64(b, b, m);
+        e >>= 1;
+    }
+    acc
+}
+
+/// Smallest prime strictly greater than `n` — the paper's modulus rule
+/// (`p > n`, Section III-B).
+pub fn next_prime(n: u64) -> u64 {
+    let mut c = n + 1;
+    if c <= 2 {
+        return 2;
+    }
+    if c % 2 == 0 {
+        c += 1;
+    }
+    while !is_prime(c) {
+        c += 2;
+    }
+    c
+}
+
+/// The field used for a (sub)group of `n` users: `F_p` with
+/// `p = next_prime(n)`, clamped to an odd prime (`n = 1 ⇒ p = 3`; the
+/// vote support is only pairwise-distinct mod an odd prime).
+pub fn field_for_group(n: usize) -> Fp {
+    Fp::new(next_prime(n.max(2) as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primality_small() {
+        let primes: Vec<u64> =
+            (0..60).filter(|&n| is_prime(n)).collect();
+        assert_eq!(
+            primes,
+            vec![2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59]
+        );
+    }
+
+    #[test]
+    fn primality_carmichael_and_large() {
+        // Carmichael numbers must be rejected.
+        for n in [561u64, 1105, 1729, 2465, 2821, 6601, 8911, 41041] {
+            assert!(!is_prime(n), "{n} is Carmichael, not prime");
+        }
+        assert!(is_prime(2_147_483_647)); // 2^31 - 1
+        assert!(!is_prime(2_147_483_649));
+        assert!(is_prime(4_294_967_291)); // largest prime < 2^32
+    }
+
+    #[test]
+    fn next_prime_matches_paper_moduli() {
+        // Every (n, p) pair appearing in Tables VII–IX.
+        for (n, p) in [
+            (2u64, 3u64), (3, 5), (4, 5), (5, 7), (6, 7), (7, 11), (8, 11),
+            (9, 11), (10, 11), (12, 13), (14, 17), (15, 17), (16, 17),
+            (18, 19), (20, 23), (24, 29), (25, 29), (28, 29), (30, 31),
+            (35, 37), (36, 37), (40, 41), (45, 47), (50, 53), (60, 61),
+            (70, 71), (80, 83), (90, 97), (100, 101),
+        ] {
+            assert_eq!(next_prime(n), p, "next_prime({n})");
+        }
+    }
+
+    #[test]
+    fn paper_table_nonprime_p1_entries() {
+        // Tables VIII/IX list p₁ = 51 for n₁ = 50 and p₁ = 81/91 for
+        // n₁ = 80/90 — those are NOT prime; the correct moduli are
+        // 53, 83, 97. We document the discrepancy here and use real primes.
+        assert!(!is_prime(51));
+        assert!(!is_prime(81));
+        assert!(!is_prime(91));
+        assert_eq!(next_prime(50), 53);
+        assert_eq!(next_prime(80), 83);
+        assert_eq!(next_prime(90), 97);
+        assert_eq!(next_prime(100), 101);
+    }
+
+    #[test]
+    fn bits_matches_paper_log_column() {
+        for (p, bits) in [
+            (3u64, 2u32), (5, 3), (7, 3), (11, 4), (13, 4), (17, 5),
+            (19, 5), (23, 5), (29, 5), (31, 5), (37, 6), (41, 6), (61, 6),
+            (71, 7), (97, 7), (101, 7),
+        ] {
+            assert_eq!(Fp::new(p).bits(), bits, "bits({p})");
+        }
+    }
+
+    #[test]
+    fn field_axioms_exhaustive_small_p() {
+        for p in [2u64, 3, 5, 7, 11, 13] {
+            let f = Fp::new(p);
+            for a in 0..p {
+                for b in 0..p {
+                    assert_eq!(f.add(a, b), (a + b) % p);
+                    assert_eq!(f.sub(a, b), (a + p - b) % p);
+                    assert_eq!(f.mul(a, b), (a * b) % p);
+                    // distributivity
+                    for c in 0..p {
+                        assert_eq!(
+                            f.mul(a, f.add(b, c)),
+                            f.add(f.mul(a, b), f.mul(a, c))
+                        );
+                    }
+                }
+                if a != 0 {
+                    assert_eq!(f.mul(a, f.inv(a)), 1 % p, "inv axiom p={p} a={a}");
+                }
+                assert_eq!(f.add(a, f.neg(a)), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn fermat_little_theorem_holds() {
+        for p in [3u64, 5, 7, 11, 29, 101] {
+            let f = Fp::new(p);
+            for a in 1..p {
+                assert_eq!(f.pow(a, p - 1), 1, "a^(p-1) != 1 for p={p}, a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_is_exact_at_extremes() {
+        for p in [3u64, 5, 29, 101, 65537, (1 << 31) - 1] {
+            let f = Fp::new(p);
+            for x in [
+                0u64, 1, p - 1, p, p + 1, u64::MAX, u64::MAX - 1,
+                (p - 1) * (p - 1),
+            ] {
+                assert_eq!(f.reduce(x), x % p, "reduce({x}) mod {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn lift_roundtrip() {
+        let f = Fp::new(29);
+        for x in -14i64..=14 {
+            assert_eq!(f.lift(f.from_i64(x)), x);
+        }
+        assert_eq!(f.sign_of(f.from_i64(-3)), -1);
+        assert_eq!(f.sign_of(f.from_i64(0)), 0);
+        assert_eq!(f.sign_of(f.from_i64(5)), 1);
+    }
+
+    #[test]
+    fn vector_ops_match_scalar() {
+        let f = Fp::new(13);
+        let a: Vec<u64> = (0..13).collect();
+        let b: Vec<u64> = (0..13).rev().collect();
+        let mut d = a.clone();
+        f.vec_add_assign(&mut d, &b);
+        for i in 0..13 {
+            assert_eq!(d[i], f.add(a[i], b[i]));
+        }
+        let mut d = a.clone();
+        f.vec_mul_add_assign(&mut d, &a, &b);
+        for i in 0..13 {
+            assert_eq!(d[i], f.add(a[i], f.mul(a[i], b[i])));
+        }
+        let mut d = a.clone();
+        f.vec_scale_add_assign(&mut d, 7, &b);
+        for i in 0..13 {
+            assert_eq!(d[i], f.add(a[i], f.mul(7, b[i])));
+        }
+    }
+
+    #[test]
+    fn encode_signs_roundtrip() {
+        let f = Fp::new(5);
+        let signs = vec![1i8, -1, 1, -1, -1];
+        let enc = f.encode_signs(&signs);
+        assert_eq!(enc, vec![1, 4, 1, 4, 4]);
+        let lifted = f.lift_vec(&enc);
+        assert_eq!(lifted, vec![1, -1, 1, -1, -1]);
+    }
+}

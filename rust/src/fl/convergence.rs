@@ -1,0 +1,140 @@
+//! Theorem-1 convergence bound for hierarchical SIGNSGD-MV.
+//!
+//! ```text
+//! E[ (1/K) Σ ||g_k||₁ ]² ≤ (1/√N_t) · ( √||L||₁ (f₀ − f* + ½)
+//!                                       + (2/√n₁)·||σ||₁
+//!                                       + C_hier·e^(−c₂ℓ) )²
+//! ```
+//! with `c₂ = (2q−1)²/2` and `q > ½` the per-subgroup vote success
+//! probability. The module evaluates the bound and exposes the
+//! convergence–communication trade-off of Remark 1; tests check the
+//! monotonicities the remark claims, and an empirical test estimates `q`
+//! from simulation to confirm the Hoeffding direction.
+
+/// Problem constants for the bound.
+#[derive(Debug, Clone, Copy)]
+pub struct BoundParams {
+    /// `||L||₁` — sum of coordinate smoothness constants.
+    pub l1_norm_smoothness: f64,
+    /// `f₀ − f*`.
+    pub init_gap: f64,
+    /// `||σ||₁` — sum of per-coordinate stochastic-gradient std bounds.
+    pub sigma_l1: f64,
+    /// `C_hier = Σ_j E|g_{k,j}|`.
+    pub c_hier: f64,
+    /// Per-subgroup success probability `q > ½`.
+    pub q: f64,
+}
+
+/// Evaluate the Theorem-1 right-hand side for `K` iterations with the
+/// prescribed step size (`N_t = K²`), users split as `ℓ` groups of `n₁`.
+pub fn theorem1_bound(p: &BoundParams, k_iters: usize, n1: usize, ell: usize) -> f64 {
+    assert!(p.q > 0.5, "Theorem 1 requires q > 1/2");
+    assert!(n1 >= 1 && ell >= 1);
+    let n_t = (k_iters as f64) * (k_iters as f64);
+    let c2 = (2.0 * p.q - 1.0).powi(2) / 2.0;
+    let inner = p.l1_norm_smoothness.sqrt() * (p.init_gap + 0.5)
+        + 2.0 / (n1 as f64).sqrt() * p.sigma_l1
+        + p.c_hier * (-c2 * ell as f64).exp();
+    inner * inner / n_t.sqrt()
+}
+
+/// Per-coordinate subgroup vote failure bound `e^(−c₁·n₁)` (Hoeffding,
+/// Appendix B) given a per-user success margin `2q_user − 1`.
+pub fn subgroup_error_bound(q_user: f64, n1: usize) -> f64 {
+    assert!(q_user > 0.5);
+    let c1 = (2.0 * q_user - 1.0).powi(2) / 2.0;
+    (-c1 * n1 as f64).exp()
+}
+
+/// Global majority failure bound `e^(−c₂·ℓ)` (Appendix B).
+pub fn global_error_bound(q_subgroup: f64, ell: usize) -> f64 {
+    assert!(q_subgroup > 0.5);
+    let c2 = (2.0 * q_subgroup - 1.0).powi(2) / 2.0;
+    (-c2 * ell as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, Xoshiro256pp};
+
+    fn base() -> BoundParams {
+        BoundParams {
+            l1_norm_smoothness: 10.0,
+            init_gap: 5.0,
+            sigma_l1: 20.0,
+            c_hier: 8.0,
+            q: 0.7,
+        }
+    }
+
+    #[test]
+    fn bound_decreases_with_iterations() {
+        let p = base();
+        let b100 = theorem1_bound(&p, 100, 4, 6);
+        let b400 = theorem1_bound(&p, 400, 4, 6);
+        assert!(b400 < b100);
+        // rate ~ 1/K: quadrupling K should shrink by ~4×
+        assert!((b100 / b400 - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn remark1_tradeoff_monotonicities() {
+        let p = base();
+        // larger subgroups (n₁↑ at fixed ℓ) → lower variance term → tighter
+        assert!(theorem1_bound(&p, 100, 8, 6) < theorem1_bound(&p, 100, 2, 6));
+        // more subgroups (ℓ↑ at fixed n₁) → global error suppressed
+        assert!(theorem1_bound(&p, 100, 4, 12) < theorem1_bound(&p, 100, 4, 2));
+        // higher q → tighter
+        let mut p2 = p;
+        p2.q = 0.9;
+        assert!(theorem1_bound(&p2, 100, 4, 6) < theorem1_bound(&p, 100, 4, 6));
+    }
+
+    #[test]
+    fn hierarchical_penalty_vanishes_for_moderate_ell() {
+        // Remark 1: "exponentially suppressed global error" — with ℓ = 20
+        // the hierarchical term must be negligible vs the variance term.
+        let p = base();
+        let variance_term = 2.0 / 2.0f64.sqrt() * p.sigma_l1;
+        let c2 = (2.0 * p.q - 1.0).powi(2) / 2.0;
+        let hier_term = p.c_hier * (-c2 * 20.0f64).exp();
+        assert!(hier_term < variance_term * 1e-1);
+    }
+
+    #[test]
+    fn error_bounds_decay() {
+        assert!(subgroup_error_bound(0.6, 10) < subgroup_error_bound(0.6, 3));
+        assert!(global_error_bound(0.7, 8) < global_error_bound(0.7, 2));
+        assert!(global_error_bound(0.7, 8) < 1.0);
+    }
+
+    /// Empirical check of the Hoeffding direction: simulate per-user votes
+    /// with success prob q_user; measure subgroup majority success; it must
+    /// exceed q_user and grow with n₁ (for odd n₁, avoiding tie effects).
+    #[test]
+    fn empirical_majority_amplification() {
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let q_user = 0.62;
+        let trials = 30_000;
+        let success_rate = |n1: usize, rng: &mut Xoshiro256pp| -> f64 {
+            let mut ok = 0usize;
+            for _ in 0..trials {
+                let correct = (0..n1)
+                    .filter(|_| rng.gen_f64() < q_user)
+                    .count();
+                if 2 * correct > n1 {
+                    ok += 1;
+                }
+            }
+            ok as f64 / trials as f64
+        };
+        let s3 = success_rate(3, &mut rng);
+        let s9 = success_rate(9, &mut rng);
+        assert!(s3 > q_user, "majority of 3 ({s3}) ≤ single user ({q_user})");
+        assert!(s9 > s3, "amplification not monotone: {s9} ≤ {s3}");
+        // and the failure rate is within the Hoeffding bound
+        assert!(1.0 - s9 <= subgroup_error_bound(q_user, 9) + 0.02);
+    }
+}

@@ -1,0 +1,21 @@
+//! Federated-learning harness: datasets, models, the SIGNSGD-MV training
+//! loop, and the Theorem-1 convergence bound.
+//!
+//! The experiments in the paper (Figs. 2–5) train small image classifiers
+//! under non-IID federated splits with `N = 100` users and participation
+//! fraction `C ∈ [0.12, 0.36]`. MNIST/FMNIST/CIFAR-10 are not downloadable
+//! in this environment, so [`data`] provides deterministic synthetic
+//! class-conditional analogues (see DESIGN.md §Substitutions) — the
+//! properties the figures probe (sign disagreement across non-IID users,
+//! tie frequency, subgrouping fidelity) are distributional, not
+//! pixel-specific.
+//!
+//! Two model backends implement [`model::Model`]:
+//! * pure-rust [`model::LinearSoftmax`] / [`model::Mlp`] (always available);
+//! * the AOT-compiled JAX models via [`crate::runtime::JaxModel`]
+//!   (the L2/L1 path — used by `examples/fl_e2e.rs`).
+
+pub mod convergence;
+pub mod data;
+pub mod model;
+pub mod trainer;

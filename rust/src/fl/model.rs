@@ -1,0 +1,375 @@
+//! Model backends for the FL trainer.
+//!
+//! [`Model`] abstracts "compute loss+gradient on a batch" so the trainer
+//! can run against either the pure-rust implementations here or the
+//! AOT-compiled JAX models ([`crate::runtime::JaxModel`]) — and so the
+//! integration tests can cross-check the two backends against each other.
+//!
+//! Both rust models are exact (closed-form softmax cross-entropy
+//! gradients), verified against finite differences in the tests.
+
+use crate::fl::data::Dataset;
+use crate::util::rng::{Rng, Xoshiro256pp};
+
+/// A differentiable classifier with flat `f32` parameters.
+pub trait Model {
+    /// Number of parameters `d` (the vote dimension).
+    fn dim(&self) -> usize;
+
+    /// Deterministic parameter initialization.
+    fn init_params(&self, seed: u64) -> Vec<f32>;
+
+    /// Mean loss and gradient over the given sample indices of `ds`.
+    fn loss_grad(&self, params: &[f32], ds: &Dataset, batch: &[usize]) -> (f32, Vec<f32>);
+
+    /// Top-1 accuracy over the whole dataset.
+    fn accuracy(&self, params: &[f32], ds: &Dataset) -> f32;
+
+    /// Human-readable name for logs.
+    fn name(&self) -> String;
+}
+
+// ------------------------------------------------------- linear softmax
+
+/// Multinomial logistic regression: `logits = W x + b`.
+/// `d = in_dim·classes + classes`.
+#[derive(Debug, Clone, Copy)]
+pub struct LinearSoftmax {
+    pub in_dim: usize,
+    pub n_classes: usize,
+}
+
+impl LinearSoftmax {
+    pub fn new(in_dim: usize, n_classes: usize) -> Self {
+        LinearSoftmax { in_dim, n_classes }
+    }
+
+    fn logits(&self, params: &[f32], x: &[f32], out: &mut [f32]) {
+        let (w, b) = params.split_at(self.in_dim * self.n_classes);
+        for c in 0..self.n_classes {
+            // W row-major [class][pixel]
+            let row = &w[c * self.in_dim..(c + 1) * self.in_dim];
+            let mut z = b[c];
+            for (wi, xi) in row.iter().zip(x) {
+                z += wi * xi;
+            }
+            out[c] = z;
+        }
+    }
+}
+
+/// Numerically stable in-place softmax; returns log-sum-exp.
+fn softmax_inplace(z: &mut [f32]) -> f32 {
+    let m = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in z.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    for v in z.iter_mut() {
+        *v /= sum;
+    }
+    m + sum.ln()
+}
+
+impl Model for LinearSoftmax {
+    fn dim(&self) -> usize {
+        self.in_dim * self.n_classes + self.n_classes
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let scale = (1.0 / self.in_dim as f64).sqrt() as f32;
+        (0..self.dim())
+            .map(|_| scale * rng.gen_gaussian() as f32)
+            .collect()
+    }
+
+    fn loss_grad(&self, params: &[f32], ds: &Dataset, batch: &[usize]) -> (f32, Vec<f32>) {
+        assert!(!batch.is_empty());
+        let k = self.n_classes;
+        let mut grad = vec![0.0f32; self.dim()];
+        let mut loss = 0.0f32;
+        let mut probs = vec![0.0f32; k];
+        let inv = 1.0 / batch.len() as f32;
+        let (gw, gb) = grad.split_at_mut(self.in_dim * k);
+        for &i in batch {
+            let x = ds.image(i);
+            let y = ds.label(i) as usize;
+            self.logits(params, x, &mut probs);
+            softmax_inplace(&mut probs);
+            loss -= (probs[y].max(1e-12)).ln();
+            for c in 0..k {
+                let err = (probs[c] - if c == y { 1.0 } else { 0.0 }) * inv;
+                gb[c] += err;
+                let row = &mut gw[c * self.in_dim..(c + 1) * self.in_dim];
+                for (g, &xi) in row.iter_mut().zip(x) {
+                    *g += err * xi;
+                }
+            }
+        }
+        (loss * inv, grad)
+    }
+
+    fn accuracy(&self, params: &[f32], ds: &Dataset) -> f32 {
+        let mut z = vec![0.0f32; self.n_classes];
+        let mut correct = 0usize;
+        for i in 0..ds.len() {
+            self.logits(params, ds.image(i), &mut z);
+            let pred = z
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            correct += usize::from(pred == ds.label(i) as usize);
+        }
+        correct as f32 / ds.len() as f32
+    }
+
+    fn name(&self) -> String {
+        format!("linear_softmax_{}x{}", self.in_dim, self.n_classes)
+    }
+}
+
+// ------------------------------------------------------------------- MLP
+
+/// One-hidden-layer ReLU MLP: `in → hidden → classes`, softmax CE.
+/// Parameter layout: `[W1 (h×in), b1 (h), W2 (k×h), b2 (k)]`.
+#[derive(Debug, Clone, Copy)]
+pub struct Mlp {
+    pub in_dim: usize,
+    pub hidden: usize,
+    pub n_classes: usize,
+}
+
+impl Mlp {
+    pub fn new(in_dim: usize, hidden: usize, n_classes: usize) -> Self {
+        Mlp { in_dim, hidden, n_classes }
+    }
+
+    fn split<'a>(&self, p: &'a [f32]) -> (&'a [f32], &'a [f32], &'a [f32], &'a [f32]) {
+        let (w1, rest) = p.split_at(self.hidden * self.in_dim);
+        let (b1, rest) = rest.split_at(self.hidden);
+        let (w2, b2) = rest.split_at(self.n_classes * self.hidden);
+        (w1, b1, w2, b2)
+    }
+
+    fn forward(&self, p: &[f32], x: &[f32], hid: &mut [f32], logits: &mut [f32]) {
+        let (w1, b1, w2, b2) = self.split(p);
+        for h in 0..self.hidden {
+            let row = &w1[h * self.in_dim..(h + 1) * self.in_dim];
+            let mut z = b1[h];
+            for (wi, xi) in row.iter().zip(x) {
+                z += wi * xi;
+            }
+            hid[h] = z.max(0.0); // ReLU
+        }
+        for c in 0..self.n_classes {
+            let row = &w2[c * self.hidden..(c + 1) * self.hidden];
+            let mut z = b2[c];
+            for (wi, hi) in row.iter().zip(hid.iter()) {
+                z += wi * hi;
+            }
+            logits[c] = z;
+        }
+    }
+}
+
+impl Model for Mlp {
+    fn dim(&self) -> usize {
+        self.hidden * self.in_dim + self.hidden + self.n_classes * self.hidden + self.n_classes
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut p = Vec::with_capacity(self.dim());
+        let s1 = (2.0 / self.in_dim as f64).sqrt() as f32; // He init
+        for _ in 0..self.hidden * self.in_dim {
+            p.push(s1 * rng.gen_gaussian() as f32);
+        }
+        p.extend(std::iter::repeat(0.0f32).take(self.hidden));
+        let s2 = (2.0 / self.hidden as f64).sqrt() as f32;
+        for _ in 0..self.n_classes * self.hidden {
+            p.push(s2 * rng.gen_gaussian() as f32);
+        }
+        p.extend(std::iter::repeat(0.0f32).take(self.n_classes));
+        p
+    }
+
+    fn loss_grad(&self, params: &[f32], ds: &Dataset, batch: &[usize]) -> (f32, Vec<f32>) {
+        assert!(!batch.is_empty());
+        let (h, k) = (self.hidden, self.n_classes);
+        let mut grad = vec![0.0f32; self.dim()];
+        let mut hid = vec![0.0f32; h];
+        let mut probs = vec![0.0f32; k];
+        let mut dhid = vec![0.0f32; h];
+        let mut loss = 0.0f32;
+        let inv = 1.0 / batch.len() as f32;
+        let (w1, _b1, w2, _b2) = self.split(params);
+        for &i in batch {
+            let x = ds.image(i);
+            let y = ds.label(i) as usize;
+            self.forward(params, x, &mut hid, &mut probs);
+            softmax_inplace(&mut probs);
+            loss -= probs[y].max(1e-12).ln();
+            // output layer
+            let (gw1, grest) = grad.split_at_mut(h * self.in_dim);
+            let (gb1, grest) = grest.split_at_mut(h);
+            let (gw2, gb2) = grest.split_at_mut(k * h);
+            dhid.iter_mut().for_each(|v| *v = 0.0);
+            for c in 0..k {
+                let err = (probs[c] - if c == y { 1.0 } else { 0.0 }) * inv;
+                gb2[c] += err;
+                let row = &mut gw2[c * h..(c + 1) * h];
+                let wrow = &w2[c * h..(c + 1) * h];
+                for j in 0..h {
+                    row[j] += err * hid[j];
+                    dhid[j] += err * wrow[j];
+                }
+            }
+            // hidden layer (ReLU mask = hid > 0)
+            for j in 0..h {
+                if hid[j] <= 0.0 {
+                    continue;
+                }
+                gb1[j] += dhid[j];
+                let row = &mut gw1[j * self.in_dim..(j + 1) * self.in_dim];
+                for (g, &xi) in row.iter_mut().zip(x) {
+                    *g += dhid[j] * xi;
+                }
+            }
+            let _ = w1;
+        }
+        (loss * inv, grad)
+    }
+
+    fn accuracy(&self, params: &[f32], ds: &Dataset) -> f32 {
+        let mut hid = vec![0.0f32; self.hidden];
+        let mut z = vec![0.0f32; self.n_classes];
+        let mut correct = 0usize;
+        for i in 0..ds.len() {
+            self.forward(params, ds.image(i), &mut hid, &mut z);
+            let pred = z
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            correct += usize::from(pred == ds.label(i) as usize);
+        }
+        correct as f32 / ds.len() as f32
+    }
+
+    fn name(&self) -> String {
+        format!("mlp_{}x{}x{}", self.in_dim, self.hidden, self.n_classes)
+    }
+}
+
+/// Element-wise sign with 0 mapped to +1 (gradient exactly 0 is a
+/// measure-zero event; SIGNSGD implementations conventionally send +1).
+pub fn sign_vec(grad: &[f32]) -> Vec<i8> {
+    grad.iter().map(|&g| if g < 0.0 { -1i8 } else { 1 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::data::{synthetic, DataKind};
+
+    fn tiny_ds() -> Dataset {
+        let (tr, _) = synthetic(DataKind::MnistLike, 40, 10, 3);
+        tr
+    }
+
+    /// Central finite differences on a random subset of coordinates.
+    fn check_grad<M: Model>(m: &M, ds: &Dataset) {
+        let params = m.init_params(1);
+        let batch: Vec<usize> = (0..8).collect();
+        let (_, grad) = m.loss_grad(&params, ds, &batch);
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let eps = 1e-3f32;
+        for _ in 0..24 {
+            let j = (rng.next_u64() % m.dim() as u64) as usize;
+            let mut pp = params.clone();
+            pp[j] += eps;
+            let (lp, _) = m.loss_grad(&pp, ds, &batch);
+            pp[j] -= 2.0 * eps;
+            let (lm, _) = m.loss_grad(&pp, ds, &batch);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad[j]).abs() < 2e-2 * (1.0 + fd.abs().max(grad[j].abs())),
+                "coord {j}: fd {fd} vs analytic {}",
+                grad[j]
+            );
+        }
+    }
+
+    #[test]
+    fn linear_grad_matches_finite_difference() {
+        check_grad(&LinearSoftmax::new(784, 10), &tiny_ds());
+    }
+
+    #[test]
+    fn mlp_grad_matches_finite_difference() {
+        check_grad(&Mlp::new(784, 16, 10), &tiny_ds());
+    }
+
+    #[test]
+    fn dims() {
+        assert_eq!(LinearSoftmax::new(784, 10).dim(), 7850);
+        assert_eq!(Mlp::new(784, 32, 10).dim(), 784 * 32 + 32 + 320 + 10);
+    }
+
+    #[test]
+    fn sgd_reduces_loss() {
+        let ds = tiny_ds();
+        let m = LinearSoftmax::new(784, 10);
+        let mut params = m.init_params(2);
+        let batch: Vec<usize> = (0..40).collect();
+        let (l0, _) = m.loss_grad(&params, &ds, &batch);
+        for _ in 0..50 {
+            let (_, g) = m.loss_grad(&params, &ds, &batch);
+            for (p, gi) in params.iter_mut().zip(&g) {
+                *p -= 0.5 * gi;
+            }
+        }
+        let (l1, _) = m.loss_grad(&params, &ds, &batch);
+        assert!(l1 < l0 * 0.5, "loss {l0} → {l1}");
+    }
+
+    #[test]
+    fn signsgd_reduces_loss_and_learns() {
+        // signSGD needs fresh stochastic minibatches (a fixed batch makes
+        // the ±lr oscillation overfit it); 600 random-batch steps reach
+        // ≈0.9 on the MNIST analogue.
+        let (tr, te) = synthetic(DataKind::MnistLike, 4000, 500, 9);
+        let m = LinearSoftmax::new(784, 10);
+        let mut params = m.init_params(4);
+        let a0 = m.accuracy(&params, &te);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for _ in 0..600 {
+            let batch: Vec<usize> =
+                (0..100).map(|_| rng.gen_below(tr.len() as u64) as usize).collect();
+            let (_, g) = m.loss_grad(&params, &tr, &batch);
+            let s = sign_vec(&g);
+            for (p, &si) in params.iter_mut().zip(&s) {
+                *p -= 0.002 * si as f32;
+            }
+        }
+        let a1 = m.accuracy(&params, &te);
+        assert!(a1 > a0 + 0.5, "accuracy {a0} → {a1}");
+    }
+
+    #[test]
+    fn sign_vec_semantics() {
+        assert_eq!(sign_vec(&[1.5, -0.2, 0.0, -0.0]), vec![1, -1, 1, 1]);
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let m = Mlp::new(10, 4, 3);
+        assert_eq!(m.init_params(7), m.init_params(7));
+        assert_ne!(m.init_params(7), m.init_params(8));
+    }
+}

@@ -1,0 +1,387 @@
+//! The federated SIGNSGD-MV training loop (Algorithms 2 & 3 end-to-end).
+//!
+//! Per global round `t`:
+//! 1. select `n = C·N` users;
+//! 2. each selected user computes a minibatch gradient on its own shard
+//!    and 1-bit quantizes it (Eq. 4);
+//! 3. the configured [`Aggregator`] produces the global direction `ĝ(t)`
+//!    (secure Hi-SAFE, plain MV, DP-SIGNSGD, masked-sum, or FedAvg);
+//! 4. every user applies `θ ← θ − η·ĝ(t)` (Eq. 6 / Alg. 2 line 12).
+//!
+//! The trainer is generic over [`Model`] so the same loop drives the
+//! pure-rust models and the AOT-compiled JAX models.
+
+use crate::baselines::{dp_signsgd, masking};
+use crate::fl::data::Dataset;
+use crate::fl::model::{sign_vec, Model};
+use crate::protocol::{plain_group_vote_all, run_sync, HiSafeConfig};
+use crate::util::json::Json;
+use crate::util::rng::{ChaCha20Rng, Rng, Xoshiro256pp};
+
+/// Aggregation rule for the global update direction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Aggregator {
+    /// The paper's secure protocol (flat if `ell == 1`).
+    HiSafe(HiSafeConfig),
+    /// Non-private SIGNSGD-MV [25] (functionally equal to flat Hi-SAFE
+    /// under 1-bit ties, minus privacy — Section V-B).
+    PlainMv(crate::poly::TiePolicy),
+    /// DP-SIGNSGD [21]: clip + Gaussian noise, then sign, then plain MV.
+    DpSign { clip: f64, sigma: f64 },
+    /// Pairwise-masking secure sum [18] then server-side sign.
+    MaskedSum,
+    /// Federated SGD with float gradient averaging (accuracy reference).
+    FedAvg,
+}
+
+impl Aggregator {
+    pub fn name(&self) -> String {
+        match self {
+            Aggregator::HiSafe(c) => {
+                format!("hisafe_l{}_{}", c.ell, c.label())
+            }
+            Aggregator::PlainMv(p) => format!("plain_mv_{}", p.name()),
+            Aggregator::DpSign { sigma, .. } => format!("dp_signsgd_s{sigma}"),
+            Aggregator::MaskedSum => "masked_sum".into(),
+            Aggregator::FedAvg => "fedavg".into(),
+        }
+    }
+}
+
+/// Training-run configuration (Table VI hyperparameters).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Total user population `N` (paper: 100).
+    pub n_users: usize,
+    /// Participants per round `n = C·N` (paper: C ∈ [0.12, 0.36]).
+    pub participants: usize,
+    pub rounds: usize,
+    pub lr: f32,
+    pub batch_size: usize,
+    /// Evaluate test accuracy every `eval_every` rounds (and at the end).
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            n_users: 100,
+            participants: 24,
+            rounds: 100,
+            lr: 0.005,
+            batch_size: 100,
+            eval_every: 10,
+            seed: 0,
+        }
+    }
+}
+
+/// One round's log line.
+#[derive(Debug, Clone)]
+pub struct RoundLog {
+    pub round: usize,
+    pub train_loss: f32,
+    /// Test accuracy (only populated on eval rounds; carries last value).
+    pub test_acc: f32,
+    /// Per-user uplink bits this round (whole model).
+    pub uplink_bits_per_user: u64,
+}
+
+/// Full training result.
+#[derive(Debug)]
+pub struct TrainResult {
+    pub logs: Vec<RoundLog>,
+    pub final_acc: f32,
+    pub final_params: Vec<f32>,
+    /// Cumulative per-user uplink over the run.
+    pub total_uplink_bits_per_user: u64,
+    pub aggregator: String,
+}
+
+impl TrainResult {
+    /// Serialize the curve for EXPERIMENTS.md / plotting.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("aggregator", self.aggregator.clone());
+        j.set("final_acc", self.final_acc as f64);
+        j.set(
+            "total_uplink_bits_per_user",
+            self.total_uplink_bits_per_user,
+        );
+        j.set(
+            "rounds",
+            self.logs
+                .iter()
+                .map(|l| {
+                    let mut r = Json::obj();
+                    r.set("round", l.round)
+                        .set("loss", l.train_loss as f64)
+                        .set("acc", l.test_acc as f64)
+                        .set("uplink_bits_per_user", l.uplink_bits_per_user);
+                    r
+                })
+                .collect::<Vec<_>>(),
+        );
+        j
+    }
+}
+
+/// Run federated training.
+///
+/// `shards[u]` lists the training-set indices owned by user `u`
+/// (from [`crate::fl::data::partition_users`]).
+pub fn train<M: Model>(
+    model: &M,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    shards: &[Vec<usize>],
+    agg: Aggregator,
+    cfg: &TrainConfig,
+) -> TrainResult {
+    assert_eq!(shards.len(), cfg.n_users, "one shard per user");
+    assert!(cfg.participants <= cfg.n_users);
+    if let Aggregator::HiSafe(hc) = &agg {
+        assert_eq!(hc.n, cfg.participants, "HiSafeConfig.n must equal participants");
+    }
+    let d = model.dim();
+    let mut params = model.init_params(cfg.seed);
+    let mut select_rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0x5e1ec7);
+    let mut batch_rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xba7c4);
+    let mut dp_rng = ChaCha20Rng::seed_from_u64(cfg.seed ^ 0xd9);
+    let mut logs = Vec::with_capacity(cfg.rounds);
+    let mut last_acc = 0.0f32;
+    let mut total_uplink = 0u64;
+
+    for round in 0..cfg.rounds {
+        // 1. user selection
+        let selected = select_rng.sample_indices(cfg.n_users, cfg.participants);
+
+        // 2. local gradients + signs
+        let mut losses = 0.0f32;
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(selected.len());
+        for &u in &selected {
+            let shard = &shards[u];
+            assert!(!shard.is_empty(), "user {u} has no data");
+            // Sample WITH replacement so batches are always full —
+            // required by the JAX backends (batch size is baked into the
+            // AOT artifact) and harmless for small shards.
+            let batch: Vec<usize> = (0..cfg.batch_size)
+                .map(|_| shard[batch_rng.gen_below(shard.len() as u64) as usize])
+                .collect();
+            let (loss, grad) = model.loss_grad(&params, train_ds, &batch);
+            losses += loss;
+            grads.push(grad);
+        }
+        let train_loss = losses / selected.len() as f32;
+
+        // 3. aggregate into an update direction
+        let (direction, uplink_bits_per_user): (Vec<f32>, u64) = match &agg {
+            Aggregator::HiSafe(hc) => {
+                let signs: Vec<Vec<i8>> = grads.iter().map(|g| sign_vec(g)).collect();
+                let out = run_sync(&signs, *hc, cfg.seed ^ round as u64);
+                (
+                    out.global_vote.iter().map(|&v| v as f32).collect(),
+                    out.stats.c_u_bits(),
+                )
+            }
+            Aggregator::PlainMv(policy) => {
+                let signs: Vec<Vec<i8>> = grads.iter().map(|g| sign_vec(g)).collect();
+                let vote = plain_group_vote_all(&signs, *policy);
+                (vote.iter().map(|&v| v as f32).collect(), d as u64)
+            }
+            Aggregator::DpSign { clip, sigma } => {
+                let signs: Vec<Vec<i8>> = grads
+                    .iter()
+                    .map(|g| sign_vec(&dp_signsgd::privatize(g, *clip, *sigma, &mut dp_rng)))
+                    .collect();
+                let vote = plain_group_vote_all(&signs, crate::poly::TiePolicy::OneBit);
+                (vote.iter().map(|&v| v as f32).collect(), d as u64)
+            }
+            Aggregator::MaskedSum => {
+                let signs: Vec<Vec<i8>> = grads.iter().map(|g| sign_vec(g)).collect();
+                let out = masking::secure_sum(&signs, cfg.seed ^ round as u64);
+                (
+                    out.votes.iter().map(|&v| v as f32).collect(),
+                    out.uplink_bits_per_user,
+                )
+            }
+            Aggregator::FedAvg => {
+                let mut mean = vec![0.0f32; d];
+                let inv = 1.0 / grads.len() as f32;
+                for g in &grads {
+                    for (m, &gi) in mean.iter_mut().zip(g) {
+                        *m += gi * inv;
+                    }
+                }
+                (mean, 32 * d as u64)
+            }
+        };
+        total_uplink += uplink_bits_per_user;
+
+        // 4. model update (Eq. 6): θ ← θ − η·ĝ
+        for (p, &g) in params.iter_mut().zip(&direction) {
+            *p -= cfg.lr * g;
+        }
+
+        // 5. periodic evaluation
+        if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+            last_acc = model.accuracy(&params, test_ds);
+        }
+        logs.push(RoundLog {
+            round,
+            train_loss,
+            test_acc: last_acc,
+            uplink_bits_per_user,
+        });
+    }
+
+    let final_acc = model.accuracy(&params, test_ds);
+    TrainResult {
+        logs,
+        final_acc,
+        final_params: params,
+        total_uplink_bits_per_user: total_uplink,
+        aggregator: agg.name(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::data::{partition_users, synthetic, DataKind, Partition};
+    use crate::fl::model::LinearSoftmax;
+    use crate::poly::TiePolicy;
+
+    fn quick_setup() -> (Dataset, Dataset, Vec<Vec<usize>>) {
+        let (tr, te) = synthetic(DataKind::MnistLike, 1200, 300, 7);
+        let shards = partition_users(&tr, 20, Partition::TwoClass, 7);
+        (tr, te, shards)
+    }
+
+    fn quick_cfg(rounds: usize) -> TrainConfig {
+        TrainConfig {
+            n_users: 20,
+            participants: 6,
+            rounds,
+            lr: 0.002,
+            batch_size: 32,
+            eval_every: 10,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn hisafe_training_learns_non_iid() {
+        let (tr, te, shards) = quick_setup();
+        let m = LinearSoftmax::new(784, 10);
+        let cfg = quick_cfg(60);
+        let agg = Aggregator::HiSafe(HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit));
+        let res = train(&m, &tr, &te, &shards, agg, &cfg);
+        assert!(
+            res.final_acc > 0.5,
+            "Hi-SAFE training reached only {}",
+            res.final_acc
+        );
+        assert_eq!(res.logs.len(), 60);
+    }
+
+    #[test]
+    fn hisafe_flat_equals_plain_mv_exactly() {
+        // Section V-B: under 1-bit ties, flat Hi-SAFE is functionally
+        // identical to SIGNSGD-MV. Same seeds ⇒ identical parameter
+        // trajectories.
+        let (tr, te, shards) = quick_setup();
+        let m = LinearSoftmax::new(784, 10);
+        let cfg = quick_cfg(12);
+        let secure = train(
+            &m, &tr, &te, &shards,
+            Aggregator::HiSafe(HiSafeConfig::flat(6, TiePolicy::OneBit)),
+            &cfg,
+        );
+        let plain = train(
+            &m, &tr, &te, &shards,
+            Aggregator::PlainMv(TiePolicy::OneBit),
+            &cfg,
+        );
+        assert_eq!(secure.final_params, plain.final_params);
+        assert_eq!(secure.final_acc, plain.final_acc);
+    }
+
+    #[test]
+    fn subgrouped_comm_is_cheaper_per_round() {
+        let (tr, te, shards) = quick_setup();
+        let m = LinearSoftmax::new(784, 10);
+        let cfg = quick_cfg(4);
+        let flat = train(
+            &m, &tr, &te, &shards,
+            Aggregator::HiSafe(HiSafeConfig::flat(6, TiePolicy::OneBit)),
+            &cfg,
+        );
+        let sub = train(
+            &m, &tr, &te, &shards,
+            Aggregator::HiSafe(HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit)),
+            &cfg,
+        );
+        assert!(
+            sub.total_uplink_bits_per_user < flat.total_uplink_bits_per_user,
+            "subgrouped {} !< flat {}",
+            sub.total_uplink_bits_per_user,
+            flat.total_uplink_bits_per_user
+        );
+    }
+
+    #[test]
+    fn dp_noise_degrades_accuracy() {
+        let (tr, te, shards) = quick_setup();
+        let m = LinearSoftmax::new(784, 10);
+        let cfg = quick_cfg(40);
+        let clean = train(
+            &m, &tr, &te, &shards,
+            Aggregator::PlainMv(TiePolicy::OneBit),
+            &cfg,
+        );
+        let noisy = train(
+            &m, &tr, &te, &shards,
+            Aggregator::DpSign { clip: 1.0, sigma: 8.0 },
+            &cfg,
+        );
+        assert!(
+            noisy.final_acc < clean.final_acc,
+            "σ=8 DP ({}) should underperform clean MV ({})",
+            noisy.final_acc,
+            clean.final_acc
+        );
+    }
+
+    #[test]
+    fn masked_sum_matches_plain_mv_trajectory() {
+        // Masking computes the exact sum then signs with tie→−1, which is
+        // the same vote as plain MV OneBit — trajectories must coincide.
+        let (tr, te, shards) = quick_setup();
+        let m = LinearSoftmax::new(784, 10);
+        let cfg = quick_cfg(8);
+        let a = train(&m, &tr, &te, &shards, Aggregator::MaskedSum, &cfg);
+        let b = train(
+            &m, &tr, &te, &shards,
+            Aggregator::PlainMv(TiePolicy::OneBit),
+            &cfg,
+        );
+        assert_eq!(a.final_params, b.final_params);
+        // ... but masking ships 32 bits/coordinate uplink
+        assert!(a.total_uplink_bits_per_user > b.total_uplink_bits_per_user);
+    }
+
+    #[test]
+    fn result_json_roundtrips() {
+        let (tr, te, shards) = quick_setup();
+        let m = LinearSoftmax::new(784, 10);
+        let cfg = quick_cfg(3);
+        let res = train(&m, &tr, &te, &shards, Aggregator::FedAvg, &cfg);
+        let j = res.to_json();
+        let text = j.to_string_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("aggregator").unwrap().as_str().unwrap(), "fedavg");
+        assert_eq!(back.get("rounds").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

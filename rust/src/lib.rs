@@ -1,0 +1,47 @@
+//! # Hi-SAFE — Hierarchical Secure Aggregation for Lightweight Federated Learning
+//!
+//! A full-system reproduction of the Hi-SAFE paper (Joo, Hong, Lee, Shin, 2025):
+//! cryptographically secure aggregation for sign-based federated learning
+//! (SIGNSGD-MV), built on:
+//!
+//! * **Majority-vote polynomials over prime fields** derived from Fermat's
+//!   Little Theorem ([`poly`]), so that the server learns *only* the majority
+//!   vote, never any individual sign gradient or intermediate sum.
+//! * **Secure polynomial evaluation** via additive secret sharing and Beaver
+//!   triples ([`sharing`], [`beaver`], [`mpc`]).
+//! * **Hierarchical subgrouping** ([`protocol`]) that keeps the multiplicative
+//!   depth constant (≈2 subrounds) and per-user secure-multiplication cost
+//!   bounded (≤6) independent of the total number of users `n`.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! ```text
+//! L3  rust     — this crate: protocol engine, FL orchestration, cost model
+//! L2  jax      — model fwd/bwd (python/compile/model.py), AOT-lowered to HLO
+//! L1  pallas   — majority-vote polynomial + sign kernels (python/compile/kernels)
+//! ```
+//!
+//! Python never runs on the request path: `make artifacts` lowers the L2/L1
+//! computations once to `artifacts/*.hlo.txt`, and [`runtime`] loads and
+//! executes them through the PJRT C API (`xla` crate).
+
+pub mod baselines;
+pub mod beaver;
+pub mod config;
+pub mod cost;
+pub mod field;
+pub mod fl;
+pub mod metrics;
+pub mod mpc;
+pub mod poly;
+pub mod protocol;
+pub mod runtime;
+pub mod security;
+pub mod shamir;
+pub mod sharing;
+
+pub mod util;
+
+pub use field::Fp;
+pub use poly::{MvPolynomial, TiePolicy};
+

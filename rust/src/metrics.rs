@@ -1,0 +1,125 @@
+//! Communication / latency accounting.
+//!
+//! Every protocol message in [`crate::mpc`] and [`crate::protocol`] is
+//! tallied here at field-element granularity so the *measured* costs can
+//! be cross-checked against the analytic model in [`crate::cost`]
+//! (Tables VII–IX) — the integration tests assert they agree exactly.
+
+/// Byte/bit counters for one protocol execution.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct CommStats {
+    /// Field elements each user uploaded (masked openings + final share),
+    /// summed over all users.
+    pub uplink_elems_total: u64,
+    /// Field elements uploaded by the busiest single user (= per-user cost
+    /// when symmetric).
+    pub uplink_elems_per_user: u64,
+    /// Field elements the server broadcast (δ/ε openings), counted once
+    /// (broadcast, not per-recipient).
+    pub downlink_elems: u64,
+    /// Bits per field element (⌈log p⌉).
+    pub elem_bits: u32,
+    /// Number of sequential subrounds (server round-trips) — the paper's
+    /// latency metric.
+    pub subrounds: u64,
+    /// Secure multiplications performed (Beaver triples consumed, totaled
+    /// over all users' groups).
+    pub mults: u64,
+    /// Final vote bits broadcast per coordinate (1 or 2 by tie policy).
+    pub vote_bits: u32,
+}
+
+impl CommStats {
+    /// Per-user uplink cost in bits — the paper's `C_u` (for one vote
+    /// coordinate; multiply by `d` for a model).
+    pub fn c_u_bits(&self) -> u64 {
+        self.uplink_elems_per_user * self.elem_bits as u64
+    }
+
+    /// Total uplink cost in bits summed over *all* users (`n · C_u`).
+    pub fn c_t_bits(&self) -> u64 {
+        self.uplink_elems_total * self.elem_bits as u64
+    }
+
+    /// The paper's `C_T = ℓ·R·⌈log p₁⌉`: this equals the total *broadcast*
+    /// (downlink) bits — one `(δ, ε)` pair per multiplication per group —
+    /// because the per-group opened elements mirror the per-user masked
+    /// uploads. (The paper's "total" is ℓ·C_u, not n·C_u.)
+    pub fn c_t_paper_bits(&self) -> u64 {
+        self.downlink_elems * self.elem_bits as u64
+    }
+
+    pub fn merge(&mut self, other: &CommStats) {
+        self.uplink_elems_total += other.uplink_elems_total;
+        self.uplink_elems_per_user =
+            self.uplink_elems_per_user.max(other.uplink_elems_per_user);
+        self.downlink_elems += other.downlink_elems;
+        self.elem_bits = self.elem_bits.max(other.elem_bits);
+        self.subrounds = self.subrounds.max(other.subrounds);
+        self.mults += other.mults;
+        self.vote_bits = self.vote_bits.max(other.vote_bits);
+    }
+}
+
+/// Wall-clock phase timings for Table V.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimings {
+    pub offline_triple_gen: std::time::Duration,
+    pub offline_poly_precompute: std::time::Duration,
+    pub online_secure_eval: std::time::Duration,
+}
+
+impl PhaseTimings {
+    pub fn total(&self) -> std::time::Duration {
+        self.offline_triple_gen + self.offline_poly_precompute + self.online_secure_eval
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_arithmetic() {
+        let s = CommStats {
+            uplink_elems_total: 12,
+            uplink_elems_per_user: 4,
+            downlink_elems: 4,
+            elem_bits: 3,
+            subrounds: 2,
+            mults: 2,
+            vote_bits: 1,
+        };
+        assert_eq!(s.c_u_bits(), 12); // paper: n₁=3 → C_u = 12 bits
+        assert_eq!(s.c_t_bits(), 36);
+    }
+
+    #[test]
+    fn merge_semantics() {
+        let mut a = CommStats {
+            uplink_elems_total: 10,
+            uplink_elems_per_user: 5,
+            downlink_elems: 2,
+            elem_bits: 3,
+            subrounds: 2,
+            mults: 3,
+            vote_bits: 1,
+        };
+        let b = CommStats {
+            uplink_elems_total: 7,
+            uplink_elems_per_user: 7,
+            downlink_elems: 1,
+            elem_bits: 4,
+            subrounds: 3,
+            mults: 2,
+            vote_bits: 2,
+        };
+        a.merge(&b);
+        assert_eq!(a.uplink_elems_total, 17);
+        assert_eq!(a.uplink_elems_per_user, 7);
+        assert_eq!(a.subrounds, 3);
+        assert_eq!(a.mults, 5);
+        assert_eq!(a.elem_bits, 4);
+        assert_eq!(a.vote_bits, 2);
+    }
+}

@@ -1,0 +1,615 @@
+//! Majority-vote polynomials over `F_p` — the paper's core contribution
+//! (Section III-B, Lemma 1, Table III).
+//!
+//! For `n` users each holding a sign `xᵢ ∈ {−1,+1}`, the aggregate
+//! `x = Σ xᵢ` lies in the support `S = {−n, −n+2, …, n}`. Fermat's Little
+//! Theorem gives an exact indicator `1 − (x−m)^(p−1) = [x = m]` over `F_p`
+//! (`p > n` prime), so
+//!
+//! ```text
+//! F(x) = Σ_{m ∈ S} sign(m) · (1 − (x−m)^(p−1))   (mod p)      — Eq. (1)
+//! ```
+//!
+//! satisfies `F(Σ xᵢ) = sign(Σ xᵢ)` (Lemma 1). Off the support, every
+//! indicator vanishes, so `F ≡ 0` there: `F` is *exactly* the interpolation
+//! of `sign` on `S` and `0` on `F_p \ S`. We implement both constructions —
+//! symbolic expansion of Eq. (1) and full-domain Lagrange interpolation —
+//! and test they coincide (and reproduce Table III coefficient-for-
+//! coefficient).
+//!
+//! The module also builds the **power schedule** (Eq. 2): which Beaver
+//! multiplications Algorithm 1 performs to obtain shares of
+//! `x², …, x^deg(F)`, with the `v_k = 2^⌊log₂(k−1)⌋` decomposition, plus a
+//! *sparse* schedule ablation that only computes the powers with nonzero
+//! coefficients.
+
+use crate::field::{next_prime, Fp};
+
+/// Tie-breaking policy for the majority vote (Section III-E).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TiePolicy {
+    /// `sign(0) ∈ {−1, +1}` — 1-bit output. The paper's Table III resolves
+    /// ties to **−1** (e.g. n=2: F(0) = 2 ≡ −1 mod 3); we follow that.
+    OneBit,
+    /// `sign(0) = 0` — three-state output (2 bits).
+    TwoBit,
+}
+
+impl TiePolicy {
+    /// The vote value assigned to a zero aggregate.
+    pub fn tie_value(self) -> i64 {
+        match self {
+            TiePolicy::OneBit => -1,
+            TiePolicy::TwoBit => 0,
+        }
+    }
+
+    /// sign with this policy applied at zero.
+    pub fn sign(self, x: i64) -> i64 {
+        if x > 0 {
+            1
+        } else if x < 0 {
+            -1
+        } else {
+            self.tie_value()
+        }
+    }
+
+    /// Downlink bits per coordinate for the *global* vote under this policy
+    /// (Section III-E: 1-bit vs 2-bit downlink).
+    pub fn downlink_bits(self) -> u32 {
+        match self {
+            TiePolicy::OneBit => 1,
+            TiePolicy::TwoBit => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TiePolicy::OneBit => "one_bit",
+            TiePolicy::TwoBit => "two_bit",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TiePolicy> {
+        match s {
+            "one_bit" | "1bit" | "A" => Some(TiePolicy::OneBit),
+            "two_bit" | "2bit" | "B" => Some(TiePolicy::TwoBit),
+            _ => None,
+        }
+    }
+}
+
+/// Dense polynomial over `F_p`: `coeffs[k]` is the coefficient of `x^k`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Poly {
+    pub fp: Fp,
+    pub coeffs: Vec<u64>,
+}
+
+impl Poly {
+    pub fn zero(fp: Fp) -> Poly {
+        Poly { fp, coeffs: vec![] }
+    }
+
+    pub fn constant(fp: Fp, c: u64) -> Poly {
+        let mut p = Poly { fp, coeffs: vec![fp.reduce(c)] };
+        p.trim();
+        p
+    }
+
+    fn trim(&mut self) {
+        while self.coeffs.last() == Some(&0) {
+            self.coeffs.pop();
+        }
+    }
+
+    /// Degree; `None` for the zero polynomial.
+    pub fn degree(&self) -> Option<usize> {
+        if self.coeffs.is_empty() {
+            None
+        } else {
+            Some(self.coeffs.len() - 1)
+        }
+    }
+
+    /// `self += k · other`.
+    pub fn add_scaled(&mut self, k: u64, other: &Poly) {
+        let f = self.fp;
+        if self.coeffs.len() < other.coeffs.len() {
+            self.coeffs.resize(other.coeffs.len(), 0);
+        }
+        for (i, &c) in other.coeffs.iter().enumerate() {
+            self.coeffs[i] = f.add(self.coeffs[i], f.mul(k, c));
+        }
+        self.trim();
+    }
+
+    /// Multiply in place by the monic linear factor `(x − m)`.
+    pub fn mul_linear(&mut self, m: u64) {
+        let f = self.fp;
+        let neg_m = f.neg(f.reduce(m));
+        let n = self.coeffs.len();
+        self.coeffs.push(0);
+        // (c_0 + c_1 x + ...)(x − m): new_k = c_{k−1} − m·c_k
+        for k in (0..=n).rev() {
+            let shifted = if k > 0 { self.coeffs[k - 1] } else { 0 };
+            let scaled = f.mul(neg_m, if k < n { self.coeffs[k] } else { 0 });
+            self.coeffs[k] = f.add(shifted, scaled);
+        }
+        self.trim();
+    }
+
+    /// Horner evaluation at a canonical field element.
+    pub fn eval(&self, x: u64) -> u64 {
+        let f = self.fp;
+        debug_assert!(x < f.modulus());
+        let mut acc = 0u64;
+        for &c in self.coeffs.iter().rev() {
+            acc = f.add(f.mul(acc, x), c);
+        }
+        acc
+    }
+
+    /// Vectorized Horner evaluation: `out[j] = F(xs[j])` for canonical
+    /// inputs. This is the plaintext analogue of the L1 Pallas kernel and
+    /// the server-side vote readout hot path.
+    pub fn eval_vec(&self, xs: &[u64]) -> Vec<u64> {
+        let f = self.fp;
+        let mut acc = vec![0u64; xs.len()];
+        for &c in self.coeffs.iter().rev() {
+            for (a, &x) in acc.iter_mut().zip(xs) {
+                *a = f.add(f.reduce(*a * x), c);
+            }
+        }
+        acc
+    }
+
+    /// Indices of nonzero coefficients with power ≥ 2 (the powers the
+    /// sparse schedule must produce).
+    pub fn needed_powers(&self) -> Vec<usize> {
+        self.coeffs
+            .iter()
+            .enumerate()
+            .skip(2)
+            .filter(|(_, &c)| c != 0)
+            .map(|(k, _)| k)
+            .collect()
+    }
+
+    /// Render like Table III: e.g. `2x^3 + 4x (mod 5)`.
+    pub fn display(&self) -> String {
+        if self.coeffs.is_empty() {
+            return format!("0 (mod {})", self.fp.modulus());
+        }
+        let mut terms: Vec<String> = Vec::new();
+        for (k, &c) in self.coeffs.iter().enumerate().rev() {
+            if c == 0 {
+                continue;
+            }
+            let t = match (k, c) {
+                (0, c) => format!("{c}"),
+                (1, 1) => "x".to_string(),
+                (1, c) => format!("{c}x"),
+                (k, 1) => format!("x^{k}"),
+                (k, c) => format!("{c}x^{k}"),
+            };
+            terms.push(t);
+        }
+        format!("{} (mod {})", terms.join(" + "), self.fp.modulus())
+    }
+}
+
+/// The majority-vote polynomial for a (sub)group of `n` users, together
+/// with the metadata the protocol and cost model need.
+#[derive(Debug, Clone)]
+pub struct MvPolynomial {
+    /// Group size.
+    pub n: usize,
+    /// Tie policy it encodes.
+    pub policy: TiePolicy,
+    /// `F_p` with `p = next_prime(n)`.
+    pub fp: Fp,
+    /// The polynomial itself.
+    pub poly: Poly,
+}
+
+impl MvPolynomial {
+    /// Construct via symbolic expansion of Eq. (1) — the paper's
+    /// construction. Cost `O(n · p²)` coefficient ops (Table IV's
+    /// `O(n log p)` counts modular exponentiations; we expand symbolically
+    /// once offline, which is still sub-millisecond for `p ≤ 101`).
+    pub fn build_fermat(n: usize, policy: TiePolicy) -> MvPolynomial {
+        assert!(n >= 1, "group size must be ≥ 1");
+        // p must be an ODD prime > n: the support {−n..n step 2} is only
+        // pairwise distinct mod p when p ∤ 2k for 0 < k ≤ n, which needs
+        // p odd. next_prime(n) is odd for all n ≥ 2; n = 1 would give
+        // p = 2 (degenerate: +1 ≡ −1), so we clamp to p = 3.
+        let fp = Fp::new(next_prime(n.max(2) as u64));
+        let p = fp.modulus();
+        let mut acc = Poly::zero(fp);
+        // support m ∈ {−n, −n+2, …, n}
+        let mut m = -(n as i64);
+        while m <= n as i64 {
+            let s = policy.sign(m);
+            if s != 0 {
+                // indicator = 1 − (x − m)^(p−1)
+                let mut ind = Poly::constant(fp, 1);
+                let m_f = fp.from_i64(m);
+                for _ in 0..p - 1 {
+                    ind.mul_linear(m_f);
+                }
+                // ind now = (x−m)^(p−1); accumulate sign·(1 − ind)
+                let s_f = fp.from_i64(s);
+                acc.add_scaled(s_f, &Poly::constant(fp, 1));
+                acc.add_scaled(fp.neg(s_f), &ind);
+            }
+            m += 2;
+        }
+        MvPolynomial { n, policy, fp, poly: acc }
+    }
+
+    /// Construct via full-domain Lagrange interpolation of the target
+    /// function (sign on the support, 0 elsewhere). Must equal
+    /// [`Self::build_fermat`] — the equality is a correctness test.
+    pub fn build_lagrange(n: usize, policy: TiePolicy) -> MvPolynomial {
+        let fp = Fp::new(next_prime(n.max(2) as u64)); // odd prime; see build_fermat
+
+        let p = fp.modulus();
+        // Targets over all residues.
+        let mut target = vec![0u64; p as usize];
+        let mut m = -(n as i64);
+        while m <= n as i64 {
+            target[fp.from_i64(m) as usize] = fp.from_i64(policy.sign(m));
+            m += 2;
+        }
+        // Lagrange: F = Σ_v target[v] · L_v where
+        // L_v(x) = Π_{w≠v} (x−w)/(v−w).
+        let mut acc = Poly::zero(fp);
+        for v in 0..p {
+            let t = target[v as usize];
+            if t == 0 {
+                continue;
+            }
+            let mut basis = Poly::constant(fp, 1);
+            let mut denom = 1u64;
+            for w in 0..p {
+                if w == v {
+                    continue;
+                }
+                basis.mul_linear(w);
+                denom = fp.mul(denom, fp.sub(v, w));
+            }
+            let k = fp.mul(t, fp.inv(denom));
+            acc.add_scaled(k, &basis);
+        }
+        MvPolynomial { n, policy, fp, poly: acc }
+    }
+
+    /// Degree of F (0 for a constant/zero polynomial).
+    pub fn degree(&self) -> usize {
+        self.poly.degree().unwrap_or(0)
+    }
+
+    /// Evaluate the vote on a *plaintext* aggregate sum (for testing and
+    /// the non-private baseline): input is the signed sum `Σ xᵢ`.
+    pub fn vote_of_sum(&self, sum: i64) -> i64 {
+        let x = self.fp.from_i64(sum);
+        self.fp.lift(self.poly.eval(x))
+    }
+
+    /// Ground-truth majority vote with this policy — what Lemma 1 says
+    /// `vote_of_sum` must equal on the support.
+    pub fn expected_vote(&self, sum: i64) -> i64 {
+        self.policy.sign(sum)
+    }
+}
+
+// --------------------------------------------------------- power schedule
+
+/// One secure multiplication in the power schedule: produce the share of
+/// `x^target` as `x^left · x^right` (Eq. 2: `left = k − v_k`,
+/// `right = v_k`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PowerStep {
+    pub target: usize,
+    pub left: usize,
+    pub right: usize,
+    /// Serial subround index (0-based): all steps with the same depth can
+    /// be batched into one uplink/downlink exchange.
+    pub depth: usize,
+}
+
+/// The multiplication schedule for securely evaluating `F(x)`.
+#[derive(Debug, Clone)]
+pub struct PowerSchedule {
+    pub steps: Vec<PowerStep>,
+    /// Highest power produced.
+    pub max_power: usize,
+}
+
+impl PowerSchedule {
+    /// The paper's Algorithm-1 schedule: every power `k = 2..=deg`, with
+    /// `v_k = 2^⌊log₂(k−1)⌋`, `x^k = x^(k−v_k) · x^(v_k)`.
+    pub fn full(deg: usize) -> PowerSchedule {
+        let mut steps = Vec::new();
+        let mut depth_of = vec![0usize; deg.max(1) + 1];
+        for k in 2..=deg {
+            let v = 1usize << (usize::BITS - 1 - (k as u64 - 1).leading_zeros().min(63)) as usize;
+            let v = v.min(k - 1);
+            let (l, r) = (k - v, v);
+            let d = 1 + depth_of[l].max(depth_of[r]);
+            depth_of[k] = d;
+            steps.push(PowerStep { target: k, left: l, right: r, depth: d - 1 });
+        }
+        PowerSchedule { steps, max_power: deg }
+    }
+
+    /// Sparse-schedule ablation: only produce the powers in `needed`
+    /// (plus the intermediates of a binary addition chain). Reduces `R`
+    /// for odd-sparse polynomials (e.g. n odd ⇒ only odd powers needed).
+    pub fn sparse(needed: &[usize]) -> PowerSchedule {
+        use std::collections::BTreeMap;
+        let mut depth_of: BTreeMap<usize, usize> = BTreeMap::new();
+        depth_of.insert(1, 0);
+        let mut steps = Vec::new();
+        fn ensure(
+            k: usize,
+            depth_of: &mut BTreeMap<usize, usize>,
+            steps: &mut Vec<PowerStep>,
+        ) -> usize {
+            if let Some(&d) = depth_of.get(&k) {
+                return d;
+            }
+            // split k = l + r, r the largest power of two ≤ k−1 (mirrors
+            // Eq. 2 but skips unneeded intermediates).
+            let v = 1usize << (usize::BITS - 1 - (k as u64 - 1).leading_zeros().min(63)) as usize;
+            let v = v.min(k - 1);
+            let (l, r) = (k - v, v);
+            let dl = ensure(l, depth_of, steps);
+            let dr = ensure(r, depth_of, steps);
+            let d = 1 + dl.max(dr);
+            depth_of.insert(k, d);
+            steps.push(PowerStep { target: k, left: l, right: r, depth: d - 1 });
+            d
+        }
+        let mut queue: Vec<usize> = needed.to_vec();
+        queue.sort_unstable();
+        for k in queue {
+            if k >= 2 {
+                ensure(k, &mut depth_of, &mut steps);
+            }
+        }
+        steps.sort_by_key(|s| (s.depth, s.target));
+        let max_power = steps.iter().map(|s| s.target).max().unwrap_or(1);
+        PowerSchedule { steps, max_power }
+    }
+
+    /// Number of secure multiplications (Beaver triples consumed).
+    pub fn mults(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Number of masked field elements each user uploads — two openings
+    /// (δ-share, ε-share) per multiplication. This is the paper's `R`
+    /// column in Tables VIII/IX (their `C_u = R·⌈log p₁⌉` only matches the
+    /// protocol's real uplink if `R` counts openings, not triples).
+    pub fn openings(&self) -> usize {
+        2 * self.steps.len()
+    }
+
+    /// Serial depth: number of sequential subrounds (server round-trips)
+    /// needed. Steps at equal depth batch into one exchange.
+    pub fn depth(&self) -> usize {
+        self.steps.iter().map(|s| s.depth + 1).max().unwrap_or(0)
+    }
+
+    /// Steps grouped by subround, in execution order.
+    pub fn by_depth(&self) -> Vec<Vec<PowerStep>> {
+        let d = self.depth();
+        let mut groups = vec![Vec::new(); d];
+        for s in &self.steps {
+            groups[s.depth].push(*s);
+        }
+        groups
+    }
+}
+
+/// Convenience: full-schedule stats for a group of `n` users under a
+/// policy — (degree, mults, openings, depth).
+pub fn schedule_stats(n: usize, policy: TiePolicy) -> (usize, usize, usize, usize) {
+    let mv = MvPolynomial::build_fermat(n, policy);
+    let sched = PowerSchedule::full(mv.degree());
+    (mv.degree(), sched.mults(), sched.openings(), sched.depth())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table III, exact coefficients. Keys: (n, policy) → coeff vec
+    /// (index = power).
+    #[test]
+    fn table3_exact() {
+        let cases: Vec<(usize, TiePolicy, Vec<u64>)> = vec![
+            (2, TiePolicy::OneBit, vec![2, 2, 1]),          // x²+2x+2 mod 3
+            (2, TiePolicy::TwoBit, vec![0, 2]),             // 2x mod 3
+            (3, TiePolicy::OneBit, vec![0, 4, 0, 2]),       // 2x³+4x mod 5
+            (3, TiePolicy::TwoBit, vec![0, 4, 0, 2]),       // same (no tie for odd n)
+            (4, TiePolicy::OneBit, vec![4, 1, 0, 3, 1]),    // x⁴+3x³+x+4 mod 5
+            (4, TiePolicy::TwoBit, vec![0, 1, 0, 3]),       // 3x³+x mod 5
+            (5, TiePolicy::OneBit, vec![0, 3, 0, 2, 0, 3]), // 3x⁵+2x³+3x mod 7
+            (5, TiePolicy::TwoBit, vec![0, 3, 0, 2, 0, 3]),
+            (6, TiePolicy::OneBit, vec![6, 4, 0, 5, 0, 4, 1]), // x⁶+4x⁵+5x³+4x+6 mod 7
+        ];
+        for (n, policy, want) in cases {
+            let mv = MvPolynomial::build_fermat(n, policy);
+            assert_eq!(
+                mv.poly.coeffs, want,
+                "Table III mismatch for n={n} policy={policy:?} (got {})",
+                mv.poly.display()
+            );
+        }
+    }
+
+    #[test]
+    fn fermat_equals_lagrange() {
+        for n in 1..=16 {
+            for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+                let a = MvPolynomial::build_fermat(n, policy);
+                let b = MvPolynomial::build_lagrange(n, policy);
+                assert_eq!(
+                    a.poly.coeffs, b.poly.coeffs,
+                    "constructions differ for n={n} {policy:?}"
+                );
+            }
+        }
+    }
+
+    /// Lemma 1: F(Σxᵢ) = sign(Σxᵢ) for every achievable sum, every n up to
+    /// 24, both policies — exhaustive over the support.
+    #[test]
+    fn lemma1_exhaustive() {
+        for n in 1..=24 {
+            for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+                let mv = MvPolynomial::build_fermat(n, policy);
+                let mut sum = -(n as i64);
+                while sum <= n as i64 {
+                    assert_eq!(
+                        mv.vote_of_sum(sum),
+                        mv.expected_vote(sum),
+                        "n={n} {policy:?} sum={sum}"
+                    );
+                    sum += 2;
+                }
+            }
+        }
+    }
+
+    /// Off-support values evaluate to 0 (Eq. (1) indicator structure) —
+    /// relevant because it means a malformed aggregate is *detectable*.
+    #[test]
+    fn off_support_is_zero() {
+        let mv = MvPolynomial::build_fermat(3, TiePolicy::OneBit); // p=5
+        // support ≡ {2,4,1,3}; off-support {0}
+        assert_eq!(mv.poly.eval(0), 0);
+        let mv = MvPolynomial::build_fermat(7, TiePolicy::OneBit); // p=11
+        // support {−7..7 step2} ≡ {4,6,8,10,1,3,5,7}; off: {0,2,9}
+        for x in [0u64, 2, 9] {
+            assert_eq!(mv.poly.eval(x), 0, "x={x}");
+        }
+    }
+
+    #[test]
+    fn odd_n_polynomials_are_odd_functions() {
+        // For odd n (no tie possible) both policies coincide and F is an
+        // odd polynomial (only odd powers) — this is what makes the sparse
+        // schedule pay off.
+        for n in [3usize, 5, 7, 9, 11, 15] {
+            let mv = MvPolynomial::build_fermat(n, TiePolicy::OneBit);
+            for (k, &c) in mv.poly.coeffs.iter().enumerate() {
+                if k % 2 == 0 {
+                    assert_eq!(c, 0, "n={n}: even coeff x^{k} = {c} ≠ 0");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_vec_matches_scalar() {
+        let mv = MvPolynomial::build_fermat(8, TiePolicy::OneBit);
+        let p = mv.fp.modulus();
+        let xs: Vec<u64> = (0..p).collect();
+        let v = mv.poly.eval_vec(&xs);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(v[i], mv.poly.eval(x));
+        }
+    }
+
+    #[test]
+    fn full_schedule_shape() {
+        // deg 3 (n=3): x² = x·x (depth 1), x³ = x¹·x² (depth 2) — the
+        // Appendix-A example's two subrounds.
+        let s = PowerSchedule::full(3);
+        assert_eq!(s.mults(), 2);
+        assert_eq!(s.openings(), 4); // paper's R for n₁=3
+        assert_eq!(s.depth(), 2);
+        assert_eq!(
+            s.steps,
+            vec![
+                PowerStep { target: 2, left: 1, right: 1, depth: 0 },
+                PowerStep { target: 3, left: 1, right: 2, depth: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn schedule_depth_lower_bound() {
+        // After r subrounds the max achievable power is 2^r, so
+        // depth ≥ ⌈log₂ deg⌉. The full schedule should be within +1 of it.
+        for deg in 2..=101usize {
+            let s = PowerSchedule::full(deg);
+            let lb = (usize::BITS - (deg - 1).leading_zeros()) as usize;
+            assert!(
+                s.depth() <= lb + 1,
+                "deg={deg}: depth {} > {}+1",
+                s.depth(),
+                lb
+            );
+            // every left/right operand is produced before use
+            let mut depth_of = std::collections::BTreeMap::new();
+            depth_of.insert(1usize, 0usize);
+            for st in &s.steps {
+                let dl = *depth_of.get(&st.left).expect("left exists");
+                let dr = *depth_of.get(&st.right).expect("right exists");
+                assert!(st.depth >= dl.max(dr), "step {st:?}");
+                depth_of.insert(st.target, st.depth + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_schedule_covers_needed_and_is_smaller() {
+        // n=5: F = 3x⁵+2x³+3x (mod 7): needed powers {3,5}.
+        let mv = MvPolynomial::build_fermat(5, TiePolicy::OneBit);
+        assert_eq!(mv.poly.needed_powers(), vec![3, 5]);
+        let sparse = PowerSchedule::sparse(&mv.poly.needed_powers());
+        let full = PowerSchedule::full(mv.degree());
+        let produced: Vec<usize> = sparse.steps.iter().map(|s| s.target).collect();
+        for k in mv.poly.needed_powers() {
+            assert!(produced.contains(&k), "missing x^{k}");
+        }
+        assert!(sparse.mults() <= full.mults());
+        // every operand available when used
+        let mut have = std::collections::BTreeSet::new();
+        have.insert(1usize);
+        for st in &sparse.steps {
+            assert!(
+                have.contains(&st.left) && have.contains(&st.right),
+                "{st:?}"
+            );
+            have.insert(st.target);
+        }
+    }
+
+    #[test]
+    fn degrees_bounded_by_field() {
+        for n in [3usize, 4, 5, 6, 8, 10, 12, 24] {
+            for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+                let mv = MvPolynomial::build_fermat(n, policy);
+                assert!(
+                    mv.degree() <= mv.fp.modulus() as usize - 1,
+                    "n={n} {policy:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn display_matches_table3_style() {
+        let mv = MvPolynomial::build_fermat(3, TiePolicy::OneBit);
+        assert_eq!(mv.poly.display(), "2x^3 + 4x (mod 5)");
+        let mv = MvPolynomial::build_fermat(2, TiePolicy::OneBit);
+        assert_eq!(mv.poly.display(), "x^2 + 2x + 2 (mod 3)");
+    }
+}

@@ -1,0 +1,474 @@
+//! The Hi-SAFE protocol engine — the paper's Layer-3 coordination
+//! contribution (Algorithms 2 & 3, Section III-C/D/E).
+//!
+//! Two drivers over the [`crate::mpc`] state machines:
+//!
+//! * [`run_sync`] — in-process sequential execution. Used by the FL
+//!   trainer's hot path, the benches, and all correctness tests.
+//! * [`run_threaded`] — a real message-passing deployment: one OS thread
+//!   per user plus a server thread, communicating over `std::sync::mpsc`
+//!   channels (tokio is unavailable offline; the topology is identical to
+//!   an async runtime's). Produces *bit-identical* results to `run_sync`
+//!   under the same seed — asserted by tests — so the fast path is provably
+//!   faithful to the distributed one.
+//!
+//! Hierarchy (Algorithm 3): users are partitioned into `ℓ` subgroups of
+//! `n₁ = n/ℓ`; each subgroup runs Algorithm 1 over `F_{p₁}`
+//! (`p₁ = next_prime(n₁)`) and reveals only its subgroup vote `s_j`; the
+//! server then computes the global vote `sign(Σ s_j)` in the clear —
+//! exactly the leakage profile Theorem 2 permits (`{s_j}` and `s`).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::beaver::Dealer;
+use crate::metrics::CommStats;
+use crate::mpc::{
+    plain_group_vote, secure_group_vote, BroadcastMsg, EvalPlan, Party, Server,
+    Transcript, UplinkMsg,
+};
+use crate::poly::{MvPolynomial, TiePolicy};
+
+/// Full protocol configuration (Section III-E's A-1/B-1/A-2/B-2 matrix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HiSafeConfig {
+    /// Number of participating users this round (the paper's `n = C·N`).
+    pub n: usize,
+    /// Number of subgroups `ℓ` (1 = flat, Algorithm 2).
+    pub ell: usize,
+    /// Intra-subgroup tie policy (Case A = OneBit, Case B = TwoBit).
+    pub intra: TiePolicy,
+    /// Inter-subgroup (global) tie policy (Case 1 = OneBit, Case 2 = TwoBit).
+    pub inter: TiePolicy,
+    /// Use the sparse power schedule (ablation; paper = false).
+    pub sparse: bool,
+}
+
+impl HiSafeConfig {
+    /// Flat Hi-SAFE (Algorithm 2): one group of all `n` users.
+    pub fn flat(n: usize, policy: TiePolicy) -> HiSafeConfig {
+        HiSafeConfig { n, ell: 1, intra: policy, inter: policy, sparse: false }
+    }
+
+    /// Hierarchical Hi-SAFE (Algorithm 3) with the paper's preferred
+    /// 1-bit-downlink configurations: `A-1` (intra OneBit) or `B-1`
+    /// (intra TwoBit); global policy is OneBit in both.
+    pub fn hierarchical(n: usize, ell: usize, intra: TiePolicy) -> HiSafeConfig {
+        HiSafeConfig { n, ell, intra, inter: TiePolicy::OneBit, sparse: false }
+    }
+
+    /// Subgroup size `n₁ = n/ℓ`. Panics unless `ℓ | n` (the paper assumes
+    /// equal-size subgroups).
+    pub fn n1(&self) -> usize {
+        assert!(self.ell >= 1 && self.n % self.ell == 0,
+            "ℓ = {} must divide n = {}", self.ell, self.n);
+        self.n / self.ell
+    }
+
+    /// Section III-E combined-configuration label (A-1, B-1, A-2, B-2).
+    pub fn label(&self) -> String {
+        let a = match self.intra {
+            TiePolicy::OneBit => "A",
+            TiePolicy::TwoBit => "B",
+        };
+        let b = match self.inter {
+            TiePolicy::OneBit => "1",
+            TiePolicy::TwoBit => "2",
+        };
+        format!("{a}-{b}")
+    }
+
+    /// Is this configuration compatible with SIGNSGD-MV's 1-bit global
+    /// update (the paper's Remark in Section III-E)?
+    pub fn signsgd_compatible(&self) -> bool {
+        self.inter == TiePolicy::OneBit
+    }
+}
+
+/// Outcome of one Hi-SAFE aggregation round.
+#[derive(Debug)]
+pub struct RoundOutcome {
+    /// Global vote per coordinate (`{−1,+1}`, or 0 under inter TwoBit).
+    pub global_vote: Vec<i8>,
+    /// Subgroup votes `s_j` (the Theorem-2 leakage).
+    pub subgroup_votes: Vec<Vec<i8>>,
+    /// Measured communication (openings, subrounds, mults).
+    pub stats: CommStats,
+    /// Per-subgroup server transcripts (for the security tests).
+    pub transcripts: Vec<Transcript>,
+}
+
+/// Plain (non-private) majority vote over all users — the SIGNSGD-MV
+/// baseline (same function as the flat plaintext reference).
+pub use crate::mpc::plain_group_vote as plain_group_vote_all;
+
+/// Partition user indices into `ℓ` contiguous subgroups of `n₁`.
+pub fn partition(n: usize, ell: usize) -> Vec<Vec<usize>> {
+    assert!(ell >= 1 && n % ell == 0, "ℓ = {ell} must divide n = {n}");
+    let n1 = n / ell;
+    (0..ell).map(|g| (g * n1..(g + 1) * n1).collect()).collect()
+}
+
+/// Combine subgroup votes into the global vote (Eq. 8):
+/// `sign(Σ_j s_j)` under the inter-subgroup tie policy.
+pub fn inter_group_vote(subgroup_votes: &[Vec<i8>], inter: TiePolicy) -> Vec<i8> {
+    let d = subgroup_votes[0].len();
+    (0..d)
+        .map(|j| {
+            let sum: i64 = subgroup_votes.iter().map(|s| s[j] as i64).sum();
+            inter.sign(sum) as i8
+        })
+        .collect()
+}
+
+/// Run one Hi-SAFE round in-process (the trainer hot path).
+///
+/// `signs[i]` is user `i`'s ±1 sign-gradient vector.
+pub fn run_sync(signs: &[Vec<i8>], cfg: HiSafeConfig, seed: u64) -> RoundOutcome {
+    assert_eq!(signs.len(), cfg.n, "need exactly n sign vectors");
+    let groups = partition(cfg.n, cfg.ell);
+    // §Perf: subgroups are independent — run them on parallel threads
+    // (deterministic: each group's dealer seed depends only on (seed, g)).
+    // Only worth it at model-sized d AND with >1 hardware thread (the
+    // reference environment is single-core; the code path is exercised by
+    // tests either way via run_threaded).
+    let d = signs[0].len();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let parallel = cfg.ell > 1 && d >= 4096 && cores > 1;
+    let run_group = |g: usize, members: &[usize]| {
+        let group_signs: Vec<Vec<i8>> =
+            members.iter().map(|&i| signs[i].clone()).collect();
+        secure_group_vote(
+            &group_signs,
+            cfg.intra,
+            cfg.sparse,
+            seed ^ (g as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        )
+    };
+    let outcomes: Vec<crate::mpc::GroupVoteOutcome> = if parallel {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = groups
+                .iter()
+                .enumerate()
+                .map(|(g, members)| scope.spawn(move || run_group(g, members)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("group thread")).collect()
+        })
+    } else {
+        groups.iter().enumerate().map(|(g, m)| run_group(g, m)).collect()
+    };
+    let mut subgroup_votes = Vec::with_capacity(cfg.ell);
+    let mut transcripts = Vec::with_capacity(cfg.ell);
+    let mut stats = CommStats::default();
+    for out in outcomes {
+        stats.merge(&out.stats);
+        subgroup_votes.push(out.votes);
+        transcripts.push(out.transcript);
+    }
+    let global_vote = inter_group_vote(&subgroup_votes, cfg.inter);
+    stats.vote_bits = cfg.inter.downlink_bits();
+    RoundOutcome { global_vote, subgroup_votes, stats, transcripts }
+}
+
+/// Plaintext reference for the full hierarchy (Eq. 8 without crypto):
+/// `sign(Σ_j sign(Σ_{i∈G_j} x_{i,j}))`.
+pub fn plain_hierarchical_vote(
+    signs: &[Vec<i8>],
+    cfg: HiSafeConfig,
+) -> Vec<i8> {
+    let groups = partition(cfg.n, cfg.ell);
+    let subgroup_votes: Vec<Vec<i8>> = groups
+        .iter()
+        .map(|members| {
+            let group_signs: Vec<Vec<i8>> =
+                members.iter().map(|&i| signs[i].clone()).collect();
+            plain_group_vote(&group_signs, cfg.intra)
+        })
+        .collect();
+    inter_group_vote(&subgroup_votes, cfg.inter)
+}
+
+// ---------------------------------------------------------------- threaded
+
+/// Messages users send the coordinator.
+enum ToServer {
+    Uplink { group: usize, msg: UplinkMsg },
+    FinalShare { group: usize, party: usize, share: Vec<u64> },
+}
+
+/// Messages the coordinator sends users.
+enum ToUser {
+    Broadcast(Arc<BroadcastMsg>),
+    GlobalVote(Arc<Vec<i8>>),
+}
+
+/// Run one Hi-SAFE round as a real message-passing system: one thread per
+/// user, one server thread, mpsc channels. Deterministic given `seed`
+/// (identical outcome to [`run_sync`]).
+pub fn run_threaded(signs: &[Vec<i8>], cfg: HiSafeConfig, seed: u64) -> RoundOutcome {
+    assert_eq!(signs.len(), cfg.n);
+    let d = signs[0].len();
+    let groups = partition(cfg.n, cfg.ell);
+    let n1 = cfg.n1();
+
+    // Per-group plan + offline triples (same derivation as run_sync so the
+    // outcomes match bit-for-bit).
+    let mv = MvPolynomial::build_fermat(n1, cfg.intra);
+    let plan = Arc::new(EvalPlan::new(&mv, d, cfg.sparse));
+    let fp = plan.fp;
+    let depth = plan.schedule.depth();
+
+    let (to_server_tx, to_server_rx) = mpsc::channel::<ToServer>();
+    let mut user_handles = Vec::new();
+    let mut servers: Vec<Server> = Vec::new();
+
+    for (g, members) in groups.iter().enumerate() {
+        let mut dealer = Dealer::new(
+            fp,
+            seed ^ (g as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        );
+        let mut round_triples = dealer.gen_round(d, n1, plan.triples_needed());
+        servers.push(Server::new(Arc::clone(&plan)));
+        for (local, &uid) in members.iter().enumerate() {
+            let (to_user_tx, to_user_rx) = mpsc::channel::<ToUser>();
+            let triples = std::mem::take(&mut round_triples[local]);
+            let input = fp.encode_signs(&signs[uid]);
+            let plan_c = Arc::clone(&plan);
+            let tx = to_server_tx.clone();
+            let handle = std::thread::spawn(move || {
+                let mut party = Party::new(plan_c.clone(), local, input, triples);
+                for dep in 0..depth {
+                    tx.send(ToServer::Uplink { group: g, msg: party.uplink(dep) })
+                        .expect("server alive");
+                    match to_user_rx.recv().expect("broadcast") {
+                        ToUser::Broadcast(b) => party.absorb(&b),
+                        ToUser::GlobalVote(_) => unreachable!("vote before finals"),
+                    }
+                }
+                tx.send(ToServer::FinalShare {
+                    group: g,
+                    party: local,
+                    share: party.final_share(),
+                })
+                .expect("server alive");
+                match to_user_rx.recv().expect("vote") {
+                    ToUser::GlobalVote(v) => (*v).clone(),
+                    ToUser::Broadcast(_) => unreachable!("broadcast after finals"),
+                }
+            });
+            user_handles.push((g, to_user_tx, handle));
+        }
+    }
+    drop(to_server_tx);
+
+    // Server event loop: per depth, collect one uplink per user per group,
+    // aggregate per group, broadcast to that group's members.
+    for dep in 0..depth {
+        let mut pending: Vec<Vec<UplinkMsg>> = vec![Vec::new(); cfg.ell];
+        let mut received = 0usize;
+        while received < cfg.n {
+            match to_server_rx.recv().expect("users alive") {
+                ToServer::Uplink { group, msg } => {
+                    assert_eq!(msg.depth, dep, "subround desync");
+                    pending[group].push(msg);
+                    received += 1;
+                }
+                ToServer::FinalShare { .. } => panic!("final share mid-round"),
+            }
+        }
+        for (g, msgs) in pending.iter_mut().enumerate() {
+            msgs.sort_by_key(|m| m.party);
+            let bcast = Arc::new(servers[g].aggregate(msgs));
+            for (ug, tx, _) in user_handles.iter().filter(|(ug, _, _)| *ug == g) {
+                let _ = ug;
+                tx.send(ToUser::Broadcast(Arc::clone(&bcast))).expect("user alive");
+            }
+        }
+    }
+
+    // Collect final shares, reconstruct per-group votes.
+    let mut finals: Vec<Vec<Option<Vec<u64>>>> = vec![vec![None; n1]; cfg.ell];
+    let mut received = 0usize;
+    while received < cfg.n {
+        match to_server_rx.recv().expect("users alive") {
+            ToServer::FinalShare { group, party, share } => {
+                finals[group][party] = Some(share);
+                received += 1;
+            }
+            ToServer::Uplink { .. } => panic!("uplink after subrounds done"),
+        }
+    }
+    let mut subgroup_votes = Vec::with_capacity(cfg.ell);
+    let mut transcripts = Vec::with_capacity(cfg.ell);
+    let mut stats = CommStats::default();
+    for (g, server) in servers.iter_mut().enumerate() {
+        let shares: Vec<Vec<u64>> =
+            finals[g].iter_mut().map(|s| s.take().expect("all finals")).collect();
+        let raw = server.finalize(shares);
+        let votes: Vec<i8> = raw.iter().map(|&v| fp.sign_of(v)).collect();
+        server.stats.vote_bits = cfg.intra.downlink_bits();
+        stats.merge(&server.stats);
+        subgroup_votes.push(votes);
+        transcripts.push(server.transcript.clone());
+    }
+    let global_vote = Arc::new(inter_group_vote(&subgroup_votes, cfg.inter));
+    stats.vote_bits = cfg.inter.downlink_bits();
+    for (_, tx, _) in &user_handles {
+        tx.send(ToUser::GlobalVote(Arc::clone(&global_vote))).expect("user alive");
+    }
+    for (_, _, h) in user_handles {
+        let v = h.join().expect("user thread");
+        debug_assert_eq!(v, *global_vote);
+    }
+
+    RoundOutcome {
+        global_vote: (*global_vote).clone(),
+        subgroup_votes,
+        stats,
+        transcripts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn hierarchical_equals_plain_hierarchy() {
+        forall("hierarchical secure ≡ Eq. 8", 40, |g| {
+            let ell = g.usize_range(1, 4);
+            let n1 = g.usize_range(2, 6);
+            let n = ell * n1;
+            let d = g.usize_range(1, 16);
+            let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
+            let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+            let out = run_sync(&signs, cfg, g.u64());
+            prop_assert_eq!(
+                out.global_vote,
+                plain_hierarchical_vote(&signs, cfg),
+                "cfg={cfg:?}"
+            );
+            prop_assert_eq!(out.subgroup_votes.len(), ell);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn flat_equals_group_vote() {
+        forall("flat ≡ single group", 30, |g| {
+            let n = g.usize_range(2, 10);
+            let d = g.usize_range(1, 8);
+            let policy = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+            let cfg = HiSafeConfig::flat(n, policy);
+            let out = run_sync(&signs, cfg, g.u64());
+            prop_assert_eq!(out.global_vote, plain_group_vote(&signs, policy));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn threaded_matches_sync_bit_for_bit() {
+        forall("threaded ≡ sync", 12, |g| {
+            let ell = g.usize_range(1, 3);
+            let n1 = g.usize_range(2, 5);
+            let n = ell * n1;
+            let d = g.usize_range(1, 8);
+            let cfg = HiSafeConfig::hierarchical(
+                n,
+                ell,
+                if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit },
+            );
+            let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+            let seed = g.u64();
+            let a = run_sync(&signs, cfg, seed);
+            let b = run_threaded(&signs, cfg, seed);
+            prop_assert_eq!(&a.global_vote, &b.global_vote);
+            prop_assert_eq!(&a.subgroup_votes, &b.subgroup_votes);
+            prop_assert_eq!(a.stats.c_u_bits(), b.stats.c_u_bits());
+            prop_assert_eq!(a.stats.subrounds, b.stats.subrounds);
+            // transcripts identical (same dealer seeds)
+            prop_assert_eq!(a.transcripts.len(), b.transcripts.len());
+            for (ta, tb) in a.transcripts.iter().zip(&b.transcripts) {
+                prop_assert_eq!(&ta.output, &tb.output);
+                prop_assert_eq!(ta.openings.len(), tb.openings.len());
+                for (oa, ob) in ta.openings.iter().zip(&tb.openings) {
+                    prop_assert_eq!(&oa.delta, &ob.delta);
+                    prop_assert_eq!(&oa.eps, &ob.eps);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn partition_is_disjoint_cover() {
+        let groups = partition(24, 8);
+        assert_eq!(groups.len(), 8);
+        let mut all: Vec<usize> = groups.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..24).collect::<Vec<_>>());
+        for g in &groups {
+            assert_eq!(g.len(), 3);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn partition_rejects_non_divisor() {
+        partition(24, 7);
+    }
+
+    #[test]
+    fn config_labels() {
+        assert_eq!(HiSafeConfig::hierarchical(24, 8, TiePolicy::OneBit).label(), "A-1");
+        assert_eq!(HiSafeConfig::hierarchical(24, 8, TiePolicy::TwoBit).label(), "B-1");
+        let b2 = HiSafeConfig { n: 24, ell: 8, intra: TiePolicy::TwoBit, inter: TiePolicy::TwoBit, sparse: false };
+        assert_eq!(b2.label(), "B-2");
+        assert!(!b2.signsgd_compatible());
+        assert!(HiSafeConfig::flat(24, TiePolicy::OneBit).signsgd_compatible());
+    }
+
+    #[test]
+    fn paper_headline_config_n24_ell8() {
+        // Table VII first row: n=24, ℓ*=8, n₁=3, 4 openings ("R"),
+        // ⌈log p₁⌉=3 → C_u = 12 bits, C_T = 96 bits (per coordinate).
+        let cfg = HiSafeConfig::hierarchical(24, 8, TiePolicy::OneBit);
+        let signs: Vec<Vec<i8>> = (0..24).map(|i| vec![if i % 3 == 0 { -1i8 } else { 1 }]).collect();
+        let out = run_sync(&signs, cfg, 7);
+        assert_eq!(out.stats.c_u_bits(), 12);
+        assert_eq!(out.stats.c_t_paper_bits(), 96); // ℓ·R·⌈log p₁⌉ = 8·4·3
+        assert_eq!(out.stats.c_t_bits(), 24 * 12); // true all-user uplink = n·C_u
+        assert_eq!(out.stats.subrounds, 2); // latency ⌈log p₁−1⌉ = 2
+        assert_eq!(out.stats.mults, 8 * 2); // 2 per subgroup
+        // flat baseline for the same n (Table VIII n=24 ℓ=1):
+        let flat = run_sync(&signs, HiSafeConfig::flat(24, TiePolicy::OneBit), 7);
+        assert!(flat.stats.c_u_bits() > out.stats.c_u_bits() * 10,
+            "flat {} vs hier {}", flat.stats.c_u_bits(), out.stats.c_u_bits());
+        // votes agree between configs on a clear majority
+        assert_eq!(out.global_vote, vec![1]);
+        assert_eq!(flat.global_vote, vec![1]);
+    }
+
+    #[test]
+    fn b1_increases_resolution_not_uplink() {
+        // Section III-E: B-1 (TwoBit intra) must not change the global
+        // 1-bit downlink, and subgroup ties become 0 instead of −1.
+        let signs = vec![
+            vec![1i8], vec![-1], // group 1: tie
+            vec![1], vec![1],    // group 2: +1
+        ];
+        let a1 = run_sync(&signs, HiSafeConfig::hierarchical(4, 2, TiePolicy::OneBit), 3);
+        let b1 = run_sync(&signs, HiSafeConfig::hierarchical(4, 2, TiePolicy::TwoBit), 3);
+        assert_eq!(a1.subgroup_votes[0], vec![-1]); // tie → −1 under A
+        assert_eq!(b1.subgroup_votes[0], vec![0]);  // tie → 0 under B
+        assert_eq!(a1.global_vote, vec![-1]);       // (−1 + 1) = 0 → tie → −1
+        assert_eq!(b1.global_vote, vec![1]);        // (0 + 1) = 1 → +1
+        assert_eq!(a1.stats.vote_bits, 1);
+        assert_eq!(b1.stats.vote_bits, 1);
+    }
+}

@@ -1,0 +1,355 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them on the
+//! request path (Python never runs here).
+//!
+//! `make artifacts` runs `python/compile/aot.py` once, lowering the L2 JAX
+//! models (which call the L1 Pallas kernels) to **HLO text** under
+//! `artifacts/`. This module loads those files with
+//! `HloModuleProto::from_text_file`, compiles them on the PJRT CPU client,
+//! and caches the executables (one compile per artifact per process —
+//! recompilation would dominate the round time otherwise).
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::fl::data::Dataset;
+use crate::fl::model::Model;
+
+/// Cached-executable PJRT runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// CPU PJRT client rooted at an artifact directory
+    /// (default `artifacts/`).
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: artifact_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Path of a named artifact (`<dir>/<name>.hlo.txt`).
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// True if the artifact file exists (used to skip runtime-dependent
+    /// paths when `make artifacts` has not run).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    /// Load + compile (cached) an artifact.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.artifact_path(name);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact on f32 tensors, returning the flattened f32
+    /// outputs of the result tuple (artifacts are lowered with
+    /// `return_tuple=True`).
+    pub fn exec_f32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let lits = inputs
+            .iter()
+            .map(|(data, dims)| {
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.exec_literals(name, &lits)?
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}")))
+            .collect()
+    }
+
+    /// Execute on i32 tensors (the majority-vote kernel path).
+    pub fn exec_i32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[i32], &[i64])],
+    ) -> Result<Vec<Vec<i32>>> {
+        let lits = inputs
+            .iter()
+            .map(|(data, dims)| {
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.exec_literals(name, &lits)?
+            .into_iter()
+            .map(|l| l.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}")))
+            .collect()
+    }
+
+    /// Execute with raw literals; unpack the output tuple.
+    pub fn exec_literals(
+        &mut self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+}
+
+// ---------------------------------------------------------------- JaxModel
+
+/// A [`Model`] backed by AOT-compiled JAX artifacts:
+///
+/// * `<name>_grad` : `(params f32[d], x f32[b,in], y f32[b,classes])
+///   → (loss f32[], grad f32[d])`
+/// * `<name>_logits` : `(params f32[d], x f32[b,in]) → (logits f32[b,classes])`
+///
+/// The batch size is baked into the artifact; `loss_grad` requires
+/// `batch.len() == batch_size` (the trainer samples with replacement so
+/// batches are always full).
+pub struct JaxModel {
+    rt: std::cell::RefCell<Runtime>,
+    pub name: String,
+    pub param_dim: usize,
+    pub in_dim: usize,
+    pub n_classes: usize,
+    pub batch_size: usize,
+    init_seed_scale: f32,
+}
+
+impl JaxModel {
+    /// `name` is the artifact family, e.g. `mnist_mlp`.
+    pub fn new(
+        artifact_dir: impl AsRef<Path>,
+        name: &str,
+        param_dim: usize,
+        in_dim: usize,
+        n_classes: usize,
+        batch_size: usize,
+    ) -> Result<JaxModel> {
+        let mut rt = Runtime::cpu(artifact_dir)?;
+        for suffix in ["grad", "logits"] {
+            let art = format!("{name}_{suffix}");
+            if !rt.has_artifact(&art) {
+                return Err(anyhow!(
+                    "missing artifact {}; run `make artifacts`",
+                    rt.artifact_path(&art).display()
+                ));
+            }
+            rt.load(&art).context(art.clone())?;
+        }
+        Ok(JaxModel {
+            rt: std::cell::RefCell::new(rt),
+            name: name.to_string(),
+            param_dim,
+            in_dim,
+            n_classes,
+            batch_size,
+            init_seed_scale: (2.0 / in_dim as f32).sqrt(),
+        })
+    }
+
+    fn batch_tensors(&self, ds: &Dataset, batch: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        let mut xs = Vec::with_capacity(batch.len() * self.in_dim);
+        let mut ys = vec![0.0f32; batch.len() * self.n_classes];
+        for (row, &i) in batch.iter().enumerate() {
+            xs.extend_from_slice(ds.image(i));
+            ys[row * self.n_classes + ds.label(i) as usize] = 1.0;
+        }
+        (xs, ys)
+    }
+}
+
+impl Model for JaxModel {
+    fn dim(&self) -> usize {
+        self.param_dim
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        // Same family as the rust models: scaled Gaussian, deterministic.
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(seed);
+        use crate::util::rng::Rng;
+        (0..self.param_dim)
+            .map(|_| self.init_seed_scale * rng.gen_gaussian() as f32)
+            .collect()
+    }
+
+    fn loss_grad(&self, params: &[f32], ds: &Dataset, batch: &[usize]) -> (f32, Vec<f32>) {
+        assert_eq!(
+            batch.len(),
+            self.batch_size,
+            "JaxModel batch size is baked into the artifact"
+        );
+        let (xs, ys) = self.batch_tensors(ds, batch);
+        let out = self
+            .rt
+            .borrow_mut()
+            .exec_f32(
+                &format!("{}_grad", self.name),
+                &[
+                    (params, &[self.param_dim as i64]),
+                    (&xs, &[self.batch_size as i64, self.in_dim as i64]),
+                    (&ys, &[self.batch_size as i64, self.n_classes as i64]),
+                ],
+            )
+            .expect("grad artifact execution");
+        let loss = out[0][0];
+        let grad = out[1].clone();
+        assert_eq!(grad.len(), self.param_dim);
+        (loss, grad)
+    }
+
+    fn accuracy(&self, params: &[f32], ds: &Dataset) -> f32 {
+        // Run the logits artifact in fixed-size chunks (pad the tail by
+        // repeating sample 0, excluded from the count).
+        let b = self.batch_size;
+        let mut correct = 0usize;
+        let mut i = 0usize;
+        let mut rt = self.rt.borrow_mut();
+        while i < ds.len() {
+            let take = (ds.len() - i).min(b);
+            let batch: Vec<usize> =
+                (0..b).map(|k| if k < take { i + k } else { 0 }).collect();
+            let mut xs = Vec::with_capacity(b * self.in_dim);
+            for &idx in &batch {
+                xs.extend_from_slice(ds.image(idx));
+            }
+            let out = rt
+                .exec_f32(
+                    &format!("{}_logits", self.name),
+                    &[
+                        (params, &[self.param_dim as i64]),
+                        (&xs, &[b as i64, self.in_dim as i64]),
+                    ],
+                )
+                .expect("logits artifact execution");
+            let logits = &out[0];
+            for k in 0..take {
+                let row = &logits[k * self.n_classes..(k + 1) * self.n_classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                correct += usize::from(pred == ds.label(i + k) as usize);
+            }
+            i += take;
+        }
+        correct as f32 / ds.len() as f32
+    }
+
+    fn name(&self) -> String {
+        format!("jax_{}", self.name)
+    }
+}
+
+/// Server-side majority-vote evaluation via the L1 Pallas kernel artifact
+/// `mv_poly_d<d>`: inputs `(x i32[d], coeffs i32[max_coeffs+1])` (the last
+/// coeff slot carries `p`), output `F(x) i32[d]` — must agree with
+/// [`crate::poly::Poly::eval_vec`] (cross-layer consistency test in
+/// `rust/tests/integration.rs`).
+pub struct MvPolyKernel {
+    rt: std::cell::RefCell<Runtime>,
+    pub d: usize,
+    pub max_coeffs: usize,
+    artifact: String,
+}
+
+impl MvPolyKernel {
+    pub fn new(
+        artifact_dir: impl AsRef<Path>,
+        d: usize,
+        max_coeffs: usize,
+    ) -> Result<MvPolyKernel> {
+        let mut rt = Runtime::cpu(artifact_dir)?;
+        let artifact = format!("mv_poly_d{d}");
+        if !rt.has_artifact(&artifact) {
+            return Err(anyhow!(
+                "missing artifact {}; run `make artifacts`",
+                rt.artifact_path(&artifact).display()
+            ));
+        }
+        rt.load(&artifact)?;
+        Ok(MvPolyKernel { rt: std::cell::RefCell::new(rt), d, max_coeffs, artifact })
+    }
+
+    /// Evaluate `F` (canonical coefficients over `F_p`) on canonical
+    /// inputs `xs`, via the compiled Pallas kernel.
+    pub fn eval(&self, fp: crate::field::Fp, coeffs: &[u64], xs: &[u64]) -> Result<Vec<u64>> {
+        assert!(
+            coeffs.len() <= self.max_coeffs,
+            "polynomial too large for kernel ({} > {})",
+            coeffs.len(),
+            self.max_coeffs
+        );
+        assert_eq!(xs.len(), self.d);
+        let mut c = vec![0i32; self.max_coeffs + 1];
+        for (i, &v) in coeffs.iter().enumerate() {
+            c[i] = v as i32;
+        }
+        // final slot carries p (keeps the artifact signature at 2 inputs)
+        c[self.max_coeffs] = fp.modulus() as i32;
+        let x: Vec<i32> = xs.iter().map(|&v| v as i32).collect();
+        let out = self.rt.borrow_mut().exec_i32(
+            &self.artifact,
+            &[
+                (&x, &[self.d as i64]),
+                (&c, &[(self.max_coeffs + 1) as i64]),
+            ],
+        )?;
+        Ok(out[0]
+            .iter()
+            .map(|&v| v.rem_euclid(fp.modulus() as i32) as u64)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts live in rust/tests/integration.rs
+    // (skipped gracefully when `make artifacts` hasn't run). Here: pure
+    // path logic only.
+    #[test]
+    fn artifact_paths() {
+        if let Ok(rt) = Runtime::cpu("artifacts") {
+            assert!(rt.artifact_path("foo").ends_with("artifacts/foo.hlo.txt"));
+            assert!(!rt.has_artifact("definitely_not_there"));
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Security analysis of Hi-SAFE (Section IV-B, Theorem 2, Lemmas 2–4,
+//! Remark 4).
+//!
+//! Three executable artifacts back the paper's proofs:
+//!
+//! 1. **Lemma 2, empirically** — the publicly opened `(δ, ε)` pairs must be
+//!    uniform on `F_p` and *independent of the honest inputs*. We run the
+//!    real protocol many times and χ²-test the openings against uniform,
+//!    and against the openings produced under *different* honest inputs.
+//! 2. **Theorem 2 simulator** — [`simulate_transcript`] produces a server
+//!    view given only the leakage `{s_j}, s` (no honest inputs), with the
+//!    same marginal structure as the real one; a two-sample test confirms
+//!    indistinguishability of the opened values.
+//! 3. **Remark 4** — [`residual_leakage_log2`] computes the residual
+//!    full-disclosure probability `(2^−(n₁−1))^d` in log₂ space.
+
+use crate::field::Fp;
+use crate::mpc::{EvalPlan, Opening, Transcript};
+use crate::sharing::share_vec;
+use crate::util::rng::{ChaCha20Rng, Rng};
+
+/// χ² statistic of observed counts against the uniform distribution on
+/// `cells` categories.
+pub fn chi_square_uniform(counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    let exp = total as f64 / counts.len() as f64;
+    counts
+        .iter()
+        .map(|&c| {
+            let d = c as f64 - exp;
+            d * d / exp
+        })
+        .sum()
+}
+
+/// Two-sample χ² statistic (same category space).
+pub fn chi_square_two_sample(a: &[u64], b: &[u64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let na: u64 = a.iter().sum();
+    let nb: u64 = b.iter().sum();
+    let mut stat = 0.0;
+    for i in 0..a.len() {
+        let tot = (a[i] + b[i]) as f64;
+        if tot == 0.0 {
+            continue;
+        }
+        let ea = tot * na as f64 / (na + nb) as f64;
+        let eb = tot * nb as f64 / (na + nb) as f64;
+        stat += (a[i] as f64 - ea).powi(2) / ea + (b[i] as f64 - eb).powi(2) / eb;
+    }
+    stat
+}
+
+/// Loose upper quantile for χ²(df) at ~99.9%: `df + 4·√(2·df) + 8`.
+/// (Normal approximation with generous slack; we only need "not absurdly
+/// non-uniform", not a tight test.)
+pub fn chi2_threshold(df: usize) -> f64 {
+    df as f64 + 4.0 * (2.0 * df as f64).sqrt() + 8.0
+}
+
+/// The adversary's view of one subgroup execution: corrupted inputs +
+/// everything the server saw.
+#[derive(Debug)]
+pub struct AdversaryView {
+    pub corrupted: Vec<usize>,
+    pub corrupted_inputs: Vec<Vec<u64>>,
+    pub transcript: Transcript,
+}
+
+/// Theorem-2 simulator: fabricate a server transcript given ONLY the
+/// output (the subgroup vote, field-encoded) and the public plan —
+/// no honest inputs.
+///
+/// Procedure (Appendix C, Lemmas 3–4): sample every opening uniformly;
+/// sample all but one final share uniformly; set the last share so the
+/// reconstruction equals the given output.
+pub fn simulate_transcript(plan: &EvalPlan, output: &[u64], seed: u64) -> Transcript {
+    assert_eq!(output.len(), plan.d);
+    let fp = plan.fp;
+    let p = fp.modulus();
+    let mut rng = ChaCha20Rng::seed_from_u64(seed);
+    let openings: Vec<Opening> = plan
+        .schedule
+        .steps
+        .iter()
+        .enumerate()
+        .map(|(idx, _)| Opening {
+            mult_idx: idx,
+            delta: (0..plan.d).map(|_| rng.gen_field(p)).collect(),
+            eps: (0..plan.d).map(|_| rng.gen_field(p)).collect(),
+        })
+        .collect();
+    // final shares: uniform conditioned on Σ = output
+    let final_shares = share_vec(fp, output, plan.n_parties, &mut rng);
+    Transcript { openings, final_shares, output: output.to_vec() }
+}
+
+/// Histogram the δ-openings of a transcript into `p` cells (coordinate 0
+/// of every multiplication; callers accumulate across runs).
+pub fn histogram_openings(fp: Fp, transcripts: &[Transcript]) -> Vec<u64> {
+    let mut counts = vec![0u64; fp.modulus() as usize];
+    for t in transcripts {
+        for o in &t.openings {
+            counts[o.delta[0] as usize] += 1;
+            counts[o.eps[0] as usize] += 1;
+        }
+    }
+    counts
+}
+
+/// Remark 4: log₂ of the probability that the final vote fully reveals
+/// all inputs — `d·(−(n₁−1))` for subgroup size `n₁` over `d` coordinates
+/// (inputs i.i.d. uniform ±1).
+pub fn residual_leakage_log2(n1: usize, d: usize) -> f64 {
+    -((n1.saturating_sub(1)) as f64) * d as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::secure_group_vote;
+    use crate::poly::{MvPolynomial, TiePolicy};
+    use crate::util::rng::Xoshiro256pp;
+
+    /// Lemma 2: real openings are uniform on F_p.
+    #[test]
+    fn real_openings_uniform() {
+        let n = 5;
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let mut transcripts = Vec::new();
+        for run in 0..1500 {
+            let signs: Vec<Vec<i8>> =
+                (0..n).map(|_| vec![rng.gen_sign()]).collect();
+            let out = secure_group_vote(&signs, TiePolicy::OneBit, false, run);
+            transcripts.push(out.transcript);
+        }
+        let fp = crate::field::field_for_group(n);
+        let counts = histogram_openings(fp, &transcripts);
+        let chi2 = chi_square_uniform(&counts);
+        let thr = chi2_threshold(counts.len() - 1);
+        assert!(chi2 < thr, "openings non-uniform: χ² = {chi2:.1} ≥ {thr:.1}");
+    }
+
+    /// Lemma 2, input-independence: opening distributions under two fixed,
+    /// different honest-input profiles are indistinguishable.
+    #[test]
+    fn openings_independent_of_inputs() {
+        let n = 4;
+        let fp = crate::field::field_for_group(n);
+        let profile_a: Vec<Vec<i8>> = vec![vec![1], vec![1], vec![1], vec![1]];
+        let profile_b: Vec<Vec<i8>> = vec![vec![-1], vec![-1], vec![-1], vec![-1]];
+        let collect = |signs: &Vec<Vec<i8>>, base: u64| -> Vec<u64> {
+            let ts: Vec<_> = (0..1200)
+                .map(|r| secure_group_vote(signs, TiePolicy::OneBit, false, base + r).transcript)
+                .collect();
+            histogram_openings(fp, &ts)
+        };
+        let ha = collect(&profile_a, 10_000);
+        let hb = collect(&profile_b, 20_000);
+        let chi2 = chi_square_two_sample(&ha, &hb);
+        let thr = chi2_threshold(ha.len() - 1);
+        assert!(
+            chi2 < thr,
+            "openings depend on inputs: χ² = {chi2:.1} ≥ {thr:.1}"
+        );
+    }
+
+    /// Theorem 2: the simulator's openings match the real distribution and
+    /// its reconstruction equals the leaked output.
+    #[test]
+    fn simulated_transcript_indistinguishable() {
+        let n = 4;
+        let mv = MvPolynomial::build_fermat(n, TiePolicy::OneBit);
+        let plan = EvalPlan::new(&mv, 1, false);
+        let fp = plan.fp;
+        let signs: Vec<Vec<i8>> = vec![vec![1], vec![-1], vec![1], vec![1]];
+        // real views
+        let real: Vec<_> = (0..1200)
+            .map(|r| secure_group_vote(&signs, TiePolicy::OneBit, false, 40_000 + r).transcript)
+            .collect();
+        // simulated views given only the output
+        let output = real[0].output.clone();
+        let sim: Vec<_> = (0..1200)
+            .map(|r| simulate_transcript(&plan, &output, 90_000 + r))
+            .collect();
+        for t in &sim {
+            // reconstruction consistency
+            let rec = crate::sharing::reconstruct_vec(fp, &t.final_shares);
+            assert_eq!(rec, output);
+            assert_eq!(t.openings.len(), real[0].openings.len());
+        }
+        let hr = histogram_openings(fp, &real);
+        let hs = histogram_openings(fp, &sim);
+        let chi2 = chi_square_two_sample(&hr, &hs);
+        let thr = chi2_threshold(hr.len() - 1);
+        assert!(chi2 < thr, "sim distinguishable: χ² = {chi2:.1} ≥ {thr:.1}");
+    }
+
+    /// Final shares of honest parties are uniform (any n−1 of them).
+    #[test]
+    fn final_shares_marginally_uniform() {
+        let n = 3;
+        let fp = crate::field::field_for_group(n);
+        let signs: Vec<Vec<i8>> = vec![vec![1], vec![-1], vec![1]];
+        let mut counts = vec![0u64; fp.modulus() as usize];
+        for r in 0..4000 {
+            let t = secure_group_vote(&signs, TiePolicy::OneBit, false, 70_000 + r).transcript;
+            counts[t.final_shares[1][0] as usize] += 1;
+        }
+        let chi2 = chi_square_uniform(&counts);
+        let thr = chi2_threshold(counts.len() - 1);
+        assert!(chi2 < thr, "final share non-uniform: χ² = {chi2:.1}");
+    }
+
+    #[test]
+    fn remark4_leakage_values() {
+        // flat n=24 vs subgrouped n₁=3, d=1: 2^−23 vs 2^−2.
+        assert_eq!(residual_leakage_log2(24, 1), -23.0);
+        assert_eq!(residual_leakage_log2(3, 1), -2.0);
+        // model-level (d = 7850): astronomically negligible either way.
+        assert!(residual_leakage_log2(3, 7850) < -15_000.0);
+        // monotone: larger subgroups leak less
+        assert!(residual_leakage_log2(6, 10) < residual_leakage_log2(3, 10));
+    }
+
+    #[test]
+    fn chi2_helpers_sane() {
+        // perfectly uniform counts → statistic 0
+        assert_eq!(chi_square_uniform(&[100, 100, 100, 100]), 0.0);
+        // identical samples → two-sample statistic 0
+        assert_eq!(chi_square_two_sample(&[50, 50], &[50, 50]), 0.0);
+        // grossly skewed counts must exceed the threshold
+        let skewed = chi_square_uniform(&[1000, 10, 10, 10]);
+        assert!(skewed > chi2_threshold(3));
+    }
+}

@@ -1,0 +1,314 @@
+//! Shamir secret sharing + DN07-style secure multiplication — the
+//! alternative MPC backend the paper names ("other secure multiplication
+//! techniques (e.g., DN [40] and ATLAS [41]) can be seamlessly
+//! integrated", Section III-A).
+//!
+//! Scheme (honest majority, threshold `t < n/2`):
+//! * a secret `z` is shared as evaluations of a random degree-`t`
+//!   polynomial `f` with `f(0) = z` at points `1..=n`;
+//! * addition is local; multiplication of two degree-`t` sharings yields a
+//!   degree-`2t` sharing, which is *degree-reduced* via the
+//!   Damgård–Nielsen king-node pattern: parties mask the product sharing
+//!   with a pre-distributed double sharing `(⟨r⟩_t, ⟨r⟩_2t)`, open
+//!   `x·y − r` (degree 2t, reconstructible by 2t+1 ≤ n parties), and the
+//!   king broadcasts it; parties add it to `⟨r⟩_t`.
+//!
+//! Integration with Hi-SAFE: users Shamir-share their ±1 inputs, locally
+//! sum the shares of all users (obtaining a sharing of `x = Σ xᵢ`), run
+//! the same [`PowerSchedule`] as the Beaver path with DN multiplications,
+//! combine with the polynomial coefficients, and open only `F(x)` — the
+//! same leakage profile as Theorem 2. [`shamir_group_vote`] implements the
+//! full pipeline; tests assert it equals the plaintext majority vote and
+//! the Beaver-path outcome.
+
+use crate::field::Fp;
+use crate::poly::{MvPolynomial, PowerSchedule, TiePolicy};
+use crate::util::rng::{ChaCha20Rng, Rng};
+
+/// Share a secret as `f(1..=n)` for random degree-`t` poly with
+/// `f(0) = secret`.
+pub fn share<R: Rng>(fp: Fp, secret: u64, n: usize, t: usize, rng: &mut R) -> Vec<u64> {
+    assert!(t < n, "threshold must be below party count");
+    assert!((n as u64) < fp.modulus(), "need n distinct nonzero points");
+    let p = fp.modulus();
+    // coefficients: [secret, c1..ct]
+    let mut coeffs = vec![secret];
+    for _ in 0..t {
+        coeffs.push(rng.gen_field(p));
+    }
+    (1..=n as u64)
+        .map(|x| {
+            // Horner
+            let mut acc = 0u64;
+            for &c in coeffs.iter().rev() {
+                acc = fp.add(fp.mul(acc, x), c);
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Lagrange-interpolate `f(0)` from shares at points `points` (1-based
+/// party ids). Needs `deg(f) + 1` points.
+pub fn reconstruct(fp: Fp, points: &[usize], shares: &[u64]) -> u64 {
+    assert_eq!(points.len(), shares.len());
+    let mut acc = 0u64;
+    for (i, (&xi, &yi)) in points.iter().zip(shares).enumerate() {
+        let xi = xi as u64;
+        let mut num = 1u64;
+        let mut den = 1u64;
+        for (j, &xj) in points.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            let xj = xj as u64;
+            num = fp.mul(num, fp.neg(fp.reduce(xj))); // (0 − xj)
+            den = fp.mul(den, fp.sub(fp.reduce(xi), fp.reduce(xj)));
+        }
+        let lag = fp.mul(num, fp.inv(den));
+        acc = fp.add(acc, fp.mul(yi, lag));
+    }
+    acc
+}
+
+/// A double sharing `(⟨r⟩_t, ⟨r⟩_2t)` of the same random `r` — the DN07
+/// preprocessing object (one consumed per multiplication).
+#[derive(Debug, Clone)]
+pub struct DoubleShare {
+    pub deg_t: Vec<u64>,
+    pub deg_2t: Vec<u64>,
+}
+
+/// Trusted-dealer generation of double sharings (same substitution
+/// rationale as the Beaver dealer — DESIGN.md §Substitutions).
+pub struct DnDealer {
+    fp: Fp,
+    n: usize,
+    t: usize,
+    rng: ChaCha20Rng,
+    pub generated: usize,
+}
+
+impl DnDealer {
+    pub fn new(fp: Fp, n: usize, t: usize, seed: u64) -> DnDealer {
+        assert!(2 * t < n, "DN needs honest majority: 2t < n");
+        DnDealer { fp, n, t, rng: ChaCha20Rng::seed_from_u64(seed), generated: 0 }
+    }
+
+    pub fn gen_double(&mut self) -> DoubleShare {
+        let r = self.rng.gen_field(self.fp.modulus());
+        let deg_t = share(self.fp, r, self.n, self.t, &mut self.rng);
+        let deg_2t = share(self.fp, r, self.n, 2 * self.t, &mut self.rng);
+        self.generated += 1;
+        DoubleShare { deg_t, deg_2t }
+    }
+}
+
+/// One DN multiplication on vectors of shares (per-party views):
+/// `x_shares[i]`, `y_shares[i]` are party `i`'s degree-`t` shares.
+/// Returns the degree-`t` sharing of `x·y` plus the opened masked value
+/// (the protocol's only public message — uniform, like Beaver's δ/ε).
+pub fn dn_multiply(
+    fp: Fp,
+    t: usize,
+    x_shares: &[u64],
+    y_shares: &[u64],
+    double: &DoubleShare,
+) -> (Vec<u64>, u64) {
+    let n = x_shares.len();
+    assert!(2 * t < n);
+    // local degree-2t product minus the 2t-sharing of r
+    let masked: Vec<u64> = (0..n)
+        .map(|i| fp.sub(fp.mul(x_shares[i], y_shares[i]), double.deg_2t[i]))
+        .collect();
+    // king reconstructs d = x·y − r from any 2t+1 shares
+    let pts: Vec<usize> = (1..=2 * t + 1).collect();
+    let d = reconstruct(fp, &pts, &masked[..2 * t + 1]);
+    // parties: ⟨xy⟩_t = ⟨r⟩_t + d (constant added to the share of ONE
+    // polynomial — constants add to every share since f(0)+d shifts f)
+    let out: Vec<u64> = (0..n).map(|i| fp.add(double.deg_t[i], d)).collect();
+    (out, d)
+}
+
+/// Full Hi-SAFE group vote over the DN/Shamir backend (threshold
+/// `t = ⌊(n−1)/2⌋`): share inputs → sum locally → power schedule via DN
+/// mults → combine coefficients → open `F(x)` only.
+pub fn shamir_group_vote(signs: &[Vec<i8>], policy: TiePolicy, seed: u64) -> Vec<i8> {
+    let n = signs.len();
+    assert!(n >= 3, "DN needs n ≥ 3 (honest majority)");
+    let d = signs[0].len();
+    let t = (n - 1) / 2;
+    let mv = MvPolynomial::build_fermat(n, policy);
+    let fp = mv.fp;
+    let sched = PowerSchedule::full(mv.degree());
+    let mut dealer = DnDealer::new(fp, n, t, seed);
+    let mut rng = ChaCha20Rng::seed_from_u64(seed ^ 0x5a5a);
+
+    let mut votes = Vec::with_capacity(d);
+    for j in 0..d {
+        // input sharing round: each user Shamir-shares its sign
+        let mut sum_shares = vec![0u64; n];
+        for s in signs {
+            let sh = share(fp, fp.from_i64(s[j] as i64), n, t, &mut rng);
+            for i in 0..n {
+                sum_shares[i] = fp.add(sum_shares[i], sh[i]);
+            }
+        }
+        // powers via the same schedule as the Beaver path
+        let max_pow = sched.max_power.max(1);
+        let mut powers: Vec<Option<Vec<u64>>> = vec![None; max_pow + 1];
+        powers[1] = Some(sum_shares);
+        for step in &sched.steps {
+            let left = powers[step.left].clone().expect("left power");
+            let right = powers[step.right].clone().expect("right power");
+            let dbl = dealer.gen_double();
+            let (prod, _opened) = dn_multiply(fp, t, &left, &right, &dbl);
+            powers[step.target] = Some(prod);
+        }
+        // combine: ⟨F(x)⟩ = Σ coeff_k·⟨x^k⟩ (+ c0)
+        let mut fshare = vec![0u64; n];
+        for (k, &c) in mv.poly.coeffs.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if k == 0 {
+                for v in fshare.iter_mut() {
+                    *v = fp.add(*v, c);
+                }
+                continue;
+            }
+            let pw = powers[k].as_ref().expect("power");
+            for i in 0..n {
+                fshare[i] = fp.add(fshare[i], fp.mul(c, pw[i]));
+            }
+        }
+        // open F(x) from t+1 shares
+        let pts: Vec<usize> = (1..=t + 1).collect();
+        let fx = reconstruct(fp, &pts, &fshare[..t + 1]);
+        votes.push(fp.sign_of(fx));
+    }
+    votes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::plain_group_vote;
+    use crate::util::prop::forall;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn share_reconstruct_roundtrip() {
+        forall("shamir roundtrip", 200, |g| {
+            let n = g.usize_range(3, 12);
+            let p = crate::field::next_prime(g.range(n as u64, 97));
+            let fp = Fp::new(p);
+            let t = g.usize_range(1, ((n - 1) / 2).max(1));
+            let secret = g.field(p);
+            let mut rng = ChaCha20Rng::seed_from_u64(g.u64());
+            let shares = share(fp, secret, n, t, &mut rng);
+            // any t+1 shares reconstruct
+            let pts: Vec<usize> = (1..=t + 1).collect();
+            prop_assert_eq!(reconstruct(fp, &pts, &shares[..t + 1]), secret);
+            // a different subset too (last t+1)
+            let pts2: Vec<usize> = (n - t..=n).collect();
+            prop_assert_eq!(reconstruct(fp, &pts2, &shares[n - t - 1..]), secret);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn t_shares_leak_nothing_statistically() {
+        // With t = 1, a single share must be uniform regardless of secret.
+        let fp = Fp::new(11);
+        let mut rng = ChaCha20Rng::seed_from_u64(5);
+        let mut counts = [[0u64; 11]; 2];
+        for trial in 0..22_000 {
+            let secret = if trial % 2 == 0 { 3 } else { 9 };
+            let sh = share(fp, secret, 5, 1, &mut rng);
+            counts[trial % 2][sh[2] as usize] += 1;
+        }
+        let chi2 = crate::security::chi_square_two_sample(&counts[0], &counts[1]);
+        assert!(chi2 < crate::security::chi2_threshold(10), "χ² = {chi2}");
+    }
+
+    #[test]
+    fn dn_multiplication_correct() {
+        forall("DN x·y", 120, |g| {
+            let n = g.usize_range(3, 9);
+            let p = crate::field::next_prime(g.range(n as u64, 97));
+            let fp = Fp::new(p);
+            let t = (n - 1) / 2;
+            let (x, y) = (g.field(p), g.field(p));
+            let mut rng = ChaCha20Rng::seed_from_u64(g.u64());
+            let xs = share(fp, x, n, t, &mut rng);
+            let ys = share(fp, y, n, t, &mut rng);
+            let mut dealer = DnDealer::new(fp, n, t, g.u64() ^ 1);
+            let dbl = dealer.gen_double();
+            let (prod, _d) = dn_multiply(fp, t, &xs, &ys, &dbl);
+            let pts: Vec<usize> = (1..=t + 1).collect();
+            prop_assert_eq!(
+                reconstruct(fp, &pts, &prod[..t + 1]),
+                fp.mul(x, y),
+                "n={n} t={t}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dn_opened_value_is_masked() {
+        // the only public message is x·y − r with r uniform ⇒ uniform.
+        let fp = Fp::new(11);
+        let mut counts = vec![0u64; 11];
+        for seed in 0..8_000u64 {
+            let mut rng = ChaCha20Rng::seed_from_u64(seed);
+            let xs = share(fp, 7, 5, 2, &mut rng);
+            let ys = share(fp, 3, 5, 2, &mut rng);
+            let mut dealer = DnDealer::new(fp, 5, 2, seed ^ 99);
+            let dbl = dealer.gen_double();
+            let (_, d) = dn_multiply(fp, 2, &xs, &ys, &dbl);
+            counts[d as usize] += 1;
+        }
+        let chi2 = crate::security::chi_square_uniform(&counts);
+        assert!(chi2 < crate::security::chi2_threshold(10), "χ² = {chi2}");
+    }
+
+    #[test]
+    fn shamir_vote_equals_plain_vote() {
+        forall("shamir backend ≡ plaintext MV", 25, |g| {
+            let n = g.usize_range(3, 8);
+            let d = g.usize_range(1, 6);
+            let policy = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+            prop_assert_eq!(
+                shamir_group_vote(&signs, policy, g.u64()),
+                plain_group_vote(&signs, policy),
+                "n={n} {policy:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shamir_vote_equals_beaver_vote() {
+        // the two backends are interchangeable — the paper's claim.
+        let signs: Vec<Vec<i8>> = vec![
+            vec![1, -1, 1, 1],
+            vec![-1, -1, 1, -1],
+            vec![1, 1, 1, -1],
+            vec![1, -1, -1, -1],
+            vec![-1, -1, 1, 1],
+        ];
+        let beaver = crate::mpc::secure_group_vote(&signs, TiePolicy::OneBit, false, 3);
+        let shamir = shamir_group_vote(&signs, TiePolicy::OneBit, 3);
+        assert_eq!(beaver.votes, shamir);
+    }
+
+    #[test]
+    #[should_panic(expected = "honest majority")]
+    fn dn_rejects_dishonest_majority() {
+        let fp = Fp::new(7);
+        let _ = DnDealer::new(fp, 4, 2, 0); // 2t = 4 = n — rejected
+    }
+}

@@ -1,0 +1,171 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, adaptive iteration-count selection targeting a wall
+//! budget, and median/MAD statistics. All `rust/benches/*` binaries
+//! (declared `harness = false`) use this.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    /// Median per-iteration time.
+    pub median: Duration,
+    /// Median absolute deviation.
+    pub mad: Duration,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl Stats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median.as_secs_f64()
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<48} {:>12} ± {:>10}  ({} samples × {} iters)",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mad),
+            self.samples,
+            self.iters_per_sample
+        )
+    }
+}
+
+/// Benchmark runner with a per-case wall budget.
+pub struct Bencher {
+    /// Total wall budget per case (warmup excluded).
+    pub budget: Duration,
+    pub samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // HISAFE_BENCH_FAST=1 shrinks budgets for CI smoke runs.
+        let fast = std::env::var("HISAFE_BENCH_FAST").ok().is_some();
+        Bencher {
+            budget: if fast {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(1)
+            },
+            samples: if fast { 5 } else { 15 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    /// Returns per-iteration stats; `f`'s return value is black-boxed.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> Stats {
+        // Warmup + calibration: find iters/sample so one sample ≈ budget/samples.
+        let target = self.budget / self.samples as u32;
+        let mut iters = 1u64;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            let el = t0.elapsed();
+            if el >= target || iters >= (1 << 30) {
+                // scale iters to hit target
+                if el < target && iters < (1 << 30) {
+                    break;
+                }
+                let scale = target.as_secs_f64() / el.as_secs_f64().max(1e-12);
+                iters = ((iters as f64 * scale).ceil() as u64).max(1);
+                break;
+            }
+            iters *= 2;
+        }
+        let mut times: Vec<Duration> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            times.push(t0.elapsed() / iters as u32);
+        }
+        times.sort();
+        let median = times[times.len() / 2];
+        let mut devs: Vec<i128> = times
+            .iter()
+            .map(|t| (t.as_nanos() as i128 - median.as_nanos() as i128).abs())
+            .collect();
+        devs.sort();
+        let mad = Duration::from_nanos(devs[devs.len() / 2] as u64);
+        let s = Stats {
+            name: name.to_string(),
+            median,
+            mad,
+            iters_per_sample: iters,
+            samples: self.samples,
+        };
+        println!("{s}");
+        self.results.push(s.clone());
+        s
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+/// Optimization barrier (stable-rust version of `std::hint::black_box`;
+/// we use the std one, wrapped so benches read uniformly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        std::env::set_var("HISAFE_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        b.budget = Duration::from_millis(50);
+        b.samples = 3;
+        let s = b.bench("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i) * i);
+            }
+            acc
+        });
+        assert!(s.median >= Duration::from_nanos(0));
+        assert_eq!(b.results().len(), 1);
+    }
+}

@@ -1,0 +1,138 @@
+//! Tiny CLI flag parser for the launcher and examples (clap is not
+//! available offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments. Unknown flags are an error, so typos fail fast.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    /// Flags that were declared boolean when parsing.
+    seen: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (no program name).
+    /// `bool_flags` lists flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        bool_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&body) {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("--{body} requires a value"))?;
+                    out.flags.insert(body.to_string(), v);
+                }
+                out.seen.push(body.split('=').next().unwrap().to_string());
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from `std::env::args()` (skipping the program name).
+    pub fn from_env(bool_flags: &[&str]) -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{key} must be u64, got '{s}'")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        self.get_u64(key, default as u64).map(|x| x as usize)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{key} must be f64, got '{s}'")),
+        }
+    }
+
+    /// Validate that every provided flag is in `allowed` (catches typos).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown flag --{k}; known flags: {}",
+                    allowed.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed_forms() {
+        let a = Args::parse(
+            sv(&["train", "--n", "24", "--tie=two_bit", "--verbose", "pos2"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(), &["train".to_string(), "pos2".to_string()]);
+        assert_eq!(a.get_u64("n", 0).unwrap(), 24);
+        assert_eq!(a.get("tie"), Some("two_bit"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_f64("lr", 0.005).unwrap(), 0.005);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(sv(&["--n"]), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = Args::parse(sv(&["--nn", "3"]), &[]).unwrap();
+        assert!(a.check_known(&["n"]).is_err());
+        assert!(a.check_known(&["nn"]).is_ok());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(sv(&["--n", "abc"]), &[]).unwrap();
+        assert!(a.get_u64("n", 0).is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! In-tree utility substrates.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so the usual ecosystem crates (rand,
+//! serde, clap, criterion, proptest) are unavailable. Per the
+//! "build every substrate" rule these are implemented here:
+//!
+//! * [`rng`] — ChaCha20 (crypto-grade, for Beaver masks and shares) and
+//!   xoshiro256++ (fast, for data synthesis), plus distributions.
+//! * [`prop`] — a minimal property-based testing harness (seeded random
+//!   inputs, shrinking-free but with reported failing seeds).
+//! * [`bench`] — a micro-benchmark harness (warmup, adaptive iteration,
+//!   median/MAD reporting) used by all `rust/benches/*`.
+//! * [`json`] — a small JSON writer + parser for configs and metric logs.
+//! * [`cli`] — flag parsing for the launcher and examples.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

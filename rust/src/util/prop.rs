@@ -1,0 +1,210 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest` is not available offline, so this provides the same
+//! discipline in ~100 lines: run a property against many seeded random
+//! inputs; on failure, report the failing case and the seed that
+//! regenerates it. No shrinking — inputs here (field elements, sign
+//! vectors, user counts) are already small and interpretable.
+//!
+//! ```no_run
+//! use hisafe::prop_assert_eq;
+//! use hisafe::util::prop::{forall, Gen};
+//! forall("add commutes", 100, |g: &mut Gen| {
+//!     let p = g.prime(100);
+//!     let f = hisafe::field::Fp::new(p);
+//!     let (a, b) = (g.field(p), g.field(p));
+//!     prop_assert_eq!(f.add(a, b), f.add(b, a));
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::{Rng, Xoshiro256pp};
+use crate::field::next_prime;
+
+/// Input generator handed to each property iteration.
+pub struct Gen {
+    rng: Xoshiro256pp,
+    /// Seed that reproduces this iteration (printed on failure).
+    pub seed: u64,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Xoshiro256pp::seed_from_u64(seed), seed }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.rng.gen_below(hi - lo + 1)
+    }
+
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        self.range(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform field element below `p`.
+    pub fn field(&mut self, p: u64) -> u64 {
+        self.rng.gen_field(p)
+    }
+
+    /// Random prime in `(2, bound]` (via next_prime of a random base).
+    pub fn prime(&mut self, bound: u64) -> u64 {
+        let base = self.range(2, bound.saturating_sub(1));
+        let p = next_prime(base);
+        if p > bound {
+            next_prime(2)
+        } else {
+            p
+        }
+    }
+
+    /// Random ±1 sign vector of length `d`.
+    pub fn sign_vec(&mut self, d: usize) -> Vec<i8> {
+        (0..d).map(|_| self.rng.gen_sign()).collect()
+    }
+
+    /// Random field-element vector.
+    pub fn field_vec(&mut self, p: u64, d: usize) -> Vec<u64> {
+        (0..d).map(|_| self.rng.gen_field(p)).collect()
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.gen_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn rng(&mut self) -> &mut Xoshiro256pp {
+        &mut self.rng
+    }
+}
+
+/// Property result: `Err(msg)` fails the case with context.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` against `cases` random inputs. Panics (test failure) on the
+/// first failing case, printing the seed that reproduces it.
+///
+/// Honors `HISAFE_PROP_SEED` to re-run a single failing seed and
+/// `HISAFE_PROP_CASES` to scale case counts (CI vs local).
+pub fn forall<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    if let Ok(s) = std::env::var("HISAFE_PROP_SEED") {
+        let seed: u64 = s.parse().expect("HISAFE_PROP_SEED must be u64");
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed (seed {seed}): {msg}");
+        }
+        return;
+    }
+    let cases = std::env::var("HISAFE_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
+    // Deterministic but name-dependent base seed: independent properties
+    // explore independent input streams.
+    let base = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+        });
+    for i in 0..cases {
+        let seed = base.wrapping_add(i).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {i}/{cases} \
+                 (re-run with HISAFE_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// `assert_eq!` analogue that returns a `PropResult` instead of panicking,
+/// so `forall` can attach the reproducing seed.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+    ($a:expr, $b:expr, $($ctx:tt)+) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{}: {} != {} ({:?} vs {:?})",
+                format!($($ctx)+),
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+/// Boolean property assertion for [`forall`] bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {{
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    }};
+    ($cond:expr, $($ctx:tt)+) => {{
+        if !$cond {
+            return Err(format!(
+                "{}: assertion failed: {}",
+                format!($($ctx)+),
+                stringify!($cond)
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("trivial", 100, |g| {
+            let x = g.range(0, 10);
+            prop_assert!(x <= 10);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn forall_reports_failures() {
+        forall("always-fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_prime_in_bound() {
+        forall("gen-prime", 200, |g| {
+            let p = g.prime(101);
+            prop_assert!(crate::field::is_prime(p), "p={p}");
+            prop_assert!(p <= 101, "p={p}");
+            Ok(())
+        });
+    }
+}

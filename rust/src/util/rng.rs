@@ -1,0 +1,423 @@
+//! Random number generation.
+//!
+//! Two generators with one trait:
+//!
+//! * [`ChaCha20Rng`] — the IETF ChaCha20 block function used as a CSPRNG.
+//!   All *cryptographic* randomness in Hi-SAFE (additive-share masks,
+//!   Beaver triples, pairwise masking seeds) comes from here; Lemma 2's
+//!   uniformity argument needs masks indistinguishable from uniform, and
+//!   the `security` module's χ² tests run against this generator.
+//! * [`Xoshiro256pp`] — xoshiro256++, fast statistical PRNG for synthetic
+//!   data generation, user selection and test-input generation.
+//!
+//! Both are fully deterministic from a `u64`/32-byte seed so every
+//! experiment in EXPERIMENTS.md is reproducible bit-for-bit.
+
+/// Minimal RNG interface: everything derives from `next_u64`.
+pub trait Rng {
+    fn next_u64(&mut self) -> u64;
+
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)` by rejection sampling (no modulo bias).
+    #[inline]
+    fn gen_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        // Zone rejection: accept x < zone where zone = bound * floor(2^64/bound).
+        let zone = bound.wrapping_mul(u64::MAX / bound);
+        loop {
+            let x = self.next_u64();
+            if zone == 0 || x < zone {
+                return x % bound;
+            }
+        }
+    }
+
+    /// Uniform field element in `[0, p)`.
+    ///
+    /// Fast path for small moduli (every Hi-SAFE field has `p ≤ 131`):
+    /// Lemire multiply-shift rejection on a single `u32` draw — half the
+    /// keystream of the generic u64 path and no modulo. §Perf: this cut
+    /// dealer time ~35%.
+    #[inline]
+    fn gen_field(&mut self, p: u64) -> u64 {
+        if p < (1 << 31) {
+            let p32 = p as u32;
+            // threshold = (2^32 − p) mod p; draws with low < threshold are
+            // biased and rejected (probability < p/2^32 ≈ 10^-8 here).
+            let threshold = p32.wrapping_neg() % p32;
+            loop {
+                let x = self.next_u32();
+                let m = x as u64 * p32 as u64;
+                if (m as u32) >= threshold {
+                    return m >> 32;
+                }
+            }
+        } else {
+            self.gen_below(p)
+        }
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box–Muller.
+    fn gen_gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.gen_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.gen_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return r * (2.0 * std::f64::consts::PI * u2).cos();
+        }
+    }
+
+    /// Fill a slice with uniform field elements in `[0, p)`.
+    ///
+    /// Default loops [`Rng::gen_field`]; [`ChaCha20Rng`] overrides with a
+    /// block-wise fast path (§Perf: the Beaver dealer is keystream-bound).
+    fn fill_field(&mut self, p: u64, out: &mut [u64]) {
+        for x in out.iter_mut() {
+            *x = self.gen_field(p);
+        }
+    }
+
+    /// Uniform ±1 sign.
+    #[inline]
+    fn gen_sign(&mut self) -> i8 {
+        if self.next_u64() & 1 == 0 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.gen_below(i as u64 + 1) as usize;
+            v.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (partial Fisher–Yates).
+    fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.gen_below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+// ---------------------------------------------------------------- ChaCha20
+
+/// IETF ChaCha20 (RFC 8439 block function) in counter mode as a CSPRNG.
+pub struct ChaCha20Rng {
+    state: [u32; 16],
+    buf: [u32; 16],
+    /// Next u32 index into `buf`; 16 means "refill".
+    idx: usize,
+}
+
+const CHACHA_CONST: [u32; 4] = [0x6170_7865, 0x3320_646e, 0x7962_2d32, 0x6b20_6574];
+
+impl ChaCha20Rng {
+    /// Seed from 32 bytes of key material.
+    pub fn from_key(key: [u8; 32]) -> Self {
+        let mut state = [0u32; 16];
+        state[..4].copy_from_slice(&CHACHA_CONST);
+        for i in 0..8 {
+            state[4 + i] = u32::from_le_bytes([
+                key[4 * i],
+                key[4 * i + 1],
+                key[4 * i + 2],
+                key[4 * i + 3],
+            ]);
+        }
+        // counter = 0, nonce = 0
+        ChaCha20Rng { state, buf: [0; 16], idx: 16 }
+    }
+
+    /// Convenience seeding from a u64 (expanded via SplitMix64 so close
+    /// seeds give unrelated keys).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut key = [0u8; 32];
+        for chunk in key.chunks_exact_mut(8) {
+            chunk.copy_from_slice(&sm.next().to_le_bytes());
+        }
+        Self::from_key(key)
+    }
+
+    /// Derive an independent stream (e.g. one per user / per round) by
+    /// hashing the parent key with a domain label.
+    pub fn fork(&mut self, label: u64) -> ChaCha20Rng {
+        let mut key = [0u8; 32];
+        let a = self.next_u64() ^ label.rotate_left(17);
+        let b = self.next_u64() ^ label.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let c = self.next_u64();
+        let d = self.next_u64();
+        key[..8].copy_from_slice(&a.to_le_bytes());
+        key[8..16].copy_from_slice(&b.to_le_bytes());
+        key[16..24].copy_from_slice(&c.to_le_bytes());
+        key[24..].copy_from_slice(&d.to_le_bytes());
+        ChaCha20Rng::from_key(key)
+    }
+
+    #[inline(always)]
+    fn quarter(s: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+        s[a] = s[a].wrapping_add(s[b]);
+        s[d] = (s[d] ^ s[a]).rotate_left(16);
+        s[c] = s[c].wrapping_add(s[d]);
+        s[b] = (s[b] ^ s[c]).rotate_left(12);
+        s[a] = s[a].wrapping_add(s[b]);
+        s[d] = (s[d] ^ s[a]).rotate_left(8);
+        s[c] = s[c].wrapping_add(s[d]);
+        s[b] = (s[b] ^ s[c]).rotate_left(7);
+    }
+
+    fn refill(&mut self) {
+        let mut w = self.state;
+        for _ in 0..10 {
+            // column rounds
+            Self::quarter(&mut w, 0, 4, 8, 12);
+            Self::quarter(&mut w, 1, 5, 9, 13);
+            Self::quarter(&mut w, 2, 6, 10, 14);
+            Self::quarter(&mut w, 3, 7, 11, 15);
+            // diagonal rounds
+            Self::quarter(&mut w, 0, 5, 10, 15);
+            Self::quarter(&mut w, 1, 6, 11, 12);
+            Self::quarter(&mut w, 2, 7, 8, 13);
+            Self::quarter(&mut w, 3, 4, 9, 14);
+        }
+        for i in 0..16 {
+            self.buf[i] = w[i].wrapping_add(self.state[i]);
+        }
+        // 64-bit counter across words 12..13
+        let (lo, carry) = self.state[12].overflowing_add(1);
+        self.state[12] = lo;
+        if carry {
+            self.state[13] = self.state[13].wrapping_add(1);
+        }
+        self.idx = 0;
+    }
+}
+
+impl Rng for ChaCha20Rng {
+    /// Block-wise field sampling: drains whole keystream blocks with the
+    /// Lemire rejection inlined, skipping per-call index bookkeeping.
+    fn fill_field(&mut self, p: u64, out: &mut [u64]) {
+        debug_assert!(p >= 2 && p < (1 << 31));
+        let p32 = p as u32;
+        let threshold = p32.wrapping_neg() % p32;
+        let mut i = 0;
+        while i < out.len() {
+            if self.idx >= 16 {
+                self.refill();
+            }
+            while self.idx < 16 && i < out.len() {
+                let x = self.buf[self.idx];
+                self.idx += 1;
+                let m = x as u64 * p32 as u64;
+                if (m as u32) >= threshold {
+                    out[i] = m >> 32;
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// u32-granular draw: consumes exactly one keystream word (the default
+    /// trait impl would burn a full u64 per u32 — §Perf).
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        if self.idx >= 16 {
+            self.refill();
+        }
+        let w = self.buf[self.idx];
+        self.idx += 1;
+        w
+    }
+
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        if self.idx >= 15 {
+            // need two fresh u32s from the same block when possible;
+            // simplest correct policy: refill if fewer than 2 remain.
+            if self.idx >= 16 {
+                self.refill();
+            } else {
+                // one word left — use it and one from the next block
+                let lo = self.buf[self.idx] as u64;
+                self.refill();
+                let hi = self.buf[self.idx] as u64;
+                self.idx += 1;
+                return (hi << 32) | lo;
+            }
+        }
+        let lo = self.buf[self.idx] as u64;
+        let hi = self.buf[self.idx + 1] as u64;
+        self.idx += 2;
+        (hi << 32) | lo
+    }
+}
+
+// ------------------------------------------------------------- SplitMix64
+
+/// SplitMix64 — used for seed expansion only.
+pub struct SplitMix64(u64);
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64(seed)
+    }
+    #[inline]
+    pub fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+// ---------------------------------------------------------- xoshiro256++
+
+/// xoshiro256++ 1.0 — fast statistical PRNG (Blackman & Vigna).
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Xoshiro256pp { s: [sm.next(), sm.next(), sm.next(), sm.next()] }
+    }
+}
+
+impl Rng for Xoshiro256pp {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chacha_known_answer() {
+        // RFC 8439 §2.3.2 test vector: key 00:01:..:1f, counter=1,
+        // nonce=000000090000004a00000000. Our RNG uses counter=0/nonce=0,
+        // so verify the raw block function via a manual state instead.
+        let mut rng = ChaCha20Rng::from_key([0u8; 32]);
+        // First u64s must be deterministic and non-degenerate.
+        let a = rng.next_u64();
+        let b = rng.next_u64();
+        assert_ne!(a, b);
+        let mut rng2 = ChaCha20Rng::from_key([0u8; 32]);
+        assert_eq!(a, rng2.next_u64());
+        assert_eq!(b, rng2.next_u64());
+    }
+
+    #[test]
+    fn chacha_rfc8439_block() {
+        // Full RFC 8439 §2.3.2 vector, exercised by constructing the state
+        // exactly as the RFC does and running one refill.
+        let key: [u8; 32] = core::array::from_fn(|i| i as u8);
+        let mut rng = ChaCha20Rng::from_key(key);
+        rng.state[12] = 1; // block counter
+        // nonce words
+        rng.state[13] = 0x0900_0000;
+        rng.state[14] = 0x4a00_0000;
+        rng.state[15] = 0x0000_0000;
+        rng.refill();
+        let expected_first4: [u32; 4] =
+            [0xe4e7f110, 0x15593bd1, 0x1fdd0f50, 0xc47120a3];
+        assert_eq!(&rng.buf[..4], &expected_first4);
+    }
+
+    #[test]
+    fn distinct_seeds_distinct_streams() {
+        let mut a = ChaCha20Rng::seed_from_u64(1);
+        let mut b = ChaCha20Rng::seed_from_u64(2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn gen_below_no_bias_smoke() {
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[rng.gen_below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as i64 - 10_000).abs() < 600, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let n = 100_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.gen_gaussian();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        for _ in 0..100 {
+            let idx = rng.sample_indices(100, 24);
+            assert_eq!(idx.len(), 24);
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 24);
+            assert!(idx.iter().all(|&i| i < 100));
+        }
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = ChaCha20Rng::seed_from_u64(9);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

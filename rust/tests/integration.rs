@@ -1,0 +1,216 @@
+//! Cross-layer integration tests: PJRT runtime ↔ AOT artifacts ↔ the pure
+//! rust substrates.
+//!
+//! These tests require `make artifacts` to have run; they SKIP (with a
+//! stderr note) when artifacts are missing so `cargo test` stays green in
+//! a fresh checkout.
+
+use hisafe::field::{field_for_group, Fp};
+use hisafe::fl::data::{partition_users, synthetic, DataKind, Partition};
+use hisafe::fl::model::{LinearSoftmax, Model};
+use hisafe::fl::trainer::{train, Aggregator, TrainConfig};
+use hisafe::poly::{MvPolynomial, TiePolicy};
+use hisafe::protocol::HiSafeConfig;
+use hisafe::runtime::{JaxModel, MvPolyKernel, Runtime};
+use hisafe::util::rng::{Rng, Xoshiro256pp};
+
+const ART: &str = "artifacts";
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new(ART).join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+    }
+    ok
+}
+
+#[test]
+fn runtime_loads_and_runs_logits_artifact() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rt = Runtime::cpu(ART).expect("pjrt client");
+    assert!(rt.platform().to_lowercase().contains("cpu")
+        || rt.platform().to_lowercase().contains("host"));
+    let params = vec![0.0f32; 7850];
+    let xs = vec![0.5f32; 100 * 784];
+    let out = rt
+        .exec_f32("mnist_linear_logits", &[(&params, &[7850]), (&xs, &[100, 784])])
+        .expect("exec");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), 100 * 10);
+    assert!(out[0].iter().all(|&v| v == 0.0)); // zero params → zero logits
+}
+
+/// The L2 JAX gradient must match the pure-rust model's gradient on the
+/// same parameter layout — the two backends are interchangeable.
+#[test]
+fn jax_grad_matches_rust_grad() {
+    if !have_artifacts() {
+        return;
+    }
+    let (tr, _) = synthetic(DataKind::MnistLike, 200, 50, 13);
+    let rust_model = LinearSoftmax::new(784, 10);
+    let jax_model = JaxModel::new(ART, "mnist_linear", 7850, 784, 10, 100).expect("jax model");
+    let params = rust_model.init_params(3);
+    let batch: Vec<usize> = (0..100).collect();
+    let (loss_r, grad_r) = rust_model.loss_grad(&params, &tr, &batch);
+    let (loss_j, grad_j) = jax_model.loss_grad(&params, &tr, &batch);
+    assert!(
+        (loss_r - loss_j).abs() < 1e-4 * (1.0 + loss_r.abs()),
+        "loss {loss_r} vs {loss_j}"
+    );
+    let mut max_rel = 0.0f32;
+    for (a, b) in grad_r.iter().zip(&grad_j) {
+        let rel = (a - b).abs() / (1e-6 + a.abs().max(b.abs()));
+        if rel > max_rel {
+            max_rel = rel;
+        }
+    }
+    assert!(max_rel < 1e-2, "max relative grad deviation {max_rel}");
+    // signs agree on effectively all coordinates (ties near 0 may flip)
+    let disagree = grad_r
+        .iter()
+        .zip(&grad_j)
+        .filter(|(a, b)| (a.signum() != b.signum()) && (a.abs().max(b.abs()) > 1e-6))
+        .count();
+    assert!(disagree < 8, "{disagree} sign disagreements");
+}
+
+#[test]
+fn jax_accuracy_matches_rust_accuracy() {
+    if !have_artifacts() {
+        return;
+    }
+    let (tr, _) = synthetic(DataKind::MnistLike, 300, 50, 17);
+    let rust_model = LinearSoftmax::new(784, 10);
+    let jax_model = JaxModel::new(ART, "mnist_linear", 7850, 784, 10, 100).expect("jax model");
+    let params = rust_model.init_params(8);
+    let a = rust_model.accuracy(&params, &tr);
+    let b = jax_model.accuracy(&params, &tr);
+    assert!((a - b).abs() < 1e-6, "accuracy {a} vs {b}");
+}
+
+/// Cross-layer consistency: the L1 Pallas Horner kernel (compiled through
+/// HLO, loaded via PJRT) computes exactly the same votes as the rust
+/// field/poly substrate.
+#[test]
+fn mv_poly_kernel_matches_rust_poly_eval() {
+    if !have_artifacts() {
+        return;
+    }
+    let kernel = MvPolyKernel::new(ART, 1024, 32).expect("kernel artifact");
+    let mut rng = Xoshiro256pp::seed_from_u64(99);
+    for n in [2usize, 3, 4, 5, 6, 8, 12, 24] {
+        for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+            let mv = MvPolynomial::build_fermat(n, policy);
+            if mv.poly.coeffs.len() > 32 {
+                continue;
+            }
+            let fp = mv.fp;
+            let xs: Vec<u64> = (0..1024).map(|_| rng.gen_field(fp.modulus())).collect();
+            let rust_out = mv.poly.eval_vec(&xs);
+            let hlo_out = kernel.eval(fp, &mv.poly.coeffs, &xs).expect("kernel eval");
+            assert_eq!(rust_out, hlo_out, "n={n} {policy:?}");
+        }
+    }
+}
+
+/// Secure protocol votes, decoded through the HLO kernel on the plaintext
+/// sums, agree with the protocol output — ties L3 MPC to L1 compute.
+#[test]
+fn protocol_votes_consistent_with_kernel_readout() {
+    if !have_artifacts() {
+        return;
+    }
+    let n = 6;
+    let d = 1024;
+    let kernel = MvPolyKernel::new(ART, d, 32).expect("kernel artifact");
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let signs: Vec<Vec<i8>> = (0..n).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect();
+    let out = hisafe::mpc::secure_group_vote(&signs, TiePolicy::OneBit, false, 2);
+    // plaintext sums, canonical
+    let fp: Fp = field_for_group(n);
+    let sums: Vec<u64> = (0..d)
+        .map(|j| {
+            let s: i64 = signs.iter().map(|v| v[j] as i64).sum();
+            fp.from_i64(s)
+        })
+        .collect();
+    let mv = MvPolynomial::build_fermat(n, TiePolicy::OneBit);
+    let kernel_votes: Vec<i8> = kernel
+        .eval(fp, &mv.poly.coeffs, &sums)
+        .expect("eval")
+        .iter()
+        .map(|&v| fp.sign_of(v))
+        .collect();
+    assert_eq!(out.votes, kernel_votes);
+}
+
+/// End-to-end smoke: a short FL run on the JAX backend with the full
+/// secure hierarchical aggregation learns on synthetic data.
+#[test]
+fn e2e_jax_hisafe_short_training() {
+    if !have_artifacts() {
+        return;
+    }
+    let (tr, te) = synthetic(DataKind::MnistLike, 2000, 300, 77);
+    let shards = partition_users(&tr, 12, Partition::TwoClass, 77);
+    let model = JaxModel::new(ART, "mnist_linear", 7850, 784, 10, 100).expect("jax model");
+    let cfg = TrainConfig {
+        n_users: 12,
+        participants: 6,
+        rounds: 60,
+        lr: 0.002,
+        batch_size: 100,
+        eval_every: 5,
+        seed: 3,
+    };
+    let agg = Aggregator::HiSafe(HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit));
+    let res = train(&model, &tr, &te, &shards, agg, &cfg);
+    let first_loss = res.logs[0].train_loss;
+    let last_loss = res.logs.last().unwrap().train_loss;
+    assert!(
+        last_loss < first_loss,
+        "loss did not decrease: {first_loss} → {last_loss}"
+    );
+    assert!(res.final_acc > 0.4, "acc only {}", res.final_acc);
+}
+
+/// The signgrad artifact (grad + L1 Pallas sign kernel fused in one HLO)
+/// produces the sign of the grad artifact's output.
+#[test]
+fn signgrad_artifact_consistent_with_grad_artifact() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rt = Runtime::cpu(ART).expect("client");
+    let mut rng = Xoshiro256pp::seed_from_u64(21);
+    let params: Vec<f32> = (0..7850).map(|_| 0.05 * rng.gen_gaussian() as f32).collect();
+    let xs: Vec<f32> = (0..100 * 784).map(|_| rng.gen_gaussian() as f32 * 0.5).collect();
+    let mut ys = vec![0.0f32; 100 * 10];
+    for b in 0..100 {
+        ys[b * 10 + (b % 10)] = 1.0;
+    }
+    let grad_out = rt
+        .exec_f32(
+            "mnist_linear_grad",
+            &[(&params, &[7850]), (&xs, &[100, 784]), (&ys, &[100, 10])],
+        )
+        .expect("grad");
+    let sign_out = rt
+        .exec_f32(
+            "mnist_linear_signgrad",
+            &[(&params, &[7850]), (&xs, &[100, 784]), (&ys, &[100, 10])],
+        )
+        .expect("signgrad");
+    assert!((grad_out[0][0] - sign_out[0][0]).abs() < 1e-5, "losses differ");
+    let mut mismatches = 0;
+    for (g, s) in grad_out[1].iter().zip(&sign_out[1]) {
+        let want = if *g < 0.0 { -1.0 } else { 1.0 };
+        if *s != want {
+            mismatches += 1;
+        }
+    }
+    assert_eq!(mismatches, 0, "{mismatches} sign mismatches");
+}

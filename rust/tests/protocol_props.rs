@@ -1,0 +1,269 @@
+//! Heavier property + adversarial tests over the protocol stack
+//! (separate from the fast unit suites; still seconds, not minutes).
+
+use hisafe::beaver::Dealer;
+use hisafe::cost;
+use hisafe::field::{field_for_group, next_prime};
+use hisafe::mpc::{plain_group_vote, secure_group_vote, EvalPlan, Party};
+use hisafe::poly::{MvPolynomial, PowerSchedule, TiePolicy};
+use hisafe::protocol::{
+    partition, plain_hierarchical_vote, run_sync, run_threaded, HiSafeConfig,
+};
+use hisafe::util::prop::forall;
+use hisafe::util::rng::{Rng, Xoshiro256pp};
+use hisafe::{prop_assert, prop_assert_eq};
+
+/// Exhaustive protocol correctness for n = 5..8, single coordinate, all
+/// 2^n sign patterns, both policies — the strongest correctness statement
+/// we can check exactly.
+#[test]
+fn exhaustive_patterns_n5_to_8() {
+    for n in 5..=8usize {
+        for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+            for pattern in 0..(1u32 << n) {
+                let signs: Vec<Vec<i8>> = (0..n)
+                    .map(|i| vec![if pattern >> i & 1 == 1 { 1i8 } else { -1 }])
+                    .collect();
+                let out = secure_group_vote(&signs, policy, false, pattern as u64);
+                assert_eq!(
+                    out.votes,
+                    plain_group_vote(&signs, policy),
+                    "n={n} {policy:?} pattern={pattern:b}"
+                );
+            }
+        }
+    }
+}
+
+/// Larger cohorts: random patterns up to n = 31 (p = 37, deg ≤ 36).
+#[test]
+fn large_group_random_patterns() {
+    forall("secure ≡ plain up to n=31", 15, |g| {
+        let n = g.usize_range(13, 31);
+        let d = g.usize_range(1, 6);
+        let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+        let policy = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+        let out = secure_group_vote(&signs, policy, false, g.u64());
+        prop_assert_eq!(out.votes, plain_group_vote(&signs, policy), "n={n}");
+        Ok(())
+    });
+}
+
+/// Every (n, ℓ) from the paper's tables runs the full protocol and
+/// matches Eq. 8 — the sweep Table VIII/IX implicitly assumes.
+#[test]
+fn paper_sweep_configs_all_correct() {
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    for row in cost::paper_tables() {
+        if row.n % row.ell != 0 || row.n > 40 {
+            continue; // big flat configs are covered by cost tests; keep runtime sane
+        }
+        let cfg = HiSafeConfig {
+            n: row.n,
+            ell: row.ell,
+            intra: TiePolicy::OneBit,
+            inter: TiePolicy::OneBit,
+            sparse: false,
+        };
+        let signs: Vec<Vec<i8>> = (0..row.n).map(|_| vec![rng.gen_sign(), rng.gen_sign()]).collect();
+        let out = run_sync(&signs, cfg, row.n as u64 * 7 + row.ell as u64);
+        assert_eq!(
+            out.global_vote,
+            plain_hierarchical_vote(&signs, cfg),
+            "n={} ell={}",
+            row.n,
+            row.ell
+        );
+    }
+}
+
+/// Threaded coordinator under stress: biggest preset config, multiple d.
+#[test]
+fn threaded_stress_n24_ell8() {
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    for d in [1usize, 64, 512] {
+        let signs: Vec<Vec<i8>> =
+            (0..24).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect();
+        let cfg = HiSafeConfig::hierarchical(24, 8, TiePolicy::TwoBit);
+        let a = run_sync(&signs, cfg, 4);
+        let b = run_threaded(&signs, cfg, 4);
+        assert_eq!(a.global_vote, b.global_vote, "d={d}");
+        assert_eq!(a.subgroup_votes, b.subgroup_votes, "d={d}");
+    }
+}
+
+/// Failure injection: wrong triple count must panic (protocol-integrity
+/// guard), not silently mis-compute.
+#[test]
+#[should_panic(expected = "wrong triple count")]
+fn party_rejects_wrong_triple_budget() {
+    let mv = MvPolynomial::build_fermat(4, TiePolicy::OneBit);
+    let plan = std::sync::Arc::new(EvalPlan::new(&mv, 2, false));
+    let mut dealer = Dealer::new(mv.fp, 3);
+    // one triple short
+    let short = dealer.gen_round(2, 4, plan.triples_needed() - 1);
+    let _ = Party::new(plan, 0, vec![1, 1], short[0].clone());
+}
+
+/// Failure injection: dimension mismatch must panic.
+#[test]
+#[should_panic(expected = "input dimension mismatch")]
+fn party_rejects_dim_mismatch() {
+    let mv = MvPolynomial::build_fermat(3, TiePolicy::OneBit);
+    let plan = std::sync::Arc::new(EvalPlan::new(&mv, 4, false));
+    let mut dealer = Dealer::new(mv.fp, 3);
+    let triples = dealer.gen_round(4, 3, plan.triples_needed());
+    let _ = Party::new(plan, 0, vec![1, 1], triples[0].clone()); // d=2 ≠ 4
+}
+
+/// A corrupted share (bit-flip by one user) must corrupt the output —
+/// i.e. the protocol has no silent self-healing that could mask bugs —
+/// while leaving other coordinates untouched (coordinate independence).
+#[test]
+fn share_corruption_is_coordinate_local() {
+    let n = 5;
+    let d = 8;
+    let mut rng = Xoshiro256pp::seed_from_u64(12);
+    let signs: Vec<Vec<i8>> =
+        (0..n).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect();
+    let clean = secure_group_vote(&signs, TiePolicy::OneBit, false, 5);
+    // corrupt user 2's input on coordinate 3 (flip the sign)
+    let mut bad = signs.clone();
+    bad[2][3] = -bad[2][3];
+    let dirty = secure_group_vote(&bad, TiePolicy::OneBit, false, 5);
+    for j in 0..d {
+        if j == 3 {
+            continue; // may or may not flip the vote depending on margin
+        }
+        assert_eq!(clean.votes[j], dirty.votes[j], "coordinate {j} leaked across");
+    }
+}
+
+/// Partition + inter-group vote associativity: permuting users within a
+/// subgroup never changes the outcome; permuting across subgroups can.
+#[test]
+fn within_group_permutation_invariance() {
+    forall("within-group permutation invariance", 25, |g| {
+        let ell = g.usize_range(2, 4);
+        let n1 = g.usize_range(2, 4);
+        let n = ell * n1;
+        let d = g.usize_range(1, 6);
+        let cfg = HiSafeConfig::hierarchical(n, ell, TiePolicy::OneBit);
+        let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+        let base = run_sync(&signs, cfg, 1).global_vote;
+        // swap two users inside group 0
+        let mut perm = signs.clone();
+        perm.swap(0, n1 - 1);
+        prop_assert_eq!(run_sync(&perm, cfg, 2).global_vote, base);
+        Ok(())
+    });
+}
+
+/// Tie-policy matrix (Section III-E): A-2/B-2 produce 0 votes at global
+/// ties; A-1/B-1 never produce 0.
+#[test]
+fn tie_policy_matrix_outputs() {
+    let signs: Vec<Vec<i8>> = vec![vec![1], vec![-1], vec![1], vec![-1]];
+    for intra in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+        for inter in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+            let cfg = HiSafeConfig { n: 4, ell: 2, intra, inter, sparse: false };
+            let out = run_sync(&signs, cfg, 3);
+            let has_zero = out.global_vote.iter().any(|&v| v == 0);
+            if inter == TiePolicy::OneBit {
+                assert!(!has_zero, "{}", cfg.label());
+                assert!(cfg.signsgd_compatible());
+            } else {
+                assert!(!cfg.signsgd_compatible());
+            }
+        }
+    }
+}
+
+/// The schedule's triple budget equals the dealer's Table-V accounting.
+#[test]
+fn triple_budget_matches_schedule() {
+    forall("triples = schedule.mults", 40, |g| {
+        let n1 = g.usize_range(2, 12);
+        let policy = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+        let mv = MvPolynomial::build_fermat(n1, policy);
+        let plan = EvalPlan::new(&mv, 1, false);
+        let sched = PowerSchedule::full(mv.degree());
+        prop_assert_eq!(plan.triples_needed(), sched.mults());
+        Ok(())
+    });
+}
+
+/// Field/modulus invariants across the entire sweep range.
+#[test]
+fn moduli_odd_primes_above_group_size() {
+    for n in 2..=128usize {
+        let fp = field_for_group(n);
+        assert!(fp.modulus() > n as u64);
+        assert!(fp.modulus() % 2 == 1);
+        assert_eq!(fp.modulus(), next_prime(n as u64));
+    }
+}
+
+/// partition() composes with plain votes exactly like run_sync's grouping.
+#[test]
+fn partition_grouping_consistency() {
+    forall("partition ↔ run_sync grouping", 20, |g| {
+        let ell = g.usize_range(1, 5);
+        let n1 = g.usize_range(2, 5);
+        let n = ell * n1;
+        let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(3)).collect();
+        let cfg = HiSafeConfig::hierarchical(n, ell, TiePolicy::OneBit);
+        let out = run_sync(&signs, cfg, g.u64());
+        // recompute subgroup votes from the partition directly
+        for (gi, members) in partition(n, ell).iter().enumerate() {
+            let group: Vec<Vec<i8>> = members.iter().map(|&i| signs[i].clone()).collect();
+            prop_assert_eq!(
+                &out.subgroup_votes[gi],
+                &plain_group_vote(&group, TiePolicy::OneBit),
+                "group {gi}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Cost model exactly matches the paper for every n₁ ≤ 6 row of Tables
+/// VIII/IX (the rows all optimal configurations use).
+#[test]
+fn paper_rows_small_n1_match_exactly() {
+    for row in cost::paper_tables() {
+        if row.n % row.ell != 0 {
+            continue;
+        }
+        let n1 = row.n / row.ell;
+        if n1 > 6 {
+            continue;
+        }
+        // skip the two rows that violate the paper's OWN formulas
+        // (n=15 ℓ=3: C_T ≠ ℓ·C_u; n=30 ℓ=2: C_u ≠ R·⌈log p⌉) — audited in
+        // the tables789_comm_costs bench and EXPERIMENTS.md.
+        if row.c_u != (row.r as u64) * row.log_p1 as u64
+            || row.c_t != row.ell as u64 * row.c_u
+        {
+            continue;
+        }
+        let c = cost::config_cost(row.n, row.ell, TiePolicy::OneBit, false);
+        assert_eq!(c.group.openings, row.r, "R at n={} ℓ={}", row.n, row.ell);
+        assert_eq!(c.group.c_u_bits, row.c_u, "C_u at n={} ℓ={}", row.n, row.ell);
+        assert_eq!(c.c_t_bits, row.c_t, "C_T at n={} ℓ={}", row.n, row.ell);
+    }
+}
+
+/// Sum-type sanity of the whole stack on a model-sized vector.
+#[test]
+fn model_dim_round_smoke() {
+    let d = 7850;
+    let mut rng = Xoshiro256pp::seed_from_u64(31);
+    let signs: Vec<Vec<i8>> =
+        (0..12).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect();
+    let cfg = HiSafeConfig::hierarchical(12, 4, TiePolicy::OneBit);
+    let out = run_sync(&signs, cfg, 77);
+    assert_eq!(out.global_vote.len(), d);
+    assert_eq!(out.stats.c_u_bits(), 12 * d as u64); // n₁=3 → 12 bits/coord
+    assert!(out.global_vote.iter().all(|&v| v == 1 || v == -1));
+}
