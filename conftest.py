@@ -1,7 +1,52 @@
 """Repo-root pytest config: make `pytest python/tests/` work from the root
-(the compile package lives under python/)."""
+(the compile package lives under python/), and skip — rather than fail —
+test modules whose optional dependencies (jax, hypothesis) are absent.
+The CI python job relies on this: a CPU-only runner without JAX must
+still exit green (python/tests/test_env_gating.py is dependency-free and
+guarantees a non-empty collection, since pytest exits 5 on zero tests).
 
+Gating is derived from each test module's imports rather than a
+hand-maintained list, so future JAX/hypothesis test files are covered
+automatically.
+"""
+
+import glob
+import importlib.util
 import os
+import re
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))
+_ROOT = os.path.dirname(__file__)
+sys.path.insert(0, os.path.join(_ROOT, "python"))
+
+
+def _have(mod: str) -> bool:
+    try:
+        return importlib.util.find_spec(mod) is not None
+    except (ImportError, ValueError):
+        return False
+
+
+def _needs(src: str, mod: str) -> bool:
+    return re.search(rf"^\s*(import|from)\s+{mod}\b", src, re.M) is not None
+
+
+def _gated_modules():
+    """Test modules (conftest-relative paths) whose imports are missing."""
+    ignored = []
+    for path in sorted(glob.glob(os.path.join(_ROOT, "python", "tests", "test_*.py"))):
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        # `compile` (python/compile) is the in-repo JAX/Pallas package:
+        # importing it pulls in jax transitively.
+        needs_jax = _needs(src, "jax") or _needs(src, "compile")
+        missing = (needs_jax and not _have("jax")) or (
+            _needs(src, "hypothesis") and not _have("hypothesis")
+        )
+        if missing:
+            ignored.append(os.path.relpath(path, _ROOT))
+    return ignored
+
+
+# Modules ignored at collection time (paths relative to this conftest).
+collect_ignore = _gated_modules()

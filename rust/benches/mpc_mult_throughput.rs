@@ -5,6 +5,7 @@
 //! dimension under 50 ms.
 
 use hisafe::beaver::Dealer;
+use hisafe::engine::RoundEngine;
 use hisafe::field::Fp;
 use hisafe::mpc::secure_group_vote;
 use hisafe::poly::TiePolicy;
@@ -105,5 +106,37 @@ fn main() {
     assert!(
         hier.median.as_secs_f64() < 0.25,
         "hierarchical round too slow for the perf target"
+    );
+
+    section("batched RoundEngine vs per-call run_sync (n=24, l=8, d=25,450)");
+    // Apples to apples: both paths deal triples inline per round (the
+    // engine with batch_rounds = 1); the engine's win is amortized
+    // plan/polynomial setup, SoA chunking with lazy reduction, no
+    // per-message allocation, and span-parallel party share computation.
+    let cfg = HiSafeConfig::hierarchical(24, 8, TiePolicy::OneBit);
+    let unbatched = b.bench("per-call run_sync (fresh plan + dealer each round)", || {
+        seed += 1;
+        run_sync(&signs, cfg, seed).global_vote[0]
+    });
+    let mut engine = RoundEngine::new(cfg, d_model, 42);
+    let batched = b.bench("RoundEngine::run_round (amortized, inline dealing)", || {
+        engine.run_round(&signs).global_vote[0]
+    });
+    // Pool-amortized dealing: triples provisioned 4 rounds at a time
+    // (≈ 120 MB pooled at this d — the memory/amortization trade-off).
+    let mut engine_pooled = RoundEngine::new(cfg, d_model, 43).with_batch_rounds(4);
+    let online = b.bench("RoundEngine::run_round (pool batch = 4 rounds)", || {
+        engine_pooled.run_round(&signs).global_vote[0]
+    });
+    let speedup = unbatched.median.as_secs_f64() / batched.median.as_secs_f64();
+    println!(
+        "\nbatched-vs-unbatched: {speedup:.2}x  (engine {:.2} ms vs run_sync {:.2} ms; pool-amortized {:.2} ms)",
+        batched.median.as_secs_f64() * 1e3,
+        unbatched.median.as_secs_f64() * 1e3,
+        online.median.as_secs_f64() * 1e3
+    );
+    assert!(
+        speedup > 1.0,
+        "batched engine must beat the per-call path (got {speedup:.2}x)"
     );
 }

@@ -157,8 +157,8 @@ mod tests {
     use super::*;
     use crate::mpc::plain_group_vote;
     use crate::poly::TiePolicy;
+    use crate::prop_assert_eq;
     use crate::util::prop::forall;
-    use crate::{prop_assert, prop_assert_eq};
 
     #[test]
     fn masked_sum_equals_plain_sum() {

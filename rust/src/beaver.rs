@@ -123,6 +123,37 @@ impl TripleStore {
         &self.triples[idx]
     }
 
+    /// Take `k` fresh triples at once — the round-batched consumption path
+    /// of [`crate::engine::RoundEngine`]: one bounds check per round
+    /// instead of one per multiplication, and the returned slice can be
+    /// shared read-only across the engine's worker threads. Panics if the
+    /// pool cannot cover the request (same freshness audit as [`take`]).
+    ///
+    /// [`take`]: TripleStore::take
+    pub fn take_many(&mut self, k: usize) -> &[TripleShare] {
+        assert!(
+            self.next + k <= self.triples.len(),
+            "TripleStore exhausted: {} triples, requested {}..{}",
+            self.triples.len(),
+            self.next + 1,
+            self.next + k
+        );
+        let start = self.next;
+        self.next += k;
+        &self.triples[start..self.next]
+    }
+
+    /// Add freshly dealt triples to the pool, dropping the consumed prefix
+    /// first so a long-lived engine's memory stays bounded by
+    /// `remaining + new` rather than growing with protocol lifetime.
+    pub fn refill(&mut self, fresh: Vec<TripleShare>) {
+        if self.next > 0 {
+            self.triples.drain(..self.next);
+            self.next = 0;
+        }
+        self.triples.extend(fresh);
+    }
+
     pub fn consumed(&self) -> usize {
         self.next
     }
@@ -136,9 +167,9 @@ impl TripleStore {
 mod tests {
     use super::*;
     use crate::field::next_prime;
+    use crate::prop_assert_eq;
     use crate::sharing::reconstruct_vec;
     use crate::util::prop::forall;
-    use crate::{prop_assert, prop_assert_eq};
 
     #[test]
     fn triples_satisfy_c_eq_ab() {
@@ -189,6 +220,38 @@ mod tests {
         store.take();
         assert_eq!(store.consumed(), 2);
         assert_eq!(store.remaining(), 0);
+    }
+
+    #[test]
+    fn take_many_and_refill_preserve_freshness() {
+        let fp = Fp::new(5);
+        let mut dealer = Dealer::new(fp, 9);
+        let mut shares = dealer.gen_round(4, 3, 3);
+        let party0 = shares.remove(0);
+        let original_third = party0[2].clone();
+        let mut store = TripleStore::new(party0);
+        let first = store.take_many(2);
+        assert_eq!(first.len(), 2);
+        assert_eq!(store.remaining(), 1);
+        // refill compacts the consumed prefix and appends fresh triples
+        let mut more = dealer.gen_round(4, 3, 2);
+        store.refill(more.remove(0));
+        assert_eq!(store.consumed(), 0);
+        assert_eq!(store.remaining(), 3);
+        // the un-consumed triple survives the compaction, in order
+        let next = store.take_many(1);
+        assert_eq!(next[0].a, original_third.a);
+        assert_eq!(next[0].c, original_third.c);
+    }
+
+    #[test]
+    #[should_panic(expected = "TripleStore exhausted")]
+    fn take_many_panics_when_overdrawn() {
+        let fp = Fp::new(5);
+        let mut dealer = Dealer::new(fp, 7);
+        let mut shares = dealer.gen_round(4, 3, 2);
+        let mut store = TripleStore::new(shares.remove(0));
+        store.take_many(3);
     }
 
     #[test]

@@ -261,9 +261,9 @@ pub fn paper_table7() -> Vec<(usize, usize, usize, u32, usize, u64, f64, u64, f6
 mod tests {
     use super::*;
     use crate::mpc::secure_group_vote;
+    use crate::prop_assert_eq;
     use crate::protocol::{run_sync, HiSafeConfig};
     use crate::util::prop::forall;
-    use crate::{prop_assert, prop_assert_eq};
 
     #[test]
     fn n1_3_matches_paper_exactly() {

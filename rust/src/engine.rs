@@ -1,0 +1,505 @@
+//! Batched secure-aggregation engine — the round-amortized hot path.
+//!
+//! [`crate::mpc`] models Algorithm 1 faithfully as message-passing state
+//! machines: every multiplication materializes per-party masked-pair
+//! vectors, every subround allocates uplink/broadcast messages, and every
+//! FL round rebuilds the polynomial, the plan, and a fresh dealer. That is
+//! the right shape for protocol tests and the threaded coordinator, but it
+//! wastes most of its time on allocation and message plumbing when the
+//! same server drives thousands of aggregation rounds over a model-sized
+//! `d` (the ROADMAP "heavy traffic" regime).
+//!
+//! [`RoundEngine`] executes the *same arithmetic* (share-for-share: it
+//! reuses [`Fp::beaver_combine_into`] and the schedule from
+//! [`EvalPlan`]) with a throughput-oriented layout:
+//!
+//! * **Amortized setup** — polynomial, power schedule and [`EvalPlan`] are
+//!   built once per engine, not once per round.
+//! * **Pre-provisioned triple pool** — one streaming [`Dealer`] per
+//!   subgroup fills per-party [`TripleStore`]s; rounds consume with
+//!   [`TripleStore::take_many`] (one bounds check per round) and the pool
+//!   refills in configurable round batches, so offline cost amortizes and
+//!   memory stays bounded.
+//! * **Structure-of-arrays chunking** — all `d` coordinates stream through
+//!   cache-sized lane chunks; openings `δ, ε` are accumulated directly
+//!   from the share matrix ([`Fp::vec_sub_add_raw`], raw with one final
+//!   reduction) instead of materializing each party's masked-difference
+//!   vectors, and no per-message allocation happens on the round path.
+//! * **Parallel party-share computation** — at model-sized `d` the
+//!   coordinate range splits across `std::thread::scope` workers (each
+//!   owning a disjoint span of every party's shares), bit-identical to the
+//!   sequential path because the protocol is coordinate-local.
+//!
+//! `rust/tests/engine_props.rs` asserts the engine's votes are identical
+//! to [`crate::mpc::plain_group_vote`] / [`crate::mpc::secure_group_vote`]
+//! across random `n`, `d`, tie policies and chunk sizes; the
+//! `mpc_mult_throughput` bench measures the batched-vs-per-call speedup.
+
+use std::sync::Arc;
+
+use crate::beaver::{Dealer, TripleShare, TripleStore};
+use crate::field::Fp;
+use crate::metrics::CommStats;
+use crate::mpc::EvalPlan;
+use crate::poly::MvPolynomial;
+use crate::protocol::{inter_group_vote, partition, HiSafeConfig};
+
+/// Lane-chunk size (u64 lanes). With `max_power + 1` power rows per party
+/// and `n₁ ≤ 6` in every optimal configuration, one chunk's working set
+/// stays well inside L2.
+const DEFAULT_CHUNK: usize = 2048;
+
+/// Minimum model dimension before span threading pays for spawn cost.
+const PAR_MIN_D: usize = 8192;
+
+/// Cap on span workers (beyond this, memory bandwidth dominates).
+const MAX_THREADS: usize = 8;
+
+/// Outcome of one engine round — the trainer-facing subset of
+/// [`crate::protocol::RoundOutcome`] (no transcripts: the engine never
+/// materializes server views; use the mpc path for security tests).
+#[derive(Debug)]
+pub struct EngineOutcome {
+    /// Global vote per coordinate (`{−1,+1}`, or 0 under inter TwoBit).
+    pub global_vote: Vec<i8>,
+    /// Subgroup votes `s_j` (the Theorem-2 leakage).
+    pub subgroup_votes: Vec<Vec<i8>>,
+    /// Analytic communication counters — equal, field element for field
+    /// element, to the measured counters of the message-passing path.
+    pub stats: CommStats,
+}
+
+/// Reusable, round-amortized Hi-SAFE aggregation engine for one fixed
+/// `(HiSafeConfig, d)` workload.
+pub struct RoundEngine {
+    cfg: HiSafeConfig,
+    d: usize,
+    plan: Arc<EvalPlan>,
+    /// One streaming dealer per subgroup (seeds mirror `run_sync`'s
+    /// per-group seed derivation so subgroups stay independent).
+    dealers: Vec<Dealer>,
+    /// `pools[group][party]` — pre-provisioned Beaver triples.
+    pools: Vec<Vec<TripleStore>>,
+    /// Rounds of triples generated per refill.
+    batch_rounds: usize,
+    chunk: usize,
+    /// Rounds executed so far.
+    pub rounds_run: u64,
+}
+
+impl RoundEngine {
+    /// Build an engine for `cfg` over `d`-coordinate votes. `seed` drives
+    /// all offline randomness (triple generation), one independent stream
+    /// per subgroup.
+    pub fn new(cfg: HiSafeConfig, d: usize, seed: u64) -> RoundEngine {
+        let n1 = cfg.n1();
+        let mv = MvPolynomial::build_fermat(n1, cfg.intra);
+        let plan = Arc::new(EvalPlan::new(&mv, d, cfg.sparse));
+        let dealers: Vec<Dealer> = (0..cfg.ell)
+            .map(|g| {
+                Dealer::new(plan.fp, seed ^ (g as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+            })
+            .collect();
+        let pools: Vec<Vec<TripleStore>> = (0..cfg.ell)
+            .map(|_| (0..n1).map(|_| TripleStore::new(Vec::new())).collect())
+            .collect();
+        RoundEngine {
+            cfg,
+            d,
+            plan,
+            dealers,
+            pools,
+            batch_rounds: 1,
+            chunk: DEFAULT_CHUNK,
+            rounds_run: 0,
+        }
+    }
+
+    /// Override the SoA lane-chunk size (tests sweep this to prove chunk
+    /// invariance; benches tune it).
+    pub fn with_chunk(mut self, chunk: usize) -> RoundEngine {
+        assert!(chunk >= 1, "chunk must be ≥ 1");
+        self.chunk = chunk;
+        self
+    }
+
+    /// Refill the triple pool `rounds` rounds at a time (default 1).
+    pub fn with_batch_rounds(mut self, rounds: usize) -> RoundEngine {
+        assert!(rounds >= 1, "batch must be ≥ 1");
+        self.batch_rounds = rounds;
+        self
+    }
+
+    /// The evaluation plan the engine executes (schedule, coefficients).
+    pub fn plan(&self) -> &EvalPlan {
+        &self.plan
+    }
+
+    /// Rounds' worth of triples currently pooled (min across groups).
+    pub fn provisioned_rounds(&self) -> usize {
+        let mults = self.plan.triples_needed();
+        if mults == 0 {
+            return usize::MAX;
+        }
+        self.pools
+            .iter()
+            .map(|g| g[0].remaining() / mults)
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Explicitly pre-provision `rounds` rounds of triples now — benches
+    /// use this to move the offline phase out of the measured loop (the
+    /// paper's offline/online split, Table V).
+    pub fn provision(&mut self, rounds: usize) {
+        let mults = self.plan.triples_needed();
+        if mults == 0 {
+            return;
+        }
+        let n1 = self.cfg.n1();
+        let d = self.d;
+        for (dealer, pool) in self.dealers.iter_mut().zip(self.pools.iter_mut()) {
+            deal_group_rounds(dealer, pool, d, n1, mults, rounds);
+        }
+    }
+
+    /// Top up any group whose pool cannot cover one round.
+    fn ensure_provisioned(&mut self) {
+        let mults = self.plan.triples_needed();
+        if mults == 0 {
+            return;
+        }
+        let n1 = self.cfg.n1();
+        let d = self.d;
+        let batch = self.batch_rounds;
+        for (dealer, pool) in self.dealers.iter_mut().zip(self.pools.iter_mut()) {
+            if pool[0].remaining() >= mults {
+                continue;
+            }
+            deal_group_rounds(dealer, pool, d, n1, mults, batch);
+        }
+    }
+
+    /// Execute one Hi-SAFE aggregation round. `signs[i]` is user `i`'s ±1
+    /// sign-gradient vector; users are partitioned into subgroups exactly
+    /// like [`crate::protocol::run_sync`].
+    pub fn run_round(&mut self, signs: &[Vec<i8>]) -> EngineOutcome {
+        assert_eq!(signs.len(), self.cfg.n, "need exactly n sign vectors");
+        for (i, s) in signs.iter().enumerate() {
+            assert_eq!(s.len(), self.d, "user {i} dimension mismatch");
+        }
+        self.ensure_provisioned();
+
+        let fp = self.plan.fp;
+        let d = self.d;
+        let chunk = self.chunk;
+        let groups = partition(self.cfg.n, self.cfg.ell);
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let threads = if d >= PAR_MIN_D && cores > 1 { cores.min(MAX_THREADS) } else { 1 };
+
+        let plan = Arc::clone(&self.plan);
+        let mut subgroup_votes = Vec::with_capacity(groups.len());
+        for (g, members) in groups.iter().enumerate() {
+            let stores = &mut self.pools[g];
+            subgroup_votes.push(eval_group(
+                fp, &plan, members, signs, stores, d, chunk, threads,
+            ));
+        }
+        let global_vote = inter_group_vote(&subgroup_votes, self.cfg.inter);
+
+        // Comm accounting, identical to the measured per-message counters:
+        // 2 openings (δ-share, ε-share) × d lanes per multiplication per
+        // user uplink; the server broadcasts the same volume once per group.
+        let mults = plan.triples_needed() as u64;
+        let ell = self.cfg.ell as u64;
+        let n1 = self.cfg.n1() as u64;
+        let per_mult_elems = 2 * d as u64;
+        let stats = CommStats {
+            uplink_elems_total: ell * n1 * mults * per_mult_elems,
+            uplink_elems_per_user: mults * per_mult_elems,
+            downlink_elems: ell * mults * per_mult_elems,
+            elem_bits: fp.bits(),
+            subrounds: plan.schedule.depth() as u64,
+            mults: ell * mults,
+            vote_bits: self.cfg.inter.downlink_bits(),
+        };
+
+        self.rounds_run += 1;
+        EngineOutcome { global_vote, subgroup_votes, stats }
+    }
+}
+
+/// Deal `rounds` rounds of triples for one subgroup into its per-party
+/// pools — the single dealing path shared by explicit provisioning and
+/// the lazy run_round refill.
+fn deal_group_rounds(
+    dealer: &mut Dealer,
+    pool: &mut [TripleStore],
+    d: usize,
+    n1: usize,
+    mults: usize,
+    rounds: usize,
+) {
+    for _ in 0..rounds {
+        let round = dealer.gen_round(d, n1, mults);
+        for (party, fresh) in round.into_iter().enumerate() {
+            pool[party].refill(fresh);
+        }
+    }
+}
+
+/// One subgroup's secure vote over its full coordinate range, consuming
+/// this round's triples from `stores` and splitting the range across span
+/// workers when profitable.
+fn eval_group(
+    fp: Fp,
+    plan: &Arc<EvalPlan>,
+    members: &[usize],
+    signs: &[Vec<i8>],
+    stores: &mut [TripleStore],
+    d: usize,
+    chunk: usize,
+    threads: usize,
+) -> Vec<i8> {
+    let mults = plan.triples_needed();
+    let group_signs: Vec<&[i8]> = members.iter().map(|&u| signs[u].as_slice()).collect();
+    let triples: Vec<&[TripleShare]> =
+        stores.iter_mut().map(|s| s.take_many(mults)).collect();
+    let mut votes = vec![0i8; d];
+    if threads > 1 {
+        let span = d.div_ceil(threads);
+        std::thread::scope(|sc| {
+            let group_signs = &group_signs;
+            let triples = &triples;
+            let plan: &EvalPlan = plan;
+            for (si, vspan) in votes.chunks_mut(span).enumerate() {
+                sc.spawn(move || {
+                    eval_span(fp, plan, group_signs, triples, vspan, si * span, chunk)
+                });
+            }
+        });
+    } else {
+        eval_span(fp, plan, &group_signs, &triples, &mut votes, 0, chunk);
+    }
+    votes
+}
+
+/// Evaluate the majority-vote polynomial over the coordinate span
+/// `[base, base + votes.len())` in SoA lane chunks. Pure function of its
+/// inputs — spans never overlap, so span workers are deterministic.
+fn eval_span(
+    fp: Fp,
+    plan: &EvalPlan,
+    group_signs: &[&[i8]],
+    triples: &[&[TripleShare]],
+    votes: &mut [i8],
+    base: usize,
+    chunk: usize,
+) {
+    let n1 = group_signs.len();
+    let steps = &plan.schedule.steps;
+    let coeffs = &plan.coeffs;
+    let max_pow = plan.schedule.max_power.max(1);
+    // §Perf: same raw-accumulation headroom rule as Party::final_share.
+    let fused_final = fp.fused_headroom(coeffs.len() as u64 + 1);
+
+    // pow[k][party] — this span's share of x^k, one lane chunk at a time.
+    let mut pow: Vec<Vec<Vec<u64>>> = vec![vec![vec![0u64; chunk]; n1]; max_pow + 1];
+    let mut delta = vec![0u64; chunk];
+    let mut eps = vec![0u64; chunk];
+    let mut fin = vec![0u64; chunk];
+    let mut out = vec![0u64; chunk];
+
+    let span = votes.len();
+    let mut j0 = 0usize;
+    while j0 < span {
+        let c = chunk.min(span - j0);
+        let lo = base + j0;
+        let hi = lo + c;
+
+        // 1. field-encode the ±1 inputs: each user's sign vector IS its
+        //    additive share of the aggregate (no input-sharing round).
+        for (pi, s) in group_signs.iter().enumerate() {
+            for (lane, &sv) in pow[1][pi][..c].iter_mut().zip(&s[lo..hi]) {
+                *lane = fp.from_i64(sv as i64);
+            }
+        }
+
+        // 2. power schedule. Steps are dependency-ordered (operands always
+        //    have strictly lower depth), so one sequential pass is exact.
+        for (mi, step) in steps.iter().enumerate() {
+            // openings: δ = Σᵢ (⟦x^l⟧ᵢ − ⟦a⟧ᵢ), ε likewise — accumulated
+            // raw straight off the share matrix, reduced once per lane.
+            delta[..c].fill(0);
+            eps[..c].fill(0);
+            for pi in 0..n1 {
+                let t = &triples[pi][mi];
+                fp.vec_sub_add_raw(&mut delta[..c], &pow[step.left][pi][..c], &t.a[lo..hi]);
+                fp.vec_sub_add_raw(&mut eps[..c], &pow[step.right][pi][..c], &t.b[lo..hi]);
+            }
+            fp.vec_reduce_in_place(&mut delta[..c]);
+            fp.vec_reduce_in_place(&mut eps[..c]);
+            // recombination: party 0 adds the public δ·ε term.
+            for pi in 0..n1 {
+                let t = &triples[pi][mi];
+                fp.beaver_combine_into(
+                    &mut pow[step.target][pi][..c],
+                    &t.c[lo..hi],
+                    &t.a[lo..hi],
+                    &t.b[lo..hi],
+                    &delta[..c],
+                    &eps[..c],
+                    pi == 0,
+                );
+            }
+        }
+
+        // 3. final shares Σ_k coeff_k·⟦x^k⟧ᵢ (+ c₀ for party 0), summed
+        //    into F(x) = sign(x) per lane (Eq. 5).
+        out[..c].fill(0);
+        for pi in 0..n1 {
+            fin[..c].fill(0);
+            if pi == 0 && coeffs.first().copied().unwrap_or(0) != 0 {
+                fin[..c].fill(coeffs[0]);
+            }
+            for (k, &coeff) in coeffs.iter().enumerate().skip(1) {
+                if coeff == 0 {
+                    continue;
+                }
+                if fused_final {
+                    fp.vec_scale_add_raw(&mut fin[..c], coeff, &pow[k][pi][..c]);
+                } else {
+                    fp.vec_scale_add_assign(&mut fin[..c], coeff, &pow[k][pi][..c]);
+                }
+            }
+            fp.vec_reduce_in_place(&mut fin[..c]);
+            fp.vec_add_raw(&mut out[..c], &fin[..c]);
+        }
+        fp.vec_reduce_in_place(&mut out[..c]);
+        for (v, &x) in votes[j0..j0 + c].iter_mut().zip(&out[..c]) {
+            *v = fp.sign_of(x);
+        }
+        j0 += c;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::{plain_group_vote, secure_group_vote};
+    use crate::poly::TiePolicy;
+    use crate::protocol::{plain_hierarchical_vote, run_sync};
+    use crate::util::rng::{Rng, Xoshiro256pp};
+
+    fn rand_signs(n: usize, d: usize, seed: u64) -> Vec<Vec<i8>> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect()
+    }
+
+    #[test]
+    fn flat_engine_equals_plain_and_secure() {
+        for n in [1usize, 2, 3, 4, 6, 9] {
+            for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+                let d = 17;
+                let signs = rand_signs(n, d, n as u64 * 31 + 7);
+                let cfg = HiSafeConfig::flat(n, policy);
+                let mut engine = RoundEngine::new(cfg, d, 5);
+                let got = engine.run_round(&signs);
+                let plain = plain_group_vote(&signs, policy);
+                assert_eq!(got.global_vote, plain, "n={n} {policy:?} vs plain");
+                let secure = secure_group_vote(&signs, policy, false, 5);
+                assert_eq!(got.global_vote, secure.votes, "n={n} {policy:?} vs mpc");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_engine_equals_plain_hierarchy() {
+        let cfg = HiSafeConfig::hierarchical(12, 4, TiePolicy::TwoBit);
+        let signs = rand_signs(12, 9, 3);
+        let mut engine = RoundEngine::new(cfg, 9, 11);
+        let got = engine.run_round(&signs);
+        assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+        assert_eq!(got.subgroup_votes.len(), 4);
+    }
+
+    #[test]
+    fn chunk_size_is_observationally_invisible() {
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let signs = rand_signs(6, 23, 9);
+        let baseline = RoundEngine::new(cfg, 23, 4).run_round(&signs).global_vote;
+        for chunk in [1usize, 3, 8, 64] {
+            let got = RoundEngine::new(cfg, 23, 4)
+                .with_chunk(chunk)
+                .run_round(&signs)
+                .global_vote;
+            assert_eq!(got, baseline, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn pool_amortizes_across_rounds() {
+        let cfg = HiSafeConfig::flat(3, TiePolicy::OneBit);
+        let mut engine = RoundEngine::new(cfg, 8, 2).with_batch_rounds(4);
+        assert_eq!(engine.provisioned_rounds(), 0);
+        for r in 0..6u64 {
+            let signs = rand_signs(3, 8, 100 + r);
+            let got = engine.run_round(&signs);
+            assert_eq!(
+                got.global_vote,
+                plain_group_vote(&signs, TiePolicy::OneBit),
+                "round {r}"
+            );
+        }
+        assert_eq!(engine.rounds_run, 6);
+        // 6 rounds over batches of 4 → 8 rounds dealt, 2 still pooled
+        assert_eq!(engine.provisioned_rounds(), 2);
+    }
+
+    #[test]
+    fn explicit_provision_feeds_rounds() {
+        let cfg = HiSafeConfig::hierarchical(8, 2, TiePolicy::OneBit);
+        let mut engine = RoundEngine::new(cfg, 4, 13);
+        engine.provision(3);
+        assert_eq!(engine.provisioned_rounds(), 3);
+        let signs = rand_signs(8, 4, 21);
+        let got = engine.run_round(&signs);
+        assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+        assert_eq!(engine.provisioned_rounds(), 2);
+    }
+
+    #[test]
+    fn stats_match_message_passing_path() {
+        let cfg = HiSafeConfig::hierarchical(12, 4, TiePolicy::OneBit);
+        let signs = rand_signs(12, 5, 17);
+        let mut engine = RoundEngine::new(cfg, 5, 23);
+        let got = engine.run_round(&signs);
+        let reference = run_sync(&signs, cfg, 23);
+        assert_eq!(got.stats.c_u_bits(), reference.stats.c_u_bits());
+        assert_eq!(got.stats.c_t_bits(), reference.stats.c_t_bits());
+        assert_eq!(got.stats.c_t_paper_bits(), reference.stats.c_t_paper_bits());
+        assert_eq!(got.stats.subrounds, reference.stats.subrounds);
+        assert_eq!(got.stats.mults, reference.stats.mults);
+        assert_eq!(got.stats.vote_bits, reference.stats.vote_bits);
+    }
+
+    #[test]
+    fn span_parallel_path_matches_plain_at_large_d() {
+        // d above PAR_MIN_D exercises the scoped-thread span split on
+        // multi-core hosts (and the sequential path on single-core ones —
+        // both must produce the same votes).
+        let d = PAR_MIN_D + 137;
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let signs = rand_signs(6, d, 41);
+        let got = RoundEngine::new(cfg, d, 19).run_round(&signs);
+        assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+    }
+
+    #[test]
+    fn sparse_schedule_supported() {
+        let cfg = HiSafeConfig { sparse: true, ..HiSafeConfig::flat(5, TiePolicy::OneBit) };
+        let signs = rand_signs(5, 6, 29);
+        let got = RoundEngine::new(cfg, 6, 1).run_round(&signs);
+        assert_eq!(got.global_vote, plain_group_vote(&signs, TiePolicy::OneBit));
+    }
+}

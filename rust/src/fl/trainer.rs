@@ -12,9 +12,10 @@
 //! pure-rust models and the AOT-compiled JAX models.
 
 use crate::baselines::{dp_signsgd, masking};
+use crate::engine::RoundEngine;
 use crate::fl::data::Dataset;
 use crate::fl::model::{sign_vec, Model};
-use crate::protocol::{plain_group_vote_all, run_sync, HiSafeConfig};
+use crate::protocol::{plain_group_vote_all, HiSafeConfig};
 use crate::util::json::Json;
 use crate::util::rng::{ChaCha20Rng, Rng, Xoshiro256pp};
 
@@ -149,6 +150,14 @@ pub fn train<M: Model>(
     let mut select_rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0x5e1ec7);
     let mut batch_rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xba7c4);
     let mut dp_rng = ChaCha20Rng::seed_from_u64(cfg.seed ^ 0xd9);
+    // Secure aggregation runs through the batched RoundEngine: plan,
+    // polynomial, and the Beaver triple pool are built once and amortized
+    // across every round of the run (the dealer stream replaces run_sync's
+    // per-round reseeding; votes are identical either way).
+    let mut hisafe_engine: Option<RoundEngine> = match &agg {
+        Aggregator::HiSafe(hc) => Some(RoundEngine::new(*hc, d, cfg.seed ^ 0xa6_67e6)),
+        _ => None,
+    };
     let mut logs = Vec::with_capacity(cfg.rounds);
     let mut last_acc = 0.0f32;
     let mut total_uplink = 0u64;
@@ -177,9 +186,10 @@ pub fn train<M: Model>(
 
         // 3. aggregate into an update direction
         let (direction, uplink_bits_per_user): (Vec<f32>, u64) = match &agg {
-            Aggregator::HiSafe(hc) => {
+            Aggregator::HiSafe(_) => {
                 let signs: Vec<Vec<i8>> = grads.iter().map(|g| sign_vec(g)).collect();
-                let out = run_sync(&signs, *hc, cfg.seed ^ round as u64);
+                let engine = hisafe_engine.as_mut().expect("engine built for HiSafe");
+                let out = engine.run_round(&signs);
                 (
                     out.global_vote.iter().map(|&v| v as f32).collect(),
                     out.stats.c_u_bits(),

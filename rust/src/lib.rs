@@ -29,6 +29,7 @@ pub mod baselines;
 pub mod beaver;
 pub mod config;
 pub mod cost;
+pub mod engine;
 pub mod field;
 pub mod fl;
 pub mod metrics;
@@ -42,6 +43,7 @@ pub mod sharing;
 
 pub mod util;
 
+pub use engine::RoundEngine;
 pub use field::Fp;
 pub use poly::{MvPolynomial, TiePolicy};
 

@@ -181,45 +181,26 @@ impl Party {
 
     /// Absorb the server broadcast for a subround, deriving the new power
     /// shares: `⟦x^k⟧ᵢ = ⟦c⟧ᵢ + δ·⟦b⟧ᵢ + ε·⟦a⟧ᵢ (+ δ·ε for party 0)`.
+    ///
+    /// The recombination arithmetic lives in [`Fp::beaver_combine_into`]
+    /// (lazy-reduction fast path), shared with the batched
+    /// [`crate::engine::RoundEngine`] so both paths stay bit-identical.
     pub fn absorb(&mut self, bcast: &BroadcastMsg) {
         let fp = self.plan.fp;
-        // §Perf fused path: with p ≤ 131, c + δ·b + ε·a (+ δ·ε) < 4p² fits
-        // raw in u64, so accumulate unreduced and Barrett-reduce ONCE per
-        // lane (3–4× fewer reductions than the term-by-term path).
-        let fused = fp.fused_headroom(4);
         for opening in &bcast.openings {
             let step = self.plan.schedule.steps[opening.mult_idx];
             let t = &self.triples[opening.mult_idx];
             let mut share = vec![0u64; self.plan.d];
-            if fused {
-                if self.id == 0 {
-                    for j in 0..self.plan.d {
-                        let raw = t.c[j]
-                            + opening.delta[j] * t.b[j]
-                            + opening.eps[j] * t.a[j]
-                            + opening.delta[j] * opening.eps[j];
-                        share[j] = fp.reduce(raw);
-                    }
-                } else {
-                    for j in 0..self.plan.d {
-                        let raw = t.c[j]
-                            + opening.delta[j] * t.b[j]
-                            + opening.eps[j] * t.a[j];
-                        share[j] = fp.reduce(raw);
-                    }
-                }
-            } else {
-                for j in 0..self.plan.d {
-                    let mut v = t.c[j];
-                    v = fp.add(v, fp.mul(opening.delta[j], t.b[j]));
-                    v = fp.add(v, fp.mul(opening.eps[j], t.a[j]));
-                    if self.id == 0 {
-                        // exactly one party adds the public δ·ε term
-                        v = fp.add(v, fp.mul(opening.delta[j], opening.eps[j]));
-                    }
-                    share[j] = v;
-                }
-            }
+            // exactly one party (id 0) adds the public δ·ε term
+            fp.beaver_combine_into(
+                &mut share,
+                &t.c,
+                &t.a,
+                &t.b,
+                &opening.delta,
+                &opening.eps,
+                self.id == 0,
+            );
             self.powers[step.target] = Some(share);
         }
     }
@@ -444,8 +425,8 @@ pub fn plain_group_vote(signs: &[Vec<i8>], policy: TiePolicy) -> Vec<i8> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop_assert_eq;
     use crate::util::prop::forall;
-    use crate::{prop_assert, prop_assert_eq};
 
     #[test]
     fn secure_vote_equals_plain_vote_property() {

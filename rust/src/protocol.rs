@@ -147,6 +147,9 @@ pub fn run_sync(signs: &[Vec<i8>], cfg: HiSafeConfig, seed: u64) -> RoundOutcome
     };
     let outcomes: Vec<crate::mpc::GroupVoteOutcome> = if parallel {
         std::thread::scope(|scope| {
+            // share the closure by reference: a `move` closure would try to
+            // take `run_group` by value once per spawned thread
+            let run_group = &run_group;
             let handles: Vec<_> = groups
                 .iter()
                 .enumerate()
@@ -332,8 +335,8 @@ pub fn run_threaded(signs: &[Vec<i8>], cfg: HiSafeConfig, seed: u64) -> RoundOut
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop_assert_eq;
     use crate::util::prop::forall;
-    use crate::{prop_assert, prop_assert_eq};
 
     #[test]
     fn hierarchical_equals_plain_hierarchy() {

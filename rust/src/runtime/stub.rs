@@ -1,0 +1,162 @@
+//! Dependency-free stand-in for the PJRT runtime (default build).
+//!
+//! Mirrors the public surface of [`super::pjrt`] exactly — same type
+//! names, same constructor signatures — so every caller (examples,
+//! benches, integration tests) compiles without the `xla` crate. Every
+//! constructor returns [`RuntimeUnavailable`]; execution methods are
+//! unreachable because no value of these types can be built.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::fl::data::Dataset;
+use crate::fl::model::Model;
+
+/// Error returned by every stub constructor.
+#[derive(Debug, Clone)]
+pub struct RuntimeUnavailable(pub String);
+
+impl fmt::Display for RuntimeUnavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeUnavailable {}
+
+fn unavailable(what: &str) -> RuntimeUnavailable {
+    RuntimeUnavailable(format!(
+        "{what} requires the PJRT/XLA runtime: rebuild with \
+         `--features xla-runtime` (and the vendored `xla` + `anyhow` \
+         crates in rust/Cargo.toml)"
+    ))
+}
+
+type Result<T> = std::result::Result<T, RuntimeUnavailable>;
+
+/// Stub of the cached-executable PJRT runtime. Path helpers work (they
+/// are pure); client construction fails.
+pub struct Runtime {
+    dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn cpu(_artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        Err(unavailable("Runtime::cpu"))
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (stub)".to_string()
+    }
+
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    pub fn exec_f32(
+        &mut self,
+        _name: &str,
+        _inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn exec_i32(
+        &mut self,
+        _name: &str,
+        _inputs: &[(&[i32], &[i64])],
+    ) -> Result<Vec<Vec<i32>>> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+}
+
+/// Stub of the AOT-JAX-backed [`Model`]; construction always fails.
+pub struct JaxModel {
+    pub name: String,
+    pub param_dim: usize,
+    pub in_dim: usize,
+    pub n_classes: usize,
+    pub batch_size: usize,
+}
+
+impl JaxModel {
+    pub fn new(
+        _artifact_dir: impl AsRef<Path>,
+        name: &str,
+        _param_dim: usize,
+        _in_dim: usize,
+        _n_classes: usize,
+        _batch_size: usize,
+    ) -> Result<JaxModel> {
+        Err(unavailable(&format!("JaxModel::new(\"{name}\")")))
+    }
+}
+
+impl Model for JaxModel {
+    fn dim(&self) -> usize {
+        unreachable!("stub JaxModel cannot be constructed")
+    }
+
+    fn init_params(&self, _seed: u64) -> Vec<f32> {
+        unreachable!("stub JaxModel cannot be constructed")
+    }
+
+    fn loss_grad(
+        &self,
+        _params: &[f32],
+        _ds: &Dataset,
+        _batch: &[usize],
+    ) -> (f32, Vec<f32>) {
+        unreachable!("stub JaxModel cannot be constructed")
+    }
+
+    fn accuracy(&self, _params: &[f32], _ds: &Dataset) -> f32 {
+        unreachable!("stub JaxModel cannot be constructed")
+    }
+
+    fn name(&self) -> String {
+        unreachable!("stub JaxModel cannot be constructed")
+    }
+}
+
+/// Stub of the L1 Pallas majority-vote kernel loader.
+pub struct MvPolyKernel {
+    pub d: usize,
+    pub max_coeffs: usize,
+}
+
+impl MvPolyKernel {
+    pub fn new(
+        _artifact_dir: impl AsRef<Path>,
+        d: usize,
+        _max_coeffs: usize,
+    ) -> Result<MvPolyKernel> {
+        Err(unavailable(&format!("MvPolyKernel::new(d = {d})")))
+    }
+
+    pub fn eval(
+        &self,
+        _fp: crate::field::Fp,
+        _coeffs: &[u64],
+        _xs: &[u64],
+    ) -> Result<Vec<u64>> {
+        unreachable!("stub MvPolyKernel cannot be constructed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_error_with_guidance() {
+        let err = Runtime::cpu("artifacts").err().expect("stub must fail");
+        assert!(err.to_string().contains("xla-runtime"), "{err}");
+        assert!(JaxModel::new("artifacts", "mnist_linear", 7850, 784, 10, 100).is_err());
+        assert!(MvPolyKernel::new("artifacts", 1024, 32).is_err());
+    }
+}

@@ -194,8 +194,8 @@ pub fn shamir_group_vote(signs: &[Vec<i8>], policy: TiePolicy, seed: u64) -> Vec
 mod tests {
     use super::*;
     use crate::mpc::plain_group_vote;
+    use crate::prop_assert_eq;
     use crate::util::prop::forall;
-    use crate::{prop_assert, prop_assert_eq};
 
     #[test]
     fn share_reconstruct_roundtrip() {

@@ -233,12 +233,19 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
 // ------------------------------------------------------------- parsing
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {at}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub at: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     b: &'a [u8],

@@ -1,0 +1,129 @@
+//! Property tests pinning the batched [`RoundEngine`] to the reference
+//! paths: across random `n`, `d`, tie policies, schedules and chunk
+//! sizes, the engine's votes must be bit-identical to both the plaintext
+//! majority vote and the message-passing `secure_group_vote` /
+//! `run_sync` implementations.
+
+use hisafe::engine::RoundEngine;
+use hisafe::mpc::{plain_group_vote, secure_group_vote};
+use hisafe::poly::TiePolicy;
+use hisafe::prop_assert_eq;
+use hisafe::protocol::{plain_hierarchical_vote, run_sync, HiSafeConfig};
+use hisafe::util::prop::forall;
+
+#[test]
+fn engine_vote_equals_plain_and_secure_flat() {
+    forall("engine ≡ plain ≡ mpc (flat)", 50, |g| {
+        let n = g.usize_range(1, 12);
+        let d = g.usize_range(1, 48);
+        let policy = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+        let sparse = g.bool();
+        let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+        let cfg = HiSafeConfig { sparse, ..HiSafeConfig::flat(n, policy) };
+        let seed = g.u64();
+        let got = RoundEngine::new(cfg, d, seed).run_round(&signs);
+        let plain = plain_group_vote(&signs, policy);
+        prop_assert_eq!(&got.global_vote, &plain, "n={n} d={d} {policy:?} sparse={sparse}");
+        let mpc = secure_group_vote(&signs, policy, sparse, seed);
+        prop_assert_eq!(&got.global_vote, &mpc.votes, "engine vs mpc n={n} d={d}");
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_vote_equals_hierarchical_reference() {
+    forall("engine ≡ Eq. 8 (hierarchical)", 35, |g| {
+        let ell = g.usize_range(1, 4);
+        let n1 = g.usize_range(2, 6);
+        let n = ell * n1;
+        let d = g.usize_range(1, 24);
+        let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+        let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+        let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
+        let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+        let seed = g.u64();
+        let got = RoundEngine::new(cfg, d, seed).run_round(&signs);
+        prop_assert_eq!(
+            &got.global_vote,
+            &plain_hierarchical_vote(&signs, cfg),
+            "cfg={cfg:?}"
+        );
+        // per-subgroup votes match the reference protocol too
+        let reference = run_sync(&signs, cfg, seed);
+        prop_assert_eq!(&got.subgroup_votes, &reference.subgroup_votes, "cfg={cfg:?}");
+        prop_assert_eq!(got.stats.c_u_bits(), reference.stats.c_u_bits());
+        prop_assert_eq!(got.stats.subrounds, reference.stats.subrounds);
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_invariant_under_chunk_size_and_pool_batching() {
+    forall("engine chunk/pool invariance", 20, |g| {
+        let ell = g.usize_range(1, 3);
+        let n1 = g.usize_range(2, 5);
+        let n = ell * n1;
+        let d = g.usize_range(1, 40);
+        let cfg = HiSafeConfig::hierarchical(n, ell, TiePolicy::OneBit);
+        let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+        let plain = plain_hierarchical_vote(&signs, cfg);
+        for (chunk, batch) in [(1usize, 1usize), (3, 2), (7, 3), (4096, 1)] {
+            let mut engine = RoundEngine::new(cfg, d, g.u64())
+                .with_chunk(chunk)
+                .with_batch_rounds(batch);
+            let got = engine.run_round(&signs);
+            prop_assert_eq!(
+                &got.global_vote,
+                &plain,
+                "chunk={chunk} batch={batch} n={n} ell={ell} d={d}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_stays_correct_across_many_rounds_one_pool() {
+    // One engine, many rounds: the triple pool refills and every round's
+    // triples are fresh (a reuse bug would desync votes from plain MV).
+    forall("engine multi-round freshness", 12, |g| {
+        let n = g.usize_range(2, 8);
+        let d = g.usize_range(1, 16);
+        let cfg = HiSafeConfig::flat(n, TiePolicy::OneBit);
+        let mut engine =
+            RoundEngine::new(cfg, d, g.u64()).with_batch_rounds(g.usize_range(1, 4));
+        for round in 0..8 {
+            let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+            let got = engine.run_round(&signs);
+            prop_assert_eq!(
+                &got.global_vote,
+                &plain_group_vote(&signs, TiePolicy::OneBit),
+                "round {round} n={n} d={d}"
+            );
+        }
+        prop_assert_eq!(engine.rounds_run, 8);
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_exhaustive_small_patterns() {
+    // Exhaustive over every sign assignment for n ≤ 4, mirroring the mpc
+    // suite's strongest exact check.
+    for n in 1..=4usize {
+        for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+            for pattern in 0..(1u32 << n) {
+                let signs: Vec<Vec<i8>> = (0..n)
+                    .map(|i| vec![if pattern >> i & 1 == 1 { 1i8 } else { -1 }])
+                    .collect();
+                let cfg = HiSafeConfig::flat(n, policy);
+                let got = RoundEngine::new(cfg, 1, pattern as u64).run_round(&signs);
+                assert_eq!(
+                    got.global_vote,
+                    plain_group_vote(&signs, policy),
+                    "n={n} {policy:?} pattern={pattern:b}"
+                );
+            }
+        }
+    }
+}

@@ -6,12 +6,12 @@ use hisafe::cost;
 use hisafe::field::{field_for_group, next_prime};
 use hisafe::mpc::{plain_group_vote, secure_group_vote, EvalPlan, Party};
 use hisafe::poly::{MvPolynomial, PowerSchedule, TiePolicy};
+use hisafe::prop_assert_eq;
 use hisafe::protocol::{
     partition, plain_hierarchical_vote, run_sync, run_threaded, HiSafeConfig,
 };
 use hisafe::util::prop::forall;
 use hisafe::util::rng::{Rng, Xoshiro256pp};
-use hisafe::{prop_assert, prop_assert_eq};
 
 /// Exhaustive protocol correctness for n = 5..8, single coordinate, all
 /// 2^n sign patterns, both policies — the strongest correctness statement
