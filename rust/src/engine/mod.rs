@@ -1,0 +1,414 @@
+//! Batched secure-aggregation engines — the round-amortized hot path.
+//!
+//! [`crate::mpc`] models Algorithm 1 faithfully as message-passing state
+//! machines: every multiplication materializes per-party masked-pair
+//! vectors, every subround allocates uplink/broadcast messages, and every
+//! FL round rebuilds the polynomial, the plan, and a fresh dealer. That is
+//! the right shape for protocol tests and the threaded coordinator, but it
+//! wastes most of its time on allocation and message plumbing when the
+//! same server drives thousands of aggregation rounds over a model-sized
+//! `d` (the ROADMAP "heavy traffic" regime).
+//!
+//! This module executes the *same arithmetic* (share-for-share: it reuses
+//! [`crate::field::Fp::beaver_combine_into`] and the schedule from
+//! [`EvalPlan`]) with a throughput-oriented layout, split across four
+//! files:
+//!
+//! * `mod.rs` — [`RoundEngine`], the **sequential reference engine**:
+//!   amortized plan/polynomial setup, pre-provisioned triple pools
+//!   refilled synchronously on the round path, SoA lane-chunked
+//!   evaluation, per-round scoped span threads.
+//! * [`pool`] — [`pool::GroupPools`], the per-group/per-party triple
+//!   pools both engines consume, with party-aware round accounting (the
+//!   minimum across parties *and* groups; a divergent pool must surface
+//!   as "needs refill", never as a mid-round `take_many` panic).
+//! * [`workers`] — the shared span-evaluation kernel plus the
+//!   **persistent worker pool** (spawned once per engine; span jobs are
+//!   `'static` and results reassemble by slot index).
+//! * [`pipeline`] — [`PipelinedEngine`], the **pipelined round
+//!   scheduler**: a background provisioning stage deals round `r+1`'s
+//!   Beaver triples while round `r`'s online phase evaluates, with
+//!   double-buffered pools and an mpsc handoff channel. This is the
+//!   paper's offline/online split (Table V) realized as wall-clock
+//!   overlap, and the path `fl/trainer.rs` uses for multi-round training.
+//!
+//! **Offline/online overlap & determinism.** Subgroups are independent:
+//! group `g`'s dealer is seeded with
+//! [`crate::protocol::group_dealer_seed`] — the *same* derivation
+//! `run_sync` uses (rust/src/protocol.rs) — and only ever advances in
+//! whole-round steps, in round order. Dealing may therefore run on any
+//! thread at any wall-clock time: party `i` of group `g` still consumes
+//! exactly the triple stream it would have consumed synchronously.
+//! (`run_sync` reseeds a fresh dealer per call while the engines advance
+//! one long-lived stream, so triple-level alignment with a `run_sync`
+//! call holds for an engine's first round; later rounds are that same
+//! stream's continuation — `engine/pipeline.rs` pins the pipelined pools
+//! to the derivation share-for-share.) Votes are a stronger story:
+//! Beaver masks cancel exactly, so *any* fresh triples yield the same
+//! votes, and pipelined, sequential, and `run_sync` votes are
+//! bit-identical round after round (asserted across random configs by
+//! `rust/tests/engine_props.rs`).
+//!
+//! `rust/tests/engine_props.rs` also pins both engines' analytic
+//! [`CommStats`] to the *measured* counters of the message-passing path,
+//! field element for field element; the `mpc_mult_throughput` bench
+//! measures the batched-vs-per-call speedup and the pipelined overlap
+//! win at the paper's n=24/ℓ=8 operating point.
+
+mod pipeline;
+mod pool;
+mod workers;
+
+pub use pipeline::PipelinedEngine;
+
+use std::sync::Arc;
+
+use crate::beaver::Dealer;
+use crate::metrics::CommStats;
+use crate::mpc::EvalPlan;
+use crate::poly::MvPolynomial;
+use crate::protocol::{group_dealer_seed, inter_group_vote, partition, HiSafeConfig};
+
+use pool::GroupPools;
+
+/// Lane-chunk size (u64 lanes). With `max_power + 1` power rows per party
+/// and `n₁ ≤ 6` in every optimal configuration, one chunk's working set
+/// stays well inside L2.
+pub(crate) const DEFAULT_CHUNK: usize = 2048;
+
+/// Minimum model dimension before span splitting pays for its overhead
+/// (scoped-thread spawns on the sequential path, job handoffs on the
+/// pipelined one).
+pub(crate) const PAR_MIN_D: usize = 8192;
+
+/// Cap on span workers (beyond this, memory bandwidth dominates).
+pub(crate) const MAX_THREADS: usize = 8;
+
+/// Outcome of one engine round — the trainer-facing subset of
+/// [`crate::protocol::RoundOutcome`] (no transcripts: the engines never
+/// materialize server views; use the mpc path for security tests).
+#[derive(Debug)]
+pub struct EngineOutcome {
+    /// Global vote per coordinate (`{−1,+1}`, or 0 under inter TwoBit).
+    pub global_vote: Vec<i8>,
+    /// Subgroup votes `s_j` (the Theorem-2 leakage).
+    pub subgroup_votes: Vec<Vec<i8>>,
+    /// Analytic communication counters — equal, field element for field
+    /// element, to the measured counters of the message-passing path.
+    pub stats: CommStats,
+}
+
+/// Analytic per-round communication counters, shared by both engines:
+/// 2 openings (δ-share, ε-share) × d lanes per multiplication per user
+/// uplink; the server broadcasts the same volume once per group. Equal to
+/// the measured per-message counters of [`crate::protocol::run_sync`]
+/// (asserted field-for-field by `engine_props.rs`).
+pub(crate) fn analytic_stats(cfg: &HiSafeConfig, plan: &EvalPlan, d: usize) -> CommStats {
+    let mults = plan.triples_needed() as u64;
+    let ell = cfg.ell as u64;
+    let n1 = cfg.n1() as u64;
+    let per_mult_elems = 2 * d as u64;
+    CommStats {
+        uplink_elems_total: ell * n1 * mults * per_mult_elems,
+        uplink_elems_per_user: mults * per_mult_elems,
+        downlink_elems: ell * mults * per_mult_elems,
+        elem_bits: plan.fp.bits(),
+        subrounds: plan.schedule.depth() as u64,
+        mults: ell * mults,
+        vote_bits: cfg.inter.downlink_bits(),
+    }
+}
+
+/// Reusable, round-amortized Hi-SAFE aggregation engine for one fixed
+/// `(HiSafeConfig, d)` workload — the **sequential reference**: dealing
+/// happens synchronously on the round path whenever the pool runs dry,
+/// and span threads are scoped per round. [`PipelinedEngine`] is the
+/// scheduler that overlaps those phases; its votes are pinned
+/// bit-identical to this engine's.
+pub struct RoundEngine {
+    cfg: HiSafeConfig,
+    d: usize,
+    plan: Arc<EvalPlan>,
+    /// One streaming dealer per subgroup (seeds mirror `run_sync`'s
+    /// per-group seed derivation so subgroups stay independent).
+    dealers: Vec<Dealer>,
+    /// Pre-provisioned Beaver triples, one pool per party per subgroup.
+    pools: GroupPools,
+    /// Rounds of triples generated per refill.
+    batch_rounds: usize,
+    chunk: usize,
+    /// Rounds executed so far.
+    pub rounds_run: u64,
+}
+
+impl RoundEngine {
+    /// Build an engine for `cfg` over `d`-coordinate votes. `seed` drives
+    /// all offline randomness (triple generation), one independent stream
+    /// per subgroup.
+    pub fn new(cfg: HiSafeConfig, d: usize, seed: u64) -> RoundEngine {
+        let n1 = cfg.n1();
+        let mv = MvPolynomial::build_fermat(n1, cfg.intra);
+        let plan = Arc::new(EvalPlan::new(&mv, d, cfg.sparse));
+        let dealers: Vec<Dealer> = (0..cfg.ell)
+            .map(|g| Dealer::new(plan.fp, group_dealer_seed(seed, g)))
+            .collect();
+        RoundEngine {
+            cfg,
+            d,
+            plan,
+            dealers,
+            pools: GroupPools::new(cfg.ell, n1),
+            batch_rounds: 1,
+            chunk: DEFAULT_CHUNK,
+            rounds_run: 0,
+        }
+    }
+
+    /// Override the SoA lane-chunk size (tests sweep this to prove chunk
+    /// invariance; benches tune it).
+    pub fn with_chunk(mut self, chunk: usize) -> RoundEngine {
+        assert!(chunk >= 1, "chunk must be ≥ 1");
+        self.chunk = chunk;
+        self
+    }
+
+    /// Refill the triple pool `rounds` rounds at a time (default 1).
+    pub fn with_batch_rounds(mut self, rounds: usize) -> RoundEngine {
+        assert!(rounds >= 1, "batch must be ≥ 1");
+        self.batch_rounds = rounds;
+        self
+    }
+
+    /// The evaluation plan the engine executes (schedule, coefficients).
+    pub fn plan(&self) -> &EvalPlan {
+        &self.plan
+    }
+
+    /// Rounds' worth of triples currently pooled — the minimum across
+    /// groups *and parties*, so a divergent pool reports its worst
+    /// balance instead of party 0's.
+    pub fn provisioned_rounds(&self) -> usize {
+        self.pools.provisioned_rounds(self.plan.triples_needed())
+    }
+
+    /// Explicitly pre-provision `rounds` rounds of triples now — benches
+    /// use this to move the offline phase out of the measured loop (the
+    /// paper's offline/online split, Table V).
+    pub fn provision(&mut self, rounds: usize) {
+        let mults = self.plan.triples_needed();
+        if mults == 0 {
+            return;
+        }
+        let d = self.d;
+        for (g, dealer) in self.dealers.iter_mut().enumerate() {
+            self.pools.deal_into(g, dealer, d, mults, rounds);
+        }
+    }
+
+    /// Top up any group whose pool cannot cover one round for *every*
+    /// party (inspecting only party 0 — the pre-PR-2 behavior — let an
+    /// unbalanced pool panic in `take_many` mid-round).
+    fn ensure_provisioned(&mut self) {
+        let mults = self.plan.triples_needed();
+        if mults == 0 {
+            return;
+        }
+        let d = self.d;
+        let batch = self.batch_rounds;
+        for (g, dealer) in self.dealers.iter_mut().enumerate() {
+            if !self.pools.group_needs_refill(g, mults) {
+                continue;
+            }
+            self.pools.deal_into(g, dealer, d, mults, batch);
+        }
+    }
+
+    /// Execute one Hi-SAFE aggregation round. `signs[i]` is user `i`'s ±1
+    /// sign-gradient vector; users are partitioned into subgroups exactly
+    /// like [`crate::protocol::run_sync`].
+    pub fn run_round(&mut self, signs: &[Vec<i8>]) -> EngineOutcome {
+        assert_eq!(signs.len(), self.cfg.n, "need exactly n sign vectors");
+        for (i, s) in signs.iter().enumerate() {
+            assert_eq!(s.len(), self.d, "user {i} dimension mismatch");
+        }
+        self.ensure_provisioned();
+
+        let fp = self.plan.fp;
+        let d = self.d;
+        let chunk = self.chunk;
+        let mults = self.plan.triples_needed();
+        let groups = partition(self.cfg.n, self.cfg.ell);
+        let threads = workers::span_split(d, workers::worker_pool_threads());
+
+        let plan = Arc::clone(&self.plan);
+        let mut subgroup_votes = Vec::with_capacity(groups.len());
+        for (g, members) in groups.iter().enumerate() {
+            let group_signs: Vec<&[i8]> =
+                members.iter().map(|&u| signs[u].as_slice()).collect();
+            let triples = self.pools.take_round(g, mults);
+            subgroup_votes.push(workers::eval_group(
+                fp, &plan, &group_signs, &triples, d, chunk, threads,
+            ));
+        }
+        let global_vote = inter_group_vote(&subgroup_votes, self.cfg.inter);
+        let stats = analytic_stats(&self.cfg, &self.plan, d);
+
+        self.rounds_run += 1;
+        EngineOutcome { global_vote, subgroup_votes, stats }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::{plain_group_vote, secure_group_vote};
+    use crate::poly::TiePolicy;
+    use crate::protocol::{plain_hierarchical_vote, run_sync};
+    use crate::util::rng::{Rng, Xoshiro256pp};
+
+    fn rand_signs(n: usize, d: usize, seed: u64) -> Vec<Vec<i8>> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect()
+    }
+
+    #[test]
+    fn flat_engine_equals_plain_and_secure() {
+        for n in [1usize, 2, 3, 4, 6, 9] {
+            for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+                let d = 17;
+                let signs = rand_signs(n, d, n as u64 * 31 + 7);
+                let cfg = HiSafeConfig::flat(n, policy);
+                let mut engine = RoundEngine::new(cfg, d, 5);
+                let got = engine.run_round(&signs);
+                let plain = plain_group_vote(&signs, policy);
+                assert_eq!(got.global_vote, plain, "n={n} {policy:?} vs plain");
+                let secure = secure_group_vote(&signs, policy, false, 5);
+                assert_eq!(got.global_vote, secure.votes, "n={n} {policy:?} vs mpc");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_engine_equals_plain_hierarchy() {
+        let cfg = HiSafeConfig::hierarchical(12, 4, TiePolicy::TwoBit);
+        let signs = rand_signs(12, 9, 3);
+        let mut engine = RoundEngine::new(cfg, 9, 11);
+        let got = engine.run_round(&signs);
+        assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+        assert_eq!(got.subgroup_votes.len(), 4);
+    }
+
+    #[test]
+    fn chunk_size_is_observationally_invisible() {
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let signs = rand_signs(6, 23, 9);
+        let baseline = RoundEngine::new(cfg, 23, 4).run_round(&signs).global_vote;
+        for chunk in [1usize, 3, 8, 64] {
+            let got = RoundEngine::new(cfg, 23, 4)
+                .with_chunk(chunk)
+                .run_round(&signs)
+                .global_vote;
+            assert_eq!(got, baseline, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn pool_amortizes_across_rounds() {
+        let cfg = HiSafeConfig::flat(3, TiePolicy::OneBit);
+        let mut engine = RoundEngine::new(cfg, 8, 2).with_batch_rounds(4);
+        assert_eq!(engine.provisioned_rounds(), 0);
+        for r in 0..6u64 {
+            let signs = rand_signs(3, 8, 100 + r);
+            let got = engine.run_round(&signs);
+            assert_eq!(
+                got.global_vote,
+                plain_group_vote(&signs, TiePolicy::OneBit),
+                "round {r}"
+            );
+        }
+        assert_eq!(engine.rounds_run, 6);
+        // 6 rounds over batches of 4 → 8 rounds dealt, 2 still pooled
+        assert_eq!(engine.provisioned_rounds(), 2);
+    }
+
+    #[test]
+    fn explicit_provision_feeds_rounds() {
+        let cfg = HiSafeConfig::hierarchical(8, 2, TiePolicy::OneBit);
+        let mut engine = RoundEngine::new(cfg, 4, 13);
+        engine.provision(3);
+        assert_eq!(engine.provisioned_rounds(), 3);
+        let signs = rand_signs(8, 4, 21);
+        let got = engine.run_round(&signs);
+        assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+        assert_eq!(engine.provisioned_rounds(), 2);
+    }
+
+    #[test]
+    fn unbalanced_pool_reports_min_and_refills_instead_of_panicking() {
+        // Regression for the party-0-only pool accounting: overfill ONE
+        // party's store so per-party balances diverge. The engine must
+        // report the worst party's balance and refill when *any* party
+        // runs dry — the old code read party 0, claimed a spare round,
+        // skipped the refill, and panicked in take_many mid-round.
+        let cfg = HiSafeConfig::flat(3, TiePolicy::OneBit);
+        let d = 6;
+        let mut engine = RoundEngine::new(cfg, d, 3);
+        let mults = engine.plan().triples_needed();
+        assert!(mults > 0, "n=3 needs secure multiplications");
+        engine.provision(1);
+        let fp = engine.plan().fp;
+        let extra = Dealer::new(fp, 0xdead_beef).gen_round(d, 3, mults).remove(0);
+        engine.pools.store_mut(0, 0).refill(extra);
+        // Party 0 now holds 2 rounds, parties 1–2 hold 1: min says 1.
+        assert_eq!(engine.provisioned_rounds(), 1);
+
+        // Round 1 consumes the last round every party can cover —
+        // streams are still aligned, so the vote is exact.
+        let signs = rand_signs(3, d, 5);
+        let got = engine.run_round(&signs);
+        assert_eq!(got.global_vote, plain_group_vote(&signs, TiePolicy::OneBit));
+        // Party 0 has a spare round, the others none: min says 0 (the
+        // old accounting said 1 here and round 2 panicked).
+        assert_eq!(engine.provisioned_rounds(), 0);
+
+        // Round 2 must refill and complete instead of panicking. (Votes
+        // are unspecified: party 0's surplus leaves its stream ahead of
+        // the others' — divergence is a should-never-happen state the
+        // engine survives, not one it can repair.)
+        let out = engine.run_round(&rand_signs(3, d, 6));
+        assert_eq!(out.global_vote.len(), d);
+        assert_eq!(engine.rounds_run, 2);
+    }
+
+    #[test]
+    fn stats_match_message_passing_path() {
+        let cfg = HiSafeConfig::hierarchical(12, 4, TiePolicy::OneBit);
+        let signs = rand_signs(12, 5, 17);
+        let mut engine = RoundEngine::new(cfg, 5, 23);
+        let got = engine.run_round(&signs);
+        let reference = run_sync(&signs, cfg, 23);
+        // Full struct equality: every analytic counter must equal the
+        // measured one (engine_props.rs repeats this across random cfgs).
+        assert_eq!(got.stats, reference.stats);
+    }
+
+    #[test]
+    fn span_parallel_path_matches_plain_at_large_d() {
+        // d above PAR_MIN_D exercises the scoped-thread span split on
+        // multi-core hosts (and the sequential path on single-core ones —
+        // both must produce the same votes).
+        let d = PAR_MIN_D + 137;
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let signs = rand_signs(6, d, 41);
+        let got = RoundEngine::new(cfg, d, 19).run_round(&signs);
+        assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+    }
+
+    #[test]
+    fn sparse_schedule_supported() {
+        let cfg = HiSafeConfig { sparse: true, ..HiSafeConfig::flat(5, TiePolicy::OneBit) };
+        let signs = rand_signs(5, 6, 29);
+        let got = RoundEngine::new(cfg, 6, 1).run_round(&signs);
+        assert_eq!(got.global_vote, plain_group_vote(&signs, TiePolicy::OneBit));
+    }
+}

@@ -1,0 +1,173 @@
+//! Double-buffered Beaver-triple pools — the engines' offline-phase state.
+//!
+//! [`GroupPools`] owns one [`TripleStore`] per party per subgroup and is
+//! the single place that accounts for how many rounds of triples are
+//! still pooled. Two consumers share it:
+//!
+//! * the sequential [`crate::engine::RoundEngine`], which refills lazily
+//!   on the round path (via [`GroupPools::deal_into`]), and
+//! * the [`crate::engine::PipelinedEngine`], whose background
+//!   provisioning stage hands freshly dealt rounds over a channel as
+//!   [`RoundBatch`]es ([`GroupPools::refill_round`]).
+//!
+//! Accounting is **party-aware**: `provisioned_rounds` takes the minimum
+//! remaining across *parties* as well as groups. The dealing paths always
+//! refill a group's parties together (one `gen_round` per round), so the
+//! per-party stores stay aligned triple-for-triple; but if the pools ever
+//! diverge — a bug elsewhere, or test-induced imbalance — the engine must
+//! see the *worst* party's balance. Inspecting only party 0 (the pre-PR-2
+//! behavior) over-reported the pool and let `take_many` panic mid-round.
+
+use crate::beaver::{Dealer, TripleShare, TripleStore};
+
+/// One freshly dealt round of triples for every group:
+/// `batch[group][party][mult]`. The unit of the pipelined engine's
+/// provisioner → scheduler handoff channel.
+pub(crate) type RoundBatch = Vec<Vec<Vec<TripleShare>>>;
+
+/// Per-group, per-party triple pools with party-aware round accounting.
+pub(crate) struct GroupPools {
+    /// `pools[group][party]`.
+    pools: Vec<Vec<TripleStore>>,
+}
+
+impl GroupPools {
+    /// Empty pools for `ell` groups of `n1` parties each.
+    pub fn new(ell: usize, n1: usize) -> GroupPools {
+        GroupPools {
+            pools: (0..ell)
+                .map(|_| (0..n1).map(|_| TripleStore::new(Vec::new())).collect())
+                .collect(),
+        }
+    }
+
+    fn group_min_remaining(group: &[TripleStore]) -> usize {
+        group.iter().map(|p| p.remaining()).min().unwrap_or(0)
+    }
+
+    /// Rounds' worth of triples every party of every group can still
+    /// serve (`usize::MAX` when the plan needs no triples). Min across
+    /// parties *and* groups — see the module doc for why party 0 alone
+    /// is not enough.
+    pub fn provisioned_rounds(&self, mults: usize) -> usize {
+        if mults == 0 {
+            return usize::MAX;
+        }
+        self.pools
+            .iter()
+            .map(|g| Self::group_min_remaining(g) / mults)
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Can group `g` *not* cover one more round for every party?
+    pub fn group_needs_refill(&self, g: usize, mults: usize) -> bool {
+        Self::group_min_remaining(&self.pools[g]) < mults
+    }
+
+    /// Append one freshly dealt round to group `g` — all parties together,
+    /// so per-party triple streams stay aligned by construction.
+    pub fn refill_group(&mut self, g: usize, round: Vec<Vec<TripleShare>>) {
+        debug_assert_eq!(round.len(), self.pools[g].len(), "asymmetric deal");
+        for (party, fresh) in round.into_iter().enumerate() {
+            self.pools[g][party].refill(fresh);
+        }
+    }
+
+    /// Absorb one provisioner handoff (one round for every group).
+    pub fn refill_round(&mut self, batch: RoundBatch) {
+        debug_assert_eq!(batch.len(), self.pools.len(), "wrong group count");
+        for (g, round) in batch.into_iter().enumerate() {
+            self.refill_group(g, round);
+        }
+    }
+
+    /// Deal `rounds` rounds for group `g` from `dealer` straight into the
+    /// pools — the sequential engine's (synchronous) provisioning path.
+    pub fn deal_into(
+        &mut self,
+        g: usize,
+        dealer: &mut Dealer,
+        d: usize,
+        mults: usize,
+        rounds: usize,
+    ) {
+        let n1 = self.pools[g].len();
+        for _ in 0..rounds {
+            let round = dealer.gen_round(d, n1, mults);
+            self.refill_group(g, round);
+        }
+    }
+
+    /// Borrow one round's triples for group `g` (the sequential engine's
+    /// consumption path): `out[party]` is a fresh `mults`-triple slice.
+    pub fn take_round(&mut self, g: usize, mults: usize) -> Vec<&[TripleShare]> {
+        self.pools[g].iter_mut().map(|s| s.take_many(mults)).collect()
+    }
+
+    /// Drain one round's triples for group `g` into owned vectors — the
+    /// pipelined engine hands these to its `'static` span workers behind
+    /// an `Arc`. Same freshness audit as [`take_round`].
+    ///
+    /// [`take_round`]: GroupPools::take_round
+    pub fn take_round_owned(&mut self, g: usize, mults: usize) -> Vec<Vec<TripleShare>> {
+        self.pools[g].iter_mut().map(|s| s.take_many_owned(mults)).collect()
+    }
+
+    /// Direct store access for tests that need to unbalance a pool.
+    #[cfg(test)]
+    pub fn store_mut(&mut self, g: usize, party: usize) -> &mut TripleStore {
+        &mut self.pools[g][party]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::Fp;
+
+    #[test]
+    fn provisioned_rounds_takes_min_across_parties_and_groups() {
+        let fp = Fp::new(5);
+        let mut dealer = Dealer::new(fp, 1);
+        let mut pools = GroupPools::new(1, 3);
+        pools.deal_into(0, &mut dealer, 4, 2, 3); // 3 rounds × 2 mults each
+        assert_eq!(pools.provisioned_rounds(2), 3);
+        assert!(!pools.group_needs_refill(0, 2));
+
+        // Drain one round's worth from party 2 ONLY: the pool is now
+        // unbalanced, and the accounting must report the worst party.
+        // (Pre-PR-2 the engine read party 0 and still claimed 3 rounds.)
+        pools.store_mut(0, 2).take_many(2);
+        assert_eq!(pools.provisioned_rounds(2), 2);
+
+        pools.store_mut(0, 2).take_many(4);
+        assert_eq!(pools.provisioned_rounds(2), 0);
+        assert!(pools.group_needs_refill(0, 2));
+
+        // Refilling restores a positive (still min-across-parties) count.
+        pools.deal_into(0, &mut dealer, 4, 2, 1);
+        assert_eq!(pools.provisioned_rounds(2), 1);
+    }
+
+    #[test]
+    fn zero_mult_plans_never_need_provisioning() {
+        let pools = GroupPools::new(2, 1);
+        assert_eq!(pools.provisioned_rounds(0), usize::MAX);
+    }
+
+    #[test]
+    fn round_batch_refill_feeds_every_group() {
+        let fp = Fp::new(5);
+        let mut d0 = Dealer::new(fp, 7);
+        let mut d1 = Dealer::new(fp, 8);
+        let mut pools = GroupPools::new(2, 3);
+        let batch: RoundBatch = vec![d0.gen_round(4, 3, 2), d1.gen_round(4, 3, 2)];
+        pools.refill_round(batch);
+        assert_eq!(pools.provisioned_rounds(2), 1);
+        let owned = pools.take_round_owned(0, 2);
+        assert_eq!(owned.len(), 3); // parties
+        assert_eq!(owned[0].len(), 2); // mults
+        assert_eq!(pools.provisioned_rounds(2), 0); // group 0 drained
+    }
+}

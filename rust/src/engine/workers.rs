@@ -1,0 +1,307 @@
+//! Span evaluation and the persistent worker pool.
+//!
+//! [`eval_span`] is the SoA polynomial-evaluation kernel both engines
+//! share (one coordinate span, lane-chunked, lazy modular reduction).
+//! Because the protocol is coordinate-local, any partition of `[0, d)`
+//! into disjoint spans evaluates bit-identically to a single sequential
+//! pass — which is what lets the engines parallelize freely.
+//!
+//! Two parallel drivers sit on top of it:
+//!
+//! * [`eval_group`] — the sequential [`crate::engine::RoundEngine`]'s
+//!   per-round `std::thread::scope` split (the reference path; spawn cost
+//!   is paid every round, which bounds small-`d` wins).
+//! * [`WorkerPool`] — a persistent pool spawned once per
+//!   [`crate::engine::PipelinedEngine`]. Span jobs carry ref-counted
+//!   owned inputs (`Arc`ed signs and triples) so they are `'static`, and
+//!   results return over a per-round channel keyed by slot index, making
+//!   reassembly order-independent and the votes deterministic.
+//!
+//! The job queue is a shared `Mutex<Receiver<SpanJob>>`: workers take the
+//! lock only to *pick up* a job (the guard drops before evaluation), so
+//! pickup is serialized but evaluation is fully parallel.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::beaver::TripleShare;
+use crate::field::Fp;
+use crate::mpc::EvalPlan;
+
+/// Worker count for a persistent pool: every core up to the engine's
+/// bandwidth-bound cap (small-`d` rounds simply leave workers idle; the
+/// pool costs nothing when unused).
+pub(crate) fn worker_pool_threads() -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    cores.min(super::MAX_THREADS)
+}
+
+/// How many spans to split a `d`-coordinate range into, given `threads`
+/// available workers — the single parallelism policy shared by the
+/// sequential engine's scoped split and the pipelined scheduler's job
+/// fan-out, so both paths parallelize under identical conditions (the
+/// bench's sequential-vs-pipelined comparison depends on that).
+pub(crate) fn span_split(d: usize, threads: usize) -> usize {
+    if d >= super::PAR_MIN_D && threads > 1 {
+        threads
+    } else {
+        1
+    }
+}
+
+/// One span-evaluation job: evaluate coordinates `[base, base + len)` of
+/// one subgroup and deliver `(slot, votes)` on `out`. All inputs are
+/// owned or ref-counted so the job is `'static` and can cross into a
+/// persistent worker.
+pub(crate) struct SpanJob {
+    pub fp: Fp,
+    pub plan: Arc<EvalPlan>,
+    /// This subgroup's members' sign vectors (full `d`-length).
+    pub signs: Arc<Vec<Vec<i8>>>,
+    /// `triples[party][mult]` — this subgroup's triples for this round.
+    pub triples: Arc<Vec<Vec<TripleShare>>>,
+    /// First coordinate of the span.
+    pub base: usize,
+    /// Span length.
+    pub len: usize,
+    pub chunk: usize,
+    /// Caller-side reassembly key.
+    pub slot: usize,
+    /// Result channel: `(slot, span votes)`.
+    pub out: Sender<(usize, Vec<i8>)>,
+}
+
+/// Persistent span workers, spawned once per engine and fed over a shared
+/// queue — replacing the per-round `std::thread::scope` spawns whose cost
+/// bounded small-`d` parallel wins (ROADMAP). Dropping the pool closes
+/// the queue; workers drain and exit, and `drop` joins them.
+pub(crate) struct WorkerPool {
+    job_tx: Option<Sender<SpanJob>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> WorkerPool {
+        assert!(threads >= 1, "worker pool needs at least one thread");
+        let (job_tx, job_rx) = channel::<SpanJob>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let handles = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&job_rx);
+                std::thread::spawn(move || {
+                    while let Some(job) = next_job(&rx) {
+                        run_span_job(job);
+                    }
+                })
+            })
+            .collect();
+        WorkerPool { job_tx: Some(job_tx), handles }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn submit(&self, job: SpanJob) {
+        self.job_tx
+            .as_ref()
+            .expect("worker pool queue open")
+            .send(job)
+            .expect("span worker alive");
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the queue unblocks every worker's recv with Err.
+        drop(self.job_tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Take the next job off the shared queue. A helper function so the
+/// mutex guard provably drops before the job body runs — inlining this
+/// into a `while let` scrutinee would hold the lock across evaluation
+/// (2021-edition temporary-lifetime rules) and serialize the pool.
+fn next_job(rx: &Mutex<Receiver<SpanJob>>) -> Option<SpanJob> {
+    rx.lock().expect("worker queue poisoned").recv().ok()
+}
+
+fn run_span_job(job: SpanJob) {
+    let signs: Vec<&[i8]> = job.signs.iter().map(|v| v.as_slice()).collect();
+    let triples: Vec<&[TripleShare]> = job.triples.iter().map(|v| v.as_slice()).collect();
+    let mut votes = vec![0i8; job.len];
+    eval_span(job.fp, &job.plan, &signs, &triples, &mut votes, job.base, job.chunk);
+    // The engine may be tearing down mid-round; an orphaned result is fine.
+    let _ = job.out.send((job.slot, votes));
+}
+
+/// One subgroup's secure vote over its full coordinate range — the
+/// sequential engine's driver, splitting the range across scoped span
+/// workers when profitable.
+pub(crate) fn eval_group(
+    fp: Fp,
+    plan: &Arc<EvalPlan>,
+    group_signs: &[&[i8]],
+    triples: &[&[TripleShare]],
+    d: usize,
+    chunk: usize,
+    threads: usize,
+) -> Vec<i8> {
+    let mut votes = vec![0i8; d];
+    if threads > 1 {
+        let span = d.div_ceil(threads);
+        std::thread::scope(|sc| {
+            let plan: &EvalPlan = plan;
+            for (si, vspan) in votes.chunks_mut(span).enumerate() {
+                sc.spawn(move || {
+                    eval_span(fp, plan, group_signs, triples, vspan, si * span, chunk)
+                });
+            }
+        });
+    } else {
+        eval_span(fp, plan, group_signs, triples, &mut votes, 0, chunk);
+    }
+    votes
+}
+
+/// Evaluate the majority-vote polynomial over the coordinate span
+/// `[base, base + votes.len())` in SoA lane chunks. Pure function of its
+/// inputs — spans never overlap, so span workers are deterministic.
+pub(crate) fn eval_span(
+    fp: Fp,
+    plan: &EvalPlan,
+    group_signs: &[&[i8]],
+    triples: &[&[TripleShare]],
+    votes: &mut [i8],
+    base: usize,
+    chunk: usize,
+) {
+    let n1 = group_signs.len();
+    let steps = &plan.schedule.steps;
+    let coeffs = &plan.coeffs;
+    let max_pow = plan.schedule.max_power.max(1);
+    // §Perf: same raw-accumulation headroom rule as Party::final_share.
+    let fused_final = fp.fused_headroom(coeffs.len() as u64 + 1);
+
+    // pow[k][party] — this span's share of x^k, one lane chunk at a time.
+    let mut pow: Vec<Vec<Vec<u64>>> = vec![vec![vec![0u64; chunk]; n1]; max_pow + 1];
+    let mut delta = vec![0u64; chunk];
+    let mut eps = vec![0u64; chunk];
+    let mut fin = vec![0u64; chunk];
+    let mut out = vec![0u64; chunk];
+
+    let span = votes.len();
+    let mut j0 = 0usize;
+    while j0 < span {
+        let c = chunk.min(span - j0);
+        let lo = base + j0;
+        let hi = lo + c;
+
+        // 1. field-encode the ±1 inputs: each user's sign vector IS its
+        //    additive share of the aggregate (no input-sharing round).
+        for (pi, s) in group_signs.iter().enumerate() {
+            for (lane, &sv) in pow[1][pi][..c].iter_mut().zip(&s[lo..hi]) {
+                *lane = fp.from_i64(sv as i64);
+            }
+        }
+
+        // 2. power schedule. Steps are dependency-ordered (operands always
+        //    have strictly lower depth), so one sequential pass is exact.
+        for (mi, step) in steps.iter().enumerate() {
+            // openings: δ = Σᵢ (⟦x^l⟧ᵢ − ⟦a⟧ᵢ), ε likewise — accumulated
+            // raw straight off the share matrix, reduced once per lane.
+            delta[..c].fill(0);
+            eps[..c].fill(0);
+            for pi in 0..n1 {
+                let t = &triples[pi][mi];
+                fp.vec_sub_add_raw(&mut delta[..c], &pow[step.left][pi][..c], &t.a[lo..hi]);
+                fp.vec_sub_add_raw(&mut eps[..c], &pow[step.right][pi][..c], &t.b[lo..hi]);
+            }
+            fp.vec_reduce_in_place(&mut delta[..c]);
+            fp.vec_reduce_in_place(&mut eps[..c]);
+            // recombination: party 0 adds the public δ·ε term.
+            for pi in 0..n1 {
+                let t = &triples[pi][mi];
+                fp.beaver_combine_into(
+                    &mut pow[step.target][pi][..c],
+                    &t.c[lo..hi],
+                    &t.a[lo..hi],
+                    &t.b[lo..hi],
+                    &delta[..c],
+                    &eps[..c],
+                    pi == 0,
+                );
+            }
+        }
+
+        // 3. final shares Σ_k coeff_k·⟦x^k⟧ᵢ (+ c₀ for party 0), summed
+        //    into F(x) = sign(x) per lane (Eq. 5).
+        out[..c].fill(0);
+        for pi in 0..n1 {
+            fin[..c].fill(0);
+            if pi == 0 && coeffs.first().copied().unwrap_or(0) != 0 {
+                fin[..c].fill(coeffs[0]);
+            }
+            for (k, &coeff) in coeffs.iter().enumerate().skip(1) {
+                if coeff == 0 {
+                    continue;
+                }
+                if fused_final {
+                    fp.vec_scale_add_raw(&mut fin[..c], coeff, &pow[k][pi][..c]);
+                } else {
+                    fp.vec_scale_add_assign(&mut fin[..c], coeff, &pow[k][pi][..c]);
+                }
+            }
+            fp.vec_reduce_in_place(&mut fin[..c]);
+            fp.vec_add_raw(&mut out[..c], &fin[..c]);
+        }
+        fp.vec_reduce_in_place(&mut out[..c]);
+        for (v, &x) in votes[j0..j0 + c].iter_mut().zip(&out[..c]) {
+            *v = fp.sign_of(x);
+        }
+        j0 += c;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::{MvPolynomial, TiePolicy};
+
+    #[test]
+    fn pool_evaluates_spans_and_reassembles_by_slot() {
+        // n₁ = 1 makes F the identity (no triples needed): the pool's
+        // reassembled output must be the input signs, split across spans.
+        let mv = MvPolynomial::build_fermat(1, TiePolicy::OneBit);
+        let plan = Arc::new(EvalPlan::new(&mv, 10, false));
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.threads(), 3);
+        let signs = Arc::new(vec![vec![1i8, -1, 1, -1, 1, -1, 1, -1, 1, -1]]);
+        let triples: Arc<Vec<Vec<TripleShare>>> = Arc::new(vec![Vec::new()]);
+        let (tx, rx) = channel();
+        for (slot, base) in [(0usize, 0usize), (1, 5)] {
+            pool.submit(SpanJob {
+                fp: plan.fp,
+                plan: Arc::clone(&plan),
+                signs: Arc::clone(&signs),
+                triples: Arc::clone(&triples),
+                base,
+                len: 5,
+                chunk: 4,
+                slot,
+                out: tx.clone(),
+            });
+        }
+        drop(tx);
+        let mut votes = vec![0i8; 10];
+        for _ in 0..2 {
+            let (slot, span) = rx.recv().expect("span result");
+            votes[slot * 5..slot * 5 + 5].copy_from_slice(&span);
+        }
+        assert_eq!(votes, signs[0]);
+    }
+}

@@ -12,7 +12,7 @@
 //! pure-rust models and the AOT-compiled JAX models.
 
 use crate::baselines::{dp_signsgd, masking};
-use crate::engine::RoundEngine;
+use crate::engine::PipelinedEngine;
 use crate::fl::data::Dataset;
 use crate::fl::model::{sign_vec, Model};
 use crate::protocol::{plain_group_vote_all, HiSafeConfig};
@@ -150,12 +150,15 @@ pub fn train<M: Model>(
     let mut select_rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0x5e1ec7);
     let mut batch_rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xba7c4);
     let mut dp_rng = ChaCha20Rng::seed_from_u64(cfg.seed ^ 0xd9);
-    // Secure aggregation runs through the batched RoundEngine: plan,
-    // polynomial, and the Beaver triple pool are built once and amortized
-    // across every round of the run (the dealer stream replaces run_sync's
-    // per-round reseeding; votes are identical either way).
-    let mut hisafe_engine: Option<RoundEngine> = match &agg {
-        Aggregator::HiSafe(hc) => Some(RoundEngine::new(*hc, d, cfg.seed ^ 0xa6_67e6)),
+    // Secure aggregation runs through the pipelined engine: plan,
+    // polynomial, and the persistent worker pool are built once, and a
+    // background provisioning stage deals round r+1's Beaver triples
+    // while round r's online phase (and this loop's gradient work)
+    // executes — the paper's offline/online split as wall-clock overlap.
+    // Votes are bit-identical to run_sync and the sequential RoundEngine
+    // (the dealer streams share run_sync's per-group seed derivation).
+    let mut hisafe_engine: Option<PipelinedEngine> = match &agg {
+        Aggregator::HiSafe(hc) => Some(PipelinedEngine::new(*hc, d, cfg.seed ^ 0xa6_67e6)),
         _ => None,
     };
     let mut logs = Vec::with_capacity(cfg.rounds);

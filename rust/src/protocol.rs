@@ -102,6 +102,16 @@ pub struct RoundOutcome {
 /// baseline (same function as the flat plaintext reference).
 pub use crate::mpc::plain_group_vote as plain_group_vote_all;
 
+/// Per-subgroup dealer seed: the *single* derivation shared by
+/// [`run_sync`], [`run_threaded`], and both engines in [`crate::engine`],
+/// so every execution path consumes identical per-group triple streams.
+/// The golden-ratio stride keeps group streams independent; centralizing
+/// it here is what lets the pipelined engine's background dealing stay
+/// share-for-share aligned with this module's synchronous paths.
+pub fn group_dealer_seed(seed: u64, g: usize) -> u64 {
+    seed ^ (g as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
 /// Partition user indices into `ℓ` contiguous subgroups of `n₁`.
 pub fn partition(n: usize, ell: usize) -> Vec<Vec<usize>> {
     assert!(ell >= 1 && n % ell == 0, "ℓ = {ell} must divide n = {n}");
@@ -138,12 +148,7 @@ pub fn run_sync(signs: &[Vec<i8>], cfg: HiSafeConfig, seed: u64) -> RoundOutcome
     let run_group = |g: usize, members: &[usize]| {
         let group_signs: Vec<Vec<i8>> =
             members.iter().map(|&i| signs[i].clone()).collect();
-        secure_group_vote(
-            &group_signs,
-            cfg.intra,
-            cfg.sparse,
-            seed ^ (g as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
-        )
+        secure_group_vote(&group_signs, cfg.intra, cfg.sparse, group_dealer_seed(seed, g))
     };
     let outcomes: Vec<crate::mpc::GroupVoteOutcome> = if parallel {
         std::thread::scope(|scope| {
@@ -226,10 +231,7 @@ pub fn run_threaded(signs: &[Vec<i8>], cfg: HiSafeConfig, seed: u64) -> RoundOut
     let mut servers: Vec<Server> = Vec::new();
 
     for (g, members) in groups.iter().enumerate() {
-        let mut dealer = Dealer::new(
-            fp,
-            seed ^ (g as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
-        );
+        let mut dealer = Dealer::new(fp, group_dealer_seed(seed, g));
         let mut round_triples = dealer.gen_round(d, n1, plan.triples_needed());
         servers.push(Server::new(Arc::clone(&plan)));
         for (local, &uid) in members.iter().enumerate() {

@@ -1,10 +1,12 @@
-//! Property tests pinning the batched [`RoundEngine`] to the reference
-//! paths: across random `n`, `d`, tie policies, schedules and chunk
-//! sizes, the engine's votes must be bit-identical to both the plaintext
+//! Property tests pinning the batched engines to the reference paths:
+//! across random `n`, `d`, `ℓ`, tie policies, schedules and chunk sizes,
+//! the sequential [`RoundEngine`]'s *and* the pipelined
+//! [`PipelinedEngine`]'s votes must be bit-identical to the plaintext
 //! majority vote and the message-passing `secure_group_vote` /
-//! `run_sync` implementations.
+//! `run_sync` implementations — and the engines' analytic `CommStats`
+//! must equal the measured per-message counters field for field.
 
-use hisafe::engine::RoundEngine;
+use hisafe::engine::{PipelinedEngine, RoundEngine};
 use hisafe::mpc::{plain_group_vote, secure_group_vote};
 use hisafe::poly::TiePolicy;
 use hisafe::prop_assert_eq;
@@ -53,6 +55,74 @@ fn engine_vote_equals_hierarchical_reference() {
         prop_assert_eq!(&got.subgroup_votes, &reference.subgroup_votes, "cfg={cfg:?}");
         prop_assert_eq!(got.stats.c_u_bits(), reference.stats.c_u_bits());
         prop_assert_eq!(got.stats.subrounds, reference.stats.subrounds);
+        Ok(())
+    });
+}
+
+#[test]
+fn pipelined_engine_pins_bit_identical_to_sequential_and_run_sync() {
+    // The tentpole determinism claim: no matter how the background
+    // dealing stage interleaves with online evaluation, the pipelined
+    // scheduler's votes equal the sequential engine's and run_sync's,
+    // round after round on one long-lived engine pair. (Votes are
+    // triple-independent — Beaver masks cancel — so this pins the online
+    // arithmetic; the offline streams themselves are pinned to the
+    // group_dealer_seed derivation by the in-crate test in
+    // engine/pipeline.rs, which can see the pools.)
+    forall("pipelined ≡ sequential ≡ run_sync", 20, |g| {
+        let ell = g.usize_range(1, 4);
+        let n1 = g.usize_range(1, 6);
+        let n = ell * n1;
+        let d = g.usize_range(1, 32);
+        let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+        let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+        let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
+        let seed = g.u64();
+        let mut seq = RoundEngine::new(cfg, d, seed);
+        let mut piped = PipelinedEngine::new(cfg, d, seed)
+            .with_batch_rounds(g.usize_range(1, 3));
+        for round in 0..4u64 {
+            let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+            let a = seq.run_round(&signs);
+            let b = piped.run_round(&signs);
+            prop_assert_eq!(&a.global_vote, &b.global_vote, "round {round} cfg={cfg:?}");
+            prop_assert_eq!(&a.subgroup_votes, &b.subgroup_votes, "round {round} cfg={cfg:?}");
+            prop_assert_eq!(&a.stats, &b.stats, "round {round} cfg={cfg:?}");
+            let reference = run_sync(&signs, cfg, seed ^ round);
+            prop_assert_eq!(&b.global_vote, &reference.global_vote, "round {round} vs run_sync");
+            prop_assert_eq!(&b.subgroup_votes, &reference.subgroup_votes, "round {round}");
+            prop_assert_eq!(
+                &b.global_vote,
+                &plain_hierarchical_vote(&signs, cfg),
+                "round {round} vs Eq. 8"
+            );
+        }
+        prop_assert_eq!(piped.rounds_run, 4u64);
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_analytic_stats_equal_measured_field_for_field() {
+    // The engines never pass messages; their CommStats are analytic. The
+    // doc contract is that every counter equals the measured one from the
+    // message-passing path — full struct equality, not just the derived
+    // C_u/C_T bit costs.
+    forall("analytic CommStats ≡ measured", 30, |g| {
+        let ell = g.usize_range(1, 4);
+        let n1 = g.usize_range(1, 6);
+        let n = ell * n1;
+        let d = g.usize_range(1, 24);
+        let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+        let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+        let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
+        let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+        let seed = g.u64();
+        let reference = run_sync(&signs, cfg, seed);
+        let seq = RoundEngine::new(cfg, d, seed).run_round(&signs);
+        prop_assert_eq!(&seq.stats, &reference.stats, "sequential cfg={cfg:?} d={d}");
+        let piped = PipelinedEngine::new(cfg, d, seed).run_round(&signs);
+        prop_assert_eq!(&piped.stats, &reference.stats, "pipelined cfg={cfg:?} d={d}");
         Ok(())
     });
 }
