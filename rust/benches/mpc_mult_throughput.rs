@@ -5,7 +5,7 @@
 //! dimension under 50 ms.
 
 use hisafe::beaver::Dealer;
-use hisafe::engine::{PipelinedEngine, RoundEngine};
+use hisafe::engine::{Engine, PipelinedEngine, RoundEngine};
 use hisafe::field::Fp;
 use hisafe::mpc::secure_group_vote;
 use hisafe::poly::TiePolicy;

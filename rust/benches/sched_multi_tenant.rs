@@ -1,0 +1,113 @@
+//! Bench: k dedicated `PipelinedEngine`s vs ONE `AggScheduler`
+//! multiplexing k tenant sessions, at equal total work.
+//!
+//! The dedicated configuration spawns k worker pools and k provisioning
+//! threads (the pre-scheduler world: thread count grows k-fold with
+//! tenancy); the scheduler runs the same rounds on exactly one pool's
+//! worth of span workers plus one dealer thread. On a machine with fewer
+//! spare cores than the dedicated configuration wants, the shared
+//! scheduler avoids the oversubscription thrash; on a wide machine the
+//! dedicated engines can use more silicon — the point of the bench is to
+//! see the trade, not to declare a universal winner, so wall-clock
+//! assertions are opt-in via `HISAFE_BENCH_STRICT=1` (advisory runs only
+//! print, and `cargo bench --no-run` compile-gates this file in CI).
+
+use hisafe::engine::{AggScheduler, AggSession, Engine, PipelinedEngine};
+use hisafe::poly::TiePolicy;
+use hisafe::protocol::HiSafeConfig;
+use hisafe::util::bench::{black_box, section};
+use hisafe::util::rng::{Rng, Xoshiro256pp};
+use std::time::Instant;
+
+fn main() {
+    let strict = std::env::var("HISAFE_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
+    let fast = std::env::var("HISAFE_BENCH_FAST").ok().is_some();
+    let rounds: usize = if fast { 2 } else { 4 };
+    let d: usize = if fast { 2048 } else { 8192 };
+
+    // A mixed-tenant workload: the paper's n=24/ℓ=8 operating point next
+    // to two smaller federations (different polynomials, depths, and
+    // triple appetites — the multiplexing case the scheduler exists for).
+    let shapes: Vec<HiSafeConfig> = vec![
+        HiSafeConfig::hierarchical(24, 8, TiePolicy::OneBit),
+        HiSafeConfig::hierarchical(12, 4, TiePolicy::OneBit),
+        HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit),
+    ];
+    let k = shapes.len();
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let signs: Vec<Vec<Vec<i8>>> = shapes
+        .iter()
+        .map(|cfg| {
+            (0..cfg.n)
+                .map(|_| (0..d).map(|_| rng.gen_sign()).collect())
+                .collect()
+        })
+        .collect();
+
+    section(&format!(
+        "{k} tenants × {rounds} rounds at d = {d}: dedicated engines vs one scheduler"
+    ));
+    let mut acc = 0i64;
+
+    // Dedicated: every engine owns a worker pool + provisioning plane.
+    let t0 = Instant::now();
+    {
+        let mut engines: Vec<PipelinedEngine> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, cfg)| PipelinedEngine::new(*cfg, d, 42 + i as u64))
+            .collect();
+        for _ in 0..rounds {
+            for (i, engine) in engines.iter_mut().enumerate() {
+                acc += engine.run_round(&signs[i]).global_vote[0] as i64;
+            }
+        }
+    }
+    let dedicated_t = t0.elapsed();
+
+    // Shared: one scheduler, k sessions, identical rounds and seeds.
+    // Construction AND teardown sit inside the timed region, exactly
+    // like the dedicated block above, so neither side hides setup,
+    // prefetch-drain, or thread-join cost from the comparison.
+    let t0 = Instant::now();
+    let (shared_workers, shared_dealers) = {
+        let sched = AggScheduler::new();
+        let counts = (sched.worker_threads(), sched.dealer_threads());
+        let mut sessions: Vec<AggSession> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, cfg)| sched.session(*cfg, d, 42 + i as u64))
+            .collect();
+        for _ in 0..rounds {
+            for (i, session) in sessions.iter_mut().enumerate() {
+                acc += session.run_round(&signs[i]).global_vote[0] as i64;
+            }
+        }
+        counts
+    };
+    let shared_t = t0.elapsed();
+    black_box(acc);
+
+    println!(
+        "  dedicated ({k} pools + {k} dealer threads): {:.1} ms",
+        dedicated_t.as_secs_f64() * 1e3
+    );
+    println!(
+        "  scheduler ({shared_workers} span workers + {shared_dealers} dealer thread, shared): {:.1} ms",
+        shared_t.as_secs_f64() * 1e3
+    );
+    println!(
+        "  shared/dedicated: {:.2}x  (threads: one pool's worth vs {k}x)",
+        shared_t.as_secs_f64() / dedicated_t.as_secs_f64()
+    );
+    if strict {
+        // The scheduler trades peak parallelism for a bounded thread
+        // budget; at equal total work it must stay in the same
+        // performance class as k oversubscribing engines.
+        assert!(
+            shared_t.as_secs_f64() < dedicated_t.as_secs_f64() * 1.5,
+            "one scheduler fell out of the dedicated engines' class: \
+             {shared_t:?} vs {dedicated_t:?}"
+        );
+    }
+}

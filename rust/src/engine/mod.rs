@@ -11,25 +11,36 @@
 //!
 //! This module executes the *same arithmetic* (share-for-share: it reuses
 //! [`crate::field::Fp::beaver_combine_into`] and the schedule from
-//! [`EvalPlan`]) with a throughput-oriented layout, split across four
+//! [`EvalPlan`]) with a throughput-oriented layout, split across five
 //! files:
 //!
-//! * `mod.rs` — [`RoundEngine`], the **sequential reference engine**:
-//!   amortized plan/polynomial setup, pre-provisioned triple pools
-//!   refilled synchronously on the round path, SoA lane-chunked
-//!   evaluation, per-round scoped span threads.
+//! * `mod.rs` — the [`Engine`] trait (the one builder/accessor surface
+//!   every engine shares) and [`RoundEngine`], the **sequential
+//!   reference engine**: amortized plan/polynomial setup,
+//!   pre-provisioned triple pools refilled synchronously on the round
+//!   path, SoA lane-chunked evaluation, per-round scoped span threads.
 //! * [`pool`] — [`pool::GroupPools`], the per-group/per-party triple
-//!   pools both engines consume, with party-aware round accounting (the
+//!   pools every engine consumes, with party-aware round accounting (the
 //!   minimum across parties *and* groups; a divergent pool must surface
-//!   as "needs refill", never as a mid-round `take_many` panic).
+//!   as "needs refill", never as a mid-round `take_many` panic). Pools
+//!   are owned per engine/session; under the scheduler they are refilled
+//!   by the shared provisioning plane.
 //! * [`workers`] — the shared span-evaluation kernel plus the
-//!   **persistent worker pool** (spawned once per engine; span jobs are
-//!   `'static` and results reassemble by slot index).
-//! * [`pipeline`] — [`PipelinedEngine`], the **pipelined round
-//!   scheduler**: a background provisioning stage deals round `r+1`'s
-//!   Beaver triples while round `r`'s online phase evaluates, with
-//!   double-buffered pools and an mpsc handoff channel. This is the
-//!   paper's offline/online split (Table V) realized as wall-clock
+//!   **persistent worker pool** (spawned once per scheduler; span jobs
+//!   are `'static`, tagged by session, and results reassemble per-tenant
+//!   by slot index).
+//! * [`scheduler`] — [`AggScheduler`] / [`AggSession`], the
+//!   **multi-tenant scheduler**: one shared worker pool and one
+//!   provisioning plane (a single dealer thread round-robining
+//!   Beaver-triple dealing across tenants) multiplexing any number of
+//!   concurrent `(cfg, d)` workloads, each behind a session handle with
+//!   the engine surface. This is the heavy-traffic shape: `k` tenants
+//!   cost one pool's worth of threads, not `k`.
+//! * [`pipeline`] — [`PipelinedEngine`], the **single-tenant pipelined
+//!   engine**, now a thin wrapper around a private one-session
+//!   scheduler: a background provisioning stage deals round `r+1`'s
+//!   Beaver triples while round `r`'s online phase evaluates. This is
+//!   the paper's offline/online split (Table V) realized as wall-clock
 //!   overlap, and the path `fl/trainer.rs` uses for multi-round training.
 //!
 //! **Offline/online overlap & determinism.** Subgroups are independent:
@@ -42,24 +53,39 @@
 //! (`run_sync` reseeds a fresh dealer per call while the engines advance
 //! one long-lived stream, so triple-level alignment with a `run_sync`
 //! call holds for an engine's first round; later rounds are that same
-//! stream's continuation — `engine/pipeline.rs` pins the pipelined pools
-//! to the derivation share-for-share.) Votes are a stronger story:
-//! Beaver masks cancel exactly, so *any* fresh triples yield the same
-//! votes, and pipelined, sequential, and `run_sync` votes are
-//! bit-identical round after round (asserted across random configs by
-//! `rust/tests/engine_props.rs`).
+//! stream's continuation — `engine/scheduler.rs` pins the pooled
+//! triples to the derivation share-for-share.)
 //!
-//! `rust/tests/engine_props.rs` also pins both engines' analytic
+//! **Why shared provisioning preserves per-group seed streams.** The
+//! scheduler's plane owns *per-session* dealers keyed by the session's
+//! own seed; multiplexing changes only *when* (in wall-clock) and *in
+//! what tenant order* `gen_round` calls happen, never the sequence of
+//! calls any single dealer sees. Since a ChaCha20-seeded dealer is a
+//! pure stream — its output depends only on its seed and how many
+//! triples it has produced — tenant interleaving is invisible to every
+//! per-group stream. Votes are a stronger story still: Beaver masks
+//! cancel exactly, so *any* fresh triples yield the same votes, and
+//! scheduled, pipelined, sequential, and `run_sync` votes are
+//! bit-identical round after round (asserted across random configs and
+//! random tenant interleavings by `rust/tests/engine_props.rs` and
+//! `rust/tests/sched_props.rs`).
+//!
+//! `rust/tests/engine_props.rs` also pins the engines' analytic
 //! [`CommStats`] to the *measured* counters of the message-passing path,
 //! field element for field element; the `mpc_mult_throughput` bench
 //! measures the batched-vs-per-call speedup and the pipelined overlap
-//! win at the paper's n=24/ℓ=8 operating point.
+//! win at the paper's n=24/ℓ=8 operating point, and the
+//! `sched_multi_tenant` bench compares `k` dedicated engines against one
+//! scheduler at equal total work.
 
 mod pipeline;
 mod pool;
+mod scheduler;
 mod workers;
 
 pub use pipeline::PipelinedEngine;
+pub use scheduler::{AggScheduler, AggSession};
+pub use workers::live_engine_threads;
 
 use std::sync::Arc;
 
@@ -83,6 +109,51 @@ pub(crate) const PAR_MIN_D: usize = 8192;
 
 /// Cap on span workers (beyond this, memory bandwidth dominates).
 pub(crate) const MAX_THREADS: usize = 8;
+
+/// The one engine surface: builders, provisioning accessors, and the
+/// round path, shared by the sequential [`RoundEngine`], the pipelined
+/// [`PipelinedEngine`], and the multi-tenant [`AggSession`]. Before this
+/// trait the builder/accessor API was copied verbatim between the
+/// engines; now it is defined once, the property suite
+/// (`rust/tests/engine_props.rs`) is generic over it, and every
+/// implementation is pinned to the same reference votes.
+pub trait Engine {
+    /// Override the SoA lane-chunk size (tests sweep this to prove chunk
+    /// invariance; benches tune it).
+    fn with_chunk(self, chunk: usize) -> Self
+    where
+        Self: Sized;
+
+    /// Provision `rounds` rounds of triples per refill/background
+    /// request (default 1). Larger batches amortize dealing at the cost
+    /// of pooled memory.
+    fn with_batch_rounds(self, rounds: usize) -> Self
+    where
+        Self: Sized;
+
+    /// The evaluation plan the engine executes (schedule, coefficients).
+    fn plan(&self) -> &EvalPlan;
+
+    /// Rounds' worth of triples currently pooled — the minimum across
+    /// groups *and parties*, so a divergent pool reports its worst
+    /// balance instead of party 0's. Excludes in-flight background
+    /// batches on the pipelined/scheduled paths.
+    fn provisioned_rounds(&self) -> usize;
+
+    /// Explicitly pre-provision at least `rounds` rounds of triples now —
+    /// benches use this to move the offline phase out of the measured
+    /// loop (the paper's offline/online split, Table V).
+    fn provision(&mut self, rounds: usize);
+
+    /// Execute one Hi-SAFE aggregation round. `signs[i]` is user `i`'s
+    /// ±1 sign-gradient vector; users are partitioned into subgroups
+    /// exactly like [`crate::protocol::run_sync`], and votes are
+    /// bit-identical across every implementation.
+    fn run_round(&mut self, signs: &[Vec<i8>]) -> EngineOutcome;
+
+    /// Rounds executed so far.
+    fn rounds_run(&self) -> u64;
+}
 
 /// Outcome of one engine round — the trainer-facing subset of
 /// [`crate::protocol::RoundOutcome`] (no transcripts: the engines never
@@ -137,6 +208,9 @@ pub struct RoundEngine {
     /// Rounds of triples generated per refill.
     batch_rounds: usize,
     chunk: usize,
+    /// Span-thread budget, resolved once at construction (the
+    /// `HISAFE_THREADS` override is never re-read on the round path).
+    threads: usize,
     /// Rounds executed so far.
     pub rounds_run: u64,
 }
@@ -160,48 +234,8 @@ impl RoundEngine {
             pools: GroupPools::new(cfg.ell, n1),
             batch_rounds: 1,
             chunk: DEFAULT_CHUNK,
+            threads: workers::worker_pool_threads(),
             rounds_run: 0,
-        }
-    }
-
-    /// Override the SoA lane-chunk size (tests sweep this to prove chunk
-    /// invariance; benches tune it).
-    pub fn with_chunk(mut self, chunk: usize) -> RoundEngine {
-        assert!(chunk >= 1, "chunk must be ≥ 1");
-        self.chunk = chunk;
-        self
-    }
-
-    /// Refill the triple pool `rounds` rounds at a time (default 1).
-    pub fn with_batch_rounds(mut self, rounds: usize) -> RoundEngine {
-        assert!(rounds >= 1, "batch must be ≥ 1");
-        self.batch_rounds = rounds;
-        self
-    }
-
-    /// The evaluation plan the engine executes (schedule, coefficients).
-    pub fn plan(&self) -> &EvalPlan {
-        &self.plan
-    }
-
-    /// Rounds' worth of triples currently pooled — the minimum across
-    /// groups *and parties*, so a divergent pool reports its worst
-    /// balance instead of party 0's.
-    pub fn provisioned_rounds(&self) -> usize {
-        self.pools.provisioned_rounds(self.plan.triples_needed())
-    }
-
-    /// Explicitly pre-provision `rounds` rounds of triples now — benches
-    /// use this to move the offline phase out of the measured loop (the
-    /// paper's offline/online split, Table V).
-    pub fn provision(&mut self, rounds: usize) {
-        let mults = self.plan.triples_needed();
-        if mults == 0 {
-            return;
-        }
-        let d = self.d;
-        for (g, dealer) in self.dealers.iter_mut().enumerate() {
-            self.pools.deal_into(g, dealer, d, mults, rounds);
         }
     }
 
@@ -222,11 +256,43 @@ impl RoundEngine {
             self.pools.deal_into(g, dealer, d, mults, batch);
         }
     }
+}
 
-    /// Execute one Hi-SAFE aggregation round. `signs[i]` is user `i`'s ±1
-    /// sign-gradient vector; users are partitioned into subgroups exactly
-    /// like [`crate::protocol::run_sync`].
-    pub fn run_round(&mut self, signs: &[Vec<i8>]) -> EngineOutcome {
+impl Engine for RoundEngine {
+    fn with_chunk(mut self, chunk: usize) -> RoundEngine {
+        assert!(chunk >= 1, "chunk must be ≥ 1");
+        self.chunk = chunk;
+        self
+    }
+
+    fn with_batch_rounds(mut self, rounds: usize) -> RoundEngine {
+        assert!(rounds >= 1, "batch must be ≥ 1");
+        self.batch_rounds = rounds;
+        self
+    }
+
+    fn plan(&self) -> &EvalPlan {
+        &self.plan
+    }
+
+    fn provisioned_rounds(&self) -> usize {
+        self.pools.provisioned_rounds(self.plan.triples_needed())
+    }
+
+    /// Synchronous dealing straight into the pools — the sequential
+    /// engine has no background stage.
+    fn provision(&mut self, rounds: usize) {
+        let mults = self.plan.triples_needed();
+        if mults == 0 {
+            return;
+        }
+        let d = self.d;
+        for (g, dealer) in self.dealers.iter_mut().enumerate() {
+            self.pools.deal_into(g, dealer, d, mults, rounds);
+        }
+    }
+
+    fn run_round(&mut self, signs: &[Vec<i8>]) -> EngineOutcome {
         assert_eq!(signs.len(), self.cfg.n, "need exactly n sign vectors");
         for (i, s) in signs.iter().enumerate() {
             assert_eq!(s.len(), self.d, "user {i} dimension mismatch");
@@ -238,7 +304,7 @@ impl RoundEngine {
         let chunk = self.chunk;
         let mults = self.plan.triples_needed();
         let groups = partition(self.cfg.n, self.cfg.ell);
-        let threads = workers::span_split(d, workers::worker_pool_threads());
+        let threads = workers::span_split(d, self.threads);
 
         let plan = Arc::clone(&self.plan);
         let mut subgroup_votes = Vec::with_capacity(groups.len());
@@ -255,6 +321,10 @@ impl RoundEngine {
 
         self.rounds_run += 1;
         EngineOutcome { global_vote, subgroup_votes, stats }
+    }
+
+    fn rounds_run(&self) -> u64 {
+        self.rounds_run
     }
 }
 

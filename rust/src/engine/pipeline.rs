@@ -1,11 +1,12 @@
-//! The pipelined round scheduler: triple dealing overlapped with online
-//! evaluation.
+//! The single-tenant pipelined engine — a thin wrapper over a private
+//! one-session [`AggScheduler`].
 //!
-//! The paper's offline/online split (Table V) exists so triple generation
-//! never sits on the online critical path, yet the sequential
-//! [`crate::engine::RoundEngine`] deals synchronously inside `run_round`
-//! whenever the pool runs dry. [`PipelinedEngine`] moves dealing onto a
-//! **background provisioning stage**:
+//! Historically this file owned the whole pipelined round scheduler: a
+//! dedicated background `Provisioner` thread plus a per-engine
+//! [`WorkerPool`](super::workers::WorkerPool). That machinery now lives
+//! in [`super::scheduler`], generalized to many tenants; what remains
+//! here is the convenient "one engine, own infrastructure" construction
+//! the FL trainer's single-federation path and the benches use:
 //!
 //! ```text
 //!            round r                round r+1              round r+2
@@ -13,322 +14,117 @@
 //! offline  │ deal triples(r+1)    │ deal triples(r+2)    │ deal …
 //! ```
 //!
-//! Mechanics: [`GroupPools`] is the front buffer the scheduler consumes;
-//! the [`Provisioner`] thread owns every group's [`Dealer`] and deals the
-//! back buffer, handing completed [`RoundBatch`]es over an mpsc channel.
-//! At the top of each round the scheduler absorbs finished batches,
-//! blocks only if the front buffer cannot cover the round (the cold
-//! start), and then — before evaluating — requests the next batch so
-//! dealing proceeds *while* the span workers evaluate. Evaluation runs on
-//! the persistent [`WorkerPool`], all groups' spans in flight at once.
+//! Semantics are unchanged from the pre-scheduler engine: dealing for
+//! round `r+1` overlaps round `r`'s online phase, evaluation runs on a
+//! persistent worker pool, and votes are bit-identical to `run_sync` and
+//! the sequential [`super::RoundEngine`] (each group's dealer is seeded
+//! with [`crate::protocol::group_dealer_seed`], the provisioning plane
+//! advances each per-group stream strictly in round order, and pools
+//! refill a whole round at a time). `rust/tests/engine_props.rs` pins
+//! all of it; `rust/tests/sched_props.rs` additionally pins this wrapper
+//! bit-identical to scheduler sessions under tenant interleaving.
 //!
-//! **Determinism.** Votes are bit-identical to `run_sync` and the
-//! sequential engine: each group's dealer is seeded with
-//! [`group_dealer_seed`] (the same derivation as
-//! `protocol::run_sync`), the provisioner advances each per-group stream
-//! strictly in round order, and pools are refilled a whole round at a
-//! time — so party `i` of group `g` consumes exactly the triple sequence
-//! it would have consumed synchronously, no matter how dealing and
-//! evaluation interleave in wall-clock time. (The votes themselves are
-//! triple-independent — Beaver recombination cancels the masks exactly —
-//! so even transcript-level divergence could not change an outcome; the
-//! aligned streams keep the stronger share-for-share property.)
+//! To share infrastructure between several engines instead, construct
+//! them on one scheduler via [`PipelinedEngine::on_scheduler`] — or use
+//! [`AggScheduler::session`] directly.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
-use std::thread::JoinHandle;
-
-use crate::beaver::{Dealer, TripleShare};
 use crate::mpc::EvalPlan;
-use crate::poly::MvPolynomial;
-use crate::protocol::{group_dealer_seed, inter_group_vote, partition, HiSafeConfig};
+use crate::protocol::HiSafeConfig;
 
-use super::pool::{GroupPools, RoundBatch};
-use super::workers::{span_split, worker_pool_threads, SpanJob, WorkerPool};
-use super::{analytic_stats, EngineOutcome, DEFAULT_CHUNK};
-
-/// Handle to the background dealing stage: a thread owning all per-group
-/// dealers, a request channel ("deal `k` more rounds") and the handoff
-/// channel delivering one [`RoundBatch`] per dealt round.
-struct Provisioner {
-    req_tx: Option<Sender<usize>>,
-    dealt_rx: Receiver<RoundBatch>,
-    handle: Option<JoinHandle<()>>,
-}
-
-impl Provisioner {
-    fn spawn(mut dealers: Vec<Dealer>, d: usize, n1: usize, mults: usize) -> Provisioner {
-        let (req_tx, req_rx) = channel::<usize>();
-        let (dealt_tx, dealt_rx) = channel::<RoundBatch>();
-        let handle = std::thread::spawn(move || {
-            while let Ok(rounds) = req_rx.recv() {
-                for _ in 0..rounds {
-                    // Group order is fixed and each dealer only ever
-                    // advances here, so per-group streams are identical
-                    // to the synchronous engine's.
-                    let batch: RoundBatch = dealers
-                        .iter_mut()
-                        .map(|dealer| dealer.gen_round(d, n1, mults))
-                        .collect();
-                    if dealt_tx.send(batch).is_err() {
-                        return; // engine dropped mid-batch
-                    }
-                }
-            }
-        });
-        Provisioner { req_tx: Some(req_tx), dealt_rx, handle: Some(handle) }
-    }
-
-    fn request(&self, rounds: usize) {
-        self.req_tx
-            .as_ref()
-            .expect("provisioner queue open")
-            .send(rounds)
-            .expect("provisioner alive");
-    }
-
-    fn recv_round(&self) -> RoundBatch {
-        self.dealt_rx.recv().expect("provisioner alive")
-    }
-
-    fn try_recv_round(&self) -> Option<RoundBatch> {
-        self.dealt_rx.try_recv().ok()
-    }
-}
-
-impl Drop for Provisioner {
-    fn drop(&mut self) {
-        // Closing the request channel ends the thread's recv loop; an
-        // in-progress batch still sends fine (dealt_rx lives in self).
-        drop(self.req_tx.take());
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
+use super::scheduler::{AggScheduler, AggSession};
+use super::{Engine, EngineOutcome};
 
 /// Pipelined Hi-SAFE aggregation engine: the [`super::RoundEngine`]
 /// arithmetic (bit-identical votes) scheduled so the offline phase of
-/// round `r+1` overlaps the online phase of round `r`, with evaluation on
-/// a persistent worker pool instead of per-round thread spawns. The FL
-/// trainer's multi-round path runs through this engine; the sequential
-/// `RoundEngine` remains the reference.
+/// round `r+1` overlaps the online phase of round `r`, with evaluation
+/// on a persistent worker pool instead of per-round thread spawns. Since
+/// the multi-tenant refactor this is exactly one [`AggSession`] on a
+/// private [`AggScheduler`]; the FL trainer's single-federation path
+/// runs through it, and the sequential `RoundEngine` remains the
+/// reference.
 pub struct PipelinedEngine {
-    cfg: HiSafeConfig,
-    d: usize,
-    plan: Arc<EvalPlan>,
-    /// Front buffer: rounds ready to consume.
-    pools: GroupPools,
-    /// Back buffer: the background dealing stage.
-    provisioner: Provisioner,
-    workers: WorkerPool,
-    /// Rounds per provisioning request (default 1 — the double buffer).
-    batch_rounds: usize,
-    /// Rounds requested from the provisioner but not yet absorbed.
-    inflight_rounds: usize,
-    chunk: usize,
-    /// Rounds executed so far.
+    session: AggSession,
+    /// Rounds executed so far (kept as a public field for callers that
+    /// predate the [`Engine`] trait).
     pub rounds_run: u64,
 }
 
 impl PipelinedEngine {
-    /// Build a pipelined engine for `cfg` over `d`-coordinate votes.
+    /// Build a pipelined engine with its own private scheduler (one
+    /// worker pool + one provisioning plane serving this engine alone).
     /// `seed` drives all offline randomness, one independent stream per
     /// subgroup (same derivation as [`crate::protocol::run_sync`]).
     ///
     /// Dealing for the first round starts immediately on the background
-    /// stage, so caller-side work before the first `run_round` (gradient
+    /// plane, so caller-side work before the first `run_round` (gradient
     /// computation, say) already overlaps the offline phase.
     pub fn new(cfg: HiSafeConfig, d: usize, seed: u64) -> PipelinedEngine {
-        let n1 = cfg.n1();
-        let mv = MvPolynomial::build_fermat(n1, cfg.intra);
-        let plan = Arc::new(EvalPlan::new(&mv, d, cfg.sparse));
-        let dealers: Vec<Dealer> = (0..cfg.ell)
-            .map(|g| Dealer::new(plan.fp, group_dealer_seed(seed, g)))
-            .collect();
-        let mults = plan.triples_needed();
-        let provisioner = Provisioner::spawn(dealers, d, n1, mults);
-        let workers = WorkerPool::new(worker_pool_threads());
-        let mut engine = PipelinedEngine {
-            cfg,
-            d,
-            plan,
-            pools: GroupPools::new(cfg.ell, n1),
-            provisioner,
-            workers,
-            batch_rounds: 1,
-            inflight_rounds: 0,
-            chunk: DEFAULT_CHUNK,
-            rounds_run: 0,
-        };
-        if mults > 0 {
-            engine.request_batch();
-        }
-        engine
+        Self::on_scheduler(&AggScheduler::new(), cfg, d, seed)
     }
 
-    /// Override the SoA lane-chunk size (tests sweep this to prove chunk
-    /// invariance; benches tune it).
-    pub fn with_chunk(mut self, chunk: usize) -> PipelinedEngine {
-        assert!(chunk >= 1, "chunk must be ≥ 1");
-        self.chunk = chunk;
+    /// Build the engine as one tenant of `sched` — several engines built
+    /// this way share one worker pool and one provisioning plane instead
+    /// of spawning their own. Tests also use this with
+    /// [`AggScheduler::with_threads`] to pin `threads = 1`
+    /// deterministically.
+    pub fn on_scheduler(
+        sched: &AggScheduler,
+        cfg: HiSafeConfig,
+        d: usize,
+        seed: u64,
+    ) -> PipelinedEngine {
+        PipelinedEngine { session: sched.session(cfg, d, seed), rounds_run: 0 }
+    }
+
+    /// Test-only view of the session (e.g. for pool audits).
+    #[cfg(test)]
+    pub(crate) fn session_mut(&mut self) -> &mut AggSession {
+        &mut self.session
+    }
+}
+
+impl Engine for PipelinedEngine {
+    fn with_chunk(mut self, chunk: usize) -> PipelinedEngine {
+        self.session = self.session.with_chunk(chunk);
         self
     }
 
-    /// Provision `rounds` rounds per background request (default 1).
-    /// Larger batches amortize handoffs at the cost of pooled memory.
-    pub fn with_batch_rounds(mut self, rounds: usize) -> PipelinedEngine {
-        assert!(rounds >= 1, "batch must be ≥ 1");
-        self.batch_rounds = rounds;
+    fn with_batch_rounds(mut self, rounds: usize) -> PipelinedEngine {
+        self.session = self.session.with_batch_rounds(rounds);
         self
     }
 
-    /// The evaluation plan the engine executes (schedule, coefficients).
-    pub fn plan(&self) -> &EvalPlan {
-        &self.plan
+    fn plan(&self) -> &EvalPlan {
+        self.session.plan()
     }
 
-    /// Rounds' worth of triples currently in the front buffer (min across
-    /// groups *and* parties; excludes in-flight background batches).
-    pub fn provisioned_rounds(&self) -> usize {
-        self.pools.provisioned_rounds(self.plan.triples_needed())
+    fn provisioned_rounds(&self) -> usize {
+        self.session.provisioned_rounds()
     }
 
-    /// Synchronously fill the front buffer to at least `rounds` rounds —
-    /// benches use this to move the offline phase out of the measured
-    /// loop entirely (the paper's offline/online split, Table V).
-    pub fn provision(&mut self, rounds: usize) {
-        let mults = self.plan.triples_needed();
-        if mults == 0 {
-            return;
-        }
-        self.absorb_ready_batches();
-        while self.pools.provisioned_rounds(mults) < rounds {
-            if self.inflight_rounds == 0 {
-                let missing = rounds - self.pools.provisioned_rounds(mults);
-                self.provisioner.request(missing);
-                self.inflight_rounds += missing;
-            }
-            self.recv_one_round();
-        }
+    fn provision(&mut self, rounds: usize) {
+        self.session.provision(rounds);
     }
 
-    fn request_batch(&mut self) {
-        self.provisioner.request(self.batch_rounds);
-        self.inflight_rounds += self.batch_rounds;
+    fn run_round(&mut self, signs: &[Vec<i8>]) -> EngineOutcome {
+        let out = self.session.run_round(signs);
+        self.rounds_run = self.session.rounds_run();
+        out
     }
 
-    fn recv_one_round(&mut self) {
-        let batch = self.provisioner.recv_round();
-        self.pools.refill_round(batch);
-        self.inflight_rounds -= 1;
-    }
-
-    fn absorb_ready_batches(&mut self) {
-        while let Some(batch) = self.provisioner.try_recv_round() {
-            self.pools.refill_round(batch);
-            self.inflight_rounds -= 1;
-        }
-    }
-
-    /// Execute one Hi-SAFE aggregation round. `signs[i]` is user `i`'s ±1
-    /// sign-gradient vector; users are partitioned into subgroups exactly
-    /// like [`crate::protocol::run_sync`]. Votes are bit-identical to the
-    /// sequential engine's and to `run_sync`'s.
-    pub fn run_round(&mut self, signs: &[Vec<i8>]) -> EngineOutcome {
-        assert_eq!(signs.len(), self.cfg.n, "need exactly n sign vectors");
-        for (i, s) in signs.iter().enumerate() {
-            assert_eq!(s.len(), self.d, "user {i} dimension mismatch");
-        }
-        let mults = self.plan.triples_needed();
-        if mults > 0 {
-            // Absorb whatever the background stage finished since the
-            // last round, without blocking.
-            self.absorb_ready_batches();
-            // Cold start / catch-up: block until this round is covered.
-            while self.pools.provisioned_rounds(mults) == 0 {
-                if self.inflight_rounds == 0 {
-                    self.request_batch();
-                }
-                self.recv_one_round();
-            }
-            // The overlap: keep a batch in flight so round r+1's triples
-            // are dealt while this round's online phase evaluates below.
-            if self.inflight_rounds == 0
-                && self.pools.provisioned_rounds(mults) < 1 + self.batch_rounds
-            {
-                self.request_batch();
-            }
-        }
-
-        let fp = self.plan.fp;
-        let d = self.d;
-        let n1 = self.cfg.n1();
-        let groups = partition(self.cfg.n, self.cfg.ell);
-        // Same split policy as the sequential engine; below PAR_MIN_D
-        // one span per group still parallelizes across groups.
-        let spans = span_split(d, self.workers.threads());
-        let span_len = d.div_ceil(spans);
-
-        let (out_tx, out_rx) = channel::<(usize, Vec<i8>)>();
-        // slot -> (group, base, len); results reassemble by slot, so
-        // worker completion order cannot affect the votes.
-        let mut slots: Vec<(usize, usize, usize)> = Vec::new();
-        for (g, members) in groups.iter().enumerate() {
-            // Cloning the members' sign vectors makes the job 'static for
-            // the persistent workers. The copy is n₁·d bytes per group
-            // (~600 KB per round at n=24, d=25,450 — well under 1% of the
-            // round's field work), the price of keeping `run_round`'s
-            // borrow-based signature identical to the sequential engine's.
-            let group_signs: Arc<Vec<Vec<i8>>> =
-                Arc::new(members.iter().map(|&u| signs[u].clone()).collect());
-            let triples: Arc<Vec<Vec<TripleShare>>> = Arc::new(if mults > 0 {
-                self.pools.take_round_owned(g, mults)
-            } else {
-                vec![Vec::new(); n1]
-            });
-            let mut base = 0usize;
-            while base < d {
-                let len = span_len.min(d - base);
-                let slot = slots.len();
-                slots.push((g, base, len));
-                self.workers.submit(SpanJob {
-                    fp,
-                    plan: Arc::clone(&self.plan),
-                    signs: Arc::clone(&group_signs),
-                    triples: Arc::clone(&triples),
-                    base,
-                    len,
-                    chunk: self.chunk,
-                    slot,
-                    out: out_tx.clone(),
-                });
-                base += len;
-            }
-        }
-        drop(out_tx);
-
-        let mut subgroup_votes: Vec<Vec<i8>> = vec![vec![0i8; d]; groups.len()];
-        for _ in 0..slots.len() {
-            let (slot, span_votes) = out_rx.recv().expect("span worker alive");
-            let (g, b, len) = slots[slot];
-            subgroup_votes[g][b..b + len].copy_from_slice(&span_votes);
-        }
-
-        let global_vote = inter_group_vote(&subgroup_votes, self.cfg.inter);
-        let stats = analytic_stats(&self.cfg, &self.plan, d);
-        self.rounds_run += 1;
-        EngineOutcome { global_vote, subgroup_votes, stats }
+    fn rounds_run(&self) -> u64 {
+        self.rounds_run
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::beaver::Dealer;
     use crate::engine::RoundEngine;
     use crate::mpc::plain_group_vote;
     use crate::poly::TiePolicy;
-    use crate::protocol::plain_hierarchical_vote;
+    use crate::protocol::{group_dealer_seed, plain_hierarchical_vote};
     use crate::util::rng::{Rng, Xoshiro256pp};
 
     fn rand_signs(n: usize, d: usize, seed: u64) -> Vec<Vec<i8>> {
@@ -402,15 +198,13 @@ mod tests {
     }
 
     #[test]
-    fn pipelined_triple_streams_match_group_dealer_seed_derivation() {
+    fn wrapper_triple_streams_match_group_dealer_seed_derivation() {
         // Vote equality alone cannot pin the offline phase: Beaver masks
         // cancel exactly, so votes come out right under ANY triple
-        // stream. This pins the streams themselves — the provisioner's
-        // pooled triples must equal, share for share and round for
-        // round, a dealer seeded with `group_dealer_seed(seed, g)` (the
-        // run_sync derivation). A regression that collapsed the
-        // per-group stride (reusing masks across subgroups, breaking
-        // the Lemma-2 freshness argument) fails here and nowhere else.
+        // stream. This pins the wrapper's pooled triples to a dealer
+        // seeded with `group_dealer_seed(seed, g)` (the run_sync
+        // derivation); the multi-tenant variant of the same audit lives
+        // in engine/scheduler.rs.
         let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
         let d = 5;
         let seed = 77u64;
@@ -424,7 +218,11 @@ mod tests {
             for round in 0..2 {
                 let expect = reference.gen_round(d, cfg.n1(), mults);
                 for (party, expect_party) in expect.iter().enumerate() {
-                    let got = engine.pools.store_mut(g, party).take_many(mults);
+                    let got = engine
+                        .session_mut()
+                        .pools_mut()
+                        .store_mut(g, party)
+                        .take_many(mults);
                     assert_eq!(got.len(), mults);
                     for (t, e) in got.iter().zip(expect_party) {
                         assert_eq!(t.a, e.a, "g={g} party={party} round={round}");
@@ -443,5 +241,25 @@ mod tests {
         let signs = rand_signs(6, d, 41);
         let got = PipelinedEngine::new(cfg, d, 19).run_round(&signs);
         assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+    }
+
+    #[test]
+    fn engines_sharing_one_scheduler_match_dedicated_engines() {
+        let sched = AggScheduler::with_threads(1);
+        let cfg_a = HiSafeConfig::hierarchical(12, 4, TiePolicy::OneBit);
+        let cfg_b = HiSafeConfig::flat(4, TiePolicy::TwoBit);
+        let mut shared_a = PipelinedEngine::on_scheduler(&sched, cfg_a, 9, 5);
+        let mut shared_b = PipelinedEngine::on_scheduler(&sched, cfg_b, 13, 6);
+        let mut dedicated_a = PipelinedEngine::new(cfg_a, 9, 5);
+        let mut dedicated_b = PipelinedEngine::new(cfg_b, 13, 6);
+        for r in 0..3u64 {
+            let signs_a = rand_signs(12, 9, 50 + r);
+            let signs_b = rand_signs(4, 13, 60 + r);
+            let sa = shared_a.run_round(&signs_a);
+            let sb = shared_b.run_round(&signs_b);
+            assert_eq!(sa.global_vote, dedicated_a.run_round(&signs_a).global_vote);
+            assert_eq!(sb.global_vote, dedicated_b.run_round(&signs_b).global_vote);
+        }
+        assert_eq!(sched.worker_threads(), 1, "shared engines spawn no extra pools");
     }
 }

@@ -6,9 +6,12 @@
 //!
 //! * the sequential [`crate::engine::RoundEngine`], which refills lazily
 //!   on the round path (via [`GroupPools::deal_into`]), and
-//! * the [`crate::engine::PipelinedEngine`], whose background
-//!   provisioning stage hands freshly dealt rounds over a channel as
-//!   [`RoundBatch`]es ([`GroupPools::refill_round`]).
+//! * the scheduler's [`crate::engine::AggSession`]s (and therefore the
+//!   [`crate::engine::PipelinedEngine`] wrapper): pools stay **owned
+//!   per-session** — no tenant can ever draw from another's stores —
+//!   while the shared provisioning plane hands freshly dealt rounds over
+//!   the session's private channel as [`RoundBatch`]es
+//!   ([`GroupPools::refill_round`]).
 //!
 //! Accounting is **party-aware**: `provisioned_rounds` takes the minimum
 //! remaining across *parties* as well as groups. The dealing paths always

@@ -1,0 +1,719 @@
+//! The multi-tenant aggregation scheduler: many `(cfg, d)` workloads on
+//! one shared worker pool and one provisioning plane.
+//!
+//! [`crate::engine::PipelinedEngine`] proved out the offline/online
+//! overlap, but it was single-tenant: every engine spawned its own
+//! [`WorkerPool`] and its own background dealer thread, so `k` concurrent
+//! federations oversubscribed the machine `k`-fold. [`AggScheduler`]
+//! inverts the ownership: the *scheduler* owns exactly one worker pool
+//! and one provisioning plane, and hands out per-tenant [`AggSession`]
+//! handles that expose the engine surface (`provision` / `run_round`) —
+//! the heavy-traffic shape (ROADMAP: "multi-engine sharding across
+//! configs").
+//!
+//! ```text
+//!                ┌──────────────── AggScheduler ────────────────┐
+//!                │  WorkerPool (N span threads, shared)         │
+//!                │  provisioning plane (1 dealer thread,        │
+//!                │    round-robin across tenants)               │
+//!                └──────┬──────────────┬──────────────┬─────────┘
+//!   AggSession A (cfg_A, d_A)   session B (cfg_B, d_B)   session C …
+//!   own GroupPools, own plan    own GroupPools, own plan
+//! ```
+//!
+//! **Determinism under multiplexing.** A session's votes are bit-identical
+//! to a dedicated [`crate::engine::PipelinedEngine`] and to `run_sync`, no matter how
+//! tenants' rounds interleave, because the only cross-tenant shared state
+//! is *stateless with respect to the protocol*:
+//!
+//! * The provisioning plane keeps each session's per-group [`Dealer`]s
+//!   private to that session's registration. Group `g` of session `s` is
+//!   seeded with [`group_dealer_seed`]`(seed_s, g)` — the same derivation
+//!   `run_sync` and the dedicated engines use — and the plane only ever
+//!   advances a dealer in whole-round steps, in round order, regardless
+//!   of which tenants' requests interleave between those steps. Party `i`
+//!   of group `g` therefore consumes exactly the triple stream it would
+//!   have consumed on dedicated infrastructure (pinned share-for-share by
+//!   the in-crate stream test below).
+//! * Span workers are pure functions of their job (`workers::eval_span`
+//!   never holds state across jobs), jobs are tagged with their session
+//!   id, and each session reassembles results from its own channel keyed
+//!   by slot — worker interleaving across tenants cannot reorder or
+//!   cross-wire any tenant's votes.
+//! * [`GroupPools`] stay owned per-session; the plane only *refills* them
+//!   through the session's private handoff channel.
+//!
+//! Fairness and isolation: the plane deals one round per request-holding
+//! tenant in round-robin order (a tenant with a huge `provision` request
+//! cannot starve the others), and a session dropped mid-stream simply
+//! deregisters — in-flight batches for it fail their handoff send and are
+//! discarded without stalling any other tenant (regression-tested).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::beaver::{Dealer, TripleShare};
+use crate::mpc::EvalPlan;
+use crate::poly::MvPolynomial;
+use crate::protocol::{group_dealer_seed, inter_group_vote, partition, HiSafeConfig};
+
+use super::pool::{GroupPools, RoundBatch};
+use super::workers::{
+    note_threads_joined, note_threads_spawned, span_split, worker_pool_threads, SpanJob,
+    SpanResult, WorkerPool,
+};
+use super::{analytic_stats, Engine, EngineOutcome, DEFAULT_CHUNK};
+
+/// Commands to the provisioning plane's dealer thread.
+enum PlaneCmd {
+    /// A new tenant: its dealers (one per group, pre-seeded), workload
+    /// shape, and the handoff channel its dealt rounds go down.
+    Register {
+        sid: u64,
+        dealers: Vec<Dealer>,
+        d: usize,
+        n1: usize,
+        mults: usize,
+        dealt_tx: Sender<RoundBatch>,
+    },
+    /// Deal `rounds` more rounds for tenant `sid` (queued; the plane
+    /// interleaves tenants one round at a time).
+    Request { sid: u64, rounds: usize },
+    /// Tenant is gone; drop its dealers and any queued work.
+    Deregister { sid: u64 },
+}
+
+/// One tenant's state inside the plane thread.
+struct Tenant {
+    sid: u64,
+    dealers: Vec<Dealer>,
+    d: usize,
+    n1: usize,
+    mults: usize,
+    dealt_tx: Sender<RoundBatch>,
+    /// Rounds requested but not yet dealt.
+    pending: usize,
+}
+
+impl Tenant {
+    /// Deal exactly one round: every group's dealer advances one
+    /// whole-round step, in group order — the per-group streams stay
+    /// identical to a dedicated engine's no matter what the plane dealt
+    /// for other tenants in between.
+    fn deal_one_round(&mut self) -> RoundBatch {
+        self.dealers
+            .iter_mut()
+            .map(|dealer| dealer.gen_round(self.d, self.n1, self.mults))
+            .collect()
+    }
+}
+
+fn apply_cmd(tenants: &mut Vec<Tenant>, cmd: PlaneCmd) {
+    match cmd {
+        PlaneCmd::Register { sid, dealers, d, n1, mults, dealt_tx } => {
+            tenants.push(Tenant { sid, dealers, d, n1, mults, dealt_tx, pending: 0 });
+        }
+        PlaneCmd::Request { sid, rounds } => {
+            // A request for an already-deregistered session is ignored
+            // (it can race the Deregister through the same channel).
+            if let Some(t) = tenants.iter_mut().find(|t| t.sid == sid) {
+                t.pending += rounds;
+            }
+        }
+        PlaneCmd::Deregister { sid } => {
+            tenants.retain(|t| t.sid != sid);
+        }
+    }
+}
+
+/// The plane's dealer loop: absorb commands (blocking only when no
+/// tenant has pending work), then deal ONE round for the next pending
+/// tenant in round-robin order. One round — not one request — is the
+/// fairness quantum, so a tenant pre-provisioning 100 rounds cannot
+/// starve another tenant's cold start.
+fn plane_loop(cmd_rx: Receiver<PlaneCmd>) {
+    let mut tenants: Vec<Tenant> = Vec::new();
+    let mut cursor = 0usize;
+    loop {
+        if tenants.iter().any(|t| t.pending > 0) {
+            // Drain without blocking; on disconnect keep draining pending
+            // work — dead sessions' sends fail below and clean themselves
+            // up.
+            while let Ok(cmd) = cmd_rx.try_recv() {
+                apply_cmd(&mut tenants, cmd);
+            }
+        } else {
+            match cmd_rx.recv() {
+                Ok(cmd) => {
+                    apply_cmd(&mut tenants, cmd);
+                    continue;
+                }
+                // Scheduler and every session dropped: plane exits.
+                Err(_) => return,
+            }
+        }
+
+        let k = tenants.len();
+        for step in 0..k {
+            let i = (cursor + step) % k;
+            if tenants[i].pending == 0 {
+                continue;
+            }
+            let batch = tenants[i].deal_one_round();
+            tenants[i].pending -= 1;
+            if tenants[i].dealt_tx.send(batch).is_ok() {
+                cursor = (i + 1) % k;
+            } else {
+                // Session dropped mid-stream: discard it without
+                // touching any other tenant's queue. The tenant that
+                // shifts into slot `i` is the rightful next in
+                // round-robin order, so the cursor points at it.
+                tenants.remove(i);
+                cursor = if tenants.is_empty() { 0 } else { i % tenants.len() };
+            }
+            break;
+        }
+    }
+}
+
+/// Shared infrastructure: the one worker pool and the one provisioning
+/// plane every session of a scheduler runs on. Sessions keep it alive
+/// through an `Arc`, so a scheduler handle may be dropped while its
+/// sessions keep running.
+struct SchedCore {
+    workers: WorkerPool,
+    /// Kept open for registering new sessions; closing it (last owner
+    /// dropping) is what lets the plane thread exit.
+    plane_tx: Option<Sender<PlaneCmd>>,
+    plane: Option<JoinHandle<()>>,
+    next_sid: AtomicU64,
+}
+
+impl Drop for SchedCore {
+    fn drop(&mut self) {
+        // Close the command channel first (sessions' clones are already
+        // gone — they hold the Arc this drop is the last owner of), then
+        // join: the plane's blocking recv errors out and it returns.
+        drop(self.plane_tx.take());
+        if let Some(h) = self.plane.take() {
+            let _ = h.join();
+            note_threads_joined(1);
+        }
+        // WorkerPool's own Drop closes the job queue and joins workers.
+    }
+}
+
+/// Multi-tenant aggregation scheduler: owns exactly one process-visible
+/// [`WorkerPool`] and one provisioning plane, multiplexing any number of
+/// concurrent `(HiSafeConfig, d, seed)` tenants. Create tenants with
+/// [`AggScheduler::session`]; each [`AggSession`] exposes the familiar
+/// engine surface and produces votes bit-identical to a dedicated
+/// [`PipelinedEngine`](super::PipelinedEngine) and to
+/// [`run_sync`](crate::protocol::run_sync), however tenants interleave.
+///
+/// The handle is cheap to clone (it is an `Arc` underneath); the shared
+/// threads live until the last handle *and* last session are gone.
+#[derive(Clone)]
+pub struct AggScheduler {
+    core: Arc<SchedCore>,
+}
+
+impl Default for AggScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AggScheduler {
+    /// A scheduler with the default thread policy: every available core
+    /// up to the bandwidth cap, overridable via `HISAFE_THREADS`
+    /// (resolved once, here — never re-read on the round path).
+    pub fn new() -> AggScheduler {
+        Self::with_threads(worker_pool_threads())
+    }
+
+    /// A scheduler with an explicitly pinned worker count — tests pin
+    /// `threads = 1` for deterministic single-threaded evaluation.
+    pub fn with_threads(threads: usize) -> AggScheduler {
+        assert!(threads >= 1, "scheduler needs at least one worker thread");
+        let (plane_tx, cmd_rx) = channel::<PlaneCmd>();
+        let plane = std::thread::spawn(move || plane_loop(cmd_rx));
+        note_threads_spawned(1);
+        AggScheduler {
+            core: Arc::new(SchedCore {
+                workers: WorkerPool::new(threads),
+                plane_tx: Some(plane_tx),
+                plane: Some(plane),
+                next_sid: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Live span-worker threads — one pool's worth, shared by every
+    /// session, independent of how many tenants are registered.
+    pub fn worker_threads(&self) -> usize {
+        self.core.workers.threads()
+    }
+
+    /// Threads in the provisioning plane (currently a single dealer
+    /// thread round-robining across tenants).
+    pub fn dealer_threads(&self) -> usize {
+        1
+    }
+
+    /// Open a tenant session for `cfg` over `d`-coordinate votes. `seed`
+    /// drives all of this tenant's offline randomness, one independent
+    /// stream per subgroup — the same [`group_dealer_seed`] derivation as
+    /// [`run_sync`](crate::protocol::run_sync) and the dedicated engines,
+    /// which is what keeps sessions bit-identical to them.
+    ///
+    /// Dealing for the session's first round starts immediately on the
+    /// shared plane, so caller-side work before the first `run_round`
+    /// already overlaps the offline phase.
+    pub fn session(&self, cfg: HiSafeConfig, d: usize, seed: u64) -> AggSession {
+        let n1 = cfg.n1();
+        let mv = MvPolynomial::build_fermat(n1, cfg.intra);
+        let plan = Arc::new(EvalPlan::new(&mv, d, cfg.sparse));
+        let dealers: Vec<Dealer> = (0..cfg.ell)
+            .map(|g| Dealer::new(plan.fp, group_dealer_seed(seed, g)))
+            .collect();
+        let mults = plan.triples_needed();
+        let sid = self.core.next_sid.fetch_add(1, Ordering::Relaxed);
+        let plane_tx = self.core.plane_tx.as_ref().expect("plane open").clone();
+        let (dealt_tx, dealt_rx) = channel::<RoundBatch>();
+        plane_tx
+            .send(PlaneCmd::Register { sid, dealers, d, n1, mults, dealt_tx })
+            .expect("provisioning plane alive");
+        let mut session = AggSession {
+            sid,
+            cfg,
+            d,
+            plan,
+            pools: GroupPools::new(cfg.ell, n1),
+            plane_tx,
+            dealt_rx,
+            jobs: self.core.workers.sender(),
+            threads: self.core.workers.threads(),
+            batch_rounds: 1,
+            inflight_rounds: 0,
+            chunk: DEFAULT_CHUNK,
+            rounds_run: 0,
+            core: Arc::clone(&self.core),
+        };
+        if mults > 0 {
+            session.request_rounds(1);
+        }
+        session
+    }
+}
+
+/// One tenant's handle on shared scheduler infrastructure: its own
+/// [`EvalPlan`] and [`GroupPools`], refilled by the shared provisioning
+/// plane and evaluated on the shared worker pool. Implements [`Engine`]
+/// with the exact `PipelinedEngine` semantics (which is now a thin
+/// wrapper around a single-tenant session).
+pub struct AggSession {
+    sid: u64,
+    cfg: HiSafeConfig,
+    d: usize,
+    plan: Arc<EvalPlan>,
+    /// Front buffer: rounds ready to consume (owned per-session).
+    pools: GroupPools,
+    /// Command path to the shared plane (also keeps the plane alive).
+    plane_tx: Sender<PlaneCmd>,
+    /// This session's private handoff channel from the plane.
+    dealt_rx: Receiver<RoundBatch>,
+    /// This session's handle on the shared job queue. Span results come
+    /// back on a channel created fresh per round (see `run_round`): the
+    /// round drops its sender after submission, so a worker dying before
+    /// delivering a slot disconnects the channel and fails loudly
+    /// instead of blocking the session forever.
+    jobs: Sender<SpanJob>,
+    /// Worker count, resolved once by the scheduler at construction.
+    threads: usize,
+    /// Rounds per provisioning request (default 1 — the double buffer).
+    batch_rounds: usize,
+    /// Rounds requested from the plane but not yet absorbed.
+    inflight_rounds: usize,
+    chunk: usize,
+    rounds_run: u64,
+    /// Keeps the shared pool + plane alive while any session runs.
+    /// Declared last: the drop-order guarantee means our `plane_tx`
+    /// clone is gone before the core (possibly) joins the plane thread.
+    core: Arc<SchedCore>,
+}
+
+impl Drop for AggSession {
+    fn drop(&mut self) {
+        // Best-effort: stop the plane dealing rounds nobody will read.
+        // The handoff channel closing is the hard backstop — a racing
+        // in-flight batch fails its send and evicts the tenant anyway.
+        let _ = self.plane_tx.send(PlaneCmd::Deregister { sid: self.sid });
+    }
+}
+
+impl AggSession {
+    /// The session id the scheduler assigned this tenant (diagnostic;
+    /// span jobs and results are tagged with it).
+    pub fn id(&self) -> u64 {
+        self.sid
+    }
+
+    fn request_rounds(&mut self, rounds: usize) {
+        self.plane_tx
+            .send(PlaneCmd::Request { sid: self.sid, rounds })
+            .expect("provisioning plane alive");
+        self.inflight_rounds += rounds;
+    }
+
+    fn recv_one_round(&mut self) {
+        let batch = self.dealt_rx.recv().expect("provisioning plane alive");
+        self.pools.refill_round(batch);
+        self.inflight_rounds -= 1;
+    }
+
+    fn absorb_ready_batches(&mut self) {
+        while let Ok(batch) = self.dealt_rx.try_recv() {
+            self.pools.refill_round(batch);
+            self.inflight_rounds -= 1;
+        }
+    }
+
+    /// Test-only view of the front buffer (the stream-derivation test
+    /// audits pooled triples share-for-share).
+    #[cfg(test)]
+    pub(crate) fn pools_mut(&mut self) -> &mut GroupPools {
+        &mut self.pools
+    }
+}
+
+impl Engine for AggSession {
+    fn with_chunk(mut self, chunk: usize) -> AggSession {
+        assert!(chunk >= 1, "chunk must be ≥ 1");
+        self.chunk = chunk;
+        self
+    }
+
+    fn with_batch_rounds(mut self, rounds: usize) -> AggSession {
+        assert!(rounds >= 1, "batch must be ≥ 1");
+        self.batch_rounds = rounds;
+        self
+    }
+
+    fn plan(&self) -> &EvalPlan {
+        &self.plan
+    }
+
+    fn provisioned_rounds(&self) -> usize {
+        self.pools.provisioned_rounds(self.plan.triples_needed())
+    }
+
+    fn provision(&mut self, rounds: usize) {
+        let mults = self.plan.triples_needed();
+        if mults == 0 {
+            return;
+        }
+        self.absorb_ready_batches();
+        while self.pools.provisioned_rounds(mults) < rounds {
+            if self.inflight_rounds == 0 {
+                let missing = rounds - self.pools.provisioned_rounds(mults);
+                self.request_rounds(missing);
+            }
+            self.recv_one_round();
+        }
+    }
+
+    fn run_round(&mut self, signs: &[Vec<i8>]) -> EngineOutcome {
+        assert_eq!(signs.len(), self.cfg.n, "need exactly n sign vectors");
+        for (i, s) in signs.iter().enumerate() {
+            assert_eq!(s.len(), self.d, "user {i} dimension mismatch");
+        }
+        let mults = self.plan.triples_needed();
+        if mults > 0 {
+            // Absorb whatever the plane finished since the last round,
+            // without blocking.
+            self.absorb_ready_batches();
+            // Cold start / catch-up: block until this round is covered.
+            while self.pools.provisioned_rounds(mults) == 0 {
+                if self.inflight_rounds == 0 {
+                    self.request_rounds(self.batch_rounds);
+                }
+                self.recv_one_round();
+            }
+            // The overlap: keep a batch in flight so round r+1's triples
+            // are dealt while this round's online phase evaluates below.
+            if self.inflight_rounds == 0
+                && self.pools.provisioned_rounds(mults) < 1 + self.batch_rounds
+            {
+                self.request_rounds(self.batch_rounds);
+            }
+        }
+
+        let fp = self.plan.fp;
+        let d = self.d;
+        let n1 = self.cfg.n1();
+        let groups = partition(self.cfg.n, self.cfg.ell);
+        // Same split policy as the sequential engine; below PAR_MIN_D
+        // one span per group still parallelizes across groups.
+        let spans = span_split(d, self.threads);
+        let span_len = d.div_ceil(spans);
+
+        // Per-round result channel: jobs carry clones of out_tx, the
+        // round drops its own sender after submission, and reassembly is
+        // slot-keyed — so worker completion order cannot affect votes,
+        // other tenants' in-flight rounds cannot cross-wire them (the
+        // channel is private to this session's round, with the session
+        // tag asserted on receipt), and a worker panicking before it
+        // sends disconnects the channel instead of hanging the round.
+        let (out_tx, out_rx) = channel::<SpanResult>();
+        // slot -> (group, base, len)
+        let mut slots: Vec<(usize, usize, usize)> = Vec::new();
+        for (g, members) in groups.iter().enumerate() {
+            // Cloning the members' sign vectors makes the job 'static for
+            // the shared workers — n₁·d bytes per group, well under 1% of
+            // the round's field work (see PipelinedEngine's history).
+            let group_signs: Arc<Vec<Vec<i8>>> =
+                Arc::new(members.iter().map(|&u| signs[u].clone()).collect());
+            let triples: Arc<Vec<Vec<TripleShare>>> = Arc::new(if mults > 0 {
+                self.pools.take_round_owned(g, mults)
+            } else {
+                vec![Vec::new(); n1]
+            });
+            let mut base = 0usize;
+            while base < d {
+                let len = span_len.min(d - base);
+                let slot = slots.len();
+                slots.push((g, base, len));
+                self.jobs
+                    .send(SpanJob {
+                        session: self.sid,
+                        fp,
+                        plan: Arc::clone(&self.plan),
+                        signs: Arc::clone(&group_signs),
+                        triples: Arc::clone(&triples),
+                        base,
+                        len,
+                        chunk: self.chunk,
+                        slot,
+                        out: out_tx.clone(),
+                    })
+                    .expect("shared worker pool alive");
+                base += len;
+            }
+        }
+        drop(out_tx);
+
+        let mut subgroup_votes: Vec<Vec<i8>> = vec![vec![0i8; d]; groups.len()];
+        for _ in 0..slots.len() {
+            let (sid, slot, span_votes) = out_rx.recv().expect("span worker alive");
+            assert_eq!(sid, self.sid, "span result crossed sessions");
+            let (g, b, len) = slots[slot];
+            subgroup_votes[g][b..b + len].copy_from_slice(&span_votes);
+        }
+
+        let global_vote = inter_group_vote(&subgroup_votes, self.cfg.inter);
+        let stats = analytic_stats(&self.cfg, &self.plan, d);
+        self.rounds_run += 1;
+        EngineOutcome { global_vote, subgroup_votes, stats }
+    }
+
+    fn rounds_run(&self) -> u64 {
+        self.rounds_run
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::plain_group_vote;
+    use crate::poly::TiePolicy;
+    use crate::protocol::plain_hierarchical_vote;
+    use crate::util::rng::{Rng, Xoshiro256pp};
+
+    fn rand_signs(n: usize, d: usize, seed: u64) -> Vec<Vec<i8>> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect()
+    }
+
+    #[test]
+    fn two_tenants_interleaved_match_plain_references() {
+        let sched = AggScheduler::with_threads(2);
+        let cfg_a = HiSafeConfig::hierarchical(12, 4, TiePolicy::TwoBit);
+        let cfg_b = HiSafeConfig::flat(5, TiePolicy::OneBit);
+        let mut a = sched.session(cfg_a, 9, 11);
+        let mut b = sched.session(cfg_b, 17, 3);
+        for r in 0..4u64 {
+            let signs_a = rand_signs(12, 9, 100 + r);
+            let signs_b = rand_signs(5, 17, 200 + r);
+            // Alternate which tenant goes first so rounds interleave in
+            // both orders.
+            if r % 2 == 0 {
+                let got = a.run_round(&signs_a);
+                assert_eq!(got.global_vote, plain_hierarchical_vote(&signs_a, cfg_a));
+                let got = b.run_round(&signs_b);
+                assert_eq!(got.global_vote, plain_group_vote(&signs_b, TiePolicy::OneBit));
+            } else {
+                let got = b.run_round(&signs_b);
+                assert_eq!(got.global_vote, plain_group_vote(&signs_b, TiePolicy::OneBit));
+                let got = a.run_round(&signs_a);
+                assert_eq!(got.global_vote, plain_hierarchical_vote(&signs_a, cfg_a));
+            }
+        }
+        assert_eq!(a.rounds_run(), 4);
+        assert_eq!(b.rounds_run(), 4);
+    }
+
+    #[test]
+    fn k_tenants_share_exactly_one_pool_and_one_plane() {
+        // Accessor-contract check: the counts the sweep command and the
+        // bench report must stay at one pool's worth however many
+        // tenants register. (The accessors return construction-time
+        // facts; the *measured* live-thread assertion — a spawn/join
+        // gauge proving sessions spawn nothing — lives in
+        // rust/tests/thread_budget.rs, a single-test process where the
+        // gauge is race-free.)
+        let sched = AggScheduler::with_threads(2);
+        assert_eq!(sched.worker_threads(), 2);
+        assert_eq!(sched.dealer_threads(), 1);
+        let mut sessions: Vec<AggSession> = (0..4)
+            .map(|i| {
+                sched.session(
+                    HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit),
+                    5 + i,
+                    i as u64,
+                )
+            })
+            .collect();
+        assert_eq!(sched.worker_threads(), 2, "sessions must not spawn workers");
+        assert_eq!(sched.dealer_threads(), 1, "sessions must not spawn dealers");
+        for (i, s) in sessions.iter_mut().enumerate() {
+            let signs = rand_signs(6, 5 + i, 7 + i as u64);
+            let got = s.run_round(&signs);
+            assert_eq!(
+                got.global_vote,
+                plain_hierarchical_vote(&signs, HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit))
+            );
+        }
+        assert_eq!(sched.worker_threads(), 2);
+    }
+
+    #[test]
+    fn dropping_one_session_mid_stream_leaves_others_running() {
+        let sched = AggScheduler::with_threads(1);
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut keep_a = sched.session(cfg, 7, 1);
+        let mut dropped = sched.session(cfg, 7, 2).with_batch_rounds(3);
+        let mut keep_b = sched.session(cfg, 7, 3);
+        for r in 0..2u64 {
+            for s in [&mut keep_a, &mut dropped, &mut keep_b] {
+                let signs = rand_signs(6, 7, 10 + r);
+                let got = s.run_round(&signs);
+                assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+            }
+        }
+        // Drop the middle tenant while it still has batches in flight
+        // (batch_rounds = 3 keeps its prefetch queue non-empty).
+        drop(dropped);
+        // Survivors must neither stall nor corrupt: both blocking
+        // provisioning (provision) and the normal round path still work.
+        keep_a.provision(2);
+        assert!(keep_a.provisioned_rounds() >= 2);
+        for r in 0..3u64 {
+            for s in [&mut keep_a, &mut keep_b] {
+                let signs = rand_signs(6, 7, 20 + r);
+                let got = s.run_round(&signs);
+                assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+            }
+        }
+        assert_eq!(keep_a.rounds_run(), 5);
+        assert_eq!(keep_b.rounds_run(), 5);
+    }
+
+    #[test]
+    fn sessions_outlive_their_scheduler_handle() {
+        let cfg = HiSafeConfig::flat(3, TiePolicy::OneBit);
+        let mut session = {
+            let sched = AggScheduler::with_threads(1);
+            sched.session(cfg, 6, 9)
+            // scheduler handle dropped here; the Arc'd core survives
+        };
+        for r in 0..3u64 {
+            let signs = rand_signs(3, 6, 30 + r);
+            let got = session.run_round(&signs);
+            assert_eq!(got.global_vote, plain_group_vote(&signs, TiePolicy::OneBit));
+        }
+    }
+
+    #[test]
+    fn zero_mult_tenants_never_touch_the_plane() {
+        // n₁ = 1 makes the vote polynomial the identity — no triples, no
+        // provisioning, and the session must not block on the plane.
+        let sched = AggScheduler::with_threads(1);
+        let mut s = sched.session(HiSafeConfig::flat(1, TiePolicy::OneBit), 7, 3);
+        let signs = rand_signs(1, 7, 9);
+        let got = s.run_round(&signs);
+        assert_eq!(got.global_vote, plain_group_vote(&signs, TiePolicy::OneBit));
+    }
+
+    #[test]
+    fn multiplexed_triple_streams_match_group_dealer_seed_derivation() {
+        // Vote equality alone cannot pin the offline phase: Beaver masks
+        // cancel exactly, so votes come out right under ANY triple
+        // stream. This pins the streams themselves — with TWO tenants
+        // interleaving their dealing on the shared plane, each session's
+        // pooled triples must equal, share for share and round for
+        // round, a dealer seeded with `group_dealer_seed(seed, g)` (the
+        // run_sync derivation). A regression that let one tenant's
+        // dealing advance another's streams (or collapsed the per-group
+        // stride) fails here and nowhere else.
+        let sched = AggScheduler::with_threads(1);
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let d = 5;
+        let (seed_a, seed_b) = (77u64, 91u64);
+        let mut a = sched.session(cfg, d, seed_a);
+        let mut b = sched.session(cfg, d, seed_b);
+        let mults = a.plan().triples_needed();
+        assert!(mults > 0, "n₁=3 needs secure multiplications");
+        let fp = a.plan().fp;
+        // Interleave the provisioning so the plane alternates tenants.
+        a.provision(1);
+        b.provision(2);
+        a.provision(2);
+        for (session, seed) in [(&mut a, seed_a), (&mut b, seed_b)] {
+            for g in 0..cfg.ell {
+                let mut reference = Dealer::new(fp, group_dealer_seed(seed, g));
+                for round in 0..2 {
+                    let expect = reference.gen_round(d, cfg.n1(), mults);
+                    for (party, expect_party) in expect.iter().enumerate() {
+                        let got = session.pools_mut().store_mut(g, party).take_many(mults);
+                        assert_eq!(got.len(), mults);
+                        for (t, e) in got.iter().zip(expect_party) {
+                            assert_eq!(t.a, e.a, "seed={seed} g={g} party={party} round={round}");
+                            assert_eq!(t.b, e.b, "seed={seed} g={g} party={party} round={round}");
+                            assert_eq!(t.c, e.c, "seed={seed} g={g} party={party} round={round}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_tenant_chunk_and_batch_are_observationally_invisible() {
+        let sched = AggScheduler::with_threads(2);
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let signs = rand_signs(6, 23, 9);
+        let baseline = plain_hierarchical_vote(&signs, cfg);
+        for (chunk, batch) in [(1usize, 1usize), (3, 2), (64, 3)] {
+            let got = sched
+                .session(cfg, 23, 4)
+                .with_chunk(chunk)
+                .with_batch_rounds(batch)
+                .run_round(&signs)
+                .global_vote;
+            assert_eq!(got, baseline, "chunk={chunk} batch={batch}");
+        }
+    }
+}

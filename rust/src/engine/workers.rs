@@ -1,4 +1,4 @@
-//! Span evaluation and the persistent worker pool.
+//! Span evaluation and the shared persistent worker pool.
 //!
 //! [`eval_span`] is the SoA polynomial-evaluation kernel both engines
 //! share (one coordinate span, lane-chunked, lazy modular reduction).
@@ -12,15 +12,19 @@
 //!   per-round `std::thread::scope` split (the reference path; spawn cost
 //!   is paid every round, which bounds small-`d` wins).
 //! * [`WorkerPool`] — a persistent pool spawned once per
-//!   [`crate::engine::PipelinedEngine`]. Span jobs carry ref-counted
-//!   owned inputs (`Arc`ed signs and triples) so they are `'static`, and
-//!   results return over a per-round channel keyed by slot index, making
-//!   reassembly order-independent and the votes deterministic.
+//!   [`crate::engine::AggScheduler`] and *shared by every session* the
+//!   scheduler multiplexes. Span jobs carry ref-counted owned inputs
+//!   (`Arc`ed signs and triples) so they are `'static`, and every job is
+//!   **tagged with its session id**: results return over the owning
+//!   session's result channel keyed by `(session, slot)`, so rounds of
+//!   different tenants can be in flight on the same workers at once and
+//!   reassembly stays per-tenant deterministic.
 //!
 //! The job queue is a shared `Mutex<Receiver<SpanJob>>`: workers take the
 //! lock only to *pick up* a job (the guard drops before evaluation), so
 //! pickup is serialized but evaluation is fully parallel.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -29,12 +33,53 @@ use crate::beaver::TripleShare;
 use crate::field::Fp;
 use crate::mpc::EvalPlan;
 
+/// Process-wide gauge of engine-subsystem threads: incremented at every
+/// spawn site (worker pools, provisioning planes), decremented after the
+/// corresponding join. Spawn/join both happen on the owner's thread, so
+/// the count is deterministic — no racing against thread start-up. This
+/// is what lets tests *measure* (not assume) that `k` tenants run on one
+/// pool's worth of threads; see [`live_engine_threads`].
+static LIVE_ENGINE_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Engine threads currently spawned and not yet joined, process-wide
+/// (span workers + provisioning planes). Exposed so the thread-budget
+/// test can assert the oversubscription fix on real counts.
+pub fn live_engine_threads() -> usize {
+    LIVE_ENGINE_THREADS.load(Ordering::SeqCst)
+}
+
+pub(crate) fn note_threads_spawned(n: usize) {
+    LIVE_ENGINE_THREADS.fetch_add(n, Ordering::SeqCst);
+}
+
+pub(crate) fn note_threads_joined(n: usize) {
+    LIVE_ENGINE_THREADS.fetch_sub(n, Ordering::SeqCst);
+}
+
 /// Worker count for a persistent pool: every core up to the engine's
 /// bandwidth-bound cap (small-`d` rounds simply leave workers idle; the
-/// pool costs nothing when unused).
+/// pool costs nothing when unused). A `HISAFE_THREADS` env override pins
+/// the count explicitly — resolved here, once, by whoever builds the
+/// pool (the scheduler), never re-read on the round path.
 pub(crate) fn worker_pool_threads() -> usize {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    cores.min(super::MAX_THREADS)
+    resolve_threads(std::env::var("HISAFE_THREADS").ok().as_deref(), cores)
+}
+
+/// Pure thread-count policy (unit-testable without touching the process
+/// environment): an explicit positive `HISAFE_THREADS` override wins;
+/// otherwise every available core up to [`super::MAX_THREADS`].
+/// A malformed or zero override is ignored rather than trusted —
+/// a typo'd env var must not wedge the pool at 0 workers.
+pub(crate) fn resolve_threads(env_override: Option<&str>, cores: usize) -> usize {
+    if let Some(raw) = env_override {
+        if let Ok(n) = raw.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    cores.clamp(1, super::MAX_THREADS)
 }
 
 /// How many spans to split a `d`-coordinate range into, given `threads`
@@ -50,11 +95,18 @@ pub(crate) fn span_split(d: usize, threads: usize) -> usize {
     }
 }
 
+/// One span-evaluation result: the originating session, the caller-side
+/// slot key, and the span's votes. Sessions assert the session id on
+/// receipt — a mis-routed result is a scheduler bug, not a vote glitch.
+pub(crate) type SpanResult = (u64, usize, Vec<i8>);
+
 /// One span-evaluation job: evaluate coordinates `[base, base + len)` of
-/// one subgroup and deliver `(slot, votes)` on `out`. All inputs are
-/// owned or ref-counted so the job is `'static` and can cross into a
-/// persistent worker.
+/// one subgroup and deliver `(session, slot, votes)` on `out`. All inputs
+/// are owned or ref-counted so the job is `'static` and can cross into a
+/// persistent worker shared between sessions.
 pub(crate) struct SpanJob {
+    /// Owning session (tenant) — results reassemble per-tenant.
+    pub session: u64,
     pub fp: Fp,
     pub plan: Arc<EvalPlan>,
     /// This subgroup's members' sign vectors (full `d`-length).
@@ -66,16 +118,21 @@ pub(crate) struct SpanJob {
     /// Span length.
     pub len: usize,
     pub chunk: usize,
-    /// Caller-side reassembly key.
+    /// Caller-side reassembly key (unique within the session's round).
     pub slot: usize,
-    /// Result channel: `(slot, span votes)`.
-    pub out: Sender<(usize, Vec<i8>)>,
+    /// Result channel: the owning session's.
+    pub out: Sender<SpanResult>,
 }
 
-/// Persistent span workers, spawned once per engine and fed over a shared
-/// queue — replacing the per-round `std::thread::scope` spawns whose cost
-/// bounded small-`d` parallel wins (ROADMAP). Dropping the pool closes
-/// the queue; workers drain and exit, and `drop` joins them.
+/// Persistent span workers, spawned once per scheduler and fed over a
+/// shared queue — replacing the per-round `std::thread::scope` spawns
+/// whose cost bounded small-`d` parallel wins (ROADMAP). Every session of
+/// a scheduler submits to the same queue through a cloned [`sender`], so
+/// `k` tenants still run on exactly one pool's worth of threads. Dropping
+/// the pool (with all session senders gone) closes the queue; workers
+/// drain and exit, and `drop` joins them.
+///
+/// [`sender`]: WorkerPool::sender
 pub(crate) struct WorkerPool {
     job_tx: Option<Sender<SpanJob>>,
     handles: Vec<JoinHandle<()>>,
@@ -86,7 +143,7 @@ impl WorkerPool {
         assert!(threads >= 1, "worker pool needs at least one thread");
         let (job_tx, job_rx) = channel::<SpanJob>();
         let job_rx = Arc::new(Mutex::new(job_rx));
-        let handles = (0..threads)
+        let handles: Vec<JoinHandle<()>> = (0..threads)
             .map(|_| {
                 let rx = Arc::clone(&job_rx);
                 std::thread::spawn(move || {
@@ -96,6 +153,7 @@ impl WorkerPool {
                 })
             })
             .collect();
+        note_threads_spawned(handles.len());
         WorkerPool { job_tx: Some(job_tx), handles }
     }
 
@@ -103,12 +161,12 @@ impl WorkerPool {
         self.handles.len()
     }
 
-    pub fn submit(&self, job: SpanJob) {
-        self.job_tx
-            .as_ref()
-            .expect("worker pool queue open")
-            .send(job)
-            .expect("span worker alive");
+    /// A cloned handle onto the job queue, for sessions to submit through
+    /// without borrowing the pool (the pool stays owned by the scheduler;
+    /// a queue clone outliving the pool would only make sends fail, never
+    /// dangle).
+    pub fn sender(&self) -> Sender<SpanJob> {
+        self.job_tx.as_ref().expect("worker pool queue open").clone()
     }
 }
 
@@ -116,9 +174,11 @@ impl Drop for WorkerPool {
     fn drop(&mut self) {
         // Closing the queue unblocks every worker's recv with Err.
         drop(self.job_tx.take());
+        let joined = self.handles.len();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        note_threads_joined(joined);
     }
 }
 
@@ -135,8 +195,8 @@ fn run_span_job(job: SpanJob) {
     let triples: Vec<&[TripleShare]> = job.triples.iter().map(|v| v.as_slice()).collect();
     let mut votes = vec![0i8; job.len];
     eval_span(job.fp, &job.plan, &signs, &triples, &mut votes, job.base, job.chunk);
-    // The engine may be tearing down mid-round; an orphaned result is fine.
-    let _ = job.out.send((job.slot, votes));
+    // The session may be tearing down mid-round; an orphaned result is fine.
+    let _ = job.out.send((job.session, job.slot, votes));
 }
 
 /// One subgroup's secure vote over its full coordinate range — the
@@ -273,35 +333,62 @@ mod tests {
     use crate::poly::{MvPolynomial, TiePolicy};
 
     #[test]
-    fn pool_evaluates_spans_and_reassembles_by_slot() {
+    fn pool_evaluates_spans_and_reassembles_by_session_and_slot() {
         // n₁ = 1 makes F the identity (no triples needed): the pool's
         // reassembled output must be the input signs, split across spans.
+        // Two "sessions" share the pool; each only trusts results tagged
+        // with its own id.
         let mv = MvPolynomial::build_fermat(1, TiePolicy::OneBit);
         let plan = Arc::new(EvalPlan::new(&mv, 10, false));
         let pool = WorkerPool::new(3);
         assert_eq!(pool.threads(), 3);
+        let jobs = pool.sender();
         let signs = Arc::new(vec![vec![1i8, -1, 1, -1, 1, -1, 1, -1, 1, -1]]);
         let triples: Arc<Vec<Vec<TripleShare>>> = Arc::new(vec![Vec::new()]);
-        let (tx, rx) = channel();
-        for (slot, base) in [(0usize, 0usize), (1, 5)] {
-            pool.submit(SpanJob {
-                fp: plan.fp,
-                plan: Arc::clone(&plan),
-                signs: Arc::clone(&signs),
-                triples: Arc::clone(&triples),
-                base,
-                len: 5,
-                chunk: 4,
-                slot,
-                out: tx.clone(),
-            });
+        let mut per_session = Vec::new();
+        for session in [7u64, 9] {
+            let (tx, rx) = channel();
+            for (slot, base) in [(0usize, 0usize), (1, 5)] {
+                jobs.send(SpanJob {
+                    session,
+                    fp: plan.fp,
+                    plan: Arc::clone(&plan),
+                    signs: Arc::clone(&signs),
+                    triples: Arc::clone(&triples),
+                    base,
+                    len: 5,
+                    chunk: 4,
+                    slot,
+                    out: tx.clone(),
+                })
+                .expect("pool alive");
+            }
+            drop(tx);
+            per_session.push((session, rx));
         }
-        drop(tx);
-        let mut votes = vec![0i8; 10];
-        for _ in 0..2 {
-            let (slot, span) = rx.recv().expect("span result");
-            votes[slot * 5..slot * 5 + 5].copy_from_slice(&span);
+        for (session, rx) in per_session {
+            let mut votes = vec![0i8; 10];
+            for _ in 0..2 {
+                let (sid, slot, span) = rx.recv().expect("span result");
+                assert_eq!(sid, session, "result routed to the wrong session");
+                votes[slot * 5..slot * 5 + 5].copy_from_slice(&span);
+            }
+            assert_eq!(votes, signs[0]);
         }
-        assert_eq!(votes, signs[0]);
+    }
+
+    #[test]
+    fn thread_resolution_honors_override_and_caps_cores() {
+        // No override: cores win, capped at MAX_THREADS, floored at 1.
+        assert_eq!(resolve_threads(None, 4), 4);
+        assert_eq!(resolve_threads(None, 64), crate::engine::MAX_THREADS);
+        assert_eq!(resolve_threads(None, 0), 1);
+        // Explicit override wins, even above the cap (operator's call).
+        assert_eq!(resolve_threads(Some("1"), 16), 1);
+        assert_eq!(resolve_threads(Some(" 12 "), 2), 12);
+        // Malformed or zero overrides fall back to the core policy.
+        assert_eq!(resolve_threads(Some("0"), 4), 4);
+        assert_eq!(resolve_threads(Some("lots"), 4), 4);
+        assert_eq!(resolve_threads(Some(""), 4), 4);
     }
 }

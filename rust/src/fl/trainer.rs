@@ -9,12 +9,25 @@
 //! 4. every user applies `θ ← θ − η·ĝ(t)` (Eq. 6 / Alg. 2 line 12).
 //!
 //! The trainer is generic over [`Model`] so the same loop drives the
-//! pure-rust models and the AOT-compiled JAX models.
+//! pure-rust models and the AOT-compiled JAX models. Two entry points
+//! share one round-step implementation:
+//!
+//! * [`train`] — one federation, on a private scheduler (the classic
+//!   single-tenant path).
+//! * [`train_multi`] — several federations ([`FedSpec`]s) driven
+//!   round-robin through **one shared [`AggScheduler`]**: every secure
+//!   tenant gets its own [`AggSession`] (own seed stream, own pools) but
+//!   all of them evaluate on one worker pool and provision from one
+//!   dealing plane. Per-federation trajectories are bit-identical to
+//!   running [`train`] separately — sessions are pinned bit-identical to
+//!   dedicated engines — so multiplexing is purely an infrastructure
+//!   decision.
 
 use crate::baselines::{dp_signsgd, masking};
-use crate::engine::PipelinedEngine;
+use crate::engine::{AggScheduler, AggSession, Engine};
 use crate::fl::data::Dataset;
 use crate::fl::model::{sign_vec, Model};
+use crate::metrics::CommStats;
 use crate::protocol::{plain_group_vote_all, HiSafeConfig};
 use crate::util::json::Json;
 use crate::util::rng::{ChaCha20Rng, Rng, Xoshiro256pp};
@@ -87,6 +100,11 @@ pub struct RoundLog {
     pub test_acc: f32,
     /// Per-user uplink bits this round (whole model).
     pub uplink_bits_per_user: u64,
+    /// Full per-round communication counters from the secure engine
+    /// (equal, field element for field element, to the measured counters
+    /// of the message-passing path — pinned by `engine_props.rs`). `None`
+    /// for aggregators that don't run the secure protocol.
+    pub comm: Option<CommStats>,
 }
 
 /// Full training result.
@@ -120,6 +138,9 @@ impl TrainResult {
                         .set("loss", l.train_loss as f64)
                         .set("acc", l.test_acc as f64)
                         .set("uplink_bits_per_user", l.uplink_bits_per_user);
+                    if let Some(comm) = &l.comm {
+                        r.set("comm", comm.to_json());
+                    }
                     r
                 })
                 .collect::<Vec<_>>(),
@@ -128,75 +149,119 @@ impl TrainResult {
     }
 }
 
-/// Run federated training.
-///
-/// `shards[u]` lists the training-set indices owned by user `u`
-/// (from [`crate::fl::data::partition_users`]).
-pub fn train<M: Model>(
-    model: &M,
-    train_ds: &Dataset,
-    test_ds: &Dataset,
-    shards: &[Vec<usize>],
-    agg: Aggregator,
-    cfg: &TrainConfig,
-) -> TrainResult {
-    assert_eq!(shards.len(), cfg.n_users, "one shard per user");
-    assert!(cfg.participants <= cfg.n_users);
-    if let Aggregator::HiSafe(hc) = &agg {
-        assert_eq!(hc.n, cfg.participants, "HiSafeConfig.n must equal participants");
-    }
-    let d = model.dim();
-    let mut params = model.init_params(cfg.seed);
-    let mut select_rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0x5e1ec7);
-    let mut batch_rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xba7c4);
-    let mut dp_rng = ChaCha20Rng::seed_from_u64(cfg.seed ^ 0xd9);
-    // Secure aggregation runs through the pipelined engine: plan,
-    // polynomial, and the persistent worker pool are built once, and a
-    // background provisioning stage deals round r+1's Beaver triples
-    // while round r's online phase (and this loop's gradient work)
-    // executes — the paper's offline/online split as wall-clock overlap.
-    // Votes are bit-identical to run_sync and the sequential RoundEngine
-    // (the dealer streams share run_sync's per-group seed derivation).
-    let mut hisafe_engine: Option<PipelinedEngine> = match &agg {
-        Aggregator::HiSafe(hc) => Some(PipelinedEngine::new(*hc, d, cfg.seed ^ 0xa6_67e6)),
-        _ => None,
-    };
-    let mut logs = Vec::with_capacity(cfg.rounds);
-    let mut last_acc = 0.0f32;
-    let mut total_uplink = 0u64;
+/// One federation's full specification — everything [`train`] takes,
+/// bundled so [`train_multi`] can drive several federations through one
+/// shared scheduler.
+pub struct FedSpec<'a, M: Model> {
+    pub model: &'a M,
+    pub train_ds: &'a Dataset,
+    pub test_ds: &'a Dataset,
+    /// `shards[u]` lists the training-set indices owned by user `u`
+    /// (from [`crate::fl::data::partition_users`]).
+    pub shards: &'a [Vec<usize>],
+    pub agg: Aggregator,
+    pub cfg: TrainConfig,
+}
 
-    for round in 0..cfg.rounds {
+/// One federation's in-flight training state: the per-round step of the
+/// classic [`train`] loop, factored out so single- and multi-federation
+/// paths execute the identical code (and therefore identical RNG streams
+/// and parameter trajectories).
+struct FedRun<'a, M: Model> {
+    model: &'a M,
+    train_ds: &'a Dataset,
+    test_ds: &'a Dataset,
+    shards: &'a [Vec<usize>],
+    agg: Aggregator,
+    cfg: TrainConfig,
+    params: Vec<f32>,
+    select_rng: Xoshiro256pp,
+    batch_rng: Xoshiro256pp,
+    dp_rng: ChaCha20Rng,
+    /// Secure aggregation runs through a scheduler session: plan and
+    /// polynomial are built once, and the shared provisioning plane
+    /// deals round r+1's Beaver triples while round r's online phase
+    /// (and this loop's gradient work) executes — the paper's
+    /// offline/online split as wall-clock overlap. Votes are
+    /// bit-identical to run_sync and the sequential RoundEngine (the
+    /// dealer streams share run_sync's per-group seed derivation).
+    session: Option<AggSession>,
+    logs: Vec<RoundLog>,
+    last_acc: f32,
+    total_uplink: u64,
+}
+
+impl<'a, M: Model> FedRun<'a, M> {
+    fn new(spec: &FedSpec<'a, M>, sched: Option<&AggScheduler>) -> FedRun<'a, M> {
+        let cfg = spec.cfg.clone();
+        assert_eq!(spec.shards.len(), cfg.n_users, "one shard per user");
+        assert!(cfg.participants <= cfg.n_users);
+        if let Aggregator::HiSafe(hc) = &spec.agg {
+            assert_eq!(hc.n, cfg.participants, "HiSafeConfig.n must equal participants");
+        }
+        let d = spec.model.dim();
+        let session = match &spec.agg {
+            Aggregator::HiSafe(hc) => Some(
+                sched
+                    .expect("a scheduler is required for secure aggregation")
+                    .session(*hc, d, cfg.seed ^ 0xa6_67e6),
+            ),
+            _ => None,
+        };
+        FedRun {
+            model: spec.model,
+            train_ds: spec.train_ds,
+            test_ds: spec.test_ds,
+            shards: spec.shards,
+            agg: spec.agg,
+            params: spec.model.init_params(cfg.seed),
+            select_rng: Xoshiro256pp::seed_from_u64(cfg.seed ^ 0x5e1ec7),
+            batch_rng: Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xba7c4),
+            dp_rng: ChaCha20Rng::seed_from_u64(cfg.seed ^ 0xd9),
+            session,
+            logs: Vec::with_capacity(cfg.rounds),
+            last_acc: 0.0,
+            total_uplink: 0,
+            cfg,
+        }
+    }
+
+    /// Execute global round `round` (Alg. 2/3 lines 4–12).
+    fn step(&mut self, round: usize) {
+        let d = self.model.dim();
+
         // 1. user selection
-        let selected = select_rng.sample_indices(cfg.n_users, cfg.participants);
+        let selected = self.select_rng.sample_indices(self.cfg.n_users, self.cfg.participants);
 
         // 2. local gradients + signs
         let mut losses = 0.0f32;
         let mut grads: Vec<Vec<f32>> = Vec::with_capacity(selected.len());
         for &u in &selected {
-            let shard = &shards[u];
+            let shard = &self.shards[u];
             assert!(!shard.is_empty(), "user {u} has no data");
             // Sample WITH replacement so batches are always full —
             // required by the JAX backends (batch size is baked into the
             // AOT artifact) and harmless for small shards.
-            let batch: Vec<usize> = (0..cfg.batch_size)
-                .map(|_| shard[batch_rng.gen_below(shard.len() as u64) as usize])
+            let batch: Vec<usize> = (0..self.cfg.batch_size)
+                .map(|_| shard[self.batch_rng.gen_below(shard.len() as u64) as usize])
                 .collect();
-            let (loss, grad) = model.loss_grad(&params, train_ds, &batch);
+            let (loss, grad) = self.model.loss_grad(&self.params, self.train_ds, &batch);
             losses += loss;
             grads.push(grad);
         }
         let train_loss = losses / selected.len() as f32;
 
         // 3. aggregate into an update direction
-        let (direction, uplink_bits_per_user): (Vec<f32>, u64) = match &agg {
+        let mut comm: Option<CommStats> = None;
+        let (direction, uplink_bits_per_user): (Vec<f32>, u64) = match &self.agg {
             Aggregator::HiSafe(_) => {
                 let signs: Vec<Vec<i8>> = grads.iter().map(|g| sign_vec(g)).collect();
-                let engine = hisafe_engine.as_mut().expect("engine built for HiSafe");
-                let out = engine.run_round(&signs);
-                (
-                    out.global_vote.iter().map(|&v| v as f32).collect(),
-                    out.stats.c_u_bits(),
-                )
+                let session = self.session.as_mut().expect("session built for HiSafe");
+                let out = session.run_round(&signs);
+                let bits = out.stats.c_u_bits();
+                let direction = out.global_vote.iter().map(|&v| v as f32).collect();
+                comm = Some(out.stats);
+                (direction, bits)
             }
             Aggregator::PlainMv(policy) => {
                 let signs: Vec<Vec<i8>> = grads.iter().map(|g| sign_vec(g)).collect();
@@ -206,14 +271,16 @@ pub fn train<M: Model>(
             Aggregator::DpSign { clip, sigma } => {
                 let signs: Vec<Vec<i8>> = grads
                     .iter()
-                    .map(|g| sign_vec(&dp_signsgd::privatize(g, *clip, *sigma, &mut dp_rng)))
+                    .map(|g| {
+                        sign_vec(&dp_signsgd::privatize(g, *clip, *sigma, &mut self.dp_rng))
+                    })
                     .collect();
                 let vote = plain_group_vote_all(&signs, crate::poly::TiePolicy::OneBit);
                 (vote.iter().map(|&v| v as f32).collect(), d as u64)
             }
             Aggregator::MaskedSum => {
                 let signs: Vec<Vec<i8>> = grads.iter().map(|g| sign_vec(g)).collect();
-                let out = masking::secure_sum(&signs, cfg.seed ^ round as u64);
+                let out = masking::secure_sum(&signs, self.cfg.seed ^ round as u64);
                 (
                     out.votes.iter().map(|&v| v as f32).collect(),
                     out.uplink_bits_per_user,
@@ -230,33 +297,95 @@ pub fn train<M: Model>(
                 (mean, 32 * d as u64)
             }
         };
-        total_uplink += uplink_bits_per_user;
+        self.total_uplink += uplink_bits_per_user;
 
         // 4. model update (Eq. 6): θ ← θ − η·ĝ
-        for (p, &g) in params.iter_mut().zip(&direction) {
-            *p -= cfg.lr * g;
+        for (p, &g) in self.params.iter_mut().zip(&direction) {
+            *p -= self.cfg.lr * g;
         }
 
         // 5. periodic evaluation
-        if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
-            last_acc = model.accuracy(&params, test_ds);
+        if round % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds {
+            self.last_acc = self.model.accuracy(&self.params, self.test_ds);
         }
-        logs.push(RoundLog {
+        self.logs.push(RoundLog {
             round,
             train_loss,
-            test_acc: last_acc,
+            test_acc: self.last_acc,
             uplink_bits_per_user,
+            comm,
         });
     }
 
-    let final_acc = model.accuracy(&params, test_ds);
-    TrainResult {
-        logs,
-        final_acc,
-        final_params: params,
-        total_uplink_bits_per_user: total_uplink,
-        aggregator: agg.name(),
+    fn finish(self) -> TrainResult {
+        let final_acc = self.model.accuracy(&self.params, self.test_ds);
+        TrainResult {
+            logs: self.logs,
+            final_acc,
+            final_params: self.params,
+            total_uplink_bits_per_user: self.total_uplink,
+            aggregator: self.agg.name(),
+        }
     }
+}
+
+/// Run federated training for one federation on a private scheduler.
+///
+/// `shards[u]` lists the training-set indices owned by user `u`
+/// (from [`crate::fl::data::partition_users`]).
+pub fn train<M: Model>(
+    model: &M,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    shards: &[Vec<usize>],
+    agg: Aggregator,
+    cfg: &TrainConfig,
+) -> TrainResult {
+    // Scheduler infrastructure (worker pool + dealing plane) is only
+    // worth spawning when the run actually evaluates the secure
+    // protocol; baselines aggregate in-line with zero engine threads.
+    let sched = match &agg {
+        Aggregator::HiSafe(_) => Some(AggScheduler::new()),
+        _ => None,
+    };
+    let spec = FedSpec { model, train_ds, test_ds, shards, agg, cfg: cfg.clone() };
+    train_multi_impl(sched.as_ref(), std::slice::from_ref(&spec))
+        .pop()
+        .expect("one federation in, one result out")
+}
+
+/// Run several federations concurrently through **one shared
+/// scheduler**: rounds are interleaved round-robin (federation 0 round
+/// `t`, federation 1 round `t`, …, then round `t+1`), so every secure
+/// tenant's offline dealing overlaps the others' gradient and online
+/// work on the same worker pool — `k` federations cost one pool's worth
+/// of threads. Federations may differ in dataset, shards, aggregator,
+/// round count, seed, and `(cfg, d)` shape; they must share one model
+/// *type* `M` (the slice is monomorphized — to mix model types, make
+/// separate `train_multi` calls against the same scheduler).
+///
+/// Per-federation results are bit-identical to calling [`train`] once
+/// per federation: sessions are pinned bit-identical to dedicated
+/// engines, and each federation's RNG streams depend only on its own
+/// `TrainConfig::seed`.
+pub fn train_multi<M: Model>(sched: &AggScheduler, feds: &[FedSpec<M>]) -> Vec<TrainResult> {
+    train_multi_impl(Some(sched), feds)
+}
+
+fn train_multi_impl<M: Model>(
+    sched: Option<&AggScheduler>,
+    feds: &[FedSpec<M>],
+) -> Vec<TrainResult> {
+    let mut runs: Vec<FedRun<M>> = feds.iter().map(|f| FedRun::new(f, sched)).collect();
+    let max_rounds = feds.iter().map(|f| f.cfg.rounds).max().unwrap_or(0);
+    for round in 0..max_rounds {
+        for run in runs.iter_mut() {
+            if round < run.cfg.rounds {
+                run.step(round);
+            }
+        }
+    }
+    runs.into_iter().map(FedRun::finish).collect()
 }
 
 #[cfg(test)]
@@ -396,5 +525,80 @@ mod tests {
         let back = crate::util::json::parse(&text).unwrap();
         assert_eq!(back.get("aggregator").unwrap().as_str().unwrap(), "fedavg");
         assert_eq!(back.get("rounds").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn multi_federation_on_one_scheduler_matches_sequential_training() {
+        // Two secure federations with different (cfg, d is shared via the
+        // model here) shapes and seeds, interleaved round-robin on ONE
+        // scheduler, must reproduce bit-for-bit the trajectories of
+        // training each federation alone.
+        let (tr, te, shards) = quick_setup();
+        let m = LinearSoftmax::new(784, 10);
+        let mut cfg_a = quick_cfg(6);
+        cfg_a.seed = 21;
+        let mut cfg_b = quick_cfg(4);
+        cfg_b.seed = 22;
+        let agg_a = Aggregator::HiSafe(HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit));
+        let agg_b = Aggregator::HiSafe(HiSafeConfig::flat(6, TiePolicy::TwoBit));
+
+        let solo_a = train(&m, &tr, &te, &shards, agg_a, &cfg_a);
+        let solo_b = train(&m, &tr, &te, &shards, agg_b, &cfg_b);
+
+        let sched = AggScheduler::with_threads(2);
+        assert_eq!(sched.worker_threads(), 2);
+        let specs = vec![
+            FedSpec {
+                model: &m,
+                train_ds: &tr,
+                test_ds: &te,
+                shards: &shards,
+                agg: agg_a,
+                cfg: cfg_a,
+            },
+            FedSpec {
+                model: &m,
+                train_ds: &tr,
+                test_ds: &te,
+                shards: &shards,
+                agg: agg_b,
+                cfg: cfg_b,
+            },
+        ];
+        let multi = train_multi(&sched, &specs);
+        assert_eq!(multi.len(), 2);
+        assert_eq!(multi[0].final_params, solo_a.final_params);
+        assert_eq!(multi[0].final_acc, solo_a.final_acc);
+        assert_eq!(multi[1].final_params, solo_b.final_params);
+        assert_eq!(multi[1].final_acc, solo_b.final_acc);
+        assert_eq!(multi[0].logs.len(), 6);
+        assert_eq!(multi[1].logs.len(), 4);
+        // k tenants, still one pool's worth of workers.
+        assert_eq!(sched.worker_threads(), 2);
+    }
+
+    #[test]
+    fn secure_rounds_carry_measured_comm_stats_into_json() {
+        let (tr, te, shards) = quick_setup();
+        let m = LinearSoftmax::new(784, 10);
+        let cfg = quick_cfg(2);
+        let agg = Aggregator::HiSafe(HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit));
+        let res = train(&m, &tr, &te, &shards, agg, &cfg);
+        for l in &res.logs {
+            let comm = l.comm.as_ref().expect("secure rounds log CommStats");
+            assert!(comm.mults > 0);
+            assert_eq!(comm.c_u_bits(), l.uplink_bits_per_user);
+        }
+        let j = res.to_json();
+        let comm = j
+            .get("rounds")
+            .and_then(|r| r.as_arr())
+            .and_then(|a| a.first())
+            .and_then(|r0| r0.get("comm"))
+            .expect("per-round comm object in JSON");
+        assert!(comm.get("uplink_elems_total").unwrap().as_u64().unwrap() > 0);
+        // Non-secure aggregators log no comm object.
+        let plain = train(&m, &tr, &te, &shards, Aggregator::PlainMv(TiePolicy::OneBit), &cfg);
+        assert!(plain.logs.iter().all(|l| l.comm.is_none()));
     }
 }

@@ -43,7 +43,7 @@ pub mod sharing;
 
 pub mod util;
 
-pub use engine::{PipelinedEngine, RoundEngine};
+pub use engine::{AggScheduler, AggSession, Engine, PipelinedEngine, RoundEngine};
 pub use field::Fp;
 pub use poly::{MvPolynomial, TiePolicy};
 

@@ -8,17 +8,22 @@
 //! hisafe tables                      regenerate Tables VII/VIII/IX
 //! hisafe fig6                        regenerate Fig. 6 series
 //! hisafe security --n 24 --ell 8     leakage + uniformity analysis
+//! hisafe sweep --tenants 24x8,12x4   multi-tenant scheduler sweep
 //! hisafe demo                        Appendix-A walkthrough (n=3)
 //! ```
 
 use hisafe::config::{preset, preset_names, ExperimentConfig};
 use hisafe::cost;
+use hisafe::engine::{AggScheduler, Engine};
 use hisafe::fl::data::{partition_users, synthetic};
 use hisafe::fl::model::{LinearSoftmax, Mlp};
 use hisafe::fl::trainer::{train, TrainConfig, TrainResult};
+use hisafe::metrics::CommStats;
 use hisafe::poly::{MvPolynomial, TiePolicy};
+use hisafe::protocol::{plain_hierarchical_vote, HiSafeConfig};
 use hisafe::security;
 use hisafe::util::cli::Args;
+use hisafe::util::json::Json;
 
 fn main() {
     let args = match Args::from_env(&["verbose", "threaded", "jax"]) {
@@ -36,6 +41,7 @@ fn main() {
         "tables" => cmd_tables(&args),
         "fig6" => cmd_fig6(),
         "security" => cmd_security(&args),
+        "sweep" => cmd_sweep(&args),
         "demo" => cmd_demo(),
         _ => {
             print_help();
@@ -60,6 +66,8 @@ fn print_help() {
            tables [--policy one_bit]       Tables VII/VIII/IX\n\
            fig6                            Fig. 6 cost/latency series\n\
            security [--n 24] [--ell 8]     leakage analysis\n\
+           sweep [--tenants 24x8x2048,...] [--rounds 5] [--threads N] [--out DIR]\n\
+                                           mixed-tenant scheduler workload\n\
            demo                            Appendix-A walkthrough"
     );
 }
@@ -322,6 +330,159 @@ fn cmd_security(args: &Args) -> Result<(), String> {
         thr,
         if chi2 < thr { "UNIFORM ✓" } else { "NON-UNIFORM ✗" }
     );
+    Ok(())
+}
+
+/// One `sweep` tenant: `NxL[xD]` — `n` users in `ℓ` subgroups voting
+/// over `d` coordinates (default d = 4096).
+fn parse_tenant(spec: &str) -> Result<(HiSafeConfig, usize), String> {
+    let parts: Vec<&str> = spec.split('x').collect();
+    if parts.len() != 2 && parts.len() != 3 {
+        return Err(format!("tenant '{spec}' must be NxL or NxLxD, e.g. 24x8x2048"));
+    }
+    let num = |s: &str, what: &str| -> Result<usize, String> {
+        s.parse::<usize>()
+            .map_err(|_| format!("tenant '{spec}': {what} '{s}' must be a positive integer"))
+    };
+    let n = num(parts[0], "n")?;
+    let ell = num(parts[1], "ell")?;
+    let d = if parts.len() == 3 { num(parts[2], "d")? } else { 4096 };
+    if n == 0 || ell == 0 || d == 0 {
+        return Err(format!("tenant '{spec}': n, ell, d must all be ≥ 1"));
+    }
+    if n % ell != 0 {
+        return Err(format!("tenant '{spec}': ℓ = {ell} must divide n = {n}"));
+    }
+    Ok((HiSafeConfig::hierarchical(n, ell, TiePolicy::OneBit), d))
+}
+
+/// Mixed-tenant workload on one shared scheduler: every tenant is an
+/// `AggSession` with its own `(cfg, d)` shape, rounds interleave
+/// round-robin, and we report per-tenant round latency plus measured
+/// communication — the heavy-traffic shape of the ROADMAP, observable
+/// from the command line.
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    args.check_known(&[
+        "tenants", "rounds", "threads", "seed", "out", "verbose", "threaded", "jax",
+    ])?;
+    let rounds = args.get_usize("rounds", 5)?;
+    if rounds == 0 {
+        return Err("--rounds must be ≥ 1".into());
+    }
+    let base_seed = args.get_u64("seed", 42)?;
+    let tenant_specs = args.get_or("tenants", "24x8x2048,12x4x4096,6x2x8192");
+    let shapes: Vec<(HiSafeConfig, usize)> = tenant_specs
+        .split(',')
+        .map(|s| parse_tenant(s.trim()))
+        .collect::<Result<_, _>>()?;
+    let threads = args.get_usize("threads", 0)?;
+    let sched = if threads == 0 {
+        AggScheduler::new()
+    } else {
+        AggScheduler::with_threads(threads)
+    };
+    println!(
+        "# sweep: {} tenants on ONE scheduler — {} span workers + {} dealer thread(s) total",
+        shapes.len(),
+        sched.worker_threads(),
+        sched.dealer_threads()
+    );
+
+    struct TenantRun {
+        label: String,
+        cfg: HiSafeConfig,
+        d: usize,
+        session: hisafe::engine::AggSession,
+        rng: hisafe::util::rng::Xoshiro256pp,
+        latencies_ms: Vec<f64>,
+        comm_last: Option<CommStats>,
+        comm_total: CommStats,
+    }
+    use hisafe::util::rng::Rng;
+
+    let mut tenants: Vec<TenantRun> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(cfg, d))| TenantRun {
+            label: format!("n{}_l{}_d{}", cfg.n, cfg.ell, d),
+            cfg,
+            d,
+            session: sched.session(cfg, d, base_seed.wrapping_add(i as u64)),
+            rng: hisafe::util::rng::Xoshiro256pp::seed_from_u64(base_seed ^ ((i as u64) << 8)),
+            latencies_ms: Vec::with_capacity(rounds),
+            comm_last: None,
+            comm_total: CommStats::default(),
+        })
+        .collect();
+
+    for round in 0..rounds {
+        for t in tenants.iter_mut() {
+            let signs: Vec<Vec<i8>> = (0..t.cfg.n)
+                .map(|_| (0..t.d).map(|_| t.rng.gen_sign()).collect())
+                .collect();
+            let t0 = std::time::Instant::now();
+            let out = t.session.run_round(&signs);
+            t.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            if round == 0 {
+                // One correctness audit per tenant: scheduled votes must
+                // equal the plaintext hierarchical majority vote.
+                assert_eq!(
+                    out.global_vote,
+                    plain_hierarchical_vote(&signs, t.cfg),
+                    "tenant {} produced a wrong vote",
+                    t.label
+                );
+            }
+            t.comm_total.merge(&out.stats);
+            t.comm_last = Some(out.stats);
+        }
+    }
+
+    println!(
+        "\n{:<16} {:>6} {:>10} {:>10} {:>10} {:>12} {:>10} {:>9}",
+        "tenant", "rounds", "mean ms", "min ms", "max ms", "C_u bits/rd", "mults/rd", "subrounds"
+    );
+    let mut report = Json::obj();
+    let mut tenant_objs: Vec<Json> = Vec::new();
+    for t in &tenants {
+        let mean = t.latencies_ms.iter().sum::<f64>() / t.latencies_ms.len() as f64;
+        let min = t.latencies_ms.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = t.latencies_ms.iter().cloned().fold(0.0f64, f64::max);
+        let comm = t.comm_last.as_ref().expect("every tenant ran rounds");
+        println!(
+            "{:<16} {:>6} {:>10.2} {:>10.2} {:>10.2} {:>12} {:>10} {:>9}",
+            t.label,
+            t.latencies_ms.len(),
+            mean,
+            min,
+            max,
+            comm.c_u_bits(),
+            comm.mults,
+            comm.subrounds
+        );
+        let mut o = Json::obj();
+        o.set("tenant", t.label.clone())
+            .set("n", t.cfg.n)
+            .set("ell", t.cfg.ell)
+            .set("d", t.d)
+            .set("rounds", t.latencies_ms.len())
+            .set("mean_ms", mean)
+            .set("min_ms", min)
+            .set("max_ms", max)
+            .set("comm_per_round", comm.to_json())
+            .set("comm_total", t.comm_total.to_json());
+        tenant_objs.push(o);
+    }
+    report
+        .set("worker_threads", sched.worker_threads())
+        .set("dealer_threads", sched.dealer_threads())
+        .set("tenants", tenant_objs);
+
+    let out_dir = args.get_or("out", "runs");
+    std::fs::create_dir_all(out_dir).map_err(|e| e.to_string())?;
+    let path = format!("{out_dir}/sweep.json");
+    std::fs::write(&path, report.to_string_pretty()).map_err(|e| e.to_string())?;
+    println!("\nwrote {path}");
     Ok(())
 }
 

@@ -49,6 +49,24 @@ impl CommStats {
         self.downlink_elems * self.elem_bits as u64
     }
 
+    /// Machine-readable form for run logs (`runs/*.json`, the `sweep`
+    /// command's per-tenant reports): every raw counter plus the derived
+    /// `C_u`/`C_T` bit costs, so multi-tenant runs report measured
+    /// communication per tenant, not just the analytic model.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut j = crate::util::json::Json::obj();
+        j.set("uplink_elems_total", self.uplink_elems_total)
+            .set("uplink_elems_per_user", self.uplink_elems_per_user)
+            .set("downlink_elems", self.downlink_elems)
+            .set("elem_bits", self.elem_bits as u64)
+            .set("subrounds", self.subrounds)
+            .set("mults", self.mults)
+            .set("vote_bits", self.vote_bits as u64)
+            .set("c_u_bits", self.c_u_bits())
+            .set("c_t_bits", self.c_t_bits());
+        j
+    }
+
     pub fn merge(&mut self, other: &CommStats) {
         self.uplink_elems_total += other.uplink_elems_total;
         self.uplink_elems_per_user =
@@ -92,6 +110,24 @@ mod tests {
         };
         assert_eq!(s.c_u_bits(), 12); // paper: n₁=3 → C_u = 12 bits
         assert_eq!(s.c_t_bits(), 36);
+    }
+
+    #[test]
+    fn json_surface_carries_raw_and_derived_counters() {
+        let s = CommStats {
+            uplink_elems_total: 12,
+            uplink_elems_per_user: 4,
+            downlink_elems: 4,
+            elem_bits: 3,
+            subrounds: 2,
+            mults: 2,
+            vote_bits: 1,
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("uplink_elems_total").unwrap().as_u64(), Some(12));
+        assert_eq!(j.get("c_u_bits").unwrap().as_u64(), Some(12));
+        assert_eq!(j.get("c_t_bits").unwrap().as_u64(), Some(36));
+        assert_eq!(j.get("subrounds").unwrap().as_u64(), Some(2));
     }
 
     #[test]

@@ -1,62 +1,103 @@
 //! Property tests pinning the batched engines to the reference paths:
 //! across random `n`, `d`, `ℓ`, tie policies, schedules and chunk sizes,
-//! the sequential [`RoundEngine`]'s *and* the pipelined
-//! [`PipelinedEngine`]'s votes must be bit-identical to the plaintext
-//! majority vote and the message-passing `secure_group_vote` /
-//! `run_sync` implementations — and the engines' analytic `CommStats`
-//! must equal the measured per-message counters field for field.
+//! every [`Engine`] implementation — the sequential [`RoundEngine`], the
+//! pipelined [`PipelinedEngine`], and a multi-tenant scheduler
+//! [`AggSession`](hisafe::engine::AggSession) — must produce votes
+//! bit-identical to the plaintext majority vote and the message-passing
+//! `secure_group_vote` / `run_sync` implementations, and the engines'
+//! analytic `CommStats` must equal the measured per-message counters
+//! field for field. The suite is generic over the trait: one property
+//! body, three implementations, zero copy-pasted checks.
 
-use hisafe::engine::{PipelinedEngine, RoundEngine};
+use hisafe::engine::{AggScheduler, Engine, PipelinedEngine, RoundEngine};
 use hisafe::mpc::{plain_group_vote, secure_group_vote};
 use hisafe::poly::TiePolicy;
 use hisafe::prop_assert_eq;
 use hisafe::protocol::{plain_hierarchical_vote, run_sync, HiSafeConfig};
 use hisafe::util::prop::forall;
 
+/// Build one engine implementation for a random workload — the factory
+/// the generic properties run over.
+fn factories() -> Vec<(&'static str, Box<dyn Fn(HiSafeConfig, usize, u64) -> Box<dyn Engine>>)> {
+    vec![
+        (
+            "sequential",
+            Box::new(|cfg, d, seed| Box::new(RoundEngine::new(cfg, d, seed)) as Box<dyn Engine>),
+        ),
+        (
+            "pipelined",
+            Box::new(|cfg, d, seed| {
+                Box::new(PipelinedEngine::new(cfg, d, seed)) as Box<dyn Engine>
+            }),
+        ),
+        (
+            "scheduled",
+            Box::new(|cfg, d, seed| {
+                // A fresh single-tenant scheduler per engine: the session
+                // keeps the shared core alive after the handle drops.
+                Box::new(AggScheduler::with_threads(2).session(cfg, d, seed))
+                    as Box<dyn Engine>
+            }),
+        ),
+    ]
+}
+
 #[test]
 fn engine_vote_equals_plain_and_secure_flat() {
-    forall("engine ≡ plain ≡ mpc (flat)", 50, |g| {
-        let n = g.usize_range(1, 12);
-        let d = g.usize_range(1, 48);
-        let policy = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
-        let sparse = g.bool();
-        let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
-        let cfg = HiSafeConfig { sparse, ..HiSafeConfig::flat(n, policy) };
-        let seed = g.u64();
-        let got = RoundEngine::new(cfg, d, seed).run_round(&signs);
-        let plain = plain_group_vote(&signs, policy);
-        prop_assert_eq!(&got.global_vote, &plain, "n={n} d={d} {policy:?} sparse={sparse}");
-        let mpc = secure_group_vote(&signs, policy, sparse, seed);
-        prop_assert_eq!(&got.global_vote, &mpc.votes, "engine vs mpc n={n} d={d}");
-        Ok(())
-    });
+    for (impl_name, mk) in factories() {
+        forall(&format!("{impl_name} ≡ plain ≡ mpc (flat)"), 30, |g| {
+            let n = g.usize_range(1, 12);
+            let d = g.usize_range(1, 48);
+            let policy = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let sparse = g.bool();
+            let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+            let cfg = HiSafeConfig { sparse, ..HiSafeConfig::flat(n, policy) };
+            let seed = g.u64();
+            let got = mk(cfg, d, seed).run_round(&signs);
+            let plain = plain_group_vote(&signs, policy);
+            prop_assert_eq!(
+                &got.global_vote,
+                &plain,
+                "{impl_name} n={n} d={d} {policy:?} sparse={sparse}"
+            );
+            let mpc = secure_group_vote(&signs, policy, sparse, seed);
+            prop_assert_eq!(&got.global_vote, &mpc.votes, "{impl_name} vs mpc n={n} d={d}");
+            Ok(())
+        });
+    }
 }
 
 #[test]
 fn engine_vote_equals_hierarchical_reference() {
-    forall("engine ≡ Eq. 8 (hierarchical)", 35, |g| {
-        let ell = g.usize_range(1, 4);
-        let n1 = g.usize_range(2, 6);
-        let n = ell * n1;
-        let d = g.usize_range(1, 24);
-        let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
-        let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
-        let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
-        let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
-        let seed = g.u64();
-        let got = RoundEngine::new(cfg, d, seed).run_round(&signs);
-        prop_assert_eq!(
-            &got.global_vote,
-            &plain_hierarchical_vote(&signs, cfg),
-            "cfg={cfg:?}"
-        );
-        // per-subgroup votes match the reference protocol too
-        let reference = run_sync(&signs, cfg, seed);
-        prop_assert_eq!(&got.subgroup_votes, &reference.subgroup_votes, "cfg={cfg:?}");
-        prop_assert_eq!(got.stats.c_u_bits(), reference.stats.c_u_bits());
-        prop_assert_eq!(got.stats.subrounds, reference.stats.subrounds);
-        Ok(())
-    });
+    for (impl_name, mk) in factories() {
+        forall(&format!("{impl_name} ≡ Eq. 8 (hierarchical)"), 20, |g| {
+            let ell = g.usize_range(1, 4);
+            let n1 = g.usize_range(2, 6);
+            let n = ell * n1;
+            let d = g.usize_range(1, 24);
+            let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
+            let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+            let seed = g.u64();
+            let got = mk(cfg, d, seed).run_round(&signs);
+            prop_assert_eq!(
+                &got.global_vote,
+                &plain_hierarchical_vote(&signs, cfg),
+                "{impl_name} cfg={cfg:?}"
+            );
+            // per-subgroup votes match the reference protocol too
+            let reference = run_sync(&signs, cfg, seed);
+            prop_assert_eq!(
+                &got.subgroup_votes,
+                &reference.subgroup_votes,
+                "{impl_name} cfg={cfg:?}"
+            );
+            prop_assert_eq!(got.stats.c_u_bits(), reference.stats.c_u_bits());
+            prop_assert_eq!(got.stats.subrounds, reference.stats.subrounds);
+            Ok(())
+        });
+    }
 }
 
 #[test]
@@ -67,8 +108,10 @@ fn pipelined_engine_pins_bit_identical_to_sequential_and_run_sync() {
     // round after round on one long-lived engine pair. (Votes are
     // triple-independent — Beaver masks cancel — so this pins the online
     // arithmetic; the offline streams themselves are pinned to the
-    // group_dealer_seed derivation by the in-crate test in
-    // engine/pipeline.rs, which can see the pools.)
+    // group_dealer_seed derivation by the in-crate tests in
+    // engine/scheduler.rs and engine/pipeline.rs, which can see the
+    // pools. The multi-tenant interleaving variant lives in
+    // rust/tests/sched_props.rs.)
     forall("pipelined ≡ sequential ≡ run_sync", 20, |g| {
         let ell = g.usize_range(1, 4);
         let n1 = g.usize_range(1, 6);
@@ -107,24 +150,24 @@ fn engine_analytic_stats_equal_measured_field_for_field() {
     // The engines never pass messages; their CommStats are analytic. The
     // doc contract is that every counter equals the measured one from the
     // message-passing path — full struct equality, not just the derived
-    // C_u/C_T bit costs.
-    forall("analytic CommStats ≡ measured", 30, |g| {
-        let ell = g.usize_range(1, 4);
-        let n1 = g.usize_range(1, 6);
-        let n = ell * n1;
-        let d = g.usize_range(1, 24);
-        let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
-        let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
-        let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
-        let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
-        let seed = g.u64();
-        let reference = run_sync(&signs, cfg, seed);
-        let seq = RoundEngine::new(cfg, d, seed).run_round(&signs);
-        prop_assert_eq!(&seq.stats, &reference.stats, "sequential cfg={cfg:?} d={d}");
-        let piped = PipelinedEngine::new(cfg, d, seed).run_round(&signs);
-        prop_assert_eq!(&piped.stats, &reference.stats, "pipelined cfg={cfg:?} d={d}");
-        Ok(())
-    });
+    // C_u/C_T bit costs. Checked for every Engine implementation.
+    for (impl_name, mk) in factories() {
+        forall(&format!("{impl_name} analytic CommStats ≡ measured"), 15, |g| {
+            let ell = g.usize_range(1, 4);
+            let n1 = g.usize_range(1, 6);
+            let n = ell * n1;
+            let d = g.usize_range(1, 24);
+            let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
+            let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+            let seed = g.u64();
+            let reference = run_sync(&signs, cfg, seed);
+            let got = mk(cfg, d, seed).run_round(&signs);
+            prop_assert_eq!(&got.stats, &reference.stats, "{impl_name} cfg={cfg:?} d={d}");
+            Ok(())
+        });
+    }
 }
 
 #[test]

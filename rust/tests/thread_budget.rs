@@ -1,0 +1,73 @@
+//! The oversubscription fix, asserted on *measured* thread counts — not
+//! on accessors that return construction-time constants.
+//!
+//! `live_engine_threads()` is a process-wide spawn/join-balanced gauge
+//! maintained at every engine-subsystem spawn site (span workers,
+//! provisioning planes). This file deliberately contains a SINGLE test:
+//! integration-test binaries run as separate processes, and with only
+//! one test in this process nothing else spawns or joins engine threads
+//! concurrently, so every assertion below is deterministic.
+
+use hisafe::engine::{live_engine_threads, AggScheduler, AggSession, Engine, PipelinedEngine};
+use hisafe::poly::TiePolicy;
+use hisafe::protocol::{plain_hierarchical_vote, HiSafeConfig};
+use hisafe::util::rng::{Rng, Xoshiro256pp};
+
+fn rand_signs(n: usize, d: usize, seed: u64) -> Vec<Vec<i8>> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..n).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect()
+}
+
+#[test]
+fn k_tenants_cost_one_pools_worth_of_live_threads() {
+    let base = live_engine_threads();
+    let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+
+    // One scheduler with 2 pinned span workers: 2 workers + 1 dealer.
+    let sched = AggScheduler::with_threads(2);
+    assert_eq!(
+        live_engine_threads() - base,
+        3,
+        "scheduler = 2 span workers + 1 dealer thread"
+    );
+
+    // k = 4 tenants: the live thread count MUST NOT move — sessions run
+    // entirely on the shared pool and plane.
+    let mut sessions: Vec<AggSession> =
+        (0..4).map(|i| sched.session(cfg, 8, i as u64)).collect();
+    assert_eq!(
+        live_engine_threads() - base,
+        3,
+        "registering k tenants must not spawn threads"
+    );
+    for (i, s) in sessions.iter_mut().enumerate() {
+        let signs = rand_signs(6, 8, 40 + i as u64);
+        let got = s.run_round(&signs);
+        assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+    }
+    assert_eq!(
+        live_engine_threads() - base,
+        3,
+        "running k tenants' rounds must not spawn threads"
+    );
+
+    // Contrast: ONE dedicated engine adds its own pool + plane on top —
+    // the k-fold growth the scheduler exists to eliminate.
+    let mut dedicated = PipelinedEngine::on_scheduler(&AggScheduler::with_threads(2), cfg, 8, 9);
+    assert_eq!(
+        live_engine_threads() - base,
+        6,
+        "a dedicated engine spawns a second pool's worth"
+    );
+    let signs = rand_signs(6, 8, 99);
+    let got = dedicated.run_round(&signs);
+    assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+    drop(dedicated);
+    assert_eq!(live_engine_threads() - base, 3, "dedicated engine joined its threads");
+
+    // Full teardown returns the gauge to baseline: every spawned engine
+    // thread was joined.
+    drop(sessions);
+    drop(sched);
+    assert_eq!(live_engine_threads(), base, "all engine threads joined");
+}
