@@ -1,0 +1,151 @@
+//! Bench: what admission control + per-tenant QoS buy on a shared
+//! scheduler under adversarial load.
+//!
+//! Three scenarios:
+//!
+//! 1. **Flood isolation** — a greedy tenant floods the provisioning
+//!    plane with a huge prefetch; a victim tenant then cold-starts a
+//!    modest `provision`. Weighted round-robin must keep the victim's
+//!    wait in the same class as an uncontended cold start (pre-QoS, the
+//!    victim waited behind the whole flood).
+//! 2. **Weighted share** — a priority (weight 3) tenant and a greedy
+//!    (weight 1) tenant flood together; the dealt-round counters must
+//!    split ~3:1 while the priority tenant's provision completes.
+//! 3. **Throttling overhead** — a rate-limited tenant next to an
+//!    unlimited one: the limited tenant pays its own throttle waits, the
+//!    unlimited tenant's round latency stays in its solo class.
+//!
+//! Wall-clock assertions are opt-in via `HISAFE_BENCH_STRICT=1`
+//! (advisory runs only print; CI compile-gates with `--no-run`).
+
+use hisafe::engine::{AggScheduler, Engine, QosPolicy};
+use hisafe::poly::TiePolicy;
+use hisafe::protocol::HiSafeConfig;
+use hisafe::util::bench::{black_box, section};
+use hisafe::util::rng::{Rng, Xoshiro256pp};
+use std::time::Instant;
+
+fn main() {
+    let strict = std::env::var("HISAFE_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
+    let fast = std::env::var("HISAFE_BENCH_FAST").ok().is_some();
+    let d: usize = if fast { 1024 } else { 4096 };
+    let flood: usize = if fast { 16 } else { 48 };
+    let want: usize = if fast { 4 } else { 8 };
+    let cfg = HiSafeConfig::hierarchical(12, 4, TiePolicy::OneBit);
+
+    // ---- 1. flood isolation -------------------------------------------
+    section(&format!(
+        "flood isolation: victim provision({want}) vs a {flood}-round flood at d = {d}"
+    ));
+    // Baseline: uncontended cold-start provision.
+    let solo_t = {
+        let sched = AggScheduler::with_threads(2);
+        let mut victim = sched.session(cfg, d, 1);
+        let t0 = Instant::now();
+        victim.provision(want);
+        t0.elapsed()
+    };
+    // Contended: the same provision behind a greedy tenant's flood.
+    let (flooded_t, greedy_dealt_at_done) = {
+        let sched = AggScheduler::with_threads(2);
+        let mut victim = sched.session(cfg, d, 1);
+        let mut greedy = sched.session(cfg, d, 2);
+        greedy.try_prefetch(flood).expect("unbounded queue");
+        let t0 = Instant::now();
+        victim.provision(want);
+        (t0.elapsed(), greedy.dealt_rounds())
+    };
+    println!("  solo cold start:    {:.2} ms", solo_t.as_secs_f64() * 1e3);
+    println!(
+        "  behind the flood:   {:.2} ms  (greedy had dealt {greedy_dealt_at_done}/{flood} \
+         rounds when the victim finished)",
+        flooded_t.as_secs_f64() * 1e3
+    );
+    if strict {
+        // Equal weights → the victim owns half the dealing bandwidth:
+        // same class as solo (2x + generous scheduling noise), not
+        // "after the whole flood" (~(flood + want)/want times solo).
+        assert!(
+            flooded_t.as_secs_f64() < solo_t.as_secs_f64() * 3.0 + 0.05,
+            "flooded cold start fell out of the solo class: {flooded_t:?} vs {solo_t:?}"
+        );
+        assert!(
+            (greedy_dealt_at_done as usize) < flood,
+            "victim waited for the whole flood"
+        );
+    }
+
+    // ---- 2. weighted share --------------------------------------------
+    section("weighted share: priority weight 3 vs greedy weight 1, both flooding");
+    let sched = AggScheduler::with_threads(2);
+    let mut priority = sched
+        .try_session(cfg, d, 3, QosPolicy::unlimited().with_weight(3))
+        .expect("admitted");
+    let mut greedy = sched
+        .try_session(cfg, d, 4, QosPolicy::unlimited().with_weight(1))
+        .expect("admitted");
+    greedy.try_prefetch(flood).expect("unbounded queue");
+    priority.provision(want * 3);
+    let (p_dealt, g_dealt) = (priority.dealt_rounds(), greedy.dealt_rounds());
+    println!(
+        "  priority dealt {p_dealt} rounds while greedy dealt {g_dealt} \
+         (weights 3:1 → expected share ~3:1)"
+    );
+    if strict {
+        // While the priority tenant's rounds dealt, WRR hands the
+        // weight-1 greedy at most ceil(p/3) quanta plus race slack.
+        let bound = (p_dealt as usize).div_ceil(3) + 5;
+        assert!(
+            (g_dealt as usize) <= bound,
+            "greedy exceeded its weighted share: {g_dealt} > {bound}"
+        );
+    }
+    drop(priority);
+    drop(greedy);
+
+    // ---- 3. throttling overhead ---------------------------------------
+    section("throttling: a rate-limited tenant must not slow an unlimited one");
+    let rounds = if fast { 3 } else { 5 };
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let signs: Vec<Vec<i8>> = (0..cfg.n)
+        .map(|_| (0..d).map(|_| rng.gen_sign()).collect())
+        .collect();
+    // Solo baseline for the unlimited tenant.
+    let solo_mean = {
+        let sched = AggScheduler::with_threads(2);
+        let mut s = sched.session(cfg, d, 5);
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            black_box(s.run_round(&signs).global_vote[0]);
+        }
+        t0.elapsed().as_secs_f64() / rounds as f64
+    };
+    let sched = AggScheduler::with_threads(2);
+    let mut unlimited = sched.session(cfg, d, 5);
+    let mut limited = sched
+        .try_session(cfg, d, 6, QosPolicy::unlimited().with_rounds_per_sec(40.0))
+        .expect("admitted");
+    let mut throttles = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        black_box(unlimited.run_round(&signs).global_vote[0]);
+        let (out, denials, _waited) = limited.run_round_admitted(&signs);
+        black_box(out.global_vote[0]);
+        throttles += denials;
+    }
+    let pair_t = t0.elapsed();
+    let unlimited_mean = pair_t.as_secs_f64() / rounds as f64;
+    println!(
+        "  solo mean round: {:.2} ms; paired loop mean: {:.2} ms; \
+         limited tenant throttled {throttles}x (its own waits, not the pool's)",
+        solo_mean * 1e3,
+        unlimited_mean * 1e3
+    );
+    println!(
+        "  limited tenant admission: {:?}",
+        limited.admission_stats()
+    );
+    if strict {
+        assert!(throttles >= 1, "a 40 rounds/s budget must throttle back-to-back rounds");
+    }
+}

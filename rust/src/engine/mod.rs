@@ -31,11 +31,15 @@
 //!   by slot index).
 //! * [`scheduler`] — [`AggScheduler`] / [`AggSession`], the
 //!   **multi-tenant scheduler**: one shared worker pool and one
-//!   provisioning plane (a single dealer thread round-robining
+//!   provisioning plane (a single dealer thread weighted-round-robining
 //!   Beaver-triple dealing across tenants) multiplexing any number of
 //!   concurrent `(cfg, d)` workloads, each behind a session handle with
 //!   the engine surface. This is the heavy-traffic shape: `k` tenants
-//!   cost one pool's worth of threads, not `k`.
+//!   cost one pool's worth of threads, not `k`. Each session carries a
+//!   [`QosPolicy`] (dealing weight, bounded queue depth, rounds/sec and
+//!   triples/sec token buckets), and backpressure surfaces as a typed
+//!   [`AdmissionError`] on the `try_*` session methods instead of
+//!   silent queueing.
 //! * [`pipeline`] — [`PipelinedEngine`], the **single-tenant pipelined
 //!   engine**, now a thin wrapper around a private one-session
 //!   scheduler: a background provisioning stage deals round `r+1`'s
@@ -84,7 +88,7 @@ mod scheduler;
 mod workers;
 
 pub use pipeline::PipelinedEngine;
-pub use scheduler::{AggScheduler, AggSession};
+pub use scheduler::{AdmissionError, AggScheduler, AggSession, QosPolicy};
 pub use workers::live_engine_threads;
 
 use std::sync::Arc;
@@ -117,6 +121,27 @@ pub(crate) const MAX_THREADS: usize = 8;
 /// engines; now it is defined once, the property suite
 /// (`rust/tests/engine_props.rs`) is generic over it, and every
 /// implementation is pinned to the same reference votes.
+///
+/// ```
+/// use hisafe::engine::{Engine, RoundEngine};
+/// use hisafe::poly::TiePolicy;
+/// use hisafe::protocol::HiSafeConfig;
+///
+/// // 6 users in 2 subgroups voting over 4 coordinates.
+/// let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+/// let mut engine = RoundEngine::new(cfg, 4, 7);
+///
+/// // Move the offline phase (Beaver-triple dealing) off the round path.
+/// engine.provision(2);
+/// assert!(engine.provisioned_rounds() >= 2);
+///
+/// // Unanimous inputs make the majority vote obvious.
+/// let signs = vec![vec![1i8, -1, 1, -1]; 6];
+/// let out = engine.run_round(&signs);
+/// assert_eq!(out.global_vote, vec![1, -1, 1, -1]);
+/// assert_eq!(out.subgroup_votes.len(), 2);
+/// assert_eq!(engine.rounds_run(), 1);
+/// ```
 pub trait Engine {
     /// Override the SoA lane-chunk size (tests sweep this to prove chunk
     /// invariance; benches tune it).

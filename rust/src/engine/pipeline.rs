@@ -27,6 +27,13 @@
 //! To share infrastructure between several engines instead, construct
 //! them on one scheduler via [`PipelinedEngine::on_scheduler`] — or use
 //! [`AggScheduler::session`] directly.
+//!
+//! Pipelined engines always run under the unlimited
+//! [`QosPolicy`](super::QosPolicy) (the session default): the
+//! single-tenant wrapper predates admission control and keeps its
+//! infallible, rate-limiter-exempt semantics. Tenants that want bounded
+//! queues, rate budgets, or dealing weights use
+//! [`AggScheduler::try_session`](super::AggScheduler::try_session).
 
 use crate::mpc::EvalPlan;
 use crate::protocol::HiSafeConfig;

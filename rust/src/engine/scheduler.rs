@@ -15,7 +15,7 @@
 //!                ┌──────────────── AggScheduler ────────────────┐
 //!                │  WorkerPool (N span threads, shared)         │
 //!                │  provisioning plane (1 dealer thread,        │
-//!                │    round-robin across tenants)               │
+//!                │    weighted round-robin across tenants)      │
 //!                └──────┬──────────────┬──────────────┬─────────┘
 //!   AggSession A (cfg_A, d_A)   session B (cfg_B, d_B)   session C …
 //!   own GroupPools, own plan    own GroupPools, own plan
@@ -43,18 +43,56 @@
 //! * [`GroupPools`] stay owned per-session; the plane only *refills* them
 //!   through the session's private handoff channel.
 //!
-//! Fairness and isolation: the plane deals one round per request-holding
-//! tenant in round-robin order (a tenant with a huge `provision` request
-//! cannot starve the others), and a session dropped mid-stream simply
-//! deregisters — in-flight batches for it fail their handoff send and are
-//! discarded without stalling any other tenant (regression-tested).
+//! Fairness and isolation: the plane runs **weighted round-robin** over
+//! request-holding tenants — each tenant gets [`QosPolicy::weight`]
+//! one-round dealing quanta per cycle, so a tenant with a huge
+//! `provision` request cannot starve the others, and priority tenants get
+//! proportionally more dealing bandwidth — and a session dropped
+//! mid-stream simply deregisters: in-flight batches for it fail their
+//! handoff send and are discarded without stalling any other tenant
+//! (regression-tested).
+//!
+//! # Admission control and per-tenant QoS
+//!
+//! Unbounded tenants are fine for a handful of federations, but under
+//! heavy traffic one greedy tenant enqueueing thousands of rounds (or a
+//! burst of cold-start `provision` calls) degrades every session on the
+//! shared pool. Every session therefore carries a [`QosPolicy`]:
+//!
+//! * **Bounded dealing queue** ([`QosPolicy::queue_depth`]): at most
+//!   `depth` rounds may be queued on the plane plus pooled at once;
+//!   excess [`AggSession::try_prefetch`] requests fail with
+//!   [`AdmissionError::QueueFull`] instead of queueing silently.
+//! * **Token buckets** ([`QosPolicy::rounds_per_sec`],
+//!   [`QosPolicy::triples_per_sec`]): sustained-rate budgets for admitted
+//!   rounds and for Beaver-triple dealing demand, with a configurable
+//!   burst ([`QosPolicy::burst_rounds`]). An exhausted bucket fails the
+//!   request with [`AdmissionError::Throttled`] carrying a concrete
+//!   `retry_after`.
+//! * **Dealing weight** ([`QosPolicy::weight`]): the tenant's share of
+//!   the provisioning plane's weighted round-robin.
+//! * **Tenant cap** ([`AggScheduler::with_capacity`]): `try_session`
+//!   refuses new tenants with [`AdmissionError::Rejected`] once the
+//!   scheduler is at capacity.
+//!
+//! The QoS-checked surface is [`AggSession::try_run_round`] /
+//! [`AggSession::try_prefetch`]; the blocking [`Engine`] surface
+//! (`run_round` / `provision`) stays infallible and rate-limiter-exempt
+//! so existing callers and the determinism properties are untouched.
+//! **Throttling never changes votes**: admission only decides *when* a
+//! round runs, and triple streams are pure functions of the session seed,
+//! so a throttled-and-retried round is bit-identical to an unthrottled
+//! one (pinned by `rust/tests/sched_admission_props.rs`).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::beaver::{Dealer, TripleShare};
+use crate::metrics::AdmissionStats;
 use crate::mpc::EvalPlan;
 use crate::poly::MvPolynomial;
 use crate::protocol::{group_dealer_seed, inter_group_vote, partition, HiSafeConfig};
@@ -66,20 +104,296 @@ use super::workers::{
 };
 use super::{analytic_stats, Engine, EngineOutcome, DEFAULT_CHUNK};
 
+/// Per-tenant quality-of-service policy, fixed at session admission.
+///
+/// The default ([`QosPolicy::unlimited`]) reproduces the pre-admission
+/// scheduler exactly: weight 1, unbounded queue, no rate limits — so
+/// QoS is strictly opt-in per tenant.
+///
+/// ```
+/// use hisafe::engine::QosPolicy;
+///
+/// let qos = QosPolicy::unlimited()
+///     .with_weight(3)            // 3x dealing bandwidth share
+///     .with_queue_depth(8)       // at most 8 rounds queued + pooled
+///     .with_rounds_per_sec(50.0) // sustained online-round budget
+///     .with_burst_rounds(2.0);   // allow 2-round bursts
+/// assert_eq!(qos.weight, 3);
+/// assert_eq!(qos.queue_depth, Some(8));
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QosPolicy {
+    /// Weighted-round-robin share of the provisioning plane: a tenant
+    /// with weight `w` gets `w` one-round dealing quanta per cycle while
+    /// it has pending requests. Must be ≥ 1.
+    pub weight: u32,
+    /// Bound on the tenant's dealing queue: rounds requested-but-undealt
+    /// plus rounds pooled may never exceed this. `None` = unbounded.
+    pub queue_depth: Option<usize>,
+    /// Sustained budget of admitted rounds per second on the
+    /// [`AggSession::try_run_round`] path. `None` = unlimited.
+    pub rounds_per_sec: Option<f64>,
+    /// Sustained budget of Beaver-triple dealing demand per second, in
+    /// triples (one round of a session costs `triples_needed() · ℓ`).
+    /// Every round of dealing demand is charged exactly once: at
+    /// [`AggSession::try_prefetch`] time for prefetched rounds, or at
+    /// admission for rounds no prefetch already paid for. `None` =
+    /// unlimited.
+    pub triples_per_sec: Option<f64>,
+    /// Burst capacity of both token buckets, in rounds (≥ 1): how many
+    /// rounds may be admitted back-to-back after an idle period.
+    pub burst_rounds: f64,
+}
+
+impl Default for QosPolicy {
+    fn default() -> Self {
+        Self::unlimited()
+    }
+}
+
+impl QosPolicy {
+    /// No limits at all — the pre-admission scheduler behavior.
+    pub fn unlimited() -> QosPolicy {
+        QosPolicy {
+            weight: 1,
+            queue_depth: None,
+            rounds_per_sec: None,
+            triples_per_sec: None,
+            burst_rounds: 1.0,
+        }
+    }
+
+    /// Set the weighted-round-robin dealing weight (≥ 1).
+    pub fn with_weight(mut self, weight: u32) -> QosPolicy {
+        self.weight = weight;
+        self
+    }
+
+    /// Bound the dealing queue (requested-but-undealt + pooled rounds).
+    pub fn with_queue_depth(mut self, depth: usize) -> QosPolicy {
+        self.queue_depth = Some(depth);
+        self
+    }
+
+    /// Set the sustained admitted-rounds-per-second budget.
+    pub fn with_rounds_per_sec(mut self, rps: f64) -> QosPolicy {
+        self.rounds_per_sec = Some(rps);
+        self
+    }
+
+    /// Set the sustained triples-per-second dealing budget.
+    pub fn with_triples_per_sec(mut self, tps: f64) -> QosPolicy {
+        self.triples_per_sec = Some(tps);
+        self
+    }
+
+    /// Set the burst capacity of both buckets, in rounds (≥ 1).
+    pub fn with_burst_rounds(mut self, rounds: f64) -> QosPolicy {
+        self.burst_rounds = rounds;
+        self
+    }
+
+    /// Reject policies no session could ever make progress under —
+    /// checked once at admission so the round path never revalidates.
+    fn validate(&self) -> Result<(), AdmissionError> {
+        let bad = |reason: String| Err(AdmissionError::Rejected { reason });
+        if self.weight == 0 {
+            return bad("QosPolicy.weight must be ≥ 1".into());
+        }
+        if self.queue_depth == Some(0) {
+            return bad("QosPolicy.queue_depth must be ≥ 1 (or None)".into());
+        }
+        for (name, rate) in [
+            ("rounds_per_sec", self.rounds_per_sec),
+            ("triples_per_sec", self.triples_per_sec),
+        ] {
+            if let Some(r) = rate {
+                if !r.is_finite() || r <= 0.0 {
+                    return bad(format!("QosPolicy.{name} must be finite and > 0, got {r}"));
+                }
+            }
+        }
+        if !self.burst_rounds.is_finite() || self.burst_rounds < 1.0 {
+            return bad(format!(
+                "QosPolicy.burst_rounds must be finite and ≥ 1, got {}",
+                self.burst_rounds
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Typed backpressure from the admission layer — what used to be silent
+/// queueing is now an explicit, caller-visible decision.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdmissionError {
+    /// The request can never be admitted under the current configuration
+    /// (scheduler at tenant capacity, invalid policy, or a prefetch
+    /// larger than the whole queue). Retrying is pointless.
+    Rejected {
+        /// Human-readable explanation for logs and error chains.
+        reason: String,
+    },
+    /// A token bucket (rounds/sec or triples/sec) is empty. The request
+    /// is well-formed; retry after roughly `retry_after`.
+    Throttled {
+        /// Time until the bucket holds enough tokens for this request.
+        retry_after: Duration,
+    },
+    /// The tenant's bounded dealing queue is at its configured depth;
+    /// consume pooled rounds (run rounds) before requesting more.
+    QueueFull {
+        /// The configured [`QosPolicy::queue_depth`].
+        depth: usize,
+    },
+}
+
+impl fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionError::Rejected { reason } => write!(f, "admission rejected: {reason}"),
+            AdmissionError::Throttled { retry_after } => {
+                write!(f, "throttled: retry after {retry_after:?}")
+            }
+            AdmissionError::QueueFull { depth } => {
+                write!(f, "dealing queue full (depth {depth})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// A token bucket over a continuous token supply. Pure with respect to
+/// time — the caller feeds in elapsed seconds — so the policy is
+/// unit-testable without sleeping, and sessions pay exactly one
+/// `Instant::now()` per admission check.
+#[derive(Debug, Clone)]
+struct TokenBucket {
+    /// Tokens added per second (> 0, validated at admission).
+    rate: f64,
+    /// Maximum tokens the bucket holds (≥ the largest single request the
+    /// policy admits, so every valid request eventually succeeds).
+    cap: f64,
+    tokens: f64,
+}
+
+impl TokenBucket {
+    /// A full bucket (bursts are available immediately after admission).
+    fn new(rate: f64, cap: f64) -> TokenBucket {
+        let cap = cap.max(1.0);
+        TokenBucket { rate, cap, tokens: cap }
+    }
+
+    fn refill(&mut self, elapsed_secs: f64) {
+        if elapsed_secs > 0.0 {
+            self.tokens = (self.tokens + elapsed_secs * self.rate).min(self.cap);
+        }
+    }
+
+    /// Take `n` tokens, or report how long until `n` would be available.
+    fn try_take(&mut self, n: f64) -> Result<(), Duration> {
+        if self.tokens >= n {
+            self.tokens -= n;
+            Ok(())
+        } else {
+            let deficit = n - self.tokens;
+            // Rate is validated > 0; the clamp merely keeps a pathological
+            // deficit/rate ratio inside Duration's constructible range.
+            let secs = (deficit / self.rate).clamp(0.0, 3600.0);
+            Err(Duration::from_secs_f64(secs))
+        }
+    }
+
+    /// Return tokens taken by a request that was later denied elsewhere
+    /// (no partial debits across the two buckets).
+    fn put_back(&mut self, n: f64) {
+        self.tokens = (self.tokens + n).min(self.cap);
+    }
+
+    /// Could a request for `n` tokens ever succeed, even against a full
+    /// bucket? When false the right answer is [`AdmissionError::Rejected`]
+    /// — returning `Throttled` would promise a retry that can never win.
+    fn can_ever_admit(&self, n: f64) -> bool {
+        n <= self.cap
+    }
+}
+
+/// One tenant's weighted-round-robin scheduling state inside the plane.
+/// Kept as a standalone `Copy` struct so the pick policy ([`wrr_pick`])
+/// is a pure function, unit-tested without threads or dealers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct WrrState {
+    /// Rounds requested but not yet dealt.
+    pub pending: usize,
+    /// Configured weight (quanta per cycle).
+    pub weight: u32,
+    /// Quanta left in the current cycle.
+    pub credits: u32,
+}
+
+impl WrrState {
+    pub fn new(weight: u32) -> WrrState {
+        WrrState { pending: 0, weight, credits: weight.max(1) }
+    }
+}
+
+/// Weighted round-robin with per-cycle credits: pick the next tenant to
+/// deal ONE round for, starting the search at `cursor`. The picked slot's
+/// `pending` and `credits` are decremented; the cursor stays on a tenant
+/// until its quantum (credits) or its pending work is exhausted, then
+/// advances. When every pending tenant is out of credits the cycle
+/// restarts (credits refresh to weights) — so over any window in which a
+/// set of tenants is continuously pending, tenant `i` receives exactly
+/// `weight_i` of every `Σ weight_j` dealt rounds, and a flooding tenant
+/// can never push a weight-`w` tenant below its `w / Σ weight` share.
+///
+/// Returns `None` when no slot has pending work.
+pub(crate) fn wrr_pick(slots: &mut [WrrState], cursor: &mut usize) -> Option<usize> {
+    let k = slots.len();
+    if k == 0 || !slots.iter().any(|s| s.pending > 0) {
+        return None;
+    }
+    // Pass 0 uses the credits left in the current cycle; if every pending
+    // tenant is out, refresh and pass 1 must find one.
+    for pass in 0..2 {
+        for step in 0..k {
+            let i = (*cursor + step) % k;
+            let s = &mut slots[i];
+            if s.pending > 0 && s.credits > 0 {
+                s.pending -= 1;
+                s.credits -= 1;
+                *cursor = if s.credits == 0 || s.pending == 0 { (i + 1) % k } else { i };
+                return Some(i);
+            }
+        }
+        if pass == 0 {
+            for s in slots.iter_mut() {
+                s.credits = s.weight.max(1);
+            }
+        }
+    }
+    unreachable!("a pending tenant always has credits after a refresh")
+}
+
 /// Commands to the provisioning plane's dealer thread.
 enum PlaneCmd {
     /// A new tenant: its dealers (one per group, pre-seeded), workload
-    /// shape, and the handoff channel its dealt rounds go down.
+    /// shape, WRR weight, and the handoff channel its dealt rounds go
+    /// down. `dealt` is the session-shared counter of rounds the plane
+    /// has dealt for this tenant (the fairness tests read it).
     Register {
         sid: u64,
         dealers: Vec<Dealer>,
         d: usize,
         n1: usize,
         mults: usize,
+        weight: u32,
+        dealt: Arc<AtomicU64>,
         dealt_tx: Sender<RoundBatch>,
     },
     /// Deal `rounds` more rounds for tenant `sid` (queued; the plane
-    /// interleaves tenants one round at a time).
+    /// interleaves tenants by weighted round-robin, one round at a time).
     Request { sid: u64, rounds: usize },
     /// Tenant is gone; drop its dealers and any queued work.
     Deregister { sid: u64 },
@@ -93,8 +407,10 @@ struct Tenant {
     n1: usize,
     mults: usize,
     dealt_tx: Sender<RoundBatch>,
-    /// Rounds requested but not yet dealt.
-    pending: usize,
+    /// Rounds successfully dealt and handed off, shared with the session.
+    dealt: Arc<AtomicU64>,
+    /// WRR bookkeeping (pending rounds, weight, cycle credits).
+    wrr: WrrState,
 }
 
 impl Tenant {
@@ -112,14 +428,23 @@ impl Tenant {
 
 fn apply_cmd(tenants: &mut Vec<Tenant>, cmd: PlaneCmd) {
     match cmd {
-        PlaneCmd::Register { sid, dealers, d, n1, mults, dealt_tx } => {
-            tenants.push(Tenant { sid, dealers, d, n1, mults, dealt_tx, pending: 0 });
+        PlaneCmd::Register { sid, dealers, d, n1, mults, weight, dealt, dealt_tx } => {
+            tenants.push(Tenant {
+                sid,
+                dealers,
+                d,
+                n1,
+                mults,
+                dealt_tx,
+                dealt,
+                wrr: WrrState::new(weight),
+            });
         }
         PlaneCmd::Request { sid, rounds } => {
             // A request for an already-deregistered session is ignored
             // (it can race the Deregister through the same channel).
             if let Some(t) = tenants.iter_mut().find(|t| t.sid == sid) {
-                t.pending += rounds;
+                t.wrr.pending += rounds;
             }
         }
         PlaneCmd::Deregister { sid } => {
@@ -129,15 +454,17 @@ fn apply_cmd(tenants: &mut Vec<Tenant>, cmd: PlaneCmd) {
 }
 
 /// The plane's dealer loop: absorb commands (blocking only when no
-/// tenant has pending work), then deal ONE round for the next pending
-/// tenant in round-robin order. One round — not one request — is the
-/// fairness quantum, so a tenant pre-provisioning 100 rounds cannot
-/// starve another tenant's cold start.
+/// tenant has pending work), then deal ONE round for the tenant
+/// [`wrr_pick`] selects. One round — not one request — stays the
+/// dealing quantum (so command absorption and tenant churn remain
+/// responsive mid-flood); *weights* decide how many consecutive quanta a
+/// tenant gets per cycle, which is what gives priority tenants a
+/// proportionally larger share of dealing bandwidth.
 fn plane_loop(cmd_rx: Receiver<PlaneCmd>) {
     let mut tenants: Vec<Tenant> = Vec::new();
     let mut cursor = 0usize;
     loop {
-        if tenants.iter().any(|t| t.pending > 0) {
+        if tenants.iter().any(|t| t.wrr.pending > 0) {
             // Drain without blocking; on disconnect keep draining pending
             // work — dead sessions' sends fail below and clean themselves
             // up.
@@ -155,25 +482,32 @@ fn plane_loop(cmd_rx: Receiver<PlaneCmd>) {
             }
         }
 
-        let k = tenants.len();
-        for step in 0..k {
-            let i = (cursor + step) % k;
-            if tenants[i].pending == 0 {
-                continue;
-            }
-            let batch = tenants[i].deal_one_round();
-            tenants[i].pending -= 1;
-            if tenants[i].dealt_tx.send(batch).is_ok() {
-                cursor = (i + 1) % k;
+        // The WRR pick runs over per-tenant Copy state so the policy is a
+        // pure, separately-tested function; write the updated state back
+        // before acting on the pick.
+        let mut slots: Vec<WrrState> = tenants.iter().map(|t| t.wrr).collect();
+        let Some(i) = wrr_pick(&mut slots, &mut cursor) else {
+            continue;
+        };
+        for (t, s) in tenants.iter_mut().zip(&slots) {
+            t.wrr = *s;
+        }
+        let batch = tenants[i].deal_one_round();
+        if tenants[i].dealt_tx.send(batch).is_ok() {
+            tenants[i].dealt.fetch_add(1, Ordering::Relaxed);
+        } else {
+            // Session dropped mid-stream: discard it without touching
+            // any other tenant's queue. Later tenants shift down one
+            // slot, so a cursor past `i` moves with them; a cursor at or
+            // before `i` already points at the rightful next tenant.
+            tenants.remove(i);
+            cursor = if tenants.is_empty() {
+                0
+            } else if cursor > i {
+                (cursor - 1) % tenants.len()
             } else {
-                // Session dropped mid-stream: discard it without
-                // touching any other tenant's queue. The tenant that
-                // shifts into slot `i` is the rightful next in
-                // round-robin order, so the cursor points at it.
-                tenants.remove(i);
-                cursor = if tenants.is_empty() { 0 } else { i % tenants.len() };
-            }
-            break;
+                cursor % tenants.len()
+            };
         }
     }
 }
@@ -189,6 +523,11 @@ struct SchedCore {
     plane_tx: Option<Sender<PlaneCmd>>,
     plane: Option<JoinHandle<()>>,
     next_sid: AtomicU64,
+    /// Admission cap on concurrent tenants (`None` = unbounded).
+    max_tenants: Option<usize>,
+    /// Currently admitted tenants (incremented by `try_session`,
+    /// decremented by `AggSession::drop`).
+    live_tenants: AtomicUsize,
 }
 
 impl Drop for SchedCore {
@@ -237,6 +576,21 @@ impl AggScheduler {
     /// A scheduler with an explicitly pinned worker count — tests pin
     /// `threads = 1` for deterministic single-threaded evaluation.
     pub fn with_threads(threads: usize) -> AggScheduler {
+        Self::build(threads, None)
+    }
+
+    /// A scheduler that additionally refuses to admit more than
+    /// `max_tenants` concurrent sessions: once at capacity,
+    /// [`try_session`](AggScheduler::try_session) returns
+    /// [`AdmissionError::Rejected`] until a session drops. This is the
+    /// cluster-facing admission knob — it bounds the scheduler's memory
+    /// (plans + pools are per-tenant) independent of per-tenant QoS.
+    pub fn with_capacity(threads: usize, max_tenants: usize) -> AggScheduler {
+        assert!(max_tenants >= 1, "a scheduler that admits no tenants is useless");
+        Self::build(threads, Some(max_tenants))
+    }
+
+    fn build(threads: usize, max_tenants: Option<usize>) -> AggScheduler {
         assert!(threads >= 1, "scheduler needs at least one worker thread");
         let (plane_tx, cmd_rx) = channel::<PlaneCmd>();
         let plane = std::thread::spawn(move || plane_loop(cmd_rx));
@@ -247,6 +601,8 @@ impl AggScheduler {
                 plane_tx: Some(plane_tx),
                 plane: Some(plane),
                 next_sid: AtomicU64::new(0),
+                max_tenants,
+                live_tenants: AtomicUsize::new(0),
             }),
         }
     }
@@ -258,21 +614,91 @@ impl AggScheduler {
     }
 
     /// Threads in the provisioning plane (currently a single dealer
-    /// thread round-robining across tenants).
+    /// thread weighted-round-robining across tenants).
     pub fn dealer_threads(&self) -> usize {
         1
     }
 
-    /// Open a tenant session for `cfg` over `d`-coordinate votes. `seed`
-    /// drives all of this tenant's offline randomness, one independent
-    /// stream per subgroup — the same [`group_dealer_seed`] derivation as
+    /// Open a tenant session for `cfg` over `d`-coordinate votes with the
+    /// default (unlimited) [`QosPolicy`]. `seed` drives all of this
+    /// tenant's offline randomness, one independent stream per subgroup —
+    /// the same [`group_dealer_seed`] derivation as
     /// [`run_sync`](crate::protocol::run_sync) and the dedicated engines,
     /// which is what keeps sessions bit-identical to them.
     ///
     /// Dealing for the session's first round starts immediately on the
     /// shared plane, so caller-side work before the first `run_round`
     /// already overlaps the offline phase.
+    ///
+    /// # Panics
+    ///
+    /// On a scheduler built with [`with_capacity`] that is at its tenant
+    /// cap — use [`try_session`] to handle rejection instead.
+    ///
+    /// [`with_capacity`]: AggScheduler::with_capacity
+    /// [`try_session`]: AggScheduler::try_session
     pub fn session(&self, cfg: HiSafeConfig, d: usize, seed: u64) -> AggSession {
+        self.try_session(cfg, d, seed, QosPolicy::unlimited())
+            .expect("unlimited-policy session admitted on an uncapped scheduler")
+    }
+
+    /// Open a tenant session under an explicit [`QosPolicy`], subject to
+    /// admission control: an invalid policy or a scheduler at its
+    /// [`with_capacity`](AggScheduler::with_capacity) tenant cap is
+    /// refused with [`AdmissionError::Rejected`] — typed backpressure at
+    /// the front door, instead of unbounded tenancy.
+    ///
+    /// ```
+    /// use hisafe::engine::{AggScheduler, Engine, QosPolicy};
+    /// use hisafe::poly::TiePolicy;
+    /// use hisafe::protocol::HiSafeConfig;
+    ///
+    /// // Two tenants with different priorities on one scheduler.
+    /// let sched = AggScheduler::with_threads(1);
+    /// let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+    /// let mut gold = sched
+    ///     .try_session(cfg, 4, 7, QosPolicy::unlimited().with_weight(3))
+    ///     .unwrap();
+    /// let mut best_effort = sched
+    ///     .try_session(cfg, 4, 8, QosPolicy::unlimited().with_queue_depth(2))
+    ///     .unwrap();
+    ///
+    /// // Unanimous inputs make the expected majority vote obvious.
+    /// let signs = vec![vec![1i8, -1, 1, -1]; 6];
+    /// assert_eq!(gold.run_round(&signs).global_vote, vec![1, -1, 1, -1]);
+    /// assert_eq!(best_effort.run_round(&signs).global_vote, vec![1, -1, 1, -1]);
+    /// ```
+    pub fn try_session(
+        &self,
+        cfg: HiSafeConfig,
+        d: usize,
+        seed: u64,
+        qos: QosPolicy,
+    ) -> Result<AggSession, AdmissionError> {
+        qos.validate()?;
+        if let Some(cap) = self.core.max_tenants {
+            // CAS loop: concurrent admitters must not overshoot the cap.
+            let mut cur = self.core.live_tenants.load(Ordering::SeqCst);
+            loop {
+                if cur >= cap {
+                    return Err(AdmissionError::Rejected {
+                        reason: format!("scheduler at tenant capacity ({cap})"),
+                    });
+                }
+                match self.core.live_tenants.compare_exchange(
+                    cur,
+                    cur + 1,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                ) {
+                    Ok(_) => break,
+                    Err(now) => cur = now,
+                }
+            }
+        } else {
+            self.core.live_tenants.fetch_add(1, Ordering::SeqCst);
+        }
+
         let n1 = cfg.n1();
         let mv = MvPolynomial::build_fermat(n1, cfg.intra);
         let plan = Arc::new(EvalPlan::new(&mv, d, cfg.sparse));
@@ -283,9 +709,27 @@ impl AggScheduler {
         let sid = self.core.next_sid.fetch_add(1, Ordering::Relaxed);
         let plane_tx = self.core.plane_tx.as_ref().expect("plane open").clone();
         let (dealt_tx, dealt_rx) = channel::<RoundBatch>();
+        let dealt = Arc::new(AtomicU64::new(0));
         plane_tx
-            .send(PlaneCmd::Register { sid, dealers, d, n1, mults, dealt_tx })
+            .send(PlaneCmd::Register {
+                sid,
+                dealers,
+                d,
+                n1,
+                mults,
+                weight: qos.weight,
+                dealt: Arc::clone(&dealt),
+                dealt_tx,
+            })
             .expect("provisioning plane alive");
+        // Rate buckets are per-session; the triple bucket's capacity is
+        // denominated in triples (burst_rounds rounds' worth), so one
+        // whole round always fits and every valid request can succeed.
+        let per_round_triples = ((mults * cfg.ell) as f64).max(1.0);
+        let round_bucket = qos.rounds_per_sec.map(|r| TokenBucket::new(r, qos.burst_rounds));
+        let triple_bucket = qos
+            .triples_per_sec
+            .map(|r| TokenBucket::new(r, qos.burst_rounds * per_round_triples));
         let mut session = AggSession {
             sid,
             cfg,
@@ -300,12 +744,35 @@ impl AggScheduler {
             inflight_rounds: 0,
             chunk: DEFAULT_CHUNK,
             rounds_run: 0,
+            qos,
+            round_bucket,
+            triple_bucket,
+            charged_rounds: 0,
+            bucket_refill_at: Instant::now(),
+            admission: AdmissionStats::default(),
+            dealt,
+            inflight_jobs: Arc::new(AtomicUsize::new(0)),
             core: Arc::clone(&self.core),
         };
         if mults > 0 {
+            // Bootstrap: one warm-up round on the plane so the first
+            // `run_round` overlaps dealing. Uncharged — queue depth is
+            // validated ≥ 1 and a session's first round is always
+            // admissible.
             session.request_rounds(1);
         }
-        session
+        Ok(session)
+    }
+
+    /// Tenants currently admitted (sessions alive now).
+    pub fn live_tenants(&self) -> usize {
+        self.core.live_tenants.load(Ordering::SeqCst)
+    }
+
+    /// The tenant cap, if this scheduler was built with
+    /// [`with_capacity`](AggScheduler::with_capacity).
+    pub fn max_tenants(&self) -> Option<usize> {
+        self.core.max_tenants
     }
 }
 
@@ -339,6 +806,27 @@ pub struct AggSession {
     inflight_rounds: usize,
     chunk: usize,
     rounds_run: u64,
+    /// Admission policy, fixed at `try_session` time.
+    qos: QosPolicy,
+    /// Rounds/sec budget (None = unlimited).
+    round_bucket: Option<TokenBucket>,
+    /// Triples/sec dealing budget (None = unlimited).
+    triple_bucket: Option<TokenBucket>,
+    /// Rounds whose dealing cost `try_prefetch` already debited from the
+    /// triple bucket; `try_run_round` consumes these credits instead of
+    /// charging again, so each round of dealing demand is billed exactly
+    /// once. Only maintained while a triple bucket exists.
+    charged_rounds: usize,
+    /// Last wall-clock instant the buckets were refilled at.
+    bucket_refill_at: Instant,
+    /// Admission decision counters (admitted/throttled/queue-full/rejected).
+    admission: AdmissionStats,
+    /// Rounds the plane has dealt for this tenant (plane-incremented;
+    /// the fairness properties and the sweep report read it).
+    dealt: Arc<AtomicU64>,
+    /// Span jobs submitted to the shared pool and not yet evaluated
+    /// (workers decrement before delivering each result).
+    inflight_jobs: Arc<AtomicUsize>,
     /// Keeps the shared pool + plane alive while any session runs.
     /// Declared last: the drop-order guarantee means our `plane_tx`
     /// clone is gone before the core (possibly) joins the plane thread.
@@ -351,6 +839,8 @@ impl Drop for AggSession {
         // The handoff channel closing is the hard backstop — a racing
         // in-flight batch fails its send and evicts the tenant anyway.
         let _ = self.plane_tx.send(PlaneCmd::Deregister { sid: self.sid });
+        // Free the admission slot (with_capacity schedulers re-admit).
+        self.core.live_tenants.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -359,6 +849,194 @@ impl AggSession {
     /// span jobs and results are tagged with it).
     pub fn id(&self) -> u64 {
         self.sid
+    }
+
+    /// The QoS policy this session was admitted under.
+    pub fn qos(&self) -> &QosPolicy {
+        &self.qos
+    }
+
+    /// Snapshot of this session's admission counters (rounds admitted,
+    /// throttle/queue-full/reject denials). `train_multi` and
+    /// `hisafe sweep` surface these per tenant in their JSON reports.
+    pub fn admission_stats(&self) -> AdmissionStats {
+        self.admission.clone()
+    }
+
+    /// Rounds the shared provisioning plane has dealt for this tenant so
+    /// far (including rounds already consumed). Under weighted
+    /// round-robin this is each tenant's measured share of dealing
+    /// bandwidth — the fairness properties assert on it.
+    pub fn dealt_rounds(&self) -> u64 {
+        self.dealt.load(Ordering::Relaxed)
+    }
+
+    /// Span jobs currently submitted to the shared worker pool and not
+    /// yet evaluated. Exactly 0 between rounds (workers decrement the
+    /// gauge before delivering each result, and a round collects every
+    /// result before returning).
+    pub fn inflight_jobs(&self) -> usize {
+        self.inflight_jobs.load(Ordering::SeqCst)
+    }
+
+    /// Rounds occupying this tenant's dealing queue right now: requested
+    /// but undealt, plus dealt and pooled. This is the quantity
+    /// [`QosPolicy::queue_depth`] bounds. 0 for plans that need no
+    /// triples.
+    pub fn queued_rounds(&mut self) -> usize {
+        let mults = self.plan.triples_needed();
+        if mults == 0 {
+            return 0;
+        }
+        self.absorb_ready_batches();
+        self.inflight_rounds + self.pools.provisioned_rounds(mults)
+    }
+
+    /// QoS-checked prefetch: ask the plane for `rounds` more rounds of
+    /// triples *without blocking*, subject to the session's queue depth
+    /// and triples/sec budget. On `Ok(())` the rounds are queued on the
+    /// plane (weighted round-robin decides when they deal); the blocking
+    /// [`Engine::provision`] remains the wait-until-pooled surface.
+    ///
+    /// Errors are typed backpressure: [`AdmissionError::Rejected`] for a
+    /// request no retry can ever satisfy (larger than the whole queue,
+    /// or larger than the triple bucket's burst capacity),
+    /// [`AdmissionError::QueueFull`] when the queue is at depth (consume
+    /// pooled rounds first), [`AdmissionError::Throttled`] when the
+    /// triple budget is exhausted (retry after the returned delay).
+    pub fn try_prefetch(&mut self, rounds: usize) -> Result<(), AdmissionError> {
+        let mults = self.plan.triples_needed();
+        // 0 rounds (e.g. from a computed `depth - queued` that came out
+        // empty) and triple-free plans are clean no-ops, not errors.
+        if rounds == 0 || mults == 0 {
+            return Ok(());
+        }
+        self.absorb_ready_batches();
+        if let Some(depth) = self.qos.queue_depth {
+            if rounds > depth {
+                self.admission.rejected += 1;
+                return Err(AdmissionError::Rejected {
+                    reason: format!("prefetch of {rounds} rounds exceeds queue depth {depth}"),
+                });
+            }
+            let queued = self.inflight_rounds + self.pools.provisioned_rounds(mults);
+            if queued + rounds > depth {
+                self.admission.queue_full += 1;
+                return Err(AdmissionError::QueueFull { depth });
+            }
+        }
+        self.refill_buckets();
+        if let Some(bucket) = &mut self.triple_bucket {
+            let cost = (mults * self.cfg.ell * rounds) as f64;
+            // A request larger than the bucket could ever hold must be
+            // Rejected, not Throttled — a Throttled retry_after promises
+            // a retry that can never succeed (livelock for contract-
+            // following callers).
+            if !bucket.can_ever_admit(cost) {
+                self.admission.rejected += 1;
+                return Err(AdmissionError::Rejected {
+                    reason: format!(
+                        "prefetch of {rounds} rounds exceeds the triple bucket's burst \
+                         capacity — raise QosPolicy::burst_rounds or prefetch fewer \
+                         rounds per call"
+                    ),
+                });
+            }
+            if let Err(retry_after) = bucket.try_take(cost) {
+                self.admission.throttled += 1;
+                return Err(AdmissionError::Throttled { retry_after });
+            }
+            // These rounds' dealing is now paid for; admission will not
+            // charge them a second time.
+            self.charged_rounds += rounds;
+        }
+        self.request_rounds(rounds);
+        Ok(())
+    }
+
+    /// QoS-checked round execution: admit one round against the
+    /// rounds/sec and triples/sec budgets, then run it. Throttling only
+    /// delays a round, it never changes its votes — triple streams are
+    /// pure functions of the session seed, so an admitted round is
+    /// bit-identical whether it was throttled-and-retried or not
+    /// (pinned by `rust/tests/sched_admission_props.rs`).
+    ///
+    /// The blocking [`Engine::run_round`] stays infallible and
+    /// rate-limiter-exempt; use this surface where backpressure must be
+    /// visible (the trainer's multi-tenant loop, `hisafe sweep`).
+    pub fn try_run_round(&mut self, signs: &[Vec<i8>]) -> Result<EngineOutcome, AdmissionError> {
+        self.refill_buckets();
+        if let Some(bucket) = &mut self.round_bucket {
+            if let Err(retry_after) = bucket.try_take(1.0) {
+                self.admission.throttled += 1;
+                return Err(AdmissionError::Throttled { retry_after });
+            }
+        }
+        let mults = self.plan.triples_needed();
+        if mults > 0 && self.charged_rounds == 0 {
+            // No prefetch credit covers this round's dealing, so bill it
+            // now. (When a credit exists, run_round_inner consumes it —
+            // the same consumption path the blocking surface uses, so
+            // credits can never be double-spent across the two surfaces.)
+            if let Some(bucket) = &mut self.triple_bucket {
+                let cost = (mults * self.cfg.ell) as f64;
+                if let Err(retry_after) = bucket.try_take(cost) {
+                    // No partial debits: hand the round token back so a
+                    // retry is charged exactly once.
+                    if let Some(rb) = &mut self.round_bucket {
+                        rb.put_back(1.0);
+                    }
+                    self.admission.throttled += 1;
+                    return Err(AdmissionError::Throttled { retry_after });
+                }
+            }
+        }
+        Ok(self.run_round_inner(signs))
+    }
+
+    /// Blocking wrapper over [`try_run_round`](AggSession::try_run_round)
+    /// for callers that must make progress: waits out `Throttled` denials
+    /// (sleeping roughly `retry_after`, clamped to [50 µs, 20 ms] so a
+    /// coarse budget stays responsive) until the round is admitted.
+    /// Returns the outcome, the number of denials eaten, and the total
+    /// time slept — the one retry loop the trainer, `hisafe sweep`, and
+    /// the admission bench all share. Callers that need custom backoff
+    /// (or want to *drop* rounds instead of waiting) use `try_run_round`
+    /// directly.
+    pub fn run_round_admitted(&mut self, signs: &[Vec<i8>]) -> (EngineOutcome, u64, Duration) {
+        let mut denials = 0u64;
+        let mut waited = Duration::ZERO;
+        loop {
+            match self.try_run_round(signs) {
+                Ok(out) => return (out, denials, waited),
+                Err(AdmissionError::Throttled { retry_after }) => {
+                    denials += 1;
+                    let wait =
+                        retry_after.clamp(Duration::from_micros(50), Duration::from_millis(20));
+                    waited += wait;
+                    std::thread::sleep(wait);
+                }
+                Err(e) => unreachable!("try_run_round only returns Throttled denials: {e}"),
+            }
+        }
+    }
+
+    /// Advance both token buckets by the wall-clock elapsed since the
+    /// last admission check (one `Instant::now()` per check; the bucket
+    /// arithmetic itself is pure and unit-tested with synthetic time).
+    fn refill_buckets(&mut self) {
+        if self.round_bucket.is_none() && self.triple_bucket.is_none() {
+            return;
+        }
+        let now = Instant::now();
+        let elapsed = now.duration_since(self.bucket_refill_at).as_secs_f64();
+        self.bucket_refill_at = now;
+        if let Some(b) = &mut self.round_bucket {
+            b.refill(elapsed);
+        }
+        if let Some(b) = &mut self.triple_bucket {
+            b.refill(elapsed);
+        }
     }
 
     fn request_rounds(&mut self, rounds: usize) {
@@ -387,67 +1065,49 @@ impl AggSession {
     pub(crate) fn pools_mut(&mut self) -> &mut GroupPools {
         &mut self.pools
     }
-}
 
-impl Engine for AggSession {
-    fn with_chunk(mut self, chunk: usize) -> AggSession {
-        assert!(chunk >= 1, "chunk must be ≥ 1");
-        self.chunk = chunk;
-        self
-    }
-
-    fn with_batch_rounds(mut self, rounds: usize) -> AggSession {
-        assert!(rounds >= 1, "batch must be ≥ 1");
-        self.batch_rounds = rounds;
-        self
-    }
-
-    fn plan(&self) -> &EvalPlan {
-        &self.plan
-    }
-
-    fn provisioned_rounds(&self) -> usize {
-        self.pools.provisioned_rounds(self.plan.triples_needed())
-    }
-
-    fn provision(&mut self, rounds: usize) {
-        let mults = self.plan.triples_needed();
-        if mults == 0 {
-            return;
-        }
-        self.absorb_ready_batches();
-        while self.pools.provisioned_rounds(mults) < rounds {
-            if self.inflight_rounds == 0 {
-                let missing = rounds - self.pools.provisioned_rounds(mults);
-                self.request_rounds(missing);
-            }
-            self.recv_one_round();
-        }
-    }
-
-    fn run_round(&mut self, signs: &[Vec<i8>]) -> EngineOutcome {
+    /// The round path shared by the infallible [`Engine::run_round`] and
+    /// the QoS-checked [`try_run_round`](AggSession::try_run_round) —
+    /// admission has already been decided by the time this runs.
+    fn run_round_inner(&mut self, signs: &[Vec<i8>]) -> EngineOutcome {
         assert_eq!(signs.len(), self.cfg.n, "need exactly n sign vectors");
         for (i, s) in signs.iter().enumerate() {
             assert_eq!(s.len(), self.d, "user {i} dimension mismatch");
         }
         let mults = self.plan.triples_needed();
         if mults > 0 {
+            // This round consumes one round of dealing; if a prefetch
+            // credit paid for it, retire the credit HERE — on the path
+            // both the QoS-checked and the blocking surface share — so a
+            // blocking `run_round` can never strand a credit for a later
+            // `try_run_round` to spend on unbilled demand.
+            self.charged_rounds = self.charged_rounds.saturating_sub(1);
             // Absorb whatever the plane finished since the last round,
             // without blocking.
             self.absorb_ready_batches();
             // Cold start / catch-up: block until this round is covered.
             while self.pools.provisioned_rounds(mults) == 0 {
                 if self.inflight_rounds == 0 {
-                    self.request_rounds(self.batch_rounds);
+                    // Depth-capped like the overlap below (depth is
+                    // validated ≥ 1, so progress is always possible).
+                    let depth = self.qos.queue_depth.unwrap_or(usize::MAX);
+                    self.request_rounds(self.batch_rounds.min(depth).max(1));
                 }
                 self.recv_one_round();
             }
             // The overlap: keep a batch in flight so round r+1's triples
             // are dealt while this round's online phase evaluates below.
-            if self.inflight_rounds == 0
-                && self.pools.provisioned_rounds(mults) < 1 + self.batch_rounds
-            {
-                self.request_rounds(self.batch_rounds);
+            // A configured queue depth caps the prefetch — the internal
+            // overlap must not outgrow the bound try_prefetch enforces.
+            if self.inflight_rounds == 0 {
+                let pooled = self.pools.provisioned_rounds(mults);
+                if pooled < 1 + self.batch_rounds {
+                    let depth = self.qos.queue_depth.unwrap_or(usize::MAX);
+                    let want = self.batch_rounds.min(depth.saturating_sub(pooled));
+                    if want > 0 {
+                        self.request_rounds(want);
+                    }
+                }
             }
         }
 
@@ -486,9 +1146,11 @@ impl Engine for AggSession {
                 let len = span_len.min(d - base);
                 let slot = slots.len();
                 slots.push((g, base, len));
+                self.inflight_jobs.fetch_add(1, Ordering::SeqCst);
                 self.jobs
                     .send(SpanJob {
                         session: self.sid,
+                        inflight: Arc::clone(&self.inflight_jobs),
                         fp,
                         plan: Arc::clone(&self.plan),
                         signs: Arc::clone(&group_signs),
@@ -512,11 +1174,67 @@ impl Engine for AggSession {
             let (g, b, len) = slots[slot];
             subgroup_votes[g][b..b + len].copy_from_slice(&span_votes);
         }
+        // Every result is in and workers decrement before sending, so
+        // the in-flight gauge is provably drained between rounds.
+        debug_assert_eq!(self.inflight_jobs(), 0, "in-flight gauge must drain per round");
 
         let global_vote = inter_group_vote(&subgroup_votes, self.cfg.inter);
         let stats = analytic_stats(&self.cfg, &self.plan, d);
         self.rounds_run += 1;
+        self.admission.admitted_rounds += 1;
         EngineOutcome { global_vote, subgroup_votes, stats }
+    }
+}
+
+impl Engine for AggSession {
+    fn with_chunk(mut self, chunk: usize) -> AggSession {
+        assert!(chunk >= 1, "chunk must be ≥ 1");
+        self.chunk = chunk;
+        self
+    }
+
+    fn with_batch_rounds(mut self, rounds: usize) -> AggSession {
+        assert!(rounds >= 1, "batch must be ≥ 1");
+        self.batch_rounds = rounds;
+        self
+    }
+
+    fn plan(&self) -> &EvalPlan {
+        &self.plan
+    }
+
+    fn provisioned_rounds(&self) -> usize {
+        self.pools.provisioned_rounds(self.plan.triples_needed())
+    }
+
+    /// Blocking pre-provisioning. Exempt from the rate limiters like the
+    /// rest of the `Engine` surface, but NOT from the queue bound: the
+    /// target is clamped to [`QosPolicy::queue_depth`], so even a legacy
+    /// `provision(1000)` cannot queue more than the session's depth on
+    /// the shared plane (the invariant `queued_rounds() ≤ depth` holds
+    /// on every path).
+    fn provision(&mut self, rounds: usize) {
+        let mults = self.plan.triples_needed();
+        if mults == 0 {
+            return;
+        }
+        let target = rounds.min(self.qos.queue_depth.unwrap_or(usize::MAX));
+        self.absorb_ready_batches();
+        while self.pools.provisioned_rounds(mults) < target {
+            if self.inflight_rounds == 0 {
+                let missing = target - self.pools.provisioned_rounds(mults);
+                self.request_rounds(missing);
+            }
+            self.recv_one_round();
+        }
+    }
+
+    /// Infallible, rate-limiter-exempt round execution (the legacy
+    /// engine surface; see [`AggSession::try_run_round`] for the
+    /// QoS-checked one). Counts toward
+    /// [`AdmissionStats::admitted_rounds`].
+    fn run_round(&mut self, signs: &[Vec<i8>]) -> EngineOutcome {
+        self.run_round_inner(signs)
     }
 
     fn rounds_run(&self) -> u64 {
@@ -698,6 +1416,341 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn token_bucket_policy_is_pure_and_exact() {
+        let mut b = TokenBucket::new(10.0, 2.0); // 10 tokens/s, burst 2
+        // Starts full: the burst is available immediately.
+        assert!(b.try_take(2.0).is_ok());
+        // Empty now: a 1-token request must wait 0.1s.
+        let wait = b.try_take(1.0).unwrap_err();
+        assert!((wait.as_secs_f64() - 0.1).abs() < 1e-9, "got {wait:?}");
+        // Synthetic time: refill half a token, still short for 1.0.
+        b.refill(0.05);
+        assert!(b.try_take(1.0).is_err());
+        b.refill(0.05);
+        assert!(b.try_take(1.0).is_ok());
+        // Refills never exceed the cap.
+        b.refill(1000.0);
+        assert!(b.try_take(2.0).is_ok());
+        assert!(b.try_take(0.5).is_err());
+        // put_back restores tokens, also capped.
+        b.put_back(0.5);
+        assert!(b.try_take(0.5).is_ok());
+        b.put_back(100.0);
+        assert!(b.try_take(2.0).is_ok());
+        assert!(b.try_take(0.1).is_err());
+    }
+
+    #[test]
+    fn wrr_pick_gives_each_pending_tenant_its_weight_per_cycle() {
+        // Tenant 0: weight 3, flooding. Tenant 1: weight 1, modest.
+        let mut slots = vec![
+            WrrState { pending: 100, ..WrrState::new(3) },
+            WrrState { pending: 10, ..WrrState::new(1) },
+        ];
+        let mut cursor = 0usize;
+        let mut picks = Vec::new();
+        for _ in 0..16 {
+            picks.push(wrr_pick(&mut slots, &mut cursor).unwrap());
+        }
+        // Per cycle: 3 quanta for tenant 0, then 1 for tenant 1.
+        assert_eq!(picks, vec![0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0, 1]);
+        // The weight-1 tenant got exactly its 1/4 proportional share.
+        assert_eq!(picks.iter().filter(|&&i| i == 1).count(), 4);
+        assert_eq!(slots[1].pending, 6);
+    }
+
+    #[test]
+    fn wrr_pick_skips_idle_tenants_without_consuming_their_turn() {
+        // Tenant 1 has no pending work; 0 and 2 alternate as if adjacent.
+        let mut slots = vec![
+            WrrState { pending: 5, ..WrrState::new(1) },
+            WrrState::new(4), // idle, high weight — must not matter
+            WrrState { pending: 5, ..WrrState::new(1) },
+        ];
+        let mut cursor = 0usize;
+        let mut picks = Vec::new();
+        for _ in 0..10 {
+            picks.push(wrr_pick(&mut slots, &mut cursor).unwrap());
+        }
+        assert_eq!(picks, vec![0, 2, 0, 2, 0, 2, 0, 2, 0, 2]);
+        // Everything dealt; nothing pending anywhere.
+        assert_eq!(wrr_pick(&mut slots, &mut cursor), None);
+    }
+
+    #[test]
+    fn wrr_pick_drains_a_flood_after_the_modest_tenant_finishes() {
+        // Once the weight-1 tenant runs out of pending work, the flooder
+        // gets the whole plane (work conservation).
+        let mut slots = vec![
+            WrrState { pending: 8, ..WrrState::new(1) },
+            WrrState { pending: 2, ..WrrState::new(1) },
+        ];
+        let mut cursor = 0usize;
+        let mut picks = Vec::new();
+        while let Some(i) = wrr_pick(&mut slots, &mut cursor) {
+            picks.push(i);
+        }
+        assert_eq!(picks.len(), 10);
+        assert_eq!(picks.iter().filter(|&&i| i == 1).count(), 2);
+        // Tail is all tenant 0 (tenant 1 finished in the first cycles).
+        assert!(picks[4..].iter().all(|&i| i == 0));
+    }
+
+    #[test]
+    fn invalid_qos_policies_are_rejected_at_admission() {
+        let sched = AggScheduler::with_threads(1);
+        let cfg = HiSafeConfig::flat(3, TiePolicy::OneBit);
+        for qos in [
+            QosPolicy::unlimited().with_weight(0),
+            QosPolicy::unlimited().with_queue_depth(0),
+            QosPolicy::unlimited().with_rounds_per_sec(0.0),
+            QosPolicy::unlimited().with_rounds_per_sec(-1.0),
+            QosPolicy::unlimited().with_triples_per_sec(f64::NAN),
+            QosPolicy::unlimited().with_burst_rounds(0.5),
+            QosPolicy::unlimited().with_burst_rounds(f64::INFINITY),
+        ] {
+            match sched.try_session(cfg, 4, 1, qos) {
+                Err(AdmissionError::Rejected { .. }) => {}
+                Err(e) => panic!("{qos:?} must be Rejected, got {e:?}"),
+                Ok(_) => panic!("{qos:?} must be rejected, was admitted"),
+            }
+        }
+        // Rejected admissions must not leak tenant slots.
+        assert_eq!(sched.live_tenants(), 0);
+    }
+
+    #[test]
+    fn tenant_capacity_rejects_then_readmits_after_drop() {
+        let sched = AggScheduler::with_capacity(1, 2);
+        assert_eq!(sched.max_tenants(), Some(2));
+        let cfg = HiSafeConfig::flat(3, TiePolicy::OneBit);
+        let a = sched.try_session(cfg, 4, 1, QosPolicy::unlimited()).unwrap();
+        let _b = sched.try_session(cfg, 4, 2, QosPolicy::unlimited()).unwrap();
+        assert_eq!(sched.live_tenants(), 2);
+        match sched.try_session(cfg, 4, 3, QosPolicy::unlimited()) {
+            Err(AdmissionError::Rejected { reason }) => {
+                assert!(reason.contains("capacity"), "unexpected reason: {reason}");
+            }
+            Err(e) => panic!("third tenant must be Rejected, got {e:?}"),
+            Ok(_) => panic!("third tenant must be rejected, was admitted"),
+        }
+        drop(a);
+        assert_eq!(sched.live_tenants(), 1);
+        let mut c = sched.try_session(cfg, 4, 4, QosPolicy::unlimited()).unwrap();
+        let signs = rand_signs(3, 4, 9);
+        let got = c.run_round(&signs);
+        assert_eq!(got.global_vote, plain_group_vote(&signs, TiePolicy::OneBit));
+    }
+
+    #[test]
+    fn queue_depth_bounds_prefetch_deterministically() {
+        let sched = AggScheduler::with_threads(1);
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut s = sched
+            .try_session(cfg, 5, 7, QosPolicy::unlimited().with_queue_depth(3))
+            .unwrap();
+        assert!(s.plan().triples_needed() > 0, "n₁=3 needs triples");
+        // Construction bootstraps one warm-up round onto the queue.
+        assert_eq!(s.queued_rounds(), 1);
+        // A 0-round prefetch (a computed `depth - queued` that came out
+        // empty) is a clean no-op, not a panic or a counter bump.
+        s.try_prefetch(0).expect("0-round prefetch is a no-op");
+        assert_eq!(s.queued_rounds(), 1);
+        // Larger than the whole queue: never admissible.
+        match s.try_prefetch(4) {
+            Err(AdmissionError::Rejected { .. }) => {}
+            other => panic!("oversized prefetch must be Rejected, got {other:?}"),
+        }
+        // Fill to depth, then one more must be QueueFull.
+        s.try_prefetch(2).unwrap();
+        assert_eq!(s.queued_rounds(), 3);
+        match s.try_prefetch(1) {
+            Err(AdmissionError::QueueFull { depth: 3 }) => {}
+            other => panic!("expected QueueFull at depth, got {other:?}"),
+        }
+        // Consuming a round frees a slot. (queued = inflight + pooled is
+        // conserved under plane timing, so this is deterministic; the
+        // overlap request inside run_round is depth-capped and sees a
+        // full-enough pool here, so it requests nothing.)
+        let signs = rand_signs(6, 5, 11);
+        let got = s.run_round(&signs);
+        assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+        assert_eq!(s.queued_rounds(), 2);
+        s.try_prefetch(1).unwrap();
+        let stats = s.admission_stats();
+        assert_eq!(stats.admitted_rounds, 1);
+        assert_eq!(stats.queue_full, 1);
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.throttled, 0);
+    }
+
+    #[test]
+    fn exhausted_round_budget_throttles_with_retry_after() {
+        let sched = AggScheduler::with_threads(1);
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        // One round every 2000 s, burst 1: the first round is admitted,
+        // the second throttles (no bucket refill within test runtime).
+        let mut s = sched
+            .try_session(cfg, 5, 3, QosPolicy::unlimited().with_rounds_per_sec(0.0005))
+            .unwrap();
+        let signs = rand_signs(6, 5, 13);
+        let got = s.try_run_round(&signs).expect("burst admits the first round");
+        assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+        match s.try_run_round(&signs) {
+            Err(AdmissionError::Throttled { retry_after }) => {
+                assert!(retry_after > Duration::ZERO);
+            }
+            other => panic!("expected Throttled, got {other:?}"),
+        }
+        // The blocking Engine surface stays exempt (and bit-identical).
+        let got = s.run_round(&signs);
+        assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+        let stats = s.admission_stats();
+        assert_eq!(stats.admitted_rounds, 2);
+        assert_eq!(stats.throttled, 1);
+    }
+
+    #[test]
+    fn oversized_prefetch_against_triple_budget_is_rejected_not_throttled() {
+        // A prefetch larger than the triple bucket's burst capacity can
+        // never succeed; returning Throttled would livelock callers that
+        // follow the retry contract. burst 1 ⇒ the bucket holds exactly
+        // one round's cost, so a 2-round prefetch must be Rejected —
+        // and a burst of 2 must admit the same request.
+        let sched = AggScheduler::with_threads(1);
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut s = sched
+            .try_session(cfg, 5, 3, QosPolicy::unlimited().with_triples_per_sec(1000.0))
+            .unwrap();
+        match s.try_prefetch(2) {
+            Err(AdmissionError::Rejected { reason }) => {
+                assert!(reason.contains("burst"), "reason: {reason}");
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        assert_eq!(s.admission_stats().rejected, 1);
+        let mut s2 = sched
+            .try_session(
+                cfg,
+                5,
+                4,
+                QosPolicy::unlimited().with_triples_per_sec(1000.0).with_burst_rounds(2.0),
+            )
+            .unwrap();
+        s2.try_prefetch(2).expect("a 2-round burst admits a 2-round prefetch");
+    }
+
+    #[test]
+    fn prefetched_rounds_are_not_double_charged_at_admission() {
+        // Each round of dealing demand is billed exactly once: a
+        // prefetch-charged round must pass admission without a second
+        // triple debit. The budget is microscopic (1e-6 triples/s) so
+        // the bucket cannot refill within the test — with burst 1 it
+        // holds exactly one round's cost and never again.
+        let sched = AggScheduler::with_threads(1);
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut s = sched
+            .try_session(cfg, 5, 3, QosPolicy::unlimited().with_triples_per_sec(1e-6))
+            .unwrap();
+        s.try_prefetch(1).expect("the full bucket covers one round");
+        let signs = rand_signs(6, 5, 13);
+        // Pre-double-charge-fix this throttled: the bucket was empty and
+        // admission tried to charge the already-paid round again.
+        let got = s.try_run_round(&signs).expect("prefetched round is already paid for");
+        assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+        // The next round has no prefetch credit and an empty bucket.
+        match s.try_run_round(&signs) {
+            Err(AdmissionError::Throttled { .. }) => {}
+            other => panic!("unpaid round must throttle, got {other:?}"),
+        }
+        let stats = s.admission_stats();
+        assert_eq!(stats.admitted_rounds, 1);
+        assert_eq!(stats.throttled, 1);
+    }
+
+    #[test]
+    fn blocking_run_round_retires_prefetch_credits() {
+        // The exempt Engine surface consumes prefetched rounds too, so
+        // it must also retire their already-billed credits — otherwise
+        // mixing run_round with try_run_round would let later rounds
+        // spend the stranded credit and put fresh dealing demand on the
+        // plane unbilled.
+        let sched = AggScheduler::with_threads(1);
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut s = sched
+            .try_session(cfg, 5, 3, QosPolicy::unlimited().with_triples_per_sec(1e-6))
+            .unwrap();
+        s.try_prefetch(1).expect("the full bucket covers one round");
+        let signs = rand_signs(6, 5, 17);
+        let got = s.run_round(&signs);
+        assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+        // No stranded credit and an empty bucket: the next QoS-checked
+        // round must be billed, i.e. throttled — not a free ride.
+        match s.try_run_round(&signs) {
+            Err(AdmissionError::Throttled { .. }) => {}
+            other => panic!("leaked prefetch credit gave a free ride: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn blocking_provision_is_clamped_to_queue_depth() {
+        // provision() is rate-limiter-exempt but NOT depth-exempt: a
+        // legacy provision(100) on a depth-2 session must queue 2 rounds
+        // on the plane, keeping queued_rounds() ≤ depth on every path.
+        let sched = AggScheduler::with_threads(1);
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut s = sched
+            .try_session(cfg, 5, 3, QosPolicy::unlimited().with_queue_depth(2))
+            .unwrap();
+        s.provision(100);
+        assert_eq!(s.queued_rounds(), 2);
+        // The clamped pool still serves rounds correctly.
+        let signs = rand_signs(6, 5, 19);
+        let got = s.run_round(&signs);
+        assert_eq!(got.global_vote, plain_hierarchical_vote(&signs, cfg));
+        assert!(s.queued_rounds() <= 2);
+    }
+
+    #[test]
+    fn throttled_then_admitted_rounds_stay_bit_identical_to_unthrottled() {
+        // Admission decides WHEN a round runs, never WHAT it computes:
+        // a throttled tenant retried to completion must match a
+        // dedicated unthrottled session vote-for-vote and triple-stream
+        // for triple-stream (the dealer streams are pure functions of
+        // the seed).
+        let sched = AggScheduler::with_threads(1);
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let seed = 77u64;
+        // 200 rounds/s with burst 1: some of the 4 back-to-back rounds
+        // throttle (a round at d=5 takes far less than 5 ms).
+        let mut limited = sched
+            .try_session(cfg, 5, seed, QosPolicy::unlimited().with_rounds_per_sec(200.0))
+            .unwrap();
+        let mut free = sched.session(cfg, 5, seed);
+        for r in 0..4u64 {
+            let signs = rand_signs(6, 5, 40 + r);
+            let want = free.run_round(&signs);
+            let (got, _denials, _waited) = limited.run_round_admitted(&signs);
+            assert_eq!(got.global_vote, want.global_vote, "round {r}");
+            assert_eq!(got.subgroup_votes, want.subgroup_votes, "round {r}");
+            assert_eq!(got.stats, want.stats, "round {r}");
+        }
+        assert_eq!(limited.admission_stats().admitted_rounds, 4);
+    }
+
+    #[test]
+    fn plane_counts_dealt_rounds_per_tenant() {
+        let sched = AggScheduler::with_threads(1);
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut s = sched.session(cfg, 5, 3);
+        assert!(s.plan().triples_needed() > 0);
+        s.provision(3);
+        // Bootstrap (1) is part of the 3 provisioned; at least 3 dealt.
+        assert!(s.dealt_rounds() >= 3, "dealt {}", s.dealt_rounds());
+        assert_eq!(s.inflight_jobs(), 0);
     }
 
     #[test]

@@ -23,6 +23,12 @@
 //! The job queue is a shared `Mutex<Receiver<SpanJob>>`: workers take the
 //! lock only to *pick up* a job (the guard drops before evaluation), so
 //! pickup is serialized but evaluation is fully parallel.
+//!
+//! Every job also carries its session's **in-flight gauge** (an
+//! `Arc<AtomicUsize>` incremented at submission, decremented by the
+//! worker just before the result send) — the per-session accounting the
+//! scheduler's admission layer and the `hisafe sweep` report read via
+//! [`AggSession::inflight_jobs`](crate::engine::AggSession::inflight_jobs).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -107,6 +113,13 @@ pub(crate) type SpanResult = (u64, usize, Vec<i8>);
 pub(crate) struct SpanJob {
     /// Owning session (tenant) — results reassemble per-tenant.
     pub session: u64,
+    /// The owning session's in-flight job gauge: incremented by the
+    /// session at submission, decremented by the worker *before* the
+    /// result send — so once a round has received every result, the gauge
+    /// is provably back at the pre-submission count. This is the
+    /// per-session accounting the admission layer and the `sweep` report
+    /// read; it never affects evaluation.
+    pub inflight: Arc<AtomicUsize>,
     pub fp: Fp,
     pub plan: Arc<EvalPlan>,
     /// This subgroup's members' sign vectors (full `d`-length).
@@ -195,6 +208,10 @@ fn run_span_job(job: SpanJob) {
     let triples: Vec<&[TripleShare]> = job.triples.iter().map(|v| v.as_slice()).collect();
     let mut votes = vec![0i8; job.len];
     eval_span(job.fp, &job.plan, &signs, &triples, &mut votes, job.base, job.chunk);
+    // Decrement BEFORE the send: receiving the last result then implies
+    // the gauge already dropped, so a session that has collected a full
+    // round reads 0 in-flight deterministically (no post-send race).
+    job.inflight.fetch_sub(1, Ordering::SeqCst);
     // The session may be tearing down mid-round; an orphaned result is fine.
     let _ = job.out.send((job.session, job.slot, votes));
 }
@@ -348,9 +365,12 @@ mod tests {
         let mut per_session = Vec::new();
         for session in [7u64, 9] {
             let (tx, rx) = channel();
+            let inflight = Arc::new(AtomicUsize::new(0));
             for (slot, base) in [(0usize, 0usize), (1, 5)] {
+                inflight.fetch_add(1, Ordering::SeqCst);
                 jobs.send(SpanJob {
                     session,
+                    inflight: Arc::clone(&inflight),
                     fp: plan.fp,
                     plan: Arc::clone(&plan),
                     signs: Arc::clone(&signs),
@@ -364,9 +384,9 @@ mod tests {
                 .expect("pool alive");
             }
             drop(tx);
-            per_session.push((session, rx));
+            per_session.push((session, inflight, rx));
         }
-        for (session, rx) in per_session {
+        for (session, inflight, rx) in per_session {
             let mut votes = vec![0i8; 10];
             for _ in 0..2 {
                 let (sid, slot, span) = rx.recv().expect("span result");
@@ -374,6 +394,10 @@ mod tests {
                 votes[slot * 5..slot * 5 + 5].copy_from_slice(&span);
             }
             assert_eq!(votes, signs[0]);
+            // Workers decrement before sending, so a fully collected
+            // round reads an exact 0 — the accounting the admission
+            // layer relies on.
+            assert_eq!(inflight.load(Ordering::SeqCst), 0, "in-flight gauge must drain");
         }
     }
 

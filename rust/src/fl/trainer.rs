@@ -22,12 +22,19 @@
 //!   running [`train`] separately — sessions are pinned bit-identical to
 //!   dedicated engines — so multiplexing is purely an infrastructure
 //!   decision.
+//!
+//! Each [`FedSpec`] carries a [`QosPolicy`] for its secure session
+//! (dealing weight, bounded queue depth, rate budgets). Rounds denied by
+//! the rate budget are retried until admitted — training needs every
+//! round — with the waits surfaced in [`RoundLog::throttled`] and the
+//! session's [`AdmissionStats`] in [`TrainResult::admission`], so QoS
+//! shapes scheduling, never trajectories.
 
 use crate::baselines::{dp_signsgd, masking};
-use crate::engine::{AggScheduler, AggSession, Engine};
+use crate::engine::{AggScheduler, AggSession, QosPolicy};
 use crate::fl::data::Dataset;
 use crate::fl::model::{sign_vec, Model};
-use crate::metrics::CommStats;
+use crate::metrics::{AdmissionStats, CommStats};
 use crate::protocol::{plain_group_vote_all, HiSafeConfig};
 use crate::util::json::Json;
 use crate::util::rng::{ChaCha20Rng, Rng, Xoshiro256pp};
@@ -100,6 +107,10 @@ pub struct RoundLog {
     pub test_acc: f32,
     /// Per-user uplink bits this round (whole model).
     pub uplink_bits_per_user: u64,
+    /// Times this round was throttled (denied-then-retried) by the
+    /// session's [`QosPolicy`] rate budget before being admitted. Always
+    /// 0 for non-secure aggregators and unlimited policies.
+    pub throttled: u64,
     /// Full per-round communication counters from the secure engine
     /// (equal, field element for field element, to the measured counters
     /// of the message-passing path — pinned by `engine_props.rs`). `None`
@@ -116,6 +127,10 @@ pub struct TrainResult {
     /// Cumulative per-user uplink over the run.
     pub total_uplink_bits_per_user: u64,
     pub aggregator: String,
+    /// Admission counters from the secure session (rounds admitted,
+    /// throttle/queue-full/reject denials). `None` for aggregators that
+    /// don't run through the scheduler.
+    pub admission: Option<AdmissionStats>,
 }
 
 impl TrainResult {
@@ -128,6 +143,9 @@ impl TrainResult {
             "total_uplink_bits_per_user",
             self.total_uplink_bits_per_user,
         );
+        if let Some(adm) = &self.admission {
+            j.set("admission", adm.to_json());
+        }
         j.set(
             "rounds",
             self.logs
@@ -137,7 +155,8 @@ impl TrainResult {
                     r.set("round", l.round)
                         .set("loss", l.train_loss as f64)
                         .set("acc", l.test_acc as f64)
-                        .set("uplink_bits_per_user", l.uplink_bits_per_user);
+                        .set("uplink_bits_per_user", l.uplink_bits_per_user)
+                        .set("throttled", l.throttled);
                     if let Some(comm) = &l.comm {
                         r.set("comm", comm.to_json());
                     }
@@ -161,6 +180,15 @@ pub struct FedSpec<'a, M: Model> {
     pub shards: &'a [Vec<usize>],
     pub agg: Aggregator,
     pub cfg: TrainConfig,
+    /// Per-tenant QoS for the secure session this federation runs on:
+    /// dealing weight, bounded queue depth, and rate budgets. The
+    /// default ([`QosPolicy::unlimited`]) reproduces pre-QoS behavior.
+    /// Rounds denied by the rate budget are retried until admitted (the
+    /// training loop needs every round), with the waits counted in
+    /// [`RoundLog::throttled`] and [`TrainResult::admission`] — QoS
+    /// shapes *when* rounds run, never the trajectory, which stays
+    /// bit-identical to an unthrottled run.
+    pub qos: QosPolicy,
 }
 
 /// One federation's in-flight training state: the per-round step of the
@@ -204,7 +232,8 @@ impl<'a, M: Model> FedRun<'a, M> {
             Aggregator::HiSafe(hc) => Some(
                 sched
                     .expect("a scheduler is required for secure aggregation")
-                    .session(*hc, d, cfg.seed ^ 0xa6_67e6),
+                    .try_session(*hc, d, cfg.seed ^ 0xa6_67e6, spec.qos)
+                    .unwrap_or_else(|e| panic!("federation session not admitted: {e}")),
             ),
             _ => None,
         };
@@ -253,11 +282,17 @@ impl<'a, M: Model> FedRun<'a, M> {
 
         // 3. aggregate into an update direction
         let mut comm: Option<CommStats> = None;
+        let mut throttled = 0u64;
         let (direction, uplink_bits_per_user): (Vec<f32>, u64) = match &self.agg {
             Aggregator::HiSafe(_) => {
                 let signs: Vec<Vec<i8>> = grads.iter().map(|g| sign_vec(g)).collect();
                 let session = self.session.as_mut().expect("session built for HiSafe");
-                let out = session.run_round(&signs);
+                // QoS-checked admission with blocking retry: training
+                // needs every round, so a throttle denial is a wait, not
+                // a skip. Votes are unaffected — admission decides when
+                // a round runs, never what it computes.
+                let (out, denials, _waited) = session.run_round_admitted(&signs);
+                throttled = denials;
                 let bits = out.stats.c_u_bits();
                 let direction = out.global_vote.iter().map(|&v| v as f32).collect();
                 comm = Some(out.stats);
@@ -313,6 +348,7 @@ impl<'a, M: Model> FedRun<'a, M> {
             train_loss,
             test_acc: self.last_acc,
             uplink_bits_per_user,
+            throttled,
             comm,
         });
     }
@@ -325,6 +361,7 @@ impl<'a, M: Model> FedRun<'a, M> {
             final_params: self.params,
             total_uplink_bits_per_user: self.total_uplink,
             aggregator: self.agg.name(),
+            admission: self.session.as_ref().map(|s| s.admission_stats()),
         }
     }
 }
@@ -348,7 +385,15 @@ pub fn train<M: Model>(
         Aggregator::HiSafe(_) => Some(AggScheduler::new()),
         _ => None,
     };
-    let spec = FedSpec { model, train_ds, test_ds, shards, agg, cfg: cfg.clone() };
+    let spec = FedSpec {
+        model,
+        train_ds,
+        test_ds,
+        shards,
+        agg,
+        cfg: cfg.clone(),
+        qos: QosPolicy::unlimited(),
+    };
     train_multi_impl(sched.as_ref(), std::slice::from_ref(&spec))
         .pop()
         .expect("one federation in, one result out")
@@ -555,6 +600,7 @@ mod tests {
                 shards: &shards,
                 agg: agg_a,
                 cfg: cfg_a,
+                qos: QosPolicy::unlimited(),
             },
             FedSpec {
                 model: &m,
@@ -563,6 +609,7 @@ mod tests {
                 shards: &shards,
                 agg: agg_b,
                 cfg: cfg_b,
+                qos: QosPolicy::unlimited(),
             },
         ];
         let multi = train_multi(&sched, &specs);
@@ -575,6 +622,109 @@ mod tests {
         assert_eq!(multi[1].logs.len(), 4);
         // k tenants, still one pool's worth of workers.
         assert_eq!(sched.worker_threads(), 2);
+    }
+
+    #[test]
+    fn qos_throttled_federation_matches_unthrottled_trajectory() {
+        // A federation trained under a tight QoS (small queue, modest
+        // rate budget) must produce the bit-identical trajectory of an
+        // unthrottled run — admission shapes time, not votes — while the
+        // run's admission counters surface the throttling that happened.
+        let (tr, te, shards) = quick_setup();
+        let m = LinearSoftmax::new(784, 10);
+        let cfg = quick_cfg(4);
+        let agg = Aggregator::HiSafe(HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit));
+        let free = train(&m, &tr, &te, &shards, agg, &cfg);
+
+        let sched = AggScheduler::with_threads(1);
+        let specs = vec![FedSpec {
+            model: &m,
+            train_ds: &tr,
+            test_ds: &te,
+            shards: &shards,
+            agg,
+            cfg: cfg.clone(),
+            // Rounds at 784-dim take well over 1/5000 s of gradient work
+            // per round either way; the budget exists to exercise the
+            // retry path without slowing the test, not to bite hard.
+            qos: QosPolicy::unlimited()
+                .with_queue_depth(2)
+                .with_rounds_per_sec(5000.0)
+                .with_weight(2),
+        }];
+        let limited = train_multi(&sched, &specs).pop().unwrap();
+        assert_eq!(limited.final_params, free.final_params);
+        assert_eq!(limited.final_acc, free.final_acc);
+        let adm = limited.admission.as_ref().expect("secure run reports admission");
+        assert_eq!(adm.admitted_rounds, 4);
+        // Throttle waits (if any) must be consistent between the
+        // per-round logs and the session counters.
+        let waits: u64 = limited.logs.iter().map(|l| l.throttled).sum();
+        assert_eq!(adm.throttled, waits);
+    }
+
+    #[test]
+    fn train_result_json_schema_snapshot() {
+        // Pin the exact key sets of the run-log JSON (top level, round,
+        // and comm objects) so the fields README/ARCHITECTURE document
+        // can't silently drift. Keys are listed sorted (BTreeMap order).
+        let (tr, te, shards) = quick_setup();
+        let m = LinearSoftmax::new(784, 10);
+        let cfg = quick_cfg(2);
+        let agg = Aggregator::HiSafe(HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit));
+        let res = train(&m, &tr, &te, &shards, agg, &cfg);
+        let j = res.to_json();
+        let keys = |v: &Json| -> Vec<String> {
+            match v {
+                Json::Obj(m) => m.keys().cloned().collect(),
+                other => panic!("expected object, got {other:?}"),
+            }
+        };
+        assert_eq!(
+            keys(&j),
+            ["admission", "aggregator", "final_acc", "rounds", "total_uplink_bits_per_user"],
+            "TrainResult::to_json top-level schema drifted"
+        );
+        assert_eq!(
+            keys(j.get("admission").unwrap()),
+            ["admitted_rounds", "queue_full", "rejected", "throttled"],
+            "admission schema drifted"
+        );
+        let round0 = &j.get("rounds").unwrap().as_arr().unwrap()[0];
+        assert_eq!(
+            keys(round0),
+            ["acc", "comm", "loss", "round", "throttled", "uplink_bits_per_user"],
+            "round-log schema drifted"
+        );
+        assert_eq!(
+            keys(round0.get("comm").unwrap()),
+            [
+                "c_t_bits",
+                "c_u_bits",
+                "downlink_elems",
+                "elem_bits",
+                "mults",
+                "subrounds",
+                "uplink_elems_per_user",
+                "uplink_elems_total",
+                "vote_bits",
+            ],
+            "per-round comm schema drifted"
+        );
+        // Baseline aggregators: no admission object, no comm object,
+        // but the throttled counter is present (and zero).
+        let plain = train(&m, &tr, &te, &shards, Aggregator::PlainMv(TiePolicy::OneBit), &cfg);
+        let pj = plain.to_json();
+        assert_eq!(
+            keys(&pj),
+            ["aggregator", "final_acc", "rounds", "total_uplink_bits_per_user"]
+        );
+        let pr0 = &pj.get("rounds").unwrap().as_arr().unwrap()[0];
+        assert_eq!(
+            keys(pr0),
+            ["acc", "loss", "round", "throttled", "uplink_bits_per_user"]
+        );
+        assert_eq!(pr0.get("throttled").unwrap().as_u64(), Some(0));
     }
 
     #[test]

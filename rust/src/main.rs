@@ -8,13 +8,13 @@
 //! hisafe tables                      regenerate Tables VII/VIII/IX
 //! hisafe fig6                        regenerate Fig. 6 series
 //! hisafe security --n 24 --ell 8     leakage + uniformity analysis
-//! hisafe sweep --tenants 24x8,12x4   multi-tenant scheduler sweep
+//! hisafe sweep --tenants 24x8@3,12x4 multi-tenant scheduler sweep (QoS-aware)
 //! hisafe demo                        Appendix-A walkthrough (n=3)
 //! ```
 
 use hisafe::config::{preset, preset_names, ExperimentConfig};
 use hisafe::cost;
-use hisafe::engine::{AggScheduler, Engine};
+use hisafe::engine::{AggScheduler, QosPolicy};
 use hisafe::fl::data::{partition_users, synthetic};
 use hisafe::fl::model::{LinearSoftmax, Mlp};
 use hisafe::fl::trainer::{train, TrainConfig, TrainResult};
@@ -66,8 +66,11 @@ fn print_help() {
            tables [--policy one_bit]       Tables VII/VIII/IX\n\
            fig6                            Fig. 6 cost/latency series\n\
            security [--n 24] [--ell 8]     leakage analysis\n\
-           sweep [--tenants 24x8x2048,...] [--rounds 5] [--threads N] [--out DIR]\n\
-                                           mixed-tenant scheduler workload\n\
+           sweep [--tenants 24x8x2048@3,...] [--rounds 5] [--threads N] [--out DIR]\n\
+                 [--rps R] [--tps T] [--queue-depth Q]\n\
+                                           mixed-tenant scheduler workload with\n\
+                                           per-tenant QoS (@W = dealing weight;\n\
+                                           rps/tps/queue-depth bound every tenant)\n\
            demo                            Appendix-A walkthrough"
     );
 }
@@ -333,12 +336,25 @@ fn cmd_security(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// One `sweep` tenant: `NxL[xD]` — `n` users in `ℓ` subgroups voting
-/// over `d` coordinates (default d = 4096).
-fn parse_tenant(spec: &str) -> Result<(HiSafeConfig, usize), String> {
-    let parts: Vec<&str> = spec.split('x').collect();
+/// One `sweep` tenant: `NxL[xD][@W]` — `n` users in `ℓ` subgroups voting
+/// over `d` coordinates (default d = 4096) with weighted-round-robin
+/// dealing weight `W` (default 1), e.g. `24x8x2048@3`.
+fn parse_tenant(spec: &str) -> Result<(HiSafeConfig, usize, u32), String> {
+    let (shape, weight) = match spec.split_once('@') {
+        Some((shape, w)) => {
+            let weight: u32 = w.parse().map_err(|_| {
+                format!("tenant '{spec}': weight '{w}' must be a positive integer")
+            })?;
+            if weight == 0 {
+                return Err(format!("tenant '{spec}': weight must be ≥ 1"));
+            }
+            (shape, weight)
+        }
+        None => (spec, 1),
+    };
+    let parts: Vec<&str> = shape.split('x').collect();
     if parts.len() != 2 && parts.len() != 3 {
-        return Err(format!("tenant '{spec}' must be NxL or NxLxD, e.g. 24x8x2048"));
+        return Err(format!("tenant '{spec}' must be NxL[xD][@W], e.g. 24x8x2048@3"));
     }
     let num = |s: &str, what: &str| -> Result<usize, String> {
         s.parse::<usize>()
@@ -353,17 +369,19 @@ fn parse_tenant(spec: &str) -> Result<(HiSafeConfig, usize), String> {
     if n % ell != 0 {
         return Err(format!("tenant '{spec}': ℓ = {ell} must divide n = {n}"));
     }
-    Ok((HiSafeConfig::hierarchical(n, ell, TiePolicy::OneBit), d))
+    Ok((HiSafeConfig::hierarchical(n, ell, TiePolicy::OneBit), d, weight))
 }
 
 /// Mixed-tenant workload on one shared scheduler: every tenant is an
-/// `AggSession` with its own `(cfg, d)` shape, rounds interleave
-/// round-robin, and we report per-tenant round latency plus measured
-/// communication — the heavy-traffic shape of the ROADMAP, observable
-/// from the command line.
+/// `AggSession` with its own `(cfg, d)` shape and QoS policy, rounds
+/// interleave round-robin, and we report per-tenant round latency,
+/// measured communication, and admission counters (throttles, dealing
+/// share) — the heavy-traffic shape of the ROADMAP, observable from the
+/// command line.
 fn cmd_sweep(args: &Args) -> Result<(), String> {
     args.check_known(&[
-        "tenants", "rounds", "threads", "seed", "out", "verbose", "threaded", "jax",
+        "tenants", "rounds", "threads", "seed", "out", "rps", "tps", "queue-depth",
+        "verbose", "threaded", "jax",
     ])?;
     let rounds = args.get_usize("rounds", 5)?;
     if rounds == 0 {
@@ -371,10 +389,15 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     }
     let base_seed = args.get_u64("seed", 42)?;
     let tenant_specs = args.get_or("tenants", "24x8x2048,12x4x4096,6x2x8192");
-    let shapes: Vec<(HiSafeConfig, usize)> = tenant_specs
+    let shapes: Vec<(HiSafeConfig, usize, u32)> = tenant_specs
         .split(',')
         .map(|s| parse_tenant(s.trim()))
         .collect::<Result<_, _>>()?;
+    // Global QoS knobs (0 = unlimited), applied to every tenant; the
+    // per-tenant `@W` weight suffix sets the dealing share.
+    let rps = args.get_f64("rps", 0.0)?;
+    let tps = args.get_f64("tps", 0.0)?;
+    let queue_depth = args.get_usize("queue-depth", 0)?;
     let threads = args.get_usize("threads", 0)?;
     let sched = if threads == 0 {
         AggScheduler::new()
@@ -392,37 +415,60 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         label: String,
         cfg: HiSafeConfig,
         d: usize,
+        weight: u32,
         session: hisafe::engine::AggSession,
         rng: hisafe::util::rng::Xoshiro256pp,
         latencies_ms: Vec<f64>,
+        throttle_wait_ms: f64,
         comm_last: Option<CommStats>,
         comm_total: CommStats,
     }
     use hisafe::util::rng::Rng;
 
-    let mut tenants: Vec<TenantRun> = shapes
-        .iter()
-        .enumerate()
-        .map(|(i, &(cfg, d))| TenantRun {
+    let mut tenants: Vec<TenantRun> = Vec::with_capacity(shapes.len());
+    for (i, &(cfg, d, weight)) in shapes.iter().enumerate() {
+        let mut qos = QosPolicy::unlimited().with_weight(weight);
+        if rps > 0.0 {
+            qos = qos.with_rounds_per_sec(rps);
+        }
+        if tps > 0.0 {
+            qos = qos.with_triples_per_sec(tps);
+        }
+        if queue_depth > 0 {
+            qos = qos.with_queue_depth(queue_depth);
+        }
+        let session = sched
+            .try_session(cfg, d, base_seed.wrapping_add(i as u64), qos)
+            .map_err(|e| format!("tenant {i} not admitted: {e}"))?;
+        tenants.push(TenantRun {
             label: format!("n{}_l{}_d{}", cfg.n, cfg.ell, d),
             cfg,
             d,
-            session: sched.session(cfg, d, base_seed.wrapping_add(i as u64)),
+            weight,
+            session,
             rng: hisafe::util::rng::Xoshiro256pp::seed_from_u64(base_seed ^ ((i as u64) << 8)),
             latencies_ms: Vec::with_capacity(rounds),
+            throttle_wait_ms: 0.0,
             comm_last: None,
             comm_total: CommStats::default(),
-        })
-        .collect();
+        });
+    }
 
     for round in 0..rounds {
         for t in tenants.iter_mut() {
             let signs: Vec<Vec<i8>> = (0..t.cfg.n)
                 .map(|_| (0..t.d).map(|_| t.rng.gen_sign()).collect())
                 .collect();
+            // QoS-checked admission with blocking retry: the sweep runs
+            // every round, so throttle denials become measured waits —
+            // reported as throttle_wait_ms, and kept OUT of the round
+            // latency columns (the slept time is subtracted, so
+            // latencies_ms measures the admitted round only).
             let t0 = std::time::Instant::now();
-            let out = t.session.run_round(&signs);
-            t.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            let (out, _denials, waited) = t.session.run_round_admitted(&signs);
+            t.throttle_wait_ms += waited.as_secs_f64() * 1e3;
+            t.latencies_ms
+                .push(t0.elapsed().saturating_sub(waited).as_secs_f64() * 1e3);
             if round == 0 {
                 // One correctness audit per tenant: scheduled votes must
                 // equal the plaintext hierarchical majority vote.
@@ -439,8 +485,9 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     }
 
     println!(
-        "\n{:<16} {:>6} {:>10} {:>10} {:>10} {:>12} {:>10} {:>9}",
-        "tenant", "rounds", "mean ms", "min ms", "max ms", "C_u bits/rd", "mults/rd", "subrounds"
+        "\n{:<16} {:>3} {:>6} {:>10} {:>10} {:>10} {:>9} {:>6} {:>12} {:>10}",
+        "tenant", "w", "rounds", "mean ms", "min ms", "max ms", "throttle", "dealt",
+        "C_u bits/rd", "mults/rd"
     );
     let mut report = Json::obj();
     let mut tenant_objs: Vec<Json> = Vec::new();
@@ -449,17 +496,31 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         let min = t.latencies_ms.iter().cloned().fold(f64::INFINITY, f64::min);
         let max = t.latencies_ms.iter().cloned().fold(0.0f64, f64::max);
         let comm = t.comm_last.as_ref().expect("every tenant ran rounds");
+        let adm = t.session.admission_stats();
         println!(
-            "{:<16} {:>6} {:>10.2} {:>10.2} {:>10.2} {:>12} {:>10} {:>9}",
+            "{:<16} {:>3} {:>6} {:>10.2} {:>10.2} {:>10.2} {:>9} {:>6} {:>12} {:>10}",
             t.label,
+            t.weight,
             t.latencies_ms.len(),
             mean,
             min,
             max,
+            adm.throttled,
+            t.session.dealt_rounds(),
             comm.c_u_bits(),
-            comm.mults,
-            comm.subrounds
+            comm.mults
         );
+        let mut qos_obj = Json::obj();
+        qos_obj.set("weight", t.weight);
+        if rps > 0.0 {
+            qos_obj.set("rounds_per_sec", rps);
+        }
+        if tps > 0.0 {
+            qos_obj.set("triples_per_sec", tps);
+        }
+        if queue_depth > 0 {
+            qos_obj.set("queue_depth", queue_depth);
+        }
         let mut o = Json::obj();
         o.set("tenant", t.label.clone())
             .set("n", t.cfg.n)
@@ -469,6 +530,10 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             .set("mean_ms", mean)
             .set("min_ms", min)
             .set("max_ms", max)
+            .set("throttle_wait_ms", t.throttle_wait_ms)
+            .set("dealt_rounds", t.session.dealt_rounds())
+            .set("qos", qos_obj)
+            .set("admission", adm.to_json())
             .set("comm_per_round", comm.to_json())
             .set("comm_total", t.comm_total.to_json());
         tenant_objs.push(o);

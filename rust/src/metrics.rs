@@ -1,9 +1,19 @@
-//! Communication / latency accounting.
+//! Communication / latency / admission accounting.
 //!
 //! Every protocol message in [`crate::mpc`] and [`crate::protocol`] is
 //! tallied here at field-element granularity so the *measured* costs can
 //! be cross-checked against the analytic model in [`crate::cost`]
 //! (Tables VII–IX) — the integration tests assert they agree exactly.
+//!
+//! [`AdmissionStats`] is the scheduler-side counterpart: per-tenant
+//! counters for rounds admitted, throttled, queue-full, and rejected by
+//! the admission-control layer in [`crate::engine::AggScheduler`] — the
+//! numbers `train_multi` runs and `hisafe sweep` report per tenant.
+//!
+//! Both structs have a `to_json` surface consumed by `runs/*.json`; its
+//! key set is pinned by schema snapshot tests below (and in
+//! `fl/trainer.rs`), so the fields documented in README.md and
+//! `docs/ARCHITECTURE.md` cannot silently drift.
 
 /// Byte/bit counters for one protocol execution.
 #[derive(Debug, Default, Clone, PartialEq, Eq)]
@@ -79,6 +89,58 @@ impl CommStats {
     }
 }
 
+/// Per-tenant admission-control counters, kept by every
+/// [`crate::engine::AggSession`] and surfaced through
+/// [`AggSession::admission_stats`](crate::engine::AggSession::admission_stats).
+///
+/// The counters record *decisions*, not time: one increment per admitted
+/// round, per throttle denial (token bucket empty), per queue-full denial
+/// (bounded dealing queue at depth), and per outright rejection (a request
+/// the configured [`QosPolicy`](crate::engine::QosPolicy) can never
+/// admit). Blocking [`Engine::run_round`](crate::engine::Engine::run_round)
+/// calls count as admitted — they bypass the rate limiter by design, not
+/// by accident.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct AdmissionStats {
+    /// Rounds admitted and executed (the try- and blocking paths both
+    /// count here).
+    pub admitted_rounds: u64,
+    /// Denials because a token bucket (rounds/sec or triples/sec) was
+    /// empty — the caller was told to retry after a delay.
+    pub throttled: u64,
+    /// Denials because the bounded per-tenant dealing queue was at its
+    /// configured depth.
+    pub queue_full: u64,
+    /// Requests no retry can ever satisfy under the session's policy
+    /// (e.g. a prefetch larger than the whole queue depth).
+    pub rejected: u64,
+}
+
+impl AdmissionStats {
+    /// Total denials of any kind (throttle + queue-full + reject).
+    pub fn denials(&self) -> u64 {
+        self.throttled + self.queue_full + self.rejected
+    }
+
+    /// Machine-readable form for run logs (`runs/*.json`): one key per
+    /// counter. The key set is pinned by a schema snapshot test below.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut j = crate::util::json::Json::obj();
+        j.set("admitted_rounds", self.admitted_rounds)
+            .set("throttled", self.throttled)
+            .set("queue_full", self.queue_full)
+            .set("rejected", self.rejected);
+        j
+    }
+
+    pub fn merge(&mut self, other: &AdmissionStats) {
+        self.admitted_rounds += other.admitted_rounds;
+        self.throttled += other.throttled;
+        self.queue_full += other.queue_full;
+        self.rejected += other.rejected;
+    }
+}
+
 /// Wall-clock phase timings for Table V.
 #[derive(Debug, Default, Clone)]
 pub struct PhaseTimings {
@@ -128,6 +190,69 @@ mod tests {
         assert_eq!(j.get("c_u_bits").unwrap().as_u64(), Some(12));
         assert_eq!(j.get("c_t_bits").unwrap().as_u64(), Some(36));
         assert_eq!(j.get("subrounds").unwrap().as_u64(), Some(2));
+    }
+
+    /// Schema snapshot: the exact key set `CommStats::to_json` emits.
+    /// README.md and docs/ARCHITECTURE.md document these fields; adding,
+    /// renaming, or dropping one must be a conscious decision that
+    /// updates this list (and the docs) in the same change.
+    #[test]
+    fn comm_stats_json_schema_snapshot() {
+        let j = CommStats::default().to_json();
+        let keys: Vec<&str> = match &j {
+            crate::util::json::Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
+            other => panic!("CommStats::to_json must be an object, got {other:?}"),
+        };
+        // BTreeMap keys come out sorted; keep this list sorted too.
+        assert_eq!(
+            keys,
+            vec![
+                "c_t_bits",
+                "c_u_bits",
+                "downlink_elems",
+                "elem_bits",
+                "mults",
+                "subrounds",
+                "uplink_elems_per_user",
+                "uplink_elems_total",
+                "vote_bits",
+            ],
+            "CommStats::to_json schema drifted — update docs + this snapshot together"
+        );
+    }
+
+    #[test]
+    fn admission_stats_arithmetic_merge_and_json_schema() {
+        let mut a = AdmissionStats {
+            admitted_rounds: 5,
+            throttled: 2,
+            queue_full: 1,
+            rejected: 1,
+        };
+        assert_eq!(a.denials(), 4);
+        let b = AdmissionStats {
+            admitted_rounds: 3,
+            throttled: 1,
+            queue_full: 0,
+            rejected: 2,
+        };
+        a.merge(&b);
+        assert_eq!(a.admitted_rounds, 8);
+        assert_eq!(a.throttled, 3);
+        assert_eq!(a.queue_full, 1);
+        assert_eq!(a.rejected, 3);
+        let j = a.to_json();
+        let keys: Vec<&str> = match &j {
+            crate::util::json::Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
+            other => panic!("AdmissionStats::to_json must be an object, got {other:?}"),
+        };
+        assert_eq!(
+            keys,
+            vec!["admitted_rounds", "queue_full", "rejected", "throttled"],
+            "AdmissionStats::to_json schema drifted — update docs + this snapshot together"
+        );
+        assert_eq!(j.get("admitted_rounds").unwrap().as_u64(), Some(8));
+        assert_eq!(j.get("throttled").unwrap().as_u64(), Some(3));
     }
 
     #[test]

@@ -1,0 +1,278 @@
+//! Admission-control / QoS properties for the multi-tenant scheduler.
+//!
+//! Two pillars, matching the admission layer's two promises:
+//!
+//! 1. **QoS never changes votes.** Tenants running under tight policies
+//!    (bounded queues, rate budgets, weights) with throttle-and-retry
+//!    admission and randomly interleaved rounds stay bit-identical to
+//!    dedicated, unthrottled [`PipelinedEngine`]s and to `run_sync` —
+//!    admission decides *when* a round runs, never what it computes.
+//! 2. **A greedy tenant cannot starve a well-behaved one.** Under the
+//!    provisioning plane's weighted round-robin, a tenant flooding the
+//!    plane with prefetch requests cannot push another tenant's dealing
+//!    share below its weight. The loose (scheduling-order) bound is
+//!    asserted always; the tight proportional-share bound involves a
+//!    wall-clock race window on the plane's command drain, so it is
+//!    opt-in via `HISAFE_BENCH_STRICT=1` like every timing assert in
+//!    this repo.
+//!
+//! Plus the deterministic admission mechanics: queue-depth bounds,
+//! throttle retry_after, tenant capacity — no sleeps, no clock
+//! dependence beyond "a 2000-second budget does not refill mid-test".
+
+use std::time::Duration;
+
+use hisafe::engine::{AdmissionError, AggScheduler, AggSession, Engine, PipelinedEngine, QosPolicy};
+use hisafe::poly::TiePolicy;
+use hisafe::prop_assert_eq;
+use hisafe::protocol::{plain_hierarchical_vote, run_sync, HiSafeConfig};
+use hisafe::util::prop::{forall, Gen};
+use hisafe::util::rng::Rng;
+
+fn rand_cfg(g: &mut Gen) -> HiSafeConfig {
+    let ell = g.usize_range(1, 3);
+    let n1 = g.usize_range(2, 4); // n₁ ≥ 2 so every tenant needs triples
+    let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+    let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+    HiSafeConfig { n: ell * n1, ell, intra, inter, sparse: g.bool() }
+}
+
+/// A QoS policy tight enough to exercise every admission path but
+/// generous enough (rates in the hundreds per second) that retries cost
+/// milliseconds, not seconds.
+fn rand_tight_qos(g: &mut Gen) -> QosPolicy {
+    let mut qos = QosPolicy::unlimited().with_weight(g.usize_range(1, 3) as u32);
+    if g.bool() {
+        qos = qos.with_queue_depth(g.usize_range(1, 3));
+    }
+    if g.bool() {
+        qos = qos.with_rounds_per_sec(g.usize_range(200, 1000) as f64);
+    }
+    if g.bool() {
+        qos = qos.with_triples_per_sec(g.usize_range(2000, 20000) as f64);
+    }
+    if g.bool() {
+        qos = qos.with_burst_rounds(g.usize_range(1, 3) as f64);
+    }
+    qos
+}
+
+#[test]
+fn throttled_interleaved_tenants_bit_identical_to_dedicated_and_run_sync() {
+    forall("QoS ≢ votes: throttled scheduler ≡ dedicated ≡ run_sync", 6, |g| {
+        let n_tenants = g.usize_range(2, 3);
+        let threads = g.usize_range(1, 2);
+        let sched = AggScheduler::with_threads(threads);
+
+        struct Tenant {
+            cfg: HiSafeConfig,
+            d: usize,
+            seed: u64,
+            session: AggSession,
+            dedicated: PipelinedEngine,
+        }
+        let mut tenants: Vec<Tenant> = (0..n_tenants)
+            .map(|_| {
+                let cfg = rand_cfg(g);
+                let d = g.usize_range(1, 16);
+                let seed = g.u64();
+                let qos = rand_tight_qos(g);
+                Tenant {
+                    cfg,
+                    d,
+                    seed,
+                    session: sched.try_session(cfg, d, seed, qos).expect("policy is valid"),
+                    dedicated: PipelinedEngine::new(cfg, d, seed),
+                }
+            })
+            .collect();
+
+        for round in 0..3u64 {
+            // Random visit order: the scheduler must tolerate every
+            // interleaving pattern, with throttling injected anywhere.
+            let mut order: Vec<usize> = (0..n_tenants).collect();
+            g.rng().shuffle(&mut order);
+            for &ti in &order {
+                let t = &mut tenants[ti];
+                let signs: Vec<Vec<i8>> = (0..t.cfg.n).map(|_| g.sign_vec(t.d)).collect();
+                // The shared blocking retry helper — the same loop the
+                // trainer and sweep use — waits out throttle denials.
+                let (a, _denials, _waited) = t.session.run_round_admitted(&signs);
+                let b = t.dedicated.run_round(&signs);
+                let cfg = t.cfg;
+                prop_assert_eq!(
+                    &a.global_vote,
+                    &b.global_vote,
+                    "tenant {ti} round {round} cfg={cfg:?}"
+                );
+                prop_assert_eq!(
+                    &a.subgroup_votes,
+                    &b.subgroup_votes,
+                    "tenant {ti} round {round} cfg={cfg:?}"
+                );
+                prop_assert_eq!(&a.stats, &b.stats, "tenant {ti} round {round}");
+                let reference = run_sync(&signs, cfg, t.seed ^ round);
+                prop_assert_eq!(
+                    &a.global_vote,
+                    &reference.global_vote,
+                    "tenant {ti} round {round} vs run_sync"
+                );
+                prop_assert_eq!(
+                    &a.global_vote,
+                    &plain_hierarchical_vote(&signs, cfg),
+                    "tenant {ti} round {round} vs Eq. 8"
+                );
+            }
+        }
+        for (ti, t) in tenants.iter().enumerate() {
+            prop_assert_eq!(t.session.rounds_run(), 3u64, "tenant {ti}");
+            let adm = t.session.admission_stats();
+            prop_assert_eq!(adm.admitted_rounds, 3u64, "tenant {ti} admitted");
+            // The retry loop only ever eats Throttled denials.
+            prop_assert_eq!(adm.queue_full, 0u64, "tenant {ti} queue_full");
+            prop_assert_eq!(adm.rejected, 0u64, "tenant {ti} rejected");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn greedy_flood_cannot_starve_a_weighted_tenant() {
+    let strict = std::env::var("HISAFE_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
+    // (victim weight, greedy weight, victim rounds, flood size)
+    for (vw, gw, want, flood) in [(1u32, 1u32, 8usize, 40usize), (3, 1, 9, 40)] {
+        let sched = AggScheduler::with_threads(1);
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let d = 2048; // big enough that one dealt round is real work
+        let mut victim = sched
+            .try_session(cfg, d, 7, QosPolicy::unlimited().with_weight(vw))
+            .unwrap();
+        let mut greedy = sched
+            .try_session(cfg, d, 8, QosPolicy::unlimited().with_weight(gw))
+            .unwrap();
+        assert!(victim.plan().triples_needed() > 0);
+
+        // The greedy tenant floods the plane, then the victim asks for a
+        // modest provision and blocks until it is served.
+        greedy.try_prefetch(flood).expect("unbounded queue");
+        victim.provision(want);
+        assert!(victim.provisioned_rounds() >= want);
+
+        let greedy_dealt = greedy.dealt_rounds();
+        let victim_dealt = victim.dealt_rounds();
+        assert!(victim_dealt as usize >= want, "victim got {victim_dealt} < {want}");
+        // Loose, scheduling-order bound (always on): under weighted
+        // round-robin the victim finishes long before the flood drains;
+        // under starvation (flood-first FIFO) greedy_dealt would be the
+        // whole flood before the victim saw a single round.
+        assert!(
+            (greedy_dealt as usize) < flood,
+            "victim waited for the whole flood: greedy dealt {greedy_dealt}/{flood} \
+             before victim's {want} rounds (vw={vw} gw={gw})"
+        );
+        // Tight proportional bound (strict only: the plane may deal a
+        // few greedy rounds in the race window between the flood request
+        // and the victim's request landing): while the victim's `want`
+        // rounds deal, WRR hands the greedy tenant at most
+        // ceil(want / vw) · gw quanta, plus the race slack.
+        if strict {
+            let proportional = (want as u32).div_ceil(vw) * gw;
+            let slack = 4;
+            assert!(
+                greedy_dealt <= (proportional + slack) as u64,
+                "greedy exceeded its weighted share: {greedy_dealt} > {proportional} + {slack} \
+                 (vw={vw} gw={gw} want={want})"
+            );
+        }
+
+        // Fairness must not corrupt anything: both tenants still vote
+        // bit-identically to the plaintext reference afterwards.
+        let signs: Vec<Vec<i8>> = {
+            let mut rng = hisafe::util::rng::Xoshiro256pp::seed_from_u64(5);
+            (0..cfg.n).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect()
+        };
+        assert_eq!(victim.run_round(&signs).global_vote, plain_hierarchical_vote(&signs, cfg));
+        assert_eq!(greedy.run_round(&signs).global_vote, plain_hierarchical_vote(&signs, cfg));
+    }
+}
+
+#[test]
+fn queue_depth_is_enforced_and_typed() {
+    let sched = AggScheduler::with_threads(1);
+    let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+    let mut s = sched
+        .try_session(cfg, 6, 3, QosPolicy::unlimited().with_queue_depth(2))
+        .unwrap();
+    // Construction bootstraps one round onto the queue.
+    assert_eq!(s.queued_rounds(), 1);
+    match s.try_prefetch(3) {
+        Err(AdmissionError::Rejected { reason }) => {
+            assert!(reason.contains("queue depth"), "reason: {reason}");
+        }
+        other => panic!("oversized prefetch must be Rejected, got {other:?}"),
+    }
+    s.try_prefetch(1).expect("one slot free");
+    match s.try_prefetch(1) {
+        Err(AdmissionError::QueueFull { depth }) => assert_eq!(depth, 2),
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+    let adm = s.admission_stats();
+    assert_eq!(adm.rejected, 1);
+    assert_eq!(adm.queue_full, 1);
+    assert_eq!(adm.throttled, 0);
+}
+
+#[test]
+fn exhausted_budget_throttles_with_usable_retry_after() {
+    let sched = AggScheduler::with_threads(1);
+    let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+    // One round per 2000 s: the burst admits round 1, round 2 throttles
+    // (the bucket cannot meaningfully refill within the test's runtime).
+    let mut s = sched
+        .try_session(cfg, 5, 3, QosPolicy::unlimited().with_rounds_per_sec(0.0005))
+        .unwrap();
+    let signs: Vec<Vec<i8>> = {
+        let mut rng = hisafe::util::rng::Xoshiro256pp::seed_from_u64(9);
+        (0..cfg.n).map(|_| (0..5).map(|_| rng.gen_sign()).collect()).collect()
+    };
+    let out = s.try_run_round(&signs).expect("burst admits the first round");
+    assert_eq!(out.global_vote, plain_hierarchical_vote(&signs, cfg));
+    match s.try_run_round(&signs) {
+        Err(AdmissionError::Throttled { retry_after }) => {
+            assert!(retry_after > Duration::ZERO);
+            assert!(retry_after <= Duration::from_secs(3600), "retry_after is usable");
+        }
+        Ok(_) => panic!("second round must throttle"),
+        Err(e) => panic!("expected Throttled, got {e:?}"),
+    }
+    // The blocking Engine surface stays exempt and bit-identical — a
+    // legacy caller is never broken by someone else's QoS experiment.
+    assert_eq!(s.run_round(&signs).global_vote, plain_hierarchical_vote(&signs, cfg));
+    assert_eq!(s.admission_stats().admitted_rounds, 2);
+    assert_eq!(s.admission_stats().throttled, 1);
+}
+
+#[test]
+fn tenant_capacity_is_enforced_and_recovers() {
+    let sched = AggScheduler::with_capacity(1, 2);
+    let cfg = HiSafeConfig::flat(3, TiePolicy::OneBit);
+    let a = sched.try_session(cfg, 4, 1, QosPolicy::unlimited()).unwrap();
+    let _b = sched.try_session(cfg, 4, 2, QosPolicy::unlimited()).unwrap();
+    assert_eq!(sched.live_tenants(), 2);
+    assert!(matches!(
+        sched.try_session(cfg, 4, 3, QosPolicy::unlimited()),
+        Err(AdmissionError::Rejected { .. })
+    ));
+    drop(a);
+    assert_eq!(sched.live_tenants(), 1);
+    // Freed capacity readmits, and the new session works end-to-end.
+    let mut c = sched.try_session(cfg, 4, 4, QosPolicy::unlimited()).unwrap();
+    let signs: Vec<Vec<i8>> = {
+        let mut rng = hisafe::util::rng::Xoshiro256pp::seed_from_u64(11);
+        (0..3).map(|_| (0..4).map(|_| rng.gen_sign()).collect()).collect()
+    };
+    assert_eq!(
+        c.run_round(&signs).global_vote,
+        plain_hierarchical_vote(&signs, cfg)
+    );
+}
