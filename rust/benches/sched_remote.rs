@@ -1,0 +1,140 @@
+//! Bench: what the wire costs — in-process scheduler rounds vs the same
+//! rounds over the loopback-TCP service (JSON framing + syscalls + the
+//! frontend mutex), at the paper's n=24/ℓ=8 operating point.
+//!
+//! Two comparisons:
+//!
+//! 1. **Round latency** — mean admitted-round time, in-process session
+//!    vs `ServiceClient::submit_round` against a `ServiceServer` in the
+//!    same process (loopback TCP, so the numbers isolate transport cost
+//!    from network cost).
+//! 2. **Framing overhead** — the per-round wire bytes (request +
+//!    reply), reported so the `+`/`-` sign-string encoding's ~20x win
+//!    over number arrays stays visible.
+//!
+//! Wall-clock assertions are opt-in via `HISAFE_BENCH_STRICT=1`
+//! (advisory runs only print; CI compile-gates with `--no-run`).
+//! Correctness (remote votes ≡ local votes) is asserted always — a
+//! bench that computes wrong votes measures nothing.
+
+use hisafe::engine::QosPolicy;
+use hisafe::poly::TiePolicy;
+use hisafe::protocol::HiSafeConfig;
+use hisafe::service::{AggFrontend, Request, ServiceClient, ServiceServer};
+use hisafe::util::bench::{black_box, section};
+use hisafe::util::rng::{Rng, Xoshiro256pp};
+use std::time::Instant;
+
+fn main() {
+    let strict = std::env::var("HISAFE_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
+    let fast = std::env::var("HISAFE_BENCH_FAST").ok().is_some();
+    let d: usize = if fast { 1024 } else { 4096 };
+    let rounds: usize = if fast { 3 } else { 8 };
+    let cfg = HiSafeConfig::hierarchical(24, 8, TiePolicy::OneBit);
+    let seed = 11u64;
+
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let sign_sets: Vec<Vec<Vec<i8>>> = (0..rounds)
+        .map(|_| {
+            (0..cfg.n)
+                .map(|_| (0..d).map(|_| rng.gen_sign()).collect())
+                .collect()
+        })
+        .collect();
+
+    // ---- in-process baseline --------------------------------------------
+    section(&format!(
+        "in-process: {rounds} rounds at n={}, ell={}, d={d} (one scheduler session)",
+        cfg.n, cfg.ell
+    ));
+    let mut local_votes: Vec<Vec<i8>> = Vec::with_capacity(rounds);
+    let local_mean = {
+        let mut fe = AggFrontend::new(1, 2);
+        // Same frontend code path as the server, minus the transport:
+        // what the wire adds is exactly the difference to measure.
+        let sid = match fe.handle(&Request::SessionOpen {
+            cfg,
+            d,
+            seed,
+            qos: QosPolicy::unlimited(),
+        }) {
+            hisafe::service::Response::Admission(r) => r.session.expect("admitted"),
+            other => panic!("unexpected reply: {other:?}"),
+        };
+        // Warm up the dealing plane so both sides measure steady state.
+        fe.handle(&Request::Prefetch { session: sid, rounds: 1 });
+        let t0 = Instant::now();
+        for signs in &sign_sets {
+            match fe.handle(&Request::RoundSubmit { session: sid, signs: signs.clone() }) {
+                hisafe::service::Response::Vote(v) => {
+                    black_box(v.global_vote[0]);
+                    local_votes.push(v.global_vote);
+                }
+                other => panic!("unexpected reply: {other:?}"),
+            }
+        }
+        t0.elapsed().as_secs_f64() / rounds as f64
+    };
+    println!("  mean round: {:.3} ms", local_mean * 1e3);
+
+    // ---- loopback TCP ---------------------------------------------------
+    section("loopback TCP: the same rounds through ServiceServer/ServiceClient");
+    let server =
+        ServiceServer::bind("127.0.0.1:0", AggFrontend::new(1, 2)).expect("bind loopback");
+    let addr = server.local_addr().expect("bound addr").to_string();
+    let serve = std::thread::spawn(move || server.serve());
+    let mut client = ServiceClient::connect(&addr).expect("connect");
+    let sid = client.open_session(cfg, d, seed, QosPolicy::unlimited()).expect("admitted");
+    client.prefetch(sid, 1).expect("warm-up prefetch");
+    // One frame's size, for the framing-overhead report.
+    let req_bytes = Request::RoundSubmit { session: sid, signs: sign_sets[0].clone() }
+        .to_json()
+        .to_string_compact()
+        .len();
+    let remote_mean = {
+        let t0 = Instant::now();
+        for (r, signs) in sign_sets.iter().enumerate() {
+            let reply = client.submit_round(sid, signs).expect("round admitted");
+            black_box(reply.global_vote[0]);
+            assert_eq!(
+                reply.global_vote, local_votes[r],
+                "remote round {r} diverged from in-process"
+            );
+        }
+        t0.elapsed().as_secs_f64() / rounds as f64
+    };
+    println!("  mean round: {:.3} ms", remote_mean * 1e3);
+    println!(
+        "  wire overhead: {:.3} ms/round ({:.1}x); request frame {:.1} KiB \
+         ({} users x {d} coords as sign-chars)",
+        (remote_mean - local_mean) * 1e3,
+        remote_mean / local_mean,
+        req_bytes as f64 / 1024.0,
+        cfg.n
+    );
+
+    client.close_session(sid).expect("close");
+    client.shutdown().expect("shutdown");
+    serve.join().expect("serve thread").expect("clean shutdown");
+
+    if strict {
+        // Loopback TCP + JSON framing must stay in the same latency
+        // class as in-process rounds at model-sized d — the engine work
+        // dominates, the wire does not. Generous bounds: shared runners
+        // are noisy, and the point is catching order-of-magnitude
+        // regressions (e.g. accidental per-round reconnects or O(d)
+        // re-parsing blowups), not micro-variance.
+        assert!(
+            remote_mean < local_mean * 30.0 + 0.01,
+            "wire rounds fell out of the in-process latency class: \
+             remote {remote_mean:.6}s vs local {local_mean:.6}s"
+        );
+        // The sign-char encoding keeps a round's request frame near
+        // n*d bytes (plus fixed framing), not the ~5x of number arrays.
+        assert!(
+            req_bytes < cfg.n * d * 2 + 4096,
+            "request framing blew up: {req_bytes} bytes for n={} d={d}",
+            cfg.n
+        );
+    }
+}

@@ -195,7 +195,11 @@ impl QosPolicy {
 
     /// Reject policies no session could ever make progress under —
     /// checked once at admission so the round path never revalidates.
-    fn validate(&self) -> Result<(), AdmissionError> {
+    /// Public so transport front-ends ([`crate::service`]) can refuse a
+    /// bad policy before placing the tenant on a shard; the scheduler
+    /// still re-checks at [`AggScheduler::try_session`] time, so the
+    /// invariant never depends on callers remembering to validate.
+    pub fn validate(&self) -> Result<(), AdmissionError> {
         let bad = |reason: String| Err(AdmissionError::Rejected { reason });
         if self.weight == 0 {
             return bad("QosPolicy.weight must be ≥ 1".into());
@@ -854,6 +858,20 @@ impl AggSession {
     /// The QoS policy this session was admitted under.
     pub fn qos(&self) -> &QosPolicy {
         &self.qos
+    }
+
+    /// The protocol configuration this session aggregates for. Transport
+    /// front-ends ([`crate::service`]) validate wire-submitted sign
+    /// matrices against it before touching the round path, so a
+    /// malformed request is a typed rejection instead of a panic.
+    pub fn config(&self) -> &HiSafeConfig {
+        &self.cfg
+    }
+
+    /// The vote dimension `d` this session was opened for (the required
+    /// length of every submitted sign vector).
+    pub fn dim(&self) -> usize {
+        self.d
     }
 
     /// Snapshot of this session's admission counters (rounds admitted,

@@ -9,7 +9,7 @@
 //! 4. every user applies `θ ← θ − η·ĝ(t)` (Eq. 6 / Alg. 2 line 12).
 //!
 //! The trainer is generic over [`Model`] so the same loop drives the
-//! pure-rust models and the AOT-compiled JAX models. Two entry points
+//! pure-rust models and the AOT-compiled JAX models. Three entry points
 //! share one round-step implementation:
 //!
 //! * [`train`] — one federation, on a private scheduler (the classic
@@ -22,6 +22,14 @@
 //!   running [`train`] separately — sessions are pinned bit-identical to
 //!   dedicated engines — so multiplexing is purely an infrastructure
 //!   decision.
+//! * [`train_remote`] — the same federations driven through a
+//!   [`ServiceClient`] against a `hisafe serve` process: sessions open,
+//!   rounds submit, and throttle denials retry **over the wire**
+//!   (`rust/src/service/`). The session seed derivation and the round
+//!   step are shared with the local paths, so remote trajectories are
+//!   bit-identical to [`train`] / [`train_multi`] — serving location,
+//!   like multiplexing, is purely an infrastructure decision (pinned by
+//!   `rust/tests/service_props.rs`).
 //!
 //! Each [`FedSpec`] carries a [`QosPolicy`] for its secure session
 //! (dealing weight, bounded queue depth, rate budgets). Rounds denied by
@@ -36,6 +44,7 @@ use crate::fl::data::Dataset;
 use crate::fl::model::{sign_vec, Model};
 use crate::metrics::{AdmissionStats, CommStats};
 use crate::protocol::{plain_group_vote_all, HiSafeConfig};
+use crate::service::ServiceClient;
 use crate::util::json::Json;
 use crate::util::rng::{ChaCha20Rng, Rng, Xoshiro256pp};
 
@@ -191,10 +200,28 @@ pub struct FedSpec<'a, M: Model> {
     pub qos: QosPolicy,
 }
 
+/// The trainer's secure-aggregation backend: an in-process scheduler
+/// session, or a session id on a remote `hisafe serve` frontend driven
+/// through a [`ServiceClient`]. Both run the identical QoS-checked
+/// round path (`run_round_admitted`, local or wire), which is what
+/// keeps [`train_remote`] trajectories bit-identical to [`train`].
+enum SessionHandle {
+    Local(AggSession),
+    Remote { id: u64 },
+}
+
+/// The one derivation of a federation's secure-session seed from its
+/// run seed. `train`, `train_multi`, and `train_remote` all route
+/// through it — if local and remote ever disagreed here, their dealer
+/// streams (and the stream-level audits) would diverge.
+fn session_seed(cfg: &TrainConfig) -> u64 {
+    cfg.seed ^ 0xa6_67e6
+}
+
 /// One federation's in-flight training state: the per-round step of the
-/// classic [`train`] loop, factored out so single- and multi-federation
-/// paths execute the identical code (and therefore identical RNG streams
-/// and parameter trajectories).
+/// classic [`train`] loop, factored out so single-, multi-, and
+/// remote-federation paths execute the identical code (and therefore
+/// identical RNG streams and parameter trajectories).
 struct FedRun<'a, M: Model> {
     model: &'a M,
     train_ds: &'a Dataset,
@@ -206,37 +233,62 @@ struct FedRun<'a, M: Model> {
     select_rng: Xoshiro256pp,
     batch_rng: Xoshiro256pp,
     dp_rng: ChaCha20Rng,
-    /// Secure aggregation runs through a scheduler session: plan and
-    /// polynomial are built once, and the shared provisioning plane
-    /// deals round r+1's Beaver triples while round r's online phase
-    /// (and this loop's gradient work) executes — the paper's
-    /// offline/online split as wall-clock overlap. Votes are
-    /// bit-identical to run_sync and the sequential RoundEngine (the
-    /// dealer streams share run_sync's per-group seed derivation).
-    session: Option<AggSession>,
+    /// Secure aggregation runs through a scheduler session — in-process
+    /// or remote: plan and polynomial are built once (scheduler-side),
+    /// and the shared provisioning plane deals round r+1's Beaver
+    /// triples while round r's online phase (and this loop's gradient
+    /// work) executes — the paper's offline/online split as wall-clock
+    /// overlap. Votes are bit-identical to run_sync and the sequential
+    /// RoundEngine (the dealer streams share run_sync's per-group seed
+    /// derivation), wherever the session lives.
+    session: Option<SessionHandle>,
     logs: Vec<RoundLog>,
     last_acc: f32,
     total_uplink: u64,
 }
 
 impl<'a, M: Model> FedRun<'a, M> {
-    fn new(spec: &FedSpec<'a, M>, sched: Option<&AggScheduler>) -> FedRun<'a, M> {
-        let cfg = spec.cfg.clone();
-        assert_eq!(spec.shards.len(), cfg.n_users, "one shard per user");
-        assert!(cfg.participants <= cfg.n_users);
+    fn validate(spec: &FedSpec<'a, M>) {
+        assert_eq!(spec.shards.len(), spec.cfg.n_users, "one shard per user");
+        assert!(spec.cfg.participants <= spec.cfg.n_users);
         if let Aggregator::HiSafe(hc) = &spec.agg {
-            assert_eq!(hc.n, cfg.participants, "HiSafeConfig.n must equal participants");
+            assert_eq!(hc.n, spec.cfg.participants, "HiSafeConfig.n must equal participants");
         }
-        let d = spec.model.dim();
+    }
+
+    fn new(spec: &FedSpec<'a, M>, sched: Option<&AggScheduler>) -> FedRun<'a, M> {
+        Self::validate(spec);
         let session = match &spec.agg {
-            Aggregator::HiSafe(hc) => Some(
+            Aggregator::HiSafe(hc) => Some(SessionHandle::Local(
                 sched
                     .expect("a scheduler is required for secure aggregation")
-                    .try_session(*hc, d, cfg.seed ^ 0xa6_67e6, spec.qos)
+                    .try_session(*hc, spec.model.dim(), session_seed(&spec.cfg), spec.qos)
                     .unwrap_or_else(|e| panic!("federation session not admitted: {e}")),
-            ),
+            )),
             _ => None,
         };
+        Self::with_session(spec, session)
+    }
+
+    /// Like [`FedRun::new`], but the session lives on a remote frontend:
+    /// the same config, dimension, seed derivation, and QoS cross the
+    /// wire, so the remote scheduler builds the identical session a
+    /// local one would.
+    fn new_remote(spec: &FedSpec<'a, M>, client: &mut ServiceClient) -> FedRun<'a, M> {
+        Self::validate(spec);
+        let session = match &spec.agg {
+            Aggregator::HiSafe(hc) => Some(SessionHandle::Remote {
+                id: client
+                    .open_session(*hc, spec.model.dim(), session_seed(&spec.cfg), spec.qos)
+                    .unwrap_or_else(|e| panic!("remote federation session not admitted: {e}")),
+            }),
+            _ => None,
+        };
+        Self::with_session(spec, session)
+    }
+
+    fn with_session(spec: &FedSpec<'a, M>, session: Option<SessionHandle>) -> FedRun<'a, M> {
+        let cfg = spec.cfg.clone();
         FedRun {
             model: spec.model,
             train_ds: spec.train_ds,
@@ -255,8 +307,10 @@ impl<'a, M: Model> FedRun<'a, M> {
         }
     }
 
-    /// Execute global round `round` (Alg. 2/3 lines 4–12).
-    fn step(&mut self, round: usize) {
+    /// Execute global round `round` (Alg. 2/3 lines 4–12). `client` is
+    /// required iff the session is remote (the caller owns the one
+    /// connection all its federations share).
+    fn step(&mut self, round: usize, client: Option<&mut ServiceClient>) {
         let d = self.model.dim();
 
         // 1. user selection
@@ -286,16 +340,33 @@ impl<'a, M: Model> FedRun<'a, M> {
         let (direction, uplink_bits_per_user): (Vec<f32>, u64) = match &self.agg {
             Aggregator::HiSafe(_) => {
                 let signs: Vec<Vec<i8>> = grads.iter().map(|g| sign_vec(g)).collect();
-                let session = self.session.as_mut().expect("session built for HiSafe");
                 // QoS-checked admission with blocking retry: training
                 // needs every round, so a throttle denial is a wait, not
                 // a skip. Votes are unaffected — admission decides when
-                // a round runs, never what it computes.
-                let (out, denials, _waited) = session.run_round_admitted(&signs);
+                // a round runs, never what it computes. The remote path
+                // runs the same retry loop with the denial crossing the
+                // wire each time.
+                let (global_vote, stats, denials) =
+                    match self.session.as_mut().expect("session built for HiSafe") {
+                        SessionHandle::Local(session) => {
+                            let (out, denials, _waited) = session.run_round_admitted(&signs);
+                            (out.global_vote, out.stats, denials)
+                        }
+                        SessionHandle::Remote { id } => {
+                            let client =
+                                client.expect("remote sessions require a ServiceClient");
+                            let (reply, denials, _waited) = client
+                                .run_round_admitted(*id, &signs)
+                                .unwrap_or_else(|e| {
+                                    panic!("remote aggregation round failed: {e}")
+                                });
+                            (reply.global_vote, reply.stats, denials)
+                        }
+                    };
                 throttled = denials;
-                let bits = out.stats.c_u_bits();
-                let direction = out.global_vote.iter().map(|&v| v as f32).collect();
-                comm = Some(out.stats);
+                let bits = stats.c_u_bits();
+                let direction = global_vote.iter().map(|&v| v as f32).collect();
+                comm = Some(stats);
                 (direction, bits)
             }
             Aggregator::PlainMv(policy) => {
@@ -353,15 +424,32 @@ impl<'a, M: Model> FedRun<'a, M> {
         });
     }
 
-    fn finish(self) -> TrainResult {
+    /// `client` is required iff the session is remote; remote sessions
+    /// are closed here (freeing their shard slot) after their admission
+    /// counters are fetched.
+    fn finish(mut self, client: Option<&mut ServiceClient>) -> TrainResult {
         let final_acc = self.model.accuracy(&self.params, self.test_ds);
+        let admission = match self.session.take() {
+            None => None,
+            Some(SessionHandle::Local(session)) => Some(session.admission_stats()),
+            Some(SessionHandle::Remote { id }) => {
+                let client = client.expect("remote sessions require a ServiceClient");
+                let stats = client
+                    .stats(Some(id))
+                    .unwrap_or_else(|e| panic!("remote stats query failed: {e}"));
+                client
+                    .close_session(id)
+                    .unwrap_or_else(|e| panic!("remote session close failed: {e}"));
+                Some(stats.admission)
+            }
+        };
         TrainResult {
             logs: self.logs,
             final_acc,
             final_params: self.params,
             total_uplink_bits_per_user: self.total_uplink,
             aggregator: self.agg.name(),
-            admission: self.session.as_ref().map(|s| s.admission_stats()),
+            admission,
         }
     }
 }
@@ -417,6 +505,36 @@ pub fn train_multi<M: Model>(sched: &AggScheduler, feds: &[FedSpec<M>]) -> Vec<T
     train_multi_impl(Some(sched), feds)
 }
 
+/// Run several federations against a **remote** aggregation service
+/// (`hisafe serve`) through one blocking [`ServiceClient`]: every
+/// secure federation opens a wire session (same config, dimension, seed
+/// derivation, and QoS as the local paths), rounds interleave
+/// round-robin exactly like [`train_multi`], and throttle denials are
+/// retried by the client across the wire.
+///
+/// Per-federation results are bit-identical to [`train`] /
+/// [`train_multi`]: the remote frontend places each tenant on some
+/// scheduler shard, and neither placement nor transport touches the
+/// seed-derived triple streams (pinned by
+/// `rust/tests/service_props.rs`, including under throttling). Remote
+/// sessions are closed before this returns.
+pub fn train_remote<M: Model>(
+    client: &mut ServiceClient,
+    feds: &[FedSpec<M>],
+) -> Vec<TrainResult> {
+    let mut runs: Vec<FedRun<M>> =
+        feds.iter().map(|f| FedRun::new_remote(f, client)).collect();
+    let max_rounds = feds.iter().map(|f| f.cfg.rounds).max().unwrap_or(0);
+    for round in 0..max_rounds {
+        for run in runs.iter_mut() {
+            if round < run.cfg.rounds {
+                run.step(round, Some(&mut *client));
+            }
+        }
+    }
+    runs.into_iter().map(|r| r.finish(Some(&mut *client))).collect()
+}
+
 fn train_multi_impl<M: Model>(
     sched: Option<&AggScheduler>,
     feds: &[FedSpec<M>],
@@ -426,11 +544,11 @@ fn train_multi_impl<M: Model>(
     for round in 0..max_rounds {
         for run in runs.iter_mut() {
             if round < run.cfg.rounds {
-                run.step(round);
+                run.step(round, None);
             }
         }
     }
-    runs.into_iter().map(FedRun::finish).collect()
+    runs.into_iter().map(|r| r.finish(None)).collect()
 }
 
 #[cfg(test)]
@@ -661,6 +779,57 @@ mod tests {
         // per-round logs and the session counters.
         let waits: u64 = limited.logs.iter().map(|l| l.throttled).sum();
         assert_eq!(adm.throttled, waits);
+    }
+
+    #[test]
+    fn train_remote_over_loopback_matches_local_training() {
+        // One federation trained through a real TCP client/server pair
+        // (sharded frontend, loopback) must reproduce the bit-identical
+        // trajectory of local training — serving location is an
+        // infrastructure decision, like multiplexing. A tight rate
+        // budget exercises the wire throttle-retry path; the full
+        // random-tenant property lives in rust/tests/service_props.rs.
+        use crate::service::{AggFrontend, ServiceClient, ServiceServer};
+
+        let (tr, te, shards) = quick_setup();
+        let m = LinearSoftmax::new(784, 10);
+        let cfg = quick_cfg(3);
+        let agg = Aggregator::HiSafe(HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit));
+        let local = train(&m, &tr, &te, &shards, agg, &cfg);
+
+        let server =
+            ServiceServer::bind("127.0.0.1:0", AggFrontend::new(2, 1)).expect("bind loopback");
+        let addr = server.local_addr().expect("bound addr").to_string();
+        let serve = std::thread::spawn(move || server.serve());
+        let mut client = ServiceClient::connect(&addr).expect("connect");
+
+        let specs = vec![FedSpec {
+            model: &m,
+            train_ds: &tr,
+            test_ds: &te,
+            shards: &shards,
+            agg,
+            cfg: cfg.clone(),
+            // Same rationale as the local QoS test: a generous budget
+            // that still exercises the retry loop without stalling.
+            qos: QosPolicy::unlimited().with_rounds_per_sec(5000.0).with_queue_depth(2),
+        }];
+        let remote = train_remote(&mut client, &specs).pop().unwrap();
+        assert_eq!(remote.final_params, local.final_params);
+        assert_eq!(remote.final_acc, local.final_acc);
+        assert_eq!(remote.logs.len(), local.logs.len());
+        let adm = remote.admission.as_ref().expect("secure run reports admission");
+        assert_eq!(adm.admitted_rounds, 3);
+        // Client-side retry counts must agree with the server-side
+        // admission counters, round for round.
+        let waits: u64 = remote.logs.iter().map(|l| l.throttled).sum();
+        assert_eq!(adm.throttled, waits);
+        // The remote session was closed by train_remote.
+        let fe_stats = client.stats(None).expect("frontend stats");
+        assert_eq!(fe_stats.shard_tenants.expect("shards").iter().sum::<usize>(), 0);
+
+        client.shutdown().expect("shutdown acked");
+        serve.join().expect("serve thread").expect("clean shutdown");
     }
 
     #[test]

@@ -47,6 +47,7 @@ pub mod poly;
 pub mod protocol;
 pub mod runtime;
 pub mod security;
+pub mod service;
 pub mod shamir;
 pub mod sharing;
 
@@ -57,4 +58,5 @@ pub use engine::{
 };
 pub use field::Fp;
 pub use poly::{MvPolynomial, TiePolicy};
+pub use service::{AggFrontend, ServiceClient, ServiceServer};
 

@@ -9,6 +9,8 @@
 //! hisafe fig6                        regenerate Fig. 6 series
 //! hisafe security --n 24 --ell 8     leakage + uniformity analysis
 //! hisafe sweep --tenants 24x8@3,12x4 multi-tenant scheduler sweep (QoS-aware)
+//! hisafe serve --shards 2            sharded aggregation service on loopback TCP
+//! hisafe sweep --remote 127.0.0.1:7433  the same sweep, driven over the wire
 //! hisafe demo                        Appendix-A walkthrough (n=3)
 //! ```
 
@@ -22,11 +24,12 @@ use hisafe::metrics::CommStats;
 use hisafe::poly::{MvPolynomial, TiePolicy};
 use hisafe::protocol::{plain_hierarchical_vote, HiSafeConfig};
 use hisafe::security;
+use hisafe::service::{AggFrontend, ServiceClient, ServiceServer, PROTOCOL_VERSION};
 use hisafe::util::cli::Args;
 use hisafe::util::json::Json;
 
 fn main() {
-    let args = match Args::from_env(&["verbose", "threaded", "jax"]) {
+    let args = match Args::from_env(&["verbose", "threaded", "jax", "stop-server"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -42,6 +45,7 @@ fn main() {
         "fig6" => cmd_fig6(),
         "security" => cmd_security(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
         "demo" => cmd_demo(),
         _ => {
             print_help();
@@ -71,6 +75,12 @@ fn print_help() {
                                            mixed-tenant scheduler workload with\n\
                                            per-tenant QoS (@W = dealing weight;\n\
                                            rps/tps/queue-depth bound every tenant)\n\
+           sweep --remote HOST:PORT [--stop-server]\n\
+                                           the same sweep driven over the wire\n\
+                                           against a `hisafe serve` process\n\
+           serve [--addr 127.0.0.1:7433] [--shards 2] [--threads 2] [--max-tenants M]\n\
+                                           sharded aggregation service speaking\n\
+                                           newline-delimited JSON over TCP\n\
            demo                            Appendix-A walkthrough"
     );
 }
@@ -381,8 +391,11 @@ fn parse_tenant(spec: &str) -> Result<(HiSafeConfig, usize, u32), String> {
 fn cmd_sweep(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "tenants", "rounds", "threads", "seed", "out", "rps", "tps", "queue-depth",
-        "verbose", "threaded", "jax",
+        "remote", "stop-server", "verbose", "threaded", "jax",
     ])?;
+    if args.has("remote") {
+        return cmd_sweep_remote(args);
+    }
     let rounds = args.get_usize("rounds", 5)?;
     if rounds == 0 {
         return Err("--rounds must be ≥ 1".into());
@@ -548,6 +561,229 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     let path = format!("{out_dir}/sweep.json");
     std::fs::write(&path, report.to_string_pretty()).map_err(|e| e.to_string())?;
     println!("\nwrote {path}");
+    Ok(())
+}
+
+/// The `sweep` workload driven across the wire: every tenant is a
+/// session on a remote `hisafe serve` frontend, rounds submit over
+/// loopback TCP with client-side throttle retries, and the report adds
+/// the frontend's shard layout. Vote correctness is still audited
+/// client-side against the plaintext reference — the wire cannot change
+/// votes, only where they are computed.
+fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
+    let addr = args.get("remote").expect("checked by caller").to_string();
+    let rounds = args.get_usize("rounds", 5)?;
+    if rounds == 0 {
+        return Err("--rounds must be ≥ 1".into());
+    }
+    let base_seed = args.get_u64("seed", 42)?;
+    let tenant_specs = args.get_or("tenants", "24x8x2048,12x4x4096,6x2x8192");
+    let shapes: Vec<(HiSafeConfig, usize, u32)> = tenant_specs
+        .split(',')
+        .map(|s| parse_tenant(s.trim()))
+        .collect::<Result<_, _>>()?;
+    let rps = args.get_f64("rps", 0.0)?;
+    let tps = args.get_f64("tps", 0.0)?;
+    let queue_depth = args.get_usize("queue-depth", 0)?;
+    if args.has("threads") {
+        return Err("--threads is a server-side knob; pass it to `hisafe serve`".into());
+    }
+
+    let mut client =
+        ServiceClient::connect(&addr).map_err(|e| format!("connect to {addr}: {e}"))?;
+    println!("# remote sweep: {} tenants against {addr}", shapes.len());
+
+    struct RemoteTenant {
+        label: String,
+        cfg: HiSafeConfig,
+        d: usize,
+        weight: u32,
+        sid: u64,
+        rng: hisafe::util::rng::Xoshiro256pp,
+        latencies_ms: Vec<f64>,
+        throttle_wait_ms: f64,
+        comm_last: Option<CommStats>,
+        comm_total: CommStats,
+    }
+    use hisafe::util::rng::Rng;
+
+    let mut tenants: Vec<RemoteTenant> = Vec::with_capacity(shapes.len());
+    for (i, &(cfg, d, weight)) in shapes.iter().enumerate() {
+        let mut qos = QosPolicy::unlimited().with_weight(weight);
+        if rps > 0.0 {
+            qos = qos.with_rounds_per_sec(rps);
+        }
+        if tps > 0.0 {
+            qos = qos.with_triples_per_sec(tps);
+        }
+        if queue_depth > 0 {
+            qos = qos.with_queue_depth(queue_depth);
+        }
+        let sid = client
+            .open_session(cfg, d, base_seed.wrapping_add(i as u64), qos)
+            .map_err(|e| format!("tenant {i} not admitted: {e}"))?;
+        tenants.push(RemoteTenant {
+            label: format!("n{}_l{}_d{}", cfg.n, cfg.ell, d),
+            cfg,
+            d,
+            weight,
+            sid,
+            rng: hisafe::util::rng::Xoshiro256pp::seed_from_u64(base_seed ^ ((i as u64) << 8)),
+            latencies_ms: Vec::with_capacity(rounds),
+            throttle_wait_ms: 0.0,
+            comm_last: None,
+            comm_total: CommStats::default(),
+        });
+    }
+
+    for round in 0..rounds {
+        for t in tenants.iter_mut() {
+            let signs: Vec<Vec<i8>> = (0..t.cfg.n)
+                .map(|_| (0..t.d).map(|_| t.rng.gen_sign()).collect())
+                .collect();
+            let t0 = std::time::Instant::now();
+            let (reply, _denials, waited) = client
+                .run_round_admitted(t.sid, &signs)
+                .map_err(|e| format!("tenant {} round {round}: {e}", t.label))?;
+            t.throttle_wait_ms += waited.as_secs_f64() * 1e3;
+            t.latencies_ms
+                .push(t0.elapsed().saturating_sub(waited).as_secs_f64() * 1e3);
+            if round == 0 {
+                assert_eq!(
+                    reply.global_vote,
+                    plain_hierarchical_vote(&signs, t.cfg),
+                    "tenant {} produced a wrong vote over the wire",
+                    t.label
+                );
+            }
+            t.comm_total.merge(&reply.stats);
+            t.comm_last = Some(reply.stats);
+        }
+    }
+
+    println!(
+        "\n{:<16} {:>3} {:>5} {:>6} {:>10} {:>10} {:>10} {:>9} {:>6} {:>12} {:>10}",
+        "tenant", "w", "shard", "rounds", "mean ms", "min ms", "max ms", "throttle", "dealt",
+        "C_u bits/rd", "mults/rd"
+    );
+    let mut report = Json::obj();
+    let mut tenant_objs: Vec<Json> = Vec::new();
+    for t in &tenants {
+        let mean = t.latencies_ms.iter().sum::<f64>() / t.latencies_ms.len() as f64;
+        let min = t.latencies_ms.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = t.latencies_ms.iter().cloned().fold(0.0f64, f64::max);
+        let comm = t.comm_last.as_ref().expect("every tenant ran rounds");
+        let stats = client
+            .stats(Some(t.sid))
+            .map_err(|e| format!("stats for tenant {}: {e}", t.label))?;
+        let shard = stats.shard.expect("session stats carry a shard");
+        println!(
+            "{:<16} {:>3} {:>5} {:>6} {:>10.2} {:>10.2} {:>10.2} {:>9} {:>6} {:>12} {:>10}",
+            t.label,
+            t.weight,
+            shard,
+            t.latencies_ms.len(),
+            mean,
+            min,
+            max,
+            stats.admission.throttled,
+            stats.dealt_rounds,
+            comm.c_u_bits(),
+            comm.mults
+        );
+        let mut qos_obj = Json::obj();
+        qos_obj.set("weight", t.weight);
+        if rps > 0.0 {
+            qos_obj.set("rounds_per_sec", rps);
+        }
+        if tps > 0.0 {
+            qos_obj.set("triples_per_sec", tps);
+        }
+        if queue_depth > 0 {
+            qos_obj.set("queue_depth", queue_depth);
+        }
+        let mut o = Json::obj();
+        o.set("tenant", t.label.clone())
+            .set("n", t.cfg.n)
+            .set("ell", t.cfg.ell)
+            .set("d", t.d)
+            .set("shard", shard)
+            .set("rounds", t.latencies_ms.len())
+            .set("mean_ms", mean)
+            .set("min_ms", min)
+            .set("max_ms", max)
+            .set("throttle_wait_ms", t.throttle_wait_ms)
+            .set("dealt_rounds", stats.dealt_rounds)
+            .set("qos", qos_obj)
+            .set("admission", stats.admission.to_json())
+            .set("comm_per_round", comm.to_json())
+            .set("comm_total", t.comm_total.to_json());
+        tenant_objs.push(o);
+    }
+    // Frontend-wide layout before the sessions close.
+    let fe = client.stats(None).map_err(|e| format!("frontend stats: {e}"))?;
+    report
+        .set("remote", addr.clone())
+        .set("protocol_version", PROTOCOL_VERSION)
+        .set("shard_tenants", fe.shard_tenants.unwrap_or_default())
+        .set("tenants", tenant_objs);
+
+    for t in &tenants {
+        client
+            .close_session(t.sid)
+            .map_err(|e| format!("close tenant {}: {e}", t.label))?;
+    }
+
+    let out_dir = args.get_or("out", "runs");
+    std::fs::create_dir_all(out_dir).map_err(|e| e.to_string())?;
+    let path = format!("{out_dir}/sweep.json");
+    std::fs::write(&path, report.to_string_pretty()).map_err(|e| e.to_string())?;
+    println!("\nwrote {path}");
+
+    if args.has("stop-server") {
+        client.shutdown().map_err(|e| format!("shutdown: {e}"))?;
+        println!("server at {addr} acknowledged shutdown");
+    }
+    Ok(())
+}
+
+/// `hisafe serve` — the sharded aggregation service: an [`AggFrontend`]
+/// over `--shards` scheduler shards behind newline-delimited JSON
+/// frames on TCP. Blocks until a client sends the protocol's Shutdown
+/// request (e.g. `hisafe sweep --remote ADDR --stop-server`).
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    args.check_known(&[
+        "addr", "shards", "threads", "max-tenants", "verbose", "threaded", "jax",
+    ])?;
+    let addr = args.get_or("addr", "127.0.0.1:7433");
+    let shards = args.get_usize("shards", 2)?;
+    if shards == 0 {
+        return Err("--shards must be ≥ 1".into());
+    }
+    let threads = args.get_usize("threads", 2)?;
+    if threads == 0 {
+        return Err("--threads must be ≥ 1 (span workers per shard)".into());
+    }
+    let max_tenants = args.get_usize("max-tenants", 0)?;
+    let frontend = if max_tenants > 0 {
+        AggFrontend::with_shard_capacity(shards, threads, max_tenants)
+    } else {
+        AggFrontend::new(shards, threads)
+    };
+    let server = ServiceServer::bind(addr, frontend).map_err(|e| format!("bind {addr}: {e}"))?;
+    let local = server.local_addr().map_err(|e| e.to_string())?;
+    println!(
+        "hisafe service listening on {local} — {shards} shard(s) x {threads} worker(s), \
+         protocol v{PROTOCOL_VERSION}{}",
+        if max_tenants > 0 {
+            format!(", max {max_tenants} tenants/shard")
+        } else {
+            String::new()
+        }
+    );
+    println!("stop with: hisafe sweep --remote {local} --stop-server");
+    server.serve().map_err(|e| e.to_string())?;
+    println!("service stopped cleanly");
     Ok(())
 }
 

@@ -139,6 +139,20 @@ impl AdmissionStats {
         self.queue_full += other.queue_full;
         self.rejected += other.rejected;
     }
+
+    /// Merge any number of per-session (or per-shard) counters into one
+    /// aggregate — what [`crate::service::AggFrontend`] reports for a
+    /// frontend-wide `StatsQuery` across all of its scheduler shards.
+    pub fn merge_all<'a, I>(parts: I) -> AdmissionStats
+    where
+        I: IntoIterator<Item = &'a AdmissionStats>,
+    {
+        let mut total = AdmissionStats::default();
+        for p in parts {
+            total.merge(p);
+        }
+        total
+    }
 }
 
 /// Wall-clock phase timings for Table V.
@@ -253,6 +267,26 @@ mod tests {
         );
         assert_eq!(j.get("admitted_rounds").unwrap().as_u64(), Some(8));
         assert_eq!(j.get("throttled").unwrap().as_u64(), Some(3));
+    }
+
+    #[test]
+    fn merge_all_is_fieldwise_sum_over_shards() {
+        let shards = [
+            AdmissionStats { admitted_rounds: 4, throttled: 1, queue_full: 0, rejected: 2 },
+            AdmissionStats { admitted_rounds: 0, throttled: 0, queue_full: 3, rejected: 0 },
+            AdmissionStats { admitted_rounds: 7, throttled: 2, queue_full: 1, rejected: 1 },
+        ];
+        let total = AdmissionStats::merge_all(shards.iter());
+        assert_eq!(total.admitted_rounds, 11);
+        assert_eq!(total.throttled, 3);
+        assert_eq!(total.queue_full, 4);
+        assert_eq!(total.rejected, 3);
+        assert_eq!(total.denials(), 10);
+        // Empty input is the identity.
+        assert_eq!(
+            AdmissionStats::merge_all(std::iter::empty::<&AdmissionStats>()),
+            AdmissionStats::default()
+        );
     }
 
     #[test]

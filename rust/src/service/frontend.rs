@@ -1,0 +1,794 @@
+//! `AggFrontend` — a sharded front-end over many [`AggScheduler`]s,
+//! speaking exactly the wire protocol of [`super::proto`].
+//!
+//! One [`AggScheduler`] is one process-local scheduling domain: one
+//! worker pool, one provisioning plane. The frontend scales *out* by
+//! owning `K` of them as **shards** and placing every tenant on one:
+//!
+//! ```text
+//!            Request (proto.rs)            Response (proto.rs)
+//!                  │                              ▲
+//!                  ▼                              │
+//!   ┌──────────── AggFrontend (this file) ────────┴─┐
+//!   │  session table: external id → (shard, session) │
+//!   │  placement: rendezvous hash on (cfg, d, seed)  │
+//!   │             + least-loaded spill-over          │
+//!   └──┬───────────────┬───────────────┬────────────┘
+//!   shard 0         shard 1         shard K−1
+//!   AggScheduler    AggScheduler    AggScheduler
+//!   (pool+plane)    (pool+plane)    (pool+plane)
+//! ```
+//!
+//! The frontend exposes **only** the request/response protocol
+//! ([`AggFrontend::handle`]) — no caller reaches an engine directly —
+//! so the same façade serves in-process embedding and the TCP server in
+//! [`super::server`] unchanged, and everything a remote client can do
+//! is exactly what a local one can.
+//!
+//! # Placement
+//!
+//! Tenants are placed by **rendezvous (highest-random-weight) hashing**
+//! of the tenant key `(cfg, d, seed)`: every shard gets a deterministic
+//! pseudo-random score for the key, and the highest score wins
+//! ([`rendezvous_rank`], a pure unit-tested function). Rendezvous gives
+//! the two properties a stateless balancer wants (and is why multiple
+//! front-end processes pointing at the same shard set would agree):
+//!
+//! * **Balance**: keys spread uniformly — over many tenants each of `K`
+//!   shards gets ~`1/K` of them (pinned within ±20% by the tests).
+//! * **Minimal disruption**: adding or removing one shard only moves
+//!   the ~`1/K` of keys whose winner changed, and growing `K` only ever
+//!   moves keys *onto* the new shard (also pinned by tests).
+//!
+//! If the winning shard refuses admission (at its tenant cap), the
+//! frontend **spills over** to the remaining shards in least-loaded
+//! order — capacity pressure degrades placement locality, never
+//! availability. [`AdmissionError::Rejected`] is returned only when
+//! every shard refuses.
+//!
+//! # Drain and rebalance
+//!
+//! A shard can be **drained** ([`AggFrontend::drain_shard`]): it stops
+//! receiving new tenants (rendezvous skips it, so its keys spill to
+//! their next-ranked shard — the same set they'd map to if the shard
+//! were removed), while existing sessions keep running. On
+//! `SessionClose` the frontend retires the shard's scheduler as soon as
+//! its last tenant leaves, tearing down its worker pool and dealing
+//! plane; [`AggFrontend::undrain_shard`] returns it to rotation
+//! (schedulers are created lazily, so a drained-then-reused shard just
+//! respawns its infrastructure). This is the knob for rotating capacity
+//! out of a live frontend without dropping a single round.
+//!
+//! # Determinism
+//!
+//! Placement never affects votes: a session's triple streams are pure
+//! functions of its own `(seed, group)` (see `engine/scheduler.rs`),
+//! so which shard a tenant lands on — like which tenants it shares a
+//! plane with — changes wall-clock behavior only. The service property
+//! tests pin remote votes bit-identical to in-process engines across
+//! random shard counts.
+
+use std::collections::BTreeMap;
+
+use crate::engine::{AdmissionError, AggScheduler, AggSession, Engine, QosPolicy};
+use crate::metrics::AdmissionStats;
+use crate::protocol::HiSafeConfig;
+
+use super::proto::{AdmissionReply, Request, Response, StatsReply, VoteReply};
+
+/// SplitMix64 finalizer: a full-avalanche 64-bit mixer (public-domain
+/// constants from Steele et al.), the hash primitive for rendezvous
+/// scoring. Zero-dependency like the rest of the crate.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Fold a tenant's identity `(cfg, d, seed)` into the 64-bit placement
+/// key. Every field participates, so two tenants differing only in tie
+/// policy (or only in seed) hash independently.
+pub(crate) fn tenant_key(cfg: &HiSafeConfig, d: usize, seed: u64) -> u64 {
+    let mut h = splitmix64(seed);
+    h = splitmix64(h ^ cfg.n as u64);
+    h = splitmix64(h ^ cfg.ell as u64);
+    h = splitmix64(h ^ cfg.intra.downlink_bits() as u64);
+    h = splitmix64(h ^ ((cfg.inter.downlink_bits() as u64) << 8));
+    h = splitmix64(h ^ ((cfg.sparse as u64) << 16));
+    splitmix64(h ^ d as u64)
+}
+
+/// Rendezvous ranking: shards ordered by descending score
+/// `splitmix64(key ⊕ splitmix64(shard))`. Index 0 is the placement
+/// winner; the rest is the deterministic fail-over order. Each shard's
+/// score depends only on `(key, shard)` — never on `shards` — which is
+/// what makes the ranking stable under shard-count changes (the
+/// rendezvous property the tests pin).
+pub(crate) fn rendezvous_rank(key: u64, shards: usize) -> Vec<usize> {
+    let mut scored: Vec<(u64, usize)> = (0..shards)
+        .map(|i| (splitmix64(key ^ splitmix64(i as u64 ^ 0x5bd1_e995)), i))
+        .collect();
+    // Descending by score; scores collide with probability ~2⁻⁶⁴, and
+    // the index tie-break keeps even that case deterministic.
+    scored.sort_unstable_by_key(|&(score, i)| std::cmp::Reverse((score, i)));
+    scored.into_iter().map(|(_, i)| i).collect()
+}
+
+/// One scheduler shard. The scheduler itself is lazy: spawned on first
+/// placement, retired when a drained shard empties — so idle shards
+/// cost no threads.
+struct Shard {
+    sched: Option<AggScheduler>,
+    /// Worker threads to spawn this shard's pool with.
+    threads: usize,
+    /// Per-shard tenant cap (`AggScheduler::with_capacity`).
+    max_tenants: Option<usize>,
+    /// Live sessions placed here (frontend-side count; the scheduler's
+    /// own `live_tenants` agrees, but this survives `sched = None`).
+    tenants: usize,
+    /// Draining shards receive no new placements.
+    draining: bool,
+}
+
+impl Shard {
+    fn sched(&mut self) -> &AggScheduler {
+        self.sched.get_or_insert_with(|| match self.max_tenants {
+            Some(cap) => AggScheduler::with_capacity(self.threads, cap),
+            None => AggScheduler::with_threads(self.threads),
+        })
+    }
+}
+
+/// A live session and the shard that owns it.
+struct FrontSession {
+    shard: usize,
+    session: AggSession,
+}
+
+/// Service-level ceilings on wire-controlled sizes. The engine asserts
+/// (panics) on shapes it was never built for and will happily allocate
+/// whatever a caller asks — correct for in-process callers, fatal for a
+/// server whose mutex a panic would poison. These are generous bounds
+/// (orders of magnitude above the paper's operating points — n ≤ 100,
+/// d ≈ 7.8k) that stop abuse without constraining use.
+const MAX_USERS: usize = 4096;
+const MAX_DIM: usize = 1 << 22;
+const MAX_PREFETCH_ROUNDS: usize = 4096;
+
+/// Reject wire shapes the engine cannot serve *before* they reach its
+/// asserting surface: a panic on a connection thread would poison the
+/// frontend mutex and take down every session (the contract is typed
+/// rejections for malformed content, panics only for internal bugs).
+fn validate_shape(cfg: &HiSafeConfig, d: usize) -> Result<(), AdmissionError> {
+    let bad = |reason: String| Err(AdmissionError::Rejected { reason });
+    if cfg.n == 0 || cfg.ell == 0 {
+        return bad(format!("n = {} and ell = {} must both be >= 1", cfg.n, cfg.ell));
+    }
+    if cfg.n % cfg.ell != 0 {
+        return bad(format!("ell = {} must divide n = {}", cfg.ell, cfg.n));
+    }
+    if cfg.n > MAX_USERS {
+        return bad(format!("n = {} exceeds the service cap of {MAX_USERS} users", cfg.n));
+    }
+    if d == 0 || d > MAX_DIM {
+        return bad(format!("d = {d} must be in [1, {MAX_DIM}]"));
+    }
+    Ok(())
+}
+
+/// The sharded service front-end: owns `K` scheduler shards and a
+/// session table, and answers wire-protocol [`Request`]s. See the
+/// module docs for placement and drain semantics.
+///
+/// ```
+/// use hisafe::engine::QosPolicy;
+/// use hisafe::poly::TiePolicy;
+/// use hisafe::protocol::HiSafeConfig;
+/// use hisafe::service::{AggFrontend, Request, Response};
+///
+/// let mut fe = AggFrontend::new(2, 1);
+/// let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+/// let open = Request::SessionOpen { cfg, d: 4, seed: 7, qos: QosPolicy::unlimited() };
+/// let sid = match fe.handle(&open) {
+///     Response::Admission(r) => r.session.expect("granted"),
+///     other => panic!("unexpected reply: {other:?}"),
+/// };
+/// let signs = vec![vec![1i8, -1, 1, -1]; 6];
+/// match fe.handle(&Request::RoundSubmit { session: sid, signs }) {
+///     Response::Vote(v) => assert_eq!(v.global_vote, vec![1, -1, 1, -1]),
+///     other => panic!("unexpected reply: {other:?}"),
+/// }
+/// ```
+pub struct AggFrontend {
+    shards: Vec<Shard>,
+    sessions: BTreeMap<u64, FrontSession>,
+    next_session: u64,
+    /// Fold of closed sessions' admission counters, so frontend-wide
+    /// stats survive tenant churn.
+    closed_admission: AdmissionStats,
+    /// Ditto for rounds run / dealt by closed sessions.
+    closed_rounds_run: u64,
+    closed_dealt: u64,
+}
+
+impl AggFrontend {
+    /// A frontend over `shards` scheduler shards, each spawning
+    /// `threads_per_shard` span workers (plus its dealer thread) lazily
+    /// on first placement. No per-shard tenant cap.
+    pub fn new(shards: usize, threads_per_shard: usize) -> AggFrontend {
+        Self::build(shards, threads_per_shard, None)
+    }
+
+    /// Like [`new`](AggFrontend::new), but every shard refuses more than
+    /// `max_tenants_per_shard` concurrent sessions — the placement layer
+    /// then spills to the least-loaded shard, and `SessionOpen` is
+    /// `Rejected` only when the whole frontend is full.
+    pub fn with_shard_capacity(
+        shards: usize,
+        threads_per_shard: usize,
+        max_tenants_per_shard: usize,
+    ) -> AggFrontend {
+        Self::build(shards, threads_per_shard, Some(max_tenants_per_shard))
+    }
+
+    fn build(shards: usize, threads: usize, max_tenants: Option<usize>) -> AggFrontend {
+        assert!(shards >= 1, "a frontend needs at least one shard");
+        assert!(threads >= 1, "shards need at least one worker thread");
+        AggFrontend {
+            shards: (0..shards)
+                .map(|_| Shard {
+                    sched: None,
+                    threads,
+                    max_tenants,
+                    tenants: 0,
+                    draining: false,
+                })
+                .collect(),
+            sessions: BTreeMap::new(),
+            next_session: 0,
+            closed_admission: AdmissionStats::default(),
+            closed_rounds_run: 0,
+            closed_dealt: 0,
+        }
+    }
+
+    /// Number of scheduler shards (fixed at construction).
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Live sessions per shard (frontend-side placement counts).
+    pub fn shard_tenants(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.tenants).collect()
+    }
+
+    /// Total live sessions across every shard.
+    pub fn live_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Stop placing new tenants on shard `i`; its keys spill to their
+    /// next-ranked shard exactly as if the shard were removed. Existing
+    /// sessions keep running; the shard's scheduler (pool + plane) is
+    /// retired as soon as its last session closes.
+    ///
+    /// # Panics
+    ///
+    /// If `i` is out of range, or if draining `i` would leave no shard
+    /// accepting placements.
+    pub fn drain_shard(&mut self, i: usize) {
+        assert!(i < self.shards.len(), "shard {i} out of range");
+        assert!(
+            self.shards.iter().enumerate().any(|(k, s)| k != i && !s.draining),
+            "cannot drain the last accepting shard"
+        );
+        self.shards[i].draining = true;
+        self.retire_if_drained(i);
+    }
+
+    /// Return a drained shard to the placement rotation (its scheduler
+    /// respawns lazily on the next placement).
+    ///
+    /// # Panics
+    ///
+    /// If `i` is out of range.
+    pub fn undrain_shard(&mut self, i: usize) {
+        assert!(i < self.shards.len(), "shard {i} out of range");
+        self.shards[i].draining = false;
+    }
+
+    /// Whether shard `i` currently holds live scheduler infrastructure
+    /// (a worker pool + dealing plane). False until first placement and
+    /// again after a drain empties it.
+    pub fn shard_is_live(&self, i: usize) -> bool {
+        self.shards[i].sched.is_some()
+    }
+
+    /// The rebalance step: a draining shard with no tenants left drops
+    /// its scheduler handle, tearing down its threads. (Sessions hold
+    /// the scheduler core alive through their own `Arc`s, so this is
+    /// safe even mid-race with a closing session.)
+    fn retire_if_drained(&mut self, i: usize) {
+        let s = &mut self.shards[i];
+        if s.draining && s.tenants == 0 {
+            s.sched = None;
+        }
+    }
+
+    /// Place a tenant: rendezvous winner first, then least-loaded
+    /// spill-over among the remaining accepting shards.
+    fn place(
+        &mut self,
+        cfg: HiSafeConfig,
+        d: usize,
+        seed: u64,
+        qos: QosPolicy,
+    ) -> Result<u64, AdmissionError> {
+        // Validate shape and policy up front: both must be the same
+        // typed rejection on every shard (and must never reach the
+        // engine's asserting surface), so don't let either consume a
+        // placement attempt (the shard re-validates the policy anyway).
+        validate_shape(&cfg, d)?;
+        qos.validate()?;
+        let rank = rendezvous_rank(tenant_key(&cfg, d, seed), self.shards.len());
+        let mut candidates: Vec<usize> =
+            rank.iter().copied().filter(|&i| !self.shards[i].draining).collect();
+        if candidates.is_empty() {
+            return Err(AdmissionError::Rejected {
+                reason: "every shard is draining".into(),
+            });
+        }
+        // Keep the rendezvous winner in front; order the spill-over
+        // candidates by current load (stable sort preserves rendezvous
+        // order among equally-loaded shards).
+        let spill = candidates.split_off(1);
+        let mut by_load = spill;
+        by_load.sort_by_key(|&i| self.shards[i].tenants);
+        candidates.extend(by_load);
+
+        let mut last_err = None;
+        for i in candidates {
+            match self.shards[i].sched().try_session(cfg, d, seed, qos) {
+                Ok(session) => {
+                    let sid = self.next_session;
+                    self.next_session += 1;
+                    self.shards[i].tenants += 1;
+                    self.sessions.insert(sid, FrontSession { shard: i, session });
+                    return Ok(sid);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.expect("at least one candidate shard was tried"))
+    }
+
+    /// Answer one wire-protocol request. Never panics on malformed
+    /// *content* (unknown sessions, wrong sign-matrix shapes, invalid
+    /// policies all come back as typed [`AdmissionReply`] denials) —
+    /// panicking is reserved for frontend-internal invariant breaks.
+    pub fn handle(&mut self, req: &Request) -> Response {
+        match req {
+            Request::SessionOpen { cfg, d, seed, qos } => match self.place(*cfg, *d, *seed, *qos)
+            {
+                Ok(sid) => Response::Admission(AdmissionReply::ok(Some(sid))),
+                Err(e) => Response::Admission(AdmissionReply::denied(None, e)),
+            },
+            Request::RoundSubmit { session, signs } => {
+                let Some(fs) = self.sessions.get_mut(session) else {
+                    return unknown_session(*session);
+                };
+                // Shape-check before the engine surface: the engine
+                // asserts (panics) on bad shapes, which is right for
+                // in-process bugs but must be a typed rejection for
+                // wire input.
+                let (n, d) = (fs.session.config().n, fs.session.dim());
+                if signs.len() != n || signs.iter().any(|s| s.len() != d) {
+                    return Response::Admission(AdmissionReply::denied(
+                        Some(*session),
+                        AdmissionError::Rejected {
+                            reason: format!(
+                                "sign matrix must be {n} users x {d} coordinates"
+                            ),
+                        },
+                    ));
+                }
+                match fs.session.try_run_round(signs) {
+                    Ok(out) => Response::Vote(VoteReply {
+                        session: *session,
+                        global_vote: out.global_vote,
+                        subgroup_votes: out.subgroup_votes,
+                        stats: out.stats,
+                    }),
+                    Err(e) => Response::Admission(AdmissionReply::denied(Some(*session), e)),
+                }
+            }
+            Request::Prefetch { session, rounds } => {
+                let Some(fs) = self.sessions.get_mut(session) else {
+                    return unknown_session(*session);
+                };
+                // Bound per-call dealing work: with an unbounded queue
+                // depth (the tenant's own choice), a single wire request
+                // could otherwise queue effectively infinite dealing.
+                if *rounds > MAX_PREFETCH_ROUNDS {
+                    return Response::Admission(AdmissionReply::denied(
+                        Some(*session),
+                        AdmissionError::Rejected {
+                            reason: format!(
+                                "prefetch of {rounds} rounds exceeds the service cap of \
+                                 {MAX_PREFETCH_ROUNDS} per call"
+                            ),
+                        },
+                    ));
+                }
+                match fs.session.try_prefetch(*rounds) {
+                    Ok(()) => Response::Admission(AdmissionReply::ok(Some(*session))),
+                    Err(e) => Response::Admission(AdmissionReply::denied(Some(*session), e)),
+                }
+            }
+            Request::SessionClose { session } => {
+                let Some(fs) = self.sessions.remove(session) else {
+                    return unknown_session(*session);
+                };
+                self.closed_admission.merge(&fs.session.admission_stats());
+                self.closed_rounds_run += fs.session.rounds_run();
+                self.closed_dealt += fs.session.dealt_rounds();
+                let shard = fs.shard;
+                drop(fs); // deregisters from the shard's plane
+                self.shards[shard].tenants -= 1;
+                self.retire_if_drained(shard);
+                Response::Admission(AdmissionReply::ok(Some(*session)))
+            }
+            Request::StatsQuery { session: Some(sid) } => {
+                let Some(fs) = self.sessions.get(sid) else {
+                    return unknown_session(*sid);
+                };
+                Response::Stats(StatsReply {
+                    session: Some(*sid),
+                    shard: Some(fs.shard),
+                    rounds_run: fs.session.rounds_run(),
+                    dealt_rounds: fs.session.dealt_rounds(),
+                    admission: fs.session.admission_stats(),
+                    shard_tenants: None,
+                })
+            }
+            Request::StatsQuery { session: None } => {
+                let live: Vec<AdmissionStats> =
+                    self.sessions.values().map(|fs| fs.session.admission_stats()).collect();
+                let mut admission = AdmissionStats::merge_all(live.iter());
+                admission.merge(&self.closed_admission);
+                let rounds_run = self.closed_rounds_run
+                    + self.sessions.values().map(|fs| fs.session.rounds_run()).sum::<u64>();
+                let dealt_rounds = self.closed_dealt
+                    + self.sessions.values().map(|fs| fs.session.dealt_rounds()).sum::<u64>();
+                Response::Stats(StatsReply {
+                    session: None,
+                    shard: None,
+                    rounds_run,
+                    dealt_rounds,
+                    admission,
+                    shard_tenants: Some(self.shard_tenants()),
+                })
+            }
+            // The frontend just acks; stopping the accept loop is the
+            // transport layer's job (see `service::server`).
+            Request::Shutdown => Response::Admission(AdmissionReply::ok(None)),
+        }
+    }
+}
+
+fn unknown_session(sid: u64) -> Response {
+    Response::Admission(AdmissionReply::denied(
+        Some(sid),
+        AdmissionError::Rejected { reason: format!("unknown session {sid}") },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::TiePolicy;
+    use crate::protocol::plain_hierarchical_vote;
+    use crate::util::rng::{Rng, Xoshiro256pp};
+
+    fn open(fe: &mut AggFrontend, cfg: HiSafeConfig, d: usize, seed: u64) -> u64 {
+        match fe.handle(&Request::SessionOpen { cfg, d, seed, qos: QosPolicy::unlimited() }) {
+            Response::Admission(AdmissionReply { session: Some(sid), error: None }) => sid,
+            other => panic!("expected a session grant, got {other:?}"),
+        }
+    }
+
+    fn rand_signs(n: usize, d: usize, seed: u64) -> Vec<Vec<i8>> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect()
+    }
+
+    /// 2k synthetic tenant keys for the placement-distribution tests
+    /// (enough that a ±20% balance bound sits ≥ 4.5σ from the binomial
+    /// mean — the fixed seed makes the test deterministic, the margin
+    /// makes the fixed draw virtually certain to be a typical one).
+    fn synthetic_keys() -> Vec<u64> {
+        let mut rng = Xoshiro256pp::seed_from_u64(0x5a4d);
+        (0..2000)
+            .map(|i| {
+                let cfg = HiSafeConfig::hierarchical(
+                    6 * (1 + (i % 4)),
+                    1 + (i % 4),
+                    if i % 2 == 0 { TiePolicy::OneBit } else { TiePolicy::TwoBit },
+                );
+                tenant_key(&cfg, 64 + i, rng.next_u64())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rendezvous_rank_is_deterministic_and_a_permutation() {
+        for key in [0u64, 1, 0xdead_beef, u64::MAX] {
+            for shards in [1usize, 2, 7, 16] {
+                let a = rendezvous_rank(key, shards);
+                let b = rendezvous_rank(key, shards);
+                assert_eq!(a, b, "same key must rank identically");
+                let mut sorted = a.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..shards).collect::<Vec<_>>(), "must be a permutation");
+            }
+        }
+    }
+
+    #[test]
+    fn rendezvous_balances_synthetic_tenants_within_20pct() {
+        let keys = synthetic_keys();
+        for shards in [4usize, 5] {
+            let mut counts = vec![0usize; shards];
+            for &key in &keys {
+                counts[rendezvous_rank(key, shards)[0]] += 1;
+            }
+            let expect = keys.len() / shards;
+            for (i, &c) in counts.iter().enumerate() {
+                assert!(
+                    (c as f64) >= expect as f64 * 0.8 && (c as f64) <= expect as f64 * 1.2,
+                    "shard {i}/{shards} got {c} of {} tenants (expected {expect} +/- 20%)",
+                    keys.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rendezvous_is_stable_under_shard_count_change() {
+        // Growing K -> K+1 must move only the ~1/(K+1) of keys whose
+        // winner is the NEW shard — and every moved key must move to it.
+        let keys = synthetic_keys();
+        for k in [4usize, 8] {
+            let mut moved = 0usize;
+            for &key in &keys {
+                let before = rendezvous_rank(key, k)[0];
+                let after = rendezvous_rank(key, k + 1)[0];
+                if before != after {
+                    moved += 1;
+                    assert_eq!(
+                        after, k,
+                        "key {key:#x}: grew {k}->{} but moved to old shard {after}",
+                        k + 1
+                    );
+                }
+            }
+            let expect = keys.len() / (k + 1);
+            assert!(
+                moved <= expect * 2 && moved >= expect / 2,
+                "K={k}: {moved} of {} keys moved (expected ~{expect})",
+                keys.len()
+            );
+            // Shrinking is the same statement read backwards: keys on
+            // surviving shards stay put. (Already implied, but state it.)
+            for &key in keys.iter().take(50) {
+                let big = rendezvous_rank(key, k + 1)[0];
+                if big != k {
+                    assert_eq!(rendezvous_rank(key, k)[0], big);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frontend_votes_match_plain_reference_across_shards() {
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut fe = AggFrontend::new(3, 1);
+        let sids: Vec<u64> = (0..4).map(|i| open(&mut fe, cfg, 5, 100 + i)).collect();
+        assert_eq!(fe.live_sessions(), 4);
+        for r in 0..2u64 {
+            for (i, &sid) in sids.iter().enumerate() {
+                let signs = rand_signs(6, 5, 7 + r * 10 + i as u64);
+                match fe.handle(&Request::RoundSubmit { session: sid, signs: signs.clone() }) {
+                    Response::Vote(v) => {
+                        assert_eq!(v.global_vote, plain_hierarchical_vote(&signs, cfg));
+                        assert_eq!(v.session, sid);
+                    }
+                    other => panic!("expected a vote, got {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_session_shapes_are_rejected_not_panics() {
+        // A wire SessionOpen with a config the engine would assert on
+        // (ell = 0, ell not dividing n, n = 0) — or absurd sizes — must
+        // be a typed rejection. A panic here would poison the server's
+        // frontend mutex and kill every live session.
+        let mut fe = AggFrontend::new(2, 1);
+        let ok = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        for (cfg, d) in [
+            (HiSafeConfig { ell: 0, ..ok }, 4),                  // ell = 0
+            (HiSafeConfig { n: 5, ell: 2, ..ok }, 4),            // ell does not divide n
+            (HiSafeConfig { n: 0, ell: 1, ..ok }, 4),            // no users
+            (HiSafeConfig { n: MAX_USERS + 1, ell: 1, ..ok }, 4), // over the user cap
+            (ok, 0),                                             // d = 0
+            (ok, MAX_DIM + 1),                                   // over the dim cap
+        ] {
+            match fe.handle(&Request::SessionOpen { cfg, d, seed: 1, qos: QosPolicy::unlimited() })
+            {
+                Response::Admission(AdmissionReply {
+                    error: Some(AdmissionError::Rejected { .. }),
+                    ..
+                }) => {}
+                other => panic!("cfg={cfg:?} d={d} must be rejected, got {other:?}"),
+            }
+        }
+        assert_eq!(fe.live_sessions(), 0);
+        // Oversized prefetch requests are capped per call, not executed.
+        let sid = open(&mut fe, ok, 5, 1);
+        match fe.handle(&Request::Prefetch { session: sid, rounds: MAX_PREFETCH_ROUNDS + 1 }) {
+            Response::Admission(AdmissionReply {
+                error: Some(AdmissionError::Rejected { reason }),
+                ..
+            }) => assert!(reason.contains("service cap"), "reason: {reason}"),
+            other => panic!("expected a prefetch cap rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_round_shapes_are_rejected_not_panics() {
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut fe = AggFrontend::new(1, 1);
+        let sid = open(&mut fe, cfg, 5, 1);
+        // Wrong user count and wrong dimension both come back typed.
+        for signs in [rand_signs(5, 5, 2), rand_signs(6, 4, 3)] {
+            match fe.handle(&Request::RoundSubmit { session: sid, signs }) {
+                Response::Admission(AdmissionReply {
+                    error: Some(AdmissionError::Rejected { reason }),
+                    ..
+                }) => assert!(reason.contains("sign matrix"), "reason: {reason}"),
+                other => panic!("expected a shape rejection, got {other:?}"),
+            }
+        }
+        // Unknown sessions likewise.
+        match fe.handle(&Request::RoundSubmit { session: 999, signs: rand_signs(6, 5, 4) }) {
+            Response::Admission(AdmissionReply {
+                error: Some(AdmissionError::Rejected { reason }),
+                ..
+            }) => assert!(reason.contains("unknown session"), "reason: {reason}"),
+            other => panic!("expected unknown-session, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn capacity_spill_over_prefers_least_loaded_then_rejects_when_full() {
+        let cfg = HiSafeConfig::flat(3, TiePolicy::OneBit);
+        let mut fe = AggFrontend::with_shard_capacity(2, 1, 2);
+        // 4 tenants fill both shards (2 each) regardless of rendezvous
+        // preference, because capacity overflow spills.
+        let _sids: Vec<u64> = (0..4).map(|i| open(&mut fe, cfg, 4, i)).collect();
+        assert_eq!(fe.shard_tenants(), vec![2, 2]);
+        // A 5th tenant has nowhere to go.
+        match fe.handle(&Request::SessionOpen {
+            cfg,
+            d: 4,
+            seed: 99,
+            qos: QosPolicy::unlimited(),
+        }) {
+            Response::Admission(AdmissionReply {
+                error: Some(AdmissionError::Rejected { .. }),
+                ..
+            }) => {}
+            other => panic!("expected rejection at full capacity, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn drain_empties_and_retires_a_shard_then_undrain_restores_it() {
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut fe = AggFrontend::new(2, 1);
+        // Open sessions until both shards hold at least one, remembering
+        // every session's shard.
+        let mut placed: Vec<(u64, usize)> = Vec::new();
+        let mut seed = 0u64;
+        while !(placed.iter().any(|&(_, s)| s == 0) && placed.iter().any(|&(_, s)| s == 1)) {
+            let sid = open(&mut fe, cfg, 5, seed);
+            let shard = match fe.handle(&Request::StatsQuery { session: Some(sid) }) {
+                Response::Stats(s) => s.shard.unwrap(),
+                other => panic!("expected stats, got {other:?}"),
+            };
+            placed.push((sid, shard));
+            seed += 1;
+            assert!(seed < 100, "rendezvous never covered both shards");
+        }
+        let drained = 0usize;
+        fe.drain_shard(drained);
+        assert!(fe.shard_is_live(drained), "live sessions keep the scheduler");
+        // New tenants all land on the surviving shard.
+        for s in 100..104u64 {
+            let sid = open(&mut fe, cfg, 5, s);
+            match fe.handle(&Request::StatsQuery { session: Some(sid) }) {
+                Response::Stats(st) => assert_eq!(st.shard, Some(1)),
+                other => panic!("expected stats, got {other:?}"),
+            }
+        }
+        // The draining shard's sessions still run rounds.
+        let on_drained: Vec<u64> =
+            placed.iter().filter(|&&(_, s)| s == drained).map(|&(sid, _)| sid).collect();
+        let signs = rand_signs(6, 5, 77);
+        match fe.handle(&Request::RoundSubmit { session: on_drained[0], signs: signs.clone() }) {
+            Response::Vote(v) => {
+                assert_eq!(v.global_vote, plain_hierarchical_vote(&signs, cfg))
+            }
+            other => panic!("expected a vote, got {other:?}"),
+        }
+        // Closing its last session retires the shard's scheduler
+        // (threads torn down); until then it stays live.
+        for &sid in &on_drained {
+            assert!(fe.shard_is_live(drained), "retire must wait for the last session");
+            match fe.handle(&Request::SessionClose { session: sid }) {
+                Response::Admission(AdmissionReply { error: None, .. }) => {}
+                other => panic!("expected a close ack, got {other:?}"),
+            }
+        }
+        assert!(!fe.shard_is_live(drained), "drained+empty shard must retire");
+        // Undrain returns it to rotation; infrastructure respawns lazily.
+        fe.undrain_shard(drained);
+        let mut seed = 1000u64;
+        loop {
+            let sid = open(&mut fe, cfg, 5, seed);
+            let shard = match fe.handle(&Request::StatsQuery { session: Some(sid) }) {
+                Response::Stats(s) => s.shard.unwrap(),
+                other => panic!("expected stats, got {other:?}"),
+            };
+            if shard == drained {
+                break;
+            }
+            seed += 1;
+            assert!(seed < 1100, "rendezvous never picked the undrained shard");
+        }
+        assert!(fe.shard_is_live(drained));
+    }
+
+    #[test]
+    fn frontend_stats_merge_across_shards_and_survive_churn() {
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut fe = AggFrontend::new(2, 1);
+        let a = open(&mut fe, cfg, 5, 1);
+        let b = open(&mut fe, cfg, 5, 2);
+        for r in 0..3u64 {
+            for &sid in [a, b].iter() {
+                let signs = rand_signs(6, 5, 50 + r);
+                match fe.handle(&Request::RoundSubmit { session: sid, signs }) {
+                    Response::Vote(_) => {}
+                    other => panic!("expected a vote, got {other:?}"),
+                }
+            }
+        }
+        // Close one session: its counters must fold into the aggregate.
+        fe.handle(&Request::SessionClose { session: a });
+        match fe.handle(&Request::StatsQuery { session: None }) {
+            Response::Stats(s) => {
+                assert_eq!(s.session, None);
+                assert_eq!(s.rounds_run, 6, "3 rounds from each of 2 sessions");
+                assert_eq!(s.admission.admitted_rounds, 6);
+                let tenants = s.shard_tenants.expect("frontend scope lists shards");
+                assert_eq!(tenants.len(), 2);
+                assert_eq!(tenants.iter().sum::<usize>(), 1, "one session still live");
+            }
+            other => panic!("expected stats, got {other:?}"),
+        }
+    }
+}

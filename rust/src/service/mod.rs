@@ -1,0 +1,42 @@
+//! The transport-agnostic service layer: Hi-SAFE aggregation behind a
+//! serializable request/response protocol instead of in-process method
+//! calls.
+//!
+//! Three files, three responsibilities:
+//!
+//! * [`proto`] — the versioned wire protocol: [`Request`] / [`Response`]
+//!   values with lossless JSON encodings ([`QosPolicy`],
+//!   [`AdmissionError`], and [`CommStats`] ride the wire unchanged,
+//!   exactly as PR 4 designed them to).
+//! * [`frontend`] — [`AggFrontend`], the sharded router: `K`
+//!   [`AggScheduler`] shards behind rendezvous-hash tenant placement
+//!   with least-loaded spill-over, plus shard drain/rebalance. The
+//!   frontend speaks *only* the protocol — no caller reaches an engine
+//!   directly.
+//! * [`server`] — the std-only TCP transport: [`ServiceServer`]
+//!   (newline-delimited JSON frames, `hisafe serve`) and the blocking
+//!   [`ServiceClient`] (`hisafe sweep --remote`,
+//!   [`train_remote`](crate::fl::trainer::train_remote)).
+//!
+//! The layering means "remote" is a transport decision, not a protocol
+//! fork: the same [`AggFrontend`] serves in-process embedding (call
+//! [`AggFrontend::handle`] directly) and cross-process TCP, and remote
+//! votes are bit-identical to in-process ones because placement and
+//! transport never touch the seed-derived triple streams
+//! (`rust/tests/service_props.rs` pins `train_remote` ≡ `train` ≡
+//! `run_sync`).
+//!
+//! [`QosPolicy`]: crate::engine::QosPolicy
+//! [`AdmissionError`]: crate::engine::AdmissionError
+//! [`CommStats`]: crate::metrics::CommStats
+//! [`AggScheduler`]: crate::engine::AggScheduler
+
+pub mod frontend;
+pub mod proto;
+pub mod server;
+
+pub use frontend::AggFrontend;
+pub use proto::{
+    AdmissionReply, ProtoError, Request, Response, StatsReply, VoteReply, PROTOCOL_VERSION,
+};
+pub use server::{ServiceClient, ServiceError, ServiceServer};

@@ -1,0 +1,942 @@
+//! The versioned Hi-SAFE wire protocol: every request/response the
+//! service layer speaks, as plain data with a lossless JSON encoding.
+//!
+//! Design rules, in order:
+//!
+//! 1. **Transport-agnostic.** Messages are values ([`Request`],
+//!    [`Response`]) with `to_json` / `from_json` surfaces built on the
+//!    in-house zero-dependency [`crate::util::json`]; nothing in this
+//!    file knows about sockets. [`crate::service::server`] frames them
+//!    as newline-delimited compact JSON over TCP, but any byte pipe
+//!    (pipes, shared memory, an HTTP body) can carry them unchanged.
+//! 2. **Lossless.** [`QosPolicy`], [`AdmissionError`], [`CommStats`],
+//!    and [`AdmissionStats`] round-trip field-for-field, which is what
+//!    lets `train_remote` be bit-identical to in-process `train`:
+//!    * `u64` identifiers (seeds, session ids) and `Duration`s ride as
+//!      **decimal strings** — [`crate::util::json::Json`] numbers are
+//!      `f64`, which cannot represent every `u64` exactly.
+//!    * Counters (round/element counts) ride as JSON numbers; they are
+//!      exact below 2⁵³, far beyond any real run.
+//!    * Sign and vote vectors ride as compact strings over `+`/`-`/`0`
+//!      (one char per coordinate) — ~20x smaller than number arrays at
+//!      model-sized `d`, and trivially lossless over `{-1, 0, +1}`.
+//! 3. **Versioned.** Every message carries `"v":` [`PROTOCOL_VERSION`];
+//!    decoding rejects other versions up front, so schema evolution is
+//!    an explicit version bump instead of silent field drift (the key
+//!    sets themselves are pinned by snapshot tests below).
+//!
+//! The request vocabulary is deliberately the admission-control surface
+//! of [`crate::engine::AggScheduler`] — `SessionOpen` ≈ `try_session`,
+//! `RoundSubmit` ≈ `try_run_round`, `Prefetch` ≈ `try_prefetch` — so
+//! typed backpressure ([`AdmissionError`]) crosses the wire unchanged
+//! and a remote client retries throttles exactly like a local caller.
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::engine::{AdmissionError, QosPolicy};
+use crate::metrics::{AdmissionStats, CommStats};
+use crate::poly::TiePolicy;
+use crate::protocol::HiSafeConfig;
+use crate::util::json::Json;
+
+/// Wire-protocol schema version. Bump on any incompatible change; the
+/// decoder rejects every other version with a typed [`ProtoError`].
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// A message failed to decode (bad version, missing field, wrong type).
+/// Distinct from [`AdmissionError`]: a `ProtoError` means the *bytes*
+/// are wrong, not that the service declined a well-formed request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtoError {
+    /// What was malformed, for logs and error replies.
+    pub msg: String,
+}
+
+impl ProtoError {
+    fn new(msg: impl Into<String>) -> ProtoError {
+        ProtoError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "wire protocol error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// Client → service messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Open a tenant session (the wire form of
+    /// [`AggScheduler::try_session`](crate::engine::AggScheduler::try_session)).
+    /// Placement across scheduler shards is the frontend's decision; the
+    /// reply is an [`AdmissionReply`] carrying the granted session id or
+    /// the typed rejection.
+    SessionOpen {
+        /// Protocol shape (users, subgroups, tie policies).
+        cfg: HiSafeConfig,
+        /// Vote dimension.
+        d: usize,
+        /// Session seed — drives all offline randomness, same derivation
+        /// as every in-process engine, which is what keeps remote votes
+        /// bit-identical.
+        seed: u64,
+        /// Per-tenant QoS, validated at admission like the local path.
+        qos: QosPolicy,
+    },
+    /// Run one aggregation round (the wire form of
+    /// [`AggSession::try_run_round`](crate::engine::AggSession::try_run_round)):
+    /// answered with a [`VoteReply`] on admission or an
+    /// [`AdmissionReply`] carrying `Throttled` for the client to retry.
+    RoundSubmit {
+        /// Session id granted by `SessionOpen`.
+        session: u64,
+        /// `signs[i]` is user `i`'s sign vector over `{-1, 0, +1}`,
+        /// length `d`.
+        signs: Vec<Vec<i8>>,
+    },
+    /// Queue `rounds` rounds of Beaver-triple dealing without blocking
+    /// (the wire form of
+    /// [`AggSession::try_prefetch`](crate::engine::AggSession::try_prefetch)).
+    Prefetch {
+        /// Session id granted by `SessionOpen`.
+        session: u64,
+        /// Rounds of dealing to queue.
+        rounds: usize,
+    },
+    /// Close a session: frees its shard slot immediately and folds its
+    /// admission counters into the frontend-wide aggregate.
+    SessionClose {
+        /// Session id granted by `SessionOpen`.
+        session: u64,
+    },
+    /// Read admission/scheduling counters: for one session
+    /// (`Some(id)`), or frontend-wide (`None` — merged across every
+    /// shard, plus per-shard tenant counts).
+    StatsQuery {
+        /// Session scope, or `None` for the whole frontend.
+        session: Option<u64>,
+    },
+    /// Ask the server process to stop accepting connections and exit
+    /// its serve loop (acknowledged with an empty [`AdmissionReply`]).
+    /// Open sessions are dropped; this is the clean-shutdown path the
+    /// CI smoke test exercises.
+    Shutdown,
+}
+
+/// Service → client messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// A round was admitted and executed.
+    Vote(VoteReply),
+    /// Admission-layer outcome for everything that isn't a vote:
+    /// session grants, prefetch/close acks, and every typed denial.
+    Admission(AdmissionReply),
+    /// Counters for a `StatsQuery`.
+    Stats(StatsReply),
+}
+
+/// One admitted round's outcome — the wire form of
+/// [`EngineOutcome`](crate::engine::EngineOutcome) (no transcripts, like
+/// the in-process engines).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VoteReply {
+    /// Session the round ran on.
+    pub session: u64,
+    /// Global vote per coordinate (`{-1, +1}`, or 0 under inter TwoBit).
+    pub global_vote: Vec<i8>,
+    /// Subgroup votes `s_j` (the Theorem-2 leakage, same as local).
+    pub subgroup_votes: Vec<Vec<i8>>,
+    /// Per-round communication counters, identical to the in-process
+    /// engine's (the wire adds transport bytes, not protocol cost).
+    pub stats: CommStats,
+}
+
+/// Admission-layer outcome: a grant (`session` set, `error` empty), a
+/// plain ack (both empty), or a typed denial (`error` set —
+/// [`AdmissionError`] crossing the wire unchanged, so remote callers
+/// retry `Throttled` exactly like local ones).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionReply {
+    /// Granted/echoed session id, when the request targeted one.
+    pub session: Option<u64>,
+    /// The typed denial, absent on success.
+    pub error: Option<AdmissionError>,
+}
+
+impl AdmissionReply {
+    /// A plain success ack (optionally echoing the session id).
+    pub fn ok(session: Option<u64>) -> AdmissionReply {
+        AdmissionReply { session, error: None }
+    }
+
+    /// A typed denial.
+    pub fn denied(session: Option<u64>, error: AdmissionError) -> AdmissionReply {
+        AdmissionReply { session, error: Some(error) }
+    }
+}
+
+/// Counters for a `StatsQuery`. Session scope fills `session` + `shard`;
+/// frontend scope fills `shard_tenants` (one entry per shard) and merges
+/// `admission` across every live session *and* every closed one (the
+/// frontend keeps a fold of closed sessions' counters), so the aggregate
+/// survives tenant churn.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsReply {
+    /// The queried session, absent for frontend scope.
+    pub session: Option<u64>,
+    /// Shard the session lives on, absent for frontend scope.
+    pub shard: Option<usize>,
+    /// Rounds executed (session scope) or summed over live sessions.
+    pub rounds_run: u64,
+    /// Rounds the provisioning plane dealt (same scoping).
+    pub dealt_rounds: u64,
+    /// Admission counters ([`AdmissionStats::merge_all`] across shards
+    /// for frontend scope).
+    pub admission: AdmissionStats,
+    /// Live tenants per shard, frontend scope only.
+    pub shard_tenants: Option<Vec<usize>>,
+}
+
+// ---------------------------------------------------------------- encode
+
+fn base(msg_type: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("v", PROTOCOL_VERSION).set("type", msg_type);
+    j
+}
+
+/// `u64` as a decimal string — `Json::Num` is `f64` and loses integers
+/// above 2⁵³, and seeds/session ids must survive the wire bit-exactly.
+fn u64_str(x: u64) -> Json {
+    Json::Str(x.to_string())
+}
+
+/// A sign/vote vector as one char per coordinate: `+` / `-` / `0`.
+///
+/// # Panics
+///
+/// On values outside `{-1, 0, +1}` — the engines never produce them, and
+/// a client submitting them has a bug this surfaces loudly.
+fn signs_str(signs: &[i8]) -> Json {
+    let s: String = signs
+        .iter()
+        .map(|&v| match v {
+            1 => '+',
+            -1 => '-',
+            0 => '0',
+            other => panic!("sign values must be in {{-1, 0, +1}}, got {other}"),
+        })
+        .collect();
+    Json::Str(s)
+}
+
+fn qos_json(qos: &QosPolicy) -> Json {
+    let opt_f64 = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+    let mut j = Json::obj();
+    j.set("weight", qos.weight)
+        .set(
+            "queue_depth",
+            qos.queue_depth.map(|d| Json::Num(d as f64)).unwrap_or(Json::Null),
+        )
+        .set("rounds_per_sec", opt_f64(qos.rounds_per_sec))
+        .set("triples_per_sec", opt_f64(qos.triples_per_sec))
+        .set("burst_rounds", Json::Num(qos.burst_rounds));
+    j
+}
+
+fn cfg_json(cfg: &HiSafeConfig) -> Json {
+    let mut j = Json::obj();
+    j.set("n", cfg.n)
+        .set("ell", cfg.ell)
+        .set("intra", cfg.intra.name())
+        .set("inter", cfg.inter.name())
+        .set("sparse", cfg.sparse);
+    j
+}
+
+/// [`AdmissionError`] on the wire: a `kind` tag plus the variant's
+/// payload. `Throttled`'s `Duration` splits into whole seconds (decimal
+/// string, lossless for any `u64`) and subsecond nanos (a number — `u32`
+/// is exact in `f64`).
+fn admission_error_json(e: &AdmissionError) -> Json {
+    let mut j = Json::obj();
+    match e {
+        AdmissionError::Rejected { reason } => {
+            j.set("kind", "rejected").set("reason", reason.clone());
+        }
+        AdmissionError::Throttled { retry_after } => {
+            j.set("kind", "throttled")
+                .set("retry_after_secs", u64_str(retry_after.as_secs()))
+                .set("retry_after_subsec_ns", retry_after.subsec_nanos() as u64);
+        }
+        AdmissionError::QueueFull { depth } => {
+            j.set("kind", "queue_full").set("depth", *depth);
+        }
+    }
+    j
+}
+
+impl Request {
+    /// Encode for the wire. Infallible: every `Request` value has a wire
+    /// form (sign vectors outside `{-1, 0, +1}` panic — see
+    /// [`signs_str`]'s contract).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::SessionOpen { cfg, d, seed, qos } => {
+                let mut j = base("session_open");
+                j.set("cfg", cfg_json(cfg))
+                    .set("d", *d)
+                    .set("seed", u64_str(*seed))
+                    .set("qos", qos_json(qos));
+                j
+            }
+            Request::RoundSubmit { session, signs } => {
+                let mut j = base("round_submit");
+                j.set("session", u64_str(*session)).set(
+                    "signs",
+                    Json::Arr(signs.iter().map(|s| signs_str(s)).collect()),
+                );
+                j
+            }
+            Request::Prefetch { session, rounds } => {
+                let mut j = base("prefetch");
+                j.set("session", u64_str(*session)).set("rounds", *rounds);
+                j
+            }
+            Request::SessionClose { session } => {
+                let mut j = base("session_close");
+                j.set("session", u64_str(*session));
+                j
+            }
+            Request::StatsQuery { session } => {
+                let mut j = base("stats_query");
+                if let Some(sid) = session {
+                    j.set("session", u64_str(*sid));
+                }
+                j
+            }
+            Request::Shutdown => base("shutdown"),
+        }
+    }
+
+    /// Decode from the wire, rejecting unknown versions and message
+    /// types with a [`ProtoError`].
+    pub fn from_json(j: &Json) -> Result<Request, ProtoError> {
+        check_version(j)?;
+        match msg_type(j)? {
+            "session_open" => Ok(Request::SessionOpen {
+                cfg: parse_cfg(field(j, "cfg")?)?,
+                d: parse_usize(j, "d")?,
+                seed: parse_u64_str(j, "seed")?,
+                qos: parse_qos(field(j, "qos")?)?,
+            }),
+            "round_submit" => {
+                let arr = field(j, "signs")?
+                    .as_arr()
+                    .ok_or_else(|| ProtoError::new("'signs' must be an array"))?;
+                let signs = arr
+                    .iter()
+                    .map(parse_signs)
+                    .collect::<Result<Vec<Vec<i8>>, ProtoError>>()?;
+                Ok(Request::RoundSubmit { session: parse_u64_str(j, "session")?, signs })
+            }
+            "prefetch" => Ok(Request::Prefetch {
+                session: parse_u64_str(j, "session")?,
+                rounds: parse_usize(j, "rounds")?,
+            }),
+            "session_close" => {
+                Ok(Request::SessionClose { session: parse_u64_str(j, "session")? })
+            }
+            "stats_query" => Ok(Request::StatsQuery {
+                session: match j.get("session") {
+                    None => None,
+                    Some(_) => Some(parse_u64_str(j, "session")?),
+                },
+            }),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(ProtoError::new(format!("unknown request type '{other}'"))),
+        }
+    }
+}
+
+impl Response {
+    /// Encode for the wire.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Vote(r) => {
+                let mut j = base("vote_reply");
+                j.set("session", u64_str(r.session))
+                    .set("global_vote", signs_str(&r.global_vote))
+                    .set(
+                        "subgroup_votes",
+                        Json::Arr(r.subgroup_votes.iter().map(|s| signs_str(s)).collect()),
+                    )
+                    .set("stats", r.stats.to_json());
+                j
+            }
+            Response::Admission(r) => {
+                let mut j = base("admission_reply");
+                if let Some(sid) = r.session {
+                    j.set("session", u64_str(sid));
+                }
+                if let Some(e) = &r.error {
+                    j.set("error", admission_error_json(e));
+                }
+                j
+            }
+            Response::Stats(r) => {
+                let mut j = base("stats_reply");
+                if let Some(sid) = r.session {
+                    j.set("session", u64_str(sid));
+                }
+                if let Some(shard) = r.shard {
+                    j.set("shard", shard);
+                }
+                j.set("rounds_run", r.rounds_run)
+                    .set("dealt_rounds", r.dealt_rounds)
+                    .set("admission", r.admission.to_json());
+                if let Some(tenants) = &r.shard_tenants {
+                    j.set("shard_tenants", tenants.clone());
+                }
+                j
+            }
+        }
+    }
+
+    /// Decode from the wire, rejecting unknown versions and message
+    /// types with a [`ProtoError`].
+    pub fn from_json(j: &Json) -> Result<Response, ProtoError> {
+        check_version(j)?;
+        match msg_type(j)? {
+            "vote_reply" => {
+                let votes_arr = field(j, "subgroup_votes")?
+                    .as_arr()
+                    .ok_or_else(|| ProtoError::new("'subgroup_votes' must be an array"))?;
+                Ok(Response::Vote(VoteReply {
+                    session: parse_u64_str(j, "session")?,
+                    global_vote: parse_signs(field(j, "global_vote")?)?,
+                    subgroup_votes: votes_arr
+                        .iter()
+                        .map(parse_signs)
+                        .collect::<Result<Vec<Vec<i8>>, ProtoError>>()?,
+                    stats: parse_comm_stats(field(j, "stats")?)?,
+                }))
+            }
+            "admission_reply" => Ok(Response::Admission(AdmissionReply {
+                session: match j.get("session") {
+                    None => None,
+                    Some(_) => Some(parse_u64_str(j, "session")?),
+                },
+                error: match j.get("error") {
+                    None => None,
+                    Some(e) => Some(parse_admission_error(e)?),
+                },
+            })),
+            "stats_reply" => Ok(Response::Stats(StatsReply {
+                session: match j.get("session") {
+                    None => None,
+                    Some(_) => Some(parse_u64_str(j, "session")?),
+                },
+                shard: match j.get("shard") {
+                    None => None,
+                    Some(_) => Some(parse_usize(j, "shard")?),
+                },
+                rounds_run: parse_u64_num(j, "rounds_run")?,
+                dealt_rounds: parse_u64_num(j, "dealt_rounds")?,
+                admission: parse_admission_stats(field(j, "admission")?)?,
+                shard_tenants: match j.get("shard_tenants") {
+                    None => None,
+                    Some(t) => {
+                        let arr = t
+                            .as_arr()
+                            .ok_or_else(|| ProtoError::new("'shard_tenants' must be an array"))?;
+                        Some(
+                            arr.iter()
+                                .map(|v| {
+                                    v.as_usize().ok_or_else(|| {
+                                        ProtoError::new("'shard_tenants' entries must be integers")
+                                    })
+                                })
+                                .collect::<Result<Vec<usize>, ProtoError>>()?,
+                        )
+                    }
+                },
+            })),
+            other => Err(ProtoError::new(format!("unknown response type '{other}'"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- decode
+
+fn check_version(j: &Json) -> Result<(), ProtoError> {
+    match j.get("v").and_then(Json::as_u64) {
+        Some(PROTOCOL_VERSION) => Ok(()),
+        Some(v) => Err(ProtoError::new(format!(
+            "unsupported protocol version {v} (this build speaks {PROTOCOL_VERSION})"
+        ))),
+        None => Err(ProtoError::new("missing protocol version field 'v'")),
+    }
+}
+
+fn msg_type(j: &Json) -> Result<&str, ProtoError> {
+    field(j, "type")?
+        .as_str()
+        .ok_or_else(|| ProtoError::new("'type' must be a string"))
+}
+
+fn field<'a>(j: &'a Json, key: &str) -> Result<&'a Json, ProtoError> {
+    j.get(key).ok_or_else(|| ProtoError::new(format!("missing field '{key}'")))
+}
+
+fn parse_u64_str(j: &Json, key: &str) -> Result<u64, ProtoError> {
+    field(j, key)?
+        .as_str()
+        .and_then(|s| s.parse::<u64>().ok())
+        .ok_or_else(|| ProtoError::new(format!("'{key}' must be a decimal-string u64")))
+}
+
+fn parse_u64_num(j: &Json, key: &str) -> Result<u64, ProtoError> {
+    field(j, key)?
+        .as_u64()
+        .ok_or_else(|| ProtoError::new(format!("'{key}' must be a non-negative integer")))
+}
+
+fn parse_usize(j: &Json, key: &str) -> Result<usize, ProtoError> {
+    parse_u64_num(j, key).map(|x| x as usize)
+}
+
+fn parse_f64(j: &Json, key: &str) -> Result<f64, ProtoError> {
+    field(j, key)?
+        .as_f64()
+        .ok_or_else(|| ProtoError::new(format!("'{key}' must be a number")))
+}
+
+fn parse_opt_f64(j: &Json, key: &str) -> Result<Option<f64>, ProtoError> {
+    match field(j, key)? {
+        Json::Null => Ok(None),
+        Json::Num(x) => Ok(Some(*x)),
+        _ => Err(ProtoError::new(format!("'{key}' must be a number or null"))),
+    }
+}
+
+fn parse_signs(v: &Json) -> Result<Vec<i8>, ProtoError> {
+    let s = v.as_str().ok_or_else(|| ProtoError::new("sign vector must be a string"))?;
+    s.chars()
+        .map(|c| match c {
+            '+' => Ok(1i8),
+            '-' => Ok(-1i8),
+            '0' => Ok(0i8),
+            other => Err(ProtoError::new(format!(
+                "sign vectors are strings over '+', '-', '0'; got {other:?}"
+            ))),
+        })
+        .collect()
+}
+
+fn parse_tie(j: &Json, key: &str) -> Result<TiePolicy, ProtoError> {
+    field(j, key)?
+        .as_str()
+        .and_then(TiePolicy::from_name)
+        .ok_or_else(|| ProtoError::new(format!("'{key}' must be 'one_bit' or 'two_bit'")))
+}
+
+fn parse_cfg(j: &Json) -> Result<HiSafeConfig, ProtoError> {
+    Ok(HiSafeConfig {
+        n: parse_usize(j, "n")?,
+        ell: parse_usize(j, "ell")?,
+        intra: parse_tie(j, "intra")?,
+        inter: parse_tie(j, "inter")?,
+        sparse: field(j, "sparse")?
+            .as_bool()
+            .ok_or_else(|| ProtoError::new("'sparse' must be a bool"))?,
+    })
+}
+
+fn parse_qos(j: &Json) -> Result<QosPolicy, ProtoError> {
+    Ok(QosPolicy {
+        // Reject rather than truncate: a silently wrapped weight would
+        // admit the tenant under a different dealing share than it
+        // asked for (violating the lossless contract above).
+        weight: u32::try_from(parse_u64_num(j, "weight")?)
+            .map_err(|_| ProtoError::new("'weight' must fit in u32"))?,
+        queue_depth: match field(j, "queue_depth")? {
+            Json::Null => None,
+            v => Some(v.as_usize().ok_or_else(|| {
+                ProtoError::new("'queue_depth' must be a non-negative integer or null")
+            })?),
+        },
+        rounds_per_sec: parse_opt_f64(j, "rounds_per_sec")?,
+        triples_per_sec: parse_opt_f64(j, "triples_per_sec")?,
+        burst_rounds: parse_f64(j, "burst_rounds")?,
+    })
+}
+
+fn parse_admission_error(j: &Json) -> Result<AdmissionError, ProtoError> {
+    match field(j, "kind")?.as_str() {
+        Some("rejected") => Ok(AdmissionError::Rejected {
+            reason: field(j, "reason")?
+                .as_str()
+                .ok_or_else(|| ProtoError::new("'reason' must be a string"))?
+                .to_string(),
+        }),
+        Some("throttled") => {
+            let secs = parse_u64_str(j, "retry_after_secs")?;
+            let nanos = parse_u64_num(j, "retry_after_subsec_ns")?;
+            if nanos >= 1_000_000_000 {
+                return Err(ProtoError::new("'retry_after_subsec_ns' must be < 1e9"));
+            }
+            Ok(AdmissionError::Throttled {
+                retry_after: Duration::new(secs, nanos as u32),
+            })
+        }
+        Some("queue_full") => Ok(AdmissionError::QueueFull { depth: parse_usize(j, "depth")? }),
+        _ => Err(ProtoError::new("admission error 'kind' must be rejected|throttled|queue_full")),
+    }
+}
+
+fn parse_comm_stats(j: &Json) -> Result<CommStats, ProtoError> {
+    // The derived c_u_bits / c_t_bits keys in CommStats::to_json are
+    // recomputed from the raw counters on the receiving side.
+    Ok(CommStats {
+        uplink_elems_total: parse_u64_num(j, "uplink_elems_total")?,
+        uplink_elems_per_user: parse_u64_num(j, "uplink_elems_per_user")?,
+        downlink_elems: parse_u64_num(j, "downlink_elems")?,
+        elem_bits: parse_u64_num(j, "elem_bits")? as u32,
+        subrounds: parse_u64_num(j, "subrounds")?,
+        mults: parse_u64_num(j, "mults")?,
+        vote_bits: parse_u64_num(j, "vote_bits")? as u32,
+    })
+}
+
+fn parse_admission_stats(j: &Json) -> Result<AdmissionStats, ProtoError> {
+    Ok(AdmissionStats {
+        admitted_rounds: parse_u64_num(j, "admitted_rounds")?,
+        throttled: parse_u64_num(j, "throttled")?,
+        queue_full: parse_u64_num(j, "queue_full")?,
+        rejected: parse_u64_num(j, "rejected")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert_eq;
+    use crate::util::prop::{forall, Gen};
+
+    fn keys(v: &Json) -> Vec<String> {
+        match v {
+            Json::Obj(m) => m.keys().cloned().collect(),
+            other => panic!("expected object, got {other:?}"),
+        }
+    }
+
+    fn rand_qos(g: &mut Gen) -> QosPolicy {
+        QosPolicy {
+            weight: g.range(1, 9) as u32,
+            queue_depth: if g.bool() { Some(g.usize_range(1, 64)) } else { None },
+            rounds_per_sec: if g.bool() { Some(g.f64() * 100.0 + 0.5) } else { None },
+            triples_per_sec: if g.bool() { Some(g.f64() * 1e6 + 1.0) } else { None },
+            burst_rounds: 1.0 + g.f64() * 7.0,
+        }
+    }
+
+    fn rand_cfg(g: &mut Gen) -> HiSafeConfig {
+        let ell = g.usize_range(1, 4);
+        let n1 = g.usize_range(1, 6);
+        HiSafeConfig {
+            n: ell * n1,
+            ell,
+            intra: if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit },
+            inter: if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit },
+            sparse: g.bool(),
+        }
+    }
+
+    fn rand_sign_matrix(g: &mut Gen, rows: usize, d: usize) -> Vec<Vec<i8>> {
+        (0..rows)
+            .map(|_| {
+                (0..d)
+                    .map(|_| match g.range(0, 2) {
+                        0 => -1i8,
+                        1 => 0i8,
+                        _ => 1i8,
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn rand_admission_error(g: &mut Gen) -> AdmissionError {
+        match g.range(0, 2) {
+            0 => AdmissionError::Rejected {
+                reason: format!("reason \"{}\"\n\t{}", g.u64(), g.u64()),
+            },
+            1 => AdmissionError::Throttled {
+                // Arbitrary u64 seconds: the decimal-string encoding must
+                // carry even absurd durations losslessly.
+                retry_after: Duration::new(g.u64(), g.range(0, 999_999_999) as u32),
+            },
+            _ => AdmissionError::QueueFull { depth: g.usize_range(1, 1 << 20) },
+        }
+    }
+
+    /// Counters ride as JSON numbers — exact below 2⁵³ (documented
+    /// bound; a run would need quadrillions of rounds to exceed it).
+    fn rand_counter(g: &mut Gen) -> u64 {
+        g.range(0, 1 << 53)
+    }
+
+    #[test]
+    fn every_request_round_trips_losslessly() {
+        forall("wire requests round-trip", 60, |g| {
+            let cfg = rand_cfg(g);
+            let d = g.usize_range(0, 40);
+            let req = match g.range(0, 6) {
+                0 => Request::SessionOpen { cfg, d, seed: g.u64(), qos: rand_qos(g) },
+                1 => Request::RoundSubmit {
+                    session: g.u64(),
+                    signs: rand_sign_matrix(g, cfg.n, d),
+                },
+                2 => Request::Prefetch { session: g.u64(), rounds: g.usize_range(0, 1 << 20) },
+                3 => Request::SessionClose { session: g.u64() },
+                4 => Request::StatsQuery {
+                    session: if g.bool() { Some(g.u64()) } else { None },
+                },
+                _ => Request::Shutdown,
+            };
+            let text = req.to_json().to_string_compact();
+            let back = Request::from_json(&crate::util::json::parse(&text).unwrap())
+                .map_err(|e| e.to_string())?;
+            prop_assert_eq!(&back, &req, "wire text: {text}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn every_response_round_trips_losslessly() {
+        forall("wire responses round-trip", 60, |g| {
+            let resp = match g.range(0, 2) {
+                0 => {
+                    let ell = g.usize_range(1, 4);
+                    let d = g.usize_range(0, 40);
+                    Response::Vote(VoteReply {
+                        session: g.u64(),
+                        global_vote: rand_sign_matrix(g, 1, d).remove(0),
+                        subgroup_votes: rand_sign_matrix(g, ell, d),
+                        stats: CommStats {
+                            uplink_elems_total: rand_counter(g),
+                            uplink_elems_per_user: rand_counter(g),
+                            downlink_elems: rand_counter(g),
+                            elem_bits: g.range(1, 64) as u32,
+                            subrounds: rand_counter(g),
+                            mults: rand_counter(g),
+                            vote_bits: g.range(1, 2) as u32,
+                        },
+                    })
+                }
+                1 => Response::Admission(AdmissionReply {
+                    session: if g.bool() { Some(g.u64()) } else { None },
+                    error: if g.bool() { Some(rand_admission_error(g)) } else { None },
+                }),
+                _ => Response::Stats(StatsReply {
+                    session: if g.bool() { Some(g.u64()) } else { None },
+                    shard: if g.bool() { Some(g.usize_range(0, 64)) } else { None },
+                    rounds_run: rand_counter(g),
+                    dealt_rounds: rand_counter(g),
+                    admission: AdmissionStats {
+                        admitted_rounds: rand_counter(g),
+                        throttled: rand_counter(g),
+                        queue_full: rand_counter(g),
+                        rejected: rand_counter(g),
+                    },
+                    shard_tenants: if g.bool() {
+                        Some((0..g.usize_range(0, 8)).map(|_| g.usize_range(0, 99)).collect())
+                    } else {
+                        None
+                    },
+                }),
+            };
+            let text = resp.to_json().to_string_compact();
+            let back = Response::from_json(&crate::util::json::parse(&text).unwrap())
+                .map_err(|e| e.to_string())?;
+            prop_assert_eq!(&back, &resp, "wire text: {text}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qos_policy_round_trips_including_fractional_rates() {
+        forall("QosPolicy wire round-trip", 120, |g| {
+            let qos = rand_qos(g);
+            let text = qos_json(&qos).to_string_compact();
+            let back = parse_qos(&crate::util::json::parse(&text).unwrap())
+                .map_err(|e| e.to_string())?;
+            prop_assert_eq!(&back, &qos, "wire text: {text}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn version_and_type_gates_reject_foreign_messages() {
+        // Wrong version: a v2 sender must be refused, not half-parsed.
+        let mut j = Request::Shutdown.to_json();
+        j.set("v", 2u64);
+        let err = Request::from_json(&j).unwrap_err();
+        assert!(err.msg.contains("version"), "got: {err}");
+        // Missing version.
+        let j = crate::util::json::parse(r#"{"type":"shutdown"}"#).unwrap();
+        assert!(Request::from_json(&j).is_err());
+        // Unknown type.
+        let j = crate::util::json::parse(r#"{"v":1,"type":"frobnicate"}"#).unwrap();
+        assert!(Request::from_json(&j).is_err());
+        // Responses are gated the same way.
+        let j = crate::util::json::parse(r#"{"v":9,"type":"vote_reply"}"#).unwrap();
+        assert!(Response::from_json(&j).is_err());
+        // Malformed sign characters are a decode error, not a panic.
+        let j = crate::util::json::parse(
+            r#"{"v":1,"type":"round_submit","session":"0","signs":["+x-"]}"#,
+        )
+        .unwrap();
+        assert!(Request::from_json(&j).is_err());
+        // A weight that overflows u32 is rejected, never truncated (a
+        // wrapped weight would admit under the wrong dealing share).
+        let too_big = (u32::MAX as u64) + 2; // would truncate to 1
+        let j = crate::util::json::parse(&format!(
+            r#"{{"burst_rounds":1,"queue_depth":null,"rounds_per_sec":null,"triples_per_sec":null,"weight":{too_big}}}"#,
+        ))
+        .unwrap();
+        let err = parse_qos(&j).unwrap_err();
+        assert!(err.msg.contains("weight"), "got: {err}");
+    }
+
+    /// Schema snapshots: the exact key set of every wire message, so the
+    /// protocol cannot drift without a conscious update here (and a
+    /// version bump when the change is incompatible). Keys are listed
+    /// sorted (BTreeMap order), same pattern as the CommStats /
+    /// AdmissionStats snapshots in `metrics.rs`.
+    #[test]
+    fn wire_schema_snapshots() {
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let qos = QosPolicy::unlimited().with_queue_depth(4).with_rounds_per_sec(10.0);
+
+        let open = Request::SessionOpen { cfg, d: 3, seed: 7, qos }.to_json();
+        assert_eq!(keys(&open), ["cfg", "d", "qos", "seed", "type", "v"]);
+        assert_eq!(keys(open.get("cfg").unwrap()), ["ell", "inter", "intra", "n", "sparse"]);
+        assert_eq!(
+            keys(open.get("qos").unwrap()),
+            ["burst_rounds", "queue_depth", "rounds_per_sec", "triples_per_sec", "weight"]
+        );
+
+        let submit =
+            Request::RoundSubmit { session: 1, signs: vec![vec![1, -1, 0]] }.to_json();
+        assert_eq!(keys(&submit), ["session", "signs", "type", "v"]);
+
+        assert_eq!(
+            keys(&Request::Prefetch { session: 1, rounds: 2 }.to_json()),
+            ["rounds", "session", "type", "v"]
+        );
+        assert_eq!(
+            keys(&Request::SessionClose { session: 1 }.to_json()),
+            ["session", "type", "v"]
+        );
+        assert_eq!(
+            keys(&Request::StatsQuery { session: Some(1) }.to_json()),
+            ["session", "type", "v"]
+        );
+        assert_eq!(keys(&Request::StatsQuery { session: None }.to_json()), ["type", "v"]);
+        assert_eq!(keys(&Request::Shutdown.to_json()), ["type", "v"]);
+
+        let vote = Response::Vote(VoteReply {
+            session: 1,
+            global_vote: vec![1],
+            subgroup_votes: vec![vec![1], vec![-1]],
+            stats: CommStats::default(),
+        })
+        .to_json();
+        assert_eq!(
+            keys(&vote),
+            ["global_vote", "session", "stats", "subgroup_votes", "type", "v"]
+        );
+        // The embedded stats object is CommStats::to_json — its key set
+        // is pinned by the snapshot in metrics.rs.
+
+        let denial = Response::Admission(AdmissionReply::denied(
+            Some(1),
+            AdmissionError::Throttled { retry_after: Duration::from_millis(5) },
+        ))
+        .to_json();
+        assert_eq!(keys(&denial), ["error", "session", "type", "v"]);
+        assert_eq!(
+            keys(denial.get("error").unwrap()),
+            ["kind", "retry_after_secs", "retry_after_subsec_ns"]
+        );
+        assert_eq!(
+            keys(&Response::Admission(AdmissionReply::ok(None)).to_json()),
+            ["type", "v"]
+        );
+
+        let session_stats = Response::Stats(StatsReply {
+            session: Some(1),
+            shard: Some(0),
+            rounds_run: 2,
+            dealt_rounds: 3,
+            admission: AdmissionStats::default(),
+            shard_tenants: None,
+        })
+        .to_json();
+        assert_eq!(
+            keys(&session_stats),
+            ["admission", "dealt_rounds", "rounds_run", "session", "shard", "type", "v"]
+        );
+        let frontend_stats = Response::Stats(StatsReply {
+            session: None,
+            shard: None,
+            rounds_run: 2,
+            dealt_rounds: 3,
+            admission: AdmissionStats::default(),
+            shard_tenants: Some(vec![1, 0]),
+        })
+        .to_json();
+        assert_eq!(
+            keys(&frontend_stats),
+            ["admission", "dealt_rounds", "rounds_run", "shard_tenants", "type", "v"]
+        );
+    }
+
+    #[test]
+    fn signs_are_compact_strings_not_number_arrays() {
+        // The encoding decision the module doc advertises: one char per
+        // coordinate, so model-sized rounds stay cheap to frame.
+        let req = Request::RoundSubmit { session: 0, signs: vec![vec![1, -1, 0, 1]] };
+        let j = req.to_json();
+        let arr = j.get("signs").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_str().unwrap(), "+-0+");
+    }
+
+    /// Frames are newline-delimited, so compact encodings must never
+    /// contain a raw newline (strings escape them as `\n`).
+    #[test]
+    fn encoded_messages_are_single_line() {
+        let mut m = Json::obj();
+        m.set("a", "x\ny");
+        assert!(!m.to_string_compact().contains('\n'));
+        let req = Request::SessionOpen {
+            cfg: HiSafeConfig::flat(3, TiePolicy::OneBit),
+            d: 2,
+            seed: u64::MAX,
+            qos: QosPolicy::unlimited(),
+        };
+        let line = req.to_json().to_string_compact();
+        assert!(!line.contains('\n'), "frames must stay newline-free: {line}");
+        // And the u64::MAX seed survives exactly (the decimal-string rule).
+        match Request::from_json(&crate::util::json::parse(&line).unwrap()).unwrap() {
+            Request::SessionOpen { seed, .. } => assert_eq!(seed, u64::MAX),
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+}

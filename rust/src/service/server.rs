@@ -1,0 +1,486 @@
+//! A std-only TCP transport for the wire protocol: [`ServiceServer`]
+//! (newline-delimited JSON frames over loopback TCP, one thread per
+//! connection, all connections multiplexed onto one [`AggFrontend`])
+//! and the matching blocking [`ServiceClient`].
+//!
+//! This is deliberately the simplest transport that makes the service
+//! layer *real*: two OS processes can run a genuine client/server
+//! aggregation round today (`hisafe serve` + `hisafe sweep --remote`),
+//! and the protocol work — versioning, lossless encodings, typed
+//! backpressure — lives in [`super::proto`] where any future transport
+//! (HTTP, UDS, shared memory) reuses it unchanged.
+//!
+//! **Framing.** One compact JSON document per line, in both directions.
+//! Compact encodings are newline-free by construction (strings escape
+//! `\n`), so `read_line` is a complete framer. A line that fails to
+//! decode is answered with a typed `Rejected` reply carrying the parse
+//! error — a garbage client cannot crash the server.
+//!
+//! **Concurrency.** The frontend sits behind one mutex: requests from
+//! concurrent connections serialize. That is the right first shape —
+//! the engine work *behind* the frontend is already parallel (shards'
+//! worker pools and dealing planes), and a round's mutex hold time is
+//! the online-phase latency the `sched_remote` bench measures. The
+//! mutex is the documented scaling boundary a future PR can split
+//! per-shard.
+//!
+//! **Shutdown.** A [`Request::Shutdown`] acks, then stops the accept
+//! loop (waking it with a loopback self-connection), and
+//! [`ServiceServer::serve`] returns cleanly — the CI smoke test drives
+//! exactly this path and asserts the process exits 0.
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::engine::{AdmissionError, QosPolicy};
+use crate::protocol::HiSafeConfig;
+use crate::util::json::{parse, Json};
+
+use super::frontend::AggFrontend;
+use super::proto::{AdmissionReply, ProtoError, Request, Response, StatsReply, VoteReply};
+
+/// Everything a service call can fail with, client-side.
+#[derive(Debug)]
+pub enum ServiceError {
+    /// The transport failed (connect, read, write, peer hung up).
+    Io(io::Error),
+    /// The peer sent bytes the protocol layer rejects.
+    Proto(ProtoError),
+    /// The service answered with typed backpressure. `Throttled` is
+    /// retryable (see [`ServiceClient::run_round_admitted`]); the rest
+    /// are not.
+    Denied(AdmissionError),
+    /// The reply decoded fine but wasn't the kind this call expects.
+    Unexpected(String),
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Io(e) => write!(f, "service transport error: {e}"),
+            ServiceError::Proto(e) => write!(f, "{e}"),
+            ServiceError::Denied(e) => write!(f, "service denied request: {e}"),
+            ServiceError::Unexpected(msg) => write!(f, "unexpected reply: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+impl From<io::Error> for ServiceError {
+    fn from(e: io::Error) -> ServiceError {
+        ServiceError::Io(e)
+    }
+}
+
+impl From<ProtoError> for ServiceError {
+    fn from(e: ProtoError) -> ServiceError {
+        ServiceError::Proto(e)
+    }
+}
+
+/// The TCP service: a bound listener plus the shared [`AggFrontend`]
+/// every connection talks to.
+pub struct ServiceServer {
+    listener: TcpListener,
+    frontend: Arc<Mutex<AggFrontend>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ServiceServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) over a
+    /// fresh frontend. The listener is live when this returns — clients
+    /// may connect before [`serve`](ServiceServer::serve) is called and
+    /// their connections queue in the accept backlog.
+    pub fn bind(addr: &str, frontend: AggFrontend) -> io::Result<ServiceServer> {
+        Ok(ServiceServer {
+            listener: TcpListener::bind(addr)?,
+            frontend: Arc::new(Mutex::new(frontend)),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound address (resolves the actual port after `":0"` binds).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept-and-dispatch until a client sends `Shutdown`. Each
+    /// connection gets its own thread; per-connection threads outlive
+    /// `serve` only as long as their sockets do (they exit on EOF /
+    /// error), and the shared frontend stays alive through its `Arc`
+    /// until the last one finishes.
+    pub fn serve(self) -> io::Result<()> {
+        let addr = self.listener.local_addr()?;
+        loop {
+            let stream = match self.listener.accept() {
+                Ok((stream, _)) => stream,
+                // Transient, per-connection accept failures (peer reset
+                // before we accepted, interrupted syscall) must not
+                // bring down every live session on the other
+                // connections; only listener-fatal errors end the loop.
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::ConnectionAborted
+                            | io::ErrorKind::ConnectionReset
+                            | io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            if self.stop.load(Ordering::SeqCst) {
+                // Woken by the shutdown self-connection (or raced by a
+                // late client): stop accepting.
+                return Ok(());
+            }
+            let frontend = Arc::clone(&self.frontend);
+            let stop = Arc::clone(&self.stop);
+            std::thread::spawn(move || serve_connection(stream, addr, frontend, stop));
+        }
+    }
+}
+
+/// One connection's request loop. Runs on its own thread; returns (and
+/// drops the socket) on EOF, I/O error, or after acking a `Shutdown`.
+fn serve_connection(
+    stream: TcpStream,
+    server_addr: SocketAddr,
+    frontend: Arc<Mutex<AggFrontend>>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // EOF: client done.
+            Ok(_) => {}
+            Err(_) => return,
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (reply, shutdown) = match decode_request(&line) {
+            Ok(Request::Shutdown) => (Response::Admission(AdmissionReply::ok(None)), true),
+            Ok(req) => {
+                let mut fe = frontend.lock().expect("frontend mutex poisoned");
+                (fe.handle(&req), false)
+            }
+            // Malformed bytes get a typed reply, not a dropped
+            // connection — and certainly not a server panic.
+            Err(e) => (
+                Response::Admission(AdmissionReply::denied(
+                    None,
+                    AdmissionError::Rejected { reason: e.msg },
+                )),
+                false,
+            ),
+        };
+        let mut out = reply.to_json().to_string_compact();
+        out.push('\n');
+        if writer.write_all(out.as_bytes()).is_err() || writer.flush().is_err() {
+            return;
+        }
+        if shutdown {
+            stop.store(true, Ordering::SeqCst);
+            // Wake the accept loop so `serve` observes the flag and
+            // returns. The dummy connection is closed immediately.
+            let _ = TcpStream::connect(server_addr);
+            return;
+        }
+    }
+}
+
+/// A request as one newline-terminated compact-JSON frame.
+fn encode_frame(req: &Request) -> String {
+    let mut line = req.to_json().to_string_compact();
+    line.push('\n');
+    line
+}
+
+fn decode_request(line: &str) -> Result<Request, ProtoError> {
+    let j: Json =
+        parse(line.trim_end()).map_err(|e| ProtoError { msg: format!("bad frame: {e}") })?;
+    Request::from_json(&j)
+}
+
+/// Blocking wire-protocol client: one TCP connection, synchronous
+/// request/reply. Mirrors the in-process session surface —
+/// [`open_session`](ServiceClient::open_session) ≈ `try_session`,
+/// [`submit_round`](ServiceClient::submit_round) ≈ `try_run_round`,
+/// [`run_round_admitted`](ServiceClient::run_round_admitted) ≈ the
+/// scheduler's throttle-retry loop — so swapping a local engine for a
+/// remote one is a transport decision, not a rewrite (that is what
+/// `fl::trainer::train_remote` does).
+pub struct ServiceClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl ServiceClient {
+    /// Connect to a [`ServiceServer`] at `addr` (e.g. `"127.0.0.1:7433"`).
+    pub fn connect(addr: &str) -> io::Result<ServiceClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let writer = stream.try_clone()?;
+        Ok(ServiceClient { reader: BufReader::new(stream), writer })
+    }
+
+    /// One raw request/reply exchange. The typed helpers below are
+    /// usually what callers want.
+    pub fn call(&mut self, req: &Request) -> Result<Response, ServiceError> {
+        self.exchange(&encode_frame(req))
+    }
+
+    /// Send one pre-encoded frame and decode its reply — split from
+    /// [`call`](ServiceClient::call) so retry loops can encode a large
+    /// request once and resend the same bytes.
+    fn exchange(&mut self, frame: &str) -> Result<Response, ServiceError> {
+        self.writer.write_all(frame.as_bytes())?;
+        self.writer.flush()?;
+        let mut reply = String::new();
+        if self.reader.read_line(&mut reply)? == 0 {
+            return Err(ServiceError::Io(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            )));
+        }
+        let j = parse(reply.trim_end())
+            .map_err(|e| ServiceError::Proto(ProtoError { msg: format!("bad frame: {e}") }))?;
+        Ok(Response::from_json(&j)?)
+    }
+
+    /// Open a tenant session; returns the granted session id.
+    /// Admission rejections surface as [`ServiceError::Denied`].
+    pub fn open_session(
+        &mut self,
+        cfg: HiSafeConfig,
+        d: usize,
+        seed: u64,
+        qos: QosPolicy,
+    ) -> Result<u64, ServiceError> {
+        match self.call(&Request::SessionOpen { cfg, d, seed, qos })? {
+            Response::Admission(AdmissionReply { session: Some(sid), error: None }) => Ok(sid),
+            Response::Admission(AdmissionReply { error: Some(e), .. }) => {
+                Err(ServiceError::Denied(e))
+            }
+            other => Err(ServiceError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Submit one round. A throttle (or any other denial) comes back as
+    /// [`ServiceError::Denied`] — use
+    /// [`run_round_admitted`](ServiceClient::run_round_admitted) to
+    /// retry throttles automatically.
+    pub fn submit_round(
+        &mut self,
+        session: u64,
+        signs: &[Vec<i8>],
+    ) -> Result<VoteReply, ServiceError> {
+        let req = Request::RoundSubmit { session, signs: signs.to_vec() };
+        Self::vote_reply(self.call(&req)?)
+    }
+
+    fn vote_reply(resp: Response) -> Result<VoteReply, ServiceError> {
+        match resp {
+            Response::Vote(v) => Ok(v),
+            Response::Admission(AdmissionReply { error: Some(e), .. }) => {
+                Err(ServiceError::Denied(e))
+            }
+            other => Err(ServiceError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Interpret a reply that should be a bare admission ack.
+    fn ack_reply(resp: Response) -> Result<(), ServiceError> {
+        match resp {
+            Response::Admission(AdmissionReply { error: None, .. }) => Ok(()),
+            Response::Admission(AdmissionReply { error: Some(e), .. }) => {
+                Err(ServiceError::Denied(e))
+            }
+            other => Err(ServiceError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Blocking submit-with-retry: waits out `Throttled` denials
+    /// (sleeping roughly `retry_after`, clamped to [50 µs, 20 ms] — the
+    /// same loop `AggSession::run_round_admitted` runs in-process, now
+    /// with the denial crossing the wire each time). Returns the vote,
+    /// the number of denials eaten, and the total time slept.
+    pub fn run_round_admitted(
+        &mut self,
+        session: u64,
+        signs: &[Vec<i8>],
+    ) -> Result<(VoteReply, u64, Duration), ServiceError> {
+        // Encode once: the sign matrix dominates the frame at model
+        // sizes and never changes across throttle retries, so retries
+        // resend the same bytes instead of re-cloning + re-encoding.
+        let frame = encode_frame(&Request::RoundSubmit { session, signs: signs.to_vec() });
+        let mut denials = 0u64;
+        let mut waited = Duration::ZERO;
+        loop {
+            match Self::vote_reply(self.exchange(&frame)?) {
+                Ok(v) => return Ok((v, denials, waited)),
+                Err(ServiceError::Denied(AdmissionError::Throttled { retry_after })) => {
+                    denials += 1;
+                    let wait =
+                        retry_after.clamp(Duration::from_micros(50), Duration::from_millis(20));
+                    waited += wait;
+                    std::thread::sleep(wait);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Queue `rounds` rounds of triple dealing on the session's shard
+    /// (the wire form of `try_prefetch`).
+    pub fn prefetch(&mut self, session: u64, rounds: usize) -> Result<(), ServiceError> {
+        Self::ack_reply(self.call(&Request::Prefetch { session, rounds })?)
+    }
+
+    /// Close a session, freeing its shard slot.
+    pub fn close_session(&mut self, session: u64) -> Result<(), ServiceError> {
+        Self::ack_reply(self.call(&Request::SessionClose { session })?)
+    }
+
+    /// Read counters for one session (`Some(id)`) or the whole frontend
+    /// (`None`).
+    pub fn stats(&mut self, session: Option<u64>) -> Result<StatsReply, ServiceError> {
+        match self.call(&Request::StatsQuery { session })? {
+            Response::Stats(s) => Ok(s),
+            Response::Admission(AdmissionReply { error: Some(e), .. }) => {
+                Err(ServiceError::Denied(e))
+            }
+            other => Err(ServiceError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Ask the server to stop accepting and exit its serve loop.
+    pub fn shutdown(&mut self) -> Result<(), ServiceError> {
+        Self::ack_reply(self.call(&Request::Shutdown)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::TiePolicy;
+    use crate::protocol::plain_hierarchical_vote;
+    use crate::util::rng::{Rng, Xoshiro256pp};
+
+    fn rand_signs(n: usize, d: usize, seed: u64) -> Vec<Vec<i8>> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect()
+    }
+
+    /// Spawn a server on an ephemeral port; returns its address and the
+    /// serve-loop handle (joined to assert clean shutdown).
+    fn spawn_server(frontend: AggFrontend) -> (String, std::thread::JoinHandle<io::Result<()>>) {
+        let server = ServiceServer::bind("127.0.0.1:0", frontend).expect("bind loopback");
+        let addr = server.local_addr().expect("bound addr").to_string();
+        let handle = std::thread::spawn(move || server.serve());
+        (addr, handle)
+    }
+
+    #[test]
+    fn full_session_lifecycle_over_loopback_tcp() {
+        let (addr, server) = spawn_server(AggFrontend::new(2, 1));
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut client = ServiceClient::connect(&addr).expect("connect");
+
+        let sid = client.open_session(cfg, 5, 7, QosPolicy::unlimited()).expect("admitted");
+        client.prefetch(sid, 2).expect("prefetch admitted");
+        for r in 0..3u64 {
+            let signs = rand_signs(6, 5, 40 + r);
+            let vote = client.submit_round(sid, &signs).expect("round admitted");
+            assert_eq!(vote.global_vote, plain_hierarchical_vote(&signs, cfg));
+            assert_eq!(vote.session, sid);
+            assert!(vote.stats.mults > 0);
+        }
+        let stats = client.stats(Some(sid)).expect("session stats");
+        assert_eq!(stats.session, Some(sid));
+        assert_eq!(stats.rounds_run, 3);
+        assert_eq!(stats.admission.admitted_rounds, 3);
+        client.close_session(sid).expect("close acked");
+        // Closed sessions are unknown afterwards.
+        match client.stats(Some(sid)) {
+            Err(ServiceError::Denied(AdmissionError::Rejected { reason })) => {
+                assert!(reason.contains("unknown session"), "reason: {reason}")
+            }
+            other => panic!("expected unknown-session, got {other:?}"),
+        }
+        // Frontend-wide stats survive the close.
+        let fe_stats = client.stats(None).expect("frontend stats");
+        assert_eq!(fe_stats.rounds_run, 3);
+        assert_eq!(fe_stats.shard_tenants, Some(vec![0, 0]));
+
+        client.shutdown().expect("shutdown acked");
+        server.join().expect("serve thread").expect("clean shutdown");
+    }
+
+    #[test]
+    fn malformed_frames_get_typed_replies_not_disconnects() {
+        let (addr, server) = spawn_server(AggFrontend::new(1, 1));
+        let stream = TcpStream::connect(&addr).expect("connect");
+        let mut writer = stream.try_clone().expect("clone");
+        let mut reader = BufReader::new(stream);
+        let mut reply = String::new();
+
+        // Garbage bytes → typed Rejected reply, connection stays up.
+        writer.write_all(b"this is not json\n").expect("write");
+        reader.read_line(&mut reply).expect("read");
+        let j = parse(reply.trim_end()).expect("reply parses");
+        match Response::from_json(&j).expect("reply decodes") {
+            Response::Admission(AdmissionReply {
+                error: Some(AdmissionError::Rejected { reason }),
+                ..
+            }) => assert!(reason.contains("bad frame"), "reason: {reason}"),
+            other => panic!("expected a frame rejection, got {other:?}"),
+        }
+
+        // Valid JSON with a bad version → typed rejection too.
+        reply.clear();
+        writer.write_all(b"{\"v\":99,\"type\":\"shutdown\"}\n").expect("write");
+        reader.read_line(&mut reply).expect("read");
+        let j = parse(reply.trim_end()).expect("reply parses");
+        match Response::from_json(&j).expect("reply decodes") {
+            Response::Admission(AdmissionReply {
+                error: Some(AdmissionError::Rejected { reason }),
+                ..
+            }) => assert!(reason.contains("version"), "reason: {reason}"),
+            other => panic!("expected a version rejection, got {other:?}"),
+        }
+
+        // The same connection still works for a real request.
+        let mut client = ServiceClient { reader, writer };
+        client.shutdown().expect("shutdown after garbage");
+        server.join().expect("serve thread").expect("clean shutdown");
+    }
+
+    #[test]
+    fn two_clients_share_one_frontend() {
+        let (addr, server) = spawn_server(AggFrontend::new(2, 1));
+        let cfg = HiSafeConfig::flat(3, TiePolicy::OneBit);
+        let mut c1 = ServiceClient::connect(&addr).expect("connect c1");
+        let mut c2 = ServiceClient::connect(&addr).expect("connect c2");
+        let s1 = c1.open_session(cfg, 4, 1, QosPolicy::unlimited()).expect("admitted");
+        let s2 = c2.open_session(cfg, 4, 2, QosPolicy::unlimited()).expect("admitted");
+        assert_ne!(s1, s2, "sessions are distinct frontend-wide");
+        // Each client sees both sessions in the frontend aggregate.
+        let stats = c1.stats(None).expect("frontend stats");
+        assert_eq!(stats.shard_tenants.expect("shards").iter().sum::<usize>(), 2);
+        c1.shutdown().expect("shutdown");
+        server.join().expect("serve thread").expect("clean shutdown");
+    }
+}

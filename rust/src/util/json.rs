@@ -500,4 +500,84 @@ mod tests {
         assert_eq!(parse("-2").unwrap().as_u64(), None);
         assert_eq!(parse("7").unwrap().as_u64(), Some(7));
     }
+
+    /// Random finite value of every shape the writer can emit: huge u64
+    /// casts (exercising both the integer and `Display` write paths
+    /// around the 1e15 cutoff), negatives, fractions, and strings full
+    /// of escapes, control chars, and non-ASCII.
+    fn rand_value(g: &mut crate::util::prop::Gen, depth: usize) -> Json {
+        let kind = if depth == 0 { g.range(0, 3) } else { g.range(0, 5) };
+        match kind {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num(match g.range(0, 3) {
+                // Large u64s: the wire protocol's counters depend on
+                // f64-representable integers surviving exactly.
+                0 => g.u64() as f64,
+                1 => -(g.range(0, 1 << 53) as f64),
+                2 => (g.u64() as f64) / (g.range(1, 1 << 20) as f64),
+                _ => g.range(0, 1 << 53) as f64,
+            }),
+            3 => Json::Str(rand_string(g)),
+            4 => Json::Arr((0..g.usize_range(0, 4)).map(|_| rand_value(g, depth - 1)).collect()),
+            _ => {
+                let mut m = BTreeMap::new();
+                for _ in 0..g.usize_range(0, 4) {
+                    m.insert(rand_string(g), rand_value(g, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+
+    fn rand_string(g: &mut crate::util::prop::Gen) -> String {
+        const POOL: &[char] = &[
+            'a', 'Z', '7', ' ', '"', '\\', '/', '\n', '\r', '\t', '\u{0}', '\u{1}', '\u{1f}',
+            '\u{e9}', '\u{4e2d}', '\u{1f600}', '\u{fffd}',
+        ];
+        (0..g.usize_range(0, 12)).map(|_| POOL[g.usize_range(0, POOL.len() - 1)]).collect()
+    }
+
+    #[test]
+    fn parse_serialize_round_trip_property() {
+        // The wire protocol (src/service/proto.rs) frames every message
+        // through this module, so parse ∘ serialize must be the
+        // identity on everything the writer emits — compact AND pretty,
+        // since configs use pretty and frames use compact.
+        crate::util::prop::forall("json parse∘serialize = id", 300, |g| {
+            let value = rand_value(g, 3);
+            let compact = value.to_string_compact();
+            let from_compact =
+                parse(&compact).map_err(|e| format!("compact reparse failed: {e} on {compact}"))?;
+            crate::prop_assert_eq!(&from_compact, &value, "compact text: {compact}");
+            let pretty = value.to_string_pretty();
+            let from_pretty =
+                parse(&pretty).map_err(|e| format!("pretty reparse failed: {e} on {pretty}"))?;
+            crate::prop_assert_eq!(&from_pretty, &value, "pretty text: {pretty}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn large_u64_num_survives_at_f64_precision() {
+        // Json numbers are f64: integers ≤ 2^53 survive bit-exactly
+        // (and as_u64 recovers them); larger u64s survive at f64
+        // precision — the reason src/service/proto.rs carries ids and
+        // seeds as decimal strings instead.
+        crate::util::prop::forall("u64 ≤ 2^53 round-trips exactly", 200, |g| {
+            let small = g.range(0, 1 << 53);
+            let text = Json::Num(small as f64).to_string_compact();
+            let back = parse(&text).map_err(|e| e.to_string())?;
+            crate::prop_assert_eq!(back.as_u64(), Some(small), "text: {text}");
+            let huge = g.u64();
+            let text = Json::Num(huge as f64).to_string_compact();
+            let back = parse(&text).map_err(|e| e.to_string())?;
+            crate::prop_assert_eq!(
+                back.as_f64(),
+                Some(huge as f64),
+                "f64-level precision lost: {text}"
+            );
+            Ok(())
+        });
+    }
 }

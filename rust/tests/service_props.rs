@@ -1,0 +1,320 @@
+//! Service-layer properties over a **real loopback TCP client/server
+//! pair**: remote rounds and remote training must be bit-identical to
+//! the in-process engines and `run_sync` — across random tenant shapes,
+//! shard counts, interleavings, and QoS throttling (with the
+//! `Throttled` denial crossing the wire and being retried by the
+//! client) — and invalid QoS policies must be the same typed rejection
+//! on the wire path as on the in-process path.
+
+use hisafe::engine::{AdmissionError, AggScheduler, Engine, PipelinedEngine, QosPolicy};
+use hisafe::fl::data::{partition_users, synthetic, DataKind, Partition};
+use hisafe::fl::model::LinearSoftmax;
+use hisafe::fl::trainer::{train, train_remote, Aggregator, FedSpec, TrainConfig};
+use hisafe::poly::TiePolicy;
+use hisafe::protocol::{plain_hierarchical_vote, run_sync, HiSafeConfig};
+use hisafe::service::{AggFrontend, ServiceClient, ServiceError, ServiceServer};
+use hisafe::prop_assert_eq;
+use hisafe::util::prop::{forall, Gen};
+use hisafe::util::rng::Rng;
+
+fn rand_cfg(g: &mut Gen) -> HiSafeConfig {
+    let ell = g.usize_range(1, 3);
+    let n1 = g.usize_range(1, 5);
+    let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+    let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+    HiSafeConfig { n: ell * n1, ell, intra, inter, sparse: g.bool() }
+}
+
+fn rand_order(g: &mut Gen, k: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..k).collect();
+    g.rng().shuffle(&mut order);
+    order
+}
+
+/// Spawn a server on an ephemeral loopback port. The handle is joined
+/// at the end of each test to assert a clean serve-loop exit.
+fn spawn_server(
+    frontend: AggFrontend,
+) -> (String, std::thread::JoinHandle<std::io::Result<()>>) {
+    let server = ServiceServer::bind("127.0.0.1:0", frontend).expect("bind loopback");
+    let addr = server.local_addr().expect("bound addr").to_string();
+    let handle = std::thread::spawn(move || server.serve());
+    (addr, handle)
+}
+
+#[test]
+fn remote_rounds_bit_identical_to_dedicated_engines_and_run_sync() {
+    forall("remote ≡ dedicated ≡ run_sync (interleaved tenants over TCP)", 6, |g| {
+        let shards = g.usize_range(1, 3);
+        let (addr, server) = spawn_server(AggFrontend::new(shards, g.usize_range(1, 2)));
+        let mut client = ServiceClient::connect(&addr).map_err(|e| e.to_string())?;
+
+        struct Tenant {
+            cfg: HiSafeConfig,
+            d: usize,
+            seed: u64,
+            sid: u64,
+            dedicated: PipelinedEngine,
+        }
+        let n_tenants = g.usize_range(2, 4);
+        let mut tenants: Vec<Tenant> = Vec::with_capacity(n_tenants);
+        for _ in 0..n_tenants {
+            let cfg = rand_cfg(g);
+            let d = g.usize_range(1, 24);
+            let seed = g.u64();
+            // Some tenants carry a modest rate budget, so a slice of the
+            // interleaving runs through wire-level Throttled + client
+            // retry (timing decides how often; votes must never care).
+            let qos = if g.bool() {
+                QosPolicy::unlimited().with_rounds_per_sec(200.0)
+            } else {
+                QosPolicy::unlimited()
+            };
+            let sid = client
+                .open_session(cfg, d, seed, qos)
+                .map_err(|e| format!("open_session: {e}"))?;
+            tenants.push(Tenant { cfg, d, seed, sid, dedicated: PipelinedEngine::new(cfg, d, seed) });
+        }
+
+        for round in 0..3u64 {
+            for &ti in &rand_order(g, n_tenants) {
+                let t = &mut tenants[ti];
+                let signs: Vec<Vec<i8>> = (0..t.cfg.n).map(|_| g.sign_vec(t.d)).collect();
+                let (reply, _denials, _waited) = client
+                    .run_round_admitted(t.sid, &signs)
+                    .map_err(|e| format!("round: {e}"))?;
+                let local = t.dedicated.run_round(&signs);
+                let cfg = t.cfg;
+                prop_assert_eq!(
+                    &reply.global_vote,
+                    &local.global_vote,
+                    "tenant {ti} round {round} cfg={cfg:?} vs dedicated"
+                );
+                prop_assert_eq!(
+                    &reply.subgroup_votes,
+                    &local.subgroup_votes,
+                    "tenant {ti} round {round} cfg={cfg:?} vs dedicated"
+                );
+                prop_assert_eq!(&reply.stats, &local.stats, "tenant {ti} round {round}");
+                let reference = run_sync(&signs, cfg, t.seed ^ round);
+                prop_assert_eq!(
+                    &reply.global_vote,
+                    &reference.global_vote,
+                    "tenant {ti} round {round} vs run_sync"
+                );
+                prop_assert_eq!(
+                    &reply.global_vote,
+                    &plain_hierarchical_vote(&signs, cfg),
+                    "tenant {ti} round {round} vs Eq. 8"
+                );
+            }
+        }
+        for t in &tenants {
+            let stats = client.stats(Some(t.sid)).map_err(|e| format!("stats: {e}"))?;
+            prop_assert_eq!(stats.rounds_run, 3u64, "tenant rounds over the wire");
+            prop_assert_eq!(stats.admission.admitted_rounds, 3u64);
+            client.close_session(t.sid).map_err(|e| format!("close: {e}"))?;
+        }
+        client.shutdown().map_err(|e| format!("shutdown: {e}"))?;
+        server
+            .join()
+            .map_err(|_| "serve thread panicked".to_string())?
+            .map_err(|e| format!("serve loop: {e}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn throttled_wire_rounds_are_retried_and_bit_identical() {
+    // Deterministic throttle exercise: a 2 rounds/s budget guarantees
+    // back-to-back rounds are denied, the denial crosses the wire, the
+    // client retries until admitted — and the votes are bit-identical
+    // to a dedicated engine's, because admission decides *when* a round
+    // runs, never what it computes.
+    let (addr, server) = spawn_server(AggFrontend::new(1, 1));
+    let mut client = ServiceClient::connect(&addr).expect("connect");
+    let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+    let (d, seed) = (16usize, 9u64);
+    let sid = client
+        .open_session(cfg, d, seed, QosPolicy::unlimited().with_rounds_per_sec(2.0))
+        .expect("admitted");
+    let mut dedicated = PipelinedEngine::new(cfg, d, seed);
+    let mut rng = hisafe::util::rng::Xoshiro256pp::seed_from_u64(31);
+    let mut total_denials = 0u64;
+    for round in 0..3u64 {
+        let signs: Vec<Vec<i8>> =
+            (0..cfg.n).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect();
+        let (reply, denials, _waited) =
+            client.run_round_admitted(sid, &signs).expect("retried to admission");
+        total_denials += denials;
+        let local = dedicated.run_round(&signs);
+        assert_eq!(reply.global_vote, local.global_vote, "round {round}");
+        assert_eq!(reply.subgroup_votes, local.subgroup_votes, "round {round}");
+        assert_eq!(
+            reply.global_vote,
+            run_sync(&signs, cfg, seed ^ round).global_vote,
+            "round {round} vs run_sync"
+        );
+    }
+    assert!(
+        total_denials >= 1,
+        "a 2 rounds/s budget must throttle back-to-back wire rounds"
+    );
+    let stats = client.stats(Some(sid)).expect("stats");
+    assert_eq!(stats.admission.admitted_rounds, 3);
+    assert_eq!(
+        stats.admission.throttled, total_denials,
+        "client-side retry count must equal server-side throttle count"
+    );
+    client.close_session(sid).expect("close");
+    client.shutdown().expect("shutdown");
+    server.join().expect("serve thread").expect("clean shutdown");
+}
+
+#[test]
+fn train_remote_bit_identical_to_solo_train_for_random_federations() {
+    // The acceptance property: 2–4 random federations driven through
+    // train_remote over loopback TCP (round-robin interleaved on the
+    // shared connection, shards chosen at random, some tenants under a
+    // rate budget that forces wire throttle-retries) must produce
+    // final parameters and accuracies bit-identical to training each
+    // federation alone, in-process.
+    let (tr, te) = synthetic(DataKind::MnistLike, 600, 150, 7);
+    let shards_data = partition_users(&tr, 12, Partition::TwoClass, 7);
+    let m = LinearSoftmax::new(784, 10);
+
+    forall("train_remote ≡ solo train (random federations over TCP)", 2, |g| {
+        let n_feds = g.usize_range(2, 4);
+        let mut cfgs: Vec<(TrainConfig, Aggregator, QosPolicy)> = Vec::with_capacity(n_feds);
+        for _ in 0..n_feds {
+            let ell = [1usize, 2, 3][g.usize_range(0, 2)];
+            let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let agg = Aggregator::HiSafe(HiSafeConfig::hierarchical(6, ell, intra));
+            let tc = TrainConfig {
+                n_users: 12,
+                participants: 6,
+                rounds: g.usize_range(2, 3),
+                lr: 0.002,
+                batch_size: 16,
+                eval_every: 10,
+                seed: g.u64(),
+            };
+            // Half the federations run under a tight-but-generous QoS so
+            // the wire retry loop is exercised without stalling the test.
+            let qos = if g.bool() {
+                QosPolicy::unlimited().with_rounds_per_sec(5000.0).with_queue_depth(2)
+            } else {
+                QosPolicy::unlimited()
+            };
+            cfgs.push((tc, agg, qos));
+        }
+
+        // Solo, in-process reference runs (one private scheduler each).
+        let solo: Vec<_> = cfgs
+            .iter()
+            .map(|(tc, agg, _)| train(&m, &tr, &te, &shards_data, *agg, tc))
+            .collect();
+
+        // The same federations, through a sharded frontend over TCP.
+        let (addr, server) =
+            spawn_server(AggFrontend::new(g.usize_range(1, 3), g.usize_range(1, 2)));
+        let mut client = ServiceClient::connect(&addr).map_err(|e| e.to_string())?;
+        let specs: Vec<_> = cfgs
+            .iter()
+            .map(|(tc, agg, qos)| FedSpec {
+                model: &m,
+                train_ds: &tr,
+                test_ds: &te,
+                shards: &shards_data,
+                agg: *agg,
+                cfg: tc.clone(),
+                qos: *qos,
+            })
+            .collect();
+        let remote = train_remote(&mut client, &specs);
+
+        prop_assert_eq!(remote.len(), solo.len());
+        for (i, (r, s)) in remote.iter().zip(&solo).enumerate() {
+            prop_assert_eq!(&r.final_params, &s.final_params, "federation {i} diverged");
+            prop_assert_eq!(r.final_acc, s.final_acc, "federation {i} accuracy");
+            prop_assert_eq!(r.logs.len(), s.logs.len(), "federation {i} rounds");
+            let adm = r.admission.as_ref().expect("secure run reports admission");
+            prop_assert_eq!(
+                adm.admitted_rounds,
+                cfgs[i].0.rounds as u64,
+                "federation {i} admitted rounds"
+            );
+            // Per-round vote directions agree too (loss/acc curves are
+            // derived from the same params, so spot-check the logs).
+            for (rl, sl) in r.logs.iter().zip(&s.logs) {
+                prop_assert_eq!(rl.train_loss, sl.train_loss, "federation {i} loss curve");
+                prop_assert_eq!(
+                    rl.uplink_bits_per_user, sl.uplink_bits_per_user,
+                    "federation {i} uplink"
+                );
+            }
+        }
+        // train_remote closed every session.
+        let fe_stats = client.stats(None).map_err(|e| e.to_string())?;
+        prop_assert_eq!(
+            fe_stats.shard_tenants.expect("frontend scope").iter().sum::<usize>(),
+            0usize,
+            "sessions must be closed"
+        );
+        client.shutdown().map_err(|e| format!("shutdown: {e}"))?;
+        server
+            .join()
+            .map_err(|_| "serve thread panicked".to_string())?
+            .map_err(|e| format!("serve loop: {e}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn invalid_qos_policies_rejected_identically_on_both_paths() {
+    // Satellite property: weight == 0, zero-capacity rate buckets, and
+    // queue_depth == 0 must be AdmissionError::Rejected — never a panic,
+    // never Throttled — at SessionOpen on BOTH the in-process path and
+    // the wire path, and must leak no tenant slot on either.
+    let sched = AggScheduler::with_threads(1);
+    let (addr, server) = spawn_server(AggFrontend::new(2, 1));
+    let mut client = ServiceClient::connect(&addr).expect("connect");
+
+    forall("invalid QosPolicy ⇒ Rejected on local and wire paths", 40, |g| {
+        let cfg = rand_cfg(g);
+        let d = g.usize_range(1, 8);
+        let qos = match g.range(0, 3) {
+            0 => QosPolicy::unlimited().with_weight(0),
+            1 => QosPolicy::unlimited().with_queue_depth(0),
+            2 => {
+                // Zero-capacity (or negative) token buckets.
+                let rate = if g.bool() { 0.0 } else { -(g.f64() * 10.0) };
+                if g.bool() {
+                    QosPolicy::unlimited().with_rounds_per_sec(rate)
+                } else {
+                    QosPolicy::unlimited().with_triples_per_sec(rate)
+                }
+            }
+            _ => QosPolicy::unlimited().with_burst_rounds(g.f64() * 0.99),
+        };
+        match sched.try_session(cfg, d, g.u64(), qos) {
+            Err(AdmissionError::Rejected { .. }) => {}
+            Err(e) => return Err(format!("local: {qos:?} must be Rejected, got {e:?}")),
+            Ok(_) => return Err(format!("local: {qos:?} must be rejected, was admitted")),
+        }
+        match client.open_session(cfg, d, g.u64(), qos) {
+            Err(ServiceError::Denied(AdmissionError::Rejected { .. })) => {}
+            Err(e) => return Err(format!("wire: {qos:?} must be Rejected, got {e:?}")),
+            Ok(sid) => return Err(format!("wire: {qos:?} must be rejected, got session {sid}")),
+        }
+        prop_assert_eq!(sched.live_tenants(), 0usize, "local slot leaked");
+        Ok(())
+    });
+
+    // No wire-side tenant slot leaked either.
+    let stats = client.stats(None).expect("frontend stats");
+    let live: usize = stats.shard_tenants.expect("frontend scope").iter().sum();
+    assert_eq!(live, 0, "rejected admissions must not leak wire sessions");
+    client.shutdown().expect("shutdown");
+    server.join().expect("serve thread").expect("clean shutdown");
+}
