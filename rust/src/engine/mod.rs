@@ -88,7 +88,9 @@ mod scheduler;
 mod workers;
 
 pub use pipeline::PipelinedEngine;
-pub use scheduler::{AdmissionError, AggScheduler, AggSession, QosPolicy};
+pub use scheduler::{
+    AdmissionError, AggScheduler, AggSession, QosPolicy, SessionId, SessionSnapshot,
+};
 pub use workers::live_engine_threads;
 
 use std::sync::Arc;

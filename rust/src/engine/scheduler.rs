@@ -104,6 +104,81 @@ use super::workers::{
 };
 use super::{analytic_stats, Engine, EngineOutcome, DEFAULT_CHUNK};
 
+/// A scheduler-assigned session (tenant) identifier.
+///
+/// One newtype owns the id everywhere a session crosses a boundary — the
+/// scheduler's tenant registry, the frontend's placement table, the wire
+/// protocol, the balancer's routing map — replacing the raw-`u64`
+/// plumbing that let any counter masquerade as a session. The wire form
+/// is defined *here*, once: [`Display`](fmt::Display) renders the id as
+/// the decimal string the JSON protocol carries (u64s ride as strings
+/// because JSON numbers are f64), and [`FromStr`](std::str::FromStr)
+/// parses exactly that form back.
+///
+/// ```
+/// use hisafe::engine::SessionId;
+///
+/// let sid = SessionId::new(42);
+/// assert_eq!(sid.to_string(), "42");
+/// assert_eq!("42".parse::<SessionId>().unwrap(), sid);
+/// assert_eq!(sid.as_u64(), 42);
+/// ```
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct SessionId(u64);
+
+impl SessionId {
+    /// Wrap a raw id (the scheduler's counter, or a parsed wire value).
+    pub const fn new(raw: u64) -> SessionId {
+        SessionId(raw)
+    }
+
+    /// The raw integer form (for counters and worker-pool job tags).
+    pub const fn as_u64(self) -> u64 {
+        self.0
+    }
+}
+
+impl fmt::Display for SessionId {
+    /// The decimal-string wire form (`proto.rs` serializes ids with it).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::str::FromStr for SessionId {
+    type Err = std::num::ParseIntError;
+
+    fn from_str(s: &str) -> Result<SessionId, Self::Err> {
+        s.parse::<u64>().map(SessionId)
+    }
+}
+
+/// A serializable point-in-time description of an [`AggSession`]:
+/// everything needed to resume the session *bit-identically* on another
+/// scheduler, shard, or host.
+///
+/// `(cfg, d, seed)` pins the per-group triple streams (they are pure
+/// functions of [`group_dealer_seed`]`(seed, g)`), and `rounds` counts
+/// the whole rounds of triples the session has consumed — dealers only
+/// ever advance in whole-round steps, so fast-forwarding fresh dealers
+/// by `rounds` rounds reproduces the stream position exactly.
+/// [`AggScheduler::try_session_resumed`] performs that replay; the
+/// service layer ships this struct over the wire as
+/// `SessionSnapshot`/`SessionRestore` messages.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionSnapshot {
+    /// The protocol configuration the session aggregates for.
+    pub cfg: HiSafeConfig,
+    /// The vote dimension.
+    pub d: usize,
+    /// The seed all offline randomness derives from.
+    pub seed: u64,
+    /// The admission policy the session runs under.
+    pub qos: QosPolicy,
+    /// Whole rounds already consumed (dealer fast-forward distance).
+    pub rounds: u64,
+}
+
 /// Per-tenant quality-of-service policy, fixed at session admission.
 ///
 /// The default ([`QosPolicy::unlimited`]) reproduces the pre-admission
@@ -387,7 +462,7 @@ enum PlaneCmd {
     /// down. `dealt` is the session-shared counter of rounds the plane
     /// has dealt for this tenant (the fairness tests read it).
     Register {
-        sid: u64,
+        sid: SessionId,
         dealers: Vec<Dealer>,
         d: usize,
         n1: usize,
@@ -398,14 +473,14 @@ enum PlaneCmd {
     },
     /// Deal `rounds` more rounds for tenant `sid` (queued; the plane
     /// interleaves tenants by weighted round-robin, one round at a time).
-    Request { sid: u64, rounds: usize },
+    Request { sid: SessionId, rounds: usize },
     /// Tenant is gone; drop its dealers and any queued work.
-    Deregister { sid: u64 },
+    Deregister { sid: SessionId },
 }
 
 /// One tenant's state inside the plane thread.
 struct Tenant {
-    sid: u64,
+    sid: SessionId,
     dealers: Vec<Dealer>,
     d: usize,
     n1: usize,
@@ -679,6 +754,41 @@ impl AggScheduler {
         seed: u64,
         qos: QosPolicy,
     ) -> Result<AggSession, AdmissionError> {
+        self.admit(cfg, d, seed, qos, 0)
+    }
+
+    /// Resume a snapshotted session on *this* scheduler: admission runs
+    /// exactly as [`try_session`](AggScheduler::try_session), then the
+    /// fresh per-group dealers are fast-forwarded by `snap.rounds` whole
+    /// rounds before registration, so the restored session's next round
+    /// consumes precisely the triples round `snap.rounds` of the
+    /// original stream — votes stay bit-identical to an uninterrupted
+    /// session (pinned by `rust/tests/service_props.rs`). The restored
+    /// session reports `rounds_run() == snap.rounds` so round counters
+    /// stay continuous across the handoff.
+    ///
+    /// The replay costs one `gen_round` per skipped round per group;
+    /// prefetched-but-unconsumed triples on the dead host are simply
+    /// regenerated (they were never consumed, so the stream position is
+    /// `rounds`, not `dealt`).
+    pub fn try_session_resumed(
+        &self,
+        snap: &SessionSnapshot,
+    ) -> Result<AggSession, AdmissionError> {
+        self.admit(snap.cfg, snap.d, snap.seed, snap.qos, snap.rounds)
+    }
+
+    /// The shared admission path: validate + reserve a tenant slot,
+    /// build the plan and (possibly fast-forwarded) dealers, register on
+    /// the plane, and hand out the session.
+    fn admit(
+        &self,
+        cfg: HiSafeConfig,
+        d: usize,
+        seed: u64,
+        qos: QosPolicy,
+        resume_rounds: u64,
+    ) -> Result<AggSession, AdmissionError> {
         qos.validate()?;
         if let Some(cap) = self.core.max_tenants {
             // CAS loop: concurrent admitters must not overshoot the cap.
@@ -706,11 +816,22 @@ impl AggScheduler {
         let n1 = cfg.n1();
         let mv = MvPolynomial::build_fermat(n1, cfg.intra);
         let plan = Arc::new(EvalPlan::new(&mv, d, cfg.sparse));
-        let dealers: Vec<Dealer> = (0..cfg.ell)
+        let mults = plan.triples_needed();
+        let mut dealers: Vec<Dealer> = (0..cfg.ell)
             .map(|g| Dealer::new(plan.fp, group_dealer_seed(seed, g)))
             .collect();
-        let mults = plan.triples_needed();
-        let sid = self.core.next_sid.fetch_add(1, Ordering::Relaxed);
+        if resume_rounds > 0 && mults > 0 {
+            // Snapshot replay: advance every group's dealer by the whole
+            // rounds the original session consumed. Dealers only move in
+            // whole-round steps, so this lands each stream exactly where
+            // the interrupted session left it.
+            for dealer in &mut dealers {
+                for _ in 0..resume_rounds {
+                    dealer.gen_round(d, n1, mults);
+                }
+            }
+        }
+        let sid = SessionId::new(self.core.next_sid.fetch_add(1, Ordering::Relaxed));
         let plane_tx = self.core.plane_tx.as_ref().expect("plane open").clone();
         let (dealt_tx, dealt_rx) = channel::<RoundBatch>();
         let dealt = Arc::new(AtomicU64::new(0));
@@ -734,10 +855,15 @@ impl AggScheduler {
         let triple_bucket = qos
             .triples_per_sec
             .map(|r| TokenBucket::new(r, qos.burst_rounds * per_round_triples));
+        // A resumed session's counters continue where the snapshot left
+        // off, so stats reports stay continuous across a failover.
+        let mut admission = AdmissionStats::default();
+        admission.admitted_rounds = resume_rounds;
         let mut session = AggSession {
             sid,
             cfg,
             d,
+            seed,
             plan,
             pools: GroupPools::new(cfg.ell, n1),
             plane_tx,
@@ -747,13 +873,13 @@ impl AggScheduler {
             batch_rounds: 1,
             inflight_rounds: 0,
             chunk: DEFAULT_CHUNK,
-            rounds_run: 0,
+            rounds_run: resume_rounds,
             qos,
             round_bucket,
             triple_bucket,
             charged_rounds: 0,
             bucket_refill_at: Instant::now(),
-            admission: AdmissionStats::default(),
+            admission,
             dealt,
             inflight_jobs: Arc::new(AtomicUsize::new(0)),
             core: Arc::clone(&self.core),
@@ -786,9 +912,12 @@ impl AggScheduler {
 /// with the exact `PipelinedEngine` semantics (which is now a thin
 /// wrapper around a single-tenant session).
 pub struct AggSession {
-    sid: u64,
+    sid: SessionId,
     cfg: HiSafeConfig,
     d: usize,
+    /// The seed all offline randomness derives from — retained so the
+    /// session can be snapshotted for deterministic resume elsewhere.
+    seed: u64,
     plan: Arc<EvalPlan>,
     /// Front buffer: rounds ready to consume (owned per-session).
     pools: GroupPools,
@@ -851,8 +980,27 @@ impl Drop for AggSession {
 impl AggSession {
     /// The session id the scheduler assigned this tenant (diagnostic;
     /// span jobs and results are tagged with it).
-    pub fn id(&self) -> u64 {
+    pub fn id(&self) -> SessionId {
         self.sid
+    }
+
+    /// The seed this session's offline randomness derives from (what a
+    /// [`snapshot`](AggSession::snapshot) carries across hosts).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// A serializable description of this session sufficient to resume
+    /// it bit-identically elsewhere — see [`SessionSnapshot`] and
+    /// [`AggScheduler::try_session_resumed`].
+    pub fn snapshot(&self) -> SessionSnapshot {
+        SessionSnapshot {
+            cfg: self.cfg,
+            d: self.d,
+            seed: self.seed,
+            qos: self.qos,
+            rounds: self.rounds_run,
+        }
     }
 
     /// The QoS policy this session was admitted under.
@@ -1167,7 +1315,7 @@ impl AggSession {
                 self.inflight_jobs.fetch_add(1, Ordering::SeqCst);
                 self.jobs
                     .send(SpanJob {
-                        session: self.sid,
+                        session: self.sid.as_u64(),
                         inflight: Arc::clone(&self.inflight_jobs),
                         fp,
                         plan: Arc::clone(&self.plan),
@@ -1188,7 +1336,7 @@ impl AggSession {
         let mut subgroup_votes: Vec<Vec<i8>> = vec![vec![0i8; d]; groups.len()];
         for _ in 0..slots.len() {
             let (sid, slot, span_votes) = out_rx.recv().expect("span worker alive");
-            assert_eq!(sid, self.sid, "span result crossed sessions");
+            assert_eq!(sid, self.sid.as_u64(), "span result crossed sessions");
             let (g, b, len) = slots[slot];
             subgroup_votes[g][b..b + len].copy_from_slice(&span_votes);
         }
@@ -1299,6 +1447,57 @@ mod tests {
         }
         assert_eq!(a.rounds_run(), 4);
         assert_eq!(b.rounds_run(), 4);
+    }
+
+    #[test]
+    fn snapshot_resume_replays_bit_identically_across_schedulers() {
+        let cfg = HiSafeConfig::hierarchical(12, 4, TiePolicy::OneBit);
+        let (d, seed, rounds) = (33usize, 77u64, 6u64);
+        let signs: Vec<Vec<Vec<i8>>> =
+            (0..rounds).map(|r| rand_signs(12, d, 500 + r)).collect();
+
+        // Uninterrupted reference on its own scheduler.
+        let sched_ref = AggScheduler::with_threads(2);
+        let mut whole = sched_ref.session(cfg, d, seed);
+        let reference: Vec<EngineOutcome> =
+            signs.iter().map(|s| whole.run_round(s)).collect();
+
+        // Interrupted run: snapshot after 3 rounds, resume on a DIFFERENT
+        // scheduler (fresh dealers, fast-forwarded), finish there.
+        let sched_a = AggScheduler::with_threads(1);
+        let mut first = sched_a.session(cfg, d, seed);
+        let mut got: Vec<EngineOutcome> =
+            signs[..3].iter().map(|s| first.run_round(s)).collect();
+        let snap = first.snapshot();
+        assert_eq!(snap.rounds, 3);
+        assert_eq!(snap.seed, seed);
+        drop(first);
+        let sched_b = AggScheduler::with_threads(2);
+        let mut second = sched_b.try_session_resumed(&snap).expect("admitted");
+        assert_eq!(second.rounds_run(), 3);
+        got.extend(signs[3..].iter().map(|s| second.run_round(s)));
+
+        for (r, (a, b)) in reference.iter().zip(&got).enumerate() {
+            assert_eq!(a.global_vote, b.global_vote, "round {r} global vote diverged");
+            assert_eq!(
+                a.subgroup_votes, b.subgroup_votes,
+                "round {r} subgroup votes diverged"
+            );
+        }
+        assert_eq!(second.rounds_run(), rounds);
+        assert_eq!(second.admission_stats().admitted_rounds, rounds);
+    }
+
+    #[test]
+    fn session_id_wire_form_round_trips() {
+        for raw in [0u64, 1, 42, u64::MAX] {
+            let sid = SessionId::new(raw);
+            assert_eq!(sid.to_string(), raw.to_string());
+            let back: SessionId = sid.to_string().parse().expect("decimal form parses");
+            assert_eq!(back, sid);
+            assert_eq!(back.as_u64(), raw);
+        }
+        assert!("not-a-number".parse::<SessionId>().is_err());
     }
 
     #[test]

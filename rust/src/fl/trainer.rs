@@ -39,7 +39,7 @@
 //! shapes scheduling, never trajectories.
 
 use crate::baselines::{dp_signsgd, masking};
-use crate::engine::{AggScheduler, AggSession, QosPolicy};
+use crate::engine::{AggScheduler, AggSession, QosPolicy, SessionId};
 use crate::fl::data::Dataset;
 use crate::fl::model::{sign_vec, Model};
 use crate::metrics::{AdmissionStats, CommStats};
@@ -207,7 +207,7 @@ pub struct FedSpec<'a, M: Model> {
 /// keeps [`train_remote`] trajectories bit-identical to [`train`].
 enum SessionHandle {
     Local(AggSession),
-    Remote { id: u64 },
+    Remote { id: SessionId },
 }
 
 /// The one derivation of a federation's secure-session seed from its

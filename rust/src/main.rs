@@ -10,13 +10,14 @@
 //! hisafe security --n 24 --ell 8     leakage + uniformity analysis
 //! hisafe sweep --tenants 24x8@3,12x4 multi-tenant scheduler sweep (QoS-aware)
 //! hisafe serve --shards 2            sharded aggregation service on loopback TCP
+//! hisafe balance --hosts A:P,B:P     fail-over balancer over several serve hosts
 //! hisafe sweep --remote 127.0.0.1:7433  the same sweep, driven over the wire
 //! hisafe demo                        Appendix-A walkthrough (n=3)
 //! ```
 
 use hisafe::config::{preset, preset_names, ExperimentConfig};
 use hisafe::cost;
-use hisafe::engine::{AggScheduler, QosPolicy};
+use hisafe::engine::{AggScheduler, QosPolicy, SessionId};
 use hisafe::fl::data::{partition_users, synthetic};
 use hisafe::fl::model::{LinearSoftmax, Mlp};
 use hisafe::fl::trainer::{train, TrainConfig, TrainResult};
@@ -24,7 +25,7 @@ use hisafe::metrics::CommStats;
 use hisafe::poly::{MvPolynomial, TiePolicy};
 use hisafe::protocol::{plain_hierarchical_vote, HiSafeConfig};
 use hisafe::security;
-use hisafe::service::{AggFrontend, ServiceClient, ServiceServer, PROTOCOL_VERSION};
+use hisafe::service::{AggFrontend, Balancer, ServiceClient, ServiceServer, PROTOCOL_VERSION};
 use hisafe::util::cli::Args;
 use hisafe::util::json::Json;
 
@@ -46,6 +47,7 @@ fn main() {
         "security" => cmd_security(&args),
         "sweep" => cmd_sweep(&args),
         "serve" => cmd_serve(&args),
+        "balance" => cmd_balance(&args),
         "demo" => cmd_demo(),
         _ => {
             print_help();
@@ -79,8 +81,14 @@ fn print_help() {
                                            the same sweep driven over the wire\n\
                                            against a `hisafe serve` process\n\
            serve [--addr 127.0.0.1:7433] [--shards 2] [--threads 2] [--max-tenants M]\n\
-                                           sharded aggregation service speaking\n\
-                                           newline-delimited JSON over TCP\n\
+                 [--workers W]             sharded aggregation service speaking\n\
+                                           newline-delimited JSON over TCP (W\n\
+                                           bounded connection workers, default 4)\n\
+           balance --hosts A:P,B:P [--addr 127.0.0.1:7432] [--health-ms 250]\n\
+                                           fail-over balancer fronting several\n\
+                                           serve hosts: health checks, dead-host\n\
+                                           detection, snapshot-based session\n\
+                                           fail-over (votes stay bit-identical)\n\
            demo                            Appendix-A walkthrough"
     );
 }
@@ -598,7 +606,7 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
         cfg: HiSafeConfig,
         d: usize,
         weight: u32,
-        sid: u64,
+        sid: SessionId,
         rng: hisafe::util::rng::Xoshiro256pp,
         latencies_ms: Vec<f64>,
         throttle_wait_ms: f64,
@@ -753,7 +761,7 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
 /// request (e.g. `hisafe sweep --remote ADDR --stop-server`).
 fn cmd_serve(args: &Args) -> Result<(), String> {
     args.check_known(&[
-        "addr", "shards", "threads", "max-tenants", "verbose", "threaded", "jax",
+        "addr", "shards", "threads", "max-tenants", "workers", "verbose", "threaded", "jax",
     ])?;
     let addr = args.get_or("addr", "127.0.0.1:7433");
     let shards = args.get_usize("shards", 2)?;
@@ -764,17 +772,22 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if threads == 0 {
         return Err("--threads must be ≥ 1 (span workers per shard)".into());
     }
+    let workers = args.get_usize("workers", 4)?;
+    if workers == 0 {
+        return Err("--workers must be ≥ 1 (connection workers)".into());
+    }
     let max_tenants = args.get_usize("max-tenants", 0)?;
     let frontend = if max_tenants > 0 {
         AggFrontend::with_shard_capacity(shards, threads, max_tenants)
     } else {
         AggFrontend::new(shards, threads)
     };
-    let server = ServiceServer::bind(addr, frontend).map_err(|e| format!("bind {addr}: {e}"))?;
+    let server = ServiceServer::bind_with_workers(addr, frontend, workers)
+        .map_err(|e| format!("bind {addr}: {e}"))?;
     let local = server.local_addr().map_err(|e| e.to_string())?;
     println!(
-        "hisafe service listening on {local} — {shards} shard(s) x {threads} worker(s), \
-         protocol v{PROTOCOL_VERSION}{}",
+        "hisafe service listening on {local} — {shards} shard(s) x {threads} engine worker(s), \
+         {workers} connection worker(s), protocol v{PROTOCOL_VERSION}{}",
         if max_tenants > 0 {
             format!(", max {max_tenants} tenants/shard")
         } else {
@@ -784,6 +797,45 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     println!("stop with: hisafe sweep --remote {local} --stop-server");
     server.serve().map_err(|e| e.to_string())?;
     println!("service stopped cleanly");
+    Ok(())
+}
+
+/// `hisafe balance` — the fail-over balancer: fronts several `hisafe
+/// serve` hosts behind one address speaking the identical wire
+/// protocol. Sessions are placed by rendezvous hashing, health-checked
+/// every `--health-ms`, and transparently restored (bit-identically,
+/// via session snapshots) onto a surviving host when their host dies.
+/// Blocks until a client sends Shutdown, which also winds down every
+/// live backend host.
+fn cmd_balance(args: &Args) -> Result<(), String> {
+    args.check_known(&["addr", "hosts", "health-ms", "verbose", "threaded", "jax"])?;
+    let addr = args.get_or("addr", "127.0.0.1:7432");
+    let hosts: Vec<String> = args
+        .get("hosts")
+        .ok_or("balance needs --hosts HOST:PORT[,HOST:PORT...] (running `hisafe serve` hosts)")?
+        .split(',')
+        .map(|h| h.trim().to_string())
+        .filter(|h| !h.is_empty())
+        .collect();
+    if hosts.is_empty() {
+        return Err("--hosts must list at least one serve host".into());
+    }
+    let health_ms = args.get_u64("health-ms", 250)?;
+    if health_ms == 0 {
+        return Err("--health-ms must be ≥ 1".into());
+    }
+    let bal = Balancer::bind(addr, &hosts, std::time::Duration::from_millis(health_ms))
+        .map_err(|e| format!("bind {addr}: {e}"))?;
+    let local = bal.local_addr().map_err(|e| e.to_string())?;
+    println!(
+        "hisafe balancer listening on {local} — {} backend host(s) [{}], health every {health_ms}ms, \
+         protocol v{PROTOCOL_VERSION}",
+        hosts.len(),
+        hosts.join(", ")
+    );
+    println!("stop the whole cluster with: hisafe sweep --remote {local} --stop-server");
+    bal.serve().map_err(|e| e.to_string())?;
+    println!("balancer stopped cleanly");
     Ok(())
 }
 

@@ -1,0 +1,600 @@
+//! `hisafe balance` — a fail-over load balancer in front of several
+//! `hisafe serve` hosts, making the cluster look like one server.
+//!
+//! The balancer speaks the *same* wire protocol on both sides: clients
+//! talk to it with an ordinary [`ServiceClient`], and it talks to every
+//! backend host with one. No protocol fork, no balancer-specific
+//! messages — the cluster primitive is the `SessionSnapshot` /
+//! `SessionRestore` pair that PR 6 added to [`super::proto`].
+//!
+//! ```text
+//!  tenants ──▶ hisafe balance ──▶ hisafe serve  (host 0: K shards)
+//!                   │       └───▶ hisafe serve  (host 1: K shards)
+//!                   │
+//!             session table: client sid → (host, backend sid, snapshot)
+//! ```
+//!
+//! **Placement.** Tenants are placed on hosts by the same rendezvous
+//! hash the frontend uses for shards ([`rendezvous_rank`] over
+//! [`tenant_key`]), filtered to live hosts — so any number of balancer
+//! processes pointed at the same host list agree on placement without
+//! coordinating.
+//!
+//! **Fail-over.** The balancer tracks, for every session, the exact
+//! [`SessionSnapshot`] a restore needs: the open-time `(cfg, d, seed,
+//! qos)` plus a `rounds` counter incremented **only after a vote has
+//! been returned to the client**. When a backend call fails with a
+//! transport error, the host is marked dead and the session is replayed
+//! onto the next-ranked live host via `SessionRestore`; the in-flight
+//! request is then retried there. Two deterministic consequences:
+//!
+//! * A round whose reply was *lost* (host died after executing it) is
+//!   simply re-run on the new host — same seed-derived triples, same
+//!   round index, bit-identical vote. Duplicated work, never duplicated
+//!   or skipped rounds, exactly because `rounds` counts client-observed
+//!   votes, not submissions.
+//! * Votes across a fail-over are bit-identical to an uninterrupted
+//!   run (`run_sync` ≡ single host ≡ mid-sweep host kill), pinned by
+//!   the tests below and the three-process CI smoke.
+//!
+//! Restores are serialized by a dedicated lock so concurrent requests
+//! hitting the same dead host perform one restore, not a thundering
+//! herd of duplicates.
+//!
+//! **Health.** A background thread pings every host (`StatsQuery` on
+//! the whole frontend) each `health_every`; a dead host that answers
+//! again is revived and returns to the placement rotation. Backend
+//! sessions stranded on a host that died *and later revived* are
+//! orphans (their tenants were restored elsewhere); they are bounded by
+//! the host's tenant caps and closed when the host is next recycled —
+//! the deliberate cost of keeping fail-over state purely client-side.
+//!
+//! **Concurrency.** One persistent backend connection per host (a
+//! mutex serializes requests to that host — matching the per-host
+//! parallelism the backends' shard locks provide), and a plain thread
+//! per *client* connection: the balancer fronts a handful of tenant
+//! driver processes, not thousands of idle sockets, so the bounded
+//! worker pool lives where the fan-in is (the backends, see
+//! [`super::server`]).
+//!
+//! **Shutdown.** A client `Shutdown` is acked, fanned out to every
+//! live backend, and then stops the balancer itself — one command
+//! winds down the whole cluster (the CI smoke asserts every process
+//! exits cleanly).
+
+use std::collections::BTreeMap;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::engine::{AdmissionError, SessionId, SessionSnapshot};
+use crate::metrics::AdmissionStats;
+
+use super::error::Error;
+use super::frontend::{rendezvous_rank, tenant_key};
+use super::proto::{AdmissionReply, Request, Response, SnapshotReply, StatsReply};
+use super::server::{decode_request, ServiceClient};
+
+/// One backend host: its address, liveness flag, and the persistent
+/// connection requests multiplex over.
+struct HostHandle {
+    addr: String,
+    alive: AtomicBool,
+    conn: Mutex<Option<ServiceClient>>,
+}
+
+impl HostHandle {
+    fn new(addr: String) -> HostHandle {
+        HostHandle { addr, alive: AtomicBool::new(true), conn: Mutex::new(None) }
+    }
+
+    /// One request/reply against this host, (re)connecting lazily. A
+    /// transport failure marks the host dead and drops the connection;
+    /// a success (including a typed denial) marks it alive — which is
+    /// how the health ping revives hosts.
+    fn call(&self, req: &Request) -> Result<Response, Error> {
+        let mut guard = self.conn.lock().unwrap_or_else(|p| p.into_inner());
+        if guard.is_none() {
+            match ServiceClient::connect(&self.addr) {
+                Ok(c) => *guard = Some(c),
+                Err(e) => {
+                    self.alive.store(false, Ordering::SeqCst);
+                    return Err(Error::Io(e));
+                }
+            }
+        }
+        match guard.as_mut().expect("connected above").call(req) {
+            Ok(resp) => {
+                self.alive.store(true, Ordering::SeqCst);
+                Ok(resp)
+            }
+            Err(e @ Error::Io(_)) => {
+                *guard = None;
+                self.alive.store(false, Ordering::SeqCst);
+                Err(e)
+            }
+            Err(e @ Error::Proto(_)) => {
+                // Framing desync: the connection is unusable but the
+                // host answered — drop the conn, keep the host.
+                *guard = None;
+                Err(e)
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// What the balancer remembers per client session: where it lives and
+/// the snapshot that re-creates it anywhere.
+struct BalSession {
+    host: usize,
+    backend_sid: SessionId,
+    snap: SessionSnapshot,
+}
+
+/// The shared balancer state every client-connection thread routes
+/// through.
+struct BalCore {
+    hosts: Vec<HostHandle>,
+    sessions: Mutex<BTreeMap<SessionId, BalSession>>,
+    /// Serializes fail-over restores (see module docs).
+    restore: Mutex<()>,
+    next_session: AtomicU64,
+}
+
+impl BalCore {
+    fn lock_sessions(&self) -> MutexGuard<'_, BTreeMap<SessionId, BalSession>> {
+        self.sessions.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Live-host placement order for a tenant: rendezvous over the full
+    /// host list (so placement is stable as hosts die and revive),
+    /// filtered to hosts currently believed alive.
+    fn host_order(&self, snap: &SessionSnapshot) -> Vec<usize> {
+        rendezvous_rank(tenant_key(&snap.cfg, snap.d, snap.seed), self.hosts.len())
+            .into_iter()
+            .filter(|&i| self.hosts[i].alive.load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// Open-or-restore `snap` on the best live host (`SessionRestore`
+    /// at `rounds = 0` is exactly an open). Returns the host index and
+    /// the *backend* session id granted there.
+    fn place(&self, snap: &SessionSnapshot) -> Result<(usize, SessionId), Error> {
+        let mut last: Option<Error> = None;
+        for i in self.host_order(snap) {
+            match self.hosts[i].call(&Request::SessionRestore { snapshot: snap.clone() }) {
+                Ok(Response::Admission(AdmissionReply { session: Some(sid), error: None })) => {
+                    return Ok((i, sid));
+                }
+                Ok(Response::Admission(AdmissionReply { error: Some(e), .. })) => {
+                    last = Some(Error::Admission(e));
+                }
+                Ok(other) => last = Some(Error::Unexpected(format!("{other:?}"))),
+                Err(e) => last = Some(e), // host marked dead; try the next
+            }
+        }
+        Err(last.unwrap_or(Error::NoLiveHosts))
+    }
+
+    /// Forward a session-scoped request, failing over transparently: a
+    /// transport error restores the session on the next live host (from
+    /// its tracked snapshot) and retries the request there.
+    fn forward(
+        &self,
+        client_sid: SessionId,
+        make: impl Fn(SessionId) -> Request,
+    ) -> Result<Response, Error> {
+        for _ in 0..(self.hosts.len() + 1) {
+            let (host, backend) = match self.lock_sessions().get(&client_sid) {
+                Some(bs) => (bs.host, bs.backend_sid),
+                None => return Err(Error::UnknownSession(client_sid)),
+            };
+            match self.hosts[host].call(&make(backend)) {
+                Err(Error::Io(_)) => self.failover(client_sid, host, backend)?,
+                other => return other,
+            }
+        }
+        Err(Error::Unexpected(format!(
+            "session {client_sid} kept failing over across {} hosts",
+            self.hosts.len()
+        )))
+    }
+
+    /// Move `client_sid` off dead `host` (if no concurrent request beat
+    /// us to it — the restore lock plus a placement re-check make the
+    /// restore exactly-once).
+    fn failover(&self, client_sid: SessionId, host: usize, backend: SessionId) -> Result<(), Error> {
+        let _serial = self.restore.lock().unwrap_or_else(|p| p.into_inner());
+        let snap = match self.lock_sessions().get(&client_sid) {
+            None => return Err(Error::UnknownSession(client_sid)),
+            // Already restored by whoever held the lock before us.
+            Some(bs) if bs.host != host || bs.backend_sid != backend => return Ok(()),
+            Some(bs) => bs.snap.clone(),
+        };
+        let (new_host, new_sid) = self.place(&snap)?;
+        if let Some(bs) = self.lock_sessions().get_mut(&client_sid) {
+            bs.host = new_host;
+            bs.backend_sid = new_sid;
+        }
+        Ok(())
+    }
+
+    /// Answer one client request (the balancer's analogue of
+    /// `AggFrontend::handle`). Returns the reply plus whether it was a
+    /// shutdown.
+    fn handle(&self, req: &Request) -> (Response, bool) {
+        let reply = match req {
+            Request::SessionOpen { cfg, d, seed, qos } => self.open(SessionSnapshot {
+                cfg: *cfg,
+                d: *d,
+                seed: *seed,
+                qos: *qos,
+                rounds: 0,
+            }),
+            Request::SessionRestore { snapshot } => self.open(snapshot.clone()),
+            Request::RoundSubmit { session, signs } => {
+                let signs = signs.clone();
+                match self.forward(*session, move |sid| Request::RoundSubmit {
+                    session: sid,
+                    signs: signs.clone(),
+                }) {
+                    Ok(Response::Vote(mut v)) => {
+                        // The vote is now client-observed: advance the
+                        // restore point past this round and re-label the
+                        // reply with the client's id.
+                        if let Some(bs) = self.lock_sessions().get_mut(session) {
+                            bs.snap.rounds += 1;
+                        }
+                        v.session = *session;
+                        Response::Vote(v)
+                    }
+                    Ok(other) => other,
+                    Err(e) => error_reply(Some(*session), e),
+                }
+            }
+            Request::Prefetch { session, rounds } => {
+                let rounds = *rounds;
+                match self.forward(*session, move |sid| Request::Prefetch {
+                    session: sid,
+                    rounds,
+                }) {
+                    Ok(Response::Admission(mut a)) => {
+                        a.session = a.session.map(|_| *session);
+                        Response::Admission(a)
+                    }
+                    Ok(other) => other,
+                    Err(e) => error_reply(Some(*session), e),
+                }
+            }
+            Request::SessionClose { session } => self.close(*session),
+            Request::StatsQuery { session: Some(sid) } => {
+                match self.forward(*sid, move |backend| Request::StatsQuery {
+                    session: Some(backend),
+                }) {
+                    Ok(Response::Stats(mut s)) => {
+                        s.session = Some(*sid);
+                        Response::Stats(s)
+                    }
+                    Ok(other) => other,
+                    Err(e) => error_reply(Some(*sid), e),
+                }
+            }
+            Request::StatsQuery { session: None } => self.cluster_stats(),
+            // Answered locally: the balancer's rounds counter is the
+            // authoritative restore point (and still works while the
+            // session's host is down).
+            Request::SessionSnapshot { session } => match self.lock_sessions().get(session) {
+                Some(bs) => Response::Snapshot(SnapshotReply {
+                    session: *session,
+                    snapshot: bs.snap.clone(),
+                }),
+                None => error_reply(Some(*session), Error::UnknownSession(*session)),
+            },
+            Request::Shutdown => {
+                // Wind down the whole cluster: every live backend gets
+                // the shutdown, best-effort, then the balancer stops.
+                for host in &self.hosts {
+                    if host.alive.load(Ordering::SeqCst) {
+                        let _ = host.call(&Request::Shutdown);
+                    }
+                }
+                return (Response::Admission(AdmissionReply::ok(None)), true);
+            }
+        };
+        (reply, false)
+    }
+
+    fn open(&self, snap: SessionSnapshot) -> Response {
+        match self.place(&snap) {
+            Ok((host, backend_sid)) => {
+                let sid = SessionId::new(self.next_session.fetch_add(1, Ordering::Relaxed));
+                self.lock_sessions().insert(sid, BalSession { host, backend_sid, snap });
+                Response::Admission(AdmissionReply::ok(Some(sid)))
+            }
+            Err(e) => error_reply(None, e),
+        }
+    }
+
+    fn close(&self, client_sid: SessionId) -> Response {
+        let bs = match self.lock_sessions().remove(&client_sid) {
+            Some(bs) => bs,
+            None => return error_reply(Some(client_sid), Error::UnknownSession(client_sid)),
+        };
+        // Best-effort: a dead host's sessions are already gone.
+        let _ = self.hosts[bs.host].call(&Request::SessionClose { session: bs.backend_sid });
+        Response::Admission(AdmissionReply::ok(Some(client_sid)))
+    }
+
+    /// Cluster-wide stats: the fold of every live host's frontend-wide
+    /// reply, with `shard_tenants` concatenated in host order (dead
+    /// hosts contribute nothing — their counters are on the floor with
+    /// them, which the reply's lower-bound semantics already allow).
+    fn cluster_stats(&self) -> Response {
+        let mut admission = AdmissionStats::default();
+        let mut rounds_run = 0u64;
+        let mut dealt_rounds = 0u64;
+        let mut shard_tenants: Vec<usize> = Vec::new();
+        for host in &self.hosts {
+            if !host.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            if let Ok(Response::Stats(s)) = host.call(&Request::StatsQuery { session: None }) {
+                admission.merge(&s.admission);
+                rounds_run += s.rounds_run;
+                dealt_rounds += s.dealt_rounds;
+                shard_tenants.extend(s.shard_tenants.unwrap_or_default());
+            }
+        }
+        Response::Stats(StatsReply {
+            session: None,
+            shard: None,
+            rounds_run,
+            dealt_rounds,
+            admission,
+            shard_tenants: Some(shard_tenants),
+        })
+    }
+}
+
+fn error_reply(session: Option<SessionId>, e: Error) -> Response {
+    Response::Admission(AdmissionReply::denied(session, e.into_admission()))
+}
+
+/// The balancer process: a listener for clients, the shared routing
+/// core, and the health-check cadence.
+pub struct Balancer {
+    listener: TcpListener,
+    core: Arc<BalCore>,
+    stop: Arc<AtomicBool>,
+    health_every: Duration,
+}
+
+impl Balancer {
+    /// Bind the client-facing listener at `addr`, fronting `hosts`
+    /// (each a `hisafe serve` address). Hosts start presumed alive;
+    /// the first failed call or health ping corrects that.
+    pub fn bind(addr: &str, hosts: &[String], health_every: Duration) -> io::Result<Balancer> {
+        assert!(!hosts.is_empty(), "a balancer needs at least one backend host");
+        Ok(Balancer {
+            listener: TcpListener::bind(addr)?,
+            core: Arc::new(BalCore {
+                hosts: hosts.iter().cloned().map(HostHandle::new).collect(),
+                sessions: Mutex::new(BTreeMap::new()),
+                restore: Mutex::new(()),
+                next_session: AtomicU64::new(0),
+            }),
+            stop: Arc::new(AtomicBool::new(false)),
+            health_every,
+        })
+    }
+
+    /// The bound client-facing address.
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept-and-route until a client sends `Shutdown` (which also
+    /// winds down every live backend). The health thread runs for the
+    /// duration and is joined before this returns.
+    pub fn serve(self) -> io::Result<()> {
+        let addr = self.listener.local_addr()?;
+        let health = {
+            let core = Arc::clone(&self.core);
+            let stop = Arc::clone(&self.stop);
+            let every = self.health_every;
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    for host in &core.hosts {
+                        // A successful ping revives a dead host (call()
+                        // flips `alive` on success, reconnecting first).
+                        let _ = host.call(&Request::StatsQuery { session: None });
+                    }
+                    std::thread::sleep(every);
+                }
+            })
+        };
+        let accept_result = loop {
+            let stream = match self.listener.accept() {
+                Ok((stream, _)) => stream,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::ConnectionAborted
+                            | io::ErrorKind::ConnectionReset
+                            | io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    continue;
+                }
+                Err(e) => break Err(e),
+            };
+            if self.stop.load(Ordering::SeqCst) {
+                break Ok(());
+            }
+            let core = Arc::clone(&self.core);
+            let stop = Arc::clone(&self.stop);
+            std::thread::spawn(move || serve_client(stream, addr, core, stop));
+        };
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = health.join();
+        accept_result
+    }
+}
+
+/// One client connection's request loop (thread-per-client is fine at
+/// this tier — see the module docs).
+fn serve_client(stream: TcpStream, addr: SocketAddr, core: Arc<BalCore>, stop: Arc<AtomicBool>) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return,
+            Ok(_) => {}
+            Err(_) => return,
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (reply, shutdown) = match decode_request(&line) {
+            Ok(req) => core.handle(&req),
+            Err(e) => (
+                Response::Admission(AdmissionReply::denied(
+                    None,
+                    AdmissionError::Rejected { reason: e.msg },
+                )),
+                false,
+            ),
+        };
+        let mut out = reply.to_json().to_string_compact();
+        out.push('\n');
+        if writer.write_all(out.as_bytes()).is_err() || writer.flush().is_err() {
+            return;
+        }
+        if shutdown {
+            stop.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect(addr);
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::QosPolicy;
+    use crate::poly::TiePolicy;
+    use crate::protocol::{plain_hierarchical_vote, HiSafeConfig};
+    use crate::service::{AggFrontend, ServiceServer};
+    use crate::util::rng::{Rng, Xoshiro256pp};
+
+    fn rand_signs(n: usize, d: usize, seed: u64) -> Vec<Vec<i8>> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect()
+    }
+
+    fn spawn_backend() -> (String, std::thread::JoinHandle<io::Result<()>>) {
+        let server = ServiceServer::bind("127.0.0.1:0", AggFrontend::new(2, 1)).expect("bind");
+        let addr = server.local_addr().expect("addr").to_string();
+        (addr, std::thread::spawn(move || server.serve()))
+    }
+
+    fn spawn_balancer(
+        hosts: &[String],
+    ) -> (String, std::thread::JoinHandle<io::Result<()>>) {
+        let bal =
+            Balancer::bind("127.0.0.1:0", hosts, Duration::from_millis(20)).expect("bind bal");
+        let addr = bal.local_addr().expect("addr").to_string();
+        (addr, std::thread::spawn(move || bal.serve()))
+    }
+
+    #[test]
+    fn balanced_cluster_fails_over_with_bit_identical_votes() {
+        let (a0, h0) = spawn_backend();
+        let (a1, h1) = spawn_backend();
+        let hosts = vec![a0.clone(), a1.clone()];
+        let (bal_addr, bal) = spawn_balancer(&hosts);
+
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let (d, seed) = (5usize, 7u64);
+        let mut client = ServiceClient::connect(&bal_addr).expect("connect balancer");
+        let sid = client.open_session(cfg, d, seed, QosPolicy::unlimited()).expect("admitted");
+
+        // The balancer places by the same rendezvous the frontends use,
+        // so the test knows which host the session landed on — and
+        // kills exactly that one mid-sweep.
+        let victim = rendezvous_rank(tenant_key(&cfg, d, seed), 2)[0];
+        let (victim_addr, victim_handle, survivor_handle) =
+            if victim == 0 { (a0, h0, h1) } else { (a1, h1, h0) };
+
+        let rounds = 5u64;
+        for r in 0..rounds {
+            let signs = rand_signs(6, d, 400 + r);
+            if r == 2 {
+                // Kill the victim host out from under its session.
+                let mut killer = ServiceClient::connect(&victim_addr).expect("connect victim");
+                killer.shutdown().expect("victim shutdown acked");
+                victim_handle.join().expect("victim thread").expect("victim clean exit");
+            }
+            let vote = client.submit_round(sid, &signs).expect("round survives fail-over");
+            assert_eq!(
+                vote.global_vote,
+                plain_hierarchical_vote(&signs, cfg),
+                "round {r} must be bit-identical across the host kill"
+            );
+            assert_eq!(vote.session, sid, "replies carry the client's id");
+        }
+
+        // Post-failover bookkeeping: the snapshot shows every round,
+        // and session stats (served by the surviving host) agree.
+        let snap = client.snapshot_session(sid).expect("snapshot");
+        assert_eq!(snap.rounds, rounds);
+        let stats = client.stats(Some(sid)).expect("session stats");
+        assert_eq!(stats.session, Some(sid));
+        assert_eq!(stats.rounds_run, rounds, "restored counters are continuous");
+        client.close_session(sid).expect("close acked");
+
+        // Shutdown fans out: the surviving backend exits too.
+        client.shutdown().expect("cluster shutdown acked");
+        bal.join().expect("balancer thread").expect("balancer clean exit");
+        survivor_handle.join().expect("survivor thread").expect("survivor clean exit");
+    }
+
+    #[test]
+    fn cluster_stats_merge_across_hosts() {
+        let (a0, h0) = spawn_backend();
+        let (a1, h1) = spawn_backend();
+        let (bal_addr, bal) = spawn_balancer(&[a0, a1]);
+
+        let cfg = HiSafeConfig::flat(3, TiePolicy::OneBit);
+        let mut client = ServiceClient::connect(&bal_addr).expect("connect");
+        // Enough tenants that rendezvous virtually certainly uses both
+        // hosts (and the assertion below doesn't depend on it anyway).
+        let sids: Vec<SessionId> = (0..6)
+            .map(|i| client.open_session(cfg, 4, i, QosPolicy::unlimited()).expect("admitted"))
+            .collect();
+        for (i, &sid) in sids.iter().enumerate() {
+            let signs = rand_signs(3, 4, 40 + i as u64);
+            client.submit_round(sid, &signs).expect("round admitted");
+        }
+        let stats = client.stats(None).expect("cluster stats");
+        assert_eq!(stats.rounds_run, 6);
+        assert_eq!(stats.admission.admitted_rounds, 6);
+        // Two hosts x two shards each, concatenated in host order.
+        let tenants = stats.shard_tenants.expect("cluster lists shards");
+        assert_eq!(tenants.len(), 4);
+        assert_eq!(tenants.iter().sum::<usize>(), 6);
+
+        client.shutdown().expect("shutdown acked");
+        bal.join().expect("balancer thread").expect("balancer clean exit");
+        h0.join().expect("h0 thread").expect("h0 clean exit");
+        h1.join().expect("h1 thread").expect("h1 clean exit");
+    }
+}

@@ -1,0 +1,152 @@
+//! The single service-layer error surface: everything that can go wrong
+//! between a caller and an aggregation round, as one typed enum.
+//!
+//! Before this module the service layer had two error vocabularies — a
+//! transport-side `ServiceError` in `server.rs` and ad-hoc rejection
+//! strings minted inside `frontend.rs` — so a caller matching "was that
+//! a throttle or a dead connection?" had to know which layer it was
+//! talking to. Now every layer (frontend routing, TCP transport, the
+//! balancer) produces [`Error`], and clients match one enum:
+//!
+//! * [`Error::Admission`] — the service *declined* a well-formed
+//!   request ([`AdmissionError`] crossing layers unchanged, so a remote
+//!   caller retries `Throttled` exactly like a local one).
+//! * [`Error::UnknownSession`] — a session id that names no live
+//!   session (closed, never granted, or lost with a dead host before a
+//!   snapshot could be taken).
+//! * [`Error::Io`] / [`Error::Proto`] — the transport failed or the
+//!   bytes were malformed; only remote paths produce these.
+//! * [`Error::NoLiveHosts`] — the balancer has no healthy backend left
+//!   to place or fail a session over to.
+//! * [`Error::Unexpected`] — a reply of the wrong shape, or an internal
+//!   invariant surfaced as an error instead of a panic.
+//!
+//! On the wire, errors that are not already [`AdmissionError`]s travel
+//! as [`AdmissionError::Rejected`] with a descriptive reason (see
+//! [`Error::into_admission`]): the wire schema is unchanged, only the
+//! in-process type is unified.
+
+use std::fmt;
+use std::io;
+
+use crate::engine::{AdmissionError, SessionId};
+
+use super::proto::ProtoError;
+
+/// The unified service-layer error. See the module docs for the
+/// variant-by-variant contract.
+#[derive(Debug)]
+pub enum Error {
+    /// The transport failed (connect, read, write). Remote paths only.
+    Io(io::Error),
+    /// The bytes were malformed (bad version, missing field) — distinct
+    /// from a typed denial of a well-formed request.
+    Proto(ProtoError),
+    /// The service declined the request: throttled, queue-full, or
+    /// rejected, with the same payloads the in-process scheduler uses.
+    Admission(AdmissionError),
+    /// The session id names no live session on this frontend/balancer.
+    UnknownSession(SessionId),
+    /// Every backend host the balancer knows is marked dead.
+    NoLiveHosts,
+    /// A structurally valid but semantically wrong reply (e.g. a vote
+    /// where an ack was expected), or an internal invariant break
+    /// reported instead of panicking.
+    Unexpected(String),
+}
+
+impl Error {
+    /// The wire form of this error: [`AdmissionError`] is the only
+    /// error type the protocol carries, so everything else folds into
+    /// [`AdmissionError::Rejected`] with a descriptive reason. Lossy by
+    /// design for the non-admission variants (the wire schema predates
+    /// them and stays unversioned); [`Error::Admission`] is lossless.
+    pub fn into_admission(self) -> AdmissionError {
+        match self {
+            Error::Admission(e) => e,
+            Error::UnknownSession(sid) => {
+                AdmissionError::Rejected { reason: format!("unknown session {sid}") }
+            }
+            other => AdmissionError::Rejected { reason: other.to_string() },
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "service transport error: {e}"),
+            Error::Proto(e) => write!(f, "{e}"),
+            Error::Admission(e) => write!(f, "service denied request: {e}"),
+            Error::UnknownSession(sid) => write!(f, "unknown session {sid}"),
+            Error::NoLiveHosts => write!(f, "no live backend hosts"),
+            Error::Unexpected(msg) => write!(f, "unexpected service state: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            Error::Proto(e) => Some(e),
+            Error::Admission(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for Error {
+    fn from(e: io::Error) -> Error {
+        Error::Io(e)
+    }
+}
+
+impl From<ProtoError> for Error {
+    fn from(e: ProtoError) -> Error {
+        Error::Proto(e)
+    }
+}
+
+impl From<AdmissionError> for Error {
+    fn from(e: AdmissionError) -> Error {
+        Error::Admission(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_folding_keeps_admission_lossless_and_names_unknown_sessions() {
+        let throttle = AdmissionError::Throttled {
+            retry_after: std::time::Duration::from_millis(3),
+        };
+        // Admission errors cross into wire form unchanged.
+        assert_eq!(Error::Admission(throttle.clone()).into_admission(), throttle);
+        // Unknown sessions keep the "unknown session <id>" phrasing the
+        // pre-unification frontend minted (clients grep for it).
+        match Error::UnknownSession(SessionId::new(7)).into_admission() {
+            AdmissionError::Rejected { reason } => {
+                assert!(reason.contains("unknown session 7"), "reason: {reason}")
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        // Everything else folds to Rejected with its Display text.
+        match Error::NoLiveHosts.into_admission() {
+            AdmissionError::Rejected { reason } => {
+                assert!(reason.contains("no live backend hosts"), "reason: {reason}")
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn display_distinguishes_layers() {
+        let io = Error::Io(io::Error::new(io::ErrorKind::ConnectionReset, "peer gone"));
+        assert!(io.to_string().contains("transport"));
+        let denied = Error::Admission(AdmissionError::QueueFull { depth: 4 });
+        assert!(denied.to_string().contains("denied"));
+    }
+}

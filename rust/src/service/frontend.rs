@@ -10,11 +10,12 @@
 //!                  │                              ▲
 //!                  ▼                              │
 //!   ┌──────────── AggFrontend (this file) ────────┴─┐
-//!   │  session table: external id → (shard, session) │
-//!   │  placement: rendezvous hash on (cfg, d, seed)  │
-//!   │             + least-loaded spill-over          │
-//!   └──┬───────────────┬───────────────┬────────────┘
+//!   │  router: session id → (shard, restore meta)   │
+//!   │  placement: rendezvous hash on (cfg, d, seed) │
+//!   │             + least-loaded spill-over         │
+//!   └──┬───────────────┬───────────────┬───────────┘
 //!   shard 0         shard 1         shard K−1
+//!   Mutex<state>    Mutex<state>    Mutex<state>
 //!   AggScheduler    AggScheduler    AggScheduler
 //!   (pool+plane)    (pool+plane)    (pool+plane)
 //! ```
@@ -24,6 +25,41 @@
 //! so the same façade serves in-process embedding and the TCP server in
 //! [`super::server`] unchanged, and everything a remote client can do
 //! is exactly what a local one can.
+//!
+//! # Per-shard locking
+//!
+//! [`AggFrontend::handle`] takes `&self`: the frontend is shared across
+//! connection workers as a plain `Arc<AggFrontend>`, and each shard's
+//! state sits behind its **own** mutex. A round on shard 0 never waits
+//! for a round on shard 1 — `K` shards serve `K` wire rounds in
+//! parallel (pinned by the concurrency test below and by the
+//! `sched_remote` bench's multi-host mode). A small **router** mutex
+//! guards only the session table (id → shard + restore metadata);
+//! round execution holds exactly one shard lock and touches the router
+//! only for O(1) map lookups before and after.
+//!
+//! Lock ordering: the router lock may be held while acquiring a shard
+//! lock (restore does this), but a shard lock is **never** held while
+//! acquiring the router or another shard — which is what makes the
+//! locking deadlock-free by construction.
+//!
+//! # Shard death and transparent restore
+//!
+//! A panic on a connection worker while it holds a shard lock poisons
+//! only that shard's mutex. The next thread to touch the shard absorbs
+//! the poison, marks the shard **dead**, and discards its state: a
+//! panicked round may have consumed a partial round of Beaver triples,
+//! so the in-memory sessions can no longer be trusted to be
+//! stream-aligned. Their tenants are *not* lost — the router keeps, for
+//! every session, the [`SessionSnapshot`] ingredients `(cfg, d, seed,
+//! qos, rounds-consumed)`, and the next request touching a displaced
+//! session transparently resumes it on the next-ranked live shard via
+//! [`AggScheduler::try_session_resumed`], which replays the dealer
+//! stream to exactly the consumed-rounds boundary. Votes after a shard
+//! death are bit-identical to an uninterrupted run (pinned by tests
+//! here and in `tests/service_props.rs`). [`AggFrontend::kill_shard`]
+//! is the operational/test hook that induces the same death path
+//! without a panic.
 //!
 //! # Placement
 //!
@@ -44,7 +80,8 @@
 //! frontend **spills over** to the remaining shards in least-loaded
 //! order — capacity pressure degrades placement locality, never
 //! availability. [`AdmissionError::Rejected`] is returned only when
-//! every shard refuses.
+//! every shard refuses. Placement order is resolved *before* any lock
+//! is taken (shard flags and load counters are atomics).
 //!
 //! # Drain and rebalance
 //!
@@ -64,17 +101,23 @@
 //! Placement never affects votes: a session's triple streams are pure
 //! functions of its own `(seed, group)` (see `engine/scheduler.rs`),
 //! so which shard a tenant lands on — like which tenants it shares a
-//! plane with — changes wall-clock behavior only. The service property
-//! tests pin remote votes bit-identical to in-process engines across
-//! random shard counts.
+//! plane with, or whether it was restored mid-stream after a shard
+//! death — changes wall-clock behavior only. The service property tests
+//! pin remote votes bit-identical to in-process engines across random
+//! shard counts and mid-sweep shard kills.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
 
-use crate::engine::{AdmissionError, AggScheduler, AggSession, Engine, QosPolicy};
+use crate::engine::{
+    AdmissionError, AggScheduler, AggSession, Engine, QosPolicy, SessionId, SessionSnapshot,
+};
 use crate::metrics::AdmissionStats;
 use crate::protocol::HiSafeConfig;
 
-use super::proto::{AdmissionReply, Request, Response, StatsReply, VoteReply};
+use super::error::Error;
+use super::proto::{AdmissionReply, Request, Response, SnapshotReply, StatsReply, VoteReply};
 
 /// SplitMix64 finalizer: a full-avalanche 64-bit mixer (public-domain
 /// constants from Steele et al.), the hash primitive for rendezvous
@@ -104,7 +147,9 @@ pub(crate) fn tenant_key(cfg: &HiSafeConfig, d: usize, seed: u64) -> u64 {
 /// winner; the rest is the deterministic fail-over order. Each shard's
 /// score depends only on `(key, shard)` — never on `shards` — which is
 /// what makes the ranking stable under shard-count changes (the
-/// rendezvous property the tests pin).
+/// rendezvous property the tests pin). The balancer reuses the same
+/// ranking across *hosts*, so host placement agrees with shard
+/// placement by construction.
 pub(crate) fn rendezvous_rank(key: u64, shards: usize) -> Vec<usize> {
     let mut scored: Vec<(u64, usize)> = (0..shards)
         .map(|i| (splitmix64(key ^ splitmix64(i as u64 ^ 0x5bd1_e995)), i))
@@ -115,23 +160,21 @@ pub(crate) fn rendezvous_rank(key: u64, shards: usize) -> Vec<usize> {
     scored.into_iter().map(|(_, i)| i).collect()
 }
 
-/// One scheduler shard. The scheduler itself is lazy: spawned on first
-/// placement, retired when a drained shard empties — so idle shards
-/// cost no threads.
-struct Shard {
+/// The lock-guarded state of one scheduler shard. The scheduler itself
+/// is lazy: spawned on first placement, retired when a drained shard
+/// empties — so idle shards cost no threads. The sessions placed here
+/// live in this map so round execution needs exactly this one lock.
+struct ShardState {
     sched: Option<AggScheduler>,
     /// Worker threads to spawn this shard's pool with.
     threads: usize,
     /// Per-shard tenant cap (`AggScheduler::with_capacity`).
     max_tenants: Option<usize>,
-    /// Live sessions placed here (frontend-side count; the scheduler's
-    /// own `live_tenants` agrees, but this survives `sched = None`).
-    tenants: usize,
-    /// Draining shards receive no new placements.
-    draining: bool,
+    /// Live sessions placed on this shard.
+    sessions: BTreeMap<SessionId, AggSession>,
 }
 
-impl Shard {
+impl ShardState {
     fn sched(&mut self) -> &AggScheduler {
         self.sched.get_or_insert_with(|| match self.max_tenants {
             Some(cap) => AggScheduler::with_capacity(self.threads, cap),
@@ -140,26 +183,80 @@ impl Shard {
     }
 }
 
-/// A live session and the shard that owns it.
-struct FrontSession {
+/// One shard slot: the state mutex plus the lock-free flags placement
+/// reads *before* locking anything.
+struct ShardSlot {
+    state: Mutex<ShardState>,
+    /// Draining shards receive no new placements.
+    draining: AtomicBool,
+    /// Dead shards (absorbed lock poison, or
+    /// [`AggFrontend::kill_shard`]) are skipped entirely; their sessions
+    /// restore elsewhere on touch.
+    dead: AtomicBool,
+    /// Live placements, for least-loaded spill-over and
+    /// [`AggFrontend::shard_tenants`] without taking the state lock.
+    /// Mutated only while holding the state lock, so death-zeroing and
+    /// place/close updates never interleave inconsistently.
+    tenants: AtomicUsize,
+}
+
+/// What the router remembers about a session *besides* its live
+/// [`AggSession`]: exactly the [`SessionSnapshot`] ingredients, so a
+/// session whose shard died can be resumed bit-identically from
+/// metadata alone.
+#[derive(Clone)]
+struct SessionMeta {
+    cfg: HiSafeConfig,
+    d: usize,
+    seed: u64,
+    qos: QosPolicy,
+    /// Whole rounds consumed — incremented only after a round's vote
+    /// exists, so a round that panicked mid-flight is replayed, not
+    /// skipped.
+    rounds_done: u64,
+    /// The shard currently holding the live session.
     shard: usize,
-    session: AggSession,
+}
+
+impl SessionMeta {
+    fn snapshot(&self) -> SessionSnapshot {
+        SessionSnapshot {
+            cfg: self.cfg,
+            d: self.d,
+            seed: self.seed,
+            qos: self.qos,
+            rounds: self.rounds_done,
+        }
+    }
+}
+
+/// The session table plus frontend-wide counter folds. Deliberately
+/// small: the router lock is on every request's path, so it guards only
+/// O(1)/O(sessions) map bookkeeping, never engine work.
+struct Router {
+    sessions: BTreeMap<SessionId, SessionMeta>,
+    /// Fold of closed sessions' admission counters, so frontend-wide
+    /// stats survive tenant churn.
+    closed_admission: AdmissionStats,
+    /// Ditto for rounds run / dealt by closed sessions.
+    closed_rounds_run: u64,
+    closed_dealt: u64,
 }
 
 /// Service-level ceilings on wire-controlled sizes. The engine asserts
 /// (panics) on shapes it was never built for and will happily allocate
 /// whatever a caller asks — correct for in-process callers, fatal for a
-/// server whose mutex a panic would poison. These are generous bounds
-/// (orders of magnitude above the paper's operating points — n ≤ 100,
-/// d ≈ 7.8k) that stop abuse without constraining use.
+/// server if the panic escaped to a shard lock. These are generous
+/// bounds (orders of magnitude above the paper's operating points —
+/// n ≤ 100, d ≈ 7.8k) that stop abuse without constraining use.
 const MAX_USERS: usize = 4096;
 const MAX_DIM: usize = 1 << 22;
 const MAX_PREFETCH_ROUNDS: usize = 4096;
 
 /// Reject wire shapes the engine cannot serve *before* they reach its
-/// asserting surface: a panic on a connection thread would poison the
-/// frontend mutex and take down every session (the contract is typed
-/// rejections for malformed content, panics only for internal bugs).
+/// asserting surface (the contract is typed rejections for malformed
+/// content, panics only for internal bugs — and even an internal panic
+/// now costs one shard, not the server).
 fn validate_shape(cfg: &HiSafeConfig, d: usize) -> Result<(), AdmissionError> {
     let bad = |reason: String| Err(AdmissionError::Rejected { reason });
     if cfg.n == 0 || cfg.ell == 0 {
@@ -177,9 +274,16 @@ fn validate_shape(cfg: &HiSafeConfig, d: usize) -> Result<(), AdmissionError> {
     Ok(())
 }
 
-/// The sharded service front-end: owns `K` scheduler shards and a
-/// session table, and answers wire-protocol [`Request`]s. See the
-/// module docs for placement and drain semantics.
+/// The typed-denial wire form of an [`Error`], echoing the session id
+/// the request targeted (when it targeted one).
+fn error_reply(session: Option<SessionId>, e: Error) -> Response {
+    Response::Admission(AdmissionReply::denied(session, e.into_admission()))
+}
+
+/// The sharded service front-end: `K` scheduler shards behind per-shard
+/// locks, a session router, and the wire-protocol [`Request`] surface.
+/// See the module docs for locking, placement, death, and drain
+/// semantics.
 ///
 /// ```
 /// use hisafe::engine::QosPolicy;
@@ -187,7 +291,7 @@ fn validate_shape(cfg: &HiSafeConfig, d: usize) -> Result<(), AdmissionError> {
 /// use hisafe::protocol::HiSafeConfig;
 /// use hisafe::service::{AggFrontend, Request, Response};
 ///
-/// let mut fe = AggFrontend::new(2, 1);
+/// let fe = AggFrontend::new(2, 1);
 /// let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
 /// let open = Request::SessionOpen { cfg, d: 4, seed: 7, qos: QosPolicy::unlimited() };
 /// let sid = match fe.handle(&open) {
@@ -201,15 +305,9 @@ fn validate_shape(cfg: &HiSafeConfig, d: usize) -> Result<(), AdmissionError> {
 /// }
 /// ```
 pub struct AggFrontend {
-    shards: Vec<Shard>,
-    sessions: BTreeMap<u64, FrontSession>,
-    next_session: u64,
-    /// Fold of closed sessions' admission counters, so frontend-wide
-    /// stats survive tenant churn.
-    closed_admission: AdmissionStats,
-    /// Ditto for rounds run / dealt by closed sessions.
-    closed_rounds_run: u64,
-    closed_dealt: u64,
+    shards: Vec<ShardSlot>,
+    router: Mutex<Router>,
+    next_session: AtomicU64,
 }
 
 impl AggFrontend {
@@ -237,36 +335,98 @@ impl AggFrontend {
         assert!(threads >= 1, "shards need at least one worker thread");
         AggFrontend {
             shards: (0..shards)
-                .map(|_| Shard {
-                    sched: None,
-                    threads,
-                    max_tenants,
-                    tenants: 0,
-                    draining: false,
+                .map(|_| ShardSlot {
+                    state: Mutex::new(ShardState {
+                        sched: None,
+                        threads,
+                        max_tenants,
+                        sessions: BTreeMap::new(),
+                    }),
+                    draining: AtomicBool::new(false),
+                    dead: AtomicBool::new(false),
+                    tenants: AtomicUsize::new(0),
                 })
                 .collect(),
-            sessions: BTreeMap::new(),
-            next_session: 0,
-            closed_admission: AdmissionStats::default(),
-            closed_rounds_run: 0,
-            closed_dealt: 0,
+            router: Mutex::new(Router {
+                sessions: BTreeMap::new(),
+                closed_admission: AdmissionStats::default(),
+                closed_rounds_run: 0,
+                closed_dealt: 0,
+            }),
+            next_session: AtomicU64::new(0),
         }
     }
+
+    // ------------------------------------------------------------- locks
+
+    /// Lock the router. The router mutex is never held across an engine
+    /// call that could panic on wire input (only map bookkeeping), so a
+    /// poisoned router means a frontend bug — recover the data anyway
+    /// rather than bricking every session over a bookkeeping panic.
+    fn lock_router(&self) -> MutexGuard<'_, Router> {
+        self.router.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Lock shard `i`'s state, absorbing poison: if a previous holder
+    /// panicked mid-round, the shard is marked dead exactly once and its
+    /// state discarded (a panicked round may have consumed a partial
+    /// round of triples, so the in-memory sessions are no longer
+    /// trustworthy — their tenants restore from router metadata on next
+    /// touch). Callers must re-check the `dead` flag after locking.
+    fn lock_shard(&self, i: usize) -> MutexGuard<'_, ShardState> {
+        match self.shards[i].state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                let mut g = poisoned.into_inner();
+                if !self.shards[i].dead.swap(true, Ordering::SeqCst) {
+                    g.sessions.clear();
+                    g.sched = None;
+                    self.shards[i].tenants.store(0, Ordering::SeqCst);
+                }
+                g
+            }
+        }
+    }
+
+    fn shard_accepting(&self, i: usize) -> bool {
+        !self.shards[i].dead.load(Ordering::SeqCst)
+            && !self.shards[i].draining.load(Ordering::SeqCst)
+    }
+
+    // ---------------------------------------------------- introspection
 
     /// Number of scheduler shards (fixed at construction).
     pub fn shards(&self) -> usize {
         self.shards.len()
     }
 
-    /// Live sessions per shard (frontend-side placement counts).
+    /// Live sessions per shard (frontend-side placement counts). Dead
+    /// shards report 0 — their displaced sessions count nowhere until
+    /// restored onto a live shard.
     pub fn shard_tenants(&self) -> Vec<usize> {
-        self.shards.iter().map(|s| s.tenants).collect()
+        self.shards.iter().map(|s| s.tenants.load(Ordering::SeqCst)).collect()
     }
 
-    /// Total live sessions across every shard.
+    /// Total live sessions across every shard (including displaced
+    /// sessions awaiting transparent restore).
     pub fn live_sessions(&self) -> usize {
-        self.sessions.len()
+        self.lock_router().sessions.len()
     }
+
+    /// Whether shard `i` currently holds live scheduler infrastructure
+    /// (a worker pool + dealing plane). False until first placement,
+    /// after a drain empties it, and after death.
+    pub fn shard_is_live(&self, i: usize) -> bool {
+        self.lock_shard(i).sched.is_some()
+    }
+
+    /// Whether shard `i` has been marked dead (absorbed lock poison, or
+    /// [`kill_shard`](AggFrontend::kill_shard)).
+    pub fn shard_is_dead(&self, i: usize) -> bool {
+        self.shards[i].dead.load(Ordering::SeqCst)
+    }
+
+    // --------------------------------------------------- drain / death
 
     /// Stop placing new tenants on shard `i`; its keys spill to their
     /// next-ranked shard exactly as if the shard were removed. Existing
@@ -277,211 +437,400 @@ impl AggFrontend {
     ///
     /// If `i` is out of range, or if draining `i` would leave no shard
     /// accepting placements.
-    pub fn drain_shard(&mut self, i: usize) {
+    pub fn drain_shard(&self, i: usize) {
         assert!(i < self.shards.len(), "shard {i} out of range");
         assert!(
-            self.shards.iter().enumerate().any(|(k, s)| k != i && !s.draining),
+            (0..self.shards.len()).any(|k| k != i && self.shard_accepting(k)),
             "cannot drain the last accepting shard"
         );
-        self.shards[i].draining = true;
+        self.shards[i].draining.store(true, Ordering::SeqCst);
         self.retire_if_drained(i);
     }
 
     /// Return a drained shard to the placement rotation (its scheduler
-    /// respawns lazily on the next placement).
+    /// respawns lazily on the next placement). Dead shards stay dead.
     ///
     /// # Panics
     ///
     /// If `i` is out of range.
-    pub fn undrain_shard(&mut self, i: usize) {
+    pub fn undrain_shard(&self, i: usize) {
         assert!(i < self.shards.len(), "shard {i} out of range");
-        self.shards[i].draining = false;
+        self.shards[i].draining.store(false, Ordering::SeqCst);
     }
 
-    /// Whether shard `i` currently holds live scheduler infrastructure
-    /// (a worker pool + dealing plane). False until first placement and
-    /// again after a drain empties it.
-    pub fn shard_is_live(&self, i: usize) -> bool {
-        self.shards[i].sched.is_some()
+    /// Kill shard `i` as if a panic had poisoned its lock: the shard is
+    /// marked dead, its scheduler (pool + plane) torn down, and every
+    /// session placed on it transparently restores onto the next-ranked
+    /// live shard — bit-identically — on its next request. The
+    /// operational/test hook for the failure path the poison-absorption
+    /// machinery handles organically.
+    ///
+    /// # Panics
+    ///
+    /// If `i` is out of range.
+    pub fn kill_shard(&self, i: usize) {
+        assert!(i < self.shards.len(), "shard {i} out of range");
+        let mut st = self.lock_shard(i);
+        if !self.shards[i].dead.swap(true, Ordering::SeqCst) {
+            st.sessions.clear();
+            st.sched = None;
+            self.shards[i].tenants.store(0, Ordering::SeqCst);
+        }
     }
 
     /// The rebalance step: a draining shard with no tenants left drops
     /// its scheduler handle, tearing down its threads. (Sessions hold
     /// the scheduler core alive through their own `Arc`s, so this is
     /// safe even mid-race with a closing session.)
-    fn retire_if_drained(&mut self, i: usize) {
-        let s = &mut self.shards[i];
-        if s.draining && s.tenants == 0 {
-            s.sched = None;
+    fn retire_if_drained(&self, i: usize) {
+        let mut st = self.lock_shard(i);
+        if self.shards[i].draining.load(Ordering::SeqCst) && st.sessions.is_empty() {
+            st.sched = None;
         }
     }
 
-    /// Place a tenant: rendezvous winner first, then least-loaded
-    /// spill-over among the remaining accepting shards.
+    // ------------------------------------------------------- placement
+
+    /// Candidate shards for a tenant key, best first: the rendezvous
+    /// winner, then the remaining accepting shards in least-loaded
+    /// order (stable sort preserves rendezvous order among
+    /// equally-loaded shards). Resolved entirely from atomics — no lock
+    /// is held while ranking.
+    fn placement_order(&self, cfg: &HiSafeConfig, d: usize, seed: u64) -> Vec<usize> {
+        let rank = rendezvous_rank(tenant_key(cfg, d, seed), self.shards.len());
+        let mut candidates: Vec<usize> =
+            rank.into_iter().filter(|&i| self.shard_accepting(i)).collect();
+        if candidates.len() > 1 {
+            let mut spill = candidates.split_off(1);
+            spill.sort_by_key(|&i| self.shards[i].tenants.load(Ordering::SeqCst));
+            candidates.extend(spill);
+        }
+        candidates
+    }
+
+    /// Place a tenant (fresh at `resume_rounds = 0`, or resuming a
+    /// snapshot): rendezvous winner first, then least-loaded spill-over.
+    /// Locks one shard at a time; the router is touched only after the
+    /// session exists (a brand-new id is unreachable by other threads
+    /// until this returns it).
     fn place(
-        &mut self,
+        &self,
         cfg: HiSafeConfig,
         d: usize,
         seed: u64,
         qos: QosPolicy,
-    ) -> Result<u64, AdmissionError> {
+        resume_rounds: u64,
+    ) -> Result<SessionId, Error> {
         // Validate shape and policy up front: both must be the same
         // typed rejection on every shard (and must never reach the
         // engine's asserting surface), so don't let either consume a
         // placement attempt (the shard re-validates the policy anyway).
         validate_shape(&cfg, d)?;
         qos.validate()?;
-        let rank = rendezvous_rank(tenant_key(&cfg, d, seed), self.shards.len());
-        let mut candidates: Vec<usize> =
-            rank.iter().copied().filter(|&i| !self.shards[i].draining).collect();
+        let candidates = self.placement_order(&cfg, d, seed);
         if candidates.is_empty() {
-            return Err(AdmissionError::Rejected {
-                reason: "every shard is draining".into(),
-            });
+            return Err(Error::Admission(AdmissionError::Rejected {
+                reason: "every shard is draining or dead".into(),
+            }));
         }
-        // Keep the rendezvous winner in front; order the spill-over
-        // candidates by current load (stable sort preserves rendezvous
-        // order among equally-loaded shards).
-        let spill = candidates.split_off(1);
-        let mut by_load = spill;
-        by_load.sort_by_key(|&i| self.shards[i].tenants);
-        candidates.extend(by_load);
-
+        let snap = SessionSnapshot { cfg, d, seed, qos, rounds: resume_rounds };
         let mut last_err = None;
         for i in candidates {
-            match self.shards[i].sched().try_session(cfg, d, seed, qos) {
+            let mut st = self.lock_shard(i);
+            if self.shards[i].dead.load(Ordering::SeqCst) {
+                continue;
+            }
+            // `try_session_resumed` at rounds = 0 is exactly
+            // `try_session`, so fresh opens and restores share one path.
+            match st.sched().try_session_resumed(&snap) {
                 Ok(session) => {
-                    let sid = self.next_session;
-                    self.next_session += 1;
-                    self.shards[i].tenants += 1;
-                    self.sessions.insert(sid, FrontSession { shard: i, session });
+                    let sid =
+                        SessionId::new(self.next_session.fetch_add(1, Ordering::Relaxed));
+                    st.sessions.insert(sid, session);
+                    self.shards[i].tenants.fetch_add(1, Ordering::SeqCst);
+                    drop(st);
+                    self.lock_router().sessions.insert(
+                        sid,
+                        SessionMeta { cfg, d, seed, qos, rounds_done: resume_rounds, shard: i },
+                    );
                     return Ok(sid);
                 }
                 Err(e) => last_err = Some(e),
             }
         }
-        Err(last_err.expect("at least one candidate shard was tried"))
+        Err(Error::Admission(last_err.unwrap_or(AdmissionError::Rejected {
+            reason: "every shard is draining or dead".into(),
+        })))
     }
+
+    /// Re-place a session whose shard died, resuming it bit-identically
+    /// from router metadata on the next-ranked live shard. Holds the
+    /// router lock for the whole restore so concurrent restores of the
+    /// same session serialize (the second one sees the updated placement
+    /// and returns without doing anything).
+    fn restore_displaced(&self, sid: SessionId) -> Result<(), Error> {
+        let mut router = self.lock_router();
+        let meta = match router.sessions.get(&sid) {
+            Some(m) => m.clone(),
+            None => return Err(Error::UnknownSession(sid)),
+        };
+        if !self.shards[meta.shard].dead.load(Ordering::SeqCst) {
+            return Ok(()); // another thread already re-placed it
+        }
+        let snap = meta.snapshot();
+        let candidates = self.placement_order(&meta.cfg, meta.d, meta.seed);
+        let mut last_err = AdmissionError::Rejected {
+            reason: format!("no live shard left to restore session {sid} onto"),
+        };
+        for i in candidates {
+            let mut st = self.lock_shard(i);
+            if self.shards[i].dead.load(Ordering::SeqCst) {
+                continue;
+            }
+            match st.sched().try_session_resumed(&snap) {
+                Ok(session) => {
+                    st.sessions.insert(sid, session);
+                    self.shards[i].tenants.fetch_add(1, Ordering::SeqCst);
+                    drop(st);
+                    router
+                        .sessions
+                        .get_mut(&sid)
+                        .expect("meta pinned under the held router lock")
+                        .shard = i;
+                    return Ok(());
+                }
+                Err(e) => last_err = e,
+            }
+        }
+        Err(Error::Admission(last_err))
+    }
+
+    /// Run `f` on the live [`AggSession`] for `sid`, restoring it first
+    /// if its shard died. Returns the shard the call ran on. Retries a
+    /// few times because the placement can move between the router
+    /// lookup and the shard lock (a concurrent restore); every retry
+    /// re-reads the router.
+    fn with_session<T>(
+        &self,
+        sid: SessionId,
+        mut f: impl FnMut(&mut AggSession) -> T,
+    ) -> Result<(usize, T), Error> {
+        for _ in 0..(self.shards.len() + 2) {
+            let shard = match self.lock_router().sessions.get(&sid) {
+                Some(m) => m.shard,
+                None => return Err(Error::UnknownSession(sid)),
+            };
+            {
+                let mut st = self.lock_shard(shard);
+                if !self.shards[shard].dead.load(Ordering::SeqCst) {
+                    if let Some(session) = st.sessions.get_mut(&sid) {
+                        return Ok((shard, f(session)));
+                    }
+                    // Placement moved under us — re-read the router.
+                    continue;
+                }
+            }
+            // The shard is dead: resume the session from metadata, then
+            // loop to run on the new placement.
+            self.restore_displaced(sid)?;
+        }
+        Err(Error::Unexpected(format!(
+            "session {sid} kept moving across {} routing attempts",
+            self.shards.len() + 2
+        )))
+    }
+
+    // -------------------------------------------------------- requests
 
     /// Answer one wire-protocol request. Never panics on malformed
     /// *content* (unknown sessions, wrong sign-matrix shapes, invalid
     /// policies all come back as typed [`AdmissionReply`] denials) —
-    /// panicking is reserved for frontend-internal invariant breaks.
-    pub fn handle(&mut self, req: &Request) -> Response {
+    /// panicking is reserved for frontend-internal invariant breaks,
+    /// and even those cost one shard (absorbed poison + transparent
+    /// restore), never the frontend.
+    pub fn handle(&self, req: &Request) -> Response {
         match req {
-            Request::SessionOpen { cfg, d, seed, qos } => match self.place(*cfg, *d, *seed, *qos)
-            {
-                Ok(sid) => Response::Admission(AdmissionReply::ok(Some(sid))),
-                Err(e) => Response::Admission(AdmissionReply::denied(None, e)),
-            },
-            Request::RoundSubmit { session, signs } => {
-                let Some(fs) = self.sessions.get_mut(session) else {
-                    return unknown_session(*session);
-                };
-                // Shape-check before the engine surface: the engine
-                // asserts (panics) on bad shapes, which is right for
-                // in-process bugs but must be a typed rejection for
-                // wire input.
-                let (n, d) = (fs.session.config().n, fs.session.dim());
-                if signs.len() != n || signs.iter().any(|s| s.len() != d) {
-                    return Response::Admission(AdmissionReply::denied(
-                        Some(*session),
-                        AdmissionError::Rejected {
-                            reason: format!(
-                                "sign matrix must be {n} users x {d} coordinates"
-                            ),
-                        },
-                    ));
+            Request::SessionOpen { cfg, d, seed, qos } => {
+                match self.place(*cfg, *d, *seed, *qos, 0) {
+                    Ok(sid) => Response::Admission(AdmissionReply::ok(Some(sid))),
+                    Err(e) => error_reply(None, e),
                 }
-                match fs.session.try_run_round(signs) {
-                    Ok(out) => Response::Vote(VoteReply {
-                        session: *session,
-                        global_vote: out.global_vote,
-                        subgroup_votes: out.subgroup_votes,
-                        stats: out.stats,
-                    }),
-                    Err(e) => Response::Admission(AdmissionReply::denied(Some(*session), e)),
+            }
+            Request::SessionRestore { snapshot } => {
+                match self.place(
+                    snapshot.cfg,
+                    snapshot.d,
+                    snapshot.seed,
+                    snapshot.qos,
+                    snapshot.rounds,
+                ) {
+                    Ok(sid) => Response::Admission(AdmissionReply::ok(Some(sid))),
+                    Err(e) => error_reply(None, e),
+                }
+            }
+            Request::RoundSubmit { session, signs } => {
+                // Shape-check against router metadata before the engine
+                // surface: the engine asserts (panics) on bad shapes,
+                // which is right for in-process bugs but must be a typed
+                // rejection for wire input.
+                let (n, d) = match self.lock_router().sessions.get(session) {
+                    Some(m) => (m.cfg.n, m.d),
+                    None => {
+                        return error_reply(Some(*session), Error::UnknownSession(*session))
+                    }
+                };
+                if signs.len() != n || signs.iter().any(|s| s.len() != d) {
+                    return error_reply(
+                        Some(*session),
+                        Error::Admission(AdmissionError::Rejected {
+                            reason: format!("sign matrix must be {n} users x {d} coordinates"),
+                        }),
+                    );
+                }
+                match self.with_session(*session, |s| s.try_run_round(signs)) {
+                    Ok((_, Ok(out))) => {
+                        // Count the consumed round in the restore
+                        // metadata only once the vote exists — a round
+                        // that dies mid-flight is replayed, not skipped.
+                        if let Some(m) = self.lock_router().sessions.get_mut(session) {
+                            m.rounds_done += 1;
+                        }
+                        Response::Vote(VoteReply {
+                            session: *session,
+                            global_vote: out.global_vote,
+                            subgroup_votes: out.subgroup_votes,
+                            stats: out.stats,
+                        })
+                    }
+                    Ok((_, Err(e))) => error_reply(Some(*session), Error::Admission(e)),
+                    Err(e) => error_reply(Some(*session), e),
                 }
             }
             Request::Prefetch { session, rounds } => {
-                let Some(fs) = self.sessions.get_mut(session) else {
-                    return unknown_session(*session);
-                };
                 // Bound per-call dealing work: with an unbounded queue
                 // depth (the tenant's own choice), a single wire request
                 // could otherwise queue effectively infinite dealing.
                 if *rounds > MAX_PREFETCH_ROUNDS {
-                    return Response::Admission(AdmissionReply::denied(
+                    return error_reply(
                         Some(*session),
-                        AdmissionError::Rejected {
+                        Error::Admission(AdmissionError::Rejected {
                             reason: format!(
                                 "prefetch of {rounds} rounds exceeds the service cap of \
                                  {MAX_PREFETCH_ROUNDS} per call"
                             ),
-                        },
-                    ));
+                        }),
+                    );
                 }
-                match fs.session.try_prefetch(*rounds) {
-                    Ok(()) => Response::Admission(AdmissionReply::ok(Some(*session))),
-                    Err(e) => Response::Admission(AdmissionReply::denied(Some(*session), e)),
+                match self.with_session(*session, |s| s.try_prefetch(*rounds)) {
+                    Ok((_, Ok(()))) => Response::Admission(AdmissionReply::ok(Some(*session))),
+                    Ok((_, Err(e))) => error_reply(Some(*session), Error::Admission(e)),
+                    Err(e) => error_reply(Some(*session), e),
                 }
             }
-            Request::SessionClose { session } => {
-                let Some(fs) = self.sessions.remove(session) else {
-                    return unknown_session(*session);
-                };
-                self.closed_admission.merge(&fs.session.admission_stats());
-                self.closed_rounds_run += fs.session.rounds_run();
-                self.closed_dealt += fs.session.dealt_rounds();
-                let shard = fs.shard;
-                drop(fs); // deregisters from the shard's plane
-                self.shards[shard].tenants -= 1;
-                self.retire_if_drained(shard);
-                Response::Admission(AdmissionReply::ok(Some(*session)))
-            }
+            Request::SessionClose { session } => self.close_session(*session),
             Request::StatsQuery { session: Some(sid) } => {
-                let Some(fs) = self.sessions.get(sid) else {
-                    return unknown_session(*sid);
-                };
-                Response::Stats(StatsReply {
-                    session: Some(*sid),
-                    shard: Some(fs.shard),
-                    rounds_run: fs.session.rounds_run(),
-                    dealt_rounds: fs.session.dealt_rounds(),
-                    admission: fs.session.admission_stats(),
-                    shard_tenants: None,
-                })
+                match self.with_session(*sid, |s| {
+                    (s.rounds_run(), s.dealt_rounds(), s.admission_stats())
+                }) {
+                    Ok((shard, (rounds_run, dealt_rounds, admission))) => {
+                        Response::Stats(StatsReply {
+                            session: Some(*sid),
+                            shard: Some(shard),
+                            rounds_run,
+                            dealt_rounds,
+                            admission,
+                            shard_tenants: None,
+                        })
+                    }
+                    Err(e) => error_reply(Some(*sid), e),
+                }
             }
-            Request::StatsQuery { session: None } => {
-                let live: Vec<AdmissionStats> =
-                    self.sessions.values().map(|fs| fs.session.admission_stats()).collect();
-                let mut admission = AdmissionStats::merge_all(live.iter());
-                admission.merge(&self.closed_admission);
-                let rounds_run = self.closed_rounds_run
-                    + self.sessions.values().map(|fs| fs.session.rounds_run()).sum::<u64>();
-                let dealt_rounds = self.closed_dealt
-                    + self.sessions.values().map(|fs| fs.session.dealt_rounds()).sum::<u64>();
-                Response::Stats(StatsReply {
-                    session: None,
-                    shard: None,
-                    rounds_run,
-                    dealt_rounds,
-                    admission,
-                    shard_tenants: Some(self.shard_tenants()),
-                })
+            Request::StatsQuery { session: None } => self.frontend_stats(),
+            Request::SessionSnapshot { session } => {
+                match self.lock_router().sessions.get(session) {
+                    Some(m) => Response::Snapshot(SnapshotReply {
+                        session: *session,
+                        snapshot: m.snapshot(),
+                    }),
+                    None => error_reply(Some(*session), Error::UnknownSession(*session)),
+                }
             }
             // The frontend just acks; stopping the accept loop is the
             // transport layer's job (see `service::server`).
             Request::Shutdown => Response::Admission(AdmissionReply::ok(None)),
         }
     }
-}
 
-fn unknown_session(sid: u64) -> Response {
-    Response::Admission(AdmissionReply::denied(
-        Some(sid),
-        AdmissionError::Rejected { reason: format!("unknown session {sid}") },
-    ))
+    fn close_session(&self, sid: SessionId) -> Response {
+        let meta = match self.lock_router().sessions.remove(&sid) {
+            Some(m) => m,
+            None => return error_reply(Some(sid), Error::UnknownSession(sid)),
+        };
+        let removed = {
+            let mut st = self.lock_shard(meta.shard);
+            let r = st.sessions.remove(&sid);
+            if r.is_some() {
+                // Decrementing while the state lock is held is what
+                // keeps this ordered against death-zeroing.
+                self.shards[meta.shard].tenants.fetch_sub(1, Ordering::SeqCst);
+            }
+            r
+        };
+        {
+            let mut router = self.lock_router();
+            match &removed {
+                Some(session) => {
+                    router.closed_admission.merge(&session.admission_stats());
+                    router.closed_rounds_run += session.rounds_run();
+                    router.closed_dealt += session.dealt_rounds();
+                }
+                None => {
+                    // The shard died and the session was never touched
+                    // again: its engine-side counters went down with the
+                    // shard, but the router knows the rounds it consumed
+                    // (fold that count as the lower bound for dealing).
+                    let synth = AdmissionStats {
+                        admitted_rounds: meta.rounds_done,
+                        ..AdmissionStats::default()
+                    };
+                    router.closed_admission.merge(&synth);
+                    router.closed_rounds_run += meta.rounds_done;
+                    router.closed_dealt += meta.rounds_done;
+                }
+            }
+        }
+        drop(removed); // deregisters from the shard's plane
+        self.retire_if_drained(meta.shard);
+        Response::Admission(AdmissionReply::ok(Some(sid)))
+    }
+
+    fn frontend_stats(&self) -> Response {
+        // Fold closed counters first (router lock alone), then walk the
+        // shards one at a time — never two locks at once on this path.
+        let (mut admission, mut rounds_run, mut dealt_rounds) = {
+            let router = self.lock_router();
+            (router.closed_admission.clone(), router.closed_rounds_run, router.closed_dealt)
+        };
+        for i in 0..self.shards.len() {
+            let st = self.lock_shard(i);
+            if self.shards[i].dead.load(Ordering::SeqCst) {
+                continue;
+            }
+            for session in st.sessions.values() {
+                admission.merge(&session.admission_stats());
+                rounds_run += session.rounds_run();
+                dealt_rounds += session.dealt_rounds();
+            }
+        }
+        Response::Stats(StatsReply {
+            session: None,
+            shard: None,
+            rounds_run,
+            dealt_rounds,
+            admission,
+            shard_tenants: Some(self.shard_tenants()),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -491,10 +840,17 @@ mod tests {
     use crate::protocol::plain_hierarchical_vote;
     use crate::util::rng::{Rng, Xoshiro256pp};
 
-    fn open(fe: &mut AggFrontend, cfg: HiSafeConfig, d: usize, seed: u64) -> u64 {
+    fn open(fe: &AggFrontend, cfg: HiSafeConfig, d: usize, seed: u64) -> SessionId {
         match fe.handle(&Request::SessionOpen { cfg, d, seed, qos: QosPolicy::unlimited() }) {
             Response::Admission(AdmissionReply { session: Some(sid), error: None }) => sid,
             other => panic!("expected a session grant, got {other:?}"),
+        }
+    }
+
+    fn shard_of(fe: &AggFrontend, sid: SessionId) -> usize {
+        match fe.handle(&Request::StatsQuery { session: Some(sid) }) {
+            Response::Stats(s) => s.shard.expect("session stats carry a shard"),
+            other => panic!("expected stats, got {other:?}"),
         }
     }
 
@@ -593,8 +949,8 @@ mod tests {
     #[test]
     fn frontend_votes_match_plain_reference_across_shards() {
         let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
-        let mut fe = AggFrontend::new(3, 1);
-        let sids: Vec<u64> = (0..4).map(|i| open(&mut fe, cfg, 5, 100 + i)).collect();
+        let fe = AggFrontend::new(3, 1);
+        let sids: Vec<SessionId> = (0..4).map(|i| open(&fe, cfg, 5, 100 + i)).collect();
         assert_eq!(fe.live_sessions(), 4);
         for r in 0..2u64 {
             for (i, &sid) in sids.iter().enumerate() {
@@ -614,9 +970,8 @@ mod tests {
     fn malformed_session_shapes_are_rejected_not_panics() {
         // A wire SessionOpen with a config the engine would assert on
         // (ell = 0, ell not dividing n, n = 0) — or absurd sizes — must
-        // be a typed rejection. A panic here would poison the server's
-        // frontend mutex and kill every live session.
-        let mut fe = AggFrontend::new(2, 1);
+        // be a typed rejection before any engine surface is reached.
+        let fe = AggFrontend::new(2, 1);
         let ok = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
         for (cfg, d) in [
             (HiSafeConfig { ell: 0, ..ok }, 4),                  // ell = 0
@@ -637,7 +992,7 @@ mod tests {
         }
         assert_eq!(fe.live_sessions(), 0);
         // Oversized prefetch requests are capped per call, not executed.
-        let sid = open(&mut fe, ok, 5, 1);
+        let sid = open(&fe, ok, 5, 1);
         match fe.handle(&Request::Prefetch { session: sid, rounds: MAX_PREFETCH_ROUNDS + 1 }) {
             Response::Admission(AdmissionReply {
                 error: Some(AdmissionError::Rejected { reason }),
@@ -650,8 +1005,8 @@ mod tests {
     #[test]
     fn malformed_round_shapes_are_rejected_not_panics() {
         let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
-        let mut fe = AggFrontend::new(1, 1);
-        let sid = open(&mut fe, cfg, 5, 1);
+        let fe = AggFrontend::new(1, 1);
+        let sid = open(&fe, cfg, 5, 1);
         // Wrong user count and wrong dimension both come back typed.
         for signs in [rand_signs(5, 5, 2), rand_signs(6, 4, 3)] {
             match fe.handle(&Request::RoundSubmit { session: sid, signs }) {
@@ -663,7 +1018,10 @@ mod tests {
             }
         }
         // Unknown sessions likewise.
-        match fe.handle(&Request::RoundSubmit { session: 999, signs: rand_signs(6, 5, 4) }) {
+        match fe.handle(&Request::RoundSubmit {
+            session: SessionId::new(999),
+            signs: rand_signs(6, 5, 4),
+        }) {
             Response::Admission(AdmissionReply {
                 error: Some(AdmissionError::Rejected { reason }),
                 ..
@@ -675,10 +1033,10 @@ mod tests {
     #[test]
     fn capacity_spill_over_prefers_least_loaded_then_rejects_when_full() {
         let cfg = HiSafeConfig::flat(3, TiePolicy::OneBit);
-        let mut fe = AggFrontend::with_shard_capacity(2, 1, 2);
+        let fe = AggFrontend::with_shard_capacity(2, 1, 2);
         // 4 tenants fill both shards (2 each) regardless of rendezvous
         // preference, because capacity overflow spills.
-        let _sids: Vec<u64> = (0..4).map(|i| open(&mut fe, cfg, 4, i)).collect();
+        let _sids: Vec<SessionId> = (0..4).map(|i| open(&fe, cfg, 4, i)).collect();
         assert_eq!(fe.shard_tenants(), vec![2, 2]);
         // A 5th tenant has nowhere to go.
         match fe.handle(&Request::SessionOpen {
@@ -698,18 +1056,14 @@ mod tests {
     #[test]
     fn drain_empties_and_retires_a_shard_then_undrain_restores_it() {
         let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
-        let mut fe = AggFrontend::new(2, 1);
+        let fe = AggFrontend::new(2, 1);
         // Open sessions until both shards hold at least one, remembering
         // every session's shard.
-        let mut placed: Vec<(u64, usize)> = Vec::new();
+        let mut placed: Vec<(SessionId, usize)> = Vec::new();
         let mut seed = 0u64;
         while !(placed.iter().any(|&(_, s)| s == 0) && placed.iter().any(|&(_, s)| s == 1)) {
-            let sid = open(&mut fe, cfg, 5, seed);
-            let shard = match fe.handle(&Request::StatsQuery { session: Some(sid) }) {
-                Response::Stats(s) => s.shard.unwrap(),
-                other => panic!("expected stats, got {other:?}"),
-            };
-            placed.push((sid, shard));
+            let sid = open(&fe, cfg, 5, seed);
+            placed.push((sid, shard_of(&fe, sid)));
             seed += 1;
             assert!(seed < 100, "rendezvous never covered both shards");
         }
@@ -718,14 +1072,11 @@ mod tests {
         assert!(fe.shard_is_live(drained), "live sessions keep the scheduler");
         // New tenants all land on the surviving shard.
         for s in 100..104u64 {
-            let sid = open(&mut fe, cfg, 5, s);
-            match fe.handle(&Request::StatsQuery { session: Some(sid) }) {
-                Response::Stats(st) => assert_eq!(st.shard, Some(1)),
-                other => panic!("expected stats, got {other:?}"),
-            }
+            let sid = open(&fe, cfg, 5, s);
+            assert_eq!(shard_of(&fe, sid), 1);
         }
         // The draining shard's sessions still run rounds.
-        let on_drained: Vec<u64> =
+        let on_drained: Vec<SessionId> =
             placed.iter().filter(|&&(_, s)| s == drained).map(|&(sid, _)| sid).collect();
         let signs = rand_signs(6, 5, 77);
         match fe.handle(&Request::RoundSubmit { session: on_drained[0], signs: signs.clone() }) {
@@ -748,12 +1099,8 @@ mod tests {
         fe.undrain_shard(drained);
         let mut seed = 1000u64;
         loop {
-            let sid = open(&mut fe, cfg, 5, seed);
-            let shard = match fe.handle(&Request::StatsQuery { session: Some(sid) }) {
-                Response::Stats(s) => s.shard.unwrap(),
-                other => panic!("expected stats, got {other:?}"),
-            };
-            if shard == drained {
+            let sid = open(&fe, cfg, 5, seed);
+            if shard_of(&fe, sid) == drained {
                 break;
             }
             seed += 1;
@@ -765,9 +1112,9 @@ mod tests {
     #[test]
     fn frontend_stats_merge_across_shards_and_survive_churn() {
         let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
-        let mut fe = AggFrontend::new(2, 1);
-        let a = open(&mut fe, cfg, 5, 1);
-        let b = open(&mut fe, cfg, 5, 2);
+        let fe = AggFrontend::new(2, 1);
+        let a = open(&fe, cfg, 5, 1);
+        let b = open(&fe, cfg, 5, 2);
         for r in 0..3u64 {
             for &sid in [a, b].iter() {
                 let signs = rand_signs(6, 5, 50 + r);
@@ -789,6 +1136,196 @@ mod tests {
                 assert_eq!(tenants.iter().sum::<usize>(), 1, "one session still live");
             }
             other => panic!("expected stats, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn killed_shard_sessions_restore_transparently_with_bit_identical_votes() {
+        let cfg = HiSafeConfig::hierarchical(12, 4, TiePolicy::OneBit);
+        let (d, rounds) = (9, 5);
+        // Uninterrupted reference: same tenant on a 1-shard frontend.
+        let reference = AggFrontend::new(1, 1);
+        let ref_sid = open(&reference, cfg, d, 7);
+        // Interrupted run: the tenant's shard is killed mid-sweep.
+        let fe = AggFrontend::new(2, 1);
+        let sid = open(&fe, cfg, d, 7);
+        let before = shard_of(&fe, sid);
+        for r in 0..rounds as u64 {
+            let signs = rand_signs(cfg.n, d, 900 + r);
+            if r == 2 {
+                fe.kill_shard(before);
+                assert!(fe.shard_is_dead(before));
+            }
+            let interrupted = match fe
+                .handle(&Request::RoundSubmit { session: sid, signs: signs.clone() })
+            {
+                Response::Vote(v) => v,
+                other => panic!("round {r} after kill must still vote, got {other:?}"),
+            };
+            let uninterrupted = match reference
+                .handle(&Request::RoundSubmit { session: ref_sid, signs: signs.clone() })
+            {
+                Response::Vote(v) => v,
+                other => panic!("reference round {r} failed: {other:?}"),
+            };
+            // Bit-identical across the kill: global AND subgroup votes.
+            assert_eq!(interrupted.global_vote, uninterrupted.global_vote, "round {r}");
+            assert_eq!(interrupted.subgroup_votes, uninterrupted.subgroup_votes, "round {r}");
+            assert_eq!(interrupted.global_vote, plain_hierarchical_vote(&signs, cfg));
+        }
+        // The session now lives on the surviving shard, with counter
+        // continuity: rounds_run picks up where the snapshot left off.
+        let after = shard_of(&fe, sid);
+        assert_ne!(after, before, "session must have moved off the dead shard");
+        match fe.handle(&Request::StatsQuery { session: Some(sid) }) {
+            Response::Stats(s) => {
+                assert_eq!(s.rounds_run, rounds as u64);
+                assert_eq!(s.admission.admitted_rounds, rounds as u64);
+            }
+            other => panic!("expected stats, got {other:?}"),
+        }
+        // And the dead shard stays out of placement.
+        for s in 0..8u64 {
+            let extra = open(&fe, cfg, d, 2000 + s);
+            assert_eq!(shard_of(&fe, extra), after);
+        }
+    }
+
+    #[test]
+    fn poisoned_shard_lock_degrades_to_restore_not_a_bricked_frontend() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let fe = AggFrontend::new(2, 1);
+        let sid = open(&fe, cfg, 5, 3);
+        let signs = rand_signs(6, 5, 11);
+        match fe.handle(&Request::RoundSubmit { session: sid, signs: signs.clone() }) {
+            Response::Vote(_) => {}
+            other => panic!("expected a vote, got {other:?}"),
+        }
+        // Poison the session's shard lock the way a buggy handler would:
+        // panic while holding it.
+        let shard = shard_of(&fe, sid);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = fe.shards[shard].state.lock().unwrap();
+            panic!("simulated handler bug");
+        }));
+        assert!(result.is_err(), "the simulated panic must propagate");
+        // The next request absorbs the poison (shard marked dead) and
+        // transparently restores the session — same votes, no panic, no
+        // poisoned-mutex unwrap anywhere on the path.
+        let signs2 = rand_signs(6, 5, 12);
+        match fe.handle(&Request::RoundSubmit { session: sid, signs: signs2.clone() }) {
+            Response::Vote(v) => {
+                assert_eq!(v.global_vote, plain_hierarchical_vote(&signs2, cfg))
+            }
+            other => panic!("expected a vote after poison recovery, got {other:?}"),
+        }
+        assert!(fe.shard_is_dead(shard));
+        assert_ne!(shard_of(&fe, sid), shard);
+        // New sessions keep being admitted (on the surviving shard).
+        let extra = open(&fe, cfg, 5, 77);
+        assert_ne!(shard_of(&fe, extra), shard);
+    }
+
+    #[test]
+    fn snapshot_and_restore_requests_round_trip_across_frontends() {
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let fe_a = AggFrontend::new(2, 1);
+        let sid = open(&fe_a, cfg, 5, 21);
+        for r in 0..2u64 {
+            let signs = rand_signs(6, 5, 300 + r);
+            match fe_a.handle(&Request::RoundSubmit { session: sid, signs }) {
+                Response::Vote(_) => {}
+                other => panic!("expected a vote, got {other:?}"),
+            }
+        }
+        // Snapshot reflects exactly the rounds consumed so far.
+        let snap = match fe_a.handle(&Request::SessionSnapshot { session: sid }) {
+            Response::Snapshot(s) => {
+                assert_eq!(s.session, sid);
+                assert_eq!(s.snapshot.rounds, 2);
+                assert_eq!(s.snapshot.seed, 21);
+                s.snapshot
+            }
+            other => panic!("expected a snapshot, got {other:?}"),
+        };
+        // Restore on a DIFFERENT frontend (the cross-host handoff the
+        // balancer performs); the next round there must match the next
+        // round on the original bit-for-bit.
+        let fe_b = AggFrontend::new(3, 1);
+        let restored = match fe_b.handle(&Request::SessionRestore { snapshot: snap }) {
+            Response::Admission(AdmissionReply { session: Some(s), error: None }) => s,
+            other => panic!("expected a restore grant, got {other:?}"),
+        };
+        let signs = rand_signs(6, 5, 302);
+        let v_a = match fe_a.handle(&Request::RoundSubmit { session: sid, signs: signs.clone() })
+        {
+            Response::Vote(v) => v,
+            other => panic!("expected a vote, got {other:?}"),
+        };
+        let v_b = match fe_b
+            .handle(&Request::RoundSubmit { session: restored, signs: signs.clone() })
+        {
+            Response::Vote(v) => v,
+            other => panic!("expected a vote, got {other:?}"),
+        };
+        assert_eq!(v_a.global_vote, v_b.global_vote);
+        assert_eq!(v_a.subgroup_votes, v_b.subgroup_votes);
+        assert_eq!(v_a.global_vote, plain_hierarchical_vote(&signs, cfg));
+        // Unknown sessions get the typed unknown-session denial.
+        match fe_b.handle(&Request::SessionSnapshot { session: SessionId::new(555) }) {
+            Response::Admission(AdmissionReply {
+                error: Some(AdmissionError::Rejected { reason }),
+                ..
+            }) => assert!(reason.contains("unknown session"), "reason: {reason}"),
+            other => panic!("expected unknown-session, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shards_serve_rounds_concurrently_under_shared_reference() {
+        // Two sessions pinned to different shards, driven from two
+        // threads through one &AggFrontend: both must make progress and
+        // produce reference votes (the per-shard-lock contract — with
+        // one global lock this still passes, but the kill/restore and
+        // bench coverage pin the parallelism; this pins thread-safety).
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let fe = std::sync::Arc::new(AggFrontend::new(2, 1));
+        let mut sids = Vec::new();
+        let mut seed = 0u64;
+        while sids.len() < 2 {
+            let sid = open(&fe, cfg, 5, seed);
+            if sids.iter().all(|&(_, sh)| sh != shard_of(&fe, sid)) {
+                sids.push((sid, shard_of(&fe, sid)));
+            } else {
+                fe.handle(&Request::SessionClose { session: sid });
+            }
+            seed += 1;
+            assert!(seed < 100, "rendezvous never covered both shards");
+        }
+        let handles: Vec<_> = sids
+            .iter()
+            .map(|&(sid, _)| {
+                let fe = fe.clone();
+                std::thread::spawn(move || {
+                    for r in 0..4u64 {
+                        let signs = rand_signs(6, 5, sid.as_u64() * 100 + r);
+                        match fe.handle(&Request::RoundSubmit {
+                            session: sid,
+                            signs: signs.clone(),
+                        }) {
+                            Response::Vote(v) => assert_eq!(
+                                v.global_vote,
+                                plain_hierarchical_vote(&signs, cfg)
+                            ),
+                            other => panic!("expected a vote, got {other:?}"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("worker thread must not panic");
         }
     }
 }

@@ -1,42 +1,58 @@
 //! The transport-agnostic service layer: Hi-SAFE aggregation behind a
 //! serializable request/response protocol instead of in-process method
-//! calls.
+//! calls — now a multi-process *cluster*, not just a single server.
 //!
-//! Three files, three responsibilities:
+//! Five files, five responsibilities:
 //!
 //! * [`proto`] — the versioned wire protocol: [`Request`] / [`Response`]
 //!   values with lossless JSON encodings ([`QosPolicy`],
-//!   [`AdmissionError`], and [`CommStats`] ride the wire unchanged,
-//!   exactly as PR 4 designed them to).
+//!   [`AdmissionError`], and [`CommStats`] ride the wire unchanged),
+//!   including the `SessionSnapshot` / `SessionRestore` pair that makes
+//!   a session a serializable, host-portable value.
+//! * [`error`] — [`Error`], the one typed error surface every service
+//!   layer produces (frontend routing, TCP transport, the balancer);
+//!   non-admission variants fold to typed `Rejected` replies on the
+//!   wire.
 //! * [`frontend`] — [`AggFrontend`], the sharded router: `K`
-//!   [`AggScheduler`] shards behind rendezvous-hash tenant placement
-//!   with least-loaded spill-over, plus shard drain/rebalance. The
-//!   frontend speaks *only* the protocol — no caller reaches an engine
-//!   directly.
+//!   [`AggScheduler`] shards behind **per-shard locks** (K shards serve
+//!   K wire rounds in parallel), rendezvous-hash tenant placement with
+//!   least-loaded spill-over, shard drain/rebalance, and shard-death
+//!   absorption with transparent bit-identical session restore.
 //! * [`server`] — the std-only TCP transport: [`ServiceServer`]
-//!   (newline-delimited JSON frames, `hisafe serve`) and the blocking
-//!   [`ServiceClient`] (`hisafe sweep --remote`,
+//!   (newline-delimited JSON frames, a bounded connection-worker pool,
+//!   `hisafe serve`) and the blocking [`ServiceClient`]
+//!   (`hisafe sweep --remote`,
 //!   [`train_remote`](crate::fl::trainer::train_remote)).
+//! * [`balancer`] — [`Balancer`] (`hisafe balance`): a fail-over load
+//!   balancer fronting several `serve` hosts, with health checks,
+//!   dead-host detection, and snapshot-based session fail-over that
+//!   keeps votes bit-identical across a mid-sweep host kill.
 //!
 //! The layering means "remote" is a transport decision, not a protocol
 //! fork: the same [`AggFrontend`] serves in-process embedding (call
-//! [`AggFrontend::handle`] directly) and cross-process TCP, and remote
-//! votes are bit-identical to in-process ones because placement and
-//! transport never touch the seed-derived triple streams
+//! [`AggFrontend::handle`] directly) and cross-process TCP, the
+//! balancer speaks the identical protocol on both of its sides, and
+//! votes are bit-identical everywhere because placement, transport, and
+//! fail-over never touch the seed-derived triple streams
 //! (`rust/tests/service_props.rs` pins `train_remote` ≡ `train` ≡
-//! `run_sync`).
+//! `run_sync`, including across shard kills and host fail-over).
 //!
 //! [`QosPolicy`]: crate::engine::QosPolicy
 //! [`AdmissionError`]: crate::engine::AdmissionError
 //! [`CommStats`]: crate::metrics::CommStats
 //! [`AggScheduler`]: crate::engine::AggScheduler
 
+pub mod balancer;
+pub mod error;
 pub mod frontend;
 pub mod proto;
 pub mod server;
 
+pub use balancer::Balancer;
+pub use error::Error;
 pub use frontend::AggFrontend;
 pub use proto::{
-    AdmissionReply, ProtoError, Request, Response, StatsReply, VoteReply, PROTOCOL_VERSION,
+    AdmissionReply, ProtoError, Request, Response, SnapshotReply, StatsReply, VoteReply,
+    PROTOCOL_VERSION,
 };
-pub use server::{ServiceClient, ServiceError, ServiceServer};
+pub use server::{ServiceClient, ServiceServer};

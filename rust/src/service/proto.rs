@@ -23,7 +23,12 @@
 //! 3. **Versioned.** Every message carries `"v":` [`PROTOCOL_VERSION`];
 //!    decoding rejects other versions up front, so schema evolution is
 //!    an explicit version bump instead of silent field drift (the key
-//!    sets themselves are pinned by snapshot tests below).
+//!    sets themselves are pinned by snapshot tests below). Adding NEW
+//!    message types is deliberately *not* a version bump: an old peer
+//!    rejects an unknown type with a typed error, every pre-existing
+//!    message is byte-identical, and the snapshot tests pin the new
+//!    types' key sets alongside the old (the
+//!    `SessionSnapshot`/`SessionRestore` pair landed this way).
 //!
 //! The request vocabulary is deliberately the admission-control surface
 //! of [`crate::engine::AggScheduler`] — `SessionOpen` ≈ `try_session`,
@@ -34,7 +39,7 @@
 use std::fmt;
 use std::time::Duration;
 
-use crate::engine::{AdmissionError, QosPolicy};
+use crate::engine::{AdmissionError, QosPolicy, SessionId, SessionSnapshot};
 use crate::metrics::{AdmissionStats, CommStats};
 use crate::poly::TiePolicy;
 use crate::protocol::HiSafeConfig;
@@ -93,7 +98,7 @@ pub enum Request {
     /// [`AdmissionReply`] carrying `Throttled` for the client to retry.
     RoundSubmit {
         /// Session id granted by `SessionOpen`.
-        session: u64,
+        session: SessionId,
         /// `signs[i]` is user `i`'s sign vector over `{-1, 0, +1}`,
         /// length `d`.
         signs: Vec<Vec<i8>>,
@@ -103,7 +108,7 @@ pub enum Request {
     /// [`AggSession::try_prefetch`](crate::engine::AggSession::try_prefetch)).
     Prefetch {
         /// Session id granted by `SessionOpen`.
-        session: u64,
+        session: SessionId,
         /// Rounds of dealing to queue.
         rounds: usize,
     },
@@ -111,14 +116,31 @@ pub enum Request {
     /// admission counters into the frontend-wide aggregate.
     SessionClose {
         /// Session id granted by `SessionOpen`.
-        session: u64,
+        session: SessionId,
     },
     /// Read admission/scheduling counters: for one session
     /// (`Some(id)`), or frontend-wide (`None` — merged across every
     /// shard, plus per-shard tenant counts).
     StatsQuery {
         /// Session scope, or `None` for the whole frontend.
-        session: Option<u64>,
+        session: Option<SessionId>,
+    },
+    /// Read a session's serializable [`SessionSnapshot`] — everything a
+    /// balancer needs to re-place the session on another host
+    /// bit-identically (answered with [`Response::Snapshot`]).
+    SessionSnapshot {
+        /// Session id granted by `SessionOpen`.
+        session: SessionId,
+    },
+    /// Resume a snapshotted session on *this* host: admission runs like
+    /// `SessionOpen`, then the dealers fast-forward by `snapshot.rounds`
+    /// whole rounds (the wire form of
+    /// [`try_session_resumed`](crate::engine::AggScheduler::try_session_resumed)).
+    /// Answered with an [`AdmissionReply`] carrying the NEW session id.
+    SessionRestore {
+        /// The snapshot to replay (from [`Request::SessionSnapshot`], or
+        /// tracked balancer-side).
+        snapshot: SessionSnapshot,
     },
     /// Ask the server process to stop accepting connections and exit
     /// its serve loop (acknowledged with an empty [`AdmissionReply`]).
@@ -137,6 +159,8 @@ pub enum Response {
     Admission(AdmissionReply),
     /// Counters for a `StatsQuery`.
     Stats(StatsReply),
+    /// A session's serializable state, for `Request::SessionSnapshot`.
+    Snapshot(SnapshotReply),
 }
 
 /// One admitted round's outcome — the wire form of
@@ -145,7 +169,7 @@ pub enum Response {
 #[derive(Debug, Clone, PartialEq)]
 pub struct VoteReply {
     /// Session the round ran on.
-    pub session: u64,
+    pub session: SessionId,
     /// Global vote per coordinate (`{-1, +1}`, or 0 under inter TwoBit).
     pub global_vote: Vec<i8>,
     /// Subgroup votes `s_j` (the Theorem-2 leakage, same as local).
@@ -162,19 +186,19 @@ pub struct VoteReply {
 #[derive(Debug, Clone, PartialEq)]
 pub struct AdmissionReply {
     /// Granted/echoed session id, when the request targeted one.
-    pub session: Option<u64>,
+    pub session: Option<SessionId>,
     /// The typed denial, absent on success.
     pub error: Option<AdmissionError>,
 }
 
 impl AdmissionReply {
     /// A plain success ack (optionally echoing the session id).
-    pub fn ok(session: Option<u64>) -> AdmissionReply {
+    pub fn ok(session: Option<SessionId>) -> AdmissionReply {
         AdmissionReply { session, error: None }
     }
 
     /// A typed denial.
-    pub fn denied(session: Option<u64>, error: AdmissionError) -> AdmissionReply {
+    pub fn denied(session: Option<SessionId>, error: AdmissionError) -> AdmissionReply {
         AdmissionReply { session, error: Some(error) }
     }
 }
@@ -187,7 +211,7 @@ impl AdmissionReply {
 #[derive(Debug, Clone, PartialEq)]
 pub struct StatsReply {
     /// The queried session, absent for frontend scope.
-    pub session: Option<u64>,
+    pub session: Option<SessionId>,
     /// Shard the session lives on, absent for frontend scope.
     pub shard: Option<usize>,
     /// Rounds executed (session scope) or summed over live sessions.
@@ -199,6 +223,18 @@ pub struct StatsReply {
     pub admission: AdmissionStats,
     /// Live tenants per shard, frontend scope only.
     pub shard_tenants: Option<Vec<usize>>,
+}
+
+/// A session's serializable state — the answer to
+/// [`Request::SessionSnapshot`], and the payload a balancer replays via
+/// [`Request::SessionRestore`] to re-place the session on another host
+/// with bit-identical votes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotReply {
+    /// The snapshotted session's id.
+    pub session: SessionId,
+    /// Everything needed to resume it elsewhere.
+    pub snapshot: SessionSnapshot,
 }
 
 // ---------------------------------------------------------------- encode
@@ -213,6 +249,12 @@ fn base(msg_type: &str) -> Json {
 /// above 2⁵³, and seeds/session ids must survive the wire bit-exactly.
 fn u64_str(x: u64) -> Json {
     Json::Str(x.to_string())
+}
+
+/// A [`SessionId`] in its wire form — the decimal string its `Display`
+/// defines (see the `u64_str` rationale above).
+fn sid_json(sid: SessionId) -> Json {
+    Json::Str(sid.to_string())
 }
 
 /// A sign/vote vector as one char per coordinate: `+` / `-` / `0`.
@@ -258,6 +300,18 @@ fn cfg_json(cfg: &HiSafeConfig) -> Json {
     j
 }
 
+/// A [`SessionSnapshot`]'s fields, flattened into `j` alongside the
+/// message envelope (the same `cfg`/`d`/`seed`/`qos` encodings
+/// `SessionOpen` uses; `rounds` rides as a decimal string because the
+/// fast-forward distance must survive the wire bit-exactly).
+fn set_snapshot_fields(j: &mut Json, snap: &SessionSnapshot) {
+    j.set("cfg", cfg_json(&snap.cfg))
+        .set("d", snap.d)
+        .set("seed", u64_str(snap.seed))
+        .set("qos", qos_json(&snap.qos))
+        .set("rounds", u64_str(snap.rounds));
+}
+
 /// [`AdmissionError`] on the wire: a `kind` tag plus the variant's
 /// payload. `Throttled`'s `Duration` splits into whole seconds (decimal
 /// string, lossless for any `u64`) and subsecond nanos (a number — `u32`
@@ -296,7 +350,7 @@ impl Request {
             }
             Request::RoundSubmit { session, signs } => {
                 let mut j = base("round_submit");
-                j.set("session", u64_str(*session)).set(
+                j.set("session", sid_json(*session)).set(
                     "signs",
                     Json::Arr(signs.iter().map(|s| signs_str(s)).collect()),
                 );
@@ -304,19 +358,29 @@ impl Request {
             }
             Request::Prefetch { session, rounds } => {
                 let mut j = base("prefetch");
-                j.set("session", u64_str(*session)).set("rounds", *rounds);
+                j.set("session", sid_json(*session)).set("rounds", *rounds);
                 j
             }
             Request::SessionClose { session } => {
                 let mut j = base("session_close");
-                j.set("session", u64_str(*session));
+                j.set("session", sid_json(*session));
                 j
             }
             Request::StatsQuery { session } => {
                 let mut j = base("stats_query");
                 if let Some(sid) = session {
-                    j.set("session", u64_str(*sid));
+                    j.set("session", sid_json(*sid));
                 }
+                j
+            }
+            Request::SessionSnapshot { session } => {
+                let mut j = base("session_snapshot");
+                j.set("session", sid_json(*session));
+                j
+            }
+            Request::SessionRestore { snapshot } => {
+                let mut j = base("session_restore");
+                set_snapshot_fields(&mut j, snapshot);
                 j
             }
             Request::Shutdown => base("shutdown"),
@@ -342,21 +406,25 @@ impl Request {
                     .iter()
                     .map(parse_signs)
                     .collect::<Result<Vec<Vec<i8>>, ProtoError>>()?;
-                Ok(Request::RoundSubmit { session: parse_u64_str(j, "session")?, signs })
+                Ok(Request::RoundSubmit { session: parse_sid(j, "session")?, signs })
             }
             "prefetch" => Ok(Request::Prefetch {
-                session: parse_u64_str(j, "session")?,
+                session: parse_sid(j, "session")?,
                 rounds: parse_usize(j, "rounds")?,
             }),
             "session_close" => {
-                Ok(Request::SessionClose { session: parse_u64_str(j, "session")? })
+                Ok(Request::SessionClose { session: parse_sid(j, "session")? })
             }
             "stats_query" => Ok(Request::StatsQuery {
                 session: match j.get("session") {
                     None => None,
-                    Some(_) => Some(parse_u64_str(j, "session")?),
+                    Some(_) => Some(parse_sid(j, "session")?),
                 },
             }),
+            "session_snapshot" => {
+                Ok(Request::SessionSnapshot { session: parse_sid(j, "session")? })
+            }
+            "session_restore" => Ok(Request::SessionRestore { snapshot: parse_snapshot(j)? }),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(ProtoError::new(format!("unknown request type '{other}'"))),
         }
@@ -369,7 +437,7 @@ impl Response {
         match self {
             Response::Vote(r) => {
                 let mut j = base("vote_reply");
-                j.set("session", u64_str(r.session))
+                j.set("session", sid_json(r.session))
                     .set("global_vote", signs_str(&r.global_vote))
                     .set(
                         "subgroup_votes",
@@ -381,7 +449,7 @@ impl Response {
             Response::Admission(r) => {
                 let mut j = base("admission_reply");
                 if let Some(sid) = r.session {
-                    j.set("session", u64_str(sid));
+                    j.set("session", sid_json(sid));
                 }
                 if let Some(e) = &r.error {
                     j.set("error", admission_error_json(e));
@@ -391,7 +459,7 @@ impl Response {
             Response::Stats(r) => {
                 let mut j = base("stats_reply");
                 if let Some(sid) = r.session {
-                    j.set("session", u64_str(sid));
+                    j.set("session", sid_json(sid));
                 }
                 if let Some(shard) = r.shard {
                     j.set("shard", shard);
@@ -402,6 +470,12 @@ impl Response {
                 if let Some(tenants) = &r.shard_tenants {
                     j.set("shard_tenants", tenants.clone());
                 }
+                j
+            }
+            Response::Snapshot(r) => {
+                let mut j = base("snapshot_reply");
+                j.set("session", sid_json(r.session));
+                set_snapshot_fields(&mut j, &r.snapshot);
                 j
             }
         }
@@ -417,7 +491,7 @@ impl Response {
                     .as_arr()
                     .ok_or_else(|| ProtoError::new("'subgroup_votes' must be an array"))?;
                 Ok(Response::Vote(VoteReply {
-                    session: parse_u64_str(j, "session")?,
+                    session: parse_sid(j, "session")?,
                     global_vote: parse_signs(field(j, "global_vote")?)?,
                     subgroup_votes: votes_arr
                         .iter()
@@ -429,7 +503,7 @@ impl Response {
             "admission_reply" => Ok(Response::Admission(AdmissionReply {
                 session: match j.get("session") {
                     None => None,
-                    Some(_) => Some(parse_u64_str(j, "session")?),
+                    Some(_) => Some(parse_sid(j, "session")?),
                 },
                 error: match j.get("error") {
                     None => None,
@@ -439,7 +513,7 @@ impl Response {
             "stats_reply" => Ok(Response::Stats(StatsReply {
                 session: match j.get("session") {
                     None => None,
-                    Some(_) => Some(parse_u64_str(j, "session")?),
+                    Some(_) => Some(parse_sid(j, "session")?),
                 },
                 shard: match j.get("shard") {
                     None => None,
@@ -465,6 +539,10 @@ impl Response {
                         )
                     }
                 },
+            })),
+            "snapshot_reply" => Ok(Response::Snapshot(SnapshotReply {
+                session: parse_sid(j, "session")?,
+                snapshot: parse_snapshot(j)?,
             })),
             other => Err(ProtoError::new(format!("unknown response type '{other}'"))),
         }
@@ -498,6 +576,14 @@ fn parse_u64_str(j: &Json, key: &str) -> Result<u64, ProtoError> {
         .as_str()
         .and_then(|s| s.parse::<u64>().ok())
         .ok_or_else(|| ProtoError::new(format!("'{key}' must be a decimal-string u64")))
+}
+
+/// A [`SessionId`] from its decimal-string wire form (its `FromStr`).
+fn parse_sid(j: &Json, key: &str) -> Result<SessionId, ProtoError> {
+    field(j, key)?
+        .as_str()
+        .and_then(|s| s.parse::<SessionId>().ok())
+        .ok_or_else(|| ProtoError::new(format!("'{key}' must be a decimal-string session id")))
 }
 
 fn parse_u64_num(j: &Json, key: &str) -> Result<u64, ProtoError> {
@@ -573,6 +659,17 @@ fn parse_qos(j: &Json) -> Result<QosPolicy, ProtoError> {
         rounds_per_sec: parse_opt_f64(j, "rounds_per_sec")?,
         triples_per_sec: parse_opt_f64(j, "triples_per_sec")?,
         burst_rounds: parse_f64(j, "burst_rounds")?,
+    })
+}
+
+/// The inverse of [`set_snapshot_fields`].
+fn parse_snapshot(j: &Json) -> Result<SessionSnapshot, ProtoError> {
+    Ok(SessionSnapshot {
+        cfg: parse_cfg(field(j, "cfg")?)?,
+        d: parse_usize(j, "d")?,
+        seed: parse_u64_str(j, "seed")?,
+        qos: parse_qos(field(j, "qos")?)?,
+        rounds: parse_u64_str(j, "rounds")?,
     })
 }
 
@@ -657,6 +754,20 @@ mod tests {
         }
     }
 
+    fn rand_sid(g: &mut Gen) -> SessionId {
+        SessionId::new(g.u64())
+    }
+
+    fn rand_snapshot(g: &mut Gen) -> SessionSnapshot {
+        SessionSnapshot {
+            cfg: rand_cfg(g),
+            d: g.usize_range(1, 40),
+            seed: g.u64(),
+            qos: rand_qos(g),
+            rounds: g.u64(),
+        }
+    }
+
     fn rand_sign_matrix(g: &mut Gen, rows: usize, d: usize) -> Vec<Vec<i8>> {
         (0..rows)
             .map(|_| {
@@ -696,17 +807,22 @@ mod tests {
         forall("wire requests round-trip", 60, |g| {
             let cfg = rand_cfg(g);
             let d = g.usize_range(0, 40);
-            let req = match g.range(0, 6) {
+            let req = match g.range(0, 8) {
                 0 => Request::SessionOpen { cfg, d, seed: g.u64(), qos: rand_qos(g) },
                 1 => Request::RoundSubmit {
-                    session: g.u64(),
+                    session: rand_sid(g),
                     signs: rand_sign_matrix(g, cfg.n, d),
                 },
-                2 => Request::Prefetch { session: g.u64(), rounds: g.usize_range(0, 1 << 20) },
-                3 => Request::SessionClose { session: g.u64() },
-                4 => Request::StatsQuery {
-                    session: if g.bool() { Some(g.u64()) } else { None },
+                2 => Request::Prefetch {
+                    session: rand_sid(g),
+                    rounds: g.usize_range(0, 1 << 20),
                 },
+                3 => Request::SessionClose { session: rand_sid(g) },
+                4 => Request::StatsQuery {
+                    session: if g.bool() { Some(rand_sid(g)) } else { None },
+                },
+                5 => Request::SessionSnapshot { session: rand_sid(g) },
+                6 => Request::SessionRestore { snapshot: rand_snapshot(g) },
                 _ => Request::Shutdown,
             };
             let text = req.to_json().to_string_compact();
@@ -720,12 +836,12 @@ mod tests {
     #[test]
     fn every_response_round_trips_losslessly() {
         forall("wire responses round-trip", 60, |g| {
-            let resp = match g.range(0, 2) {
+            let resp = match g.range(0, 3) {
                 0 => {
                     let ell = g.usize_range(1, 4);
                     let d = g.usize_range(0, 40);
                     Response::Vote(VoteReply {
-                        session: g.u64(),
+                        session: rand_sid(g),
                         global_vote: rand_sign_matrix(g, 1, d).remove(0),
                         subgroup_votes: rand_sign_matrix(g, ell, d),
                         stats: CommStats {
@@ -740,11 +856,15 @@ mod tests {
                     })
                 }
                 1 => Response::Admission(AdmissionReply {
-                    session: if g.bool() { Some(g.u64()) } else { None },
+                    session: if g.bool() { Some(rand_sid(g)) } else { None },
                     error: if g.bool() { Some(rand_admission_error(g)) } else { None },
                 }),
+                2 => Response::Snapshot(SnapshotReply {
+                    session: rand_sid(g),
+                    snapshot: rand_snapshot(g),
+                }),
                 _ => Response::Stats(StatsReply {
-                    session: if g.bool() { Some(g.u64()) } else { None },
+                    session: if g.bool() { Some(rand_sid(g)) } else { None },
                     shard: if g.bool() { Some(g.usize_range(0, 64)) } else { None },
                     rounds_run: rand_counter(g),
                     dealt_rounds: rand_counter(g),
@@ -832,27 +952,35 @@ mod tests {
             ["burst_rounds", "queue_depth", "rounds_per_sec", "triples_per_sec", "weight"]
         );
 
+        let sid = SessionId::new(1);
         let submit =
-            Request::RoundSubmit { session: 1, signs: vec![vec![1, -1, 0]] }.to_json();
+            Request::RoundSubmit { session: sid, signs: vec![vec![1, -1, 0]] }.to_json();
         assert_eq!(keys(&submit), ["session", "signs", "type", "v"]);
 
         assert_eq!(
-            keys(&Request::Prefetch { session: 1, rounds: 2 }.to_json()),
+            keys(&Request::Prefetch { session: sid, rounds: 2 }.to_json()),
             ["rounds", "session", "type", "v"]
         );
         assert_eq!(
-            keys(&Request::SessionClose { session: 1 }.to_json()),
+            keys(&Request::SessionClose { session: sid }.to_json()),
             ["session", "type", "v"]
         );
         assert_eq!(
-            keys(&Request::StatsQuery { session: Some(1) }.to_json()),
+            keys(&Request::StatsQuery { session: Some(sid) }.to_json()),
             ["session", "type", "v"]
         );
         assert_eq!(keys(&Request::StatsQuery { session: None }.to_json()), ["type", "v"]);
+        assert_eq!(
+            keys(&Request::SessionSnapshot { session: sid }.to_json()),
+            ["session", "type", "v"]
+        );
+        let snap = SessionSnapshot { cfg, d: 3, seed: 7, qos, rounds: 2 };
+        let restore = Request::SessionRestore { snapshot: snap.clone() }.to_json();
+        assert_eq!(keys(&restore), ["cfg", "d", "qos", "rounds", "seed", "type", "v"]);
         assert_eq!(keys(&Request::Shutdown.to_json()), ["type", "v"]);
 
         let vote = Response::Vote(VoteReply {
-            session: 1,
+            session: sid,
             global_vote: vec![1],
             subgroup_votes: vec![vec![1], vec![-1]],
             stats: CommStats::default(),
@@ -866,7 +994,7 @@ mod tests {
         // is pinned by the snapshot in metrics.rs.
 
         let denial = Response::Admission(AdmissionReply::denied(
-            Some(1),
+            Some(sid),
             AdmissionError::Throttled { retry_after: Duration::from_millis(5) },
         ))
         .to_json();
@@ -881,7 +1009,7 @@ mod tests {
         );
 
         let session_stats = Response::Stats(StatsReply {
-            session: Some(1),
+            session: Some(sid),
             shard: Some(0),
             rounds_run: 2,
             dealt_rounds: 3,
@@ -906,13 +1034,21 @@ mod tests {
             keys(&frontend_stats),
             ["admission", "dealt_rounds", "rounds_run", "shard_tenants", "type", "v"]
         );
+
+        let snapshot_reply =
+            Response::Snapshot(SnapshotReply { session: sid, snapshot: snap }).to_json();
+        assert_eq!(
+            keys(&snapshot_reply),
+            ["cfg", "d", "qos", "rounds", "seed", "session", "type", "v"]
+        );
     }
 
     #[test]
     fn signs_are_compact_strings_not_number_arrays() {
         // The encoding decision the module doc advertises: one char per
         // coordinate, so model-sized rounds stay cheap to frame.
-        let req = Request::RoundSubmit { session: 0, signs: vec![vec![1, -1, 0, 1]] };
+        let req =
+            Request::RoundSubmit { session: SessionId::new(0), signs: vec![vec![1, -1, 0, 1]] };
         let j = req.to_json();
         let arr = j.get("signs").unwrap().as_arr().unwrap();
         assert_eq!(arr[0].as_str().unwrap(), "+-0+");

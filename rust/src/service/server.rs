@@ -1,105 +1,136 @@
 //! A std-only TCP transport for the wire protocol: [`ServiceServer`]
-//! (newline-delimited JSON frames over loopback TCP, one thread per
-//! connection, all connections multiplexed onto one [`AggFrontend`])
-//! and the matching blocking [`ServiceClient`].
+//! (newline-delimited JSON frames over TCP, a **bounded pool of
+//! connection workers** multiplexing every connection onto one shared
+//! [`AggFrontend`]) and the matching blocking [`ServiceClient`].
 //!
 //! This is deliberately the simplest transport that makes the service
-//! layer *real*: two OS processes can run a genuine client/server
-//! aggregation round today (`hisafe serve` + `hisafe sweep --remote`),
-//! and the protocol work — versioning, lossless encodings, typed
-//! backpressure — lives in [`super::proto`] where any future transport
-//! (HTTP, UDS, shared memory) reuses it unchanged.
+//! layer *real*: separate OS processes run genuine client/server
+//! aggregation rounds today (`hisafe serve` + `hisafe sweep --remote`,
+//! or several `serve` hosts behind `hisafe balance`), and the protocol
+//! work — versioning, lossless encodings, typed backpressure — lives in
+//! [`super::proto`] where any future transport (HTTP, UDS, shared
+//! memory) reuses it unchanged.
 //!
 //! **Framing.** One compact JSON document per line, in both directions.
 //! Compact encodings are newline-free by construction (strings escape
-//! `\n`), so `read_line` is a complete framer. A line that fails to
-//! decode is answered with a typed `Rejected` reply carrying the parse
-//! error — a garbage client cannot crash the server.
+//! `\n`), so splitting on `\n` is a complete framer. A line that fails
+//! to decode is answered with a typed `Rejected` reply carrying the
+//! parse error — a garbage client cannot crash the server.
 //!
-//! **Concurrency.** The frontend sits behind one mutex: requests from
-//! concurrent connections serialize. That is the right first shape —
-//! the engine work *behind* the frontend is already parallel (shards'
-//! worker pools and dealing planes), and a round's mutex hold time is
-//! the online-phase latency the `sched_remote` bench measures. The
-//! mutex is the documented scaling boundary a future PR can split
-//! per-shard.
+//! **Concurrency: bounded connection workers.** The accept loop puts
+//! every connection in **non-blocking** mode and parks it in a shared
+//! registry; a fixed pool of worker threads sweeps the registry,
+//! `try_lock`ing one connection at a time and pumping whatever bytes
+//! are ready (reads accumulate into a per-connection line buffer,
+//! writes drain a per-connection out-buffer, `WouldBlock` just means
+//! "come back next sweep"). Two things follow:
 //!
-//! **Shutdown.** A [`Request::Shutdown`] acks, then stops the accept
-//! loop (waking it with a loopback self-connection), and
-//! [`ServiceServer::serve`] returns cleanly — the CI smoke test drives
-//! exactly this path and asserts the process exits 0.
+//! * **Idle is free.** A thousand connected-but-quiet clients cost a
+//!   thousand registry entries, not a thousand OS threads — the old
+//!   thread-per-connection model is gone.
+//! * **The wire path is as parallel as the frontend.** Each worker
+//!   calls [`AggFrontend::handle`] on a *shared reference*; the
+//!   frontend's per-shard locks (see [`super::frontend`]) let `K`
+//!   shards serve `K` concurrent wire rounds, so worker count — not a
+//!   global service mutex — is the transport's only concurrency knob.
+//!
+//! **Fault containment.** Every `handle` call runs under
+//! `catch_unwind`: a panicking request costs its caller a typed error
+//! reply and (at worst) one poisoned shard — absorbed and restored by
+//! the frontend on next touch — never a dead worker or a dead server.
+//!
+//! **Shutdown.** A [`Request::Shutdown`] is acked synchronously, then
+//! stops the accept loop (waking it with a loopback self-connection)
+//! and the workers; [`ServiceServer::serve`] joins the pool and returns
+//! cleanly — the CI smoke test drives exactly this path and asserts the
+//! process exits 0.
 
-use std::io::{self, BufRead, BufReader, Write};
+use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::engine::{AdmissionError, QosPolicy};
+use crate::engine::{AdmissionError, QosPolicy, SessionId, SessionSnapshot};
 use crate::protocol::HiSafeConfig;
 use crate::util::json::{parse, Json};
 
+use super::error::Error;
 use super::frontend::AggFrontend;
 use super::proto::{AdmissionReply, ProtoError, Request, Response, StatsReply, VoteReply};
 
-/// Everything a service call can fail with, client-side.
-#[derive(Debug)]
-pub enum ServiceError {
-    /// The transport failed (connect, read, write, peer hung up).
-    Io(io::Error),
-    /// The peer sent bytes the protocol layer rejects.
-    Proto(ProtoError),
-    /// The service answered with typed backpressure. `Throttled` is
-    /// retryable (see [`ServiceClient::run_round_admitted`]); the rest
-    /// are not.
-    Denied(AdmissionError),
-    /// The reply decoded fine but wasn't the kind this call expects.
-    Unexpected(String),
+/// Default connection-worker pool size when the caller doesn't choose
+/// (`hisafe serve --workers N` does).
+const DEFAULT_WORKERS: usize = 4;
+
+/// How long a worker sleeps after a sweep that moved no bytes. Low
+/// enough to keep per-request latency in the tens of microseconds,
+/// high enough that an idle server burns ~no CPU.
+const IDLE_SLEEP: Duration = Duration::from_micros(100);
+
+/// One registered connection: its I/O state behind a `try_lock`ed
+/// mutex (a connection is pumped by at most one worker at a time) and
+/// a closed flag the sweep uses to prune without locking.
+struct Conn {
+    io: Mutex<ConnIo>,
+    closed: AtomicBool,
 }
 
-impl std::fmt::Display for ServiceError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            ServiceError::Io(e) => write!(f, "service transport error: {e}"),
-            ServiceError::Proto(e) => write!(f, "{e}"),
-            ServiceError::Denied(e) => write!(f, "service denied request: {e}"),
-            ServiceError::Unexpected(msg) => write!(f, "unexpected reply: {msg}"),
-        }
-    }
+/// The per-connection I/O state a worker pumps: the non-blocking
+/// socket plus the partial-line in-buffer and the pending-reply
+/// out-buffer that let a connection make progress one readiness slice
+/// at a time.
+struct ConnIo {
+    stream: TcpStream,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
 }
 
-impl std::error::Error for ServiceError {}
-
-impl From<io::Error> for ServiceError {
-    fn from(e: io::Error) -> ServiceError {
-        ServiceError::Io(e)
-    }
+/// What one pump pass did with a connection.
+enum Pump {
+    /// No bytes ready in either direction.
+    Idle,
+    /// Read, handled, or wrote something.
+    Progress,
+    /// EOF, fatal I/O error, or post-shutdown: unregister it.
+    Closed,
 }
 
-impl From<ProtoError> for ServiceError {
-    fn from(e: ProtoError) -> ServiceError {
-        ServiceError::Proto(e)
-    }
-}
-
-/// The TCP service: a bound listener plus the shared [`AggFrontend`]
-/// every connection talks to.
+/// The TCP service: a bound listener, the shared [`AggFrontend`] every
+/// connection talks to, and the connection-worker pool configuration.
 pub struct ServiceServer {
     listener: TcpListener,
-    frontend: Arc<Mutex<AggFrontend>>,
+    frontend: Arc<AggFrontend>,
     stop: Arc<AtomicBool>,
+    workers: usize,
 }
 
 impl ServiceServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) over a
-    /// fresh frontend. The listener is live when this returns — clients
-    /// may connect before [`serve`](ServiceServer::serve) is called and
-    /// their connections queue in the accept backlog.
+    /// fresh frontend with the default worker pool. The listener is
+    /// live when this returns — clients may connect before
+    /// [`serve`](ServiceServer::serve) is called and their connections
+    /// queue in the accept backlog.
     pub fn bind(addr: &str, frontend: AggFrontend) -> io::Result<ServiceServer> {
+        Self::bind_with_workers(addr, frontend, DEFAULT_WORKERS)
+    }
+
+    /// Like [`bind`](ServiceServer::bind) with an explicit connection
+    /// worker count. Workers bound *concurrent request handling*, not
+    /// connections: any number of clients may stay connected, `workers`
+    /// of them are served at any instant.
+    pub fn bind_with_workers(
+        addr: &str,
+        frontend: AggFrontend,
+        workers: usize,
+    ) -> io::Result<ServiceServer> {
+        assert!(workers >= 1, "the service needs at least one connection worker");
         Ok(ServiceServer {
             listener: TcpListener::bind(addr)?,
-            frontend: Arc::new(Mutex::new(frontend)),
+            frontend: Arc::new(frontend),
             stop: Arc::new(AtomicBool::new(false)),
+            workers,
         })
     }
 
@@ -108,14 +139,22 @@ impl ServiceServer {
         self.listener.local_addr()
     }
 
-    /// Accept-and-dispatch until a client sends `Shutdown`. Each
-    /// connection gets its own thread; per-connection threads outlive
-    /// `serve` only as long as their sockets do (they exit on EOF /
-    /// error), and the shared frontend stays alive through its `Arc`
-    /// until the last one finishes.
+    /// Accept-and-dispatch until a client sends `Shutdown`: the accept
+    /// loop registers connections, the worker pool serves them, and a
+    /// shutdown request stops both (the pool is joined before this
+    /// returns, so "serve returned" means "no request is in flight").
     pub fn serve(self) -> io::Result<()> {
         let addr = self.listener.local_addr()?;
-        loop {
+        let registry: Arc<Mutex<Vec<Arc<Conn>>>> = Arc::new(Mutex::new(Vec::new()));
+        let pool: Vec<_> = (0..self.workers)
+            .map(|_| {
+                let registry = Arc::clone(&registry);
+                let frontend = Arc::clone(&self.frontend);
+                let stop = Arc::clone(&self.stop);
+                std::thread::spawn(move || worker_loop(registry, frontend, stop, addr))
+            })
+            .collect();
+        let accept_result = loop {
             let stream = match self.listener.accept() {
                 Ok((stream, _)) => stream,
                 // Transient, per-connection accept failures (peer reset
@@ -132,72 +171,191 @@ impl ServiceServer {
                 {
                     continue;
                 }
-                Err(e) => return Err(e),
+                Err(e) => break Err(e),
             };
             if self.stop.load(Ordering::SeqCst) {
                 // Woken by the shutdown self-connection (or raced by a
                 // late client): stop accepting.
-                return Ok(());
+                break Ok(());
             }
-            let frontend = Arc::clone(&self.frontend);
-            let stop = Arc::clone(&self.stop);
-            std::thread::spawn(move || serve_connection(stream, addr, frontend, stop));
+            if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            let _ = stream.set_nodelay(true);
+            lock_registry(&registry).push(Arc::new(Conn {
+                io: Mutex::new(ConnIo { stream, inbuf: Vec::new(), outbuf: Vec::new() }),
+                closed: AtomicBool::new(false),
+            }));
+        };
+        // Whether we stopped cleanly or the listener died, the workers
+        // must not outlive the server.
+        self.stop.store(true, Ordering::SeqCst);
+        for w in pool {
+            let _ = w.join();
+        }
+        accept_result
+    }
+}
+
+/// Lock the connection registry, absorbing poison: the registry holds
+/// only `Arc`s (no invariants beyond "is a list"), and a worker panic
+/// is already contained per-request, so recovery is always safe.
+fn lock_registry(registry: &Mutex<Vec<Arc<Conn>>>) -> std::sync::MutexGuard<'_, Vec<Arc<Conn>>> {
+    registry.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// One connection worker: sweep the registry, pump every connection
+/// whose lock is free, prune the closed, sleep briefly when a full
+/// sweep moved nothing.
+fn worker_loop(
+    registry: Arc<Mutex<Vec<Arc<Conn>>>>,
+    frontend: Arc<AggFrontend>,
+    stop: Arc<AtomicBool>,
+    server_addr: SocketAddr,
+) {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let conns: Vec<Arc<Conn>> = lock_registry(&registry).clone();
+        let mut moved = false;
+        let mut saw_closed = false;
+        for conn in &conns {
+            if conn.closed.load(Ordering::SeqCst) {
+                saw_closed = true;
+                continue;
+            }
+            // Another worker holds this connection: skip, don't wait.
+            let Ok(mut io) = conn.io.try_lock() else { continue };
+            match pump(&mut io, &frontend, &stop, server_addr) {
+                Pump::Idle => {}
+                Pump::Progress => moved = true,
+                Pump::Closed => {
+                    conn.closed.store(true, Ordering::SeqCst);
+                    saw_closed = true;
+                    moved = true;
+                }
+            }
+        }
+        if saw_closed {
+            lock_registry(&registry).retain(|c| !c.closed.load(Ordering::SeqCst));
+        }
+        if !moved {
+            std::thread::sleep(IDLE_SLEEP);
         }
     }
 }
 
-/// One connection's request loop. Runs on its own thread; returns (and
-/// drops the socket) on EOF, I/O error, or after acking a `Shutdown`.
-fn serve_connection(
-    stream: TcpStream,
+/// Pump one connection: read whatever is ready, answer every complete
+/// frame, flush whatever the socket will take. Never blocks (the
+/// stream is non-blocking; `WouldBlock` ends each half of the pass).
+fn pump(
+    io: &mut ConnIo,
+    frontend: &AggFrontend,
+    stop: &AtomicBool,
     server_addr: SocketAddr,
-    frontend: Arc<Mutex<AggFrontend>>,
-    stop: Arc<AtomicBool>,
-) {
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
+) -> Pump {
+    let mut moved = false;
+    // Read half: drain the socket into the line buffer.
+    let mut chunk = [0u8; 4096];
     loop {
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => return, // EOF: client done.
-            Ok(_) => {}
-            Err(_) => return,
+        match io.stream.read(&mut chunk) {
+            Ok(0) => return Pump::Closed, // EOF: client done.
+            Ok(n) => {
+                io.inbuf.extend_from_slice(&chunk[..n]);
+                moved = true;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return Pump::Closed,
         }
+    }
+    // Handle half: answer every complete line in arrival order.
+    while let Some(pos) = io.inbuf.iter().position(|&b| b == b'\n') {
+        let line: Vec<u8> = io.inbuf.drain(..=pos).collect();
+        let line = String::from_utf8_lossy(&line);
         if line.trim().is_empty() {
             continue;
         }
-        let (reply, shutdown) = match decode_request(&line) {
-            Ok(Request::Shutdown) => (Response::Admission(AdmissionReply::ok(None)), true),
-            Ok(req) => {
-                let mut fe = frontend.lock().expect("frontend mutex poisoned");
-                (fe.handle(&req), false)
-            }
-            // Malformed bytes get a typed reply, not a dropped
-            // connection — and certainly not a server panic.
-            Err(e) => (
-                Response::Admission(AdmissionReply::denied(
-                    None,
-                    AdmissionError::Rejected { reason: e.msg },
-                )),
-                false,
-            ),
-        };
+        moved = true;
+        let (reply, shutdown) = respond(&line, frontend);
         let mut out = reply.to_json().to_string_compact();
         out.push('\n');
-        if writer.write_all(out.as_bytes()).is_err() || writer.flush().is_err() {
-            return;
-        }
+        io.outbuf.extend_from_slice(out.as_bytes());
         if shutdown {
+            // Deliver the ack synchronously (the socket goes back to
+            // blocking just for this), then stop the server: flag the
+            // pool and wake the accept loop with a self-connection.
+            let _ = io.stream.set_nonblocking(false);
+            let _ = io.stream.write_all(&io.outbuf);
+            let _ = io.stream.flush();
+            io.outbuf.clear();
             stop.store(true, Ordering::SeqCst);
-            // Wake the accept loop so `serve` observes the flag and
-            // returns. The dummy connection is closed immediately.
             let _ = TcpStream::connect(server_addr);
-            return;
+            return Pump::Closed;
         }
+    }
+    // Write half: give the socket whatever it will take, keep the rest.
+    while !io.outbuf.is_empty() {
+        match io.stream.write(&io.outbuf) {
+            Ok(0) => return Pump::Closed,
+            Ok(n) => {
+                io.outbuf.drain(..n);
+                moved = true;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return Pump::Closed,
+        }
+    }
+    if moved {
+        Pump::Progress
+    } else {
+        Pump::Idle
+    }
+}
+
+/// Decode and answer one frame. Malformed bytes get a typed reply, not
+/// a dropped connection; a panicking handler gets a typed reply too
+/// (`catch_unwind` — the frontend's shard-poison absorption makes the
+/// panicked shard recoverable, this makes the worker survive to see
+/// it). Returns the reply plus whether it was a shutdown.
+fn respond(line: &str, frontend: &AggFrontend) -> (Response, bool) {
+    match decode_request(line) {
+        Ok(Request::Shutdown) => (Response::Admission(AdmissionReply::ok(None)), true),
+        Ok(req) => {
+            let reply = catch_unwind(AssertUnwindSafe(|| frontend.handle(&req)))
+                .unwrap_or_else(|_| {
+                    Response::Admission(AdmissionReply::denied(
+                        request_session(&req),
+                        AdmissionError::Rejected {
+                            reason: "request handler panicked; the affected shard was \
+                                     isolated and its sessions will restore elsewhere"
+                                .into(),
+                        },
+                    ))
+                });
+            (reply, false)
+        }
+        Err(e) => (
+            Response::Admission(AdmissionReply::denied(
+                None,
+                AdmissionError::Rejected { reason: e.msg },
+            )),
+            false,
+        ),
+    }
+}
+
+/// The session a request targets, for echoing in error replies.
+fn request_session(req: &Request) -> Option<SessionId> {
+    match req {
+        Request::RoundSubmit { session, .. }
+        | Request::Prefetch { session, .. }
+        | Request::SessionClose { session }
+        | Request::SessionSnapshot { session } => Some(*session),
+        Request::StatsQuery { session } => *session,
+        Request::SessionOpen { .. } | Request::SessionRestore { .. } | Request::Shutdown => None,
     }
 }
 
@@ -208,7 +366,7 @@ fn encode_frame(req: &Request) -> String {
     line
 }
 
-fn decode_request(line: &str) -> Result<Request, ProtoError> {
+pub(crate) fn decode_request(line: &str) -> Result<Request, ProtoError> {
     let j: Json =
         parse(line.trim_end()).map_err(|e| ProtoError { msg: format!("bad frame: {e}") })?;
     Request::from_json(&j)
@@ -221,7 +379,9 @@ fn decode_request(line: &str) -> Result<Request, ProtoError> {
 /// [`run_round_admitted`](ServiceClient::run_round_admitted) ≈ the
 /// scheduler's throttle-retry loop — so swapping a local engine for a
 /// remote one is a transport decision, not a rewrite (that is what
-/// `fl::trainer::train_remote` does).
+/// `fl::trainer::train_remote` does). Fails with the unified
+/// [`service::Error`](Error): admission denials, transport faults, and
+/// protocol faults are distinct variants of one enum.
 pub struct ServiceClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -238,77 +398,77 @@ impl ServiceClient {
 
     /// One raw request/reply exchange. The typed helpers below are
     /// usually what callers want.
-    pub fn call(&mut self, req: &Request) -> Result<Response, ServiceError> {
+    pub fn call(&mut self, req: &Request) -> Result<Response, Error> {
         self.exchange(&encode_frame(req))
     }
 
     /// Send one pre-encoded frame and decode its reply — split from
     /// [`call`](ServiceClient::call) so retry loops can encode a large
     /// request once and resend the same bytes.
-    fn exchange(&mut self, frame: &str) -> Result<Response, ServiceError> {
+    fn exchange(&mut self, frame: &str) -> Result<Response, Error> {
         self.writer.write_all(frame.as_bytes())?;
         self.writer.flush()?;
         let mut reply = String::new();
         if self.reader.read_line(&mut reply)? == 0 {
-            return Err(ServiceError::Io(io::Error::new(
+            return Err(Error::Io(io::Error::new(
                 io::ErrorKind::UnexpectedEof,
                 "server closed the connection",
             )));
         }
         let j = parse(reply.trim_end())
-            .map_err(|e| ServiceError::Proto(ProtoError { msg: format!("bad frame: {e}") }))?;
+            .map_err(|e| Error::Proto(ProtoError { msg: format!("bad frame: {e}") }))?;
         Ok(Response::from_json(&j)?)
     }
 
     /// Open a tenant session; returns the granted session id.
-    /// Admission rejections surface as [`ServiceError::Denied`].
+    /// Admission rejections surface as [`Error::Admission`].
     pub fn open_session(
         &mut self,
         cfg: HiSafeConfig,
         d: usize,
         seed: u64,
         qos: QosPolicy,
-    ) -> Result<u64, ServiceError> {
+    ) -> Result<SessionId, Error> {
         match self.call(&Request::SessionOpen { cfg, d, seed, qos })? {
             Response::Admission(AdmissionReply { session: Some(sid), error: None }) => Ok(sid),
             Response::Admission(AdmissionReply { error: Some(e), .. }) => {
-                Err(ServiceError::Denied(e))
+                Err(Error::Admission(e))
             }
-            other => Err(ServiceError::Unexpected(format!("{other:?}"))),
+            other => Err(Error::Unexpected(format!("{other:?}"))),
         }
     }
 
     /// Submit one round. A throttle (or any other denial) comes back as
-    /// [`ServiceError::Denied`] — use
+    /// [`Error::Admission`] — use
     /// [`run_round_admitted`](ServiceClient::run_round_admitted) to
     /// retry throttles automatically.
     pub fn submit_round(
         &mut self,
-        session: u64,
+        session: SessionId,
         signs: &[Vec<i8>],
-    ) -> Result<VoteReply, ServiceError> {
+    ) -> Result<VoteReply, Error> {
         let req = Request::RoundSubmit { session, signs: signs.to_vec() };
         Self::vote_reply(self.call(&req)?)
     }
 
-    fn vote_reply(resp: Response) -> Result<VoteReply, ServiceError> {
+    fn vote_reply(resp: Response) -> Result<VoteReply, Error> {
         match resp {
             Response::Vote(v) => Ok(v),
             Response::Admission(AdmissionReply { error: Some(e), .. }) => {
-                Err(ServiceError::Denied(e))
+                Err(Error::Admission(e))
             }
-            other => Err(ServiceError::Unexpected(format!("{other:?}"))),
+            other => Err(Error::Unexpected(format!("{other:?}"))),
         }
     }
 
     /// Interpret a reply that should be a bare admission ack.
-    fn ack_reply(resp: Response) -> Result<(), ServiceError> {
+    fn ack_reply(resp: Response) -> Result<(), Error> {
         match resp {
             Response::Admission(AdmissionReply { error: None, .. }) => Ok(()),
             Response::Admission(AdmissionReply { error: Some(e), .. }) => {
-                Err(ServiceError::Denied(e))
+                Err(Error::Admission(e))
             }
-            other => Err(ServiceError::Unexpected(format!("{other:?}"))),
+            other => Err(Error::Unexpected(format!("{other:?}"))),
         }
     }
 
@@ -319,9 +479,9 @@ impl ServiceClient {
     /// the number of denials eaten, and the total time slept.
     pub fn run_round_admitted(
         &mut self,
-        session: u64,
+        session: SessionId,
         signs: &[Vec<i8>],
-    ) -> Result<(VoteReply, u64, Duration), ServiceError> {
+    ) -> Result<(VoteReply, u64, Duration), Error> {
         // Encode once: the sign matrix dominates the frame at model
         // sizes and never changes across throttle retries, so retries
         // resend the same bytes instead of re-cloning + re-encoding.
@@ -331,7 +491,7 @@ impl ServiceClient {
         loop {
             match Self::vote_reply(self.exchange(&frame)?) {
                 Ok(v) => return Ok((v, denials, waited)),
-                Err(ServiceError::Denied(AdmissionError::Throttled { retry_after })) => {
+                Err(Error::Admission(AdmissionError::Throttled { retry_after })) => {
                     denials += 1;
                     let wait =
                         retry_after.clamp(Duration::from_micros(50), Duration::from_millis(20));
@@ -345,29 +505,54 @@ impl ServiceClient {
 
     /// Queue `rounds` rounds of triple dealing on the session's shard
     /// (the wire form of `try_prefetch`).
-    pub fn prefetch(&mut self, session: u64, rounds: usize) -> Result<(), ServiceError> {
+    pub fn prefetch(&mut self, session: SessionId, rounds: usize) -> Result<(), Error> {
         Self::ack_reply(self.call(&Request::Prefetch { session, rounds })?)
     }
 
     /// Close a session, freeing its shard slot.
-    pub fn close_session(&mut self, session: u64) -> Result<(), ServiceError> {
+    pub fn close_session(&mut self, session: SessionId) -> Result<(), Error> {
         Self::ack_reply(self.call(&Request::SessionClose { session })?)
     }
 
     /// Read counters for one session (`Some(id)`) or the whole frontend
     /// (`None`).
-    pub fn stats(&mut self, session: Option<u64>) -> Result<StatsReply, ServiceError> {
+    pub fn stats(&mut self, session: Option<SessionId>) -> Result<StatsReply, Error> {
         match self.call(&Request::StatsQuery { session })? {
             Response::Stats(s) => Ok(s),
             Response::Admission(AdmissionReply { error: Some(e), .. }) => {
-                Err(ServiceError::Denied(e))
+                Err(Error::Admission(e))
             }
-            other => Err(ServiceError::Unexpected(format!("{other:?}"))),
+            other => Err(Error::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Fetch the serializable restore point for a session: everything
+    /// needed to resume it bit-identically on another frontend (the
+    /// balancer's fail-over primitive).
+    pub fn snapshot_session(&mut self, session: SessionId) -> Result<SessionSnapshot, Error> {
+        match self.call(&Request::SessionSnapshot { session })? {
+            Response::Snapshot(s) => Ok(s.snapshot),
+            Response::Admission(AdmissionReply { error: Some(e), .. }) => {
+                Err(Error::Admission(e))
+            }
+            other => Err(Error::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Resume a snapshotted session on this server; returns the NEW
+    /// session id granted there (ids are per-frontend, not global).
+    pub fn restore_session(&mut self, snapshot: &SessionSnapshot) -> Result<SessionId, Error> {
+        match self.call(&Request::SessionRestore { snapshot: snapshot.clone() })? {
+            Response::Admission(AdmissionReply { session: Some(sid), error: None }) => Ok(sid),
+            Response::Admission(AdmissionReply { error: Some(e), .. }) => {
+                Err(Error::Admission(e))
+            }
+            other => Err(Error::Unexpected(format!("{other:?}"))),
         }
     }
 
     /// Ask the server to stop accepting and exit its serve loop.
-    pub fn shutdown(&mut self) -> Result<(), ServiceError> {
+    pub fn shutdown(&mut self) -> Result<(), Error> {
         Self::ack_reply(self.call(&Request::Shutdown)?)
     }
 }
@@ -387,7 +572,15 @@ mod tests {
     /// Spawn a server on an ephemeral port; returns its address and the
     /// serve-loop handle (joined to assert clean shutdown).
     fn spawn_server(frontend: AggFrontend) -> (String, std::thread::JoinHandle<io::Result<()>>) {
-        let server = ServiceServer::bind("127.0.0.1:0", frontend).expect("bind loopback");
+        spawn_server_with_workers(frontend, DEFAULT_WORKERS)
+    }
+
+    fn spawn_server_with_workers(
+        frontend: AggFrontend,
+        workers: usize,
+    ) -> (String, std::thread::JoinHandle<io::Result<()>>) {
+        let server =
+            ServiceServer::bind_with_workers("127.0.0.1:0", frontend, workers).expect("bind");
         let addr = server.local_addr().expect("bound addr").to_string();
         let handle = std::thread::spawn(move || server.serve());
         (addr, handle)
@@ -412,10 +605,14 @@ mod tests {
         assert_eq!(stats.session, Some(sid));
         assert_eq!(stats.rounds_run, 3);
         assert_eq!(stats.admission.admitted_rounds, 3);
+        // The snapshot round-trips the wire and reflects consumed rounds.
+        let snap = client.snapshot_session(sid).expect("snapshot");
+        assert_eq!(snap.rounds, 3);
+        assert_eq!(snap.seed, 7);
         client.close_session(sid).expect("close acked");
         // Closed sessions are unknown afterwards.
         match client.stats(Some(sid)) {
-            Err(ServiceError::Denied(AdmissionError::Rejected { reason })) => {
+            Err(Error::Admission(AdmissionError::Rejected { reason })) => {
                 assert!(reason.contains("unknown session"), "reason: {reason}")
             }
             other => panic!("expected unknown-session, got {other:?}"),
@@ -481,6 +678,71 @@ mod tests {
         let stats = c1.stats(None).expect("frontend stats");
         assert_eq!(stats.shard_tenants.expect("shards").iter().sum::<usize>(), 2);
         c1.shutdown().expect("shutdown");
+        server.join().expect("serve thread").expect("clean shutdown");
+    }
+
+    #[test]
+    fn many_idle_connections_share_two_workers() {
+        // 32 connections on a 2-worker pool: connections must not cost
+        // a serving thread each. The early clients go idle (but stay
+        // connected) while later clients run full lifecycles; then the
+        // idle ones prove they're still live. Under thread-per-connection
+        // this test is vacuous; under the worker pool it pins that idle
+        // connections neither starve active ones nor get dropped.
+        let (addr, server) = spawn_server_with_workers(AggFrontend::new(2, 1), 2);
+        let cfg = HiSafeConfig::flat(3, TiePolicy::OneBit);
+        let mut clients: Vec<ServiceClient> =
+            (0..32).map(|_| ServiceClient::connect(&addr).expect("connect")).collect();
+        // The last few clients do real work while 28+ sit idle.
+        for (i, client) in clients.iter_mut().enumerate().skip(28) {
+            let sid = client
+                .open_session(cfg, 4, i as u64, QosPolicy::unlimited())
+                .expect("admitted");
+            let signs = rand_signs(3, 4, i as u64);
+            let vote = client.submit_round(sid, &signs).expect("round admitted");
+            assert_eq!(vote.global_vote, plain_hierarchical_vote(&signs, cfg));
+            client.close_session(sid).expect("close acked");
+        }
+        // The idle connections are still serviceable afterwards.
+        for (i, client) in clients.iter_mut().enumerate().take(3) {
+            let sid = client
+                .open_session(cfg, 4, 100 + i as u64, QosPolicy::unlimited())
+                .expect("idle connection still admitted");
+            client.close_session(sid).expect("close acked");
+        }
+        clients[0].shutdown().expect("shutdown acked");
+        server.join().expect("serve thread").expect("clean shutdown");
+    }
+
+    #[test]
+    fn concurrent_clients_make_progress_in_parallel() {
+        // Two clients driving sessions on (very likely distinct) shards
+        // from two threads: the wire path has no global frontend mutex,
+        // so both streams of rounds complete with reference votes.
+        let (addr, server) = spawn_server_with_workers(AggFrontend::new(2, 1), 4);
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let drivers: Vec<_> = (0..2u64)
+            .map(|k| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut client = ServiceClient::connect(&addr).expect("connect");
+                    let sid = client
+                        .open_session(cfg, 5, 10 + k, QosPolicy::unlimited())
+                        .expect("admitted");
+                    for r in 0..4u64 {
+                        let signs = rand_signs(6, 5, k * 100 + r);
+                        let vote = client.submit_round(sid, &signs).expect("round admitted");
+                        assert_eq!(vote.global_vote, plain_hierarchical_vote(&signs, cfg));
+                    }
+                    client.close_session(sid).expect("close acked");
+                })
+            })
+            .collect();
+        for d in drivers {
+            d.join().expect("driver thread");
+        }
+        let mut client = ServiceClient::connect(&addr).expect("connect");
+        client.shutdown().expect("shutdown acked");
         server.join().expect("serve thread").expect("clean shutdown");
     }
 }

@@ -6,13 +6,15 @@
 //! client) — and invalid QoS policies must be the same typed rejection
 //! on the wire path as on the in-process path.
 
-use hisafe::engine::{AdmissionError, AggScheduler, Engine, PipelinedEngine, QosPolicy};
+use hisafe::engine::{AdmissionError, AggScheduler, Engine, PipelinedEngine, QosPolicy, SessionId};
 use hisafe::fl::data::{partition_users, synthetic, DataKind, Partition};
 use hisafe::fl::model::LinearSoftmax;
 use hisafe::fl::trainer::{train, train_remote, Aggregator, FedSpec, TrainConfig};
 use hisafe::poly::TiePolicy;
 use hisafe::protocol::{plain_hierarchical_vote, run_sync, HiSafeConfig};
-use hisafe::service::{AggFrontend, ServiceClient, ServiceError, ServiceServer};
+use hisafe::service::{
+    AdmissionReply, AggFrontend, Error, Request, Response, ServiceClient, ServiceServer,
+};
 use hisafe::prop_assert_eq;
 use hisafe::util::prop::{forall, Gen};
 use hisafe::util::rng::Rng;
@@ -53,7 +55,7 @@ fn remote_rounds_bit_identical_to_dedicated_engines_and_run_sync() {
             cfg: HiSafeConfig,
             d: usize,
             seed: u64,
-            sid: u64,
+            sid: SessionId,
             dedicated: PipelinedEngine,
         }
         let n_tenants = g.usize_range(2, 4);
@@ -303,7 +305,7 @@ fn invalid_qos_policies_rejected_identically_on_both_paths() {
             Ok(_) => return Err(format!("local: {qos:?} must be rejected, was admitted")),
         }
         match client.open_session(cfg, d, g.u64(), qos) {
-            Err(ServiceError::Denied(AdmissionError::Rejected { .. })) => {}
+            Err(Error::Admission(AdmissionError::Rejected { .. })) => {}
             Err(e) => return Err(format!("wire: {qos:?} must be Rejected, got {e:?}")),
             Ok(sid) => return Err(format!("wire: {qos:?} must be rejected, got session {sid}")),
         }
@@ -317,4 +319,153 @@ fn invalid_qos_policies_rejected_identically_on_both_paths() {
     assert_eq!(live, 0, "rejected admissions must not leak wire sessions");
     client.shutdown().expect("shutdown");
     server.join().expect("serve thread").expect("clean shutdown");
+}
+
+#[test]
+fn snapshot_restore_replay_bit_identical_across_servers() {
+    // The cluster primitive: for random tenants, consume k rounds on
+    // server A, fetch the session's SessionSnapshot over the wire,
+    // restore it on an INDEPENDENT server B (different shard count,
+    // fresh schedulers), and drive both forward. Every subsequent round
+    // must be bit-identical on A, on B, and on a dedicated in-process
+    // engine — the statement that a session is a serializable value a
+    // balancer can move between hosts without touching votes.
+    forall("snapshot → restore ≡ uninterrupted (random tenants over TCP)", 6, |g| {
+        let (addr_a, server_a) = spawn_server(AggFrontend::new(g.usize_range(1, 3), 1));
+        let (addr_b, server_b) = spawn_server(AggFrontend::new(g.usize_range(1, 3), 1));
+        let mut ca = ServiceClient::connect(&addr_a).map_err(|e| e.to_string())?;
+        let mut cb = ServiceClient::connect(&addr_b).map_err(|e| e.to_string())?;
+
+        let cfg = rand_cfg(g);
+        let d = g.usize_range(1, 24);
+        let seed = g.u64();
+        let sid_a = ca
+            .open_session(cfg, d, seed, QosPolicy::unlimited())
+            .map_err(|e| format!("open: {e}"))?;
+        let mut dedicated = PipelinedEngine::new(cfg, d, seed);
+
+        let consumed = g.usize_range(0, 3) as u64;
+        for _ in 0..consumed {
+            let signs: Vec<Vec<i8>> = (0..cfg.n).map(|_| g.sign_vec(d)).collect();
+            let reply =
+                ca.submit_round(sid_a, &signs).map_err(|e| format!("pre-round: {e}"))?;
+            let local = dedicated.run_round(&signs);
+            prop_assert_eq!(&reply.global_vote, &local.global_vote, "pre-snapshot round");
+        }
+
+        let snap = ca.snapshot_session(sid_a).map_err(|e| format!("snapshot: {e}"))?;
+        prop_assert_eq!(snap.rounds, consumed, "snapshot counts consumed rounds");
+        prop_assert_eq!(snap.seed, seed);
+        let sid_b = cb.restore_session(&snap).map_err(|e| format!("restore: {e}"))?;
+
+        for round in 0..2u64 {
+            let signs: Vec<Vec<i8>> = (0..cfg.n).map(|_| g.sign_vec(d)).collect();
+            let ra = ca.submit_round(sid_a, &signs).map_err(|e| format!("A round: {e}"))?;
+            let rb = cb.submit_round(sid_b, &signs).map_err(|e| format!("B round: {e}"))?;
+            let local = dedicated.run_round(&signs);
+            prop_assert_eq!(&ra.global_vote, &rb.global_vote, "post-restore round {round}");
+            prop_assert_eq!(&ra.subgroup_votes, &rb.subgroup_votes, "round {round} subgroups");
+            prop_assert_eq!(&ra.global_vote, &local.global_vote, "round {round} vs dedicated");
+            prop_assert_eq!(
+                &ra.global_vote,
+                &plain_hierarchical_vote(&signs, cfg),
+                "round {round} vs Eq. 8"
+            );
+        }
+        // Counter continuity: the restored session reports the full
+        // history, not just the rounds it ran locally.
+        let stats_b = cb.stats(Some(sid_b)).map_err(|e| format!("stats: {e}"))?;
+        prop_assert_eq!(stats_b.rounds_run, consumed + 2, "restored counters continue");
+
+        for (c, s) in [(&mut ca, server_a), (&mut cb, server_b)] {
+            c.shutdown().map_err(|e| format!("shutdown: {e}"))?;
+            s.join()
+                .map_err(|_| "serve thread panicked".to_string())?
+                .map_err(|e| format!("serve loop: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn killing_a_shard_mid_sweep_recovers_with_bit_identical_votes() {
+    // Shard-death recovery as a property: random tenants spread over a
+    // multi-shard frontend, a random shard killed mid-sweep (the same
+    // state a poisoned shard lock degrades to), and every session —
+    // displaced or not — must finish the sweep with votes bit-identical
+    // to dedicated engines, with no panic and no lost session.
+    forall("kill a shard mid-sweep ⇒ transparent restore", 6, |g| {
+        let shards = g.usize_range(2, 4);
+        let fe = AggFrontend::new(shards, 1);
+
+        struct Tenant {
+            cfg: HiSafeConfig,
+            d: usize,
+            sid: SessionId,
+            dedicated: PipelinedEngine,
+        }
+        let n_tenants = g.usize_range(2, 5);
+        let mut tenants: Vec<Tenant> = Vec::with_capacity(n_tenants);
+        for _ in 0..n_tenants {
+            let cfg = rand_cfg(g);
+            let d = g.usize_range(1, 16);
+            let seed = g.u64();
+            let sid = match fe.handle(&Request::SessionOpen {
+                cfg,
+                d,
+                seed,
+                qos: QosPolicy::unlimited(),
+            }) {
+                Response::Admission(AdmissionReply { session: Some(sid), error: None }) => sid,
+                other => return Err(format!("open rejected: {other:?}")),
+            };
+            tenants.push(Tenant { cfg, d, sid, dedicated: PipelinedEngine::new(cfg, d, seed) });
+        }
+
+        let kill_at = g.usize_range(0, 2) as u64; // round before which the shard dies
+        let victim = g.usize_range(0, shards - 1);
+        for round in 0..3u64 {
+            if round == kill_at {
+                fe.kill_shard(victim);
+            }
+            for &ti in &rand_order(g, n_tenants) {
+                let t = &mut tenants[ti];
+                let signs: Vec<Vec<i8>> = (0..t.cfg.n).map(|_| g.sign_vec(t.d)).collect();
+                let reply = match fe
+                    .handle(&Request::RoundSubmit { session: t.sid, signs: signs.clone() })
+                {
+                    Response::Vote(v) => v,
+                    other => {
+                        return Err(format!(
+                            "tenant {ti} round {round} after shard kill: {other:?}"
+                        ))
+                    }
+                };
+                let local = t.dedicated.run_round(&signs);
+                prop_assert_eq!(
+                    &reply.global_vote,
+                    &local.global_vote,
+                    "tenant {ti} round {round} (shard {victim} killed at {kill_at})"
+                );
+                prop_assert_eq!(
+                    &reply.subgroup_votes,
+                    &local.subgroup_votes,
+                    "tenant {ti} round {round} subgroups"
+                );
+            }
+        }
+        // No session lost, the dead shard reports no tenants, and every
+        // session still answers stats with full counter continuity.
+        prop_assert_eq!(fe.live_sessions(), n_tenants, "no session lost to the kill");
+        prop_assert_eq!(fe.shard_tenants()[victim], 0usize, "dead shard holds nothing");
+        for (ti, t) in tenants.iter().enumerate() {
+            match fe.handle(&Request::StatsQuery { session: Some(t.sid) }) {
+                Response::Stats(s) => {
+                    prop_assert_eq!(s.rounds_run, 3u64, "tenant {ti} counters continue")
+                }
+                other => return Err(format!("tenant {ti} stats: {other:?}")),
+            }
+        }
+        Ok(())
+    });
 }
