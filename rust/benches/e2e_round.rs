@@ -85,4 +85,5 @@ fn main() {
     } else {
         println!("(artifacts missing — skipping PJRT end-to-end; run `make artifacts`)");
     }
+    b.write_json("e2e_round");
 }

@@ -47,4 +47,5 @@ fn main() {
             run_sync(&signs, cfg, seed).global_vote[0]
         });
     }
+    b.write_json("fig6_mults_latency");
 }

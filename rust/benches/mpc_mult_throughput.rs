@@ -183,6 +183,8 @@ fn main() {
             pipe_t.as_secs_f64() * 1e3,
             seq_t.as_secs_f64() / pipe_t.as_secs_f64()
         );
+        b.record("cold-pool sequential engine, 6 rounds", seq_t);
+        b.record("cold-pool pipelined scheduler, 6 rounds", pipe_t);
         if strict {
             assert!(
                 pipe_t < seq_t,
@@ -191,4 +193,5 @@ fn main() {
             );
         }
     }
+    b.write_json("mpc_mult_throughput");
 }

@@ -21,9 +21,9 @@
 use hisafe::engine::{AggScheduler, Engine, QosPolicy};
 use hisafe::poly::TiePolicy;
 use hisafe::protocol::HiSafeConfig;
-use hisafe::util::bench::{black_box, section};
+use hisafe::util::bench::{black_box, section, Bencher};
 use hisafe::util::rng::{Rng, Xoshiro256pp};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn main() {
     let strict = std::env::var("HISAFE_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
@@ -148,4 +148,14 @@ fn main() {
     if strict {
         assert!(throttles >= 1, "a 40 rounds/s budget must throttle back-to-back rounds");
     }
+
+    let mut b = Bencher::new();
+    b.record("solo cold-start provision", solo_t);
+    b.record("cold-start provision behind flood", flooded_t);
+    b.record("solo mean round", Duration::from_secs_f64(solo_mean));
+    b.record(
+        "paired-loop mean round (next to throttled tenant)",
+        Duration::from_secs_f64(unlimited_mean),
+    );
+    b.write_json("sched_admission");
 }

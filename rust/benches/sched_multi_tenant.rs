@@ -15,7 +15,7 @@
 use hisafe::engine::{AggScheduler, AggSession, Engine, PipelinedEngine};
 use hisafe::poly::TiePolicy;
 use hisafe::protocol::HiSafeConfig;
-use hisafe::util::bench::{black_box, section};
+use hisafe::util::bench::{black_box, section, Bencher};
 use hisafe::util::rng::{Rng, Xoshiro256pp};
 use std::time::Instant;
 
@@ -100,6 +100,11 @@ fn main() {
         "  shared/dedicated: {:.2}x  (threads: one pool's worth vs {k}x)",
         shared_t.as_secs_f64() / dedicated_t.as_secs_f64()
     );
+    let mut b = Bencher::new();
+    b.record("dedicated engines, full workload", dedicated_t);
+    b.record("shared scheduler, full workload", shared_t);
+    b.write_json("sched_multi_tenant");
+
     if strict {
         // The scheduler trades peak parallelism for a bounded thread
         // budget; at equal total work it must stay in the same

@@ -26,9 +26,9 @@ use hisafe::engine::QosPolicy;
 use hisafe::poly::TiePolicy;
 use hisafe::protocol::HiSafeConfig;
 use hisafe::service::{AggFrontend, Request, ServiceClient, ServiceServer};
-use hisafe::util::bench::{black_box, section};
+use hisafe::util::bench::{black_box, section, Bencher};
 use hisafe::util::rng::{Rng, Xoshiro256pp};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn main() {
     let strict = std::env::var("HISAFE_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
@@ -70,7 +70,11 @@ fn main() {
         fe.handle(&Request::Prefetch { session: sid, rounds: 1 });
         let t0 = Instant::now();
         for signs in &sign_sets {
-            match fe.handle(&Request::RoundSubmit { session: sid, signs: signs.clone() }) {
+            match fe.handle(&Request::RoundSubmit {
+                session: sid,
+                signs: signs.clone(),
+                present: None,
+            }) {
                 hisafe::service::Response::Vote(v) => {
                     black_box(v.global_vote[0]);
                     local_votes.push(v.global_vote);
@@ -92,10 +96,14 @@ fn main() {
     let sid = client.open_session(cfg, d, seed, QosPolicy::unlimited()).expect("admitted");
     client.prefetch(sid, 1).expect("warm-up prefetch");
     // One frame's size, for the framing-overhead report.
-    let req_bytes = Request::RoundSubmit { session: sid, signs: sign_sets[0].clone() }
-        .to_json()
-        .to_string_compact()
-        .len();
+    let req_bytes = Request::RoundSubmit {
+        session: sid,
+        signs: sign_sets[0].clone(),
+        present: None,
+    }
+    .to_json()
+    .to_string_compact()
+    .len();
     let remote_mean = {
         let t0 = Instant::now();
         for (r, signs) in sign_sets.iter().enumerate() {
@@ -209,6 +217,16 @@ fn main() {
              {concurrent_total:.6}s vs {serial_total:.6}s"
         );
     }
+
+    let mut b = Bencher::new();
+    b.record("in-process mean round", Duration::from_secs_f64(local_mean));
+    b.record("loopback-TCP mean round", Duration::from_secs_f64(remote_mean));
+    b.record("2-shard serialized sweep", Duration::from_secs_f64(serial_total));
+    b.record(
+        "2-shard concurrent sweep",
+        Duration::from_secs_f64(concurrent_total),
+    );
+    b.write_json("sched_remote");
 
     if strict {
         // Loopback TCP + JSON framing must stay in the same latency

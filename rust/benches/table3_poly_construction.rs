@@ -47,4 +47,5 @@ fn main() {
         "\nconstruction speedup n=100 flat vs n1=3 subgrouped: {:.0}x",
         flat.median.as_secs_f64() / sub.median.as_secs_f64()
     );
+    b.write_json("table3_poly_construction");
 }

@@ -75,4 +75,5 @@ fn main() {
             + s_poly.median.as_secs_f64()
             + s_online.median.as_secs_f64()
     );
+    b.write_json("table5_alg1_runtime");
 }

@@ -5,7 +5,7 @@
 
 use hisafe::cost;
 use hisafe::poly::TiePolicy;
-use hisafe::util::bench::section;
+use hisafe::util::bench::{black_box, section, Bencher};
 
 fn main() {
     section("Table VII: optimal configurations (ours, exact construction)");
@@ -93,4 +93,21 @@ fn main() {
             r.c_t
         );
     }
+
+    section("cost-model construction time (the sweep above, timed)");
+    let mut b = Bencher::new();
+    b.bench("optimal_ell n=100 (search over every divisor)", || {
+        black_box(cost::optimal_ell(black_box(100), TiePolicy::OneBit, false))
+    });
+    b.bench("config_cost full paper sweep (Tables VIII/IX rows)", || {
+        let mut acc = 0u64;
+        for row in cost::paper_tables() {
+            if row.n % row.ell != 0 {
+                continue;
+            }
+            acc += cost::config_cost(row.n, row.ell, TiePolicy::OneBit, false).c_t_bits;
+        }
+        acc
+    });
+    b.write_json("tables789_comm_costs");
 }

@@ -93,13 +93,17 @@ pub use scheduler::{
 };
 pub use workers::live_engine_threads;
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::beaver::Dealer;
+use crate::beaver::{Dealer, TripleShare};
 use crate::metrics::CommStats;
 use crate::mpc::EvalPlan;
-use crate::poly::MvPolynomial;
-use crate::protocol::{group_dealer_seed, inter_group_vote, partition, HiSafeConfig};
+use crate::poly::{MvPolynomial, TiePolicy};
+use crate::protocol::{
+    check_thresholds, churn_dealer_seed, group_dealer_seed, inter_group_vote, partition,
+    recover_cohort_key, ChurnError, HiSafeConfig, ParticipantSet,
+};
 
 use pool::GroupPools;
 
@@ -178,6 +182,23 @@ pub trait Engine {
     /// bit-identical across every implementation.
     fn run_round(&mut self, signs: &[Vec<i8>]) -> EngineOutcome;
 
+    /// Execute one round over an explicit participant set. `signs` keeps
+    /// its full `n`-row shape (absent rows are ignored). An all-present
+    /// mask takes the exact [`Engine::run_round`] path — bit-identical,
+    /// pooled base-stream triples and all. A churned mask evaluates each
+    /// affected group over its survivors with a cohort-keyed dealer
+    /// stream (the reusable-secret fast path caches per-cohort setup, so
+    /// a stable cohort re-keys once) while the group's base stream
+    /// advances in lockstep; votes are bit-identical to
+    /// [`crate::protocol::run_sync_with_dropouts`] over the same set. A
+    /// group below its reconstruction threshold aborts with a typed
+    /// [`ChurnError`] before any engine state advances.
+    fn run_round_present(
+        &mut self,
+        signs: &[Vec<i8>],
+        present: &ParticipantSet,
+    ) -> Result<EngineOutcome, ChurnError>;
+
     /// Rounds executed so far.
     fn rounds_run(&self) -> u64;
 }
@@ -217,6 +238,66 @@ pub(crate) fn analytic_stats(cfg: &HiSafeConfig, plan: &EvalPlan, d: usize) -> C
     }
 }
 
+/// Analytic counters for ONE group evaluated by `k` parties under `plan`
+/// — the churn path's per-group unit. Merging one of these per group
+/// (heterogeneous `k` and cohort plans included) and then overwriting
+/// `vote_bits` with the inter policy reproduces, field for field, the
+/// measured stats [`crate::protocol::run_sync_with_dropouts`] merges from
+/// its per-group [`crate::mpc::secure_group_vote`] calls; with every
+/// group full it collapses back to [`analytic_stats`].
+pub(crate) fn analytic_group_stats(
+    plan: &EvalPlan,
+    d: usize,
+    k: usize,
+    intra: TiePolicy,
+) -> CommStats {
+    let mults = plan.triples_needed() as u64;
+    let per_mult_elems = 2 * d as u64;
+    CommStats {
+        uplink_elems_total: k as u64 * mults * per_mult_elems,
+        uplink_elems_per_user: mults * per_mult_elems,
+        downlink_elems: mults * per_mult_elems,
+        elem_bits: plan.fp.bits(),
+        subrounds: plan.schedule.depth() as u64,
+        mults,
+        vote_bits: intra.downlink_bits(),
+    }
+}
+
+/// Cached per-cohort setup for the churn path — the reusable-secret fast
+/// path. Keyed by `(group, cohort_key)` in the owning engine: the first
+/// round a cohort appears pays t-of-n recovery, the `k`-party plan
+/// build, and dealer keying; every later round with the same survivors
+/// streams triples from the cached dealer. The dealer is a persistent
+/// stream (like the base-cohort dealers), which is sound because votes
+/// are triple-independent — Beaver masks cancel — so any fresh triples
+/// reproduce the reference votes bit for bit.
+pub(crate) struct CohortState {
+    pub plan: Arc<EvalPlan>,
+    pub dealer: Dealer,
+}
+
+impl CohortState {
+    /// Build the plan + dealer for group `g`'s `k`-survivor cohort.
+    pub fn build(cfg: &HiSafeConfig, d: usize, seed: u64, g: usize, k: usize, key: u64) -> CohortState {
+        let mv = MvPolynomial::build_fermat(k, cfg.intra);
+        let plan = Arc::new(EvalPlan::new(&mv, d, cfg.sparse));
+        let dealer = Dealer::new(plan.fp, churn_dealer_seed(seed, g, key));
+        CohortState { plan, dealer }
+    }
+
+    /// One round of triples for this cohort's `k` parties, owned (`mults
+    /// == 0` plans get empty per-party vectors).
+    pub fn round_triples(&mut self, d: usize, k: usize) -> Vec<Vec<TripleShare>> {
+        let mults = self.plan.triples_needed();
+        if mults == 0 {
+            vec![Vec::new(); k]
+        } else {
+            self.dealer.gen_round(d, k, mults)
+        }
+    }
+}
+
 /// Reusable, round-amortized Hi-SAFE aggregation engine for one fixed
 /// `(HiSafeConfig, d)` workload — the **sequential reference**: dealing
 /// happens synchronously on the round path whenever the pool runs dry,
@@ -226,12 +307,21 @@ pub(crate) fn analytic_stats(cfg: &HiSafeConfig, plan: &EvalPlan, d: usize) -> C
 pub struct RoundEngine {
     cfg: HiSafeConfig,
     d: usize,
+    /// The root offline seed — kept for the churn path's per-cohort
+    /// recovery + dealer derivations ([`crate::protocol::recover_cohort_key`]).
+    seed: u64,
     plan: Arc<EvalPlan>,
     /// One streaming dealer per subgroup (seeds mirror `run_sync`'s
     /// per-group seed derivation so subgroups stay independent).
     dealers: Vec<Dealer>,
     /// Pre-provisioned Beaver triples, one pool per party per subgroup.
     pools: GroupPools,
+    /// Cached churn-cohort plans/dealers, keyed `(group, cohort_key)` —
+    /// the reusable-secret fast path.
+    cohorts: HashMap<(usize, u64), CohortState>,
+    /// Distinct cohorts keyed so far (== cache misses; a stable cohort
+    /// holds this at 1 per churned group however many rounds it runs).
+    rekeys: u64,
     /// Rounds of triples generated per refill.
     batch_rounds: usize,
     chunk: usize,
@@ -256,14 +346,29 @@ impl RoundEngine {
         RoundEngine {
             cfg,
             d,
+            seed,
             plan,
             dealers,
             pools: GroupPools::new(cfg.ell, n1),
+            cohorts: HashMap::new(),
+            rekeys: 0,
             batch_rounds: 1,
             chunk: DEFAULT_CHUNK,
             threads: workers::worker_pool_threads(),
             rounds_run: 0,
         }
+    }
+
+    /// Distinct churn cohorts keyed so far — the reusable-secret fast
+    /// path's miss counter. Stays flat while the survivor set is stable.
+    pub fn cohort_rekeys(&self) -> u64 {
+        self.rekeys
+    }
+
+    /// Base-stream group-rounds consumed-and-discarded on churned rounds
+    /// (survivor-aware pool accounting).
+    pub fn discarded_rounds(&self) -> usize {
+        self.pools.discarded_rounds()
     }
 
     /// Top up any group whose pool cannot cover one round for *every*
@@ -348,6 +453,76 @@ impl Engine for RoundEngine {
 
         self.rounds_run += 1;
         EngineOutcome { global_vote, subgroup_votes, stats }
+    }
+
+    fn run_round_present(
+        &mut self,
+        signs: &[Vec<i8>],
+        present: &ParticipantSet,
+    ) -> Result<EngineOutcome, ChurnError> {
+        assert_eq!(present.n(), self.cfg.n, "participant mask must cover all n users");
+        if present.is_all_present() {
+            return Ok(self.run_round(signs));
+        }
+        assert_eq!(signs.len(), self.cfg.n, "need n sign rows (absent rows are ignored)");
+        for (i, s) in signs.iter().enumerate() {
+            assert_eq!(s.len(), self.d, "user {i} dimension mismatch");
+        }
+        check_thresholds(self.cfg, present)?;
+        self.ensure_provisioned();
+
+        let d = self.d;
+        let chunk = self.chunk;
+        let mults = self.plan.triples_needed();
+        let groups = partition(self.cfg.n, self.cfg.ell);
+        let threads = workers::span_split(d, self.threads);
+
+        let mut subgroup_votes = Vec::with_capacity(groups.len());
+        let mut stats = CommStats::default();
+        for (g, members) in groups.iter().enumerate() {
+            let survivors = present.group_survivors(members);
+            if survivors.len() == members.len() {
+                // Full cohort: the exact run_round path for this group —
+                // same base plan, same pooled base-stream triples.
+                let group_signs: Vec<&[i8]> =
+                    members.iter().map(|&u| signs[u].as_slice()).collect();
+                let plan = Arc::clone(&self.plan);
+                let triples = self.pools.take_round(g, mults);
+                subgroup_votes.push(workers::eval_group(
+                    plan.fp, &plan, &group_signs, &triples, d, chunk, threads,
+                ));
+                stats.merge(&analytic_group_stats(&plan, d, members.len(), self.cfg.intra));
+                continue;
+            }
+            // Churned cohort: advance the base stream one round (so later
+            // all-present rounds draw the triples they always would),
+            // then evaluate the survivors under their cached cohort.
+            if mults > 0 {
+                self.pools.discard_round(g, mults);
+            }
+            let k = survivors.len();
+            let key = recover_cohort_key(self.seed, g, members, present);
+            if !self.cohorts.contains_key(&(g, key)) {
+                let state = CohortState::build(&self.cfg, d, self.seed, g, k, key);
+                self.cohorts.insert((g, key), state);
+                self.rekeys += 1;
+            }
+            let cohort = self.cohorts.get_mut(&(g, key)).expect("just inserted");
+            let plan = Arc::clone(&cohort.plan);
+            let owned = cohort.round_triples(d, k);
+            let triples: Vec<&[TripleShare]> = owned.iter().map(|t| t.as_slice()).collect();
+            let group_signs: Vec<&[i8]> =
+                survivors.iter().map(|&u| signs[u].as_slice()).collect();
+            subgroup_votes.push(workers::eval_group(
+                plan.fp, &plan, &group_signs, &triples, d, chunk, threads,
+            ));
+            stats.merge(&analytic_group_stats(&plan, d, k, self.cfg.intra));
+        }
+        let global_vote = inter_group_vote(&subgroup_votes, self.cfg.inter);
+        stats.vote_bits = self.cfg.inter.downlink_bits();
+
+        self.rounds_run += 1;
+        Ok(EngineOutcome { global_vote, subgroup_votes, stats })
     }
 
     fn rounds_run(&self) -> u64 {
@@ -507,5 +682,101 @@ mod tests {
         let signs = rand_signs(5, 6, 29);
         let got = RoundEngine::new(cfg, 6, 1).run_round(&signs);
         assert_eq!(got.global_vote, plain_group_vote(&signs, TiePolicy::OneBit));
+    }
+
+    #[test]
+    fn all_present_mask_is_the_run_round_path() {
+        let cfg = HiSafeConfig::hierarchical(12, 4, TiePolicy::OneBit);
+        let signs = rand_signs(12, 7, 51);
+        let mut a = RoundEngine::new(cfg, 7, 23);
+        let mut b = RoundEngine::new(cfg, 7, 23);
+        let full = a.run_round(&signs);
+        let masked = b
+            .run_round_present(&signs, &ParticipantSet::all(12))
+            .expect("all-present never aborts");
+        assert_eq!(full.global_vote, masked.global_vote);
+        assert_eq!(full.subgroup_votes, masked.subgroup_votes);
+        assert_eq!(full.stats, masked.stats);
+        assert_eq!(b.cohort_rekeys(), 0);
+        assert_eq!(b.discarded_rounds(), 0);
+    }
+
+    #[test]
+    fn churned_round_matches_reference_and_survivor_plaintext() {
+        use crate::protocol::{
+            plain_hierarchical_vote_present, run_sync_with_dropouts,
+        };
+        let cfg = HiSafeConfig::hierarchical(12, 4, TiePolicy::OneBit);
+        let d = 9;
+        let signs = rand_signs(12, d, 77);
+        // Drop one member of group 1 and one of group 3 (n₁=3 ⇒ t=1 ⇒
+        // 2 survivors is exactly at threshold).
+        let mut mask = vec![true; 12];
+        mask[4] = false;
+        mask[10] = false;
+        let present = ParticipantSet::from_mask(mask);
+        let seed = 23;
+        let mut engine = RoundEngine::new(cfg, d, seed);
+        let got = engine.run_round_present(&signs, &present).expect("above threshold");
+        let reference = run_sync_with_dropouts(&signs, &present, cfg, seed).unwrap();
+        assert_eq!(got.global_vote, reference.global_vote);
+        assert_eq!(got.subgroup_votes, reference.subgroup_votes);
+        assert_eq!(got.stats, reference.stats);
+        assert_eq!(
+            got.global_vote,
+            plain_hierarchical_vote_present(&signs, &present, cfg)
+        );
+        assert_eq!(engine.discarded_rounds(), 2); // two churned groups
+    }
+
+    #[test]
+    fn stable_cohort_rekeys_once_unstable_rekeys_per_mask() {
+        let cfg = HiSafeConfig::hierarchical(8, 2, TiePolicy::OneBit);
+        let d = 5;
+        let mut engine = RoundEngine::new(cfg, d, 9);
+        let mut mask = vec![true; 8];
+        mask[1] = false; // group 0 loses member 1 — a stable cohort
+        let stable = ParticipantSet::from_mask(mask);
+        for r in 0..4u64 {
+            let signs = rand_signs(8, d, 200 + r);
+            engine.run_round_present(&signs, &stable).expect("above threshold");
+        }
+        assert_eq!(engine.cohort_rekeys(), 1, "stable cohort pays setup once");
+        // A different survivor pattern keys a second cohort…
+        let mut mask2 = vec![true; 8];
+        mask2[2] = false;
+        engine
+            .run_round_present(&rand_signs(8, d, 300), &ParticipantSet::from_mask(mask2))
+            .expect("above threshold");
+        assert_eq!(engine.cohort_rekeys(), 2);
+        // …and returning to the first pattern hits its cache.
+        engine
+            .run_round_present(&rand_signs(8, d, 301), &stable)
+            .expect("above threshold");
+        assert_eq!(engine.cohort_rekeys(), 2);
+        assert_eq!(engine.rounds_run, 6);
+    }
+
+    #[test]
+    fn below_threshold_aborts_without_advancing_state() {
+        let cfg = HiSafeConfig::hierarchical(10, 2, TiePolicy::OneBit);
+        let d = 4;
+        let signs = rand_signs(10, d, 13);
+        // n₁=5 ⇒ t=2 ⇒ need 3; group 0 keeps only 2.
+        let mut mask = vec![true; 10];
+        mask[0] = false;
+        mask[1] = false;
+        mask[3] = false;
+        let mut engine = RoundEngine::new(cfg, d, 7);
+        let err = engine
+            .run_round_present(&signs, &ParticipantSet::from_mask(mask))
+            .expect_err("group 0 below threshold");
+        assert_eq!(
+            err,
+            crate::protocol::ChurnError::BelowThreshold { group: 0, survivors: 2, required: 3 }
+        );
+        assert_eq!(engine.rounds_run, 0);
+        assert_eq!(engine.discarded_rounds(), 0);
+        assert_eq!(engine.cohort_rekeys(), 0);
     }
 }

@@ -36,7 +36,7 @@
 //! [`AggScheduler::try_session`](super::AggScheduler::try_session).
 
 use crate::mpc::EvalPlan;
-use crate::protocol::HiSafeConfig;
+use crate::protocol::{ChurnError, HiSafeConfig, ParticipantSet};
 
 use super::scheduler::{AggScheduler, AggSession};
 use super::{Engine, EngineOutcome};
@@ -117,6 +117,16 @@ impl Engine for PipelinedEngine {
         let out = self.session.run_round(signs);
         self.rounds_run = self.session.rounds_run();
         out
+    }
+
+    fn run_round_present(
+        &mut self,
+        signs: &[Vec<i8>],
+        present: &ParticipantSet,
+    ) -> Result<EngineOutcome, ChurnError> {
+        let out = self.session.run_round_present(signs, present)?;
+        self.rounds_run = self.session.rounds_run();
+        Ok(out)
     }
 
     fn rounds_run(&self) -> u64 {

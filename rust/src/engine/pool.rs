@@ -32,6 +32,10 @@ pub(crate) type RoundBatch = Vec<Vec<Vec<TripleShare>>>;
 pub(crate) struct GroupPools {
     /// `pools[group][party]`.
     pools: Vec<Vec<TripleStore>>,
+    /// Rounds consumed-and-discarded for churned groups (see
+    /// [`GroupPools::discard_round`]) — survivor-aware accounting that
+    /// keeps the full-cohort base streams in lockstep across rounds.
+    discarded: usize,
 }
 
 impl GroupPools {
@@ -41,6 +45,7 @@ impl GroupPools {
             pools: (0..ell)
                 .map(|_| (0..n1).map(|_| TripleStore::new(Vec::new())).collect())
                 .collect(),
+            discarded: 0,
         }
     }
 
@@ -117,6 +122,26 @@ impl GroupPools {
         self.pools[g].iter_mut().map(|s| s.take_many_owned(mults)).collect()
     }
 
+    /// Consume-and-discard one round's triples for group `g` — the
+    /// churn path's pool advancement. A churned group evaluates with a
+    /// dedicated *cohort* dealer (the pre-dealt full-cohort triples are
+    /// keyed to the wrong party count), but its base stream must still
+    /// advance exactly one round so that every group's pool — and the
+    /// provisioning plane feeding it — stays in per-round lockstep, and
+    /// a later all-present round draws the same triples it would have
+    /// without the churn episode.
+    pub fn discard_round(&mut self, g: usize, mults: usize) {
+        for s in self.pools[g].iter_mut() {
+            s.take_many(mults);
+        }
+        self.discarded += 1;
+    }
+
+    /// Group-rounds discarded so far via [`GroupPools::discard_round`].
+    pub fn discarded_rounds(&self) -> usize {
+        self.discarded
+    }
+
     /// Direct store access for tests that need to unbalance a pool.
     #[cfg(test)]
     pub fn store_mut(&mut self, g: usize, party: usize) -> &mut TripleStore {
@@ -151,6 +176,25 @@ mod tests {
         // Refilling restores a positive (still min-across-parties) count.
         pools.deal_into(0, &mut dealer, 4, 2, 1);
         assert_eq!(pools.provisioned_rounds(2), 1);
+    }
+
+    #[test]
+    fn discard_round_advances_every_party_in_lockstep() {
+        let fp = Fp::new(5);
+        let mut dealer = Dealer::new(fp, 3);
+        let mut pools = GroupPools::new(1, 3);
+        pools.deal_into(0, &mut dealer, 4, 2, 2);
+        assert_eq!(pools.provisioned_rounds(2), 2);
+        assert_eq!(pools.discarded_rounds(), 0);
+        pools.discard_round(0, 2);
+        assert_eq!(pools.provisioned_rounds(2), 1);
+        assert_eq!(pools.discarded_rounds(), 1);
+        // The next take draws the round the dealer generated second —
+        // exactly what it would have drawn had the churn round not
+        // happened on this group's base stream.
+        let taken = pools.take_round(0, 2);
+        assert_eq!(taken.len(), 3);
+        assert_eq!(taken[0].len(), 2);
     }
 
     #[test]

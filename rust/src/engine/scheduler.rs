@@ -84,6 +84,7 @@
 //! so a throttled-and-retried round is bit-identical to an unthrottled
 //! one (pinned by `rust/tests/sched_admission_props.rs`).
 
+use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -92,17 +93,20 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::beaver::{Dealer, TripleShare};
-use crate::metrics::AdmissionStats;
+use crate::metrics::{AdmissionStats, CommStats};
 use crate::mpc::EvalPlan;
 use crate::poly::MvPolynomial;
-use crate::protocol::{group_dealer_seed, inter_group_vote, partition, HiSafeConfig};
+use crate::protocol::{
+    check_thresholds, group_dealer_seed, inter_group_vote, partition, recover_cohort_key,
+    ChurnError, HiSafeConfig, ParticipantSet,
+};
 
 use super::pool::{GroupPools, RoundBatch};
 use super::workers::{
     note_threads_joined, note_threads_spawned, span_split, worker_pool_threads, SpanJob,
     SpanResult, WorkerPool,
 };
-use super::{analytic_stats, Engine, EngineOutcome, DEFAULT_CHUNK};
+use super::{analytic_group_stats, analytic_stats, CohortState, Engine, EngineOutcome, DEFAULT_CHUNK};
 
 /// A scheduler-assigned session (tenant) identifier.
 ///
@@ -325,6 +329,29 @@ pub enum AdmissionError {
         /// The configured [`QosPolicy::queue_depth`].
         depth: usize,
     },
+    /// This round's participant set left a subgroup below its t-of-n
+    /// reconstruction threshold ([`crate::protocol::ChurnError`] carried
+    /// across the admission surface). The *round* aborts — retrying with
+    /// the same survivor set is pointless, but the session stays healthy
+    /// and the next round's participant set is judged on its own.
+    ChurnBelowThreshold {
+        /// The subgroup that fell below threshold.
+        group: usize,
+        /// Members of that subgroup present this round.
+        survivors: usize,
+        /// Minimum survivors required (`group_threshold(n₁) + 1`).
+        required: usize,
+    },
+}
+
+impl From<ChurnError> for AdmissionError {
+    fn from(e: ChurnError) -> AdmissionError {
+        match e {
+            ChurnError::BelowThreshold { group, survivors, required } => {
+                AdmissionError::ChurnBelowThreshold { group, survivors, required }
+            }
+        }
+    }
 }
 
 impl fmt::Display for AdmissionError {
@@ -337,6 +364,11 @@ impl fmt::Display for AdmissionError {
             AdmissionError::QueueFull { depth } => {
                 write!(f, "dealing queue full (depth {depth})")
             }
+            AdmissionError::ChurnBelowThreshold { group, survivors, required } => write!(
+                f,
+                "round aborted: subgroup {group} below reconstruction threshold \
+                 ({survivors} survivors, need {required})"
+            ),
         }
     }
 }
@@ -872,6 +904,8 @@ impl AggScheduler {
             threads: self.core.workers.threads(),
             batch_rounds: 1,
             inflight_rounds: 0,
+            cohorts: HashMap::new(),
+            rekeys: 0,
             chunk: DEFAULT_CHUNK,
             rounds_run: resume_rounds,
             qos,
@@ -937,6 +971,17 @@ pub struct AggSession {
     batch_rounds: usize,
     /// Rounds requested from the plane but not yet absorbed.
     inflight_rounds: usize,
+    /// Cached churn-cohort plans/dealers, keyed `(group, cohort_key)` —
+    /// the reusable-secret fast path (see [`CohortState`]). Cohort
+    /// triples are dealt inline by the session, never by the plane: the
+    /// plane's per-tenant streams stay whole-round pure, and the base
+    /// stream advances one (discarded) round per churned group so
+    /// all-present rounds after a churn episode draw the exact triples
+    /// they always would have.
+    cohorts: HashMap<(usize, u64), CohortState>,
+    /// Distinct cohorts keyed so far (cache misses; stable survivor sets
+    /// hold this flat).
+    rekeys: u64,
     chunk: usize,
     rounds_run: u64,
     /// Admission policy, fixed at `try_session` time.
@@ -1160,6 +1205,68 @@ impl AggSession {
         Ok(self.run_round_inner(signs))
     }
 
+    /// QoS-checked round execution over an explicit participant set.
+    ///
+    /// The threshold check runs *before* any billing: a below-threshold
+    /// mask costs no tokens and surfaces as
+    /// [`AdmissionError::ChurnBelowThreshold`] (counted under
+    /// [`AdmissionStats::rejected`]) — the session stays healthy and the
+    /// next round's mask is judged on its own. Above threshold, billing
+    /// is identical to [`try_run_round`](AggSession::try_run_round): the
+    /// round still consumes exactly one round of base-stream dealing
+    /// (used by full groups, consumed-and-discarded by churned ones), so
+    /// the triple budget charges the same demand either way; the small
+    /// inline cohort top-up (≤ n₁ parties per churned group) rides on
+    /// the round token.
+    pub fn try_run_round_present(
+        &mut self,
+        signs: &[Vec<i8>],
+        present: &ParticipantSet,
+    ) -> Result<EngineOutcome, AdmissionError> {
+        assert_eq!(present.n(), self.cfg.n, "participant mask must cover all n users");
+        if let Err(e) = check_thresholds(self.cfg, present) {
+            self.admission.rejected += 1;
+            return Err(e.into());
+        }
+        if present.is_all_present() {
+            return self.try_run_round(signs);
+        }
+        self.refill_buckets();
+        if let Some(bucket) = &mut self.round_bucket {
+            if let Err(retry_after) = bucket.try_take(1.0) {
+                self.admission.throttled += 1;
+                return Err(AdmissionError::Throttled { retry_after });
+            }
+        }
+        let mults = self.plan.triples_needed();
+        if mults > 0 && self.charged_rounds == 0 {
+            if let Some(bucket) = &mut self.triple_bucket {
+                let cost = (mults * self.cfg.ell) as f64;
+                if let Err(retry_after) = bucket.try_take(cost) {
+                    if let Some(rb) = &mut self.round_bucket {
+                        rb.put_back(1.0);
+                    }
+                    self.admission.throttled += 1;
+                    return Err(AdmissionError::Throttled { retry_after });
+                }
+            }
+        }
+        Ok(self
+            .run_round_present_inner(signs, present)
+            .expect("thresholds were checked before admission"))
+    }
+
+    /// Distinct churn cohorts keyed so far — the reusable-secret fast
+    /// path's miss counter (stable survivor sets hold it flat).
+    pub fn cohort_rekeys(&self) -> u64 {
+        self.rekeys
+    }
+
+    /// Base-stream group-rounds consumed-and-discarded on churned rounds.
+    pub fn discarded_rounds(&self) -> usize {
+        self.pools.discarded_rounds()
+    }
+
     /// Blocking wrapper over [`try_run_round`](AggSession::try_run_round)
     /// for callers that must make progress: waits out `Throttled` denials
     /// (sleeping roughly `retry_after`, clamped to [50 µs, 20 ms] so a
@@ -1183,6 +1290,38 @@ impl AggSession {
                     std::thread::sleep(wait);
                 }
                 Err(e) => unreachable!("try_run_round only returns Throttled denials: {e}"),
+            }
+        }
+    }
+
+    /// Blocking, churn-aware sibling of
+    /// [`run_round_admitted`](AggSession::run_round_admitted): waits out
+    /// `Throttled` denials with the same clamped backoff, but surfaces a
+    /// below-threshold participant set as
+    /// `Err(`[`AdmissionError::ChurnBelowThreshold`]`)` — an aborted
+    /// round is a caller decision (skip the round, keep the model),
+    /// never something to retry into.
+    pub fn run_round_admitted_present(
+        &mut self,
+        signs: &[Vec<i8>],
+        present: &ParticipantSet,
+    ) -> Result<(EngineOutcome, u64, Duration), AdmissionError> {
+        let mut denials = 0u64;
+        let mut waited = Duration::ZERO;
+        loop {
+            match self.try_run_round_present(signs, present) {
+                Ok(out) => return Ok((out, denials, waited)),
+                Err(AdmissionError::Throttled { retry_after }) => {
+                    denials += 1;
+                    let wait =
+                        retry_after.clamp(Duration::from_micros(50), Duration::from_millis(20));
+                    waited += wait;
+                    std::thread::sleep(wait);
+                }
+                Err(churn @ AdmissionError::ChurnBelowThreshold { .. }) => return Err(churn),
+                Err(e) => unreachable!(
+                    "try_run_round_present only returns Throttled or ChurnBelowThreshold: {e}"
+                ),
             }
         }
     }
@@ -1350,6 +1489,148 @@ impl AggSession {
         self.admission.admitted_rounds += 1;
         EngineOutcome { global_vote, subgroup_votes, stats }
     }
+
+    /// The churn-aware round path — [`run_round_inner`]'s sibling for a
+    /// partial participant set, shared by the infallible
+    /// [`Engine::run_round_present`] and the QoS-checked
+    /// [`try_run_round_present`](AggSession::try_run_round_present).
+    ///
+    /// Full groups run exactly the `run_round_inner` machinery: the same
+    /// plane-fed base pools, the same span-job fan-out on the shared
+    /// worker pool. Churned groups consume-and-discard their base-stream
+    /// round (lockstep pool accounting — see
+    /// [`super::pool::GroupPools::discard_round`]) and evaluate their
+    /// survivors under a cached `(group, cohort_key)` [`CohortState`]
+    /// whose triples are dealt inline. Span jobs already carry their own
+    /// `(fp, plan)` per job, so heterogeneous cohort plans fan out on
+    /// the one shared pool unchanged.
+    ///
+    /// [`run_round_inner`]: AggSession::run_round_inner
+    fn run_round_present_inner(
+        &mut self,
+        signs: &[Vec<i8>],
+        present: &ParticipantSet,
+    ) -> Result<EngineOutcome, ChurnError> {
+        assert_eq!(present.n(), self.cfg.n, "participant mask must cover all n users");
+        if present.is_all_present() {
+            return Ok(self.run_round_inner(signs));
+        }
+        assert_eq!(signs.len(), self.cfg.n, "need n sign rows (absent rows are ignored)");
+        for (i, s) in signs.iter().enumerate() {
+            assert_eq!(s.len(), self.d, "user {i} dimension mismatch");
+        }
+        check_thresholds(self.cfg, present)?;
+
+        let mults = self.plan.triples_needed();
+        if mults > 0 {
+            // Identical base-stream advancement to run_round_inner: one
+            // round of dealing is consumed whether a group uses it or
+            // discards it, so the plane, the credits, and the pooled
+            // streams cannot tell a churned round from a full one.
+            self.charged_rounds = self.charged_rounds.saturating_sub(1);
+            self.absorb_ready_batches();
+            while self.pools.provisioned_rounds(mults) == 0 {
+                if self.inflight_rounds == 0 {
+                    let depth = self.qos.queue_depth.unwrap_or(usize::MAX);
+                    self.request_rounds(self.batch_rounds.min(depth).max(1));
+                }
+                self.recv_one_round();
+            }
+            if self.inflight_rounds == 0 {
+                let pooled = self.pools.provisioned_rounds(mults);
+                if pooled < 1 + self.batch_rounds {
+                    let depth = self.qos.queue_depth.unwrap_or(usize::MAX);
+                    let want = self.batch_rounds.min(depth.saturating_sub(pooled));
+                    if want > 0 {
+                        self.request_rounds(want);
+                    }
+                }
+            }
+        }
+
+        let d = self.d;
+        let n1 = self.cfg.n1();
+        let groups = partition(self.cfg.n, self.cfg.ell);
+        let spans = span_split(d, self.threads);
+        let span_len = d.div_ceil(spans);
+
+        let (out_tx, out_rx) = channel::<SpanResult>();
+        // slot -> (group, base, len)
+        let mut slots: Vec<(usize, usize, usize)> = Vec::new();
+        let mut stats = CommStats::default();
+        for (g, members) in groups.iter().enumerate() {
+            let survivors = present.group_survivors(members);
+            let full = survivors.len() == members.len();
+            let (plan, group_signs, triples) = if full {
+                let group_signs: Arc<Vec<Vec<i8>>> =
+                    Arc::new(members.iter().map(|&u| signs[u].clone()).collect());
+                let triples: Arc<Vec<Vec<TripleShare>>> = Arc::new(if mults > 0 {
+                    self.pools.take_round_owned(g, mults)
+                } else {
+                    vec![Vec::new(); n1]
+                });
+                (Arc::clone(&self.plan), group_signs, triples)
+            } else {
+                if mults > 0 {
+                    self.pools.discard_round(g, mults);
+                }
+                let k = survivors.len();
+                let key = recover_cohort_key(self.seed, g, members, present);
+                if !self.cohorts.contains_key(&(g, key)) {
+                    let state = CohortState::build(&self.cfg, d, self.seed, g, k, key);
+                    self.cohorts.insert((g, key), state);
+                    self.rekeys += 1;
+                }
+                let cohort = self.cohorts.get_mut(&(g, key)).expect("just inserted");
+                let plan = Arc::clone(&cohort.plan);
+                let triples: Arc<Vec<Vec<TripleShare>>> =
+                    Arc::new(cohort.round_triples(d, k));
+                let group_signs: Arc<Vec<Vec<i8>>> =
+                    Arc::new(survivors.iter().map(|&u| signs[u].clone()).collect());
+                (plan, group_signs, triples)
+            };
+            stats.merge(&analytic_group_stats(&plan, d, group_signs.len(), self.cfg.intra));
+            let mut base = 0usize;
+            while base < d {
+                let len = span_len.min(d - base);
+                let slot = slots.len();
+                slots.push((g, base, len));
+                self.inflight_jobs.fetch_add(1, Ordering::SeqCst);
+                self.jobs
+                    .send(SpanJob {
+                        session: self.sid.as_u64(),
+                        inflight: Arc::clone(&self.inflight_jobs),
+                        fp: plan.fp,
+                        plan: Arc::clone(&plan),
+                        signs: Arc::clone(&group_signs),
+                        triples: Arc::clone(&triples),
+                        base,
+                        len,
+                        chunk: self.chunk,
+                        slot,
+                        out: out_tx.clone(),
+                    })
+                    .expect("shared worker pool alive");
+                base += len;
+            }
+        }
+        drop(out_tx);
+
+        let mut subgroup_votes: Vec<Vec<i8>> = vec![vec![0i8; d]; groups.len()];
+        for _ in 0..slots.len() {
+            let (sid, slot, span_votes) = out_rx.recv().expect("span worker alive");
+            assert_eq!(sid, self.sid.as_u64(), "span result crossed sessions");
+            let (g, b, len) = slots[slot];
+            subgroup_votes[g][b..b + len].copy_from_slice(&span_votes);
+        }
+        debug_assert_eq!(self.inflight_jobs(), 0, "in-flight gauge must drain per round");
+
+        let global_vote = inter_group_vote(&subgroup_votes, self.cfg.inter);
+        stats.vote_bits = self.cfg.inter.downlink_bits();
+        self.rounds_run += 1;
+        self.admission.admitted_rounds += 1;
+        Ok(EngineOutcome { global_vote, subgroup_votes, stats })
+    }
 }
 
 impl Engine for AggSession {
@@ -1401,6 +1682,17 @@ impl Engine for AggSession {
     /// [`AdmissionStats::admitted_rounds`].
     fn run_round(&mut self, signs: &[Vec<i8>]) -> EngineOutcome {
         self.run_round_inner(signs)
+    }
+
+    /// Churn-aware round execution, rate-limiter-exempt like the rest of
+    /// the `Engine` surface (see
+    /// [`AggSession::try_run_round_present`] for the QoS-checked one).
+    fn run_round_present(
+        &mut self,
+        signs: &[Vec<i8>],
+        present: &ParticipantSet,
+    ) -> Result<EngineOutcome, ChurnError> {
+        self.run_round_present_inner(signs, present)
     }
 
     fn rounds_run(&self) -> u64 {

@@ -39,11 +39,11 @@
 //! shapes scheduling, never trajectories.
 
 use crate::baselines::{dp_signsgd, masking};
-use crate::engine::{AggScheduler, AggSession, QosPolicy, SessionId};
+use crate::engine::{AdmissionError, AggScheduler, AggSession, QosPolicy, SessionId};
 use crate::fl::data::Dataset;
 use crate::fl::model::{sign_vec, Model};
 use crate::metrics::{AdmissionStats, CommStats};
-use crate::protocol::{plain_group_vote_all, HiSafeConfig};
+use crate::protocol::{plain_group_vote_all, HiSafeConfig, ParticipantSet};
 use crate::service::ServiceClient;
 use crate::util::json::Json;
 use crate::util::rng::{ChaCha20Rng, Rng, Xoshiro256pp};
@@ -91,6 +91,14 @@ pub struct TrainConfig {
     /// Evaluate test accuracy every `eval_every` rounds (and at the end).
     pub eval_every: usize,
     pub seed: u64,
+    /// Per-round probability that each selected participant drops out
+    /// before submitting (device churn). Sampled from a dedicated RNG
+    /// stream, so `0.0` reproduces pre-churn trajectories bit-for-bit.
+    /// Dropped users do no gradient work; secure rounds run the t-of-n
+    /// threshold path over the survivors, and a round whose survivor
+    /// set falls below a group threshold is *aborted* (model untouched,
+    /// [`RoundLog::aborted`] set) rather than retried.
+    pub churn: f64,
 }
 
 impl Default for TrainConfig {
@@ -103,6 +111,7 @@ impl Default for TrainConfig {
             batch_size: 100,
             eval_every: 10,
             seed: 0,
+            churn: 0.0,
         }
     }
 }
@@ -125,6 +134,14 @@ pub struct RoundLog {
     /// of the message-passing path — pinned by `engine_props.rs`). `None`
     /// for aggregators that don't run the secure protocol.
     pub comm: Option<CommStats>,
+    /// Selected participants that actually submitted this round (equal
+    /// to `participants` when [`TrainConfig::churn`] is 0).
+    pub survivors: usize,
+    /// `true` iff this round was aborted — the survivor set fell below a
+    /// group's reconstruction threshold (secure) or no user at all
+    /// survived (baselines). Aborted rounds leave the model untouched
+    /// and ship zero uplink bits.
+    pub aborted: bool,
 }
 
 /// Full training result.
@@ -165,7 +182,9 @@ impl TrainResult {
                         .set("loss", l.train_loss as f64)
                         .set("acc", l.test_acc as f64)
                         .set("uplink_bits_per_user", l.uplink_bits_per_user)
-                        .set("throttled", l.throttled);
+                        .set("throttled", l.throttled)
+                        .set("survivors", l.survivors)
+                        .set("aborted", l.aborted);
                     if let Some(comm) = &l.comm {
                         r.set("comm", comm.to_json());
                     }
@@ -233,6 +252,11 @@ struct FedRun<'a, M: Model> {
     select_rng: Xoshiro256pp,
     batch_rng: Xoshiro256pp,
     dp_rng: ChaCha20Rng,
+    /// Dedicated stream for per-round dropout sampling. Kept separate
+    /// from the selection/batch streams so `churn == 0.0` (which never
+    /// draws from it) leaves every other stream — and therefore the
+    /// whole trajectory — bit-identical to pre-churn runs.
+    churn_rng: Xoshiro256pp,
     /// Secure aggregation runs through a scheduler session — in-process
     /// or remote: plan and polynomial are built once (scheduler-side),
     /// and the shared provisioning plane deals round r+1's Beaver
@@ -251,6 +275,11 @@ impl<'a, M: Model> FedRun<'a, M> {
     fn validate(spec: &FedSpec<'a, M>) {
         assert_eq!(spec.shards.len(), spec.cfg.n_users, "one shard per user");
         assert!(spec.cfg.participants <= spec.cfg.n_users);
+        assert!(
+            (0.0..1.0).contains(&spec.cfg.churn),
+            "churn must be a probability in [0, 1), got {}",
+            spec.cfg.churn
+        );
         if let Aggregator::HiSafe(hc) = &spec.agg {
             assert_eq!(hc.n, spec.cfg.participants, "HiSafeConfig.n must equal participants");
         }
@@ -299,6 +328,7 @@ impl<'a, M: Model> FedRun<'a, M> {
             select_rng: Xoshiro256pp::seed_from_u64(cfg.seed ^ 0x5e1ec7),
             batch_rng: Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xba7c4),
             dp_rng: ChaCha20Rng::seed_from_u64(cfg.seed ^ 0xd9),
+            churn_rng: Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xc4021),
             session,
             logs: Vec::with_capacity(cfg.rounds),
             last_acc: 0.0,
@@ -316,10 +346,34 @@ impl<'a, M: Model> FedRun<'a, M> {
         // 1. user selection
         let selected = self.select_rng.sample_indices(self.cfg.n_users, self.cfg.participants);
 
-        // 2. local gradients + signs
+        // 1b. per-round churn: each selected user independently drops
+        // out with probability `churn`. `churn == 0.0` skips the draw
+        // entirely — not as an optimization but as a determinism
+        // guarantee (no stream is touched, so legacy trajectories are
+        // reproduced bit-for-bit).
+        let present: Vec<bool> = if self.cfg.churn > 0.0 {
+            (0..selected.len())
+                .map(|_| {
+                    // 53-bit mantissa draw, uniform in [0, 1).
+                    let u = (self.churn_rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+                    u >= self.cfg.churn
+                })
+                .collect()
+        } else {
+            vec![true; selected.len()]
+        };
+        let survivors = present.iter().filter(|&&p| p).count();
+
+        // 2. local gradients + signs — dropped users do no work (their
+        // device is gone for the round), so their slot is `None` and the
+        // batch stream only advances for survivors.
         let mut losses = 0.0f32;
-        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(selected.len());
-        for &u in &selected {
+        let mut grads: Vec<Option<Vec<f32>>> = Vec::with_capacity(selected.len());
+        for (slot, &u) in selected.iter().enumerate() {
+            if !present[slot] {
+                grads.push(None);
+                continue;
+            }
             let shard = &self.shards[u];
             assert!(!shard.is_empty(), "user {u} has no data");
             // Sample WITH replacement so batches are always full —
@@ -330,77 +384,145 @@ impl<'a, M: Model> FedRun<'a, M> {
                 .collect();
             let (loss, grad) = self.model.loss_grad(&self.params, self.train_ds, &batch);
             losses += loss;
-            grads.push(grad);
+            grads.push(Some(grad));
         }
-        let train_loss = losses / selected.len() as f32;
+        let train_loss = if survivors > 0 { losses / survivors as f32 } else { 0.0 };
 
-        // 3. aggregate into an update direction
+        // 3. aggregate into an update direction. An aborted round (the
+        // survivor set fell below a group's reconstruction threshold, or
+        // no baseline user survived at all) contributes a zero direction
+        // — the model update below is a no-op — and ships zero bits.
         let mut comm: Option<CommStats> = None;
         let mut throttled = 0u64;
+        let mut aborted = false;
         let (direction, uplink_bits_per_user): (Vec<f32>, u64) = match &self.agg {
             Aggregator::HiSafe(_) => {
-                let signs: Vec<Vec<i8>> = grads.iter().map(|g| sign_vec(g)).collect();
+                // Full n-row sign matrix: absent users contribute a zero
+                // row the engine never reads (the wire shape is mask-
+                // independent; presence travels separately).
+                let signs: Vec<Vec<i8>> = grads
+                    .iter()
+                    .map(|g| g.as_ref().map(|g| sign_vec(g)).unwrap_or_else(|| vec![0i8; d]))
+                    .collect();
                 // QoS-checked admission with blocking retry: training
                 // needs every round, so a throttle denial is a wait, not
                 // a skip. Votes are unaffected — admission decides when
                 // a round runs, never what it computes. The remote path
                 // runs the same retry loop with the denial crossing the
-                // wire each time.
-                let (global_vote, stats, denials) =
-                    match self.session.as_mut().expect("session built for HiSafe") {
-                        SessionHandle::Local(session) => {
+                // wire each time. A full-present round takes the legacy
+                // path (byte-identical v1 frames remotely); a churned
+                // round runs the threshold path over the survivors, and
+                // a below-threshold mask aborts instead of retrying.
+                let outcome = match self.session.as_mut().expect("session built for HiSafe") {
+                    SessionHandle::Local(session) => {
+                        if survivors == selected.len() {
                             let (out, denials, _waited) = session.run_round_admitted(&signs);
-                            (out.global_vote, out.stats, denials)
+                            Some((out.global_vote, out.stats, denials))
+                        } else {
+                            let pset = ParticipantSet::from_mask(present.clone());
+                            match session.run_round_admitted_present(&signs, &pset) {
+                                Ok((out, denials, _waited)) => {
+                                    Some((out.global_vote, out.stats, denials))
+                                }
+                                Err(AdmissionError::ChurnBelowThreshold { .. }) => None,
+                                Err(e) => panic!("aggregation round failed: {e}"),
+                            }
                         }
-                        SessionHandle::Remote { id } => {
-                            let client =
-                                client.expect("remote sessions require a ServiceClient");
+                    }
+                    SessionHandle::Remote { id } => {
+                        let client = client.expect("remote sessions require a ServiceClient");
+                        if survivors == selected.len() {
                             let (reply, denials, _waited) = client
                                 .run_round_admitted(*id, &signs)
                                 .unwrap_or_else(|e| {
                                     panic!("remote aggregation round failed: {e}")
                                 });
-                            (reply.global_vote, reply.stats, denials)
+                            Some((reply.global_vote, reply.stats, denials))
+                        } else {
+                            match client.run_round_admitted_present(
+                                *id,
+                                &signs,
+                                Some(present.as_slice()),
+                            ) {
+                                Ok((reply, denials, _waited)) => {
+                                    Some((reply.global_vote, reply.stats, denials))
+                                }
+                                Err(crate::service::Error::Admission(
+                                    AdmissionError::ChurnBelowThreshold { .. },
+                                )) => None,
+                                Err(e) => panic!("remote aggregation round failed: {e}"),
+                            }
                         }
-                    };
-                throttled = denials;
-                let bits = stats.c_u_bits();
-                let direction = global_vote.iter().map(|&v| v as f32).collect();
-                comm = Some(stats);
-                (direction, bits)
+                    }
+                };
+                match outcome {
+                    Some((global_vote, stats, denials)) => {
+                        throttled = denials;
+                        let bits = stats.c_u_bits();
+                        let direction = global_vote.iter().map(|&v| v as f32).collect();
+                        comm = Some(stats);
+                        (direction, bits)
+                    }
+                    None => {
+                        aborted = true;
+                        (vec![0.0f32; d], 0)
+                    }
+                }
             }
             Aggregator::PlainMv(policy) => {
-                let signs: Vec<Vec<i8>> = grads.iter().map(|g| sign_vec(g)).collect();
-                let vote = plain_group_vote_all(&signs, *policy);
-                (vote.iter().map(|&v| v as f32).collect(), d as u64)
+                let signs: Vec<Vec<i8>> = grads.iter().flatten().map(|g| sign_vec(g)).collect();
+                if signs.is_empty() {
+                    aborted = true;
+                    (vec![0.0f32; d], 0)
+                } else {
+                    let vote = plain_group_vote_all(&signs, *policy);
+                    (vote.iter().map(|&v| v as f32).collect(), d as u64)
+                }
             }
             Aggregator::DpSign { clip, sigma } => {
                 let signs: Vec<Vec<i8>> = grads
                     .iter()
+                    .flatten()
                     .map(|g| {
                         sign_vec(&dp_signsgd::privatize(g, *clip, *sigma, &mut self.dp_rng))
                     })
                     .collect();
-                let vote = plain_group_vote_all(&signs, crate::poly::TiePolicy::OneBit);
-                (vote.iter().map(|&v| v as f32).collect(), d as u64)
+                if signs.is_empty() {
+                    aborted = true;
+                    (vec![0.0f32; d], 0)
+                } else {
+                    let vote = plain_group_vote_all(&signs, crate::poly::TiePolicy::OneBit);
+                    (vote.iter().map(|&v| v as f32).collect(), d as u64)
+                }
             }
             Aggregator::MaskedSum => {
-                let signs: Vec<Vec<i8>> = grads.iter().map(|g| sign_vec(g)).collect();
-                let out = masking::secure_sum(&signs, self.cfg.seed ^ round as u64);
-                (
-                    out.votes.iter().map(|&v| v as f32).collect(),
-                    out.uplink_bits_per_user,
-                )
+                let signs: Vec<Vec<i8>> = grads.iter().flatten().map(|g| sign_vec(g)).collect();
+                if signs.is_empty() {
+                    aborted = true;
+                    (vec![0.0f32; d], 0)
+                } else {
+                    let out = masking::secure_sum(&signs, self.cfg.seed ^ round as u64);
+                    (
+                        out.votes.iter().map(|&v| v as f32).collect(),
+                        out.uplink_bits_per_user,
+                    )
+                }
             }
             Aggregator::FedAvg => {
-                let mut mean = vec![0.0f32; d];
-                let inv = 1.0 / grads.len() as f32;
-                for g in &grads {
-                    for (m, &gi) in mean.iter_mut().zip(g) {
-                        *m += gi * inv;
+                let live: Vec<&Vec<f32>> = grads.iter().flatten().collect();
+                if live.is_empty() {
+                    aborted = true;
+                    (vec![0.0f32; d], 0)
+                } else {
+                    let mut mean = vec![0.0f32; d];
+                    let inv = 1.0 / live.len() as f32;
+                    for g in &live {
+                        for (m, &gi) in mean.iter_mut().zip(g.iter()) {
+                            *m += gi * inv;
+                        }
                     }
+                    (mean, 32 * d as u64)
                 }
-                (mean, 32 * d as u64)
             }
         };
         self.total_uplink += uplink_bits_per_user;
@@ -421,6 +543,8 @@ impl<'a, M: Model> FedRun<'a, M> {
             uplink_bits_per_user,
             throttled,
             comm,
+            survivors,
+            aborted,
         });
     }
 
@@ -573,6 +697,7 @@ mod tests {
             batch_size: 32,
             eval_every: 10,
             seed: 11,
+            churn: 0.0,
         }
     }
 
@@ -862,7 +987,16 @@ mod tests {
         let round0 = &j.get("rounds").unwrap().as_arr().unwrap()[0];
         assert_eq!(
             keys(round0),
-            ["acc", "comm", "loss", "round", "throttled", "uplink_bits_per_user"],
+            [
+                "aborted",
+                "acc",
+                "comm",
+                "loss",
+                "round",
+                "survivors",
+                "throttled",
+                "uplink_bits_per_user",
+            ],
             "round-log schema drifted"
         );
         assert_eq!(
@@ -891,9 +1025,12 @@ mod tests {
         let pr0 = &pj.get("rounds").unwrap().as_arr().unwrap()[0];
         assert_eq!(
             keys(pr0),
-            ["acc", "loss", "round", "throttled", "uplink_bits_per_user"]
+            ["aborted", "acc", "loss", "round", "survivors", "throttled", "uplink_bits_per_user"]
         );
         assert_eq!(pr0.get("throttled").unwrap().as_u64(), Some(0));
+        // Zero-churn rounds log the full participant count and never abort.
+        assert_eq!(pr0.get("survivors").unwrap().as_u64(), Some(6));
+        assert_eq!(pr0.get("aborted").unwrap().as_bool(), Some(false));
     }
 
     #[test]
@@ -919,5 +1056,105 @@ mod tests {
         // Non-secure aggregators log no comm object.
         let plain = train(&m, &tr, &te, &shards, Aggregator::PlainMv(TiePolicy::OneBit), &cfg);
         assert!(plain.logs.iter().all(|l| l.comm.is_none()));
+    }
+
+    #[test]
+    fn churned_training_drops_users_and_aborts_below_threshold() {
+        let (tr, te, shards) = quick_setup();
+        let m = LinearSoftmax::new(784, 10);
+        let agg = Aggregator::HiSafe(HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit));
+
+        // Moderate churn: rounds with dropouts complete over the
+        // survivor set (n1 = 3 ⇒ threshold t = 1, so any 2-of-3 group
+        // still reconstructs). 20 rounds × 6 draws at p = 0.15 makes
+        // both "some round saw a dropout" and "some churned round still
+        // completed" sure bets (failure odds < 1e-6 each).
+        let mut cfg = quick_cfg(20);
+        cfg.churn = 0.15;
+        let res = train(&m, &tr, &te, &shards, agg, &cfg);
+        assert_eq!(res.logs.len(), 20);
+        assert!(
+            res.logs.iter().any(|l| l.survivors < 6),
+            "0.15 churn over 20×6 draws left every round full-present"
+        );
+        assert!(
+            res.logs.iter().any(|l| !l.aborted && l.survivors < 6),
+            "no churned round completed over its survivor set"
+        );
+        for l in &res.logs {
+            assert!(l.survivors <= 6);
+            if l.aborted {
+                // Aborted rounds never ran the protocol: no comm, no
+                // uplink, and the direction was zero (model untouched).
+                assert!(l.comm.is_none());
+                assert_eq!(l.uplink_bits_per_user, 0);
+            } else {
+                let comm = l.comm.as_ref().expect("completed secure rounds log comm");
+                assert_eq!(comm.c_u_bits(), l.uplink_bits_per_user);
+            }
+        }
+        // Session counters partition the rounds: completions are
+        // admitted, below-threshold aborts are typed rejections.
+        let adm = res.admission.as_ref().expect("secure run reports admission");
+        let completed = res.logs.iter().filter(|l| !l.aborted).count() as u64;
+        let aborts = res.logs.iter().filter(|l| l.aborted).count() as u64;
+        assert_eq!(adm.admitted_rounds, completed);
+        assert_eq!(adm.rejected, aborts);
+
+        // Heavy churn: at p = 0.9 a round survives both group
+        // thresholds with probability < 1e-3, so 10 rounds abort at
+        // least once with near certainty — typed skips, never panics,
+        // and the run still finishes with a full log.
+        let mut heavy = quick_cfg(10);
+        heavy.churn = 0.9;
+        let res = train(&m, &tr, &te, &shards, agg, &heavy);
+        assert_eq!(res.logs.len(), 10);
+        assert!(
+            res.logs.iter().any(|l| l.aborted),
+            "0.9 churn should abort at least one of 10 rounds"
+        );
+        assert!(res.logs.iter().filter(|l| l.aborted).all(|l| l.uplink_bits_per_user == 0));
+    }
+
+    #[test]
+    fn churned_remote_training_matches_local_churned_training() {
+        // The presence mask crosses the wire: a churned remote run must
+        // reproduce the local churned trajectory bit-for-bit, including
+        // which rounds aborted (the typed below-threshold denial parses
+        // back identically to the local error).
+        use crate::service::{AggFrontend, ServiceClient, ServiceServer};
+
+        let (tr, te, shards) = quick_setup();
+        let m = LinearSoftmax::new(784, 10);
+        let mut cfg = quick_cfg(8);
+        cfg.churn = 0.2;
+        let agg = Aggregator::HiSafe(HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit));
+        let local = train(&m, &tr, &te, &shards, agg, &cfg);
+
+        let server =
+            ServiceServer::bind("127.0.0.1:0", AggFrontend::new(2, 1)).expect("bind loopback");
+        let addr = server.local_addr().expect("bound addr").to_string();
+        let serve = std::thread::spawn(move || server.serve());
+        let mut client = ServiceClient::connect(&addr).expect("connect");
+
+        let specs = vec![FedSpec {
+            model: &m,
+            train_ds: &tr,
+            test_ds: &te,
+            shards: &shards,
+            agg,
+            cfg: cfg.clone(),
+            qos: QosPolicy::unlimited(),
+        }];
+        let remote = train_remote(&mut client, &specs).pop().unwrap();
+        assert_eq!(remote.final_params, local.final_params);
+        assert_eq!(remote.final_acc, local.final_acc);
+        let fates = |r: &TrainResult| -> Vec<(usize, bool)> {
+            r.logs.iter().map(|l| (l.survivors, l.aborted)).collect()
+        };
+        assert_eq!(fates(&remote), fates(&local));
+
+        client.shutdown().expect("shutdown acked");
+        serve.join().expect("serve thread").expect("clean shutdown");
     }
 }

@@ -17,13 +17,15 @@
 
 use hisafe::config::{preset, preset_names, ExperimentConfig};
 use hisafe::cost;
-use hisafe::engine::{AggScheduler, QosPolicy, SessionId};
+use hisafe::engine::{AdmissionError, AggScheduler, QosPolicy, SessionId};
 use hisafe::fl::data::{partition_users, synthetic};
 use hisafe::fl::model::{LinearSoftmax, Mlp};
 use hisafe::fl::trainer::{train, TrainConfig, TrainResult};
 use hisafe::metrics::CommStats;
 use hisafe::poly::{MvPolynomial, TiePolicy};
-use hisafe::protocol::{plain_hierarchical_vote, HiSafeConfig};
+use hisafe::protocol::{
+    plain_hierarchical_vote, plain_hierarchical_vote_present, HiSafeConfig, ParticipantSet,
+};
 use hisafe::security;
 use hisafe::service::{AggFrontend, Balancer, ServiceClient, ServiceServer, PROTOCOL_VERSION};
 use hisafe::util::cli::Args;
@@ -73,10 +75,13 @@ fn print_help() {
            fig6                            Fig. 6 cost/latency series\n\
            security [--n 24] [--ell 8]     leakage analysis\n\
            sweep [--tenants 24x8x2048@3,...] [--rounds 5] [--threads N] [--out DIR]\n\
-                 [--rps R] [--tps T] [--queue-depth Q]\n\
+                 [--rps R] [--tps T] [--queue-depth Q] [--churn P]\n\
                                            mixed-tenant scheduler workload with\n\
                                            per-tenant QoS (@W = dealing weight;\n\
-                                           rps/tps/queue-depth bound every tenant)\n\
+                                           rps/tps/queue-depth bound every tenant;\n\
+                                           churn P drops each user per round with\n\
+                                           probability P — below-threshold rounds\n\
+                                           abort, survivors are reported)\n\
            sweep --remote HOST:PORT [--stop-server]\n\
                                            the same sweep driven over the wire\n\
                                            against a `hisafe serve` process\n\
@@ -127,6 +132,7 @@ fn run_experiment(cfg: &ExperimentConfig, rounds_override: Option<usize>) -> Vec
             batch_size: cfg.batch_size,
             eval_every: cfg.eval_every,
             seed,
+            churn: 0.0,
         };
         let agg = cfg.aggregator();
         let res = match cfg.model.as_str() {
@@ -390,6 +396,28 @@ fn parse_tenant(spec: &str) -> Result<(HiSafeConfig, usize, u32), String> {
     Ok((HiSafeConfig::hierarchical(n, ell, TiePolicy::OneBit), d, weight))
 }
 
+/// Parse + validate `--churn P` (a probability; 0 disables churn).
+fn parse_churn(args: &Args) -> Result<f64, String> {
+    let churn = args.get_f64("churn", 0.0)?;
+    if !(0.0..1.0).contains(&churn) {
+        return Err(format!("--churn must be a probability in [0, 1), got {churn}"));
+    }
+    Ok(churn)
+}
+
+/// One per-round presence draw: each of `n` users independently answers
+/// with probability `1 − churn` (53-bit mantissa uniform draw, same
+/// sampling the trainer uses).
+fn sample_mask(rng: &mut hisafe::util::rng::Xoshiro256pp, n: usize, churn: f64) -> Vec<bool> {
+    use hisafe::util::rng::Rng;
+    (0..n)
+        .map(|_| {
+            let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+            u >= churn
+        })
+        .collect()
+}
+
 /// Mixed-tenant workload on one shared scheduler: every tenant is an
 /// `AggSession` with its own `(cfg, d)` shape and QoS policy, rounds
 /// interleave round-robin, and we report per-tenant round latency,
@@ -399,7 +427,7 @@ fn parse_tenant(spec: &str) -> Result<(HiSafeConfig, usize, u32), String> {
 fn cmd_sweep(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "tenants", "rounds", "threads", "seed", "out", "rps", "tps", "queue-depth",
-        "remote", "stop-server", "verbose", "threaded", "jax",
+        "churn", "remote", "stop-server", "verbose", "threaded", "jax",
     ])?;
     if args.has("remote") {
         return cmd_sweep_remote(args);
@@ -419,6 +447,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     let rps = args.get_f64("rps", 0.0)?;
     let tps = args.get_f64("tps", 0.0)?;
     let queue_depth = args.get_usize("queue-depth", 0)?;
+    let churn = parse_churn(args)?;
     let threads = args.get_usize("threads", 0)?;
     let sched = if threads == 0 {
         AggScheduler::new()
@@ -426,10 +455,11 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         AggScheduler::with_threads(threads)
     };
     println!(
-        "# sweep: {} tenants on ONE scheduler — {} span workers + {} dealer thread(s) total",
+        "# sweep: {} tenants on ONE scheduler — {} span workers + {} dealer thread(s) total{}",
         shapes.len(),
         sched.worker_threads(),
-        sched.dealer_threads()
+        sched.dealer_threads(),
+        if churn > 0.0 { format!(", churn p = {churn}") } else { String::new() }
     );
 
     struct TenantRun {
@@ -439,10 +469,18 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         weight: u32,
         session: hisafe::engine::AggSession,
         rng: hisafe::util::rng::Xoshiro256pp,
+        churn_rng: hisafe::util::rng::Xoshiro256pp,
         latencies_ms: Vec<f64>,
         throttle_wait_ms: f64,
         comm_last: Option<CommStats>,
         comm_total: CommStats,
+        /// Survivor count per round (== n for every round when churn is
+        /// off). Aborted rounds are listed too, so the vector always has
+        /// one entry per round.
+        survivors_per_round: Vec<usize>,
+        aborted_rounds: u64,
+        completed_rounds: u64,
+        audited: bool,
     }
     use hisafe::util::rng::Rng;
 
@@ -468,29 +506,79 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             weight,
             session,
             rng: hisafe::util::rng::Xoshiro256pp::seed_from_u64(base_seed ^ ((i as u64) << 8)),
+            churn_rng: hisafe::util::rng::Xoshiro256pp::seed_from_u64(
+                base_seed ^ ((i as u64) << 8) ^ 0xc4021,
+            ),
             latencies_ms: Vec::with_capacity(rounds),
             throttle_wait_ms: 0.0,
             comm_last: None,
             comm_total: CommStats::default(),
+            survivors_per_round: Vec::with_capacity(rounds),
+            aborted_rounds: 0,
+            completed_rounds: 0,
+            audited: false,
         });
     }
 
-    for round in 0..rounds {
+    for _round in 0..rounds {
         for t in tenants.iter_mut() {
             let signs: Vec<Vec<i8>> = (0..t.cfg.n)
                 .map(|_| (0..t.d).map(|_| t.rng.gen_sign()).collect())
                 .collect();
+            // Per-round churn draw from a dedicated stream (the sign
+            // stream is untouched, so --churn 0 sweeps are bit-identical
+            // to pre-churn sweeps).
+            let mask = if churn > 0.0 {
+                sample_mask(&mut t.churn_rng, t.cfg.n, churn)
+            } else {
+                vec![true; t.cfg.n]
+            };
+            let survivors = mask.iter().filter(|&&p| p).count();
+            t.survivors_per_round.push(survivors);
             // QoS-checked admission with blocking retry: the sweep runs
             // every round, so throttle denials become measured waits —
             // reported as throttle_wait_ms, and kept OUT of the round
             // latency columns (the slept time is subtracted, so
-            // latencies_ms measures the admitted round only).
+            // latencies_ms measures the admitted round only). A churned
+            // round takes the threshold path over its survivors; a
+            // below-threshold mask is a typed abort (counted, not
+            // retried, never a panic).
             let t0 = std::time::Instant::now();
-            let (out, _denials, waited) = t.session.run_round_admitted(&signs);
-            t.throttle_wait_ms += waited.as_secs_f64() * 1e3;
-            t.latencies_ms
-                .push(t0.elapsed().saturating_sub(waited).as_secs_f64() * 1e3);
-            if round == 0 {
+            let out = if survivors == t.cfg.n {
+                let (out, _denials, waited) = t.session.run_round_admitted(&signs);
+                t.throttle_wait_ms += waited.as_secs_f64() * 1e3;
+                t.latencies_ms
+                    .push(t0.elapsed().saturating_sub(waited).as_secs_f64() * 1e3);
+                out
+            } else {
+                let pset = ParticipantSet::from_mask(mask);
+                match t.session.run_round_admitted_present(&signs, &pset) {
+                    Ok((out, _denials, waited)) => {
+                        t.throttle_wait_ms += waited.as_secs_f64() * 1e3;
+                        t.latencies_ms
+                            .push(t0.elapsed().saturating_sub(waited).as_secs_f64() * 1e3);
+                        // Audit churned rounds against the plaintext vote
+                        // over the same survivor set.
+                        if !t.audited {
+                            assert_eq!(
+                                out.global_vote,
+                                plain_hierarchical_vote_present(&signs, &pset, t.cfg),
+                                "tenant {} produced a wrong churned vote",
+                                t.label
+                            );
+                        }
+                        out
+                    }
+                    Err(AdmissionError::ChurnBelowThreshold { .. }) => {
+                        t.aborted_rounds += 1;
+                        continue;
+                    }
+                    Err(e) => {
+                        panic!("tenant {} round failed: {e}", t.label)
+                    }
+                }
+            };
+            if !t.audited && survivors == t.cfg.n {
                 // One correctness audit per tenant: scheduled votes must
                 // equal the plaintext hierarchical majority vote.
                 assert_eq!(
@@ -500,6 +588,8 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
                     t.label
                 );
             }
+            t.audited = true;
+            t.completed_rounds += 1;
             t.comm_total.merge(&out.stats);
             t.comm_last = Some(out.stats);
         }
@@ -513,10 +603,22 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     let mut report = Json::obj();
     let mut tenant_objs: Vec<Json> = Vec::new();
     for t in &tenants {
-        let mean = t.latencies_ms.iter().sum::<f64>() / t.latencies_ms.len() as f64;
-        let min = t.latencies_ms.iter().cloned().fold(f64::INFINITY, f64::min);
+        // Under heavy churn a tenant can abort every round: latency and
+        // comm columns then report zeros rather than NaN/∞ (which would
+        // also not be valid JSON).
+        let ran = !t.latencies_ms.is_empty();
+        let mean = if ran {
+            t.latencies_ms.iter().sum::<f64>() / t.latencies_ms.len() as f64
+        } else {
+            0.0
+        };
+        let min = if ran {
+            t.latencies_ms.iter().cloned().fold(f64::INFINITY, f64::min)
+        } else {
+            0.0
+        };
         let max = t.latencies_ms.iter().cloned().fold(0.0f64, f64::max);
-        let comm = t.comm_last.as_ref().expect("every tenant ran rounds");
+        let comm = t.comm_last.clone().unwrap_or_default();
         let adm = t.session.admission_stats();
         println!(
             "{:<16} {:>3} {:>6} {:>10.2} {:>10.2} {:>10.2} {:>9} {:>6} {:>12} {:>10}",
@@ -531,6 +633,12 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             comm.c_u_bits(),
             comm.mults
         );
+        if churn > 0.0 {
+            println!(
+                "  churn: {} completed, {} aborted (below threshold), survivors/round {:?}",
+                t.completed_rounds, t.aborted_rounds, t.survivors_per_round
+            );
+        }
         let mut qos_obj = Json::obj();
         qos_obj.set("weight", t.weight);
         if rps > 0.0 {
@@ -556,12 +664,16 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             .set("qos", qos_obj)
             .set("admission", adm.to_json())
             .set("comm_per_round", comm.to_json())
-            .set("comm_total", t.comm_total.to_json());
+            .set("comm_total", t.comm_total.to_json())
+            .set("survivors_per_round", t.survivors_per_round.clone())
+            .set("completed_rounds", t.completed_rounds)
+            .set("aborted_rounds", t.aborted_rounds);
         tenant_objs.push(o);
     }
     report
         .set("worker_threads", sched.worker_threads())
         .set("dealer_threads", sched.dealer_threads())
+        .set("churn", churn)
         .set("tenants", tenant_objs);
 
     let out_dir = args.get_or("out", "runs");
@@ -593,13 +705,18 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
     let rps = args.get_f64("rps", 0.0)?;
     let tps = args.get_f64("tps", 0.0)?;
     let queue_depth = args.get_usize("queue-depth", 0)?;
+    let churn = parse_churn(args)?;
     if args.has("threads") {
         return Err("--threads is a server-side knob; pass it to `hisafe serve`".into());
     }
 
     let mut client =
         ServiceClient::connect(&addr).map_err(|e| format!("connect to {addr}: {e}"))?;
-    println!("# remote sweep: {} tenants against {addr}", shapes.len());
+    println!(
+        "# remote sweep: {} tenants against {addr}{}",
+        shapes.len(),
+        if churn > 0.0 { format!(", churn p = {churn}") } else { String::new() }
+    );
 
     struct RemoteTenant {
         label: String,
@@ -608,10 +725,15 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
         weight: u32,
         sid: SessionId,
         rng: hisafe::util::rng::Xoshiro256pp,
+        churn_rng: hisafe::util::rng::Xoshiro256pp,
         latencies_ms: Vec<f64>,
         throttle_wait_ms: f64,
         comm_last: Option<CommStats>,
         comm_total: CommStats,
+        survivors_per_round: Vec<usize>,
+        aborted_rounds: u64,
+        completed_rounds: u64,
+        audited: bool,
     }
     use hisafe::util::rng::Rng;
 
@@ -637,10 +759,17 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
             weight,
             sid,
             rng: hisafe::util::rng::Xoshiro256pp::seed_from_u64(base_seed ^ ((i as u64) << 8)),
+            churn_rng: hisafe::util::rng::Xoshiro256pp::seed_from_u64(
+                base_seed ^ ((i as u64) << 8) ^ 0xc4021,
+            ),
             latencies_ms: Vec::with_capacity(rounds),
             throttle_wait_ms: 0.0,
             comm_last: None,
             comm_total: CommStats::default(),
+            survivors_per_round: Vec::with_capacity(rounds),
+            aborted_rounds: 0,
+            completed_rounds: 0,
+            audited: false,
         });
     }
 
@@ -649,14 +778,57 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
             let signs: Vec<Vec<i8>> = (0..t.cfg.n)
                 .map(|_| (0..t.d).map(|_| t.rng.gen_sign()).collect())
                 .collect();
+            // Same dedicated churn stream as the local sweep — identical
+            // seeds draw identical masks, so a remote sweep reproduces
+            // the local survivor sets exactly.
+            let mask = if churn > 0.0 {
+                sample_mask(&mut t.churn_rng, t.cfg.n, churn)
+            } else {
+                vec![true; t.cfg.n]
+            };
+            let survivors = mask.iter().filter(|&&p| p).count();
+            t.survivors_per_round.push(survivors);
             let t0 = std::time::Instant::now();
-            let (reply, _denials, waited) = client
-                .run_round_admitted(t.sid, &signs)
-                .map_err(|e| format!("tenant {} round {round}: {e}", t.label))?;
-            t.throttle_wait_ms += waited.as_secs_f64() * 1e3;
-            t.latencies_ms
-                .push(t0.elapsed().saturating_sub(waited).as_secs_f64() * 1e3);
-            if round == 0 {
+            let reply = if survivors == t.cfg.n {
+                let (reply, _denials, waited) = client
+                    .run_round_admitted(t.sid, &signs)
+                    .map_err(|e| format!("tenant {} round {round}: {e}", t.label))?;
+                t.throttle_wait_ms += waited.as_secs_f64() * 1e3;
+                t.latencies_ms
+                    .push(t0.elapsed().saturating_sub(waited).as_secs_f64() * 1e3);
+                reply
+            } else {
+                match client.run_round_admitted_present(t.sid, &signs, Some(&mask)) {
+                    Ok((reply, _denials, waited)) => {
+                        t.throttle_wait_ms += waited.as_secs_f64() * 1e3;
+                        t.latencies_ms
+                            .push(t0.elapsed().saturating_sub(waited).as_secs_f64() * 1e3);
+                        if !t.audited {
+                            assert_eq!(
+                                reply.global_vote,
+                                plain_hierarchical_vote_present(
+                                    &signs,
+                                    &ParticipantSet::from_mask(mask),
+                                    t.cfg,
+                                ),
+                                "tenant {} produced a wrong churned vote over the wire",
+                                t.label
+                            );
+                        }
+                        reply
+                    }
+                    Err(hisafe::service::Error::Admission(
+                        AdmissionError::ChurnBelowThreshold { .. },
+                    )) => {
+                        t.aborted_rounds += 1;
+                        continue;
+                    }
+                    Err(e) => {
+                        return Err(format!("tenant {} round {round}: {e}", t.label));
+                    }
+                }
+            };
+            if !t.audited && survivors == t.cfg.n {
                 assert_eq!(
                     reply.global_vote,
                     plain_hierarchical_vote(&signs, t.cfg),
@@ -664,6 +836,8 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
                     t.label
                 );
             }
+            t.audited = true;
+            t.completed_rounds += 1;
             t.comm_total.merge(&reply.stats);
             t.comm_last = Some(reply.stats);
         }
@@ -677,10 +851,19 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
     let mut report = Json::obj();
     let mut tenant_objs: Vec<Json> = Vec::new();
     for t in &tenants {
-        let mean = t.latencies_ms.iter().sum::<f64>() / t.latencies_ms.len() as f64;
-        let min = t.latencies_ms.iter().cloned().fold(f64::INFINITY, f64::min);
+        let ran = !t.latencies_ms.is_empty();
+        let mean = if ran {
+            t.latencies_ms.iter().sum::<f64>() / t.latencies_ms.len() as f64
+        } else {
+            0.0
+        };
+        let min = if ran {
+            t.latencies_ms.iter().cloned().fold(f64::INFINITY, f64::min)
+        } else {
+            0.0
+        };
         let max = t.latencies_ms.iter().cloned().fold(0.0f64, f64::max);
-        let comm = t.comm_last.as_ref().expect("every tenant ran rounds");
+        let comm = t.comm_last.clone().unwrap_or_default();
         let stats = client
             .stats(Some(t.sid))
             .map_err(|e| format!("stats for tenant {}: {e}", t.label))?;
@@ -699,6 +882,12 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
             comm.c_u_bits(),
             comm.mults
         );
+        if churn > 0.0 {
+            println!(
+                "  churn: {} completed, {} aborted (below threshold), survivors/round {:?}",
+                t.completed_rounds, t.aborted_rounds, t.survivors_per_round
+            );
+        }
         let mut qos_obj = Json::obj();
         qos_obj.set("weight", t.weight);
         if rps > 0.0 {
@@ -725,7 +914,10 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
             .set("qos", qos_obj)
             .set("admission", stats.admission.to_json())
             .set("comm_per_round", comm.to_json())
-            .set("comm_total", t.comm_total.to_json());
+            .set("comm_total", t.comm_total.to_json())
+            .set("survivors_per_round", t.survivors_per_round.clone())
+            .set("completed_rounds", t.completed_rounds)
+            .set("aborted_rounds", t.aborted_rounds);
         tenant_objs.push(o);
     }
     // Frontend-wide layout before the sessions close.
@@ -734,6 +926,7 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
         .set("remote", addr.clone())
         .set("protocol_version", PROTOCOL_VERSION)
         .set("shard_tenants", fe.shard_tenants.unwrap_or_default())
+        .set("churn", churn)
         .set("tenants", tenant_objs);
 
     for t in &tenants {

@@ -18,16 +18,20 @@
 //! server then computes the global vote `sign(Σ s_j)` in the clear —
 //! exactly the leakage profile Theorem 2 permits (`{s_j}` and `s`).
 
+use std::fmt;
 use std::sync::mpsc;
 use std::sync::Arc;
 
 use crate::beaver::Dealer;
+use crate::field::{next_prime, Fp};
 use crate::metrics::CommStats;
 use crate::mpc::{
     plain_group_vote, secure_group_vote, BroadcastMsg, EvalPlan, Party, Server,
     Transcript, UplinkMsg,
 };
 use crate::poly::{MvPolynomial, TiePolicy};
+use crate::shamir::{reconstruct, share};
+use crate::util::rng::ChaCha20Rng;
 
 /// Full protocol configuration (Section III-E's A-1/B-1/A-2/B-2 matrix).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -190,6 +194,284 @@ pub fn plain_hierarchical_vote(
         .map(|members| {
             let group_signs: Vec<Vec<i8>> =
                 members.iter().map(|&i| signs[i].clone()).collect();
+            plain_group_vote(&group_signs, cfg.intra)
+        })
+        .collect();
+    inter_group_vote(&subgroup_votes, cfg.inter)
+}
+
+// ------------------------------------------------------- participant sets
+
+/// The explicit per-round participant set: which of the `n` *registered*
+/// users actually answered this round. Every round path (the references
+/// here, both engines, the scheduler sessions, and the wire protocol)
+/// threads one of these instead of assuming "all n present".
+///
+/// Sign matrices keep their full `n`-row shape everywhere — absent rows
+/// are simply ignored (conventionally zeros) — so shape validation and
+/// the wire schema are independent of churn.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParticipantSet {
+    mask: Vec<bool>,
+}
+
+impl ParticipantSet {
+    /// Everyone answered — the pre-churn implicit assumption, explicit.
+    pub fn all(n: usize) -> ParticipantSet {
+        ParticipantSet { mask: vec![true; n] }
+    }
+
+    /// A set from an explicit per-user presence mask (`mask[i]` ⇔ user
+    /// `i` answered). This is also the wire form (`'1'`/`'0'` string).
+    pub fn from_mask(mask: Vec<bool>) -> ParticipantSet {
+        ParticipantSet { mask }
+    }
+
+    /// The number of registered users the mask covers (the config's `n`).
+    pub fn n(&self) -> usize {
+        self.mask.len()
+    }
+
+    /// Did user `i` answer this round?
+    pub fn is_present(&self, user: usize) -> bool {
+        self.mask[user]
+    }
+
+    /// Users that answered, over the whole federation.
+    pub fn survivors(&self) -> usize {
+        self.mask.iter().filter(|&&m| m).count()
+    }
+
+    /// `true` iff nobody dropped — the fast path back to the zero-churn
+    /// pipeline (bit-identical to [`run_sync`], pooled triples and all).
+    pub fn is_all_present(&self) -> bool {
+        self.mask.iter().all(|&m| m)
+    }
+
+    /// The raw presence mask (wire encoding, trainer bookkeeping).
+    pub fn mask(&self) -> &[bool] {
+        &self.mask
+    }
+
+    /// The members of one subgroup that answered, in member order
+    /// (absolute user ids).
+    pub fn group_survivors(&self, members: &[usize]) -> Vec<usize> {
+        members.iter().copied().filter(|&m| self.mask[m]).collect()
+    }
+
+    /// A stable 64-bit key of this group's presence *pattern* (FNV-1a
+    /// over the per-member bits). Two rounds with the same surviving
+    /// cohort share a key — the engines' reusable-secret fast path caches
+    /// per-cohort setup under `(group, cohort_key)`, and
+    /// [`churn_dealer_seed`] folds the key in so distinct cohorts draw
+    /// from distinct triple streams.
+    pub fn cohort_key(&self, members: &[usize]) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &m in members {
+            h ^= if self.mask[m] { 0x9e } else { 0x31 };
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+}
+
+/// Typed churn failure: a subgroup lost so many members this round that
+/// threshold reconstruction is impossible. Never a panic — every layer
+/// (reference, engines, scheduler, wire) surfaces this as a value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChurnError {
+    /// Group `group` kept only `survivors` members, but reconstruction
+    /// needs `required` = t+1 (a within-group honest majority).
+    BelowThreshold {
+        /// The subgroup index that fell below threshold.
+        group: usize,
+        /// Members of that subgroup that answered this round.
+        survivors: usize,
+        /// The minimum survivor count (`group_threshold(n₁) + 1`).
+        required: usize,
+    },
+}
+
+impl fmt::Display for ChurnError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ChurnError::BelowThreshold { group, survivors, required } => write!(
+                f,
+                "subgroup {group} below reconstruction threshold: \
+                 {survivors} survivors, need {required} (t-of-n needs t+1)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ChurnError {}
+
+/// The per-group Shamir threshold `t = ⌊(n₁ − 1)/2⌋` — the same honest-
+/// majority bound `shamir.rs` uses for its DN07 backend. A round survives
+/// as long as every subgroup keeps `t + 1` members; Hi-SAFE's subgrouping
+/// bounds reconstruction to *group* size, so a fleet-wide dropout storm
+/// only aborts if it concentrates ≥ `n₁ − t` losses inside one subgroup.
+pub fn group_threshold(n1: usize) -> usize {
+    n1.saturating_sub(1) / 2
+}
+
+/// Validate one round's participant set against every subgroup's
+/// threshold. `Err` identifies the *first* violating group (group order
+/// is deterministic, so every path reports the same abort).
+pub fn check_thresholds(
+    cfg: HiSafeConfig,
+    present: &ParticipantSet,
+) -> Result<(), ChurnError> {
+    assert_eq!(present.n(), cfg.n, "participant mask must cover all n users");
+    let n1 = cfg.n1();
+    let required = group_threshold(n1) + 1;
+    for (g, members) in partition(cfg.n, cfg.ell).iter().enumerate() {
+        let survivors = members.iter().filter(|&&m| present.is_present(m)).count();
+        if survivors < required {
+            return Err(ChurnError::BelowThreshold { group: g, survivors, required });
+        }
+    }
+    Ok(())
+}
+
+/// Dealer seed for a *churned* cohort of group `g`: the base
+/// [`group_dealer_seed`] derivation XOR-folded with the cohort key (which
+/// the reference derives from the Shamir-reconstructed recovery secrets —
+/// see [`recover_cohort_key`]). Distinct survivor patterns therefore draw
+/// from distinct, deterministic triple streams, while the full-cohort
+/// stream stays exactly `group_dealer_seed(seed, g)`.
+pub fn churn_dealer_seed(seed: u64, g: usize, cohort_key: u64) -> u64 {
+    group_dealer_seed(seed, g) ^ cohort_key.wrapping_mul(0xbf58_476d_1ce4_e5b9)
+}
+
+/// Deterministic per-member recovery secret (splitmix64 finalizer over
+/// `(seed, group, local index)`): the stand-in for the per-user key
+/// material a deployment would have escrowed at setup. Pure function, so
+/// every path derives identical secrets without coordination.
+fn recovery_secret(seed: u64, g: usize, local: usize) -> u64 {
+    let mut z = seed
+        ^ (g as u64).rotate_left(32)
+        ^ (local as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// The t-of-n recovery step for one churned subgroup, built directly on
+/// `shamir.rs`: each dropped member's recovery secret was (notionally, at
+/// setup) Shamir-shared degree-`t` among the group's `n₁` members; the
+/// `t + 1` lowest-indexed survivors Lagrange-reconstruct it, and the
+/// reconstructed secrets fold into the cohort key that seeds the
+/// survivor cohort's dealer. Panics if called below threshold — run
+/// [`check_thresholds`] first (every round path does).
+///
+/// The fold is what ties the *transcript* of a churned round to a real
+/// reconstruction: votes are triple-independent (Beaver masks cancel),
+/// but the dealer stream — and hence the openings the server observes —
+/// only reproduces across paths because each path reconstructs the same
+/// secrets from its survivor set.
+pub fn recover_cohort_key(
+    seed: u64,
+    g: usize,
+    members: &[usize],
+    present: &ParticipantSet,
+) -> u64 {
+    let n1 = members.len();
+    let t = group_threshold(n1);
+    let fp = Fp::new(next_prime(n1 as u64 + 1));
+    let pts: Vec<usize> = members
+        .iter()
+        .enumerate()
+        .filter(|&(_, &m)| present.is_present(m))
+        .map(|(local, _)| local + 1)
+        .take(t + 1)
+        .collect();
+    assert_eq!(pts.len(), t + 1, "recovery below threshold — check_thresholds first");
+    let mut key = present.cohort_key(members);
+    for (local, &m) in members.iter().enumerate() {
+        if present.is_present(m) {
+            continue;
+        }
+        let secret = fp.reduce(recovery_secret(seed, g, local));
+        let mut rng = ChaCha20Rng::seed_from_u64(recovery_secret(seed ^ 0x5151, g, local));
+        let shares = share(fp, secret, n1, t, &mut rng);
+        let survivor_shares: Vec<u64> = pts.iter().map(|&x| shares[x - 1]).collect();
+        let recovered = reconstruct(fp, &pts, &survivor_shares);
+        debug_assert_eq!(recovered, secret, "Lagrange recovery must be exact");
+        key = (key ^ recovered).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    key
+}
+
+/// Run one Hi-SAFE round over an explicit participant set — the
+/// reference every churn-tolerant path is pinned against.
+///
+/// `signs` keeps its full `n`-row shape; rows of absent users are
+/// ignored. Groups with every member present run the exact [`run_sync`]
+/// pipeline (same [`group_dealer_seed`] stream — a zero-churn call is
+/// bit-identical to `run_sync`, transcripts included). Churned groups
+/// first run the t-of-n recovery step ([`recover_cohort_key`]) and then
+/// evaluate the secure vote over the `k` survivors with a `k`-party plan
+/// seeded by [`churn_dealer_seed`]. A group below `t + 1` survivors
+/// aborts the whole round with a typed [`ChurnError`] before any group
+/// evaluates.
+pub fn run_sync_with_dropouts(
+    signs: &[Vec<i8>],
+    present: &ParticipantSet,
+    cfg: HiSafeConfig,
+    seed: u64,
+) -> Result<RoundOutcome, ChurnError> {
+    assert_eq!(signs.len(), cfg.n, "need n sign rows (absent rows are ignored)");
+    check_thresholds(cfg, present)?;
+    let groups = partition(cfg.n, cfg.ell);
+    let mut subgroup_votes = Vec::with_capacity(cfg.ell);
+    let mut transcripts = Vec::with_capacity(cfg.ell);
+    let mut stats = CommStats::default();
+    for (g, members) in groups.iter().enumerate() {
+        let survivors = present.group_survivors(members);
+        let out = if survivors.len() == members.len() {
+            let group_signs: Vec<Vec<i8>> =
+                members.iter().map(|&i| signs[i].clone()).collect();
+            secure_group_vote(&group_signs, cfg.intra, cfg.sparse, group_dealer_seed(seed, g))
+        } else {
+            let key = recover_cohort_key(seed, g, members, present);
+            let survivor_signs: Vec<Vec<i8>> =
+                survivors.iter().map(|&i| signs[i].clone()).collect();
+            secure_group_vote(
+                &survivor_signs,
+                cfg.intra,
+                cfg.sparse,
+                churn_dealer_seed(seed, g, key),
+            )
+        };
+        stats.merge(&out.stats);
+        subgroup_votes.push(out.votes);
+        transcripts.push(out.transcript);
+    }
+    let global_vote = inter_group_vote(&subgroup_votes, cfg.inter);
+    stats.vote_bits = cfg.inter.downlink_bits();
+    Ok(RoundOutcome { global_vote, subgroup_votes, stats, transcripts })
+}
+
+/// Plaintext reference for the churned hierarchy: Eq. 8 computed over
+/// each subgroup's *survivors* only. Panics on a below-threshold set —
+/// mirror of [`run_sync_with_dropouts`]'s precondition (audits call this
+/// only for rounds that completed).
+pub fn plain_hierarchical_vote_present(
+    signs: &[Vec<i8>],
+    present: &ParticipantSet,
+    cfg: HiSafeConfig,
+) -> Vec<i8> {
+    let groups = partition(cfg.n, cfg.ell);
+    let subgroup_votes: Vec<Vec<i8>> = groups
+        .iter()
+        .map(|members| {
+            let group_signs: Vec<Vec<i8>> = present
+                .group_survivors(members)
+                .iter()
+                .map(|&i| signs[i].clone())
+                .collect();
+            assert!(!group_signs.is_empty(), "a group lost every member");
             plain_group_vote(&group_signs, cfg.intra)
         })
         .collect();
@@ -475,5 +757,169 @@ mod tests {
         assert_eq!(b1.global_vote, vec![1]);        // (0 + 1) = 1 → +1
         assert_eq!(a1.stats.vote_bits, 1);
         assert_eq!(b1.stats.vote_bits, 1);
+    }
+
+    /// Random mask whose every group keeps ≥ t+1 survivors.
+    fn viable_mask(g: &mut crate::util::prop::Gen, cfg: HiSafeConfig) -> ParticipantSet {
+        let n1 = cfg.n1();
+        let required = group_threshold(n1) + 1;
+        let mut mask = vec![true; cfg.n];
+        for members in partition(cfg.n, cfg.ell) {
+            let max_drop = n1 - required;
+            let drop = g.usize_range(0, max_drop + 1);
+            let mut idx: Vec<usize> = members.clone();
+            g.rng().shuffle(&mut idx);
+            for &m in idx.iter().take(drop) {
+                mask[m] = false;
+            }
+        }
+        ParticipantSet::from_mask(mask)
+    }
+
+    #[test]
+    fn zero_churn_is_bit_identical_to_run_sync() {
+        forall("all-present dropout path ≡ run_sync", 25, |g| {
+            let ell = g.usize_range(1, 4);
+            let n1 = g.usize_range(2, 6);
+            let n = ell * n1;
+            let d = g.usize_range(1, 12);
+            let cfg = HiSafeConfig {
+                n,
+                ell,
+                intra: if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit },
+                inter: if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit },
+                sparse: g.bool(),
+            };
+            let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+            let seed = g.u64();
+            let a = run_sync(&signs, cfg, seed);
+            let b = run_sync_with_dropouts(&signs, &ParticipantSet::all(n), cfg, seed)
+                .expect("all-present never aborts");
+            prop_assert_eq!(&a.global_vote, &b.global_vote);
+            prop_assert_eq!(&a.subgroup_votes, &b.subgroup_votes);
+            prop_assert_eq!(a.stats, b.stats);
+            prop_assert_eq!(a.transcripts.len(), b.transcripts.len());
+            for (ta, tb) in a.transcripts.iter().zip(&b.transcripts) {
+                prop_assert_eq!(&ta.output, &tb.output);
+                prop_assert_eq!(ta.openings.len(), tb.openings.len());
+                for (oa, ob) in ta.openings.iter().zip(&tb.openings) {
+                    prop_assert_eq!(&oa.delta, &ob.delta);
+                    prop_assert_eq!(&oa.eps, &ob.eps);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dropout_votes_match_survivor_plaintext() {
+        forall("survivor-set secure ≡ survivor-set Eq. 8", 30, |g| {
+            let ell = g.usize_range(1, 4);
+            let n1 = g.usize_range(3, 7);
+            let n = ell * n1;
+            let d = g.usize_range(1, 10);
+            let cfg = HiSafeConfig {
+                n,
+                ell,
+                intra: if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit },
+                inter: if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit },
+                sparse: g.bool(),
+            };
+            let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+            let present = viable_mask(g, cfg);
+            let out = run_sync_with_dropouts(&signs, &present, cfg, g.u64())
+                .expect("mask is above threshold");
+            prop_assert_eq!(
+                out.global_vote,
+                plain_hierarchical_vote_present(&signs, &present, cfg),
+                "present={:?}",
+                present.mask()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dropout_round_is_deterministic_in_mask_and_seed() {
+        forall("same (mask, seed) ⇒ same transcript", 15, |g| {
+            let cfg = HiSafeConfig::hierarchical(12, 4, TiePolicy::OneBit);
+            let signs: Vec<Vec<i8>> = (0..12).map(|_| g.sign_vec(4)).collect();
+            let present = viable_mask(g, cfg);
+            let seed = g.u64();
+            let a = run_sync_with_dropouts(&signs, &present, cfg, seed).unwrap();
+            let b = run_sync_with_dropouts(&signs, &present, cfg, seed).unwrap();
+            prop_assert_eq!(&a.global_vote, &b.global_vote);
+            for (ta, tb) in a.transcripts.iter().zip(&b.transcripts) {
+                prop_assert_eq!(ta.openings.len(), tb.openings.len());
+                for (oa, ob) in ta.openings.iter().zip(&tb.openings) {
+                    prop_assert_eq!(&oa.delta, &ob.delta);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn below_threshold_is_typed_error_not_panic() {
+        // n₁=5 ⇒ t=2 ⇒ need 3 survivors. Drop 3 of group 1's members.
+        let cfg = HiSafeConfig::hierarchical(10, 2, TiePolicy::OneBit);
+        let signs: Vec<Vec<i8>> = (0..10).map(|i| vec![if i % 2 == 0 { 1i8 } else { -1 }]).collect();
+        let mut mask = vec![true; 10];
+        mask[5] = false;
+        mask[6] = false;
+        mask[8] = false;
+        let err = run_sync_with_dropouts(&signs, &ParticipantSet::from_mask(mask), cfg, 1)
+            .expect_err("group 1 kept 2 < 3 survivors");
+        assert_eq!(err, ChurnError::BelowThreshold { group: 1, survivors: 2, required: 3 });
+        assert!(err.to_string().contains("subgroup 1"));
+        // Exactly at threshold still completes.
+        let mut ok_mask = vec![true; 10];
+        ok_mask[5] = false;
+        ok_mask[6] = false;
+        let out = run_sync_with_dropouts(&signs, &ParticipantSet::from_mask(ok_mask), cfg, 1);
+        assert!(out.is_ok());
+    }
+
+    #[test]
+    fn cohort_key_distinguishes_masks_and_recovery_is_stable() {
+        let cfg = HiSafeConfig::hierarchical(8, 2, TiePolicy::OneBit);
+        let groups = partition(cfg.n, cfg.ell);
+        let full = ParticipantSet::all(8);
+        let mut m1 = vec![true; 8];
+        m1[1] = false;
+        let p1 = ParticipantSet::from_mask(m1);
+        let mut m2 = vec![true; 8];
+        m2[2] = false;
+        let p2 = ParticipantSet::from_mask(m2);
+        let k_full = full.cohort_key(&groups[0]);
+        let k1 = p1.cohort_key(&groups[0]);
+        let k2 = p2.cohort_key(&groups[0]);
+        assert_ne!(k_full, k1);
+        assert_ne!(k1, k2);
+        // Recovery is a pure function of (seed, group, mask) and differs
+        // across masks, so cohort dealer streams never collide.
+        let r1a = recover_cohort_key(9, 0, &groups[0], &p1);
+        let r1b = recover_cohort_key(9, 0, &groups[0], &p1);
+        let r2 = recover_cohort_key(9, 0, &groups[0], &p2);
+        assert_eq!(r1a, r1b);
+        assert_ne!(r1a, r2);
+        assert_ne!(churn_dealer_seed(9, 0, r1a), group_dealer_seed(9, 0));
+    }
+
+    #[test]
+    fn group_threshold_matches_shamir_backend() {
+        // Same honest-majority bound shamir_group_vote uses: t = (n₁−1)/2.
+        assert_eq!(group_threshold(1), 0);
+        assert_eq!(group_threshold(2), 0);
+        assert_eq!(group_threshold(3), 1);
+        assert_eq!(group_threshold(4), 1);
+        assert_eq!(group_threshold(5), 2);
+        // check_thresholds flags the first violating group.
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut mask = vec![true; 6];
+        mask[0] = false;
+        mask[1] = false; // group 0: 1 survivor < 2 required
+        let err = check_thresholds(cfg, &ParticipantSet::from_mask(mask)).unwrap_err();
+        assert_eq!(err, ChurnError::BelowThreshold { group: 0, survivors: 1, required: 2 });
     }
 }

@@ -51,11 +51,12 @@
 //!
 //! **Concurrency.** One persistent backend connection per host (a
 //! mutex serializes requests to that host — matching the per-host
-//! parallelism the backends' shard locks provide), and a plain thread
-//! per *client* connection: the balancer fronts a handful of tenant
-//! driver processes, not thousands of idle sockets, so the bounded
-//! worker pool lives where the fan-in is (the backends, see
-//! [`super::server`]).
+//! parallelism the backends' shard locks provide). Client connections
+//! ride the same **bounded connection-worker pump** the backends use
+//! ([`super::server::serve_frames`]): the accept loop parks every
+//! connection in a registry and a fixed worker pool sweeps them, so a
+//! thousand connected-but-quiet tenants cost registry entries, not OS
+//! threads — the old thread-per-client proxy is gone.
 //!
 //! **Shutdown.** A client `Shutdown` is acked, fanned out to every
 //! live backend, and then stops the balancer itself — one command
@@ -63,8 +64,8 @@
 //! exits cleanly).
 
 use std::collections::BTreeMap;
-use std::io::{self, BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::io;
+use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
@@ -75,7 +76,7 @@ use crate::metrics::AdmissionStats;
 use super::error::Error;
 use super::frontend::{rendezvous_rank, tenant_key};
 use super::proto::{AdmissionReply, Request, Response, SnapshotReply, StatsReply};
-use super::server::{decode_request, ServiceClient};
+use super::server::{decode_request, serve_frames, FrameHandler, ServiceClient, DEFAULT_WORKERS};
 
 /// One backend host: its address, liveness flag, and the persistent
 /// connection requests multiplex over.
@@ -235,21 +236,31 @@ impl BalCore {
                 rounds: 0,
             }),
             Request::SessionRestore { snapshot } => self.open(snapshot.clone()),
-            Request::RoundSubmit { session, signs } => {
+            Request::RoundSubmit { session, signs, present } => {
                 let signs = signs.clone();
+                let present = present.clone();
                 match self.forward(*session, move |sid| Request::RoundSubmit {
                     session: sid,
                     signs: signs.clone(),
+                    present: present.clone(),
                 }) {
                     Ok(Response::Vote(mut v)) => {
                         // The vote is now client-observed: advance the
                         // restore point past this round and re-label the
-                        // reply with the client's id.
+                        // reply with the client's id. Churn rounds count
+                        // like any other — the backend consumed exactly
+                        // one round of its dealer stream either way.
                         if let Some(bs) = self.lock_sessions().get_mut(session) {
                             bs.snap.rounds += 1;
                         }
                         v.session = *session;
                         Response::Vote(v)
+                    }
+                    Ok(Response::Admission(mut a)) => {
+                        // Typed denials (throttles, churn aborts) carry
+                        // the backend's id — re-label with the client's.
+                        a.session = a.session.map(|_| *session);
+                        Response::Admission(a)
                     }
                     Ok(other) => other,
                     Err(e) => error_reply(Some(*session), e),
@@ -363,21 +374,54 @@ fn error_reply(session: Option<SessionId>, e: Error) -> Response {
     Response::Admission(AdmissionReply::denied(session, e.into_admission()))
 }
 
+/// The routing core as a pump handler: decode, route, answer. Exactly
+/// the decode/denial discipline the backend transport applies, so a
+/// garbage client costs a typed reply at the balancer tier too.
+impl FrameHandler for BalCore {
+    fn handle_frame(&self, line: &str) -> (Response, bool) {
+        match decode_request(line) {
+            Ok(req) => self.handle(&req),
+            Err(e) => (
+                Response::Admission(AdmissionReply::denied(
+                    None,
+                    AdmissionError::Rejected { reason: e.msg },
+                )),
+                false,
+            ),
+        }
+    }
+}
+
 /// The balancer process: a listener for clients, the shared routing
-/// core, and the health-check cadence.
+/// core, the health-check cadence, and the connection-worker pool size.
 pub struct Balancer {
     listener: TcpListener,
     core: Arc<BalCore>,
     stop: Arc<AtomicBool>,
     health_every: Duration,
+    workers: usize,
 }
 
 impl Balancer {
     /// Bind the client-facing listener at `addr`, fronting `hosts`
-    /// (each a `hisafe serve` address). Hosts start presumed alive;
-    /// the first failed call or health ping corrects that.
+    /// (each a `hisafe serve` address), with the default worker pool.
+    /// Hosts start presumed alive; the first failed call or health ping
+    /// corrects that.
     pub fn bind(addr: &str, hosts: &[String], health_every: Duration) -> io::Result<Balancer> {
+        Self::bind_with_workers(addr, hosts, health_every, DEFAULT_WORKERS)
+    }
+
+    /// Like [`bind`](Balancer::bind) with an explicit connection-worker
+    /// count — the same knob [`super::server::ServiceServer`] exposes,
+    /// because both listeners now run the same bounded pump.
+    pub fn bind_with_workers(
+        addr: &str,
+        hosts: &[String],
+        health_every: Duration,
+        workers: usize,
+    ) -> io::Result<Balancer> {
         assert!(!hosts.is_empty(), "a balancer needs at least one backend host");
+        assert!(workers >= 1, "the balancer needs at least one connection worker");
         Ok(Balancer {
             listener: TcpListener::bind(addr)?,
             core: Arc::new(BalCore {
@@ -388,6 +432,7 @@ impl Balancer {
             }),
             stop: Arc::new(AtomicBool::new(false)),
             health_every,
+            workers,
         })
     }
 
@@ -397,10 +442,11 @@ impl Balancer {
     }
 
     /// Accept-and-route until a client sends `Shutdown` (which also
-    /// winds down every live backend). The health thread runs for the
-    /// duration and is joined before this returns.
+    /// winds down every live backend). Client connections are served by
+    /// the shared bounded connection-worker pump
+    /// ([`super::server::serve_frames`]); the health thread runs for
+    /// the duration and is joined before this returns.
     pub fn serve(self) -> io::Result<()> {
-        let addr = self.listener.local_addr()?;
         let health = {
             let core = Arc::clone(&self.core);
             let stop = Arc::clone(&self.stop);
@@ -416,73 +462,10 @@ impl Balancer {
                 }
             })
         };
-        let accept_result = loop {
-            let stream = match self.listener.accept() {
-                Ok((stream, _)) => stream,
-                Err(e)
-                    if matches!(
-                        e.kind(),
-                        io::ErrorKind::ConnectionAborted
-                            | io::ErrorKind::ConnectionReset
-                            | io::ErrorKind::Interrupted
-                    ) =>
-                {
-                    continue;
-                }
-                Err(e) => break Err(e),
-            };
-            if self.stop.load(Ordering::SeqCst) {
-                break Ok(());
-            }
-            let core = Arc::clone(&self.core);
-            let stop = Arc::clone(&self.stop);
-            std::thread::spawn(move || serve_client(stream, addr, core, stop));
-        };
+        let result = serve_frames(self.listener, self.core, Arc::clone(&self.stop), self.workers);
         self.stop.store(true, Ordering::SeqCst);
         let _ = health.join();
-        accept_result
-    }
-}
-
-/// One client connection's request loop (thread-per-client is fine at
-/// this tier — see the module docs).
-fn serve_client(stream: TcpStream, addr: SocketAddr, core: Arc<BalCore>, stop: Arc<AtomicBool>) {
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    loop {
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => return,
-            Ok(_) => {}
-            Err(_) => return,
-        }
-        if line.trim().is_empty() {
-            continue;
-        }
-        let (reply, shutdown) = match decode_request(&line) {
-            Ok(req) => core.handle(&req),
-            Err(e) => (
-                Response::Admission(AdmissionReply::denied(
-                    None,
-                    AdmissionError::Rejected { reason: e.msg },
-                )),
-                false,
-            ),
-        };
-        let mut out = reply.to_json().to_string_compact();
-        out.push('\n');
-        if writer.write_all(out.as_bytes()).is_err() || writer.flush().is_err() {
-            return;
-        }
-        if shutdown {
-            stop.store(true, Ordering::SeqCst);
-            let _ = TcpStream::connect(addr);
-            return;
-        }
+        result
     }
 }
 
@@ -491,7 +474,9 @@ mod tests {
     use super::*;
     use crate::engine::QosPolicy;
     use crate::poly::TiePolicy;
-    use crate::protocol::{plain_hierarchical_vote, HiSafeConfig};
+    use crate::protocol::{
+        plain_hierarchical_vote, plain_hierarchical_vote_present, HiSafeConfig, ParticipantSet,
+    };
     use crate::service::{AggFrontend, ServiceServer};
     use crate::util::rng::{Rng, Xoshiro256pp};
 
@@ -565,6 +550,38 @@ mod tests {
         client.shutdown().expect("cluster shutdown acked");
         bal.join().expect("balancer thread").expect("balancer clean exit");
         survivor_handle.join().expect("survivor thread").expect("survivor clean exit");
+    }
+
+    #[test]
+    fn churn_masks_forward_through_the_balancer_with_typed_aborts() {
+        let (a0, h0) = spawn_backend();
+        let (bal_addr, bal) = spawn_balancer(&[a0]);
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut client = ServiceClient::connect(&bal_addr).expect("connect");
+        let sid = client.open_session(cfg, 5, 3, QosPolicy::unlimited()).expect("admitted");
+        let signs = rand_signs(6, 5, 31);
+        // The mask forwards through the proxy tier untouched.
+        let mask = vec![false, true, true, true, true, true];
+        let vote = client.submit_round_present(sid, &signs, &mask).expect("churn admitted");
+        let set = ParticipantSet::from_mask(mask);
+        assert_eq!(vote.global_vote, plain_hierarchical_vote_present(&signs, &set, cfg));
+        assert_eq!(vote.session, sid, "replies carry the client's id");
+        // A below-threshold abort crosses both tiers typed, re-labeled
+        // with the client's session id, and does not advance the restore
+        // point (no vote was observed).
+        match client.submit_round_present(sid, &signs, &[false, false, true, true, true, true]) {
+            Err(Error::Admission(AdmissionError::ChurnBelowThreshold {
+                group: 0,
+                survivors: 1,
+                required: 2,
+            })) => {}
+            other => panic!("expected a typed churn abort, got {other:?}"),
+        }
+        let snap = client.snapshot_session(sid).expect("snapshot");
+        assert_eq!(snap.rounds, 1, "aborted churn rounds are not client-observed votes");
+        client.shutdown().expect("shutdown acked");
+        bal.join().expect("balancer thread").expect("balancer clean exit");
+        h0.join().expect("h0 thread").expect("h0 clean exit");
     }
 
     #[test]

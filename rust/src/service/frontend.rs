@@ -114,7 +114,7 @@ use crate::engine::{
     AdmissionError, AggScheduler, AggSession, Engine, QosPolicy, SessionId, SessionSnapshot,
 };
 use crate::metrics::AdmissionStats;
-use crate::protocol::HiSafeConfig;
+use crate::protocol::{HiSafeConfig, ParticipantSet};
 
 use super::error::Error;
 use super::proto::{AdmissionReply, Request, Response, SnapshotReply, StatsReply, VoteReply};
@@ -299,7 +299,7 @@ fn error_reply(session: Option<SessionId>, e: Error) -> Response {
 ///     other => panic!("unexpected reply: {other:?}"),
 /// };
 /// let signs = vec![vec![1i8, -1, 1, -1]; 6];
-/// match fe.handle(&Request::RoundSubmit { session: sid, signs }) {
+/// match fe.handle(&Request::RoundSubmit { session: sid, signs, present: None }) {
 ///     Response::Vote(v) => assert_eq!(v.global_vote, vec![1, -1, 1, -1]),
 ///     other => panic!("unexpected reply: {other:?}"),
 /// }
@@ -668,11 +668,13 @@ impl AggFrontend {
                     Err(e) => error_reply(None, e),
                 }
             }
-            Request::RoundSubmit { session, signs } => {
+            Request::RoundSubmit { session, signs, present } => {
                 // Shape-check against router metadata before the engine
                 // surface: the engine asserts (panics) on bad shapes,
                 // which is right for in-process bugs but must be a typed
-                // rejection for wire input.
+                // rejection for wire input. The sign matrix keeps its
+                // full n-row shape even under churn; the mask (when
+                // carried at all) must name every registered user.
                 let (n, d) = match self.lock_router().sessions.get(session) {
                     Some(m) => (m.cfg.n, m.d),
                     None => {
@@ -687,7 +689,27 @@ impl AggFrontend {
                         }),
                     );
                 }
-                match self.with_session(*session, |s| s.try_run_round(signs)) {
+                if let Some(mask) = present {
+                    if mask.len() != n {
+                        return error_reply(
+                            Some(*session),
+                            Error::Admission(AdmissionError::Rejected {
+                                reason: format!(
+                                    "participant mask must cover all {n} users, got {}",
+                                    mask.len()
+                                ),
+                            }),
+                        );
+                    }
+                }
+                let run = |s: &mut AggSession| match present {
+                    // Absent mask ⇒ all-present: exactly the v1 path.
+                    None => s.try_run_round(signs),
+                    Some(mask) => {
+                        s.try_run_round_present(signs, &ParticipantSet::from_mask(mask.clone()))
+                    }
+                };
+                match self.with_session(*session, run) {
                     Ok((_, Ok(out))) => {
                         // Count the consumed round in the restore
                         // metadata only once the vote exists — a round
@@ -837,7 +859,7 @@ impl AggFrontend {
 mod tests {
     use super::*;
     use crate::poly::TiePolicy;
-    use crate::protocol::plain_hierarchical_vote;
+    use crate::protocol::{plain_hierarchical_vote, plain_hierarchical_vote_present};
     use crate::util::rng::{Rng, Xoshiro256pp};
 
     fn open(fe: &AggFrontend, cfg: HiSafeConfig, d: usize, seed: u64) -> SessionId {
@@ -955,7 +977,7 @@ mod tests {
         for r in 0..2u64 {
             for (i, &sid) in sids.iter().enumerate() {
                 let signs = rand_signs(6, 5, 7 + r * 10 + i as u64);
-                match fe.handle(&Request::RoundSubmit { session: sid, signs: signs.clone() }) {
+                match fe.handle(&Request::RoundSubmit { session: sid, signs: signs.clone(), present: None }) {
                     Response::Vote(v) => {
                         assert_eq!(v.global_vote, plain_hierarchical_vote(&signs, cfg));
                         assert_eq!(v.session, sid);
@@ -1009,7 +1031,7 @@ mod tests {
         let sid = open(&fe, cfg, 5, 1);
         // Wrong user count and wrong dimension both come back typed.
         for signs in [rand_signs(5, 5, 2), rand_signs(6, 4, 3)] {
-            match fe.handle(&Request::RoundSubmit { session: sid, signs }) {
+            match fe.handle(&Request::RoundSubmit { session: sid, signs, present: None }) {
                 Response::Admission(AdmissionReply {
                     error: Some(AdmissionError::Rejected { reason }),
                     ..
@@ -1021,6 +1043,7 @@ mod tests {
         match fe.handle(&Request::RoundSubmit {
             session: SessionId::new(999),
             signs: rand_signs(6, 5, 4),
+            present: None,
         }) {
             Response::Admission(AdmissionReply {
                 error: Some(AdmissionError::Rejected { reason }),
@@ -1079,7 +1102,7 @@ mod tests {
         let on_drained: Vec<SessionId> =
             placed.iter().filter(|&&(_, s)| s == drained).map(|&(sid, _)| sid).collect();
         let signs = rand_signs(6, 5, 77);
-        match fe.handle(&Request::RoundSubmit { session: on_drained[0], signs: signs.clone() }) {
+        match fe.handle(&Request::RoundSubmit { session: on_drained[0], signs: signs.clone(), present: None }) {
             Response::Vote(v) => {
                 assert_eq!(v.global_vote, plain_hierarchical_vote(&signs, cfg))
             }
@@ -1118,7 +1141,7 @@ mod tests {
         for r in 0..3u64 {
             for &sid in [a, b].iter() {
                 let signs = rand_signs(6, 5, 50 + r);
-                match fe.handle(&Request::RoundSubmit { session: sid, signs }) {
+                match fe.handle(&Request::RoundSubmit { session: sid, signs, present: None }) {
                     Response::Vote(_) => {}
                     other => panic!("expected a vote, got {other:?}"),
                 }
@@ -1157,13 +1180,13 @@ mod tests {
                 assert!(fe.shard_is_dead(before));
             }
             let interrupted = match fe
-                .handle(&Request::RoundSubmit { session: sid, signs: signs.clone() })
+                .handle(&Request::RoundSubmit { session: sid, signs: signs.clone(), present: None })
             {
                 Response::Vote(v) => v,
                 other => panic!("round {r} after kill must still vote, got {other:?}"),
             };
             let uninterrupted = match reference
-                .handle(&Request::RoundSubmit { session: ref_sid, signs: signs.clone() })
+                .handle(&Request::RoundSubmit { session: ref_sid, signs: signs.clone(), present: None })
             {
                 Response::Vote(v) => v,
                 other => panic!("reference round {r} failed: {other:?}"),
@@ -1198,7 +1221,7 @@ mod tests {
         let fe = AggFrontend::new(2, 1);
         let sid = open(&fe, cfg, 5, 3);
         let signs = rand_signs(6, 5, 11);
-        match fe.handle(&Request::RoundSubmit { session: sid, signs: signs.clone() }) {
+        match fe.handle(&Request::RoundSubmit { session: sid, signs: signs.clone(), present: None }) {
             Response::Vote(_) => {}
             other => panic!("expected a vote, got {other:?}"),
         }
@@ -1214,7 +1237,7 @@ mod tests {
         // transparently restores the session — same votes, no panic, no
         // poisoned-mutex unwrap anywhere on the path.
         let signs2 = rand_signs(6, 5, 12);
-        match fe.handle(&Request::RoundSubmit { session: sid, signs: signs2.clone() }) {
+        match fe.handle(&Request::RoundSubmit { session: sid, signs: signs2.clone(), present: None }) {
             Response::Vote(v) => {
                 assert_eq!(v.global_vote, plain_hierarchical_vote(&signs2, cfg))
             }
@@ -1234,7 +1257,7 @@ mod tests {
         let sid = open(&fe_a, cfg, 5, 21);
         for r in 0..2u64 {
             let signs = rand_signs(6, 5, 300 + r);
-            match fe_a.handle(&Request::RoundSubmit { session: sid, signs }) {
+            match fe_a.handle(&Request::RoundSubmit { session: sid, signs, present: None }) {
                 Response::Vote(_) => {}
                 other => panic!("expected a vote, got {other:?}"),
             }
@@ -1258,13 +1281,13 @@ mod tests {
             other => panic!("expected a restore grant, got {other:?}"),
         };
         let signs = rand_signs(6, 5, 302);
-        let v_a = match fe_a.handle(&Request::RoundSubmit { session: sid, signs: signs.clone() })
+        let v_a = match fe_a.handle(&Request::RoundSubmit { session: sid, signs: signs.clone(), present: None })
         {
             Response::Vote(v) => v,
             other => panic!("expected a vote, got {other:?}"),
         };
         let v_b = match fe_b
-            .handle(&Request::RoundSubmit { session: restored, signs: signs.clone() })
+            .handle(&Request::RoundSubmit { session: restored, signs: signs.clone(), present: None })
         {
             Response::Vote(v) => v,
             other => panic!("expected a vote, got {other:?}"),
@@ -1313,6 +1336,7 @@ mod tests {
                         match fe.handle(&Request::RoundSubmit {
                             session: sid,
                             signs: signs.clone(),
+                            present: None,
                         }) {
                             Response::Vote(v) => assert_eq!(
                                 v.global_vote,
@@ -1326,6 +1350,64 @@ mod tests {
             .collect();
         for h in handles {
             h.join().expect("worker thread must not panic");
+        }
+    }
+
+    #[test]
+    fn churned_submits_vote_over_survivors_and_below_threshold_is_typed() {
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let fe = AggFrontend::new(2, 1);
+        let sid = open(&fe, cfg, 5, 13);
+        // Group 0 loses one of three members: survivors = 2 ≥ required
+        // = 2, so the round completes — voting over the survivor set.
+        let mask = vec![true, false, true, true, true, true];
+        let signs = rand_signs(6, 5, 401);
+        match fe.handle(&Request::RoundSubmit {
+            session: sid,
+            signs: signs.clone(),
+            present: Some(mask.clone()),
+        }) {
+            Response::Vote(v) => {
+                let set = ParticipantSet::from_mask(mask.clone());
+                assert_eq!(v.global_vote, plain_hierarchical_vote_present(&signs, &set, cfg));
+            }
+            other => panic!("expected a survivor-set vote, got {other:?}"),
+        }
+        // Group 0 loses two of three: survivors = 1 < required = 2 —
+        // a typed churn denial, not a panic, and the session survives.
+        let starved = vec![true, false, false, true, true, true];
+        match fe.handle(&Request::RoundSubmit {
+            session: sid,
+            signs: signs.clone(),
+            present: Some(starved),
+        }) {
+            Response::Admission(AdmissionReply {
+                error:
+                    Some(AdmissionError::ChurnBelowThreshold { group: 0, survivors: 1, required: 2 }),
+                ..
+            }) => {}
+            other => panic!("expected a churn denial, got {other:?}"),
+        }
+        // A mask that doesn't cover every registered user is a typed
+        // shape rejection before any engine surface is reached.
+        match fe.handle(&Request::RoundSubmit {
+            session: sid,
+            signs: signs.clone(),
+            present: Some(vec![true; 5]),
+        }) {
+            Response::Admission(AdmissionReply {
+                error: Some(AdmissionError::Rejected { reason }),
+                ..
+            }) => assert!(reason.contains("participant mask"), "reason: {reason}"),
+            other => panic!("expected a mask-shape rejection, got {other:?}"),
+        }
+        // And the session still runs all-present rounds afterwards.
+        match fe.handle(&Request::RoundSubmit { session: sid, signs: signs.clone(), present: None })
+        {
+            Response::Vote(v) => {
+                assert_eq!(v.global_vote, plain_hierarchical_vote(&signs, cfg))
+            }
+            other => panic!("expected a vote, got {other:?}"),
         }
     }
 }

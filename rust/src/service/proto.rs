@@ -100,8 +100,18 @@ pub enum Request {
         /// Session id granted by `SessionOpen`.
         session: SessionId,
         /// `signs[i]` is user `i`'s sign vector over `{-1, 0, +1}`,
-        /// length `d`.
+        /// length `d`. The matrix always keeps its full `n`-row shape;
+        /// rows of absent users (see `present`) are ignored.
         signs: Vec<Vec<i8>>,
+        /// Per-round participant mask, one entry per registered user
+        /// (`present[i]` ⇔ user `i` answered), riding as a compact
+        /// `'1'`/`'0'` string. **Absent ⇒ all-present** — the v1
+        /// compatibility rule: pre-churn peers never emit the key, and
+        /// their frames decode (and execute) exactly as before, so this
+        /// field is an additive schema extension, not a version bump.
+        /// The key is also omitted when the value is `None`, keeping
+        /// all-present frames byte-identical to v1.
+        present: Option<Vec<bool>>,
     },
     /// Queue `rounds` rounds of Beaver-triple dealing without blocking
     /// (the wire form of
@@ -276,6 +286,13 @@ fn signs_str(signs: &[i8]) -> Json {
     Json::Str(s)
 }
 
+/// A participant mask as one char per user: `'1'` present, `'0'` absent.
+/// Same compact-string idiom as [`signs_str`] — the mask is per-round
+/// hot-path payload, so it rides as `n` bytes, not an `n`-element array.
+fn mask_str(mask: &[bool]) -> Json {
+    Json::Str(mask.iter().map(|&p| if p { '1' } else { '0' }).collect())
+}
+
 fn qos_json(qos: &QosPolicy) -> Json {
     let opt_f64 = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
     let mut j = Json::obj();
@@ -330,6 +347,12 @@ fn admission_error_json(e: &AdmissionError) -> Json {
         AdmissionError::QueueFull { depth } => {
             j.set("kind", "queue_full").set("depth", *depth);
         }
+        AdmissionError::ChurnBelowThreshold { group, survivors, required } => {
+            j.set("kind", "churn_below_threshold")
+                .set("group", *group)
+                .set("survivors", *survivors)
+                .set("required", *required);
+        }
     }
     j
 }
@@ -348,12 +371,15 @@ impl Request {
                     .set("qos", qos_json(qos));
                 j
             }
-            Request::RoundSubmit { session, signs } => {
+            Request::RoundSubmit { session, signs, present } => {
                 let mut j = base("round_submit");
                 j.set("session", sid_json(*session)).set(
                     "signs",
                     Json::Arr(signs.iter().map(|s| signs_str(s)).collect()),
                 );
+                if let Some(mask) = present {
+                    j.set("present", mask_str(mask));
+                }
                 j
             }
             Request::Prefetch { session, rounds } => {
@@ -406,7 +432,11 @@ impl Request {
                     .iter()
                     .map(parse_signs)
                     .collect::<Result<Vec<Vec<i8>>, ProtoError>>()?;
-                Ok(Request::RoundSubmit { session: parse_sid(j, "session")?, signs })
+                let present = match j.get("present") {
+                    None => None,
+                    Some(v) => Some(parse_mask(v)?),
+                };
+                Ok(Request::RoundSubmit { session: parse_sid(j, "session")?, signs, present })
             }
             "prefetch" => Ok(Request::Prefetch {
                 session: parse_sid(j, "session")?,
@@ -624,6 +654,21 @@ fn parse_signs(v: &Json) -> Result<Vec<i8>, ProtoError> {
         .collect()
 }
 
+fn parse_mask(v: &Json) -> Result<Vec<bool>, ProtoError> {
+    let s = v
+        .as_str()
+        .ok_or_else(|| ProtoError::new("participant mask must be a string"))?;
+    s.chars()
+        .map(|c| match c {
+            '1' => Ok(true),
+            '0' => Ok(false),
+            other => Err(ProtoError::new(format!(
+                "participant masks are strings over '1', '0'; got {other:?}"
+            ))),
+        })
+        .collect()
+}
+
 fn parse_tie(j: &Json, key: &str) -> Result<TiePolicy, ProtoError> {
     field(j, key)?
         .as_str()
@@ -692,7 +737,14 @@ fn parse_admission_error(j: &Json) -> Result<AdmissionError, ProtoError> {
             })
         }
         Some("queue_full") => Ok(AdmissionError::QueueFull { depth: parse_usize(j, "depth")? }),
-        _ => Err(ProtoError::new("admission error 'kind' must be rejected|throttled|queue_full")),
+        Some("churn_below_threshold") => Ok(AdmissionError::ChurnBelowThreshold {
+            group: parse_usize(j, "group")?,
+            survivors: parse_usize(j, "survivors")?,
+            required: parse_usize(j, "required")?,
+        }),
+        _ => Err(ProtoError::new(
+            "admission error 'kind' must be rejected|throttled|queue_full|churn_below_threshold",
+        )),
     }
 }
 
@@ -783,7 +835,7 @@ mod tests {
     }
 
     fn rand_admission_error(g: &mut Gen) -> AdmissionError {
-        match g.range(0, 2) {
+        match g.range(0, 3) {
             0 => AdmissionError::Rejected {
                 reason: format!("reason \"{}\"\n\t{}", g.u64(), g.u64()),
             },
@@ -792,7 +844,12 @@ mod tests {
                 // carry even absurd durations losslessly.
                 retry_after: Duration::new(g.u64(), g.range(0, 999_999_999) as u32),
             },
-            _ => AdmissionError::QueueFull { depth: g.usize_range(1, 1 << 20) },
+            2 => AdmissionError::QueueFull { depth: g.usize_range(1, 1 << 20) },
+            _ => AdmissionError::ChurnBelowThreshold {
+                group: g.usize_range(0, 64),
+                survivors: g.usize_range(0, 8),
+                required: g.usize_range(1, 9),
+            },
         }
     }
 
@@ -812,6 +869,11 @@ mod tests {
                 1 => Request::RoundSubmit {
                     session: rand_sid(g),
                     signs: rand_sign_matrix(g, cfg.n, d),
+                    present: if g.bool() {
+                        Some((0..cfg.n).map(|_| g.bool()).collect())
+                    } else {
+                        None
+                    },
                 },
                 2 => Request::Prefetch {
                     session: rand_sid(g),
@@ -923,6 +985,22 @@ mod tests {
         )
         .unwrap();
         assert!(Request::from_json(&j).is_err());
+        // A pre-churn (v1) frame with no `present` key decodes to
+        // `present: None` — the all-present compatibility default.
+        let j = crate::util::json::parse(
+            r#"{"v":1,"type":"round_submit","session":"0","signs":["+-0"]}"#,
+        )
+        .unwrap();
+        match Request::from_json(&j).unwrap() {
+            Request::RoundSubmit { present, .. } => assert_eq!(present, None),
+            other => panic!("wrong decode: {other:?}"),
+        }
+        // Malformed mask characters are a decode error too.
+        let j = crate::util::json::parse(
+            r#"{"v":1,"type":"round_submit","session":"0","signs":["+-0"],"present":"1x1"}"#,
+        )
+        .unwrap();
+        assert!(Request::from_json(&j).is_err());
         // A weight that overflows u32 is rejected, never truncated (a
         // wrapped weight would admit under the wrong dealing share).
         let too_big = (u32::MAX as u64) + 2; // would truncate to 1
@@ -953,9 +1031,21 @@ mod tests {
         );
 
         let sid = SessionId::new(1);
+        // All-present submits omit `present` entirely — the frame stays
+        // byte-identical to the v1 schema, which is the compat rule the
+        // field's doc advertises.
         let submit =
-            Request::RoundSubmit { session: sid, signs: vec![vec![1, -1, 0]] }.to_json();
+            Request::RoundSubmit { session: sid, signs: vec![vec![1, -1, 0]], present: None }
+                .to_json();
         assert_eq!(keys(&submit), ["session", "signs", "type", "v"]);
+        let submit_churn = Request::RoundSubmit {
+            session: sid,
+            signs: vec![vec![1, -1, 0]],
+            present: Some(vec![true, false, true]),
+        }
+        .to_json();
+        assert_eq!(keys(&submit_churn), ["present", "session", "signs", "type", "v"]);
+        assert_eq!(submit_churn.get("present").unwrap().as_str().unwrap(), "101");
 
         assert_eq!(
             keys(&Request::Prefetch { session: sid, rounds: 2 }.to_json()),
@@ -1003,6 +1093,15 @@ mod tests {
             keys(denial.get("error").unwrap()),
             ["kind", "retry_after_secs", "retry_after_subsec_ns"]
         );
+        let churn_denial = Response::Admission(AdmissionReply::denied(
+            Some(sid),
+            AdmissionError::ChurnBelowThreshold { group: 1, survivors: 1, required: 2 },
+        ))
+        .to_json();
+        assert_eq!(
+            keys(churn_denial.get("error").unwrap()),
+            ["group", "kind", "required", "survivors"]
+        );
         assert_eq!(
             keys(&Response::Admission(AdmissionReply::ok(None)).to_json()),
             ["type", "v"]
@@ -1047,8 +1146,11 @@ mod tests {
     fn signs_are_compact_strings_not_number_arrays() {
         // The encoding decision the module doc advertises: one char per
         // coordinate, so model-sized rounds stay cheap to frame.
-        let req =
-            Request::RoundSubmit { session: SessionId::new(0), signs: vec![vec![1, -1, 0, 1]] };
+        let req = Request::RoundSubmit {
+            session: SessionId::new(0),
+            signs: vec![vec![1, -1, 0, 1]],
+            present: None,
+        };
         let j = req.to_json();
         let arr = j.get("signs").unwrap().as_arr().unwrap();
         assert_eq!(arr[0].as_str().unwrap(), "+-0+");

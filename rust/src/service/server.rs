@@ -61,8 +61,9 @@ use super::frontend::AggFrontend;
 use super::proto::{AdmissionReply, ProtoError, Request, Response, StatsReply, VoteReply};
 
 /// Default connection-worker pool size when the caller doesn't choose
-/// (`hisafe serve --workers N` does).
-const DEFAULT_WORKERS: usize = 4;
+/// (`hisafe serve --workers N` does). Shared with the balancer, whose
+/// client-facing listener runs the same pump.
+pub(crate) const DEFAULT_WORKERS: usize = 4;
 
 /// How long a worker sleeps after a sweep that moved no bytes. Low
 /// enough to keep per-request latency in the tens of microseconds,
@@ -85,6 +86,18 @@ struct ConnIo {
     stream: TcpStream,
     inbuf: Vec<u8>,
     outbuf: Vec<u8>,
+}
+
+/// One line-framed request surface behind the bounded connection-worker
+/// pump: [`serve_frames`] reads frames off every registered connection
+/// and answers with whatever the handler returns. Two implementors —
+/// the [`AggFrontend`] transport here and the balancer's routing core
+/// (`service::balancer`) — so the accept loop, registry, non-blocking
+/// pump, and shutdown dance exist exactly once.
+pub(crate) trait FrameHandler: Send + Sync {
+    /// Answer one complete frame line. Returns the reply plus whether
+    /// the frame asked the process to stop serving.
+    fn handle_frame(&self, line: &str) -> (Response, bool);
 }
 
 /// What one pump pass did with a connection.
@@ -144,57 +157,85 @@ impl ServiceServer {
     /// shutdown request stops both (the pool is joined before this
     /// returns, so "serve returned" means "no request is in flight").
     pub fn serve(self) -> io::Result<()> {
-        let addr = self.listener.local_addr()?;
-        let registry: Arc<Mutex<Vec<Arc<Conn>>>> = Arc::new(Mutex::new(Vec::new()));
-        let pool: Vec<_> = (0..self.workers)
-            .map(|_| {
-                let registry = Arc::clone(&registry);
-                let frontend = Arc::clone(&self.frontend);
-                let stop = Arc::clone(&self.stop);
-                std::thread::spawn(move || worker_loop(registry, frontend, stop, addr))
-            })
-            .collect();
-        let accept_result = loop {
-            let stream = match self.listener.accept() {
-                Ok((stream, _)) => stream,
-                // Transient, per-connection accept failures (peer reset
-                // before we accepted, interrupted syscall) must not
-                // bring down every live session on the other
-                // connections; only listener-fatal errors end the loop.
-                Err(e)
-                    if matches!(
-                        e.kind(),
-                        io::ErrorKind::ConnectionAborted
-                            | io::ErrorKind::ConnectionReset
-                            | io::ErrorKind::Interrupted
-                    ) =>
-                {
-                    continue;
-                }
-                Err(e) => break Err(e),
-            };
-            if self.stop.load(Ordering::SeqCst) {
-                // Woken by the shutdown self-connection (or raced by a
-                // late client): stop accepting.
-                break Ok(());
-            }
-            if stream.set_nonblocking(true).is_err() {
+        let handler = FrontendHandler { frontend: Arc::clone(&self.frontend) };
+        serve_frames(self.listener, Arc::new(handler), self.stop, self.workers)
+    }
+}
+
+/// The frontend behind the shared pump: every frame is decoded,
+/// answered under `catch_unwind`, and shutdown frames flip the serve
+/// loop's stop flag (see [`respond`]).
+struct FrontendHandler {
+    frontend: Arc<AggFrontend>,
+}
+
+impl FrameHandler for FrontendHandler {
+    fn handle_frame(&self, line: &str) -> (Response, bool) {
+        respond(line, &self.frontend)
+    }
+}
+
+/// The shared transport skeleton: accept connections into the
+/// registry, sweep them with `workers` bounded connection workers, and
+/// stop cleanly when a frame reports shutdown (the pool is joined
+/// before this returns, so "returned" means "no request in flight").
+/// [`ServiceServer::serve`] and the balancer both run exactly this.
+pub(crate) fn serve_frames<H: FrameHandler + 'static>(
+    listener: TcpListener,
+    handler: Arc<H>,
+    stop: Arc<AtomicBool>,
+    workers: usize,
+) -> io::Result<()> {
+    let addr = listener.local_addr()?;
+    let registry: Arc<Mutex<Vec<Arc<Conn>>>> = Arc::new(Mutex::new(Vec::new()));
+    let pool: Vec<_> = (0..workers)
+        .map(|_| {
+            let registry = Arc::clone(&registry);
+            let handler = Arc::clone(&handler);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || worker_loop(registry, handler, stop, addr))
+        })
+        .collect();
+    let accept_result = loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            // Transient, per-connection accept failures (peer reset
+            // before we accepted, interrupted syscall) must not
+            // bring down every live session on the other
+            // connections; only listener-fatal errors end the loop.
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::ConnectionAborted
+                        | io::ErrorKind::ConnectionReset
+                        | io::ErrorKind::Interrupted
+                ) =>
+            {
                 continue;
             }
-            let _ = stream.set_nodelay(true);
-            lock_registry(&registry).push(Arc::new(Conn {
-                io: Mutex::new(ConnIo { stream, inbuf: Vec::new(), outbuf: Vec::new() }),
-                closed: AtomicBool::new(false),
-            }));
+            Err(e) => break Err(e),
         };
-        // Whether we stopped cleanly or the listener died, the workers
-        // must not outlive the server.
-        self.stop.store(true, Ordering::SeqCst);
-        for w in pool {
-            let _ = w.join();
+        if stop.load(Ordering::SeqCst) {
+            // Woken by the shutdown self-connection (or raced by a
+            // late client): stop accepting.
+            break Ok(());
         }
-        accept_result
+        if stream.set_nonblocking(true).is_err() {
+            continue;
+        }
+        let _ = stream.set_nodelay(true);
+        lock_registry(&registry).push(Arc::new(Conn {
+            io: Mutex::new(ConnIo { stream, inbuf: Vec::new(), outbuf: Vec::new() }),
+            closed: AtomicBool::new(false),
+        }));
+    };
+    // Whether we stopped cleanly or the listener died, the workers
+    // must not outlive the server.
+    stop.store(true, Ordering::SeqCst);
+    for w in pool {
+        let _ = w.join();
     }
+    accept_result
 }
 
 /// Lock the connection registry, absorbing poison: the registry holds
@@ -207,9 +248,9 @@ fn lock_registry(registry: &Mutex<Vec<Arc<Conn>>>) -> std::sync::MutexGuard<'_, 
 /// One connection worker: sweep the registry, pump every connection
 /// whose lock is free, prune the closed, sleep briefly when a full
 /// sweep moved nothing.
-fn worker_loop(
+fn worker_loop<H: FrameHandler>(
     registry: Arc<Mutex<Vec<Arc<Conn>>>>,
-    frontend: Arc<AggFrontend>,
+    handler: Arc<H>,
     stop: Arc<AtomicBool>,
     server_addr: SocketAddr,
 ) {
@@ -227,7 +268,7 @@ fn worker_loop(
             }
             // Another worker holds this connection: skip, don't wait.
             let Ok(mut io) = conn.io.try_lock() else { continue };
-            match pump(&mut io, &frontend, &stop, server_addr) {
+            match pump(&mut io, handler.as_ref(), &stop, server_addr) {
                 Pump::Idle => {}
                 Pump::Progress => moved = true,
                 Pump::Closed => {
@@ -249,9 +290,9 @@ fn worker_loop(
 /// Pump one connection: read whatever is ready, answer every complete
 /// frame, flush whatever the socket will take. Never blocks (the
 /// stream is non-blocking; `WouldBlock` ends each half of the pass).
-fn pump(
+fn pump<H: FrameHandler + ?Sized>(
     io: &mut ConnIo,
-    frontend: &AggFrontend,
+    handler: &H,
     stop: &AtomicBool,
     server_addr: SocketAddr,
 ) -> Pump {
@@ -278,7 +319,7 @@ fn pump(
             continue;
         }
         moved = true;
-        let (reply, shutdown) = respond(&line, frontend);
+        let (reply, shutdown) = handler.handle_frame(&line);
         let mut out = reply.to_json().to_string_compact();
         out.push('\n');
         io.outbuf.extend_from_slice(out.as_bytes());
@@ -447,7 +488,27 @@ impl ServiceClient {
         session: SessionId,
         signs: &[Vec<i8>],
     ) -> Result<VoteReply, Error> {
-        let req = Request::RoundSubmit { session, signs: signs.to_vec() };
+        let req = Request::RoundSubmit { session, signs: signs.to_vec(), present: None };
+        Self::vote_reply(self.call(&req)?)
+    }
+
+    /// Submit one round over an explicit participant set: `present[i]`
+    /// says whether user `i` answered this round (the sign matrix keeps
+    /// its full `n`-row shape; absent rows are ignored server-side).
+    /// A subgroup below its reconstruction threshold comes back as
+    /// [`AdmissionError::ChurnBelowThreshold`] — a typed per-round
+    /// abort, not a session failure.
+    pub fn submit_round_present(
+        &mut self,
+        session: SessionId,
+        signs: &[Vec<i8>],
+        present: &[bool],
+    ) -> Result<VoteReply, Error> {
+        let req = Request::RoundSubmit {
+            session,
+            signs: signs.to_vec(),
+            present: Some(present.to_vec()),
+        };
         Self::vote_reply(self.call(&req)?)
     }
 
@@ -482,10 +543,28 @@ impl ServiceClient {
         session: SessionId,
         signs: &[Vec<i8>],
     ) -> Result<(VoteReply, u64, Duration), Error> {
+        self.run_round_admitted_present(session, signs, None)
+    }
+
+    /// [`run_round_admitted`](ServiceClient::run_round_admitted) over an
+    /// explicit participant set (`None` ⇒ all-present, same bytes as the
+    /// v1 frame). Only `Throttled` denials are retried: a
+    /// `ChurnBelowThreshold` abort is a property of this round's mask,
+    /// not of server load, so it surfaces immediately.
+    pub fn run_round_admitted_present(
+        &mut self,
+        session: SessionId,
+        signs: &[Vec<i8>],
+        present: Option<&[bool]>,
+    ) -> Result<(VoteReply, u64, Duration), Error> {
         // Encode once: the sign matrix dominates the frame at model
         // sizes and never changes across throttle retries, so retries
         // resend the same bytes instead of re-cloning + re-encoding.
-        let frame = encode_frame(&Request::RoundSubmit { session, signs: signs.to_vec() });
+        let frame = encode_frame(&Request::RoundSubmit {
+            session,
+            signs: signs.to_vec(),
+            present: present.map(|m| m.to_vec()),
+        });
         let mut denials = 0u64;
         let mut waited = Duration::ZERO;
         loop {
@@ -561,7 +640,9 @@ impl ServiceClient {
 mod tests {
     use super::*;
     use crate::poly::TiePolicy;
-    use crate::protocol::plain_hierarchical_vote;
+    use crate::protocol::{
+        plain_hierarchical_vote, plain_hierarchical_vote_present, ParticipantSet,
+    };
     use crate::util::rng::{Rng, Xoshiro256pp};
 
     fn rand_signs(n: usize, d: usize, seed: u64) -> Vec<Vec<i8>> {
@@ -622,6 +703,39 @@ mod tests {
         assert_eq!(fe_stats.rounds_run, 3);
         assert_eq!(fe_stats.shard_tenants, Some(vec![0, 0]));
 
+        client.shutdown().expect("shutdown acked");
+        server.join().expect("serve thread").expect("clean shutdown");
+    }
+
+    #[test]
+    fn churned_rounds_cross_the_wire_with_typed_below_threshold_aborts() {
+        let (addr, server) = spawn_server(AggFrontend::new(2, 1));
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut client = ServiceClient::connect(&addr).expect("connect");
+        let sid = client.open_session(cfg, 5, 9, QosPolicy::unlimited()).expect("admitted");
+        let signs = rand_signs(6, 5, 90);
+        // One dropout in group 1: the survivor-set vote crosses the wire.
+        let mask = vec![true, true, true, true, false, true];
+        let vote = client.submit_round_present(sid, &signs, &mask).expect("churn admitted");
+        let set = ParticipantSet::from_mask(mask);
+        assert_eq!(vote.global_vote, plain_hierarchical_vote_present(&signs, &set, cfg));
+        // Two dropouts in one 3-member group: below threshold, typed.
+        let starved = vec![true, true, true, false, false, true];
+        match client.submit_round_present(sid, &signs, &starved) {
+            Err(Error::Admission(AdmissionError::ChurnBelowThreshold {
+                group: 1,
+                survivors: 1,
+                required: 2,
+            })) => {}
+            other => panic!("expected a typed churn abort, got {other:?}"),
+        }
+        // The session is unharmed: an all-present round still works and
+        // the churn abort was not billed as an admitted round.
+        let vote = client.submit_round(sid, &signs).expect("round admitted");
+        assert_eq!(vote.global_vote, plain_hierarchical_vote(&signs, cfg));
+        let stats = client.stats(Some(sid)).expect("session stats");
+        assert_eq!(stats.admission.admitted_rounds, 2);
+        assert_eq!(stats.admission.rejected, 1, "churn aborts count as rejections");
         client.shutdown().expect("shutdown acked");
         server.join().expect("serve thread").expect("clean shutdown");
     }

@@ -1,9 +1,13 @@
 //! Micro-benchmark harness (criterion is unavailable offline).
 //!
 //! Provides warmup, adaptive iteration-count selection targeting a wall
-//! budget, and median/MAD statistics. All `rust/benches/*` binaries
-//! (declared `harness = false`) use this.
+//! budget, median/MAD statistics, and a machine-readable report: every
+//! bench binary ends with [`Bencher::write_json`], which persists its
+//! measurements as `BENCH_<name>.json` next to the working directory so
+//! CI (and humans diffing two runs) never have to scrape stdout. All
+//! `rust/benches/*` binaries (declared `harness = false`) use this.
 
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
 /// One benchmark measurement.
@@ -134,6 +138,66 @@ impl Bencher {
     pub fn results(&self) -> &[Stats] {
         &self.results
     }
+
+    /// Add a one-shot wall-clock measurement to the report. For sections
+    /// that time a scenario once with `Instant` (cold-start pools,
+    /// flood/victim races) instead of sampling via [`Bencher::bench`] —
+    /// those numbers belong in `BENCH_<name>.json` too.
+    pub fn record(&mut self, name: &str, elapsed: Duration) {
+        self.results.push(Stats {
+            name: name.to_string(),
+            median: elapsed,
+            mad: Duration::ZERO,
+            iters_per_sample: 1,
+            samples: 1,
+        });
+    }
+
+    /// The report as JSON: the harness configuration (wall budget,
+    /// samples, `HISAFE_BENCH_FAST`) plus the run mode — `"strict"` when
+    /// `HISAFE_BENCH_STRICT=1` (wall-clock assertions armed), else
+    /// `"advisory"` — and one object per measurement with nanosecond
+    /// medians, so two runs diff numerically.
+    pub fn report_json(&self, name: &str) -> Json {
+        let strict = std::env::var("HISAFE_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
+        let fast = std::env::var("HISAFE_BENCH_FAST").ok().is_some();
+        let mut j = Json::obj();
+        j.set("name", name)
+            .set("mode", if strict { "strict" } else { "advisory" })
+            .set("fast", fast)
+            .set("budget_ms", self.budget.as_millis() as u64)
+            .set("samples", self.samples as u64)
+            .set(
+                "results",
+                self.results
+                    .iter()
+                    .map(|s| {
+                        let mut r = Json::obj();
+                        r.set("name", s.name.clone())
+                            .set("median_ns", s.median.as_nanos() as u64)
+                            .set("mad_ns", s.mad.as_nanos() as u64)
+                            .set("iters_per_sample", s.iters_per_sample)
+                            .set("samples", s.samples as u64);
+                        r
+                    })
+                    .collect::<Vec<_>>(),
+            );
+        j
+    }
+
+    /// Write the report to `BENCH_<name>.json` in the current directory.
+    /// Advisory runs warn and continue if the write fails (a read-only
+    /// checkout shouldn't kill a measurement run); strict runs treat a
+    /// missing report as a failure like any other armed assertion.
+    pub fn write_json(&self, name: &str) {
+        let strict = std::env::var("HISAFE_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
+        let path = format!("BENCH_{name}.json");
+        match std::fs::write(&path, self.report_json(name).to_string_pretty()) {
+            Ok(()) => println!("\nwrote {path} ({} measurement(s))", self.results.len()),
+            Err(e) if strict => panic!("strict bench mode: failed to write {path}: {e}"),
+            Err(e) => eprintln!("warning: could not write {path}: {e} (advisory run, continuing)"),
+        }
+    }
 }
 
 /// Optimization barrier (stable-rust version of `std::hint::black_box`;
@@ -167,5 +231,47 @@ mod tests {
         });
         assert!(s.median >= Duration::from_nanos(0));
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn report_json_schema_snapshot() {
+        // Pin the exact key sets of BENCH_<name>.json (top level and
+        // per-result) so downstream diff tooling can't silently break.
+        let mut b = Bencher::new();
+        b.budget = Duration::from_millis(10);
+        b.samples = 2;
+        b.bench("measured", || 1u64 + 1);
+        b.record("one_shot", Duration::from_micros(250));
+        let j = b.report_json("unit");
+        let keys = |v: &Json| -> Vec<String> {
+            match v {
+                Json::Obj(m) => m.keys().cloned().collect(),
+                other => panic!("expected object, got {other:?}"),
+            }
+        };
+        assert_eq!(
+            keys(&j),
+            ["budget_ms", "fast", "mode", "name", "results", "samples"],
+            "bench report top-level schema drifted"
+        );
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        for r in results {
+            assert_eq!(
+                keys(r),
+                ["iters_per_sample", "mad_ns", "median_ns", "name", "samples"],
+                "bench result schema drifted"
+            );
+        }
+        // The one-shot record keeps its wall time and a unit sample count.
+        assert_eq!(results[1].get("name").unwrap().as_str().unwrap(), "one_shot");
+        assert_eq!(results[1].get("median_ns").unwrap().as_u64(), Some(250_000));
+        assert_eq!(results[1].get("samples").unwrap().as_u64(), Some(1));
+        // Mode is one of the two documented values, and roundtrips.
+        let mode = j.get("mode").unwrap().as_str().unwrap().to_string();
+        assert!(mode == "advisory" || mode == "strict");
+        let text = j.to_string_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("name").unwrap().as_str().unwrap(), "unit");
     }
 }

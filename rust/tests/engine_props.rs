@@ -13,7 +13,10 @@ use hisafe::engine::{AggScheduler, Engine, PipelinedEngine, RoundEngine};
 use hisafe::mpc::{plain_group_vote, secure_group_vote};
 use hisafe::poly::TiePolicy;
 use hisafe::prop_assert_eq;
-use hisafe::protocol::{plain_hierarchical_vote, run_sync, HiSafeConfig};
+use hisafe::protocol::{
+    check_thresholds, plain_hierarchical_vote, plain_hierarchical_vote_present, run_sync,
+    run_sync_with_dropouts, HiSafeConfig, ParticipantSet,
+};
 use hisafe::util::prop::forall;
 
 /// Build one engine implementation for a random workload — the factory
@@ -217,6 +220,128 @@ fn engine_stays_correct_across_many_rounds_one_pool() {
         prop_assert_eq!(engine.rounds_run, 8);
         Ok(())
     });
+}
+
+#[test]
+fn engine_churn_survivor_votes_equal_reference_for_random_masks() {
+    // The tentpole churn property, generic over every Engine: for random
+    // dropout patterns, a round over the survivor set is bit-identical —
+    // votes, subgroup votes, and analytic stats — to the reference
+    // `run_sync_with_dropouts` over the same set, and a below-threshold
+    // mask is the SAME typed ChurnError on both paths, never a panic.
+    // Absent users' sign rows are random garbage on purpose: the
+    // contract says absent rows are ignored, so they must not leak into
+    // any vote.
+    for (impl_name, mk) in factories() {
+        forall(&format!("{impl_name} churn ≡ run_sync_with_dropouts"), 20, |g| {
+            let ell = g.usize_range(1, 3);
+            let n1 = g.usize_range(1, 5);
+            let n = ell * n1;
+            let d = g.usize_range(1, 24);
+            let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
+            let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+            // ~3/4 of users answer; below-threshold masks arise naturally.
+            let mask: Vec<bool> = (0..n).map(|_| g.usize_range(0, 3) > 0).collect();
+            let present = ParticipantSet::from_mask(mask);
+            let seed = g.u64();
+            let got = mk(cfg, d, seed).run_round_present(&signs, &present);
+            let reference = run_sync_with_dropouts(&signs, &present, cfg, seed);
+            match (got, reference) {
+                (Ok(got), Ok(reference)) => {
+                    prop_assert_eq!(
+                        &got.global_vote,
+                        &reference.global_vote,
+                        "{impl_name} cfg={cfg:?} mask={:?}",
+                        present.mask()
+                    );
+                    prop_assert_eq!(
+                        &got.subgroup_votes,
+                        &reference.subgroup_votes,
+                        "{impl_name} cfg={cfg:?} subgroups"
+                    );
+                    prop_assert_eq!(&got.stats, &reference.stats, "{impl_name} cfg={cfg:?}");
+                    prop_assert_eq!(
+                        &got.global_vote,
+                        &plain_hierarchical_vote_present(&signs, &present, cfg),
+                        "{impl_name} cfg={cfg:?} vs survivor plaintext"
+                    );
+                }
+                (Err(e), Err(r)) => {
+                    prop_assert_eq!(e.clone(), r, "{impl_name} typed aborts must agree");
+                    prop_assert_eq!(
+                        check_thresholds(cfg, &present).expect_err("both paths aborted"),
+                        e,
+                        "{impl_name} abort must name the check_thresholds group"
+                    );
+                }
+                (got, reference) => {
+                    return Err(format!(
+                        "{impl_name} cfg={cfg:?} mask={:?}: engine and reference disagree \
+                         on abort: {got:?} vs {reference:?}",
+                        present.mask()
+                    ))
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn engine_churned_and_full_rounds_interleave_bit_identically() {
+    // One long-lived engine per implementation, alternating full-present
+    // and one-dropout rounds: churned rounds must not perturb later
+    // full-present rounds (the base triple stream advances in lockstep),
+    // and every completed round matches the reference over its own set.
+    for (impl_name, mk) in factories() {
+        forall(&format!("{impl_name} full/churned interleave"), 10, |g| {
+            let ell = g.usize_range(1, 3);
+            let n1 = g.usize_range(2, 5); // n₁ ≥ 2 ⇒ one dropout always survives
+            let n = ell * n1;
+            let d = g.usize_range(1, 24);
+            let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
+            let seed = g.u64();
+            let mut engine = mk(cfg, d, seed);
+            for round in 0..5u64 {
+                let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
+                let present = if round % 2 == 1 {
+                    let mut mask = vec![true; n];
+                    mask[g.usize_range(0, n - 1)] = false;
+                    ParticipantSet::from_mask(mask)
+                } else {
+                    ParticipantSet::all(n)
+                };
+                let got = engine
+                    .run_round_present(&signs, &present)
+                    .expect("one dropout stays above threshold for n1 >= 2");
+                let reference = run_sync_with_dropouts(&signs, &present, cfg, seed ^ round)
+                    .expect("one dropout stays above threshold");
+                prop_assert_eq!(
+                    &got.global_vote,
+                    &reference.global_vote,
+                    "{impl_name} round {round} cfg={cfg:?} mask={:?}",
+                    present.mask()
+                );
+                prop_assert_eq!(
+                    &got.subgroup_votes,
+                    &reference.subgroup_votes,
+                    "{impl_name} round {round} subgroups"
+                );
+                prop_assert_eq!(&got.stats, &reference.stats, "{impl_name} round {round}");
+                prop_assert_eq!(
+                    &got.global_vote,
+                    &plain_hierarchical_vote_present(&signs, &present, cfg),
+                    "{impl_name} round {round} vs survivor plaintext"
+                );
+            }
+            prop_assert_eq!(engine.rounds_run(), 5u64, "{impl_name} aborts never counted");
+            Ok(())
+        });
+    }
 }
 
 #[test]

@@ -165,6 +165,7 @@ fn e2e_jax_hisafe_short_training() {
         batch_size: 100,
         eval_every: 5,
         seed: 3,
+        churn: 0.0,
     };
     let agg = Aggregator::HiSafe(HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit));
     let res = train(&model, &tr, &te, &shards, agg, &cfg);

@@ -7,10 +7,13 @@
 //! many tenants are registered. Plus the lifecycle regressions: dropping
 //! one session mid-stream must neither stall nor corrupt the others.
 
-use hisafe::engine::{AggScheduler, AggSession, Engine, PipelinedEngine};
+use hisafe::engine::{AdmissionError, AggScheduler, AggSession, Engine, PipelinedEngine};
 use hisafe::poly::TiePolicy;
 use hisafe::prop_assert_eq;
-use hisafe::protocol::{plain_hierarchical_vote, run_sync, HiSafeConfig};
+use hisafe::protocol::{
+    check_thresholds, plain_hierarchical_vote, plain_hierarchical_vote_present, run_sync,
+    run_sync_with_dropouts, ChurnError, HiSafeConfig, ParticipantSet,
+};
 use hisafe::util::prop::{forall, Gen};
 use hisafe::util::rng::Rng;
 
@@ -112,6 +115,105 @@ fn interleaved_tenants_bit_identical_to_dedicated_engines_and_run_sync() {
             prop_assert_eq!(t.session.rounds_run(), 3u64, "tenant {ti}");
         }
         prop_assert_eq!(sched.worker_threads(), threads);
+        Ok(())
+    });
+}
+
+#[test]
+fn churned_scheduler_rounds_match_reference_and_aborts_are_typed() {
+    // Scheduler-layer churn property: interleaved tenants with random
+    // per-round dropout masks. Every completed round's votes must equal
+    // the reference over the same survivor set; a below-threshold mask
+    // must surface as AdmissionError::ChurnBelowThreshold naming the
+    // exact group check_thresholds names — never a panic — while the
+    // session stays healthy, bills the abort under `rejected`, and keeps
+    // serving later rounds.
+    forall("scheduler churn ≡ reference (interleaved tenants)", 8, |g| {
+        let sched = AggScheduler::with_threads(g.usize_range(1, 2));
+        struct Tenant {
+            cfg: HiSafeConfig,
+            d: usize,
+            seed: u64,
+            session: AggSession,
+            completed: u64,
+            aborted: u64,
+        }
+        let n_tenants = g.usize_range(2, 3);
+        let mut tenants: Vec<Tenant> = (0..n_tenants)
+            .map(|_| {
+                let cfg = rand_cfg(g);
+                let d = g.usize_range(1, 16);
+                let seed = g.u64();
+                Tenant {
+                    cfg,
+                    d,
+                    seed,
+                    session: sched.session(cfg, d, seed),
+                    completed: 0,
+                    aborted: 0,
+                }
+            })
+            .collect();
+
+        for round in 0..3u64 {
+            for &ti in &rand_order(g, n_tenants) {
+                let t = &mut tenants[ti];
+                let signs: Vec<Vec<i8>> = (0..t.cfg.n).map(|_| g.sign_vec(t.d)).collect();
+                let mask: Vec<bool> =
+                    (0..t.cfg.n).map(|_| g.usize_range(0, 3) > 0).collect();
+                let present = ParticipantSet::from_mask(mask);
+                let cfg = t.cfg;
+                match t.session.try_run_round_present(&signs, &present) {
+                    Ok(got) => {
+                        t.completed += 1;
+                        let reference =
+                            run_sync_with_dropouts(&signs, &present, cfg, t.seed ^ round)
+                                .expect("the session completed, so thresholds held");
+                        prop_assert_eq!(
+                            &got.global_vote,
+                            &reference.global_vote,
+                            "tenant {ti} round {round} cfg={cfg:?} mask={:?}",
+                            present.mask()
+                        );
+                        prop_assert_eq!(
+                            &got.subgroup_votes,
+                            &reference.subgroup_votes,
+                            "tenant {ti} round {round} subgroups"
+                        );
+                        prop_assert_eq!(&got.stats, &reference.stats, "tenant {ti} round {round}");
+                        prop_assert_eq!(
+                            &got.global_vote,
+                            &plain_hierarchical_vote_present(&signs, &present, cfg),
+                            "tenant {ti} round {round} vs survivor plaintext"
+                        );
+                    }
+                    Err(AdmissionError::ChurnBelowThreshold { group, survivors, required }) => {
+                        t.aborted += 1;
+                        prop_assert_eq!(
+                            ChurnError::BelowThreshold { group, survivors, required },
+                            check_thresholds(cfg, &present)
+                                .expect_err("the scheduler aborted, so the mask violates"),
+                            "tenant {ti} round {round} abort identity"
+                        );
+                    }
+                    Err(e) => {
+                        return Err(format!(
+                            "tenant {ti} round {round}: unlimited QoS must only abort on \
+                             churn, got {e:?}"
+                        ))
+                    }
+                }
+            }
+        }
+        // Aborts are billed as rejections, never as admitted rounds, and
+        // the round counter only moves on completions.
+        for (ti, t) in tenants.iter().enumerate() {
+            prop_assert_eq!(t.session.rounds_run(), t.completed, "tenant {ti} round counter");
+            let adm = t.session.admission_stats();
+            prop_assert_eq!(adm.admitted_rounds, t.completed, "tenant {ti} admitted");
+            prop_assert_eq!(adm.rejected, t.aborted, "tenant {ti} rejected");
+            prop_assert_eq!(adm.throttled, 0u64, "tenant {ti} unlimited QoS never throttles");
+        }
         Ok(())
     });
 }

@@ -11,7 +11,10 @@ use hisafe::fl::data::{partition_users, synthetic, DataKind, Partition};
 use hisafe::fl::model::LinearSoftmax;
 use hisafe::fl::trainer::{train, train_remote, Aggregator, FedSpec, TrainConfig};
 use hisafe::poly::TiePolicy;
-use hisafe::protocol::{plain_hierarchical_vote, run_sync, HiSafeConfig};
+use hisafe::protocol::{
+    check_thresholds, plain_hierarchical_vote, plain_hierarchical_vote_present, run_sync,
+    run_sync_with_dropouts, ChurnError, HiSafeConfig, ParticipantSet,
+};
 use hisafe::service::{
     AdmissionReply, AggFrontend, Error, Request, Response, ServiceClient, ServiceServer,
 };
@@ -174,6 +177,109 @@ fn throttled_wire_rounds_are_retried_and_bit_identical() {
 }
 
 #[test]
+fn churned_wire_rounds_match_reference_and_aborts_are_typed_end_to_end() {
+    // Wire-layer churn property: random tenants over real loopback TCP,
+    // each round carrying a random `present` mask. Completed rounds must
+    // be bit-identical to `run_sync_with_dropouts` over the same
+    // survivor set; a below-threshold mask must come back as
+    // `Error::Admission(ChurnBelowThreshold)` naming the exact group the
+    // in-process `check_thresholds` names — the typed abort survives
+    // JSON encode/decode and the per-shard routing path — while the
+    // session stays open, bills the abort under `rejected`, and serves
+    // the next round normally.
+    forall("wire churn ≡ reference (random tenants over TCP)", 5, |g| {
+        let (addr, server) = spawn_server(AggFrontend::new(g.usize_range(1, 3), 1));
+        let mut client = ServiceClient::connect(&addr).map_err(|e| e.to_string())?;
+
+        struct Tenant {
+            cfg: HiSafeConfig,
+            d: usize,
+            seed: u64,
+            sid: SessionId,
+            completed: u64,
+            aborted: u64,
+        }
+        let n_tenants = g.usize_range(2, 3);
+        let mut tenants: Vec<Tenant> = Vec::with_capacity(n_tenants);
+        for _ in 0..n_tenants {
+            let cfg = rand_cfg(g);
+            let d = g.usize_range(1, 16);
+            let seed = g.u64();
+            let sid = client
+                .open_session(cfg, d, seed, QosPolicy::unlimited())
+                .map_err(|e| format!("open_session: {e}"))?;
+            tenants.push(Tenant { cfg, d, seed, sid, completed: 0, aborted: 0 });
+        }
+
+        for round in 0..3u64 {
+            for &ti in &rand_order(g, n_tenants) {
+                let t = &mut tenants[ti];
+                let cfg = t.cfg;
+                let signs: Vec<Vec<i8>> = (0..cfg.n).map(|_| g.sign_vec(t.d)).collect();
+                let mask: Vec<bool> = (0..cfg.n).map(|_| g.usize_range(0, 3) > 0).collect();
+                let present = ParticipantSet::from_mask(mask.clone());
+                match client.submit_round_present(t.sid, &signs, &mask) {
+                    Ok(reply) => {
+                        t.completed += 1;
+                        let reference =
+                            run_sync_with_dropouts(&signs, &present, cfg, t.seed ^ round)
+                                .expect("the wire round completed, so thresholds held");
+                        prop_assert_eq!(
+                            &reply.global_vote,
+                            &reference.global_vote,
+                            "tenant {ti} round {round} cfg={cfg:?} mask={mask:?}"
+                        );
+                        prop_assert_eq!(
+                            &reply.subgroup_votes,
+                            &reference.subgroup_votes,
+                            "tenant {ti} round {round} subgroups"
+                        );
+                        prop_assert_eq!(&reply.stats, &reference.stats, "tenant {ti} round {round}");
+                        prop_assert_eq!(
+                            &reply.global_vote,
+                            &plain_hierarchical_vote_present(&signs, &present, cfg),
+                            "tenant {ti} round {round} vs survivor plaintext"
+                        );
+                    }
+                    Err(Error::Admission(AdmissionError::ChurnBelowThreshold {
+                        group,
+                        survivors,
+                        required,
+                    })) => {
+                        t.aborted += 1;
+                        prop_assert_eq!(
+                            ChurnError::BelowThreshold { group, survivors, required },
+                            check_thresholds(cfg, &present)
+                                .expect_err("the server aborted, so the mask violates"),
+                            "tenant {ti} round {round} wire abort identity"
+                        );
+                    }
+                    Err(e) => {
+                        return Err(format!(
+                            "tenant {ti} round {round}: unlimited QoS must only abort on \
+                             churn, got {e:?}"
+                        ))
+                    }
+                }
+            }
+        }
+        for (ti, t) in tenants.iter().enumerate() {
+            let stats = client.stats(Some(t.sid)).map_err(|e| format!("stats: {e}"))?;
+            prop_assert_eq!(stats.rounds_run, t.completed, "tenant {ti} round counter");
+            prop_assert_eq!(stats.admission.admitted_rounds, t.completed, "tenant {ti} admitted");
+            prop_assert_eq!(stats.admission.rejected, t.aborted, "tenant {ti} rejected");
+            client.close_session(t.sid).map_err(|e| format!("close: {e}"))?;
+        }
+        client.shutdown().map_err(|e| format!("shutdown: {e}"))?;
+        server
+            .join()
+            .map_err(|_| "serve thread panicked".to_string())?
+            .map_err(|e| format!("serve loop: {e}"))?;
+        Ok(())
+    });
+}
+
+#[test]
 fn train_remote_bit_identical_to_solo_train_for_random_federations() {
     // The acceptance property: 2–4 random federations driven through
     // train_remote over loopback TCP (round-robin interleaved on the
@@ -200,6 +306,7 @@ fn train_remote_bit_identical_to_solo_train_for_random_federations() {
                 batch_size: 16,
                 eval_every: 10,
                 seed: g.u64(),
+                churn: 0.0,
             };
             // Half the federations run under a tight-but-generous QoS so
             // the wire retry loop is exercised without stalling the test.
@@ -431,9 +538,11 @@ fn killing_a_shard_mid_sweep_recovers_with_bit_identical_votes() {
             for &ti in &rand_order(g, n_tenants) {
                 let t = &mut tenants[ti];
                 let signs: Vec<Vec<i8>> = (0..t.cfg.n).map(|_| g.sign_vec(t.d)).collect();
-                let reply = match fe
-                    .handle(&Request::RoundSubmit { session: t.sid, signs: signs.clone() })
-                {
+                let reply = match fe.handle(&Request::RoundSubmit {
+                    session: t.sid,
+                    signs: signs.clone(),
+                    present: None,
+                }) {
                     Response::Vote(v) => v,
                     other => {
                         return Err(format!(
