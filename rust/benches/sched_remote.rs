@@ -2,7 +2,7 @@
 //! rounds over the loopback-TCP service (JSON framing + syscalls + the
 //! per-shard routing path), at the paper's n=24/ℓ=8 operating point.
 //!
-//! Three comparisons:
+//! Four comparisons:
 //!
 //! 1. **Round latency** — mean admitted-round time, in-process session
 //!    vs `ServiceClient::submit_round` against a `ServiceServer` in the
@@ -11,7 +11,12 @@
 //! 2. **Framing overhead** — the per-round wire bytes (request +
 //!    reply), reported so the `+`/`-` sign-string encoding's ~20x win
 //!    over number arrays stays visible.
-//! 3. **Per-shard parallel wire path** — two sessions on two different
+//! 3. **Binary codec** — the same rounds at d=2048 over the negotiated
+//!    v2 binary framing vs JSON, with bytes/round for both codecs.
+//!    Strict mode pins the binary wire round into 2x of in-process —
+//!    the acceptance bar for the framing being "nearly free" at the
+//!    paper's operating point.
+//! 4. **Per-shard parallel wire path** — two sessions on two different
 //!    shards driven serially (one connection, alternating rounds) vs
 //!    concurrently (two connections, two threads). Under the old
 //!    whole-frontend mutex these were the same speed; with per-shard
@@ -25,7 +30,7 @@
 use hisafe::engine::QosPolicy;
 use hisafe::poly::TiePolicy;
 use hisafe::protocol::HiSafeConfig;
-use hisafe::service::{AggFrontend, Request, ServiceClient, ServiceServer};
+use hisafe::service::{AggFrontend, Codec, Request, ServiceClient, ServiceServer};
 use hisafe::util::bench::{black_box, section, Bencher};
 use hisafe::util::rng::{Rng, Xoshiro256pp};
 use std::time::{Duration, Instant};
@@ -62,6 +67,7 @@ fn main() {
             d,
             seed,
             qos: QosPolicy::unlimited(),
+            codec: None,
         }) {
             hisafe::service::Response::Admission(r) => r.session.expect("admitted"),
             other => panic!("unexpected reply: {other:?}"),
@@ -128,6 +134,111 @@ fn main() {
 
     client.close_session(sid).expect("close");
     client.shutdown().expect("shutdown");
+    serve.join().expect("serve thread").expect("clean shutdown");
+
+    // ---- binary codec at d=2048 -----------------------------------------
+    let d2: usize = if fast { 1024 } else { 2048 };
+    section(&format!(
+        "binary codec: {rounds} rounds at d={d2}, negotiated v2 framing vs JSON"
+    ));
+    let mut rng2 = Xoshiro256pp::seed_from_u64(13);
+    let sign_sets2: Vec<Vec<Vec<i8>>> = (0..rounds)
+        .map(|_| {
+            (0..cfg.n)
+                .map(|_| (0..d2).map(|_| rng2.gen_sign()).collect())
+                .collect()
+        })
+        .collect();
+    // Fresh in-process baseline at this dimension.
+    let mut local2_votes: Vec<Vec<i8>> = Vec::with_capacity(rounds);
+    let local2_mean = {
+        let fe = AggFrontend::new(1, 2);
+        let sid = match fe.handle(&Request::SessionOpen {
+            cfg,
+            d: d2,
+            seed,
+            qos: QosPolicy::unlimited(),
+            codec: None,
+        }) {
+            hisafe::service::Response::Admission(r) => r.session.expect("admitted"),
+            other => panic!("unexpected reply: {other:?}"),
+        };
+        fe.handle(&Request::Prefetch { session: sid, rounds: 1 });
+        let t0 = Instant::now();
+        for signs in &sign_sets2 {
+            match fe.handle(&Request::RoundSubmit {
+                session: sid,
+                signs: signs.clone(),
+                present: None,
+            }) {
+                hisafe::service::Response::Vote(v) => {
+                    black_box(v.global_vote[0]);
+                    local2_votes.push(v.global_vote);
+                }
+                other => panic!("unexpected reply: {other:?}"),
+            }
+        }
+        t0.elapsed().as_secs_f64() / rounds as f64
+    };
+    println!("  in-process mean round: {:.3} ms", local2_mean * 1e3);
+    let server =
+        ServiceServer::bind("127.0.0.1:0", AggFrontend::new(1, 2)).expect("bind loopback");
+    let addr = server.local_addr().expect("bound addr").to_string();
+    let serve = std::thread::spawn(move || server.serve());
+    // Binary-negotiated client. Sessions opened with the same (cfg, d,
+    // seed) regenerate the same triple streams, so every client below
+    // must reproduce the in-process votes bit-for-bit.
+    let mut bclient = ServiceClient::connect_with_codec(&addr, Codec::Binary).expect("connect");
+    let bsid = bclient.open_session(cfg, d2, seed, QosPolicy::unlimited()).expect("admitted");
+    assert_eq!(bclient.codec(), Codec::Binary, "server must ack the binary ask");
+    bclient.prefetch(bsid, 1).expect("warm-up prefetch");
+    let bin_bytes0 = bclient.bytes_sent() + bclient.bytes_received();
+    let binary_mean = {
+        let t0 = Instant::now();
+        for (r, signs) in sign_sets2.iter().enumerate() {
+            let reply = bclient.submit_round(bsid, signs).expect("round admitted");
+            black_box(reply.global_vote[0]);
+            assert_eq!(
+                reply.global_vote, local2_votes[r],
+                "binary-codec round {r} diverged from in-process"
+            );
+        }
+        t0.elapsed().as_secs_f64() / rounds as f64
+    };
+    let bin_bytes_round =
+        (bclient.bytes_sent() + bclient.bytes_received() - bin_bytes0) / rounds as u64;
+    // The same rounds over a plain JSON connection, for the bandwidth
+    // comparison (and to keep the compatibility codec measured).
+    let mut jclient = ServiceClient::connect(&addr).expect("connect json");
+    let jsid = jclient.open_session(cfg, d2, seed, QosPolicy::unlimited()).expect("admitted");
+    jclient.prefetch(jsid, 1).expect("warm-up prefetch");
+    let json_bytes0 = jclient.bytes_sent() + jclient.bytes_received();
+    let json2_mean = {
+        let t0 = Instant::now();
+        for (r, signs) in sign_sets2.iter().enumerate() {
+            let reply = jclient.submit_round(jsid, signs).expect("round admitted");
+            black_box(reply.global_vote[0]);
+            assert_eq!(
+                reply.global_vote, local2_votes[r],
+                "json-codec round {r} diverged from in-process"
+            );
+        }
+        t0.elapsed().as_secs_f64() / rounds as f64
+    };
+    let json_bytes_round =
+        (jclient.bytes_sent() + jclient.bytes_received() - json_bytes0) / rounds as u64;
+    println!(
+        "  binary: {:.3} ms/round, {} bytes/round  |  json: {:.3} ms/round, {} bytes/round \
+         ({:.1}x smaller frames)",
+        binary_mean * 1e3,
+        bin_bytes_round,
+        json2_mean * 1e3,
+        json_bytes_round,
+        json_bytes_round as f64 / bin_bytes_round as f64
+    );
+    bclient.close_session(bsid).expect("close");
+    jclient.close_session(jsid).expect("close");
+    jclient.shutdown().expect("shutdown");
     serve.join().expect("serve thread").expect("clean shutdown");
 
     // ---- per-shard parallel wire path -----------------------------------
@@ -221,6 +332,16 @@ fn main() {
     let mut b = Bencher::new();
     b.record("in-process mean round", Duration::from_secs_f64(local_mean));
     b.record("loopback-TCP mean round", Duration::from_secs_f64(remote_mean));
+    b.record(
+        "binary-codec loopback mean round",
+        Duration::from_secs_f64(binary_mean),
+    );
+    b.annotate_throughput(bin_bytes_round as f64, "bytes/round");
+    b.record(
+        "json-codec loopback mean round",
+        Duration::from_secs_f64(json2_mean),
+    );
+    b.annotate_throughput(json_bytes_round as f64, "bytes/round");
     b.record("2-shard serialized sweep", Duration::from_secs_f64(serial_total));
     b.record(
         "2-shard concurrent sweep",
@@ -246,6 +367,22 @@ fn main() {
             req_bytes < cfg.n * d * 2 + 4096,
             "request framing blew up: {req_bytes} bytes for n={} d={d}",
             cfg.n
+        );
+        // The v2 binary codec's acceptance bar: at d=2048 a negotiated
+        // wire round stays within 2x of the in-process round — the
+        // framing is nearly free next to the MPC work (small additive
+        // epsilon so sub-millisecond jitter can't flake the ratio).
+        assert!(
+            binary_mean < local2_mean * 2.0 + 0.005,
+            "binary wire rounds exceeded 2x in-process at d={d2}: \
+             remote {binary_mean:.6}s vs local {local2_mean:.6}s"
+        );
+        // And binary frames are materially smaller than JSON: 2 bits
+        // per sign coordinate vs one char, ≥3x end to end per round.
+        assert!(
+            bin_bytes_round * 3 <= json_bytes_round,
+            "binary framing lost its size win: {bin_bytes_round} vs \
+             {json_bytes_round} bytes/round"
         );
     }
 }

@@ -38,25 +38,39 @@ pub struct Dealer {
     rng: ChaCha20Rng,
     /// Number of vector triples generated (for the Table-V accounting).
     pub generated: usize,
+    /// Reused secret-vector scratch (`a`, `b`, `c = a·b`). The secrets
+    /// never leave the dealer — only their *shares* are returned, which
+    /// must be owned per party anyway — so the triple loop allocates
+    /// nothing but the shares it hands out. Scratch reuse is invisible to
+    /// the ChaCha20 stream: `fill_field` consumes exactly the same draws
+    /// whether the buffer is fresh or recycled.
+    scratch: [Vec<u64>; 3],
 }
 
 impl Dealer {
     pub fn new(fp: Fp, seed: u64) -> Dealer {
-        Dealer { fp, rng: ChaCha20Rng::seed_from_u64(seed), generated: 0 }
+        Dealer {
+            fp,
+            rng: ChaCha20Rng::seed_from_u64(seed),
+            generated: 0,
+            scratch: [Vec::new(), Vec::new(), Vec::new()],
+        }
     }
 
     /// Generate one vector triple of dimension `d`, shared among
     /// `n_parties`. Returns one [`TripleShare`] per party.
     pub fn gen_triple(&mut self, d: usize, n_parties: usize) -> Vec<TripleShare> {
         let p = self.fp.modulus();
-        let mut a = vec![0u64; d];
-        let mut b = vec![0u64; d];
-        self.rng.fill_field(p, &mut a);
-        self.rng.fill_field(p, &mut b);
-        let c = self.fp.vec_mul(&a, &b);
-        let sa = share_vec(self.fp, &a, n_parties, &mut self.rng);
-        let sb = share_vec(self.fp, &b, n_parties, &mut self.rng);
-        let sc = share_vec(self.fp, &c, n_parties, &mut self.rng);
+        let [a, b, c] = &mut self.scratch;
+        a.resize(d, 0);
+        b.resize(d, 0);
+        c.resize(d, 0);
+        self.rng.fill_field(p, a);
+        self.rng.fill_field(p, b);
+        self.fp.vec_mul_into(c, a, b);
+        let sa = share_vec(self.fp, a, n_parties, &mut self.rng);
+        let sb = share_vec(self.fp, b, n_parties, &mut self.rng);
+        let sc = share_vec(self.fp, c, n_parties, &mut self.rng);
         self.generated += 1;
         sa.into_iter()
             .zip(sb)

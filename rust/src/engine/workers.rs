@@ -24,12 +24,18 @@
 //! lock only to *pick up* a job (the guard drops before evaluation), so
 //! pickup is serialized but evaluation is fully parallel.
 //!
+//! Evaluation working memory lives in a per-thread [`SpanScratch`]
+//! (power-share matrix + δ/ε/final lane buffers), grown to the high-water
+//! workload and recycled: a warm persistent worker allocates only the
+//! per-round vote vector it sends back, nothing per span kernel.
+//!
 //! Every job also carries its session's **in-flight gauge** (an
 //! `Arc<AtomicUsize>` incremented at submission, decremented by the
 //! worker just before the result send) — the per-session accounting the
 //! scheduler's admission layer and the `hisafe sweep` report read via
 //! [`AggSession::inflight_jobs`](crate::engine::AggSession::inflight_jobs).
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -245,9 +251,69 @@ pub(crate) fn eval_group(
     votes
 }
 
+/// Reusable per-thread working buffers for [`eval_span`]: the power-share
+/// matrix plus the δ/ε/final/output lane buffers. Every buffer is fully
+/// overwritten before it is read within a chunk (`pow[1]` by the sign
+/// encode, higher powers by their producing step — schedule targets are
+/// ≥ 2 and operands ≥ 1, so `pow[0]` is never touched; δ/ε/fin/out are
+/// `fill`-initialized per chunk), so recycling a previous round's scratch
+/// is observationally invisible. Held in a thread-local: the persistent
+/// [`WorkerPool`] threads therefore allocate NOTHING per round once warm
+/// — `ensure` only ever grows, and the high-water footprint is bounded by
+/// `(max_pow + 1) · n₁ · chunk` lanes (a few hundred KiB at the defaults).
+struct SpanScratch {
+    /// `pow[k][party]` — one lane chunk of the share of `x^k`.
+    pow: Vec<Vec<Vec<u64>>>,
+    delta: Vec<u64>,
+    eps: Vec<u64>,
+    fin: Vec<u64>,
+    out: Vec<u64>,
+}
+
+impl SpanScratch {
+    const fn new() -> SpanScratch {
+        SpanScratch {
+            pow: Vec::new(),
+            delta: Vec::new(),
+            eps: Vec::new(),
+            fin: Vec::new(),
+            out: Vec::new(),
+        }
+    }
+
+    /// Grow (never shrink) to cover a `(max_pow, n1, chunk)` workload;
+    /// a worker multiplexed across sessions keeps one high-water set.
+    fn ensure(&mut self, max_pow: usize, n1: usize, chunk: usize) {
+        if self.pow.len() < max_pow + 1 {
+            self.pow.resize_with(max_pow + 1, Vec::new);
+        }
+        for row in &mut self.pow {
+            if row.len() < n1 {
+                row.resize_with(n1, Vec::new);
+            }
+            for lanes in row.iter_mut() {
+                if lanes.len() < chunk {
+                    lanes.resize(chunk, 0);
+                }
+            }
+        }
+        if self.delta.len() < chunk {
+            self.delta.resize(chunk, 0);
+            self.eps.resize(chunk, 0);
+            self.fin.resize(chunk, 0);
+            self.out.resize(chunk, 0);
+        }
+    }
+}
+
+thread_local! {
+    static SPAN_SCRATCH: RefCell<SpanScratch> = const { RefCell::new(SpanScratch::new()) };
+}
+
 /// Evaluate the majority-vote polynomial over the coordinate span
 /// `[base, base + votes.len())` in SoA lane chunks. Pure function of its
 /// inputs — spans never overlap, so span workers are deterministic.
+/// Working buffers come from the calling thread's [`SpanScratch`].
 pub(crate) fn eval_span(
     fp: Fp,
     plan: &EvalPlan,
@@ -257,6 +323,24 @@ pub(crate) fn eval_span(
     base: usize,
     chunk: usize,
 ) {
+    SPAN_SCRATCH.with(|s| {
+        // eval_span never re-enters itself, so the borrow cannot collide.
+        let mut scratch = s.borrow_mut();
+        eval_span_scratch(fp, plan, group_signs, triples, votes, base, chunk, &mut scratch);
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn eval_span_scratch(
+    fp: Fp,
+    plan: &EvalPlan,
+    group_signs: &[&[i8]],
+    triples: &[&[TripleShare]],
+    votes: &mut [i8],
+    base: usize,
+    chunk: usize,
+    scratch: &mut SpanScratch,
+) {
     let n1 = group_signs.len();
     let steps = &plan.schedule.steps;
     let coeffs = &plan.coeffs;
@@ -264,12 +348,8 @@ pub(crate) fn eval_span(
     // §Perf: same raw-accumulation headroom rule as Party::final_share.
     let fused_final = fp.fused_headroom(coeffs.len() as u64 + 1);
 
-    // pow[k][party] — this span's share of x^k, one lane chunk at a time.
-    let mut pow: Vec<Vec<Vec<u64>>> = vec![vec![vec![0u64; chunk]; n1]; max_pow + 1];
-    let mut delta = vec![0u64; chunk];
-    let mut eps = vec![0u64; chunk];
-    let mut fin = vec![0u64; chunk];
-    let mut out = vec![0u64; chunk];
+    scratch.ensure(max_pow, n1, chunk);
+    let SpanScratch { pow, delta, eps, fin, out } = scratch;
 
     let span = votes.len();
     let mut j0 = 0usize;

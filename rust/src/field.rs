@@ -13,6 +13,13 @@
 
 use std::fmt;
 
+/// Lane-block width (in `u64` lanes) of the chunked `vec_*` kernels. Eight
+/// lanes fill one AVX-512 register (or two AVX2 / four NEON registers); the
+/// kernels run `chunks_exact(VEC_LANES)` blocks with a branch-free body and
+/// handle the `len % VEC_LANES` tail element-wise with the same arithmetic,
+/// so block width is observationally invisible.
+pub const VEC_LANES: usize = 8;
+
 /// A prime-field context: the modulus plus precomputed reduction constants.
 ///
 /// `Fp` is cheap to copy (16 bytes) and is passed by value everywhere.
@@ -20,7 +27,9 @@ use std::fmt;
 pub struct Fp {
     /// The prime modulus.
     p: u64,
-    /// Barrett constant: `floor(2^64 / p)` (for p > 1).
+    /// Barrett constant: `floor((2^64 - 1) / p)` (for p > 1). Equal to
+    /// `floor(2^64 / p)` for every odd prime; one less at `p = 2`, which
+    /// [`Fp::reduce`]'s error analysis covers.
     barrett: u64,
 }
 
@@ -55,17 +64,36 @@ impl Fp {
 
     /// Reduce an arbitrary `u64` into `[0, p)`.
     ///
-    /// Barrett-style: one multiply-high + one multiply + at most one
-    /// correction subtraction. Exact for all inputs because
-    /// `q = floor(x * floor(2^64/p) / 2^64) ∈ {floor(x/p) - 1, floor(x/p)}`.
+    /// Barrett-style: one multiply-high + one multiply + exactly one
+    /// masked correction subtraction, with no data-dependent branch.
+    /// Exact for all inputs because
+    /// `q = floor(x * floor((2^64-1)/p) / 2^64) ∈ {floor(x/p) - 1, floor(x/p)}`
+    /// (the error term is `x·(t+1)/(p·2^64) ≤ x/2^64 < 1` where
+    /// `t = (2^64-1) mod p`), so the remainder estimate lands in
+    /// `[0, 2p)` and [`Self::csub`] canonicalizes it.
     #[inline(always)]
     pub fn reduce(self, x: u64) -> u64 {
         let q = ((x as u128 * self.barrett as u128) >> 64) as u64;
-        let mut r = x.wrapping_sub(q.wrapping_mul(self.p));
-        while r >= self.p {
-            r -= self.p;
-        }
-        r
+        let r = x.wrapping_sub(q.wrapping_mul(self.p));
+        self.csub(r)
+    }
+
+    /// Canonicalize a value known to lie in `[0, 2p)`: subtract `p` iff
+    /// `x ≥ p`, as a mask-select instead of a branch. This is the lane
+    /// body every chunked kernel compiles down to a compare + masked
+    /// subtract, which autovectorizes cleanly.
+    #[inline(always)]
+    fn csub(self, x: u64) -> u64 {
+        debug_assert!(x < 2 * self.p);
+        x - (self.p & ((x >= self.p) as u64).wrapping_neg())
+    }
+
+    /// Branch-free canonical subtraction: `a - b mod p` for canonical
+    /// inputs, adding `p` back iff the raw subtraction borrowed.
+    #[inline(always)]
+    fn bsub(self, a: u64, b: u64) -> u64 {
+        let (d, borrow) = a.overflowing_sub(b);
+        d.wrapping_add(self.p & (borrow as u64).wrapping_neg())
     }
 
     /// Map a signed integer into the canonical representative in `[0, p)`.
@@ -163,59 +191,138 @@ impl Fp {
     }
 
     // ---- vector (model-dimension) operations: the L3 hot path ----
+    //
+    // Kernel layout (§Perf). Every `vec_*` kernel below follows one
+    // SIMD-shaped discipline so the autovectorizer can lower it to lane
+    // ops: (1) slice lengths are asserted once up front, (2) the body
+    // iterates `chunks_exact(VEC_LANES)` blocks whose fixed width lets
+    // the compiler elide every bounds check, (3) the lane body is
+    // branch-free — canonicalization is a masked conditional add/sub
+    // ([`Self::csub`]/[`Self::bsub`]), never an `if` per element — and
+    // (4) each lane pays at most ONE Barrett reduction per kernel:
+    // products accumulate raw against the `p < 2^32` headroom
+    // (`canonical + (p-1)² < 2^64`) and reduce once, instead of reducing
+    // after every term. The `len % VEC_LANES` tail reuses the identical
+    // arithmetic element-wise, so block width never changes results.
+    // The scalar `add`/`sub`/`mul` ops above stay the readable
+    // reference; unit tests pin every kernel to them lane-for-lane.
 
     /// `dst[i] = (dst[i] + src[i]) mod p` — share aggregation.
     #[inline]
     pub fn vec_add_assign(self, dst: &mut [u64], src: &[u64]) {
-        debug_assert_eq!(dst.len(), src.len());
-        for (d, s) in dst.iter_mut().zip(src) {
-            *d = self.add(*d, *s);
+        assert_eq!(dst.len(), src.len(), "vec_add_assign: length mismatch");
+        let mut d = dst.chunks_exact_mut(VEC_LANES);
+        let mut s = src.chunks_exact(VEC_LANES);
+        for (dc, sc) in d.by_ref().zip(s.by_ref()) {
+            for i in 0..VEC_LANES {
+                dc[i] = self.csub(dc[i] + sc[i]);
+            }
+        }
+        for (d, &s) in d.into_remainder().iter_mut().zip(s.remainder()) {
+            *d = self.csub(*d + s);
         }
     }
 
     /// `dst[i] = (dst[i] - src[i]) mod p`.
     #[inline]
     pub fn vec_sub_assign(self, dst: &mut [u64], src: &[u64]) {
-        debug_assert_eq!(dst.len(), src.len());
-        for (d, s) in dst.iter_mut().zip(src) {
-            *d = self.sub(*d, *s);
+        assert_eq!(dst.len(), src.len(), "vec_sub_assign: length mismatch");
+        let mut d = dst.chunks_exact_mut(VEC_LANES);
+        let mut s = src.chunks_exact(VEC_LANES);
+        for (dc, sc) in d.by_ref().zip(s.by_ref()) {
+            for i in 0..VEC_LANES {
+                dc[i] = self.bsub(dc[i], sc[i]);
+            }
+        }
+        for (d, &s) in d.into_remainder().iter_mut().zip(s.remainder()) {
+            *d = self.bsub(*d, s);
         }
     }
 
     /// Element-wise `dst[i] += a[i]*b[i] mod p` — the Beaver recombination
-    /// kernel (`δ·[b] + ε·[a]` terms).
+    /// kernel (`δ·[b] + ε·[a]` terms). One reduction per lane: the raw
+    /// sum `dst + a·b < p + (p-1)² < 2^64` for every `p < 2^32`, so the
+    /// product accumulates unreduced and Barrett-reduces once.
     #[inline]
     pub fn vec_mul_add_assign(self, dst: &mut [u64], a: &[u64], b: &[u64]) {
-        debug_assert_eq!(dst.len(), a.len());
-        debug_assert_eq!(dst.len(), b.len());
-        for i in 0..dst.len() {
-            dst[i] = self.add(dst[i], self.reduce(a[i] * b[i]));
+        assert_eq!(dst.len(), a.len(), "vec_mul_add_assign: a length mismatch");
+        assert_eq!(dst.len(), b.len(), "vec_mul_add_assign: b length mismatch");
+        let mut d = dst.chunks_exact_mut(VEC_LANES);
+        let mut ac = a.chunks_exact(VEC_LANES);
+        let mut bc = b.chunks_exact(VEC_LANES);
+        for ((dc, av), bv) in d.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
+            for i in 0..VEC_LANES {
+                dc[i] = self.reduce(dc[i] + av[i] * bv[i]);
+            }
+        }
+        for ((d, &x), &y) in
+            d.into_remainder().iter_mut().zip(ac.remainder()).zip(bc.remainder())
+        {
+            *d = self.reduce(*d + x * y);
         }
     }
 
-    /// Element-wise product `out[i] = a[i]*b[i] mod p`.
+    /// Element-wise product `out[i] = a[i]*b[i] mod p` into a
+    /// caller-owned buffer — the allocation-free kernel the dealer's
+    /// triple loop runs on its reused scratch ([`crate::beaver::Dealer`]).
     #[inline]
-    pub fn vec_mul(self, a: &[u64], b: &[u64]) -> Vec<u64> {
-        debug_assert_eq!(a.len(), b.len());
-        a.iter().zip(b).map(|(&x, &y)| self.reduce(x * y)).collect()
+    pub fn vec_mul_into(self, out: &mut [u64], a: &[u64], b: &[u64]) {
+        assert_eq!(out.len(), a.len(), "vec_mul_into: a length mismatch");
+        assert_eq!(out.len(), b.len(), "vec_mul_into: b length mismatch");
+        let mut o = out.chunks_exact_mut(VEC_LANES);
+        let mut ac = a.chunks_exact(VEC_LANES);
+        let mut bc = b.chunks_exact(VEC_LANES);
+        for ((oc, av), bv) in o.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
+            for i in 0..VEC_LANES {
+                oc[i] = self.reduce(av[i] * bv[i]);
+            }
+        }
+        for ((o, &x), &y) in
+            o.into_remainder().iter_mut().zip(ac.remainder()).zip(bc.remainder())
+        {
+            *o = self.reduce(x * y);
+        }
     }
 
-    /// Scalar-vector `dst[i] += k*src[i] mod p`.
+    /// Element-wise product `out[i] = a[i]*b[i] mod p` (allocating
+    /// convenience wrapper over [`Self::vec_mul_into`]).
+    #[inline]
+    pub fn vec_mul(self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        let mut out = vec![0u64; a.len()];
+        self.vec_mul_into(&mut out, a, b);
+        out
+    }
+
+    /// Scalar-vector `dst[i] += k*src[i] mod p`. One reduction per lane
+    /// (`dst + k·src < p + (p-1)² < 2^64` for canonical `k`, `src`).
     #[inline]
     pub fn vec_scale_add_assign(self, dst: &mut [u64], k: u64, src: &[u64]) {
-        debug_assert_eq!(dst.len(), src.len());
+        assert_eq!(dst.len(), src.len(), "vec_scale_add_assign: length mismatch");
         if k == 0 {
             return;
         }
-        for (d, s) in dst.iter_mut().zip(src) {
-            *d = self.add(*d, self.reduce(k * *s));
+        let mut d = dst.chunks_exact_mut(VEC_LANES);
+        let mut s = src.chunks_exact(VEC_LANES);
+        for (dc, sc) in d.by_ref().zip(s.by_ref()) {
+            for i in 0..VEC_LANES {
+                dc[i] = self.reduce(dc[i] + k * sc[i]);
+            }
+        }
+        for (d, &s) in d.into_remainder().iter_mut().zip(s.remainder()) {
+            *d = self.reduce(*d + k * s);
         }
     }
 
     /// Reduce every lane of a raw vector into canonical form.
     #[inline]
     pub fn vec_reduce_in_place(self, v: &mut [u64]) {
-        for x in v.iter_mut() {
+        let mut c = v.chunks_exact_mut(VEC_LANES);
+        for vc in c.by_ref() {
+            for i in 0..VEC_LANES {
+                vc[i] = self.reduce(vc[i]);
+            }
+        }
+        for x in c.into_remainder().iter_mut() {
             *x = self.reduce(*x);
         }
     }
@@ -234,11 +341,18 @@ impl Fp {
     /// via [`Self::fused_headroom`] and reduces once at the end).
     #[inline]
     pub fn vec_scale_add_raw(self, acc: &mut [u64], k: u64, src: &[u64]) {
-        debug_assert_eq!(acc.len(), src.len());
+        assert_eq!(acc.len(), src.len(), "vec_scale_add_raw: length mismatch");
         if k == 0 {
             return;
         }
-        for (a, &s) in acc.iter_mut().zip(src) {
+        let mut a = acc.chunks_exact_mut(VEC_LANES);
+        let mut s = src.chunks_exact(VEC_LANES);
+        for (ac, sc) in a.by_ref().zip(s.by_ref()) {
+            for i in 0..VEC_LANES {
+                ac[i] += k * sc[i];
+            }
+        }
+        for (a, &s) in a.into_remainder().iter_mut().zip(s.remainder()) {
             *a += k * s;
         }
     }
@@ -246,8 +360,15 @@ impl Fp {
     /// `acc[i] += src[i]` without reduction (raw accumulation).
     #[inline]
     pub fn vec_add_raw(self, acc: &mut [u64], src: &[u64]) {
-        debug_assert_eq!(acc.len(), src.len());
-        for (a, &s) in acc.iter_mut().zip(src) {
+        assert_eq!(acc.len(), src.len(), "vec_add_raw: length mismatch");
+        let mut a = acc.chunks_exact_mut(VEC_LANES);
+        let mut s = src.chunks_exact(VEC_LANES);
+        for (ac, sc) in a.by_ref().zip(s.by_ref()) {
+            for i in 0..VEC_LANES {
+                ac[i] += sc[i];
+            }
+        }
+        for (a, &s) in a.into_remainder().iter_mut().zip(s.remainder()) {
             *a += s;
         }
     }
@@ -257,14 +378,25 @@ impl Fp {
     /// kernel for forming `δ = Σᵢ (⟦x⟧ᵢ − ⟦a⟧ᵢ)` in one pass instead of
     /// materializing every party's masked-difference vector: the summand is
     /// `< p`, so `n` accumulations stay far below `u64::MAX` for every
-    /// Hi-SAFE field; the caller reduces once per lane at the end.
+    /// Hi-SAFE field; the caller reduces once per lane at the end. The
+    /// canonical difference is the branch-free [`Self::bsub`], so the
+    /// per-party accumulation pass has no data-dependent branches at all.
     #[inline]
     pub fn vec_sub_add_raw(self, acc: &mut [u64], x: &[u64], a: &[u64]) {
-        debug_assert_eq!(acc.len(), x.len());
-        debug_assert_eq!(acc.len(), a.len());
-        for ((acc, &x), &a) in acc.iter_mut().zip(x).zip(a) {
-            debug_assert!(x < self.p && a < self.p);
-            *acc += if x >= a { x - a } else { x + self.p - a };
+        assert_eq!(acc.len(), x.len(), "vec_sub_add_raw: x length mismatch");
+        assert_eq!(acc.len(), a.len(), "vec_sub_add_raw: a length mismatch");
+        let mut av = acc.chunks_exact_mut(VEC_LANES);
+        let mut xv = x.chunks_exact(VEC_LANES);
+        let mut sv = a.chunks_exact(VEC_LANES);
+        for ((ac, xc), sc) in av.by_ref().zip(xv.by_ref()).zip(sv.by_ref()) {
+            for i in 0..VEC_LANES {
+                ac[i] += self.bsub(xc[i], sc[i]);
+            }
+        }
+        for ((acc, &x), &a) in
+            av.into_remainder().iter_mut().zip(xv.remainder()).zip(sv.remainder())
+        {
+            *acc += self.bsub(x, a);
         }
     }
 
@@ -290,22 +422,18 @@ impl Fp {
         add_open_product: bool,
     ) {
         let d = out.len();
-        debug_assert_eq!(c.len(), d);
-        debug_assert_eq!(a.len(), d);
-        debug_assert_eq!(b.len(), d);
-        debug_assert_eq!(delta.len(), d);
-        debug_assert_eq!(eps.len(), d);
+        assert_eq!(c.len(), d, "beaver_combine_into: c length mismatch");
+        assert_eq!(a.len(), d, "beaver_combine_into: a length mismatch");
+        assert_eq!(b.len(), d, "beaver_combine_into: b length mismatch");
+        assert_eq!(delta.len(), d, "beaver_combine_into: delta length mismatch");
+        assert_eq!(eps.len(), d, "beaver_combine_into: eps length mismatch");
         if self.fused_headroom(4) {
+            // The δ·ε opening term is a per-CALL choice (party 0 only),
+            // monomorphized out of the lane loop — never a per-lane branch.
             if add_open_product {
-                for j in 0..d {
-                    let raw = c[j] + delta[j] * b[j] + eps[j] * a[j] + delta[j] * eps[j];
-                    out[j] = self.reduce(raw);
-                }
+                self.beaver_fused::<true>(out, c, a, b, delta, eps);
             } else {
-                for j in 0..d {
-                    let raw = c[j] + delta[j] * b[j] + eps[j] * a[j];
-                    out[j] = self.reduce(raw);
-                }
+                self.beaver_fused::<false>(out, c, a, b, delta, eps);
             }
         } else {
             for j in 0..d {
@@ -317,6 +445,48 @@ impl Fp {
                 }
                 out[j] = v;
             }
+        }
+    }
+
+    /// The fused Beaver lane loop: `VEC_LANES`-wide blocks, raw 3/4-term
+    /// accumulation, one Barrett reduction per lane. Callers checked
+    /// `fused_headroom(4)` and equal slice lengths.
+    #[inline(always)]
+    fn beaver_fused<const OPEN: bool>(
+        self,
+        out: &mut [u64],
+        c: &[u64],
+        a: &[u64],
+        b: &[u64],
+        delta: &[u64],
+        eps: &[u64],
+    ) {
+        let d = out.len();
+        let blocks = d - d % VEC_LANES;
+        let mut j = 0;
+        while j < blocks {
+            let o = &mut out[j..j + VEC_LANES];
+            let cv = &c[j..j + VEC_LANES];
+            let av = &a[j..j + VEC_LANES];
+            let bv = &b[j..j + VEC_LANES];
+            let dv = &delta[j..j + VEC_LANES];
+            let ev = &eps[j..j + VEC_LANES];
+            for i in 0..VEC_LANES {
+                let mut raw = cv[i] + dv[i] * bv[i] + ev[i] * av[i];
+                if OPEN {
+                    raw += dv[i] * ev[i];
+                }
+                o[i] = self.reduce(raw);
+            }
+            j += VEC_LANES;
+        }
+        while j < d {
+            let mut raw = c[j] + delta[j] * b[j] + eps[j] * a[j];
+            if OPEN {
+                raw += delta[j] * eps[j];
+            }
+            out[j] = self.reduce(raw);
+            j += 1;
         }
     }
 
@@ -511,7 +681,7 @@ mod tests {
 
     #[test]
     fn reduce_is_exact_at_extremes() {
-        for p in [3u64, 5, 29, 101, 65537, (1 << 31) - 1] {
+        for p in [2u64, 3, 5, 29, 101, 65537, (1 << 31) - 1] {
             let f = Fp::new(p);
             for x in [
                 0u64, 1, p - 1, p, p + 1, u64::MAX, u64::MAX - 1,
@@ -552,6 +722,80 @@ mod tests {
         f.vec_scale_add_assign(&mut d, 7, &b);
         for i in 0..13 {
             assert_eq!(d[i], f.add(a[i], f.mul(7, b[i])));
+        }
+    }
+
+    #[test]
+    fn chunked_kernels_match_scalar_across_tail_lengths() {
+        // Lengths straddling the VEC_LANES block boundary exercise both
+        // the chunks_exact body and the element-wise tail of every
+        // kernel; the scalar ops are the reference.
+        for p in [3u64, 29, 101] {
+            let f = Fp::new(p);
+            for len in
+                [0usize, 1, VEC_LANES - 1, VEC_LANES, VEC_LANES + 3, 4 * VEC_LANES + 5]
+            {
+                let a: Vec<u64> = (0..len as u64).map(|i| (i * 7 + 3) % p).collect();
+                let b: Vec<u64> = (0..len as u64).map(|i| (i * 11 + 5) % p).collect();
+                let base: Vec<u64> = (0..len as u64).map(|i| (i * 13 + 1) % p).collect();
+
+                let mut got = base.clone();
+                f.vec_add_assign(&mut got, &a);
+                for i in 0..len {
+                    assert_eq!(got[i], f.add(base[i], a[i]), "add p={p} len={len} i={i}");
+                }
+
+                let mut got = base.clone();
+                f.vec_sub_assign(&mut got, &a);
+                for i in 0..len {
+                    assert_eq!(got[i], f.sub(base[i], a[i]), "sub p={p} len={len} i={i}");
+                }
+
+                let mut got = base.clone();
+                f.vec_mul_add_assign(&mut got, &a, &b);
+                for i in 0..len {
+                    assert_eq!(
+                        got[i],
+                        f.add(base[i], f.mul(a[i], b[i])),
+                        "mul_add p={p} len={len} i={i}"
+                    );
+                }
+
+                let mut got = vec![0u64; len];
+                f.vec_mul_into(&mut got, &a, &b);
+                for i in 0..len {
+                    assert_eq!(got[i], f.mul(a[i], b[i]), "mul_into p={p} len={len} i={i}");
+                }
+                assert_eq!(got, f.vec_mul(&a, &b));
+
+                for k in [0u64, 1, p - 1] {
+                    let mut got = base.clone();
+                    f.vec_scale_add_assign(&mut got, k, &a);
+                    for i in 0..len {
+                        assert_eq!(
+                            got[i],
+                            f.add(base[i], f.mul(k, a[i])),
+                            "scale_add p={p} k={k} len={len} i={i}"
+                        );
+                    }
+                }
+
+                let mut raw: Vec<u64> =
+                    (0..len as u64).map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15)).collect();
+                let want: Vec<u64> = raw.iter().map(|&x| x % p).collect();
+                f.vec_reduce_in_place(&mut raw);
+                assert_eq!(raw, want, "reduce_in_place p={p} len={len}");
+
+                let mut acc = vec![5u64; len];
+                f.vec_sub_add_raw(&mut acc, &a, &b);
+                for i in 0..len {
+                    assert_eq!(
+                        acc[i],
+                        5 + f.sub(a[i], b[i]),
+                        "sub_add_raw p={p} len={len} i={i}"
+                    );
+                }
+            }
         }
     }
 

@@ -27,7 +27,9 @@ use hisafe::protocol::{
     plain_hierarchical_vote, plain_hierarchical_vote_present, HiSafeConfig, ParticipantSet,
 };
 use hisafe::security;
-use hisafe::service::{AggFrontend, Balancer, ServiceClient, ServiceServer, PROTOCOL_VERSION};
+use hisafe::service::{
+    AggFrontend, Balancer, Codec, ServiceClient, ServiceServer, PROTOCOL_VERSION,
+};
 use hisafe::util::cli::Args;
 use hisafe::util::json::Json;
 
@@ -82,15 +84,21 @@ fn print_help() {
                                            churn P drops each user per round with\n\
                                            probability P — below-threshold rounds\n\
                                            abort, survivors are reported)\n\
-           sweep --remote HOST:PORT [--stop-server]\n\
+           sweep --remote HOST:PORT [--codec json|binary] [--stop-server]\n\
                                            the same sweep driven over the wire\n\
                                            against a `hisafe serve` process\n\
+                                           (--codec binary negotiates the v2\n\
+                                           length-prefixed framing; default json;\n\
+                                           the report adds bytes/round)\n\
            serve [--addr 127.0.0.1:7433] [--shards 2] [--threads 2] [--max-tenants M]\n\
-                 [--workers W]             sharded aggregation service speaking\n\
-                                           newline-delimited JSON over TCP (W\n\
-                                           bounded connection workers, default 4)\n\
+                 [--workers W] [--codec json|binary]\n\
+                                           sharded aggregation service over TCP:\n\
+                                           JSON frames by default per connection,\n\
+                                           acking the v2 binary framing when a\n\
+                                           client asks (unless --codec json); W\n\
+                                           bounded connection workers, default 4\n\
            balance --hosts A:P,B:P [--addr 127.0.0.1:7432] [--health-ms 250]\n\
-                                           fail-over balancer fronting several\n\
+                 [--codec json|binary]     fail-over balancer fronting several\n\
                                            serve hosts: health checks, dead-host\n\
                                            detection, snapshot-based session\n\
                                            fail-over (votes stay bit-identical)\n\
@@ -427,10 +435,13 @@ fn sample_mask(rng: &mut hisafe::util::rng::Xoshiro256pp, n: usize, churn: f64) 
 fn cmd_sweep(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "tenants", "rounds", "threads", "seed", "out", "rps", "tps", "queue-depth",
-        "churn", "remote", "stop-server", "verbose", "threaded", "jax",
+        "churn", "remote", "codec", "stop-server", "verbose", "threaded", "jax",
     ])?;
     if args.has("remote") {
         return cmd_sweep_remote(args);
+    }
+    if args.has("codec") {
+        return Err("--codec applies to --remote sweeps; a local sweep has no wire".into());
     }
     let rounds = args.get_usize("rounds", 5)?;
     if rounds == 0 {
@@ -710,11 +721,18 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
         return Err("--threads is a server-side knob; pass it to `hisafe serve`".into());
     }
 
-    let mut client =
-        ServiceClient::connect(&addr).map_err(|e| format!("connect to {addr}: {e}"))?;
+    // Default json: a plain remote sweep is byte-identical on the wire
+    // to the pre-binary client; --codec binary opts into the v2 framing
+    // (negotiated per connection — an old/JSON-policy server just never
+    // acks, and the sweep runs on JSON with identical votes).
+    let want = Codec::from_name(args.get_or("codec", "json"))
+        .ok_or("--codec must be json|binary")?;
+    let mut client = ServiceClient::connect_with_codec(&addr, want)
+        .map_err(|e| format!("connect to {addr}: {e}"))?;
     println!(
-        "# remote sweep: {} tenants against {addr}{}",
+        "# remote sweep: {} tenants against {addr}, codec {} requested{}",
         shapes.len(),
+        want.name(),
         if churn > 0.0 { format!(", churn p = {churn}") } else { String::new() }
     );
 
@@ -733,6 +751,9 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
         survivors_per_round: Vec<usize>,
         aborted_rounds: u64,
         completed_rounds: u64,
+        /// Wire bytes (sent + received, headers included) this tenant's
+        /// round submissions cost — the bandwidth column of the report.
+        wire_bytes: u64,
         audited: bool,
     }
     use hisafe::util::rng::Rng;
@@ -769,6 +790,7 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
             survivors_per_round: Vec::with_capacity(rounds),
             aborted_rounds: 0,
             completed_rounds: 0,
+            wire_bytes: 0,
             audited: false,
         });
     }
@@ -788,6 +810,7 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
             };
             let survivors = mask.iter().filter(|&&p| p).count();
             t.survivors_per_round.push(survivors);
+            let wire0 = client.bytes_sent() + client.bytes_received();
             let t0 = std::time::Instant::now();
             let reply = if survivors == t.cfg.n {
                 let (reply, _denials, waited) = client
@@ -821,6 +844,7 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
                         AdmissionError::ChurnBelowThreshold { .. },
                     )) => {
                         t.aborted_rounds += 1;
+                        t.wire_bytes += client.bytes_sent() + client.bytes_received() - wire0;
                         continue;
                     }
                     Err(e) => {
@@ -828,6 +852,7 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
                     }
                 }
             };
+            t.wire_bytes += client.bytes_sent() + client.bytes_received() - wire0;
             if !t.audited && survivors == t.cfg.n {
                 assert_eq!(
                     reply.global_vote,
@@ -917,14 +942,33 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
             .set("comm_total", t.comm_total.to_json())
             .set("survivors_per_round", t.survivors_per_round.clone())
             .set("completed_rounds", t.completed_rounds)
-            .set("aborted_rounds", t.aborted_rounds);
+            .set("aborted_rounds", t.aborted_rounds)
+            .set("wire_bytes_total", t.wire_bytes)
+            .set(
+                "wire_bytes_per_round",
+                if t.completed_rounds > 0 { t.wire_bytes / t.completed_rounds } else { 0 },
+            );
         tenant_objs.push(o);
     }
+    let round_bytes: u64 = tenants.iter().map(|t| t.wire_bytes).sum();
+    let round_count: u64 = tenants.iter().map(|t| t.completed_rounds).sum();
+    println!(
+        "# wire: codec {} in effect — {} bytes sent, {} bytes received \
+         ({} bytes/round over {} completed rounds)",
+        client.codec().name(),
+        client.bytes_sent(),
+        client.bytes_received(),
+        if round_count > 0 { round_bytes / round_count } else { 0 },
+        round_count
+    );
     // Frontend-wide layout before the sessions close.
     let fe = client.stats(None).map_err(|e| format!("frontend stats: {e}"))?;
     report
         .set("remote", addr.clone())
         .set("protocol_version", PROTOCOL_VERSION)
+        .set("codec", client.codec().name())
+        .set("bytes_sent", client.bytes_sent())
+        .set("bytes_received", client.bytes_received())
         .set("shard_tenants", fe.shard_tenants.unwrap_or_default())
         .set("churn", churn)
         .set("tenants", tenant_objs);
@@ -949,12 +993,15 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
 }
 
 /// `hisafe serve` — the sharded aggregation service: an [`AggFrontend`]
-/// over `--shards` scheduler shards behind newline-delimited JSON
-/// frames on TCP. Blocks until a client sends the protocol's Shutdown
-/// request (e.g. `hisafe sweep --remote ADDR --stop-server`).
+/// over `--shards` scheduler shards on TCP, speaking newline-delimited
+/// JSON per connection and negotiating up to the v2 binary framing when
+/// a client asks (unless `--codec json`). Blocks until a client sends
+/// the protocol's Shutdown request (e.g. `hisafe sweep --remote ADDR
+/// --stop-server`).
 fn cmd_serve(args: &Args) -> Result<(), String> {
     args.check_known(&[
-        "addr", "shards", "threads", "max-tenants", "workers", "verbose", "threaded", "jax",
+        "addr", "shards", "threads", "max-tenants", "workers", "codec", "verbose", "threaded",
+        "jax",
     ])?;
     let addr = args.get_or("addr", "127.0.0.1:7433");
     let shards = args.get_usize("shards", 2)?;
@@ -970,17 +1017,23 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         return Err("--workers must be ≥ 1 (connection workers)".into());
     }
     let max_tenants = args.get_usize("max-tenants", 0)?;
+    // "binary" means binary-*capable*: JSON clients are always served;
+    // "json" refuses to ack binary asks (debugging, mixed clusters).
+    let codec = Codec::from_name(args.get_or("codec", "binary"))
+        .ok_or("--codec must be json|binary")?;
     let frontend = if max_tenants > 0 {
         AggFrontend::with_shard_capacity(shards, threads, max_tenants)
     } else {
         AggFrontend::new(shards, threads)
     };
     let server = ServiceServer::bind_with_workers(addr, frontend, workers)
-        .map_err(|e| format!("bind {addr}: {e}"))?;
+        .map_err(|e| format!("bind {addr}: {e}"))?
+        .with_codec(codec);
     let local = server.local_addr().map_err(|e| e.to_string())?;
     println!(
         "hisafe service listening on {local} — {shards} shard(s) x {threads} engine worker(s), \
-         {workers} connection worker(s), protocol v{PROTOCOL_VERSION}{}",
+         {workers} connection worker(s), protocol v{PROTOCOL_VERSION}, codec {}{}",
+        codec.name(),
         if max_tenants > 0 {
             format!(", max {max_tenants} tenants/shard")
         } else {
@@ -1001,7 +1054,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 /// Blocks until a client sends Shutdown, which also winds down every
 /// live backend host.
 fn cmd_balance(args: &Args) -> Result<(), String> {
-    args.check_known(&["addr", "hosts", "health-ms", "verbose", "threaded", "jax"])?;
+    args.check_known(&["addr", "hosts", "health-ms", "codec", "verbose", "threaded", "jax"])?;
     let addr = args.get_or("addr", "127.0.0.1:7432");
     let hosts: Vec<String> = args
         .get("hosts")
@@ -1017,14 +1070,18 @@ fn cmd_balance(args: &Args) -> Result<(), String> {
     if health_ms == 0 {
         return Err("--health-ms must be ≥ 1".into());
     }
+    let codec = Codec::from_name(args.get_or("codec", "binary"))
+        .ok_or("--codec must be json|binary")?;
     let bal = Balancer::bind(addr, &hosts, std::time::Duration::from_millis(health_ms))
-        .map_err(|e| format!("bind {addr}: {e}"))?;
+        .map_err(|e| format!("bind {addr}: {e}"))?
+        .with_codec(codec);
     let local = bal.local_addr().map_err(|e| e.to_string())?;
     println!(
         "hisafe balancer listening on {local} — {} backend host(s) [{}], health every {health_ms}ms, \
-         protocol v{PROTOCOL_VERSION}",
+         protocol v{PROTOCOL_VERSION}, codec {}",
         hosts.len(),
-        hosts.join(", ")
+        hosts.join(", "),
+        codec.name()
     );
     println!("stop the whole cluster with: hisafe sweep --remote {local} --stop-server");
     bal.serve().map_err(|e| e.to_string())?;

@@ -5,7 +5,11 @@
 //! talk to it with an ordinary [`ServiceClient`], and it talks to every
 //! backend host with one. No protocol fork, no balancer-specific
 //! messages — the cluster primitive is the `SessionSnapshot` /
-//! `SessionRestore` pair that PR 6 added to [`super::proto`].
+//! `SessionRestore` pair that PR 6 added to [`super::proto`]. Codec
+//! negotiation (JSON vs the v2 binary framing, [`super::binary`])
+//! happens independently per connection on each side: a JSON client can
+//! front binary backends and vice versa, because the balancer re-encodes
+//! every forwarded request on its own backend connections.
 //!
 //! ```text
 //!  tenants ──▶ hisafe balance ──▶ hisafe serve  (host 0: K shards)
@@ -75,30 +79,34 @@ use crate::metrics::AdmissionStats;
 
 use super::error::Error;
 use super::frontend::{rendezvous_rank, tenant_key};
-use super::proto::{AdmissionReply, Request, Response, SnapshotReply, StatsReply};
-use super::server::{decode_request, serve_frames, FrameHandler, ServiceClient, DEFAULT_WORKERS};
+use super::proto::{AdmissionReply, Codec, ProtoError, Request, Response, SnapshotReply, StatsReply};
+use super::server::{serve_frames, FrameHandler, ServiceClient, DEFAULT_WORKERS};
 
-/// One backend host: its address, liveness flag, and the persistent
-/// connection requests multiplex over.
+/// One backend host: its address, liveness flag, the codec its
+/// connections ask for, and the persistent connection requests
+/// multiplex over.
 struct HostHandle {
     addr: String,
     alive: AtomicBool,
+    want: Codec,
     conn: Mutex<Option<ServiceClient>>,
 }
 
 impl HostHandle {
-    fn new(addr: String) -> HostHandle {
-        HostHandle { addr, alive: AtomicBool::new(true), conn: Mutex::new(None) }
+    fn new(addr: String, want: Codec) -> HostHandle {
+        HostHandle { addr, alive: AtomicBool::new(true), want, conn: Mutex::new(None) }
     }
 
-    /// One request/reply against this host, (re)connecting lazily. A
-    /// transport failure marks the host dead and drops the connection;
-    /// a success (including a typed denial) marks it alive — which is
-    /// how the health ping revives hosts.
+    /// One request/reply against this host, (re)connecting lazily (each
+    /// fresh connection renegotiates its codec from scratch — a restore
+    /// after fail-over carries the ask like any open does). A transport
+    /// failure marks the host dead and drops the connection; a success
+    /// (including a typed denial) marks it alive — which is how the
+    /// health ping revives hosts.
     fn call(&self, req: &Request) -> Result<Response, Error> {
         let mut guard = self.conn.lock().unwrap_or_else(|p| p.into_inner());
         if guard.is_none() {
-            match ServiceClient::connect(&self.addr) {
+            match ServiceClient::connect_with_codec(&self.addr, self.want) {
                 Ok(c) => *guard = Some(c),
                 Err(e) => {
                     self.alive.store(false, Ordering::SeqCst);
@@ -166,8 +174,14 @@ impl BalCore {
     fn place(&self, snap: &SessionSnapshot) -> Result<(usize, SessionId), Error> {
         let mut last: Option<Error> = None;
         for i in self.host_order(snap) {
-            match self.hosts[i].call(&Request::SessionRestore { snapshot: snap.clone() }) {
-                Ok(Response::Admission(AdmissionReply { session: Some(sid), error: None })) => {
+            // `codec: None` here: the backend connection injects its own
+            // negotiation ask (see `ServiceClient::call`), and the
+            // client-side ask was already consumed at the balancer tier.
+            let restore = Request::SessionRestore { snapshot: snap.clone(), codec: None };
+            match self.hosts[i].call(&restore) {
+                Ok(Response::Admission(AdmissionReply {
+                    session: Some(sid), error: None, ..
+                })) => {
                     return Ok((i, sid));
                 }
                 Ok(Response::Admission(AdmissionReply { error: Some(e), .. })) => {
@@ -228,14 +242,17 @@ impl BalCore {
     /// shutdown.
     fn handle(&self, req: &Request) -> (Response, bool) {
         let reply = match req {
-            Request::SessionOpen { cfg, d, seed, qos } => self.open(SessionSnapshot {
+            // The client's codec ask (if any) is answered by the pump's
+            // negotiation ack at *this* tier; what the backends speak is
+            // the backend connections' own negotiation.
+            Request::SessionOpen { cfg, d, seed, qos, codec: _ } => self.open(SessionSnapshot {
                 cfg: *cfg,
                 d: *d,
                 seed: *seed,
                 qos: *qos,
                 rounds: 0,
             }),
-            Request::SessionRestore { snapshot } => self.open(snapshot.clone()),
+            Request::SessionRestore { snapshot, codec: _ } => self.open(snapshot.clone()),
             Request::RoundSubmit { session, signs, present } => {
                 let signs = signs.clone();
                 let present = present.clone();
@@ -374,17 +391,18 @@ fn error_reply(session: Option<SessionId>, e: Error) -> Response {
     Response::Admission(AdmissionReply::denied(session, e.into_admission()))
 }
 
-/// The routing core as a pump handler: decode, route, answer. Exactly
-/// the decode/denial discipline the backend transport applies, so a
-/// garbage client costs a typed reply at the balancer tier too.
+/// The routing core as a pump handler: route, answer. Exactly the
+/// denial discipline the backend transport applies, so a garbage client
+/// costs a typed reply at the balancer tier too (the shared pump
+/// already decoded — or failed to decode — the frame, in either codec).
 impl FrameHandler for BalCore {
-    fn handle_frame(&self, line: &str) -> (Response, bool) {
-        match decode_request(line) {
-            Ok(req) => self.handle(&req),
+    fn handle_frame(&self, req: &Result<Request, ProtoError>) -> (Response, bool) {
+        match req {
+            Ok(req) => self.handle(req),
             Err(e) => (
                 Response::Admission(AdmissionReply::denied(
                     None,
-                    AdmissionError::Rejected { reason: e.msg },
+                    AdmissionError::Rejected { reason: e.msg.clone() },
                 )),
                 false,
             ),
@@ -400,6 +418,7 @@ pub struct Balancer {
     stop: Arc<AtomicBool>,
     health_every: Duration,
     workers: usize,
+    codec: Codec,
 }
 
 impl Balancer {
@@ -425,7 +444,11 @@ impl Balancer {
         Ok(Balancer {
             listener: TcpListener::bind(addr)?,
             core: Arc::new(BalCore {
-                hosts: hosts.iter().cloned().map(HostHandle::new).collect(),
+                hosts: hosts
+                    .iter()
+                    .cloned()
+                    .map(|a| HostHandle::new(a, Codec::Binary))
+                    .collect(),
                 sessions: Mutex::new(BTreeMap::new()),
                 restore: Mutex::new(()),
                 next_session: AtomicU64::new(0),
@@ -433,7 +456,25 @@ impl Balancer {
             stop: Arc::new(AtomicBool::new(false)),
             health_every,
             workers,
+            codec: Codec::Binary,
         })
+    }
+
+    /// Restrict the balancer to `codec` on *both* of its sides: what it
+    /// acks to its own clients (the same knob as
+    /// [`ServiceServer::with_codec`](super::server::ServiceServer::with_codec))
+    /// and what its backend connections ask the `serve` hosts for. The
+    /// default is binary-capable on both; `Codec::Json` forces the whole
+    /// tier onto debuggable JSON frames. Must be called before
+    /// [`serve`](Balancer::serve).
+    pub fn with_codec(mut self, codec: Codec) -> Balancer {
+        self.codec = codec;
+        let core = Arc::get_mut(&mut self.core)
+            .expect("with_codec must be called before serve() shares the core");
+        for host in &mut core.hosts {
+            host.want = codec;
+        }
+        self
     }
 
     /// The bound client-facing address.
@@ -462,7 +503,13 @@ impl Balancer {
                 }
             })
         };
-        let result = serve_frames(self.listener, self.core, Arc::clone(&self.stop), self.workers);
+        let result = serve_frames(
+            self.listener,
+            self.core,
+            Arc::clone(&self.stop),
+            self.workers,
+            self.codec,
+        );
         self.stop.store(true, Ordering::SeqCst);
         let _ = health.join();
         result
@@ -579,6 +626,39 @@ mod tests {
         }
         let snap = client.snapshot_session(sid).expect("snapshot");
         assert_eq!(snap.rounds, 1, "aborted churn rounds are not client-observed votes");
+        client.shutdown().expect("shutdown acked");
+        bal.join().expect("balancer thread").expect("balancer clean exit");
+        h0.join().expect("h0 thread").expect("h0 clean exit");
+    }
+
+    #[test]
+    fn codec_negotiation_is_independent_per_tier() {
+        // A binary-asking client in front, JSON-only backends behind:
+        // the balancer acks binary to its client while its backend
+        // connections stay on JSON (the backends never ack) — and votes
+        // are still bit-identical to the reference.
+        let backend = ServiceServer::bind("127.0.0.1:0", AggFrontend::new(2, 1))
+            .expect("bind")
+            .with_codec(crate::service::Codec::Json);
+        let a0 = backend.local_addr().expect("addr").to_string();
+        let h0 = std::thread::spawn(move || backend.serve());
+        let (bal_addr, bal) = spawn_balancer(&[a0]);
+
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut client =
+            ServiceClient::connect_with_codec(&bal_addr, crate::service::Codec::Binary)
+                .expect("connect");
+        let sid = client.open_session(cfg, 5, 8, QosPolicy::unlimited()).expect("admitted");
+        assert_eq!(
+            client.codec(),
+            crate::service::Codec::Binary,
+            "the balancer tier acks binary regardless of what its backends speak"
+        );
+        for r in 0..3u64 {
+            let signs = rand_signs(6, 5, 500 + r);
+            let vote = client.submit_round(sid, &signs).expect("round admitted");
+            assert_eq!(vote.global_vote, plain_hierarchical_vote(&signs, cfg));
+        }
         client.shutdown().expect("shutdown acked");
         bal.join().expect("balancer thread").expect("balancer clean exit");
         h0.join().expect("h0 thread").expect("h0 clean exit");

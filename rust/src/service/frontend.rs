@@ -293,7 +293,7 @@ fn error_reply(session: Option<SessionId>, e: Error) -> Response {
 ///
 /// let fe = AggFrontend::new(2, 1);
 /// let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
-/// let open = Request::SessionOpen { cfg, d: 4, seed: 7, qos: QosPolicy::unlimited() };
+/// let open = Request::SessionOpen { cfg, d: 4, seed: 7, qos: QosPolicy::unlimited(), codec: None };
 /// let sid = match fe.handle(&open) {
 ///     Response::Admission(r) => r.session.expect("granted"),
 ///     other => panic!("unexpected reply: {other:?}"),
@@ -650,13 +650,16 @@ impl AggFrontend {
     /// restore), never the frontend.
     pub fn handle(&self, req: &Request) -> Response {
         match req {
-            Request::SessionOpen { cfg, d, seed, qos } => {
+            // `codec` is transport negotiation, answered by the TCP
+            // pump (`super::server`); the frontend routes sessions and
+            // ignores it — in-process embedders have no wire to switch.
+            Request::SessionOpen { cfg, d, seed, qos, codec: _ } => {
                 match self.place(*cfg, *d, *seed, *qos, 0) {
                     Ok(sid) => Response::Admission(AdmissionReply::ok(Some(sid))),
                     Err(e) => error_reply(None, e),
                 }
             }
-            Request::SessionRestore { snapshot } => {
+            Request::SessionRestore { snapshot, codec: _ } => {
                 match self.place(
                     snapshot.cfg,
                     snapshot.d,
@@ -863,8 +866,9 @@ mod tests {
     use crate::util::rng::{Rng, Xoshiro256pp};
 
     fn open(fe: &AggFrontend, cfg: HiSafeConfig, d: usize, seed: u64) -> SessionId {
-        match fe.handle(&Request::SessionOpen { cfg, d, seed, qos: QosPolicy::unlimited() }) {
-            Response::Admission(AdmissionReply { session: Some(sid), error: None }) => sid,
+        let open = Request::SessionOpen { cfg, d, seed, qos: QosPolicy::unlimited(), codec: None };
+        match fe.handle(&open) {
+            Response::Admission(AdmissionReply { session: Some(sid), error: None, .. }) => sid,
             other => panic!("expected a session grant, got {other:?}"),
         }
     }
@@ -1003,8 +1007,13 @@ mod tests {
             (ok, 0),                                             // d = 0
             (ok, MAX_DIM + 1),                                   // over the dim cap
         ] {
-            match fe.handle(&Request::SessionOpen { cfg, d, seed: 1, qos: QosPolicy::unlimited() })
-            {
+            match fe.handle(&Request::SessionOpen {
+                cfg,
+                d,
+                seed: 1,
+                qos: QosPolicy::unlimited(),
+                codec: None,
+            }) {
                 Response::Admission(AdmissionReply {
                     error: Some(AdmissionError::Rejected { .. }),
                     ..
@@ -1067,6 +1076,7 @@ mod tests {
             d: 4,
             seed: 99,
             qos: QosPolicy::unlimited(),
+            codec: None,
         }) {
             Response::Admission(AdmissionReply {
                 error: Some(AdmissionError::Rejected { .. }),
@@ -1276,8 +1286,9 @@ mod tests {
         // balancer performs); the next round there must match the next
         // round on the original bit-for-bit.
         let fe_b = AggFrontend::new(3, 1);
-        let restored = match fe_b.handle(&Request::SessionRestore { snapshot: snap }) {
-            Response::Admission(AdmissionReply { session: Some(s), error: None }) => s,
+        let restore = Request::SessionRestore { snapshot: snap, codec: None };
+        let restored = match fe_b.handle(&restore) {
+            Response::Admission(AdmissionReply { session: Some(s), error: None, .. }) => s,
             other => panic!("expected a restore grant, got {other:?}"),
         };
         let signs = rand_signs(6, 5, 302);

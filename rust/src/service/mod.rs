@@ -2,13 +2,18 @@
 //! serializable request/response protocol instead of in-process method
 //! calls — now a multi-process *cluster*, not just a single server.
 //!
-//! Five files, five responsibilities:
+//! Six files, six responsibilities:
 //!
 //! * [`proto`] — the versioned wire protocol: [`Request`] / [`Response`]
 //!   values with lossless JSON encodings ([`QosPolicy`],
 //!   [`AdmissionError`], and [`CommStats`] ride the wire unchanged),
 //!   including the `SessionSnapshot` / `SessionRestore` pair that makes
-//!   a session a serializable, host-portable value.
+//!   a session a serializable, host-portable value, and the [`Codec`]
+//!   negotiation fields.
+//! * [`binary`] — the v2 length-prefixed **binary** codec for the same
+//!   message values: 2 bits per sign coordinate instead of one JSON
+//!   char, negotiated per-connection at `SessionOpen`/`SessionRestore`
+//!   (JSON stays the always-available compatibility/debug codec).
 //! * [`error`] — [`Error`], the one typed error surface every service
 //!   layer produces (frontend routing, TCP transport, the balancer);
 //!   non-admission variants fold to typed `Rejected` replies on the
@@ -19,8 +24,9 @@
 //!   least-loaded spill-over, shard drain/rebalance, and shard-death
 //!   absorption with transparent bit-identical session restore.
 //! * [`server`] — the std-only TCP transport: [`ServiceServer`]
-//!   (newline-delimited JSON frames, a bounded connection-worker pool,
-//!   `hisafe serve`) and the blocking [`ServiceClient`]
+//!   (newline-delimited JSON frames or negotiated binary frames, a
+//!   bounded connection-worker pool, `hisafe serve`) and the blocking
+//!   [`ServiceClient`]
 //!   (`hisafe sweep --remote`,
 //!   [`train_remote`](crate::fl::trainer::train_remote)).
 //! * [`balancer`] — [`Balancer`] (`hisafe balance`): a fail-over load
@@ -43,6 +49,7 @@
 //! [`AggScheduler`]: crate::engine::AggScheduler
 
 pub mod balancer;
+pub mod binary;
 pub mod error;
 pub mod frontend;
 pub mod proto;
@@ -52,7 +59,7 @@ pub use balancer::Balancer;
 pub use error::Error;
 pub use frontend::AggFrontend;
 pub use proto::{
-    AdmissionReply, ProtoError, Request, Response, SnapshotReply, StatsReply, VoteReply,
+    AdmissionReply, Codec, ProtoError, Request, Response, SnapshotReply, StatsReply, VoteReply,
     PROTOCOL_VERSION,
 };
 pub use server::{ServiceClient, ServiceServer};

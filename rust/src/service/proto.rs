@@ -35,6 +35,15 @@
 //! `RoundSubmit` ≈ `try_run_round`, `Prefetch` ≈ `try_prefetch` — so
 //! typed backpressure ([`AdmissionError`]) crosses the wire unchanged
 //! and a remote client retries throttles exactly like a local caller.
+//!
+//! JSON is the compatibility/debug codec, not the only one: the same
+//! message values also have a length-prefixed binary encoding
+//! ([`crate::service::binary`]). A connection starts in JSON and opts
+//! into binary per-connection via the optional `codec` field on
+//! `SessionOpen`/`SessionRestore` (absent ⇒ JSON, so every pre-codec
+//! frame stays byte-identical); the server acks the switch on the
+//! granting [`AdmissionReply`] and both sides speak binary from the
+//! next frame on. See [`Codec`].
 
 use std::fmt;
 use std::time::Duration;
@@ -72,6 +81,40 @@ impl fmt::Display for ProtoError {
 
 impl std::error::Error for ProtoError {}
 
+/// The two on-wire encodings a connection can speak. Every connection
+/// starts in [`Codec::Json`] (newline-delimited compact JSON — the
+/// compatibility/debug codec); a client that wants the length-prefixed
+/// binary framing of [`crate::service::binary`] asks at
+/// `SessionOpen`/`SessionRestore` via the optional `codec` field and
+/// switches only when the granting [`AdmissionReply`] echoes it back,
+/// so a JSON-only server silently keeps the connection on JSON.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    /// Newline-delimited compact JSON (v1-compatible, human-readable).
+    Json,
+    /// Length-prefixed binary frames ([`crate::service::binary`]).
+    Binary,
+}
+
+impl Codec {
+    /// Stable wire/CLI name: `"json"` or `"binary"`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::Json => "json",
+            Codec::Binary => "binary",
+        }
+    }
+
+    /// Inverse of [`Codec::name`].
+    pub fn from_name(s: &str) -> Option<Codec> {
+        match s {
+            "json" => Some(Codec::Json),
+            "binary" => Some(Codec::Binary),
+            _ => None,
+        }
+    }
+}
+
 /// Client → service messages.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -91,6 +134,12 @@ pub enum Request {
         seed: u64,
         /// Per-tenant QoS, validated at admission like the local path.
         qos: QosPolicy,
+        /// Requested wire codec for the rest of the connection. Absent ⇒
+        /// stay on JSON, keeping every pre-codec frame byte-identical
+        /// (an additive schema extension like `RoundSubmit::present`,
+        /// not a version bump). The switch takes effect only when the
+        /// granting [`AdmissionReply`] echoes it back.
+        codec: Option<Codec>,
     },
     /// Run one aggregation round (the wire form of
     /// [`AggSession::try_run_round`](crate::engine::AggSession::try_run_round)):
@@ -151,6 +200,10 @@ pub enum Request {
         /// The snapshot to replay (from [`Request::SessionSnapshot`], or
         /// tracked balancer-side).
         snapshot: SessionSnapshot,
+        /// Requested wire codec, same negotiation rule as
+        /// `SessionOpen`'s — restores are how a balancer opens backend
+        /// sessions, so the backend leg negotiates here.
+        codec: Option<Codec>,
     },
     /// Ask the server process to stop accepting connections and exit
     /// its serve loop (acknowledged with an empty [`AdmissionReply`]).
@@ -199,17 +252,23 @@ pub struct AdmissionReply {
     pub session: Option<SessionId>,
     /// The typed denial, absent on success.
     pub error: Option<AdmissionError>,
+    /// Codec acknowledgement: set by the server only on a *granting*
+    /// reply to a request that asked for a codec the server speaks.
+    /// After writing (server) / reading (client) a reply carrying
+    /// `Some(c)`, that side's next frame is encoded in `c`. Denials
+    /// never ack — a retried open renegotiates.
+    pub codec: Option<Codec>,
 }
 
 impl AdmissionReply {
     /// A plain success ack (optionally echoing the session id).
     pub fn ok(session: Option<SessionId>) -> AdmissionReply {
-        AdmissionReply { session, error: None }
+        AdmissionReply { session, error: None, codec: None }
     }
 
     /// A typed denial.
     pub fn denied(session: Option<SessionId>, error: AdmissionError) -> AdmissionReply {
-        AdmissionReply { session, error: Some(error) }
+        AdmissionReply { session, error: Some(error), codec: None }
     }
 }
 
@@ -363,12 +422,15 @@ impl Request {
     /// [`signs_str`]'s contract).
     pub fn to_json(&self) -> Json {
         match self {
-            Request::SessionOpen { cfg, d, seed, qos } => {
+            Request::SessionOpen { cfg, d, seed, qos, codec } => {
                 let mut j = base("session_open");
                 j.set("cfg", cfg_json(cfg))
                     .set("d", *d)
                     .set("seed", u64_str(*seed))
                     .set("qos", qos_json(qos));
+                if let Some(c) = codec {
+                    j.set("codec", c.name());
+                }
                 j
             }
             Request::RoundSubmit { session, signs, present } => {
@@ -404,9 +466,12 @@ impl Request {
                 j.set("session", sid_json(*session));
                 j
             }
-            Request::SessionRestore { snapshot } => {
+            Request::SessionRestore { snapshot, codec } => {
                 let mut j = base("session_restore");
                 set_snapshot_fields(&mut j, snapshot);
+                if let Some(c) = codec {
+                    j.set("codec", c.name());
+                }
                 j
             }
             Request::Shutdown => base("shutdown"),
@@ -423,6 +488,7 @@ impl Request {
                 d: parse_usize(j, "d")?,
                 seed: parse_u64_str(j, "seed")?,
                 qos: parse_qos(field(j, "qos")?)?,
+                codec: parse_codec(j)?,
             }),
             "round_submit" => {
                 let arr = field(j, "signs")?
@@ -454,7 +520,10 @@ impl Request {
             "session_snapshot" => {
                 Ok(Request::SessionSnapshot { session: parse_sid(j, "session")? })
             }
-            "session_restore" => Ok(Request::SessionRestore { snapshot: parse_snapshot(j)? }),
+            "session_restore" => Ok(Request::SessionRestore {
+                snapshot: parse_snapshot(j)?,
+                codec: parse_codec(j)?,
+            }),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(ProtoError::new(format!("unknown request type '{other}'"))),
         }
@@ -483,6 +552,9 @@ impl Response {
                 }
                 if let Some(e) = &r.error {
                     j.set("error", admission_error_json(e));
+                }
+                if let Some(c) = r.codec {
+                    j.set("codec", c.name());
                 }
                 j
             }
@@ -539,6 +611,7 @@ impl Response {
                     None => None,
                     Some(e) => Some(parse_admission_error(e)?),
                 },
+                codec: parse_codec(j)?,
             })),
             "stats_reply" => Ok(Response::Stats(StatsReply {
                 session: match j.get("session") {
@@ -669,6 +742,22 @@ fn parse_mask(v: &Json) -> Result<Vec<bool>, ProtoError> {
         .collect()
 }
 
+/// The optional `codec` negotiation field: absent ⇒ `None` (stay on
+/// JSON — the v1 compatibility default), present ⇒ a known codec name.
+/// Unknown names are a decode error, never a silent JSON fallback: the
+/// sender asked for something this build cannot speak, and half-agreeing
+/// would desync the framing.
+fn parse_codec(j: &Json) -> Result<Option<Codec>, ProtoError> {
+    match j.get("codec") {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .and_then(Codec::from_name)
+            .map(Some)
+            .ok_or_else(|| ProtoError::new("'codec' must be 'json' or 'binary'")),
+    }
+}
+
 fn parse_tie(j: &Json, key: &str) -> Result<TiePolicy, ProtoError> {
     field(j, key)?
         .as_str()
@@ -771,20 +860,16 @@ fn parse_admission_stats(j: &Json) -> Result<AdmissionStats, ProtoError> {
     })
 }
 
+/// Random wire-value generators shared by the JSON properties below and
+/// the binary codec's round-trip suite ([`crate::service::binary`]):
+/// both codecs must survive the SAME message distribution, so the
+/// distribution lives in one place.
 #[cfg(test)]
-mod tests {
+pub(crate) mod testgen {
     use super::*;
-    use crate::prop_assert_eq;
-    use crate::util::prop::{forall, Gen};
+    use crate::util::prop::Gen;
 
-    fn keys(v: &Json) -> Vec<String> {
-        match v {
-            Json::Obj(m) => m.keys().cloned().collect(),
-            other => panic!("expected object, got {other:?}"),
-        }
-    }
-
-    fn rand_qos(g: &mut Gen) -> QosPolicy {
+    pub(crate) fn rand_qos(g: &mut Gen) -> QosPolicy {
         QosPolicy {
             weight: g.range(1, 9) as u32,
             queue_depth: if g.bool() { Some(g.usize_range(1, 64)) } else { None },
@@ -794,7 +879,7 @@ mod tests {
         }
     }
 
-    fn rand_cfg(g: &mut Gen) -> HiSafeConfig {
+    pub(crate) fn rand_cfg(g: &mut Gen) -> HiSafeConfig {
         let ell = g.usize_range(1, 4);
         let n1 = g.usize_range(1, 6);
         HiSafeConfig {
@@ -806,11 +891,11 @@ mod tests {
         }
     }
 
-    fn rand_sid(g: &mut Gen) -> SessionId {
+    pub(crate) fn rand_sid(g: &mut Gen) -> SessionId {
         SessionId::new(g.u64())
     }
 
-    fn rand_snapshot(g: &mut Gen) -> SessionSnapshot {
+    pub(crate) fn rand_snapshot(g: &mut Gen) -> SessionSnapshot {
         SessionSnapshot {
             cfg: rand_cfg(g),
             d: g.usize_range(1, 40),
@@ -820,7 +905,7 @@ mod tests {
         }
     }
 
-    fn rand_sign_matrix(g: &mut Gen, rows: usize, d: usize) -> Vec<Vec<i8>> {
+    pub(crate) fn rand_sign_matrix(g: &mut Gen, rows: usize, d: usize) -> Vec<Vec<i8>> {
         (0..rows)
             .map(|_| {
                 (0..d)
@@ -834,7 +919,7 @@ mod tests {
             .collect()
     }
 
-    fn rand_admission_error(g: &mut Gen) -> AdmissionError {
+    pub(crate) fn rand_admission_error(g: &mut Gen) -> AdmissionError {
         match g.range(0, 3) {
             0 => AdmissionError::Rejected {
                 reason: format!("reason \"{}\"\n\t{}", g.u64(), g.u64()),
@@ -855,38 +940,126 @@ mod tests {
 
     /// Counters ride as JSON numbers — exact below 2⁵³ (documented
     /// bound; a run would need quadrillions of rounds to exceed it).
-    fn rand_counter(g: &mut Gen) -> u64 {
+    pub(crate) fn rand_counter(g: &mut Gen) -> u64 {
         g.range(0, 1 << 53)
+    }
+
+    pub(crate) fn rand_opt_codec(g: &mut Gen) -> Option<Codec> {
+        match g.range(0, 2) {
+            0 => None,
+            1 => Some(Codec::Json),
+            _ => Some(Codec::Binary),
+        }
+    }
+
+    /// One random [`Request`], covering every variant (including the
+    /// optional `present` mask and `codec` negotiation fields).
+    pub(crate) fn rand_request(g: &mut Gen) -> Request {
+        let cfg = rand_cfg(g);
+        let d = g.usize_range(0, 40);
+        match g.range(0, 8) {
+            0 => Request::SessionOpen {
+                cfg,
+                d,
+                seed: g.u64(),
+                qos: rand_qos(g),
+                codec: rand_opt_codec(g),
+            },
+            1 => Request::RoundSubmit {
+                session: rand_sid(g),
+                signs: rand_sign_matrix(g, cfg.n, d),
+                present: if g.bool() {
+                    Some((0..cfg.n).map(|_| g.bool()).collect())
+                } else {
+                    None
+                },
+            },
+            2 => Request::Prefetch {
+                session: rand_sid(g),
+                rounds: g.usize_range(0, 1 << 20),
+            },
+            3 => Request::SessionClose { session: rand_sid(g) },
+            4 => Request::StatsQuery {
+                session: if g.bool() { Some(rand_sid(g)) } else { None },
+            },
+            5 => Request::SessionSnapshot { session: rand_sid(g) },
+            6 => Request::SessionRestore {
+                snapshot: rand_snapshot(g),
+                codec: rand_opt_codec(g),
+            },
+            _ => Request::Shutdown,
+        }
+    }
+
+    /// One random [`Response`], covering every variant.
+    pub(crate) fn rand_response(g: &mut Gen) -> Response {
+        match g.range(0, 3) {
+            0 => {
+                let ell = g.usize_range(1, 4);
+                let d = g.usize_range(0, 40);
+                Response::Vote(VoteReply {
+                    session: rand_sid(g),
+                    global_vote: rand_sign_matrix(g, 1, d).remove(0),
+                    subgroup_votes: rand_sign_matrix(g, ell, d),
+                    stats: CommStats {
+                        uplink_elems_total: rand_counter(g),
+                        uplink_elems_per_user: rand_counter(g),
+                        downlink_elems: rand_counter(g),
+                        elem_bits: g.range(1, 64) as u32,
+                        subrounds: rand_counter(g),
+                        mults: rand_counter(g),
+                        vote_bits: g.range(1, 2) as u32,
+                    },
+                })
+            }
+            1 => Response::Admission(AdmissionReply {
+                session: if g.bool() { Some(rand_sid(g)) } else { None },
+                error: if g.bool() { Some(rand_admission_error(g)) } else { None },
+                codec: rand_opt_codec(g),
+            }),
+            2 => Response::Snapshot(SnapshotReply {
+                session: rand_sid(g),
+                snapshot: rand_snapshot(g),
+            }),
+            _ => Response::Stats(StatsReply {
+                session: if g.bool() { Some(rand_sid(g)) } else { None },
+                shard: if g.bool() { Some(g.usize_range(0, 64)) } else { None },
+                rounds_run: rand_counter(g),
+                dealt_rounds: rand_counter(g),
+                admission: AdmissionStats {
+                    admitted_rounds: rand_counter(g),
+                    throttled: rand_counter(g),
+                    queue_full: rand_counter(g),
+                    rejected: rand_counter(g),
+                },
+                shard_tenants: if g.bool() {
+                    Some((0..g.usize_range(0, 8)).map(|_| g.usize_range(0, 99)).collect())
+                } else {
+                    None
+                },
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testgen::*;
+    use super::*;
+    use crate::prop_assert_eq;
+    use crate::util::prop::forall;
+
+    fn keys(v: &Json) -> Vec<String> {
+        match v {
+            Json::Obj(m) => m.keys().cloned().collect(),
+            other => panic!("expected object, got {other:?}"),
+        }
     }
 
     #[test]
     fn every_request_round_trips_losslessly() {
         forall("wire requests round-trip", 60, |g| {
-            let cfg = rand_cfg(g);
-            let d = g.usize_range(0, 40);
-            let req = match g.range(0, 8) {
-                0 => Request::SessionOpen { cfg, d, seed: g.u64(), qos: rand_qos(g) },
-                1 => Request::RoundSubmit {
-                    session: rand_sid(g),
-                    signs: rand_sign_matrix(g, cfg.n, d),
-                    present: if g.bool() {
-                        Some((0..cfg.n).map(|_| g.bool()).collect())
-                    } else {
-                        None
-                    },
-                },
-                2 => Request::Prefetch {
-                    session: rand_sid(g),
-                    rounds: g.usize_range(0, 1 << 20),
-                },
-                3 => Request::SessionClose { session: rand_sid(g) },
-                4 => Request::StatsQuery {
-                    session: if g.bool() { Some(rand_sid(g)) } else { None },
-                },
-                5 => Request::SessionSnapshot { session: rand_sid(g) },
-                6 => Request::SessionRestore { snapshot: rand_snapshot(g) },
-                _ => Request::Shutdown,
-            };
+            let req = rand_request(g);
             let text = req.to_json().to_string_compact();
             let back = Request::from_json(&crate::util::json::parse(&text).unwrap())
                 .map_err(|e| e.to_string())?;
@@ -898,51 +1071,7 @@ mod tests {
     #[test]
     fn every_response_round_trips_losslessly() {
         forall("wire responses round-trip", 60, |g| {
-            let resp = match g.range(0, 3) {
-                0 => {
-                    let ell = g.usize_range(1, 4);
-                    let d = g.usize_range(0, 40);
-                    Response::Vote(VoteReply {
-                        session: rand_sid(g),
-                        global_vote: rand_sign_matrix(g, 1, d).remove(0),
-                        subgroup_votes: rand_sign_matrix(g, ell, d),
-                        stats: CommStats {
-                            uplink_elems_total: rand_counter(g),
-                            uplink_elems_per_user: rand_counter(g),
-                            downlink_elems: rand_counter(g),
-                            elem_bits: g.range(1, 64) as u32,
-                            subrounds: rand_counter(g),
-                            mults: rand_counter(g),
-                            vote_bits: g.range(1, 2) as u32,
-                        },
-                    })
-                }
-                1 => Response::Admission(AdmissionReply {
-                    session: if g.bool() { Some(rand_sid(g)) } else { None },
-                    error: if g.bool() { Some(rand_admission_error(g)) } else { None },
-                }),
-                2 => Response::Snapshot(SnapshotReply {
-                    session: rand_sid(g),
-                    snapshot: rand_snapshot(g),
-                }),
-                _ => Response::Stats(StatsReply {
-                    session: if g.bool() { Some(rand_sid(g)) } else { None },
-                    shard: if g.bool() { Some(g.usize_range(0, 64)) } else { None },
-                    rounds_run: rand_counter(g),
-                    dealt_rounds: rand_counter(g),
-                    admission: AdmissionStats {
-                        admitted_rounds: rand_counter(g),
-                        throttled: rand_counter(g),
-                        queue_full: rand_counter(g),
-                        rejected: rand_counter(g),
-                    },
-                    shard_tenants: if g.bool() {
-                        Some((0..g.usize_range(0, 8)).map(|_| g.usize_range(0, 99)).collect())
-                    } else {
-                        None
-                    },
-                }),
-            };
+            let resp = rand_response(g);
             let text = resp.to_json().to_string_compact();
             let back = Response::from_json(&crate::util::json::parse(&text).unwrap())
                 .map_err(|e| e.to_string())?;
@@ -1001,6 +1130,19 @@ mod tests {
         )
         .unwrap();
         assert!(Request::from_json(&j).is_err());
+        // An unknown codec name is a decode error, never a silent JSON
+        // fallback — half-agreeing would desync the framing.
+        let mut j = Request::SessionOpen {
+            cfg: HiSafeConfig::flat(3, TiePolicy::OneBit),
+            d: 1,
+            seed: 0,
+            qos: QosPolicy::unlimited(),
+            codec: None,
+        }
+        .to_json();
+        j.set("codec", "protobuf");
+        let err = Request::from_json(&j).unwrap_err();
+        assert!(err.msg.contains("codec"), "got: {err}");
         // A weight that overflows u32 is rejected, never truncated (a
         // wrapped weight would admit under the wrong dealing share).
         let too_big = (u32::MAX as u64) + 2; // would truncate to 1
@@ -1022,13 +1164,21 @@ mod tests {
         let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
         let qos = QosPolicy::unlimited().with_queue_depth(4).with_rounds_per_sec(10.0);
 
-        let open = Request::SessionOpen { cfg, d: 3, seed: 7, qos }.to_json();
+        let open = Request::SessionOpen { cfg, d: 3, seed: 7, qos, codec: None }.to_json();
         assert_eq!(keys(&open), ["cfg", "d", "qos", "seed", "type", "v"]);
         assert_eq!(keys(open.get("cfg").unwrap()), ["ell", "inter", "intra", "n", "sparse"]);
         assert_eq!(
             keys(open.get("qos").unwrap()),
             ["burst_rounds", "queue_depth", "rounds_per_sec", "triples_per_sec", "weight"]
         );
+        // Codec negotiation is additive: `codec: None` keeps the frame
+        // byte-identical to the pre-codec schema (asserted above), and a
+        // requesting open adds exactly the one key.
+        let open_bin =
+            Request::SessionOpen { cfg, d: 3, seed: 7, qos, codec: Some(Codec::Binary) }
+                .to_json();
+        assert_eq!(keys(&open_bin), ["cfg", "codec", "d", "qos", "seed", "type", "v"]);
+        assert_eq!(open_bin.get("codec").unwrap().as_str().unwrap(), "binary");
 
         let sid = SessionId::new(1);
         // All-present submits omit `present` entirely — the frame stays
@@ -1065,8 +1215,15 @@ mod tests {
             ["session", "type", "v"]
         );
         let snap = SessionSnapshot { cfg, d: 3, seed: 7, qos, rounds: 2 };
-        let restore = Request::SessionRestore { snapshot: snap.clone() }.to_json();
+        let restore = Request::SessionRestore { snapshot: snap.clone(), codec: None }.to_json();
         assert_eq!(keys(&restore), ["cfg", "d", "qos", "rounds", "seed", "type", "v"]);
+        let restore_bin =
+            Request::SessionRestore { snapshot: snap.clone(), codec: Some(Codec::Binary) }
+                .to_json();
+        assert_eq!(
+            keys(&restore_bin),
+            ["cfg", "codec", "d", "qos", "rounds", "seed", "type", "v"]
+        );
         assert_eq!(keys(&Request::Shutdown.to_json()), ["type", "v"]);
 
         let vote = Response::Vote(VoteReply {
@@ -1106,6 +1263,16 @@ mod tests {
             keys(&Response::Admission(AdmissionReply::ok(None)).to_json()),
             ["type", "v"]
         );
+        // The negotiation ack: a granting reply that confirms the codec
+        // switch adds exactly the one key.
+        let ack = Response::Admission(AdmissionReply {
+            session: Some(sid),
+            error: None,
+            codec: Some(Codec::Binary),
+        })
+        .to_json();
+        assert_eq!(keys(&ack), ["codec", "session", "type", "v"]);
+        assert_eq!(ack.get("codec").unwrap().as_str().unwrap(), "binary");
 
         let session_stats = Response::Stats(StatsReply {
             session: Some(sid),
@@ -1168,6 +1335,7 @@ mod tests {
             d: 2,
             seed: u64::MAX,
             qos: QosPolicy::unlimited(),
+            codec: None,
         };
         let line = req.to_json().to_string_compact();
         assert!(!line.contains('\n'), "frames must stay newline-free: {line}");

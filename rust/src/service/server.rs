@@ -11,11 +11,25 @@
 //! [`super::proto`] where any future transport (HTTP, UDS, shared
 //! memory) reuses it unchanged.
 //!
-//! **Framing.** One compact JSON document per line, in both directions.
-//! Compact encodings are newline-free by construction (strings escape
-//! `\n`), so splitting on `\n` is a complete framer. A line that fails
-//! to decode is answered with a typed `Rejected` reply carrying the
-//! parse error — a garbage client cannot crash the server.
+//! **Framing.** Two codecs, selected per frame by the first byte:
+//!
+//! * **JSON** (the start state): one compact JSON document per line.
+//!   Compact encodings are newline-free by construction (strings escape
+//!   `\n`), so splitting on `\n` is a complete framer.
+//! * **Binary** ([`super::binary`]): length-prefixed frames starting
+//!   with the magic byte `0xB2` — never the first byte of a JSON frame,
+//!   so a mixed connection is unambiguous. Clients opt in per
+//!   connection by asking on `SessionOpen`/`SessionRestore`; the server
+//!   acks on the granting reply (iff its codec policy allows — see
+//!   [`ServiceServer::with_codec`]) and the client switches from the
+//!   next frame on. Replies always ride the codec of the frame they
+//!   answer.
+//!
+//! A frame that fails to decode — garbage JSON or a malformed binary
+//! payload — is answered with a typed `Rejected` reply carrying the
+//! parse error; a garbage client cannot crash the server. (A broken
+//! binary *header* additionally drops the connection: without a valid
+//! length there is no next frame boundary to resync on.)
 //!
 //! **Concurrency: bounded connection workers.** The accept loop puts
 //! every connection in **non-blocking** mode and parks it in a shared
@@ -56,9 +70,10 @@ use crate::engine::{AdmissionError, QosPolicy, SessionId, SessionSnapshot};
 use crate::protocol::HiSafeConfig;
 use crate::util::json::{parse, Json};
 
+use super::binary;
 use super::error::Error;
 use super::frontend::AggFrontend;
-use super::proto::{AdmissionReply, ProtoError, Request, Response, StatsReply, VoteReply};
+use super::proto::{AdmissionReply, Codec, ProtoError, Request, Response, StatsReply, VoteReply};
 
 /// Default connection-worker pool size when the caller doesn't choose
 /// (`hisafe serve --workers N` does). Shared with the balancer, whose
@@ -88,16 +103,19 @@ struct ConnIo {
     outbuf: Vec<u8>,
 }
 
-/// One line-framed request surface behind the bounded connection-worker
-/// pump: [`serve_frames`] reads frames off every registered connection
-/// and answers with whatever the handler returns. Two implementors —
-/// the [`AggFrontend`] transport here and the balancer's routing core
-/// (`service::balancer`) — so the accept loop, registry, non-blocking
-/// pump, and shutdown dance exist exactly once.
+/// One request surface behind the bounded connection-worker pump:
+/// [`serve_frames`] splits and decodes frames (JSON or binary) off
+/// every registered connection and answers with whatever the handler
+/// returns. Two implementors — the [`AggFrontend`] transport here and
+/// the balancer's routing core (`service::balancer`) — so the accept
+/// loop, registry, non-blocking pump, codec handling, and shutdown
+/// dance exist exactly once.
 pub(crate) trait FrameHandler: Send + Sync {
-    /// Answer one complete frame line. Returns the reply plus whether
-    /// the frame asked the process to stop serving.
-    fn handle_frame(&self, line: &str) -> (Response, bool);
+    /// Answer one decoded frame — or a decode failure, which handlers
+    /// answer with a typed rejection, never a dropped connection.
+    /// Returns the reply plus whether the frame asked the process to
+    /// stop serving.
+    fn handle_frame(&self, req: &Result<Request, ProtoError>) -> (Response, bool);
 }
 
 /// What one pump pass did with a connection.
@@ -117,6 +135,7 @@ pub struct ServiceServer {
     frontend: Arc<AggFrontend>,
     stop: Arc<AtomicBool>,
     workers: usize,
+    codec: Codec,
 }
 
 impl ServiceServer {
@@ -144,7 +163,19 @@ impl ServiceServer {
             frontend: Arc::new(frontend),
             stop: Arc::new(AtomicBool::new(false)),
             workers,
+            codec: Codec::Binary,
         })
+    }
+
+    /// The richest codec this server *acks* (default: [`Codec::Binary`],
+    /// i.e. binary-capable). `with_codec(Codec::Json)` makes the server
+    /// stay quiet when a client asks for binary — the client then keeps
+    /// speaking JSON, which is what `hisafe serve --codec json` uses for
+    /// debugging and for mixed-version clusters. Decoding is unaffected:
+    /// the pump always understands both codecs.
+    pub fn with_codec(mut self, codec: Codec) -> ServiceServer {
+        self.codec = codec;
+        self
     }
 
     /// The bound address (resolves the actual port after `":0"` binds).
@@ -158,7 +189,7 @@ impl ServiceServer {
     /// returns, so "serve returned" means "no request is in flight").
     pub fn serve(self) -> io::Result<()> {
         let handler = FrontendHandler { frontend: Arc::clone(&self.frontend) };
-        serve_frames(self.listener, Arc::new(handler), self.stop, self.workers)
+        serve_frames(self.listener, Arc::new(handler), self.stop, self.workers, self.codec)
     }
 }
 
@@ -170,8 +201,8 @@ struct FrontendHandler {
 }
 
 impl FrameHandler for FrontendHandler {
-    fn handle_frame(&self, line: &str) -> (Response, bool) {
-        respond(line, &self.frontend)
+    fn handle_frame(&self, req: &Result<Request, ProtoError>) -> (Response, bool) {
+        respond(req, &self.frontend)
     }
 }
 
@@ -185,6 +216,7 @@ pub(crate) fn serve_frames<H: FrameHandler + 'static>(
     handler: Arc<H>,
     stop: Arc<AtomicBool>,
     workers: usize,
+    codec: Codec,
 ) -> io::Result<()> {
     let addr = listener.local_addr()?;
     let registry: Arc<Mutex<Vec<Arc<Conn>>>> = Arc::new(Mutex::new(Vec::new()));
@@ -193,7 +225,7 @@ pub(crate) fn serve_frames<H: FrameHandler + 'static>(
             let registry = Arc::clone(&registry);
             let handler = Arc::clone(&handler);
             let stop = Arc::clone(&stop);
-            std::thread::spawn(move || worker_loop(registry, handler, stop, addr))
+            std::thread::spawn(move || worker_loop(registry, handler, stop, addr, codec))
         })
         .collect();
     let accept_result = loop {
@@ -253,6 +285,7 @@ fn worker_loop<H: FrameHandler>(
     handler: Arc<H>,
     stop: Arc<AtomicBool>,
     server_addr: SocketAddr,
+    codec: Codec,
 ) {
     loop {
         if stop.load(Ordering::SeqCst) {
@@ -268,7 +301,7 @@ fn worker_loop<H: FrameHandler>(
             }
             // Another worker holds this connection: skip, don't wait.
             let Ok(mut io) = conn.io.try_lock() else { continue };
-            match pump(&mut io, handler.as_ref(), &stop, server_addr) {
+            match pump(&mut io, handler.as_ref(), &stop, server_addr, codec) {
                 Pump::Idle => {}
                 Pump::Progress => moved = true,
                 Pump::Closed => {
@@ -295,9 +328,10 @@ fn pump<H: FrameHandler + ?Sized>(
     handler: &H,
     stop: &AtomicBool,
     server_addr: SocketAddr,
+    codec: Codec,
 ) -> Pump {
     let mut moved = false;
-    // Read half: drain the socket into the line buffer.
+    // Read half: drain the socket into the frame buffer.
     let mut chunk = [0u8; 4096];
     loop {
         match io.stream.read(&mut chunk) {
@@ -311,29 +345,66 @@ fn pump<H: FrameHandler + ?Sized>(
             Err(_) => return Pump::Closed,
         }
     }
-    // Handle half: answer every complete line in arrival order.
-    while let Some(pos) = io.inbuf.iter().position(|&b| b == b'\n') {
-        let line: Vec<u8> = io.inbuf.drain(..=pos).collect();
-        let line = String::from_utf8_lossy(&line);
-        if line.trim().is_empty() {
-            continue;
-        }
-        moved = true;
-        let (reply, shutdown) = handler.handle_frame(&line);
-        let mut out = reply.to_json().to_string_compact();
-        out.push('\n');
-        io.outbuf.extend_from_slice(out.as_bytes());
-        if shutdown {
-            // Deliver the ack synchronously (the socket goes back to
-            // blocking just for this), then stop the server: flag the
-            // pool and wake the accept loop with a self-connection.
-            let _ = io.stream.set_nonblocking(false);
-            let _ = io.stream.write_all(&io.outbuf);
-            let _ = io.stream.flush();
-            io.outbuf.clear();
-            stop.store(true, Ordering::SeqCst);
-            let _ = TcpStream::connect(server_addr);
-            return Pump::Closed;
+    // Handle half: answer every complete frame at the buffer head, in
+    // arrival order. The first byte picks the codec per frame — JSON
+    // frames start with `{` (or whitespace), binary frames with the
+    // magic byte — so one connection may interleave both (it does,
+    // around the negotiation switch).
+    loop {
+        let Some(&first) = io.inbuf.first() else { break };
+        if first == binary::MAGIC {
+            if io.inbuf.len() < binary::HEADER_LEN {
+                break; // Partial header: wait for more bytes.
+            }
+            let payload_len = match binary::parse_header(&io.inbuf[..binary::HEADER_LEN]) {
+                Ok(len) => len,
+                Err(e) => {
+                    // The *header* is broken (bad version or oversize
+                    // length): answer typed in the codec the peer is
+                    // speaking, then drop the connection — without a
+                    // valid length there is no next frame boundary.
+                    let reply = Response::Admission(AdmissionReply::denied(
+                        None,
+                        AdmissionError::Rejected { reason: e.msg },
+                    ));
+                    io.outbuf.extend_from_slice(&binary::encode_response(&reply));
+                    let _ = io.stream.set_nonblocking(false);
+                    let _ = io.stream.write_all(&io.outbuf);
+                    let _ = io.stream.flush();
+                    io.outbuf.clear();
+                    return Pump::Closed;
+                }
+            };
+            let total = binary::HEADER_LEN + payload_len;
+            if io.inbuf.len() < total {
+                break; // Partial payload: wait for more bytes.
+            }
+            let frame: Vec<u8> = io.inbuf.drain(..total).collect();
+            moved = true;
+            let req = binary::decode_request(&frame[binary::HEADER_LEN..]);
+            let (mut reply, shutdown) = handler.handle_frame(&req);
+            negotiate_ack(&req, &mut reply, codec);
+            io.outbuf.extend_from_slice(&binary::encode_response(&reply));
+            if shutdown {
+                return finish_shutdown(io, stop, server_addr);
+            }
+        } else {
+            let Some(pos) = io.inbuf.iter().position(|&b| b == b'\n') else { break };
+            let line: Vec<u8> = io.inbuf.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&line);
+            if line.trim().is_empty() {
+                continue;
+            }
+            moved = true;
+            let req = decode_request(&line);
+            let (mut reply, shutdown) = handler.handle_frame(&req);
+            negotiate_ack(&req, &mut reply, codec);
+            let mut out = reply.to_json().to_string_compact();
+            out.push('\n');
+            io.outbuf.extend_from_slice(out.as_bytes());
+            if shutdown {
+                return finish_shutdown(io, stop, server_addr);
+            }
         }
     }
     // Write half: give the socket whatever it will take, keep the rest.
@@ -356,19 +427,53 @@ fn pump<H: FrameHandler + ?Sized>(
     }
 }
 
-/// Decode and answer one frame. Malformed bytes get a typed reply, not
-/// a dropped connection; a panicking handler gets a typed reply too
+/// Deliver the shutdown ack synchronously (the socket goes back to
+/// blocking just for this), then stop the server: flag the pool and
+/// wake the accept loop with a self-connection.
+fn finish_shutdown(io: &mut ConnIo, stop: &AtomicBool, server_addr: SocketAddr) -> Pump {
+    let _ = io.stream.set_nonblocking(false);
+    let _ = io.stream.write_all(&io.outbuf);
+    let _ = io.stream.flush();
+    io.outbuf.clear();
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(server_addr);
+    Pump::Closed
+}
+
+/// The server's half of codec negotiation: a *granting* reply to an
+/// open/restore that asked for binary gets the ack stamped on it — iff
+/// this server's policy speaks binary. Denials never ack (the retry
+/// renegotiates from scratch), and a JSON-policy server simply stays
+/// quiet, which a well-behaved client reads as "keep speaking JSON".
+fn negotiate_ack(req: &Result<Request, ProtoError>, reply: &mut Response, policy: Codec) {
+    if policy != Codec::Binary {
+        return;
+    }
+    match req {
+        Ok(Request::SessionOpen { codec: Some(Codec::Binary), .. })
+        | Ok(Request::SessionRestore { codec: Some(Codec::Binary), .. }) => {}
+        _ => return,
+    }
+    if let Response::Admission(r) = reply {
+        if r.session.is_some() && r.error.is_none() {
+            r.codec = Some(Codec::Binary);
+        }
+    }
+}
+
+/// Answer one decoded frame. Malformed bytes get a typed reply, not a
+/// dropped connection; a panicking handler gets a typed reply too
 /// (`catch_unwind` — the frontend's shard-poison absorption makes the
 /// panicked shard recoverable, this makes the worker survive to see
 /// it). Returns the reply plus whether it was a shutdown.
-fn respond(line: &str, frontend: &AggFrontend) -> (Response, bool) {
-    match decode_request(line) {
+fn respond(req: &Result<Request, ProtoError>, frontend: &AggFrontend) -> (Response, bool) {
+    match req {
         Ok(Request::Shutdown) => (Response::Admission(AdmissionReply::ok(None)), true),
         Ok(req) => {
-            let reply = catch_unwind(AssertUnwindSafe(|| frontend.handle(&req)))
+            let reply = catch_unwind(AssertUnwindSafe(|| frontend.handle(req)))
                 .unwrap_or_else(|_| {
                     Response::Admission(AdmissionReply::denied(
-                        request_session(&req),
+                        request_session(req),
                         AdmissionError::Rejected {
                             reason: "request handler panicked; the affected shard was \
                                      isolated and its sessions will restore elsewhere"
@@ -381,7 +486,7 @@ fn respond(line: &str, frontend: &AggFrontend) -> (Response, bool) {
         Err(e) => (
             Response::Admission(AdmissionReply::denied(
                 None,
-                AdmissionError::Rejected { reason: e.msg },
+                AdmissionError::Rejected { reason: e.msg.clone() },
             )),
             false,
         ),
@@ -426,39 +531,151 @@ pub(crate) fn decode_request(line: &str) -> Result<Request, ProtoError> {
 pub struct ServiceClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// The encoding currently in effect on this connection. Starts as
+    /// [`Codec::Json`] (the protocol's start state) and flips to binary
+    /// only after the server acks a negotiation ask.
+    codec: Codec,
+    /// The codec this client *wants*: [`call`](ServiceClient::call)
+    /// stamps the ask onto every `SessionOpen`/`SessionRestore` until
+    /// the server acks (or forever stays quiet, keeping us on JSON).
+    want: Codec,
+    /// Wire bytes written/read over the connection's lifetime — the
+    /// bandwidth counters `hisafe sweep --remote` and the scheduler
+    /// bench report per round.
+    bytes_sent: u64,
+    bytes_recv: u64,
 }
 
 impl ServiceClient {
-    /// Connect to a [`ServiceServer`] at `addr` (e.g. `"127.0.0.1:7433"`).
+    /// Connect to a [`ServiceServer`] at `addr` (e.g. `"127.0.0.1:7433"`),
+    /// speaking plain JSON frames (no negotiation ask) — byte-identical
+    /// on the wire to a v1 client.
     pub fn connect(addr: &str) -> io::Result<ServiceClient> {
+        Self::connect_with_codec(addr, Codec::Json)
+    }
+
+    /// Connect asking for `want`: with [`Codec::Binary`] the next
+    /// `SessionOpen`/`SessionRestore` carries the ask and the connection
+    /// switches to length-prefixed binary frames once (iff) the server
+    /// acks the grant. Against a JSON-policy (or older) server the ask
+    /// is simply never acked and the connection stays on JSON — same
+    /// sessions, same votes, bigger frames.
+    pub fn connect_with_codec(addr: &str, want: Codec) -> io::Result<ServiceClient> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         let writer = stream.try_clone()?;
-        Ok(ServiceClient { reader: BufReader::new(stream), writer })
+        Ok(ServiceClient {
+            reader: BufReader::new(stream),
+            writer,
+            codec: Codec::Json,
+            want,
+            bytes_sent: 0,
+            bytes_recv: 0,
+        })
+    }
+
+    /// The encoding currently in effect (switches from JSON to binary
+    /// when the server acks a negotiation ask).
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Total wire bytes this client has written (headers included).
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
+    }
+
+    /// Total wire bytes this client has read (headers included).
+    pub fn bytes_received(&self) -> u64 {
+        self.bytes_recv
     }
 
     /// One raw request/reply exchange. The typed helpers below are
     /// usually what callers want.
     pub fn call(&mut self, req: &Request) -> Result<Response, Error> {
-        self.exchange(&encode_frame(req))
+        // While negotiating (want=binary, still on JSON), opens and
+        // restores carry the codec ask — injected here so every caller
+        // (trainer, balancer, CLI, tests) negotiates without plumbing.
+        // A caller-provided `Some(_)` is respected, never overridden.
+        let frame = match (self.codec_ask(), req) {
+            (Some(ask), Request::SessionOpen { cfg, d, seed, qos, codec: None }) => {
+                self.encode(&Request::SessionOpen {
+                    cfg: *cfg,
+                    d: *d,
+                    seed: *seed,
+                    qos: *qos,
+                    codec: Some(ask),
+                })
+            }
+            (Some(ask), Request::SessionRestore { snapshot, codec: None }) => self.encode(
+                &Request::SessionRestore { snapshot: snapshot.clone(), codec: Some(ask) },
+            ),
+            _ => self.encode(req),
+        };
+        self.exchange(&frame)
+    }
+
+    /// The codec to ask for on the next open/restore, if any: only
+    /// while the connection wants binary but still speaks JSON.
+    fn codec_ask(&self) -> Option<Codec> {
+        (self.want == Codec::Binary && self.codec == Codec::Json).then_some(Codec::Binary)
+    }
+
+    /// Encode one request in the connection's current codec.
+    fn encode(&self, req: &Request) -> Vec<u8> {
+        match self.codec {
+            Codec::Json => encode_frame(req).into_bytes(),
+            Codec::Binary => binary::encode_request(req),
+        }
     }
 
     /// Send one pre-encoded frame and decode its reply — split from
     /// [`call`](ServiceClient::call) so retry loops can encode a large
-    /// request once and resend the same bytes.
-    fn exchange(&mut self, frame: &str) -> Result<Response, Error> {
-        self.writer.write_all(frame.as_bytes())?;
+    /// request once and resend the same bytes. Watches every admission
+    /// reply for the server's codec ack and switches the connection's
+    /// encoding when it arrives.
+    fn exchange(&mut self, frame: &[u8]) -> Result<Response, Error> {
+        self.writer.write_all(frame)?;
         self.writer.flush()?;
-        let mut reply = String::new();
-        if self.reader.read_line(&mut reply)? == 0 {
+        self.bytes_sent += frame.len() as u64;
+        let resp = self.read_response()?;
+        if let Response::Admission(AdmissionReply { codec: Some(c), error: None, .. }) = &resp {
+            self.codec = *c;
+        }
+        Ok(resp)
+    }
+
+    /// Read one reply in whichever codec the server answered with (the
+    /// first byte disambiguates, exactly as on the server side).
+    fn read_response(&mut self) -> Result<Response, Error> {
+        let head = self.reader.fill_buf()?;
+        if head.is_empty() {
             return Err(Error::Io(io::Error::new(
                 io::ErrorKind::UnexpectedEof,
                 "server closed the connection",
             )));
         }
-        let j = parse(reply.trim_end())
-            .map_err(|e| Error::Proto(ProtoError { msg: format!("bad frame: {e}") }))?;
-        Ok(Response::from_json(&j)?)
+        if head[0] == binary::MAGIC {
+            let mut hdr = [0u8; binary::HEADER_LEN];
+            self.reader.read_exact(&mut hdr)?;
+            let payload_len = binary::parse_header(&hdr).map_err(Error::Proto)?;
+            let mut payload = vec![0u8; payload_len];
+            self.reader.read_exact(&mut payload)?;
+            self.bytes_recv += (binary::HEADER_LEN + payload_len) as u64;
+            Ok(binary::decode_response(&payload)?)
+        } else {
+            let mut reply = String::new();
+            if self.reader.read_line(&mut reply)? == 0 {
+                return Err(Error::Io(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "server closed the connection",
+                )));
+            }
+            self.bytes_recv += reply.len() as u64;
+            let j = parse(reply.trim_end())
+                .map_err(|e| Error::Proto(ProtoError { msg: format!("bad frame: {e}") }))?;
+            Ok(Response::from_json(&j)?)
+        }
     }
 
     /// Open a tenant session; returns the granted session id.
@@ -470,8 +687,8 @@ impl ServiceClient {
         seed: u64,
         qos: QosPolicy,
     ) -> Result<SessionId, Error> {
-        match self.call(&Request::SessionOpen { cfg, d, seed, qos })? {
-            Response::Admission(AdmissionReply { session: Some(sid), error: None }) => Ok(sid),
+        match self.call(&Request::SessionOpen { cfg, d, seed, qos, codec: None })? {
+            Response::Admission(AdmissionReply { session: Some(sid), error: None, .. }) => Ok(sid),
             Response::Admission(AdmissionReply { error: Some(e), .. }) => {
                 Err(Error::Admission(e))
             }
@@ -557,10 +774,12 @@ impl ServiceClient {
         signs: &[Vec<i8>],
         present: Option<&[bool]>,
     ) -> Result<(VoteReply, u64, Duration), Error> {
-        // Encode once: the sign matrix dominates the frame at model
-        // sizes and never changes across throttle retries, so retries
-        // resend the same bytes instead of re-cloning + re-encoding.
-        let frame = encode_frame(&Request::RoundSubmit {
+        // Encode once (in the connection's current codec): the sign
+        // matrix dominates the frame at model sizes and never changes
+        // across throttle retries, so retries resend the same bytes
+        // instead of re-cloning + re-encoding. Round submits never
+        // renegotiate, so the codec cannot change mid-loop.
+        let frame = self.encode(&Request::RoundSubmit {
             session,
             signs: signs.to_vec(),
             present: present.map(|m| m.to_vec()),
@@ -621,8 +840,8 @@ impl ServiceClient {
     /// Resume a snapshotted session on this server; returns the NEW
     /// session id granted there (ids are per-frontend, not global).
     pub fn restore_session(&mut self, snapshot: &SessionSnapshot) -> Result<SessionId, Error> {
-        match self.call(&Request::SessionRestore { snapshot: snapshot.clone() })? {
-            Response::Admission(AdmissionReply { session: Some(sid), error: None }) => Ok(sid),
+        match self.call(&Request::SessionRestore { snapshot: snapshot.clone(), codec: None })? {
+            Response::Admission(AdmissionReply { session: Some(sid), error: None, .. }) => Ok(sid),
             Response::Admission(AdmissionReply { error: Some(e), .. }) => {
                 Err(Error::Admission(e))
             }
@@ -774,7 +993,14 @@ mod tests {
         }
 
         // The same connection still works for a real request.
-        let mut client = ServiceClient { reader, writer };
+        let mut client = ServiceClient {
+            reader,
+            writer,
+            codec: Codec::Json,
+            want: Codec::Json,
+            bytes_sent: 0,
+            bytes_recv: 0,
+        };
         client.shutdown().expect("shutdown after garbage");
         server.join().expect("serve thread").expect("clean shutdown");
     }
@@ -826,6 +1052,79 @@ mod tests {
         }
         clients[0].shutdown().expect("shutdown acked");
         server.join().expect("serve thread").expect("clean shutdown");
+    }
+
+    #[test]
+    fn binary_negotiation_switches_the_connection_and_votes_match() {
+        let (addr, server) = spawn_server(AggFrontend::new(2, 1));
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let mut client =
+            ServiceClient::connect_with_codec(&addr, Codec::Binary).expect("connect");
+        assert_eq!(client.codec(), Codec::Json, "negotiation starts on JSON");
+
+        let sid = client.open_session(cfg, 5, 21, QosPolicy::unlimited()).expect("admitted");
+        assert_eq!(client.codec(), Codec::Binary, "the granting reply carries the ack");
+        client.prefetch(sid, 2).expect("prefetch over binary");
+        for r in 0..3u64 {
+            let signs = rand_signs(6, 5, 300 + r);
+            let vote = client.submit_round(sid, &signs).expect("round admitted");
+            assert_eq!(vote.global_vote, plain_hierarchical_vote(&signs, cfg));
+        }
+        // Churn rounds (mask present) and typed aborts cross the binary
+        // wire too.
+        let signs = rand_signs(6, 5, 310);
+        let mask = vec![true, true, true, true, false, true];
+        let vote = client.submit_round_present(sid, &signs, &mask).expect("churn admitted");
+        let set = ParticipantSet::from_mask(mask);
+        assert_eq!(vote.global_vote, plain_hierarchical_vote_present(&signs, &set, cfg));
+        let starved = vec![true, true, true, false, false, true];
+        match client.submit_round_present(sid, &signs, &starved) {
+            Err(Error::Admission(AdmissionError::ChurnBelowThreshold { .. })) => {}
+            other => panic!("expected a typed churn abort, got {other:?}"),
+        }
+        // Snapshot + stats round-trip the binary codec.
+        let snap = client.snapshot_session(sid).expect("snapshot");
+        assert_eq!(snap.rounds, 4);
+        let stats = client.stats(Some(sid)).expect("stats");
+        assert_eq!(stats.rounds_run, 4);
+        assert!(client.bytes_sent() > 0 && client.bytes_received() > 0);
+
+        // A plain-JSON client shares the server concurrently: the codec
+        // is per-connection, not per-process.
+        let mut old = ServiceClient::connect(&addr).expect("connect v1");
+        let sid2 = old.open_session(cfg, 5, 22, QosPolicy::unlimited()).expect("admitted");
+        assert_eq!(old.codec(), Codec::Json, "no ask, no switch");
+        let signs = rand_signs(6, 5, 320);
+        let v_old = old.submit_round(sid2, &signs).expect("round admitted");
+        assert_eq!(v_old.global_vote, plain_hierarchical_vote(&signs, cfg));
+
+        client.close_session(sid).expect("close over binary");
+        client.shutdown().expect("shutdown over binary");
+        server.join().expect("serve thread").expect("clean shutdown");
+    }
+
+    #[test]
+    fn json_policy_server_keeps_binary_askers_on_json() {
+        let server = ServiceServer::bind_with_workers(
+            "127.0.0.1:0",
+            AggFrontend::new(1, 1),
+            DEFAULT_WORKERS,
+        )
+        .expect("bind")
+        .with_codec(Codec::Json);
+        let addr = server.local_addr().expect("bound addr").to_string();
+        let handle = std::thread::spawn(move || server.serve());
+
+        let cfg = HiSafeConfig::flat(3, TiePolicy::OneBit);
+        let mut client =
+            ServiceClient::connect_with_codec(&addr, Codec::Binary).expect("connect");
+        let sid = client.open_session(cfg, 4, 5, QosPolicy::unlimited()).expect("admitted");
+        assert_eq!(client.codec(), Codec::Json, "no ack from a JSON-policy server");
+        let signs = rand_signs(3, 4, 50);
+        let vote = client.submit_round(sid, &signs).expect("round admitted");
+        assert_eq!(vote.global_vote, plain_hierarchical_vote(&signs, cfg));
+        client.shutdown().expect("shutdown acked");
+        handle.join().expect("serve thread").expect("clean shutdown");
     }
 
     #[test]

@@ -20,6 +20,13 @@ pub struct Stats {
     pub mad: Duration,
     pub iters_per_sample: u64,
     pub samples: usize,
+    /// Optional per-iteration work declaration `(count, unit)` — e.g.
+    /// `(65536.0, "elements")` or `(1536.0, "bytes")` — attached via
+    /// [`Bencher::annotate_throughput`]. When present the JSON report
+    /// carries the count, the unit, and the derived `per_sec` rate, so
+    /// `BENCH_<name>.json` records throughput trajectories (elements/sec,
+    /// bytes/round) and not just wall-clock.
+    pub items: Option<(f64, String)>,
 }
 
 impl Stats {
@@ -129,6 +136,7 @@ impl Bencher {
             mad,
             iters_per_sample: iters,
             samples: self.samples,
+            items: None,
         };
         println!("{s}");
         self.results.push(s.clone());
@@ -137,6 +145,20 @@ impl Bencher {
 
     pub fn results(&self) -> &[Stats] {
         &self.results
+    }
+
+    /// Declare how much work the MOST RECENT measurement does per
+    /// iteration — `items` of `unit` (elements, bytes, rounds, …). The
+    /// JSON report then emits the count, the unit, and the derived
+    /// `per_sec` rate alongside the wall-clock numbers. Panics if no
+    /// measurement has been added yet (an annotation with nothing to
+    /// annotate is a bench-authoring bug).
+    pub fn annotate_throughput(&mut self, items: f64, unit: &str) {
+        let last = self
+            .results
+            .last_mut()
+            .expect("annotate_throughput: no measurement to annotate");
+        last.items = Some((items, unit.to_string()));
     }
 
     /// Add a one-shot wall-clock measurement to the report. For sections
@@ -150,6 +172,7 @@ impl Bencher {
             mad: Duration::ZERO,
             iters_per_sample: 1,
             samples: 1,
+            items: None,
         });
     }
 
@@ -178,6 +201,13 @@ impl Bencher {
                             .set("mad_ns", s.mad.as_nanos() as u64)
                             .set("iters_per_sample", s.iters_per_sample)
                             .set("samples", s.samples as u64);
+                        // Throughput keys appear only on annotated
+                        // measurements (schema snapshot pins both shapes).
+                        if let Some((items, unit)) = &s.items {
+                            r.set("items_per_iter", *items)
+                                .set("unit", unit.clone())
+                                .set("per_sec", s.throughput(*items));
+                        }
                         r
                     })
                     .collect::<Vec<_>>(),
@@ -242,6 +272,8 @@ mod tests {
         b.samples = 2;
         b.bench("measured", || 1u64 + 1);
         b.record("one_shot", Duration::from_micros(250));
+        b.record("with_rate", Duration::from_micros(500));
+        b.annotate_throughput(2048.0, "bytes");
         let j = b.report_json("unit");
         let keys = |v: &Json| -> Vec<String> {
             match v {
@@ -255,18 +287,38 @@ mod tests {
             "bench report top-level schema drifted"
         );
         let results = j.get("results").unwrap().as_arr().unwrap();
-        assert_eq!(results.len(), 2);
-        for r in results {
+        assert_eq!(results.len(), 3);
+        // Un-annotated measurements keep the wall-clock-only shape…
+        for r in &results[..2] {
             assert_eq!(
                 keys(r),
                 ["iters_per_sample", "mad_ns", "median_ns", "name", "samples"],
                 "bench result schema drifted"
             );
         }
+        // …and throughput-annotated ones add exactly the three rate keys.
+        assert_eq!(
+            keys(&results[2]),
+            [
+                "items_per_iter",
+                "iters_per_sample",
+                "mad_ns",
+                "median_ns",
+                "name",
+                "per_sec",
+                "samples",
+                "unit"
+            ],
+            "annotated bench result schema drifted"
+        );
         // The one-shot record keeps its wall time and a unit sample count.
         assert_eq!(results[1].get("name").unwrap().as_str().unwrap(), "one_shot");
         assert_eq!(results[1].get("median_ns").unwrap().as_u64(), Some(250_000));
         assert_eq!(results[1].get("samples").unwrap().as_u64(), Some(1));
+        // Rate derivation: 2048 bytes / 500 µs = 4.096 MB/s.
+        assert_eq!(results[2].get("unit").unwrap().as_str().unwrap(), "bytes");
+        let rate = results[2].get("per_sec").unwrap().as_f64().unwrap();
+        assert!((rate - 4_096_000.0).abs() < 1.0, "per_sec derivation drifted: {rate}");
         // Mode is one of the two documented values, and roundtrips.
         let mode = j.get("mode").unwrap().as_str().unwrap().to_string();
         assert!(mode == "advisory" || mode == "strict");

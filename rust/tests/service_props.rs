@@ -16,7 +16,7 @@ use hisafe::protocol::{
     run_sync_with_dropouts, ChurnError, HiSafeConfig, ParticipantSet,
 };
 use hisafe::service::{
-    AdmissionReply, AggFrontend, Error, Request, Response, ServiceClient, ServiceServer,
+    AdmissionReply, AggFrontend, Codec, Error, Request, Response, ServiceClient, ServiceServer,
 };
 use hisafe::prop_assert_eq;
 use hisafe::util::prop::{forall, Gen};
@@ -522,8 +522,9 @@ fn killing_a_shard_mid_sweep_recovers_with_bit_identical_votes() {
                 d,
                 seed,
                 qos: QosPolicy::unlimited(),
+                codec: None,
             }) {
-                Response::Admission(AdmissionReply { session: Some(sid), error: None }) => sid,
+                Response::Admission(AdmissionReply { session: Some(sid), error: None, .. }) => sid,
                 other => return Err(format!("open rejected: {other:?}")),
             };
             tenants.push(Tenant { cfg, d, sid, dedicated: PipelinedEngine::new(cfg, d, seed) });
@@ -574,6 +575,145 @@ fn killing_a_shard_mid_sweep_recovers_with_bit_identical_votes() {
                 }
                 other => return Err(format!("tenant {ti} stats: {other:?}")),
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cross_codec_sessions_negotiate_correctly_and_votes_are_bit_identical() {
+    // Codec interop as a property: the wire format a connection lands on
+    // is pure transport. Three clients drive the SAME (cfg, d, seed)
+    // session shape with the same signs and churn masks every round:
+    //
+    //   1. a binary-wanting client on a binary-capable server — the
+    //      SessionOpen ask is acked and the connection negotiates up;
+    //   2. a plain v1 client on that same server — never asks, stays on
+    //      newline-delimited JSON for the connection's whole life;
+    //   3. a binary-wanting client on a `with_codec(Json)` server — the
+    //      ask is ignored and the connection stays on v1.
+    //
+    // Completed rounds must be bit-identical across all three paths and
+    // to the survivor-plaintext reference; a below-threshold mask must
+    // surface the SAME typed `ChurnBelowThreshold` on every path.
+    forall("codec negotiation ⇒ bit-identical votes (incl. churn)", 4, |g| {
+        let (addr_bin, server_bin) = spawn_server(AggFrontend::new(g.usize_range(1, 3), 1));
+        let server_json = ServiceServer::bind("127.0.0.1:0", AggFrontend::new(1, 1))
+            .expect("bind loopback")
+            .with_codec(Codec::Json);
+        let addr_json = server_json.local_addr().expect("bound addr").to_string();
+        let handle_json = std::thread::spawn(move || server_json.serve());
+
+        let mut up = ServiceClient::connect_with_codec(&addr_bin, Codec::Binary)
+            .map_err(|e| e.to_string())?;
+        let mut v1 = ServiceClient::connect(&addr_bin).map_err(|e| e.to_string())?;
+        let mut down = ServiceClient::connect_with_codec(&addr_json, Codec::Binary)
+            .map_err(|e| e.to_string())?;
+
+        let cfg = rand_cfg(g);
+        let d = g.usize_range(1, 24);
+        let seed = g.u64();
+        let sid_up = up
+            .open_session(cfg, d, seed, QosPolicy::unlimited())
+            .map_err(|e| format!("open up: {e}"))?;
+        let sid_v1 = v1
+            .open_session(cfg, d, seed, QosPolicy::unlimited())
+            .map_err(|e| format!("open v1: {e}"))?;
+        let sid_down = down
+            .open_session(cfg, d, seed, QosPolicy::unlimited())
+            .map_err(|e| format!("open down: {e}"))?;
+
+        prop_assert_eq!(up.codec(), Codec::Binary, "binary server must ack the ask");
+        prop_assert_eq!(v1.codec(), Codec::Json, "a client that never asks stays on v1");
+        prop_assert_eq!(down.codec(), Codec::Json, "a JSON-policy server never acks");
+
+        let names = ["negotiated-up", "plain-json", "negotiated-down"];
+        let mut completed = 0u64;
+        for round in 0..3u64 {
+            let signs: Vec<Vec<i8>> = (0..cfg.n).map(|_| g.sign_vec(d)).collect();
+            let mask: Vec<bool> = (0..cfg.n).map(|_| g.usize_range(0, 3) > 0).collect();
+            let present = ParticipantSet::from_mask(mask.clone());
+            let results = [
+                up.submit_round_present(sid_up, &signs, &mask),
+                v1.submit_round_present(sid_v1, &signs, &mask),
+                down.submit_round_present(sid_down, &signs, &mask),
+            ];
+            match check_thresholds(cfg, &present) {
+                Ok(()) => {
+                    completed += 1;
+                    let reference = run_sync_with_dropouts(&signs, &present, cfg, seed ^ round)
+                        .expect("thresholds hold, so the reference completes");
+                    let mut replies = Vec::with_capacity(names.len());
+                    for (name, r) in names.iter().zip(results) {
+                        let reply = r.map_err(|e| format!("{name} round {round}: {e:?}"))?;
+                        prop_assert_eq!(
+                            &reply.global_vote,
+                            &reference.global_vote,
+                            "{name} round {round} cfg={cfg:?}"
+                        );
+                        prop_assert_eq!(
+                            &reply.subgroup_votes,
+                            &reference.subgroup_votes,
+                            "{name} round {round} subgroups"
+                        );
+                        replies.push(reply);
+                    }
+                    // The three wire replies are one value: stats and
+                    // votes identical coordinate-for-coordinate.
+                    prop_assert_eq!(&replies[0], &replies[1], "round {round} up vs v1");
+                    prop_assert_eq!(&replies[0], &replies[2], "round {round} up vs down");
+                    prop_assert_eq!(
+                        &replies[0].global_vote,
+                        &plain_hierarchical_vote_present(&signs, &present, cfg),
+                        "round {round} vs survivor plaintext"
+                    );
+                }
+                Err(ref expected) => {
+                    for (name, r) in names.iter().zip(results) {
+                        match r {
+                            Err(Error::Admission(AdmissionError::ChurnBelowThreshold {
+                                group,
+                                survivors,
+                                required,
+                            })) => prop_assert_eq!(
+                                &ChurnError::BelowThreshold { group, survivors, required },
+                                expected,
+                                "{name} round {round} abort identity"
+                            ),
+                            Ok(_) => {
+                                return Err(format!(
+                                    "{name} round {round}: mask {mask:?} violates thresholds \
+                                     but the round completed"
+                                ))
+                            }
+                            Err(e) => {
+                                return Err(format!(
+                                    "{name} round {round}: expected typed churn abort, \
+                                     got {e:?}"
+                                ))
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Counter continuity is codec-independent too.
+        for (name, (c, sid)) in names.iter().zip([
+            (&mut up, sid_up),
+            (&mut v1, sid_v1),
+            (&mut down, sid_down),
+        ]) {
+            let stats = c.stats(Some(sid)).map_err(|e| format!("{name} stats: {e}"))?;
+            prop_assert_eq!(stats.rounds_run, completed, "{name} round counter");
+            c.close_session(sid).map_err(|e| format!("{name} close: {e}"))?;
+        }
+        v1.shutdown().map_err(|e| format!("shutdown bin server: {e}"))?;
+        down.shutdown().map_err(|e| format!("shutdown json server: {e}"))?;
+        for (s, which) in [(server_bin, "binary"), (handle_json, "json")] {
+            s.join()
+                .map_err(|_| format!("{which} serve thread panicked"))?
+                .map_err(|e| format!("{which} serve loop: {e}"))?;
         }
         Ok(())
     });
