@@ -12,6 +12,7 @@
 //! hisafe serve --shards 2            sharded aggregation service on loopback TCP
 //! hisafe balance --hosts A:P,B:P     fail-over balancer over several serve hosts
 //! hisafe sweep --remote 127.0.0.1:7433  the same sweep, driven over the wire
+//! hisafe sweep --chaos-seed 7        one seeded fault schedule on a real cluster
 //! hisafe demo                        Appendix-A walkthrough (n=3)
 //! ```
 
@@ -90,6 +91,11 @@ fn print_help() {
                                            (--codec binary negotiates the v2\n\
                                            length-prefixed framing; default json;\n\
                                            the report adds bytes/round)\n\
+           sweep --chaos-seed S            one deterministic fault schedule (host\n\
+                                           kill + revive, frame corruption,\n\
+                                           balancer restart, shard poison...)\n\
+                                           against an in-process cluster; replays\n\
+                                           the seed a chaos_props failure prints\n\
            serve [--addr 127.0.0.1:7433] [--shards 2] [--threads 2] [--max-tenants M]\n\
                  [--workers W] [--codec json|binary]\n\
                                            sharded aggregation service over TCP:\n\
@@ -426,6 +432,39 @@ fn sample_mask(rng: &mut hisafe::util::rng::Xoshiro256pp, n: usize, churn: f64) 
         .collect()
 }
 
+/// Run one deterministic chaos schedule (see [`hisafe::service::faults`])
+/// against a real in-process cluster — two serve hosts behind a
+/// balancer on loopback — and print its report. The seed the chaos test
+/// suite (`cargo test --test chaos_props`) prints on failure replays
+/// the identical schedule here: same tenants, same signs, same faults
+/// at the same rounds.
+fn cmd_sweep_chaos(args: &Args) -> Result<(), String> {
+    if args.has("remote") {
+        return Err("--chaos-seed runs its own in-process cluster; drop --remote".into());
+    }
+    let seed = args.get_u64("chaos-seed", 0)?;
+    let plan = hisafe::service::faults::FaultPlan::from_seed(seed);
+    println!(
+        "# chaos seed {seed}: {} tenants, {} rounds, {} scheduled fault(s)",
+        plan.tenants.len(),
+        plan.rounds,
+        plan.schedule.len()
+    );
+    for (round, fault) in &plan.schedule {
+        println!("#   round {round}: {fault:?}");
+    }
+    // `run_schedule` asserts the anchor invariants as it goes and
+    // panics with the offending context on any violation — so reaching
+    // the report line IS the verdict.
+    let report = hisafe::service::faults::run_schedule(seed);
+    println!(
+        "chaos seed {}: OK — {} vote(s) bit-identical to the reference, {} typed churn \
+         abort(s), faults applied: {:?}",
+        report.seed, report.votes_checked, report.typed_aborts, report.faults
+    );
+    Ok(())
+}
+
 /// Mixed-tenant workload on one shared scheduler: every tenant is an
 /// `AggSession` with its own `(cfg, d)` shape and QoS policy, rounds
 /// interleave round-robin, and we report per-tenant round latency,
@@ -435,8 +474,11 @@ fn sample_mask(rng: &mut hisafe::util::rng::Xoshiro256pp, n: usize, churn: f64) 
 fn cmd_sweep(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "tenants", "rounds", "threads", "seed", "out", "rps", "tps", "queue-depth",
-        "churn", "remote", "codec", "stop-server", "verbose", "threaded", "jax",
+        "churn", "remote", "codec", "stop-server", "chaos-seed", "verbose", "threaded", "jax",
     ])?;
+    if args.has("chaos-seed") {
+        return cmd_sweep_chaos(args);
+    }
     if args.has("remote") {
         return cmd_sweep_remote(args);
     }

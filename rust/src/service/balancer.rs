@@ -45,13 +45,27 @@
 //! hitting the same dead host perform one restore, not a thundering
 //! herd of duplicates.
 //!
-//! **Health.** A background thread pings every host (`StatsQuery` on
-//! the whole frontend) each `health_every`; a dead host that answers
-//! again is revived and returns to the placement rotation. Backend
-//! sessions stranded on a host that died *and later revived* are
-//! orphans (their tenants were restored elsewhere); they are bounded by
-//! the host's tenant caps and closed when the host is next recycled —
-//! the deliberate cost of keeping fail-over state purely client-side.
+//! **Health & re-join.** A background thread pings every host
+//! (`StatsQuery` on the whole frontend) each `health_every`; a dead
+//! host that answers again is revived and returns to the placement
+//! rotation. A dead→alive transition additionally triggers
+//! **reconciliation** ([`BalCore::reconcile_host`]): the balancer
+//! sweeps the revived host's live sessions (`SessionList`) and, under
+//! the restore lock, (a) re-places every table entry stranded there —
+//! the host restarted, so its backend session is gone and the entry
+//! would otherwise answer every request with a stale `UnknownSession`
+//! denial forever — and (b) discards every backend session the table
+//! no longer claims (`SessionDiscard`, *not* `SessionClose`: the
+//! session's history is owned by its restored twin elsewhere, and
+//! close would fold the stale copy's counters into the host's
+//! aggregate, double-counting those rounds in merged cluster stats).
+//!
+//! **Rebuild.** A *restarted balancer* does not start blind: before
+//! accepting clients, [`Balancer::serve`] sweeps every reachable host
+//! with `SessionList` and repopulates its session table from the
+//! host-side snapshots (fresh client ids; clients re-discover theirs
+//! by matching `(cfg, d, seed)` in the balancer's own `SessionList`
+//! reply, which is answered locally from the table).
 //!
 //! **Concurrency.** One persistent backend connection per host (a
 //! mutex serializes requests to that host — matching the per-host
@@ -67,9 +81,9 @@
 //! winds down the whole cluster (the CI smoke asserts every process
 //! exits cleanly).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io;
-use std::net::{SocketAddr, TcpListener};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
@@ -79,7 +93,10 @@ use crate::metrics::AdmissionStats;
 
 use super::error::Error;
 use super::frontend::{rendezvous_rank, tenant_key};
-use super::proto::{AdmissionReply, Codec, ProtoError, Request, Response, SnapshotReply, StatsReply};
+use super::proto::{
+    AdmissionReply, Codec, ProtoError, Request, Response, SessionListReply, SnapshotReply,
+    StatsReply,
+};
 use super::server::{serve_frames, FrameHandler, ServiceClient, DEFAULT_WORKERS};
 
 /// One backend host: its address, liveness flag, the codec its
@@ -209,6 +226,18 @@ impl BalCore {
             };
             match self.hosts[host].call(&make(backend)) {
                 Err(Error::Io(_)) => self.failover(client_sid, host, backend)?,
+                // The host answers but lost the session: it restarted
+                // between health pings (the "unknown session" phrasing
+                // is pinned by `error.rs`). The entry is stranded —
+                // restore it exactly like a transport fail-over. A
+                // session the *client* never opened can't reach here:
+                // the table lookup above already screened it.
+                Ok(Response::Admission(AdmissionReply {
+                    error: Some(AdmissionError::Rejected { ref reason }),
+                    ..
+                })) if reason.starts_with("unknown session") => {
+                    self.failover(client_sid, host, backend)?;
+                }
                 other => return other,
             }
         }
@@ -321,6 +350,20 @@ impl BalCore {
                 }),
                 None => error_reply(Some(*session), Error::UnknownSession(*session)),
             },
+            // Answered locally from the table: this is how clients
+            // re-discover their sessions (by `(cfg, d, seed)` match)
+            // after a balancer restart rebuilt the table under fresh
+            // client ids.
+            Request::SessionList => {
+                let sessions = self.lock_sessions();
+                Response::Sessions(SessionListReply {
+                    sessions: sessions
+                        .iter()
+                        .map(|(sid, bs)| SnapshotReply { session: *sid, snapshot: bs.snap.clone() })
+                        .collect(),
+                })
+            }
+            Request::SessionDiscard { session } => self.discard(*session),
             Request::Shutdown => {
                 // Wind down the whole cluster: every live backend gets
                 // the shutdown, best-effort, then the balancer stops.
@@ -336,6 +379,10 @@ impl BalCore {
     }
 
     fn open(&self, snap: SessionSnapshot) -> Response {
+        // Serialized with fail-over and reconciliation: a placement
+        // that raced a host sweep could be adopted twice (once by the
+        // open, once re-placed by the sweep that didn't see it yet).
+        let _serial = self.restore.lock().unwrap_or_else(|p| p.into_inner());
         match self.place(&snap) {
             Ok((host, backend_sid)) => {
                 let sid = SessionId::new(self.next_session.fetch_add(1, Ordering::Relaxed));
@@ -347,6 +394,9 @@ impl BalCore {
     }
 
     fn close(&self, client_sid: SessionId) -> Response {
+        // Serialized with reconciliation so a sweep never re-places a
+        // session that is mid-close.
+        let _serial = self.restore.lock().unwrap_or_else(|p| p.into_inner());
         let bs = match self.lock_sessions().remove(&client_sid) {
             Some(bs) => bs,
             None => return error_reply(Some(client_sid), Error::UnknownSession(client_sid)),
@@ -354,6 +404,88 @@ impl BalCore {
         // Best-effort: a dead host's sessions are already gone.
         let _ = self.hosts[bs.host].call(&Request::SessionClose { session: bs.backend_sid });
         Response::Admission(AdmissionReply::ok(Some(client_sid)))
+    }
+
+    /// The discard analogue of [`close`](BalCore::close): drop the
+    /// session everywhere *without* folding its counters anywhere.
+    fn discard(&self, client_sid: SessionId) -> Response {
+        let _serial = self.restore.lock().unwrap_or_else(|p| p.into_inner());
+        let bs = match self.lock_sessions().remove(&client_sid) {
+            Some(bs) => bs,
+            None => return error_reply(Some(client_sid), Error::UnknownSession(client_sid)),
+        };
+        let _ = self.hosts[bs.host].call(&Request::SessionDiscard { session: bs.backend_sid });
+        Response::Admission(AdmissionReply::ok(Some(client_sid)))
+    }
+
+    /// Reconcile a host that just came back from the dead (see the
+    /// module docs). Serialized with fail-over restores by the same
+    /// lock, so an entry is never re-placed twice concurrently.
+    fn reconcile_host(&self, host: usize) {
+        let _serial = self.restore.lock().unwrap_or_else(|p| p.into_inner());
+        // What the revived host actually holds. A failed sweep means
+        // the host died again mid-revive: the next dead→alive
+        // transition will retry.
+        let listed: BTreeSet<SessionId> = match self.hosts[host].call(&Request::SessionList) {
+            Ok(Response::Sessions(r)) => r.sessions.iter().map(|e| e.session).collect(),
+            _ => return,
+        };
+        // What the table still claims there (collected without holding
+        // the sessions lock across backend calls).
+        let claimed: Vec<(SessionId, SessionId, SessionSnapshot)> = self
+            .lock_sessions()
+            .iter()
+            .filter(|(_, bs)| bs.host == host)
+            .map(|(sid, bs)| (*sid, bs.backend_sid, bs.snap.clone()))
+            .collect();
+        // (a) Stranded entries: the host restarted and lost them.
+        // Re-place from the balancer's snapshot — the revived host is
+        // back in the placement order, so the session may well land
+        // right back where rendezvous wants it.
+        for (client_sid, backend_sid, snap) in &claimed {
+            if listed.contains(backend_sid) {
+                continue;
+            }
+            if let Ok((new_host, new_sid)) = self.place(snap) {
+                if let Some(bs) = self.lock_sessions().get_mut(client_sid) {
+                    bs.host = new_host;
+                    bs.backend_sid = new_sid;
+                }
+            }
+        }
+        // (b) Stale backend sessions nobody claims: their tenants were
+        // restored elsewhere while the host was down. Discard — never
+        // close — so the twin's continuous counters stay the only copy.
+        let claimed_backends: BTreeSet<SessionId> =
+            claimed.iter().map(|(_, backend, _)| *backend).collect();
+        for stale in listed.difference(&claimed_backends) {
+            let _ = self.hosts[host].call(&Request::SessionDiscard { session: *stale });
+        }
+    }
+
+    /// Repopulate an empty session table from host-side state: sweep
+    /// every reachable host with `SessionList` and adopt each listed
+    /// session under a fresh client id. This is what lets a restarted
+    /// balancer pick up a live cluster instead of starting blind.
+    fn rebuild_sessions(&self) {
+        for (host, handle) in self.hosts.iter().enumerate() {
+            let listed = match handle.call(&Request::SessionList) {
+                Ok(Response::Sessions(r)) => r.sessions,
+                _ => continue, // dead host: its sessions fail over on first touch
+            };
+            let mut sessions = self.lock_sessions();
+            for e in listed {
+                let already = sessions
+                    .values()
+                    .any(|bs| bs.backend_sid == e.session && bs.host == host);
+                if already {
+                    continue;
+                }
+                let sid = SessionId::new(self.next_session.fetch_add(1, Ordering::Relaxed));
+                sessions
+                    .insert(sid, BalSession { host, backend_sid: e.session, snap: e.snapshot });
+            }
+        }
     }
 
     /// Cluster-wide stats: the fold of every live host's frontend-wide
@@ -482,22 +614,41 @@ impl Balancer {
         self.listener.local_addr()
     }
 
+    /// A handle that can stop *this balancer process* from another
+    /// thread without winding down the backends (unlike the protocol's
+    /// `Shutdown`, which fans out to the whole cluster). This is what a
+    /// balancer-restart drill uses: stop the old balancer, keep the
+    /// hosts, bind a fresh one and let
+    /// [`rebuild`](BalCore::rebuild_sessions) repopulate its table.
+    pub fn stop_handle(&self) -> io::Result<BalancerHandle> {
+        Ok(BalancerHandle { stop: Arc::clone(&self.stop), addr: self.local_addr()? })
+    }
+
     /// Accept-and-route until a client sends `Shutdown` (which also
-    /// winds down every live backend). Client connections are served by
-    /// the shared bounded connection-worker pump
-    /// ([`super::server::serve_frames`]); the health thread runs for
-    /// the duration and is joined before this returns.
+    /// winds down every live backend) or a [`BalancerHandle`] stops
+    /// this process. Before accepting, the session table is rebuilt
+    /// from host-side state (a no-op sweep on a fresh cluster). Client
+    /// connections are served by the shared bounded connection-worker
+    /// pump ([`super::server::serve_frames`]); the health thread runs
+    /// for the duration and is joined before this returns.
     pub fn serve(self) -> io::Result<()> {
+        self.core.rebuild_sessions();
         let health = {
             let core = Arc::clone(&self.core);
             let stop = Arc::clone(&self.stop);
             let every = self.health_every;
             std::thread::spawn(move || {
                 while !stop.load(Ordering::SeqCst) {
-                    for host in &core.hosts {
+                    for (i, host) in core.hosts.iter().enumerate() {
                         // A successful ping revives a dead host (call()
-                        // flips `alive` on success, reconnecting first).
+                        // flips `alive` on success, reconnecting first);
+                        // a dead→alive transition reconciles the host's
+                        // sessions against the table (see module docs).
+                        let before = host.alive.load(Ordering::SeqCst);
                         let _ = host.call(&Request::StatsQuery { session: None });
+                        if !before && host.alive.load(Ordering::SeqCst) {
+                            core.reconcile_host(i);
+                        }
                     }
                     std::thread::sleep(every);
                 }
@@ -516,6 +667,25 @@ impl Balancer {
     }
 }
 
+/// Stops one balancer process (flag + self-connect to wake the accept
+/// loop) without touching the backends. Obtained from
+/// [`Balancer::stop_handle`] before `serve` consumes the balancer.
+pub struct BalancerHandle {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl BalancerHandle {
+    /// Stop the balancer's accept loop and workers. Idempotent;
+    /// `serve()` returns `Ok` after the in-flight sweep completes.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept; an error just means the listener
+        // already closed.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -526,6 +696,7 @@ mod tests {
     };
     use crate::service::{AggFrontend, ServiceServer};
     use crate::util::rng::{Rng, Xoshiro256pp};
+    use std::time::Instant;
 
     fn rand_signs(n: usize, d: usize, seed: u64) -> Vec<Vec<i8>> {
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
@@ -541,10 +712,18 @@ mod tests {
     fn spawn_balancer(
         hosts: &[String],
     ) -> (String, std::thread::JoinHandle<io::Result<()>>) {
+        let (addr, _stopper, handle) = spawn_balancer_with_stopper(hosts);
+        (addr, handle)
+    }
+
+    fn spawn_balancer_with_stopper(
+        hosts: &[String],
+    ) -> (String, BalancerHandle, std::thread::JoinHandle<io::Result<()>>) {
         let bal =
             Balancer::bind("127.0.0.1:0", hosts, Duration::from_millis(20)).expect("bind bal");
         let addr = bal.local_addr().expect("addr").to_string();
-        (addr, std::thread::spawn(move || bal.serve()))
+        let stopper = bal.stop_handle().expect("stop handle");
+        (addr, stopper, std::thread::spawn(move || bal.serve()))
     }
 
     #[test]
@@ -662,6 +841,245 @@ mod tests {
         client.shutdown().expect("shutdown acked");
         bal.join().expect("balancer thread").expect("balancer clean exit");
         h0.join().expect("h0 thread").expect("h0 clean exit");
+    }
+
+    #[test]
+    fn revived_host_rejoins_and_stranded_sessions_reconcile() {
+        // One host, so the kill strands the session with nowhere to
+        // fail over: only the health thread's dead→alive reconciliation
+        // can bring it back.
+        let (a0, h0) = spawn_backend();
+        let (bal_addr, bal) = spawn_balancer(&[a0.clone()]);
+
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let (d, seed) = (5usize, 11u64);
+        let mut client = ServiceClient::connect(&bal_addr).expect("connect balancer");
+        let sid = client.open_session(cfg, d, seed, QosPolicy::unlimited()).expect("admitted");
+        for r in 0..2u64 {
+            let signs = rand_signs(6, d, 600 + r);
+            let vote = client.submit_round(sid, &signs).expect("round admitted");
+            assert_eq!(vote.global_vote, plain_hierarchical_vote(&signs, cfg));
+        }
+
+        // Kill the only host out from under the session...
+        let mut killer = ServiceClient::connect(&a0).expect("connect host");
+        killer.shutdown().expect("host shutdown acked");
+        h0.join().expect("host thread").expect("host clean exit");
+        // ...and revive it at the same address with a fresh (empty)
+        // frontend, exactly as a restarted `hisafe serve` would.
+        let revived = ServiceServer::bind(&a0, AggFrontend::new(2, 1)).expect("rebind host addr");
+        let h0 = std::thread::spawn(move || revived.serve());
+
+        // Without touching the session, wait for the health ping to see
+        // the dead→alive transition and reconcile: the stranded entry
+        // is re-placed from the balancer's snapshot onto the revived
+        // host, counters continuous. (Cluster stats skip dead hosts and
+        // the revived host starts empty, so `rounds_run == 2` is
+        // observable only once the re-placement happened.)
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let stats = client.stats(None).expect("cluster stats");
+            if stats.rounds_run == 2 {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "health thread never reconciled the revived host"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        // The session keeps going bit-identically under its old id.
+        let signs = rand_signs(6, d, 602);
+        let vote = client.submit_round(sid, &signs).expect("round survives the re-join");
+        assert_eq!(vote.global_vote, plain_hierarchical_vote(&signs, cfg));
+        assert_eq!(vote.session, sid, "replies carry the client's id");
+        let snap = client.snapshot_session(sid).expect("snapshot");
+        assert_eq!(snap.rounds, 3);
+        let stats = client.stats(Some(sid)).expect("session stats");
+        assert_eq!(stats.rounds_run, 3, "restored counters are continuous");
+
+        client.close_session(sid).expect("close acked");
+        client.shutdown().expect("cluster shutdown acked");
+        bal.join().expect("balancer thread").expect("balancer clean exit");
+        h0.join().expect("revived host thread").expect("revived host clean exit");
+    }
+
+    #[test]
+    fn restarted_balancer_rebuilds_its_session_table() {
+        let (a0, h0) = spawn_backend();
+        let (a1, h1) = spawn_backend();
+        let hosts = vec![a0, a1];
+        let (bal_addr, stopper, bal) = spawn_balancer_with_stopper(&hosts);
+
+        let cfg = HiSafeConfig::hierarchical(4, 2, TiePolicy::OneBit);
+        let d = 4usize;
+        let mut client = ServiceClient::connect(&bal_addr).expect("connect balancer");
+        let seeds = [21u64, 22, 23];
+        let sids: Vec<SessionId> = seeds
+            .iter()
+            .map(|&s| client.open_session(cfg, d, s, QosPolicy::unlimited()).expect("admitted"))
+            .collect();
+        for (i, &sid) in sids.iter().enumerate() {
+            for r in 0..2u64 {
+                let signs = rand_signs(4, d, 700 + 10 * i as u64 + r);
+                let vote = client.submit_round(sid, &signs).expect("round admitted");
+                assert_eq!(vote.global_vote, plain_hierarchical_vote(&signs, cfg));
+            }
+        }
+
+        // Stop the balancer *process*; the backends — and their
+        // sessions — stay up.
+        stopper.stop();
+        bal.join().expect("balancer thread").expect("balancer clean exit");
+        drop(client);
+
+        // A fresh balancer on a fresh port rebuilds its table from the
+        // hosts before accepting clients.
+        let (bal_addr, bal) = spawn_balancer(&hosts);
+        let mut client = ServiceClient::connect(&bal_addr).expect("connect new balancer");
+        let listed = match client.call(&Request::SessionList).expect("session list") {
+            Response::Sessions(r) => r.sessions,
+            other => panic!("expected a session list, got {other:?}"),
+        };
+        assert_eq!(listed.len(), seeds.len(), "the rebuilt table holds every live session");
+        // Clients re-discover their sessions by (cfg, d, seed): the ids
+        // are fresh, the snapshots are the hosts' authoritative state.
+        let rediscovered: Vec<SessionId> = seeds
+            .iter()
+            .map(|&s| {
+                let e = listed
+                    .iter()
+                    .find(|e| e.snapshot.cfg == cfg && e.snapshot.d == d && e.snapshot.seed == s)
+                    .expect("session rediscovered by tenant identity");
+                assert_eq!(e.snapshot.rounds, 2, "rebuilt snapshots carry the round counts");
+                e.session
+            })
+            .collect();
+        for (i, &sid) in rediscovered.iter().enumerate() {
+            let signs = rand_signs(4, d, 730 + i as u64);
+            let vote = client.submit_round(sid, &signs).expect("round survives the restart");
+            assert_eq!(vote.global_vote, plain_hierarchical_vote(&signs, cfg));
+            assert_eq!(vote.session, sid, "replies carry the fresh client id");
+            let stats = client.stats(Some(sid)).expect("session stats");
+            assert_eq!(stats.rounds_run, 3, "backend counters were never interrupted");
+        }
+        for &sid in &rediscovered {
+            client.close_session(sid).expect("close acked");
+        }
+        client.shutdown().expect("cluster shutdown acked");
+        bal.join().expect("balancer thread").expect("balancer clean exit");
+        h0.join().expect("h0 thread").expect("h0 clean exit");
+        h1.join().expect("h1 thread").expect("h1 clean exit");
+    }
+
+    #[test]
+    fn displaced_then_restored_session_counts_exactly_once_in_cluster_stats() {
+        // Drive the routing core directly so the test can stage the
+        // nasty interleaving: a host partitioned from the balancer
+        // (marked dead) while its backend session stays alive — the
+        // stale-copy scenario reconciliation's discard-not-close rule
+        // exists for.
+        let (a0, h0) = spawn_backend();
+        let (a1, h1) = spawn_backend();
+        let core = BalCore {
+            hosts: vec![HostHandle::new(a0, Codec::Binary), HostHandle::new(a1, Codec::Binary)],
+            sessions: Mutex::new(BTreeMap::new()),
+            restore: Mutex::new(()),
+            next_session: AtomicU64::new(0),
+        };
+
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+        let (d, seed) = (5usize, 13u64);
+        let sid = match core.handle(&Request::SessionOpen {
+            cfg,
+            d,
+            seed,
+            qos: QosPolicy::unlimited(),
+            codec: None,
+        }) {
+            (Response::Admission(AdmissionReply { session: Some(sid), error: None, .. }), false) => {
+                sid
+            }
+            other => panic!("expected an admission, got {other:?}"),
+        };
+        let victim = rendezvous_rank(tenant_key(&cfg, d, seed), 2)[0];
+        let survivor = 1 - victim;
+
+        let submit = |core: &BalCore, r: u64| {
+            let signs = rand_signs(6, d, 800 + r);
+            match core.handle(&Request::RoundSubmit {
+                session: sid,
+                signs: signs.clone(),
+                present: None,
+            }) {
+                (Response::Vote(v), false) => {
+                    assert_eq!(v.global_vote, plain_hierarchical_vote(&signs, cfg));
+                }
+                other => panic!("round {r}: expected a vote, got {other:?}"),
+            }
+        };
+        submit(&core, 0);
+        submit(&core, 1);
+
+        // Partition the victim: the balancer believes it dead and fails
+        // the session over, but the victim process — and its now-stale
+        // backend session, counters at 2 — keeps running.
+        core.hosts[victim].alive.store(false, Ordering::SeqCst);
+        let (old_host, old_backend) = {
+            let sessions = core.lock_sessions();
+            let bs = sessions.get(&sid).expect("tracked");
+            (bs.host, bs.backend_sid)
+        };
+        assert_eq!(old_host, victim, "rendezvous placed the session on the victim");
+        core.failover(sid, victim, old_backend).expect("failed over to the survivor");
+        assert_eq!(core.lock_sessions().get(&sid).expect("tracked").host, survivor);
+        submit(&core, 2);
+        submit(&core, 3);
+
+        // While partitioned, merged stats count the displaced session
+        // exactly once: the survivor's restored (continuous) counters,
+        // the dead victim contributing nothing.
+        match core.cluster_stats() {
+            Response::Stats(s) => assert_eq!(s.rounds_run, 4),
+            other => panic!("expected stats, got {other:?}"),
+        }
+
+        // Heal the partition and reconcile: the stale copy on the
+        // victim is *discarded*, not closed — closing would fold its 2
+        // rounds into the victim's aggregate and double-count them next
+        // to the restored twin's continuous 4.
+        core.hosts[victim].alive.store(true, Ordering::SeqCst);
+        core.reconcile_host(victim);
+        match core.hosts[victim].call(&Request::StatsQuery { session: None }) {
+            Ok(Response::Stats(s)) => {
+                assert_eq!(s.rounds_run, 0, "the discarded stale copy folded nothing");
+            }
+            other => panic!("expected victim stats, got {other:?}"),
+        }
+        match core.cluster_stats() {
+            Response::Stats(s) => {
+                assert_eq!(s.rounds_run, 4, "exactly once across displacement and restore");
+            }
+            other => panic!("expected stats, got {other:?}"),
+        }
+
+        // Close folds the survivor's counters; the total is still 4.
+        match core.handle(&Request::SessionClose { session: sid }) {
+            (Response::Admission(AdmissionReply { error: None, .. }), false) => {}
+            other => panic!("expected a close ack, got {other:?}"),
+        }
+        match core.cluster_stats() {
+            Response::Stats(s) => assert_eq!(s.rounds_run, 4, "close folds, never double-counts"),
+            other => panic!("expected stats, got {other:?}"),
+        }
+
+        match core.handle(&Request::Shutdown) {
+            (Response::Admission(_), true) => {}
+            other => panic!("expected a shutdown ack, got {other:?}"),
+        }
+        h0.join().expect("h0 thread").expect("h0 clean exit");
+        h1.join().expect("h1 thread").expect("h1 clean exit");
     }
 
     #[test]

@@ -45,7 +45,8 @@ use crate::engine::{AdmissionError, QosPolicy, SessionId, SessionSnapshot};
 use crate::metrics::CommStats;
 use crate::poly::TiePolicy;
 use crate::service::proto::{
-    AdmissionReply, Codec, ProtoError, Request, Response, SnapshotReply, StatsReply, VoteReply,
+    AdmissionReply, Codec, ProtoError, Request, Response, SessionListReply, SnapshotReply,
+    StatsReply, VoteReply,
 };
 
 /// First byte of every binary frame. Never the first byte of a JSON
@@ -365,6 +366,13 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             w.snapshot(snapshot);
             w.codec(*codec);
         }
+        Request::SessionList => {
+            w = W::new(9);
+        }
+        Request::SessionDiscard { session } => {
+            w = W::new(10);
+            w.sid(*session);
+        }
         Request::Shutdown => {
             w = W::new(8);
         }
@@ -429,6 +437,14 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
             w = W::new(4);
             w.sid(r.session);
             w.snapshot(&r.snapshot);
+        }
+        Response::Sessions(r) => {
+            w = W::new(5);
+            w.u32(u32::try_from(r.sessions.len()).expect("too many listed sessions"));
+            for e in &r.sessions {
+                w.sid(e.session);
+                w.snapshot(&e.snapshot);
+            }
         }
     }
     w.finish()
@@ -663,6 +679,8 @@ pub fn decode_request(payload: &[u8]) -> Result<Request, ProtoError> {
         6 => Request::SessionSnapshot { session: r.sid()? },
         7 => Request::SessionRestore { snapshot: r.snapshot()?, codec: r.codec()? },
         8 => Request::Shutdown,
+        9 => Request::SessionList,
+        10 => Request::SessionDiscard { session: r.sid()? },
         other => return Err(perr(format!("unknown binary request tag {other}"))),
     };
     r.done()?;
@@ -722,6 +740,14 @@ pub fn decode_response(payload: &[u8]) -> Result<Response, ProtoError> {
             })
         }
         4 => Response::Snapshot(SnapshotReply { session: r.sid()?, snapshot: r.snapshot()? }),
+        5 => {
+            let n = r.u32()? as usize;
+            let mut sessions = Vec::with_capacity(n);
+            for _ in 0..n {
+                sessions.push(SnapshotReply { session: r.sid()?, snapshot: r.snapshot()? });
+            }
+            Response::Sessions(SessionListReply { sessions })
+        }
         other => return Err(perr(format!("unknown binary response tag {other}"))),
     };
     r.done()?;

@@ -1,0 +1,724 @@
+//! Deterministic, seeded chaos harness for the whole service stack.
+//!
+//! A [`FaultPlan`] is a **pure function of a u64 seed**: it scripts a
+//! small cluster topology (two `serve` hosts of two shards each behind
+//! one balancer), a handful of tenants, and a per-round schedule of
+//! injectable [`Fault`]s — kill a host mid-sweep, revive it later,
+//! truncate or corrupt a frame mid-write, duplicate a read, poison a
+//! shard, restart the balancer. [`run_schedule`] then executes the plan
+//! against a *real* in-process cluster (real TCP on loopback, the real
+//! pump, the real balancer) and asserts the anchor invariant after
+//! every fault:
+//!
+//! * every client-observed vote is **bit-identical** to the plaintext
+//!   reference ([`plain_hierarchical_vote`] /
+//!   [`plain_hierarchical_vote_present`], which `run_sync` is pinned to
+//!   elsewhere) over the plan's survivor sets;
+//! * below-threshold churn rounds abort with the same **typed**
+//!   [`AdmissionError::ChurnBelowThreshold`] the local engine raises;
+//! * no schedule wedges the connection-worker pump (the run ends with a
+//!   clean cluster-wide shutdown whose serve loops all join `Ok`);
+//! * no schedule leaks sessions (every host drains to
+//!   `live_sessions() == 0` and the balancer's table empties).
+//!
+//! Everything is reproducible from the seed alone: the signs, the
+//! masks, the fault rounds, and the tenant shapes are all drawn from
+//! one [`Xoshiro256pp`] stream. `rust/tests/chaos_props.rs` sweeps
+//! seeds (override with `HISAFE_CHAOS_SEED=<seed>` to replay one);
+//! `hisafe sweep --chaos-seed <seed>` runs a single schedule from the
+//! CLI and prints its [`ChaosReport`].
+//!
+//! [`plain_hierarchical_vote`]: crate::protocol::plain_hierarchical_vote
+//! [`plain_hierarchical_vote_present`]: crate::protocol::plain_hierarchical_vote_present
+//! [`AdmissionError::ChurnBelowThreshold`]: crate::engine::AdmissionError::ChurnBelowThreshold
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::engine::{AdmissionError, QosPolicy, SessionId};
+use crate::poly::TiePolicy;
+use crate::protocol::{
+    group_threshold, plain_hierarchical_vote, plain_hierarchical_vote_present, HiSafeConfig,
+    ParticipantSet,
+};
+use crate::util::rng::{Rng, Xoshiro256pp};
+
+use super::balancer::Balancer;
+use super::binary;
+use super::frontend::AggFrontend;
+use super::proto::{Request, Response};
+use super::server::{ServiceClient, ServiceServer};
+use super::Error;
+
+/// Hosts in every chaos topology (each with [`SHARDS`] scheduler shards).
+pub const HOSTS: usize = 2;
+/// Scheduler shards per host.
+pub const SHARDS: usize = 2;
+/// Tenants (sessions) per schedule.
+pub const TENANTS: usize = 2;
+
+/// One injectable fault. Faults are applied *before* the submissions of
+/// the round they are scheduled at, in schedule order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Stop a serve host's process (clean transport death: its listener
+    /// closes and every connection to it breaks).
+    KillHost {
+        /// Index of the host to kill (< [`HOSTS`]).
+        host: usize,
+    },
+    /// Restart the killed host on the **same address** with a fresh
+    /// (empty) frontend — the re-join case the balancer must reconcile.
+    ReviveHost {
+        /// Index of the host to revive.
+        host: usize,
+    },
+    /// Stop the balancer (only it — the backends keep running) and bind
+    /// a fresh one over the same host list: its session table must
+    /// rebuild from host-side snapshots, and clients re-discover their
+    /// sessions via `SessionList`.
+    RestartBalancer,
+    /// Poison one scheduler shard on a live host (in-process
+    /// `kill_shard`): the frontend's shard-death absorption must restore
+    /// the shard's sessions transparently with bit-identical votes.
+    PoisonShard {
+        /// Host whose frontend loses a shard.
+        host: usize,
+        /// Shard index to poison (< [`SHARDS`]).
+        shard: usize,
+    },
+    /// A frame whose binary header is broken (bad framing version): the
+    /// pump must answer typed, then drop *that* connection only.
+    CorruptHeader,
+    /// A well-framed payload of garbage bytes: typed reject, and the
+    /// connection survives to serve the next frame.
+    CorruptPayload,
+    /// A frame header promising more payload than is ever written, then
+    /// a mid-frame disconnect: the pump must drop the connection without
+    /// wedging a worker.
+    TruncateFrame,
+    /// Issue the same cluster-wide stats read twice back-to-back (the
+    /// duplicated-delivery case): the read path must be idempotent.
+    DuplicateStats,
+    /// Sleep briefly mid-schedule, letting the health/reconcile cadence
+    /// interleave differently with the round stream.
+    DelayRound {
+        /// Milliseconds to sleep.
+        ms: u64,
+    },
+    /// Run this round as a churn round for one tenant: either a
+    /// survivor set above every subgroup's threshold (vote checked
+    /// against the present-set reference) or one starved below it
+    /// (typed abort checked).
+    ChurnRound {
+        /// Tenant whose round runs under a dropout mask.
+        tenant: usize,
+        /// Starve subgroup 0 below its reconstruction threshold.
+        below_threshold: bool,
+    },
+}
+
+impl Fault {
+    /// Stable kind label, for coverage accounting across a seed sweep.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Fault::KillHost { .. } => "kill_host",
+            Fault::ReviveHost { .. } => "revive_host",
+            Fault::RestartBalancer => "restart_balancer",
+            Fault::PoisonShard { .. } => "poison_shard",
+            Fault::CorruptHeader => "corrupt_header",
+            Fault::CorruptPayload => "corrupt_payload",
+            Fault::TruncateFrame => "truncate_frame",
+            Fault::DuplicateStats => "duplicate_stats",
+            Fault::DelayRound { .. } => "delay_round",
+            Fault::ChurnRound { .. } => "churn_round",
+        }
+    }
+}
+
+/// One tenant's session shape, drawn from the plan seed.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantPlan {
+    /// Protocol configuration (small n so schedules stay fast).
+    pub cfg: HiSafeConfig,
+    /// Gradient dimension.
+    pub d: usize,
+    /// Session seed. Distinct per tenant within a plan, so sessions are
+    /// matchable by `(cfg, d, seed)` after a balancer rebuild.
+    pub seed: u64,
+}
+
+/// A deterministic chaos schedule: pure function of the seed, no clock,
+/// no ambient randomness — the same seed always builds the same plan,
+/// which is what makes every `chaos_props` failure replayable.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// The seed the plan was derived from.
+    pub seed: u64,
+    /// Tenant session shapes ([`TENANTS`] of them).
+    pub tenants: Vec<TenantPlan>,
+    /// Rounds every tenant submits.
+    pub rounds: u64,
+    /// `(round, fault)` pairs, applied before that round's submissions
+    /// in vector order.
+    pub schedule: Vec<(u64, Fault)>,
+}
+
+impl FaultPlan {
+    /// Derive the full schedule from `seed`. Invariants the derivation
+    /// guarantees: exactly one kill and one revive of the same host,
+    /// kill before (or at the same round as) revive, at least one round
+    /// after the revive, never more than one host down, and at least
+    /// one frame-level fault per plan.
+    pub fn from_seed(seed: u64) -> FaultPlan {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xc0a5_f00d_5eed_cafe);
+        let tenants = (0..TENANTS as u64)
+            .map(|t| {
+                let cfg = match rng.gen_below(4) {
+                    0 => HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit),
+                    1 => HiSafeConfig::hierarchical(4, 2, TiePolicy::OneBit),
+                    2 => HiSafeConfig::flat(3, TiePolicy::OneBit),
+                    _ => HiSafeConfig::flat(4, TiePolicy::OneBit),
+                };
+                TenantPlan {
+                    cfg,
+                    d: 3 + rng.gen_below(4) as usize,
+                    // Distinct by construction: tenant index in the low
+                    // bits, a plan-level draw above them.
+                    seed: (rng.gen_below(1 << 20) << 8) | t,
+                }
+            })
+            .collect();
+        let rounds = 5 + rng.gen_below(4); // 5..=8
+        let mut schedule: Vec<(u64, Fault)> = Vec::new();
+
+        // The guaranteed kill/revive pair. `immediate` revives in the
+        // same round slot as the kill: the balancer never serves a
+        // round against the dead host, so its table entries are
+        // *stranded* on the restarted host — exercising re-join
+        // reconciliation rather than request-driven fail-over.
+        let victim = rng.gen_below(HOSTS as u64) as usize;
+        let kill_at = 1 + rng.gen_below(rounds - 3); // 1..=rounds-3
+        let immediate = rng.gen_below(4) == 0;
+        let revive_at = if immediate {
+            kill_at
+        } else {
+            kill_at + 1 + rng.gen_below(rounds - 1 - kill_at) // ..=rounds-1
+        };
+        schedule.push((kill_at, Fault::KillHost { host: victim }));
+        schedule.push((revive_at, Fault::ReviveHost { host: victim }));
+
+        // One frame-level fault per plan, against the balancer's pump.
+        let frame_fault = match rng.gen_below(3) {
+            0 => Fault::CorruptHeader,
+            1 => Fault::CorruptPayload,
+            _ => Fault::TruncateFrame,
+        };
+        schedule.push((rng.gen_below(rounds), frame_fault));
+
+        // Seed-dependent extras.
+        if !immediate && rng.gen_below(2) == 0 {
+            // Only after a *non-immediate* revive: by then every tenant
+            // has failed over onto the survivor (each round touches all
+            // of them), so host-side state covers the whole table and
+            // the rebuild sweep loses nothing. An immediate kill+revive
+            // leaves sessions whose only copy is the old balancer's
+            // snapshot — restarting it then would forget them, which is
+            // a documented limit, not a recovery bug.
+            schedule.push((revive_at, Fault::RestartBalancer));
+        }
+        if rng.gen_below(2) == 0 {
+            // Poison a shard on whichever host is guaranteed alive at
+            // that round: the non-victim always is.
+            schedule.push((
+                rng.gen_below(rounds),
+                Fault::PoisonShard {
+                    host: (victim + 1) % HOSTS,
+                    shard: rng.gen_below(SHARDS as u64) as usize,
+                },
+            ));
+        }
+        if rng.gen_below(2) == 0 {
+            schedule.push((rng.gen_below(rounds), Fault::DuplicateStats));
+        }
+        if rng.gen_below(2) == 0 {
+            schedule.push((rng.gen_below(rounds), Fault::DelayRound { ms: 1 + rng.gen_below(10) }));
+        }
+        if rng.gen_below(2) == 0 {
+            schedule.push((
+                rng.gen_below(rounds),
+                Fault::ChurnRound {
+                    tenant: rng.gen_below(TENANTS as u64) as usize,
+                    below_threshold: rng.gen_below(2) == 0,
+                },
+            ));
+        }
+        // Stable-sort by round so per-round application preserves the
+        // push order above (kill before revive before restart).
+        schedule.sort_by_key(|(round, _)| *round);
+        FaultPlan { seed, tenants, rounds, schedule }
+    }
+
+    /// The faults scheduled at `round`, in application order.
+    fn at(&self, round: u64) -> impl Iterator<Item = &Fault> {
+        self.schedule.iter().filter(move |(r, _)| *r == round).map(|(_, f)| f)
+    }
+}
+
+/// What a completed schedule did — returned (rather than printed) so
+/// the CLI and the test suite can both account coverage.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    /// The schedule's seed.
+    pub seed: u64,
+    /// Rounds in the plan.
+    pub rounds: u64,
+    /// Client-observed votes checked bit-identical to the reference.
+    pub votes_checked: u64,
+    /// Typed below-threshold churn aborts observed.
+    pub typed_aborts: u64,
+    /// Kind labels ([`Fault::kind`]) of every fault applied, in order.
+    pub faults: Vec<&'static str>,
+}
+
+/// Deterministic per-round sign matrix for one tenant.
+fn round_signs(plan_seed: u64, tenant: usize, round: u64, n: usize, d: usize) -> Vec<Vec<i8>> {
+    let mut rng = Xoshiro256pp::seed_from_u64(
+        plan_seed ^ 0x5169_7e5a ^ ((tenant as u64) << 40) ^ (round << 8),
+    );
+    (0..n).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect()
+}
+
+/// One running serve host the harness can kill and revive in place.
+struct Host {
+    addr: String,
+    frontend: Arc<AggFrontend>,
+    handle: Option<std::thread::JoinHandle<std::io::Result<()>>>,
+    alive: bool,
+}
+
+fn spawn_host(addr: &str) -> Host {
+    let server = ServiceServer::bind(addr, AggFrontend::new(SHARDS, 1))
+        .unwrap_or_else(|e| panic!("chaos host bind {addr}: {e}"));
+    let addr = server.local_addr().expect("host addr").to_string();
+    let frontend = server.frontend();
+    let handle = std::thread::spawn(move || server.serve());
+    Host { addr, frontend, handle: Some(handle), alive: true }
+}
+
+/// The health-ping cadence: short, so dead→alive reconciliation runs
+/// well inside a schedule's lifetime.
+const HEALTH_EVERY: Duration = Duration::from_millis(10);
+
+struct Bal {
+    addr: String,
+    stopper: super::BalancerHandle,
+    handle: std::thread::JoinHandle<std::io::Result<()>>,
+}
+
+fn spawn_balancer(hosts: &[String]) -> Bal {
+    let bal = Balancer::bind("127.0.0.1:0", hosts, HEALTH_EVERY).expect("chaos balancer bind");
+    let addr = bal.local_addr().expect("balancer addr").to_string();
+    let stopper = bal.stop_handle().expect("balancer stop handle");
+    let handle = std::thread::spawn(move || bal.serve());
+    Bal { addr, stopper, handle }
+}
+
+/// Read one length-framed binary reply off a raw socket.
+fn read_binary_reply(stream: &mut TcpStream) -> Vec<u8> {
+    let mut hdr = [0u8; binary::HEADER_LEN];
+    stream.read_exact(&mut hdr).expect("binary reply header");
+    let len = binary::parse_header(&hdr).expect("reply header parses");
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload).expect("binary reply payload");
+    payload
+}
+
+fn injector_socket(addr: &str) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("injector connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+    s
+}
+
+/// Bad framing version: the pump must answer typed *then* drop this
+/// connection (without a trustworthy length there is no next frame
+/// boundary).
+fn inject_corrupt_header(addr: &str) {
+    let mut s = injector_socket(addr);
+    s.write_all(&[binary::MAGIC, binary::VERSION + 7, 16, 0, 0, 0]).expect("write bad header");
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf); // server replies, then EOF
+    assert!(!buf.is_empty(), "a corrupt header earns a typed reject before the drop");
+}
+
+/// Well-framed garbage payload: typed reject, and the same connection
+/// then serves a real (JSON) request — per-frame codec detection means
+/// the pump never lost the frame boundary.
+fn inject_corrupt_payload(addr: &str) {
+    let mut s = injector_socket(addr);
+    s.write_all(&binary::frame(&[0xEE, 0xEE, 0xEE])).expect("write garbage payload");
+    let payload = read_binary_reply(&mut s);
+    match binary::decode_response(&payload).expect("reject decodes") {
+        Response::Admission(reply) => {
+            assert!(reply.error.is_some(), "garbage payload must be denied, not acked")
+        }
+        other => panic!("expected a typed reject, got {other:?}"),
+    }
+    let mut line = Request::StatsQuery { session: None }.to_json().to_string_compact();
+    line.push('\n');
+    s.write_all(line.as_bytes()).expect("write follow-up stats");
+    let mut byte = [0u8; 1];
+    let mut reply = Vec::new();
+    loop {
+        s.read_exact(&mut byte).expect("read follow-up reply");
+        if byte[0] == b'\n' {
+            break;
+        }
+        reply.push(byte[0]);
+    }
+    assert!(
+        !reply.is_empty(),
+        "the connection must survive a malformed payload and serve the next frame"
+    );
+}
+
+/// Header promising bytes that never arrive, then a disconnect: the
+/// pump drops the connection; the caller's next round proves no worker
+/// wedged waiting for the missing payload.
+fn inject_truncated_frame(addr: &str) {
+    let mut s = injector_socket(addr);
+    s.write_all(&[binary::MAGIC, binary::VERSION, 64, 0, 0, 0]).expect("write header");
+    s.write_all(&[0u8; 8]).expect("write partial payload");
+    // Drop mid-frame.
+}
+
+/// A dropout mask for `plan`'s tenant: survivors stay above every
+/// subgroup threshold unless `below_threshold`, which starves subgroup
+/// 0 to exactly one survivor short.
+fn churn_mask(cfg: HiSafeConfig, below_threshold: bool) -> Vec<bool> {
+    let n1 = cfg.n1();
+    let required = group_threshold(n1) + 1;
+    let mut mask = vec![true; cfg.n];
+    if below_threshold {
+        // Subgroup 0 is users 0..n1 (contiguous partition): keep only
+        // `required - 1` of them.
+        for bit in mask.iter_mut().take(n1 - (required - 1)) {
+            *bit = false;
+        }
+    } else {
+        // Drop one member of subgroup 0; every shape the plans draw
+        // keeps `n1 - 1 >= required`.
+        mask[0] = false;
+    }
+    mask
+}
+
+/// Execute the schedule for `seed` against a real loopback cluster and
+/// assert every invariant. Panics (with the offending context) on any
+/// violation — the caller prints the seed, which replays the identical
+/// schedule.
+pub fn run_schedule(seed: u64) -> ChaosReport {
+    let plan = FaultPlan::from_seed(seed);
+    let mut report = ChaosReport {
+        seed,
+        rounds: plan.rounds,
+        votes_checked: 0,
+        typed_aborts: 0,
+        faults: Vec::new(),
+    };
+
+    let mut hosts: Vec<Host> = (0..HOSTS).map(|_| spawn_host("127.0.0.1:0")).collect();
+    let host_addrs: Vec<String> = hosts.iter().map(|h| h.addr.clone()).collect();
+    let mut bal = spawn_balancer(&host_addrs);
+    let mut client = ServiceClient::connect(&bal.addr).expect("chaos client connect");
+
+    let mut sids: Vec<SessionId> = plan
+        .tenants
+        .iter()
+        .map(|t| {
+            client
+                .open_session(t.cfg, t.d, t.seed, QosPolicy::unlimited())
+                .unwrap_or_else(|e| panic!("seed {seed}: open failed: {e}"))
+        })
+        .collect();
+    let mut observed_rounds = vec![0u64; plan.tenants.len()];
+
+    for round in 0..plan.rounds {
+        let mut churned: Option<(usize, bool)> = None;
+        for fault in plan.at(round) {
+            report.faults.push(fault.kind());
+            match fault {
+                Fault::KillHost { host } => {
+                    let h = &mut hosts[*host];
+                    assert!(h.alive, "seed {seed}: plan kills an already-dead host");
+                    let mut killer = ServiceClient::connect(&h.addr).expect("killer connect");
+                    killer.shutdown().unwrap_or_else(|e| panic!("seed {seed}: kill: {e}"));
+                    h.handle
+                        .take()
+                        .expect("host handle")
+                        .join()
+                        .expect("host thread")
+                        .expect("killed host exits cleanly");
+                    h.alive = false;
+                }
+                Fault::ReviveHost { host } => {
+                    let addr = hosts[*host].addr.clone();
+                    assert!(!hosts[*host].alive, "seed {seed}: plan revives a live host");
+                    hosts[*host] = spawn_host(&addr);
+                    // Give the health cadence room to notice the
+                    // dead→alive flip and reconcile; correctness must
+                    // not depend on it (request-driven fail-over covers
+                    // the gap), but most schedules should exercise the
+                    // reconcile path itself.
+                    std::thread::sleep(HEALTH_EVERY * 3);
+                }
+                Fault::RestartBalancer => {
+                    bal.stopper.stop();
+                    bal.handle.join().expect("balancer thread").expect("balancer stops cleanly");
+                    bal = spawn_balancer(&host_addrs);
+                    client = ServiceClient::connect(&bal.addr).expect("reconnect after restart");
+                    // The rebuilt table hands out fresh client ids:
+                    // re-discover ours by (cfg, d, seed) — and check
+                    // the rebuilt restore points match every round the
+                    // old balancer acknowledged to us.
+                    let listed = match client.call(&Request::SessionList) {
+                        Ok(Response::Sessions(r)) => r.sessions,
+                        other => panic!("seed {seed}: session list after restart: {other:?}"),
+                    };
+                    for (t, tenant) in plan.tenants.iter().enumerate() {
+                        let entry = listed
+                            .iter()
+                            .find(|e| {
+                                e.snapshot.cfg == tenant.cfg
+                                    && e.snapshot.d == tenant.d
+                                    && e.snapshot.seed == tenant.seed
+                            })
+                            .unwrap_or_else(|| {
+                                panic!("seed {seed}: tenant {t} lost across balancer restart")
+                            });
+                        assert_eq!(
+                            entry.snapshot.rounds, observed_rounds[t],
+                            "seed {seed}: rebuilt restore point disagrees with \
+                             client-observed rounds for tenant {t}"
+                        );
+                        sids[t] = entry.session;
+                    }
+                }
+                Fault::PoisonShard { host, shard } => {
+                    if hosts[*host].alive {
+                        hosts[*host].frontend.kill_shard(*shard);
+                    }
+                }
+                Fault::CorruptHeader => inject_corrupt_header(&bal.addr),
+                Fault::CorruptPayload => inject_corrupt_payload(&bal.addr),
+                Fault::TruncateFrame => inject_truncated_frame(&bal.addr),
+                Fault::DuplicateStats => {
+                    let first = client.stats(None).expect("first stats read");
+                    let second = client.stats(None).expect("duplicate stats read");
+                    assert!(
+                        second.rounds_run >= first.rounds_run,
+                        "seed {seed}: duplicated stats read went backwards \
+                         ({} then {})",
+                        first.rounds_run,
+                        second.rounds_run
+                    );
+                }
+                Fault::DelayRound { ms } => std::thread::sleep(Duration::from_millis(*ms)),
+                Fault::ChurnRound { tenant, below_threshold } => {
+                    churned = Some((*tenant, *below_threshold));
+                }
+            }
+        }
+
+        for (t, tenant) in plan.tenants.iter().enumerate() {
+            let signs = round_signs(plan.seed, t, round, tenant.cfg.n, tenant.d);
+            match churned {
+                Some((ct, below)) if ct == t => {
+                    let mask = churn_mask(tenant.cfg, below);
+                    if below {
+                        let n1 = tenant.cfg.n1();
+                        let required = group_threshold(n1) + 1;
+                        match client.submit_round_present(sids[t], &signs, &mask) {
+                            Err(Error::Admission(AdmissionError::ChurnBelowThreshold {
+                                group: 0,
+                                survivors,
+                                required: r,
+                            })) if survivors == required - 1 && r == required => {
+                                report.typed_aborts += 1;
+                            }
+                            other => panic!(
+                                "seed {seed}: tenant {t} round {round}: expected a typed \
+                                 below-threshold abort, got {other:?}"
+                            ),
+                        }
+                    } else {
+                        let vote = client
+                            .submit_round_present(sids[t], &signs, &mask)
+                            .unwrap_or_else(|e| {
+                                panic!("seed {seed}: tenant {t} churn round {round}: {e}")
+                            });
+                        let set = ParticipantSet::from_mask(mask);
+                        assert_eq!(
+                            vote.global_vote,
+                            plain_hierarchical_vote_present(&signs, &set, tenant.cfg),
+                            "seed {seed}: tenant {t} round {round}: churn vote diverged"
+                        );
+                        report.votes_checked += 1;
+                        observed_rounds[t] += 1;
+                    }
+                }
+                _ => {
+                    let vote = client.submit_round(sids[t], &signs).unwrap_or_else(|e| {
+                        panic!("seed {seed}: tenant {t} round {round}: {e}")
+                    });
+                    assert_eq!(
+                        vote.global_vote,
+                        plain_hierarchical_vote(&signs, tenant.cfg),
+                        "seed {seed}: tenant {t} round {round}: vote diverged from run_sync's \
+                         reference"
+                    );
+                    assert_eq!(vote.session, sids[t], "replies carry the client's id");
+                    report.votes_checked += 1;
+                    observed_rounds[t] += 1;
+                }
+            }
+        }
+    }
+
+    // Every restore is continuous and every displaced session counted
+    // once: the cluster-wide round total equals exactly what this
+    // client observed, no matter which hosts died under it.
+    let total: u64 = observed_rounds.iter().sum();
+    let stats = client.stats(None).expect("final cluster stats");
+    assert_eq!(
+        stats.rounds_run, total,
+        "seed {seed}: cluster stats lost or double-counted rounds across the schedule"
+    );
+
+    for (t, &sid) in sids.iter().enumerate() {
+        let snap = client
+            .snapshot_session(sid)
+            .unwrap_or_else(|e| panic!("seed {seed}: tenant {t} snapshot: {e}"));
+        assert_eq!(snap.rounds, observed_rounds[t], "seed {seed}: restore point drifted");
+        client
+            .close_session(sid)
+            .unwrap_or_else(|e| panic!("seed {seed}: tenant {t} close: {e}"));
+    }
+
+    // Zero leaked sessions, everywhere: the balancer's table is empty
+    // and every host drains (reconciliation discards are asynchronous,
+    // so poll briefly instead of asserting an instant).
+    match client.call(&Request::SessionList) {
+        Ok(Response::Sessions(r)) => assert!(
+            r.sessions.is_empty(),
+            "seed {seed}: balancer leaked sessions: {:?}",
+            r.sessions.iter().map(|e| e.session).collect::<Vec<_>>()
+        ),
+        other => panic!("seed {seed}: final session list: {other:?}"),
+    }
+    let deadline = Instant::now() + Duration::from_secs(5);
+    for (i, host) in hosts.iter().enumerate() {
+        loop {
+            let live = host.frontend.live_sessions();
+            if live == 0 {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "seed {seed}: host {i} leaked {live} session(s) after close + reconcile"
+            );
+            std::thread::sleep(HEALTH_EVERY);
+        }
+    }
+
+    // A wedged pump cannot ack this shutdown or join cleanly — the
+    // clean cluster-wide teardown is the no-wedge assertion.
+    client.shutdown().expect("cluster shutdown acked");
+    bal.handle.join().expect("balancer thread").expect("balancer clean exit");
+    for (i, host) in hosts.iter_mut().enumerate() {
+        host.handle
+            .take()
+            .expect("host handle")
+            .join()
+            .unwrap_or_else(|e| panic!("seed {seed}: host {i} thread: {e:?}"))
+            .unwrap_or_else(|e| panic!("seed {seed}: host {i} dirty exit: {e}"));
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_pure_functions_of_the_seed() {
+        for seed in 0..64 {
+            let a = FaultPlan::from_seed(seed);
+            let b = FaultPlan::from_seed(seed);
+            assert_eq!(a.rounds, b.rounds);
+            assert_eq!(a.schedule, b.schedule);
+            assert_eq!(
+                a.tenants.iter().map(|t| (t.cfg, t.d, t.seed)).collect::<Vec<_>>(),
+                b.tenants.iter().map(|t| (t.cfg, t.d, t.seed)).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn plans_keep_the_cluster_recoverable() {
+        for seed in 0..256 {
+            let plan = FaultPlan::from_seed(seed);
+            let kills: Vec<(u64, usize)> = plan
+                .schedule
+                .iter()
+                .filter_map(|(r, f)| match f {
+                    Fault::KillHost { host } => Some((*r, *host)),
+                    _ => None,
+                })
+                .collect();
+            let revives: Vec<(u64, usize)> = plan
+                .schedule
+                .iter()
+                .filter_map(|(r, f)| match f {
+                    Fault::ReviveHost { host } => Some((*r, *host)),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(kills.len(), 1, "exactly one kill per plan");
+            assert_eq!(revives.len(), 1, "exactly one revive per plan");
+            assert_eq!(kills[0].1, revives[0].1, "the killed host is the revived one");
+            assert!(kills[0].0 <= revives[0].0, "kill precedes revive");
+            assert!(revives[0].0 < plan.rounds, "at least one round after the revive");
+            // Poison only ever lands on the non-victim, which the plan
+            // keeps alive throughout.
+            for (_, fault) in &plan.schedule {
+                if let Fault::PoisonShard { host, .. } = fault {
+                    assert_ne!(*host, kills[0].1, "poison targets a live host");
+                }
+            }
+            // Tenants are distinguishable after a balancer rebuild.
+            assert_ne!(plan.tenants[0].seed, plan.tenants[1].seed);
+        }
+    }
+
+    #[test]
+    fn churn_masks_hit_both_sides_of_the_threshold() {
+        for cfg in [
+            HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit),
+            HiSafeConfig::hierarchical(4, 2, TiePolicy::OneBit),
+            HiSafeConfig::flat(3, TiePolicy::OneBit),
+            HiSafeConfig::flat(4, TiePolicy::OneBit),
+        ] {
+            let n1 = cfg.n1();
+            let required = group_threshold(n1) + 1;
+            let ok = churn_mask(cfg, false);
+            let starved = churn_mask(cfg, true);
+            let g0_ok = ok.iter().take(n1).filter(|&&m| m).count();
+            let g0_starved = starved.iter().take(n1).filter(|&&m| m).count();
+            assert!(g0_ok >= required, "above-threshold mask must stay reconstructible");
+            assert_eq!(g0_starved, required - 1, "starved mask is one short exactly");
+        }
+    }
+}

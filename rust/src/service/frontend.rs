@@ -117,7 +117,9 @@ use crate::metrics::AdmissionStats;
 use crate::protocol::{HiSafeConfig, ParticipantSet};
 
 use super::error::Error;
-use super::proto::{AdmissionReply, Request, Response, SnapshotReply, StatsReply, VoteReply};
+use super::proto::{
+    AdmissionReply, Request, Response, SessionListReply, SnapshotReply, StatsReply, VoteReply,
+};
 
 /// SplitMix64 finalizer: a full-avalanche 64-bit mixer (public-domain
 /// constants from Steele et al.), the hash primitive for rendezvous
@@ -780,6 +782,17 @@ impl AggFrontend {
                     None => error_reply(Some(*session), Error::UnknownSession(*session)),
                 }
             }
+            Request::SessionList => {
+                let router = self.lock_router();
+                Response::Sessions(SessionListReply {
+                    sessions: router
+                        .sessions
+                        .iter()
+                        .map(|(sid, m)| SnapshotReply { session: *sid, snapshot: m.snapshot() })
+                        .collect(),
+                })
+            }
+            Request::SessionDiscard { session } => self.discard_session(*session),
             // The frontend just acks; stopping the accept loop is the
             // transport layer's job (see `service::server`).
             Request::Shutdown => Response::Admission(AdmissionReply::ok(None)),
@@ -824,6 +837,30 @@ impl AggFrontend {
                 }
             }
         }
+        drop(removed); // deregisters from the shard's plane
+        self.retire_if_drained(meta.shard);
+        Response::Admission(AdmissionReply::ok(Some(sid)))
+    }
+
+    /// Remove a session *without* folding its counters into the
+    /// frontend-wide closed aggregates. `SessionClose` folds because the
+    /// session's history belongs to this frontend; a discarded session is
+    /// a stale copy whose history is owned by its restored twin elsewhere
+    /// in the cluster — folding it here would double-count those rounds
+    /// in merged `cluster_stats`.
+    fn discard_session(&self, sid: SessionId) -> Response {
+        let meta = match self.lock_router().sessions.remove(&sid) {
+            Some(m) => m,
+            None => return error_reply(Some(sid), Error::UnknownSession(sid)),
+        };
+        let removed = {
+            let mut st = self.lock_shard(meta.shard);
+            let r = st.sessions.remove(&sid);
+            if r.is_some() {
+                self.shards[meta.shard].tenants.fetch_sub(1, Ordering::SeqCst);
+            }
+            r
+        };
         drop(removed); // deregisters from the shard's plane
         self.retire_if_drained(meta.shard);
         Response::Admission(AdmissionReply::ok(Some(sid)))

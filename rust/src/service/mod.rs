@@ -2,7 +2,7 @@
 //! serializable request/response protocol instead of in-process method
 //! calls — now a multi-process *cluster*, not just a single server.
 //!
-//! Six files, six responsibilities:
+//! Seven files, seven responsibilities:
 //!
 //! * [`proto`] — the versioned wire protocol: [`Request`] / [`Response`]
 //!   values with lossless JSON encodings ([`QosPolicy`],
@@ -31,8 +31,16 @@
 //!   [`train_remote`](crate::fl::trainer::train_remote)).
 //! * [`balancer`] — [`Balancer`] (`hisafe balance`): a fail-over load
 //!   balancer fronting several `serve` hosts, with health checks,
-//!   dead-host detection, and snapshot-based session fail-over that
-//!   keeps votes bit-identical across a mid-sweep host kill.
+//!   dead-host detection, snapshot-based session fail-over that keeps
+//!   votes bit-identical across a mid-sweep host kill, host re-join
+//!   reconciliation, and session-table rebuild after a balancer
+//!   restart.
+//! * [`faults`] — the deterministic chaos harness: a seeded
+//!   [`FaultPlan`](faults::FaultPlan) scripting host kills/revives,
+//!   frame corruption/truncation, shard poison, and balancer restarts
+//!   against a real in-process cluster, asserting the bit-identical
+//!   vote invariant and zero leaked sessions after every schedule
+//!   (`rust/tests/chaos_props.rs`, `hisafe sweep --chaos-seed`).
 //!
 //! The layering means "remote" is a transport decision, not a protocol
 //! fork: the same [`AggFrontend`] serves in-process embedding (call
@@ -51,15 +59,16 @@
 pub mod balancer;
 pub mod binary;
 pub mod error;
+pub mod faults;
 pub mod frontend;
 pub mod proto;
 pub mod server;
 
-pub use balancer::Balancer;
+pub use balancer::{Balancer, BalancerHandle};
 pub use error::Error;
 pub use frontend::AggFrontend;
 pub use proto::{
-    AdmissionReply, Codec, ProtoError, Request, Response, SnapshotReply, StatsReply, VoteReply,
-    PROTOCOL_VERSION,
+    AdmissionReply, Codec, ProtoError, Request, Response, SessionListReply, SnapshotReply,
+    StatsReply, VoteReply, PROTOCOL_VERSION,
 };
 pub use server::{ServiceClient, ServiceServer};

@@ -205,6 +205,26 @@ pub enum Request {
         /// sessions, so the backend leg negotiates here.
         codec: Option<Codec>,
     },
+    /// List every live session as `(id, snapshot)` pairs (answered with
+    /// [`Response::Sessions`]). This is the cluster-recovery sweep: a
+    /// restarted balancer rebuilds its session table from each host's
+    /// list, and a revived host is reconciled against it (stale backend
+    /// sessions discarded, stranded tenants re-placed). A new message
+    /// type, not a version bump — an old peer answers with a typed
+    /// `unknown request type` rejection, which recovery treats as "no
+    /// list available".
+    SessionList,
+    /// Drop a session *without* folding its counters into the
+    /// frontend-wide aggregate — the reconciliation twin of
+    /// [`Request::SessionClose`]. Used for a stale copy whose tenant was
+    /// restored elsewhere: the restored session's counters are
+    /// continuous (they include every pre-failover round), so folding
+    /// the stale copy too would double-count its rounds in
+    /// cluster-level stats.
+    SessionDiscard {
+        /// Session id granted by `SessionOpen`.
+        session: SessionId,
+    },
     /// Ask the server process to stop accepting connections and exit
     /// its serve loop (acknowledged with an empty [`AdmissionReply`]).
     /// Open sessions are dropped; this is the clean-shutdown path the
@@ -224,6 +244,10 @@ pub enum Response {
     Stats(StatsReply),
     /// A session's serializable state, for `Request::SessionSnapshot`.
     Snapshot(SnapshotReply),
+    /// Every live session's `(id, snapshot)` pair, for
+    /// `Request::SessionList` (each entry is exactly a
+    /// [`SnapshotReply`]'s payload).
+    Sessions(SessionListReply),
 }
 
 /// One admitted round's outcome — the wire form of
@@ -304,6 +328,16 @@ pub struct SnapshotReply {
     pub session: SessionId,
     /// Everything needed to resume it elsewhere.
     pub snapshot: SessionSnapshot,
+}
+
+/// Every live session's restorable state — the answer to
+/// [`Request::SessionList`]. A balancer rebuilding after a restart
+/// sweeps this off every host; the revive path reconciles a returning
+/// host's list against the balancer's own table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionListReply {
+    /// One `(id, snapshot)` entry per live session, in session-id order.
+    pub sessions: Vec<SnapshotReply>,
 }
 
 // ---------------------------------------------------------------- encode
@@ -474,6 +508,12 @@ impl Request {
                 }
                 j
             }
+            Request::SessionList => base("session_list"),
+            Request::SessionDiscard { session } => {
+                let mut j = base("session_discard");
+                j.set("session", sid_json(*session));
+                j
+            }
             Request::Shutdown => base("shutdown"),
         }
     }
@@ -524,6 +564,10 @@ impl Request {
                 snapshot: parse_snapshot(j)?,
                 codec: parse_codec(j)?,
             }),
+            "session_list" => Ok(Request::SessionList),
+            "session_discard" => {
+                Ok(Request::SessionDiscard { session: parse_sid(j, "session")? })
+            }
             "shutdown" => Ok(Request::Shutdown),
             other => Err(ProtoError::new(format!("unknown request type '{other}'"))),
         }
@@ -578,6 +622,24 @@ impl Response {
                 let mut j = base("snapshot_reply");
                 j.set("session", sid_json(r.session));
                 set_snapshot_fields(&mut j, &r.snapshot);
+                j
+            }
+            Response::Sessions(r) => {
+                let mut j = base("session_list_reply");
+                let entries = r
+                    .sessions
+                    .iter()
+                    .map(|e| {
+                        // Each entry is a SnapshotReply's payload without
+                        // the message envelope: the session id plus the
+                        // flattened snapshot fields.
+                        let mut entry = Json::obj();
+                        entry.set("session", sid_json(e.session));
+                        set_snapshot_fields(&mut entry, &e.snapshot);
+                        entry
+                    })
+                    .collect();
+                j.set("sessions", Json::Arr(entries));
                 j
             }
         }
@@ -647,6 +709,21 @@ impl Response {
                 session: parse_sid(j, "session")?,
                 snapshot: parse_snapshot(j)?,
             })),
+            "session_list_reply" => {
+                let arr = field(j, "sessions")?
+                    .as_arr()
+                    .ok_or_else(|| ProtoError::new("'sessions' must be an array"))?;
+                let sessions = arr
+                    .iter()
+                    .map(|e| {
+                        Ok(SnapshotReply {
+                            session: parse_sid(e, "session")?,
+                            snapshot: parse_snapshot(e)?,
+                        })
+                    })
+                    .collect::<Result<Vec<SnapshotReply>, ProtoError>>()?;
+                Ok(Response::Sessions(SessionListReply { sessions }))
+            }
             other => Err(ProtoError::new(format!("unknown response type '{other}'"))),
         }
     }
@@ -957,7 +1034,7 @@ pub(crate) mod testgen {
     pub(crate) fn rand_request(g: &mut Gen) -> Request {
         let cfg = rand_cfg(g);
         let d = g.usize_range(0, 40);
-        match g.range(0, 8) {
+        match g.range(0, 10) {
             0 => Request::SessionOpen {
                 cfg,
                 d,
@@ -987,13 +1064,15 @@ pub(crate) mod testgen {
                 snapshot: rand_snapshot(g),
                 codec: rand_opt_codec(g),
             },
+            7 => Request::SessionList,
+            8 => Request::SessionDiscard { session: rand_sid(g) },
             _ => Request::Shutdown,
         }
     }
 
     /// One random [`Response`], covering every variant.
     pub(crate) fn rand_response(g: &mut Gen) -> Response {
-        match g.range(0, 3) {
+        match g.range(0, 4) {
             0 => {
                 let ell = g.usize_range(1, 4);
                 let d = g.usize_range(0, 40);
@@ -1020,6 +1099,11 @@ pub(crate) mod testgen {
             2 => Response::Snapshot(SnapshotReply {
                 session: rand_sid(g),
                 snapshot: rand_snapshot(g),
+            }),
+            3 => Response::Sessions(SessionListReply {
+                sessions: (0..g.usize_range(0, 4))
+                    .map(|_| SnapshotReply { session: rand_sid(g), snapshot: rand_snapshot(g) })
+                    .collect(),
             }),
             _ => Response::Stats(StatsReply {
                 session: if g.bool() { Some(rand_sid(g)) } else { None },
@@ -1224,6 +1308,11 @@ mod tests {
             keys(&restore_bin),
             ["cfg", "codec", "d", "qos", "rounds", "seed", "type", "v"]
         );
+        assert_eq!(keys(&Request::SessionList.to_json()), ["type", "v"]);
+        assert_eq!(
+            keys(&Request::SessionDiscard { session: sid }.to_json()),
+            ["session", "type", "v"]
+        );
         assert_eq!(keys(&Request::Shutdown.to_json()), ["type", "v"]);
 
         let vote = Response::Vote(VoteReply {
@@ -1302,11 +1391,22 @@ mod tests {
         );
 
         let snapshot_reply =
-            Response::Snapshot(SnapshotReply { session: sid, snapshot: snap }).to_json();
+            Response::Snapshot(SnapshotReply { session: sid, snapshot: snap.clone() }).to_json();
         assert_eq!(
             keys(&snapshot_reply),
             ["cfg", "d", "qos", "rounds", "seed", "session", "type", "v"]
         );
+
+        // The recovery-sweep list: each entry repeats the snapshot_reply
+        // payload (sans envelope), so host-side snapshots and listed
+        // snapshots can never drift apart.
+        let list = Response::Sessions(SessionListReply {
+            sessions: vec![SnapshotReply { session: sid, snapshot: snap }],
+        })
+        .to_json();
+        assert_eq!(keys(&list), ["sessions", "type", "v"]);
+        let entries = list.get("sessions").unwrap().as_arr().unwrap();
+        assert_eq!(keys(&entries[0]), ["cfg", "d", "qos", "rounds", "seed", "session"]);
     }
 
     #[test]

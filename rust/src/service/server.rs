@@ -183,6 +183,13 @@ impl ServiceServer {
         self.listener.local_addr()
     }
 
+    /// A handle on the frontend behind this server. The chaos harness
+    /// ([`service::faults`](crate::service::faults)) uses it to poison
+    /// shards and probe `live_sessions()` from outside the wire.
+    pub fn frontend(&self) -> Arc<AggFrontend> {
+        Arc::clone(&self.frontend)
+    }
+
     /// Accept-and-dispatch until a client sends `Shutdown`: the accept
     /// loop registers connections, the worker pool serves them, and a
     /// shutdown request stops both (the pool is joined before this
@@ -499,9 +506,13 @@ fn request_session(req: &Request) -> Option<SessionId> {
         Request::RoundSubmit { session, .. }
         | Request::Prefetch { session, .. }
         | Request::SessionClose { session }
+        | Request::SessionDiscard { session }
         | Request::SessionSnapshot { session } => Some(*session),
         Request::StatsQuery { session } => *session,
-        Request::SessionOpen { .. } | Request::SessionRestore { .. } | Request::Shutdown => None,
+        Request::SessionOpen { .. }
+        | Request::SessionRestore { .. }
+        | Request::SessionList
+        | Request::Shutdown => None,
     }
 }
 
@@ -1051,6 +1062,102 @@ mod tests {
             client.close_session(sid).expect("close acked");
         }
         clients[0].shutdown().expect("shutdown acked");
+        server.join().expect("serve thread").expect("clean shutdown");
+    }
+
+    #[test]
+    fn corrupt_binary_frames_are_contained_to_their_connection() {
+        // Companion to the chaos harness (`service::faults`): a corrupt
+        // or truncated binary frame arriving mid-session costs a typed
+        // reject (bad payload) or the one guilty connection (bad
+        // header, truncation) — never a worker, and never the other
+        // connections multiplexed on the same 2-worker pool.
+        let (addr, server) = spawn_server_with_workers(AggFrontend::new(2, 1), 2);
+        let cfg = HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit);
+
+        // A few idle connections that must stay serviceable throughout.
+        let mut idle: Vec<ServiceClient> =
+            (0..4).map(|_| ServiceClient::connect(&addr).expect("connect idle")).collect();
+
+        // The victim connection: a real session, mid-lifecycle.
+        let client = {
+            let mut client = ServiceClient::connect(&addr).expect("connect");
+            let sid = client.open_session(cfg, 5, 17, QosPolicy::unlimited()).expect("admitted");
+            let signs = rand_signs(6, 5, 900);
+            let vote = client.submit_round(sid, &signs).expect("round admitted");
+            assert_eq!(vote.global_vote, plain_hierarchical_vote(&signs, cfg));
+
+            // Mid-session, the same connection emits a binary frame
+            // whose header is valid but whose payload is garbage: the
+            // reply is a typed *binary* rejection (replies ride the
+            // codec of the frame they answer) and the connection — and
+            // session — stay up.
+            let ServiceClient { mut reader, mut writer, .. } = client;
+            writer.write_all(&binary::frame(&[0xEE, 0xEE, 0xEE])).expect("write bad payload");
+            let mut hdr = [0u8; binary::HEADER_LEN];
+            reader.read_exact(&mut hdr).expect("binary reply header");
+            let len = binary::parse_header(&hdr).expect("reply header parses");
+            let mut payload = vec![0u8; len];
+            reader.read_exact(&mut payload).expect("binary reply payload");
+            match binary::decode_response(&payload).expect("reply decodes") {
+                Response::Admission(AdmissionReply { error: Some(_), .. }) => {}
+                other => panic!("expected a typed binary rejection, got {other:?}"),
+            }
+            // Rebuild the client on the same streams; `sid` is live.
+            let mut client = ServiceClient {
+                reader,
+                writer,
+                codec: Codec::Json,
+                want: Codec::Json,
+                bytes_sent: 0,
+                bytes_recv: 0,
+            };
+
+            // Prove the session survived before the other faults land.
+            let signs = rand_signs(6, 5, 901);
+            let vote = client.submit_round(sid, &signs).expect("round after bad payload");
+            assert_eq!(vote.global_vote, plain_hierarchical_vote(&signs, cfg));
+            (client, sid)
+        };
+        let (mut client, sid) = client;
+
+        // A second connection truncates a frame and vanishes: the
+        // header promises 64 bytes, 8 arrive, the peer hangs up.
+        {
+            let mut t = TcpStream::connect(&addr).expect("connect truncator");
+            let mut frame = binary::frame(&[0u8; 64]);
+            frame.truncate(binary::HEADER_LEN + 8);
+            t.write_all(&frame).expect("write truncated frame");
+        }
+
+        // A third connection sends a corrupt header (bad version):
+        // typed reject, then the server drops the connection — with no
+        // trustworthy length there is no frame boundary to resync on.
+        {
+            let mut c = TcpStream::connect(&addr).expect("connect corruptor");
+            c.set_read_timeout(Some(Duration::from_secs(10))).expect("timeout");
+            c.write_all(&[binary::MAGIC, binary::VERSION + 7, 16, 0, 0, 0])
+                .expect("write bad header");
+            let mut rest = Vec::new();
+            c.read_to_end(&mut rest).expect("reject then EOF");
+            assert!(!rest.is_empty(), "a typed reject precedes the disconnect");
+        }
+
+        // Neither worker wedged: the victim keeps voting bit-identically
+        // and every idle connection still serves.
+        let signs = rand_signs(6, 5, 902);
+        let vote = client.submit_round(sid, &signs).expect("round after the faults");
+        assert_eq!(vote.global_vote, plain_hierarchical_vote(&signs, cfg));
+        let stats = client.stats(Some(sid)).expect("session stats");
+        assert_eq!(stats.rounds_run, 3, "the garbage frames billed nothing");
+        client.close_session(sid).expect("close acked");
+        for (i, c) in idle.iter_mut().enumerate() {
+            let s = c
+                .open_session(cfg, 5, 200 + i as u64, QosPolicy::unlimited())
+                .expect("idle connection still admitted");
+            c.close_session(s).expect("close acked");
+        }
+        client.shutdown().expect("shutdown acked");
         server.join().expect("serve thread").expect("clean shutdown");
     }
 

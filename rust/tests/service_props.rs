@@ -6,7 +6,9 @@
 //! client) — and invalid QoS policies must be the same typed rejection
 //! on the wire path as on the in-process path.
 
-use hisafe::engine::{AdmissionError, AggScheduler, Engine, PipelinedEngine, QosPolicy, SessionId};
+use hisafe::engine::{
+    AdmissionError, AggScheduler, Engine, PipelinedEngine, QosPolicy, SessionId, SessionSnapshot,
+};
 use hisafe::fl::data::{partition_users, synthetic, DataKind, Partition};
 use hisafe::fl::model::LinearSoftmax;
 use hisafe::fl::trainer::{train, train_remote, Aggregator, FedSpec, TrainConfig};
@@ -16,9 +18,11 @@ use hisafe::protocol::{
     run_sync_with_dropouts, ChurnError, HiSafeConfig, ParticipantSet,
 };
 use hisafe::service::{
-    AdmissionReply, AggFrontend, Codec, Error, Request, Response, ServiceClient, ServiceServer,
+    binary, AdmissionReply, AggFrontend, Codec, Error, Request, Response, ServiceClient,
+    ServiceServer,
 };
 use hisafe::prop_assert_eq;
+use hisafe::util::json::parse;
 use hisafe::util::prop::{forall, Gen};
 use hisafe::util::rng::Rng;
 
@@ -483,6 +487,159 @@ fn snapshot_restore_replay_bit_identical_across_servers() {
         // history, not just the rounds it ran locally.
         let stats_b = cb.stats(Some(sid_b)).map_err(|e| format!("stats: {e}"))?;
         prop_assert_eq!(stats_b.rounds_run, consumed + 2, "restored counters continue");
+
+        for (c, s) in [(&mut ca, server_a), (&mut cb, server_b)] {
+            c.shutdown().map_err(|e| format!("shutdown: {e}"))?;
+            s.join()
+                .map_err(|_| "serve thread panicked".to_string())?
+                .map_err(|e| format!("serve loop: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// A random snapshot exercising every field the codecs must preserve:
+/// fractional QoS rates, optional fields on both sides of `None`, and a
+/// full-range `rounds` fast-forward distance.
+fn rand_snapshot(g: &mut Gen) -> SessionSnapshot {
+    SessionSnapshot {
+        cfg: rand_cfg(g),
+        d: g.usize_range(1, 40),
+        seed: g.u64(),
+        qos: QosPolicy {
+            weight: 1 + g.usize_range(0, 8) as u32,
+            queue_depth: if g.bool() { Some(g.usize_range(1, 64)) } else { None },
+            rounds_per_sec: if g.bool() { Some(g.f64() * 100.0 + 0.5) } else { None },
+            triples_per_sec: if g.bool() { Some(g.f64() * 1e6 + 1.0) } else { None },
+            burst_rounds: 1.0 + g.f64() * 7.0,
+        },
+        rounds: g.u64(),
+    }
+}
+
+#[test]
+fn session_snapshots_round_trip_bit_identically_through_both_codecs() {
+    // The snapshot is the cluster's fail-over/rebuild currency (balancer
+    // restores, host re-join reconciliation, table rebuild — see
+    // `service::faults`), so BOTH codecs must preserve it bit-identically,
+    // including `qos` and `rounds`, in the request that ships it and the
+    // reply that returns it.
+    forall("SessionSnapshot ≡ decode∘encode in both codecs", 48, |g| {
+        let snap = rand_snapshot(g);
+        let req = Request::SessionRestore { snapshot: snap.clone(), codec: None };
+        let resp = Response::Snapshot(hisafe::service::SnapshotReply {
+            session: SessionId::new(g.u64()),
+            snapshot: snap.clone(),
+        });
+
+        // v1 JSON: value → compact text → parse → value.
+        let text = req.to_json().to_string_compact();
+        let back = Request::from_json(&parse(&text).map_err(|e| format!("parse: {e:?}"))?)
+            .map_err(|e| format!("decode: {e:?}"))?;
+        match back {
+            Request::SessionRestore { snapshot, .. } => {
+                prop_assert_eq!(&snapshot, &snap, "JSON request trip, wire text {text}");
+            }
+            other => return Err(format!("wrong request decoded: {other:?}")),
+        }
+        let text = resp.to_json().to_string_compact();
+        let back = Response::from_json(&parse(&text).map_err(|e| format!("parse: {e:?}"))?)
+            .map_err(|e| format!("decode: {e:?}"))?;
+        match back {
+            Response::Snapshot(r) => {
+                prop_assert_eq!(&r.snapshot, &snap, "JSON reply trip, wire text {text}");
+            }
+            other => return Err(format!("wrong response decoded: {other:?}")),
+        }
+
+        // v2 binary: value → payload bytes → value.
+        let back = binary::decode_request(&binary::encode_request(&req))
+            .map_err(|e| format!("binary decode: {e:?}"))?;
+        match back {
+            Request::SessionRestore { snapshot, .. } => {
+                prop_assert_eq!(&snapshot, &snap, "binary request trip");
+            }
+            other => return Err(format!("wrong request decoded: {other:?}")),
+        }
+        let back = binary::decode_response(&binary::encode_response(&resp))
+            .map_err(|e| format!("binary decode: {e:?}"))?;
+        match back {
+            Response::Snapshot(r) => {
+                prop_assert_eq!(&r.snapshot, &snap, "binary reply trip");
+            }
+            other => return Err(format!("wrong response decoded: {other:?}")),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn restores_from_round_tripped_snapshots_replay_identically() {
+    // Deeper than value equality: a snapshot that crossed either codec
+    // must *restore* into the same dealer-stream position — the rounds
+    // after the restore are bit-identical to the uninterrupted session,
+    // to a dedicated engine, and to the plaintext reference.
+    forall("restore(roundtrip(snap)) ≡ uninterrupted", 6, |g| {
+        let (addr_a, server_a) = spawn_server(AggFrontend::new(g.usize_range(1, 3), 1));
+        let (addr_b, server_b) = spawn_server(AggFrontend::new(g.usize_range(1, 3), 1));
+        let mut ca = ServiceClient::connect(&addr_a).map_err(|e| e.to_string())?;
+        let mut cb = ServiceClient::connect(&addr_b).map_err(|e| e.to_string())?;
+
+        let cfg = rand_cfg(g);
+        let d = g.usize_range(1, 16);
+        let seed = g.u64();
+        let sid_a = ca
+            .open_session(cfg, d, seed, QosPolicy::unlimited())
+            .map_err(|e| format!("open: {e}"))?;
+        let mut dedicated = PipelinedEngine::new(cfg, d, seed);
+        let consumed = g.usize_range(1, 3) as u64;
+        for _ in 0..consumed {
+            let signs: Vec<Vec<i8>> = (0..cfg.n).map(|_| g.sign_vec(d)).collect();
+            let reply =
+                ca.submit_round(sid_a, &signs).map_err(|e| format!("pre-round: {e}"))?;
+            let local = dedicated.run_round(&signs);
+            prop_assert_eq!(&reply.global_vote, &local.global_vote, "pre-snapshot round");
+        }
+        let snap = ca.snapshot_session(sid_a).map_err(|e| format!("snapshot: {e}"))?;
+
+        // Ship the snapshot through each codec before restoring it.
+        let restore = Request::SessionRestore { snapshot: snap.clone(), codec: None };
+        let via_json = match Request::from_json(
+            &parse(&restore.to_json().to_string_compact())
+                .map_err(|e| format!("parse: {e:?}"))?,
+        )
+        .map_err(|e| format!("decode: {e:?}"))?
+        {
+            Request::SessionRestore { snapshot, .. } => snapshot,
+            other => return Err(format!("wrong request decoded: {other:?}")),
+        };
+        let via_bin = match binary::decode_request(&binary::encode_request(&restore))
+            .map_err(|e| format!("binary decode: {e:?}"))?
+        {
+            Request::SessionRestore { snapshot, .. } => snapshot,
+            other => return Err(format!("wrong request decoded: {other:?}")),
+        };
+        prop_assert_eq!(&via_json, &snap, "JSON trip preserved the snapshot");
+        prop_assert_eq!(&via_bin, &snap, "binary trip preserved the snapshot");
+
+        let sid_json = cb.restore_session(&via_json).map_err(|e| format!("restore: {e}"))?;
+        let sid_bin = cb.restore_session(&via_bin).map_err(|e| format!("restore: {e}"))?;
+        for round in 0..2u64 {
+            let signs: Vec<Vec<i8>> = (0..cfg.n).map(|_| g.sign_vec(d)).collect();
+            let ra = ca.submit_round(sid_a, &signs).map_err(|e| format!("A round: {e}"))?;
+            let rj =
+                cb.submit_round(sid_json, &signs).map_err(|e| format!("json round: {e}"))?;
+            let rb = cb.submit_round(sid_bin, &signs).map_err(|e| format!("bin round: {e}"))?;
+            let local = dedicated.run_round(&signs);
+            prop_assert_eq!(&ra.global_vote, &rj.global_vote, "round {round} via JSON");
+            prop_assert_eq!(&ra.global_vote, &rb.global_vote, "round {round} via binary");
+            prop_assert_eq!(&ra.subgroup_votes, &rj.subgroup_votes, "round {round} subgroups");
+            prop_assert_eq!(&ra.subgroup_votes, &rb.subgroup_votes, "round {round} subgroups");
+            prop_assert_eq!(&ra.global_vote, &local.global_vote, "round {round} vs dedicated");
+        }
+        // Continuity survives the codec trip too.
+        let stats = cb.stats(Some(sid_json)).map_err(|e| format!("stats: {e}"))?;
+        prop_assert_eq!(stats.rounds_run, consumed + 2, "restored counters continue");
 
         for (c, s) in [(&mut ca, server_a), (&mut cb, server_b)] {
             c.shutdown().map_err(|e| format!("shutdown: {e}"))?;
