@@ -1,0 +1,179 @@
+//! Bench: what precision costs — the same tenant shape swept across
+//! q ∈ {2, 4, 8, 16}, measuring wire bytes/round and round latency on
+//! the negotiated v2 binary codec (packed b-bit level coordinates:
+//! 2/3/4/5 bits at q = 2/4/8/16) and on the v1 JSON codec, at the
+//! paper's n=24/ℓ=8 operating point.
+//!
+//! The headline claim is the uplink scaling law: a level coordinate
+//! costs ⌈log₂ q⌉ + 1 bits, so quadrupling the quantization alphabet
+//! (q=2 → q=8) costs 2 extra bits per coordinate, not a reformat to
+//! bytes. Strict mode pins the packed binary frames to that law —
+//! monotone in q, with q=16 frames under 3x of q=2 (the ideal ratio is
+//! 5/2, framing overhead only shrinks it) — and pins binary under JSON
+//! at every q. Wall-clock is reported but never asserted (shared
+//! runners are noisy); vote correctness against the q-level plaintext
+//! reference is asserted always — a bench that computes wrong votes
+//! measures nothing.
+//!
+//! Opt-in assertions via `HISAFE_BENCH_STRICT=1`; `HISAFE_BENCH_FAST=1`
+//! shrinks d and the round count for smoke runs.
+
+use hisafe::engine::QosPolicy;
+use hisafe::poly::TiePolicy;
+use hisafe::protocol::{plain_quant_aggregate, HiSafeConfig};
+use hisafe::service::{AggFrontend, Codec, ServiceClient, ServiceServer};
+use hisafe::util::bench::{black_box, section, Bencher};
+use hisafe::util::rng::{Rng, Xoshiro256pp};
+use std::time::{Duration, Instant};
+
+fn main() {
+    let strict = std::env::var("HISAFE_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
+    let fast = std::env::var("HISAFE_BENCH_FAST").ok().is_some();
+    let d: usize = if fast { 256 } else { 1024 };
+    let rounds: usize = if fast { 2 } else { 4 };
+    let base = HiSafeConfig::hierarchical(24, 8, TiePolicy::OneBit);
+    let seed = 29u64;
+
+    let mut b = Bencher::new();
+    // (q, binary mean s/round, binary bytes/round, json bytes/round)
+    let mut rows: Vec<(u8, f64, u64, u64)> = Vec::new();
+
+    for &q in &hisafe::quant::PRECISIONS {
+        let cfg = base.with_precision(q);
+        section(&format!(
+            "q={q}: {rounds} rounds at n={}, ell={}, d={d} (p1={})",
+            cfg.n,
+            cfg.ell,
+            hisafe::cost::group_cost_q(cfg.n / cfg.ell, q, cfg.intra, cfg.sparse).p1
+        ));
+
+        // Deterministic level matrices from L_q (odd levels only — even
+        // values never reach the wire).
+        let mut rng = Xoshiro256pp::seed_from_u64(17 ^ q as u64);
+        let sign_sets: Vec<Vec<Vec<i8>>> = (0..rounds)
+            .map(|_| {
+                (0..cfg.n)
+                    .map(|_| {
+                        (0..d)
+                            .map(|_| {
+                                (2 * rng.gen_below(q as u64) as i64 - (q as i64 - 1)) as i8
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let expected: Vec<Vec<i8>> =
+            sign_sets.iter().map(|signs| plain_quant_aggregate(signs, cfg)).collect();
+
+        let server = ServiceServer::bind("127.0.0.1:0", AggFrontend::new(1, 2))
+            .expect("bind loopback");
+        let addr = server.local_addr().expect("bound addr").to_string();
+        let serve = std::thread::spawn(move || server.serve());
+
+        // Binary-negotiated client: latency + packed-frame bytes.
+        let mut bclient =
+            ServiceClient::connect_with_codec(&addr, Codec::Binary).expect("connect");
+        let bsid =
+            bclient.open_session(cfg, d, seed, QosPolicy::unlimited()).expect("admitted");
+        assert_eq!(bclient.codec(), Codec::Binary, "server must ack the binary ask");
+        bclient.prefetch(bsid, 1).expect("warm-up prefetch");
+        let bin0 = bclient.bytes_sent() + bclient.bytes_received();
+        let bin_mean = {
+            let t0 = Instant::now();
+            for (r, signs) in sign_sets.iter().enumerate() {
+                let reply = bclient.submit_round(bsid, signs).expect("round admitted");
+                black_box(reply.global_vote[0]);
+                assert_eq!(
+                    reply.global_vote, expected[r],
+                    "q={q} binary round {r} diverged from the plaintext reference"
+                );
+            }
+            t0.elapsed().as_secs_f64() / rounds as f64
+        };
+        let bin_bytes_round =
+            (bclient.bytes_sent() + bclient.bytes_received() - bin0) / rounds as u64;
+
+        // The same rounds over plain v1 JSON, for the bandwidth column.
+        let mut jclient = ServiceClient::connect(&addr).expect("connect json");
+        let jsid =
+            jclient.open_session(cfg, d, seed, QosPolicy::unlimited()).expect("admitted");
+        jclient.prefetch(jsid, 1).expect("warm-up prefetch");
+        let json0 = jclient.bytes_sent() + jclient.bytes_received();
+        let json_mean = {
+            let t0 = Instant::now();
+            for (r, signs) in sign_sets.iter().enumerate() {
+                let reply = jclient.submit_round(jsid, signs).expect("round admitted");
+                black_box(reply.global_vote[0]);
+                assert_eq!(
+                    reply.global_vote, expected[r],
+                    "q={q} json round {r} diverged from the plaintext reference"
+                );
+            }
+            t0.elapsed().as_secs_f64() / rounds as f64
+        };
+        let json_bytes_round =
+            (jclient.bytes_sent() + jclient.bytes_received() - json0) / rounds as u64;
+
+        bclient.close_session(bsid).expect("close binary session");
+        jclient.close_session(jsid).expect("close json session");
+        drop(bclient);
+        jclient.shutdown().expect("shutdown");
+        serve.join().expect("serve thread").expect("clean shutdown");
+
+        println!(
+            "  binary: {:.3} ms/round, {} bytes/round ({} bits/coord)  |  \
+             json: {:.3} ms/round, {} bytes/round",
+            bin_mean * 1e3,
+            bin_bytes_round,
+            hisafe::quant::uplink_bits(q),
+            json_mean * 1e3,
+            json_bytes_round
+        );
+
+        b.record(
+            &format!("q={q} binary wire mean round"),
+            Duration::from_secs_f64(bin_mean),
+        );
+        b.annotate_throughput(bin_bytes_round as f64, "bytes/round");
+        b.record(
+            &format!("q={q} json wire mean round"),
+            Duration::from_secs_f64(json_mean),
+        );
+        b.annotate_throughput(json_bytes_round as f64, "bytes/round");
+        rows.push((q, bin_mean, bin_bytes_round, json_bytes_round));
+    }
+
+    b.write_json("quant_precision");
+
+    if strict {
+        // The scaling law on the packed binary frames. Bytes are a pure
+        // function of (n, d, q) plus fixed framing, so these bounds are
+        // deterministic — unlike wall-clock, they cannot flake.
+        for w in rows.windows(2) {
+            let ((qa, _, ba, ja), (qb, _, bb, jb)) = (w[0], w[1]);
+            assert!(
+                bb >= ba,
+                "binary frames shrank as precision grew: q={qa} {ba} B vs q={qb} {bb} B"
+            );
+            assert!(
+                jb >= ja,
+                "json frames shrank as precision grew: q={qa} {ja} B vs q={qb} {jb} B"
+            );
+        }
+        let (_, _, bin_q2, _) = rows[0];
+        let (_, _, bin_q16, _) = rows[rows.len() - 1];
+        assert!(
+            bin_q16 < bin_q2 * 3,
+            "packed coordinates lost the log2(q) law: q=16 frames are {bin_q16} B \
+             vs q=2 {bin_q2} B (ideal ratio 5/2)"
+        );
+        for &(q, _, bin_bytes, json_bytes) in &rows {
+            assert!(
+                bin_bytes <= json_bytes,
+                "q={q}: binary frames ({bin_bytes} B) must never exceed JSON \
+                 ({json_bytes} B)"
+            );
+        }
+    }
+}

@@ -14,7 +14,7 @@ use crate::util::json::{self, Json};
 /// [`crate::fl::trainer::Aggregator`], resolved at run time).
 #[derive(Debug, Clone, PartialEq)]
 pub enum AggSpec {
-    HiSafe { ell: usize, intra: TiePolicy, inter: TiePolicy },
+    HiSafe { ell: usize, intra: TiePolicy, inter: TiePolicy, precision: u8 },
     PlainMv { policy: TiePolicy },
     DpSign { clip: f64, sigma: f64 },
     MaskedSum,
@@ -49,12 +49,13 @@ impl ExperimentConfig {
     pub fn aggregator(&self) -> crate::fl::trainer::Aggregator {
         use crate::fl::trainer::Aggregator as A;
         match &self.agg {
-            AggSpec::HiSafe { ell, intra, inter } => A::HiSafe(HiSafeConfig {
+            AggSpec::HiSafe { ell, intra, inter, precision } => A::HiSafe(HiSafeConfig {
                 n: self.participants,
                 ell: *ell,
                 intra: *intra,
                 inter: *inter,
                 sparse: false,
+                precision: *precision,
             }),
             AggSpec::PlainMv { policy } => A::PlainMv(*policy),
             AggSpec::DpSign { clip, sigma } => A::DpSign { clip: *clip, sigma: *sigma },
@@ -80,11 +81,15 @@ impl ExperimentConfig {
             .set("model", self.model.clone());
         let mut a = Json::obj();
         match &self.agg {
-            AggSpec::HiSafe { ell, intra, inter } => {
+            AggSpec::HiSafe { ell, intra, inter, precision } => {
                 a.set("kind", "hisafe")
                     .set("ell", *ell)
                     .set("intra", intra.name())
                     .set("inter", inter.name());
+                // Omitted when 2 so legacy sign-vote configs serialize unchanged.
+                if *precision != 2 {
+                    a.set("precision", *precision as usize);
+                }
             }
             AggSpec::PlainMv { policy } => {
                 a.set("kind", "plain_mv").set("policy", policy.name());
@@ -122,11 +127,23 @@ impl ExperimentConfig {
             TiePolicy::from_name(s).ok_or_else(|| format!("bad tie policy '{s}'"))
         };
         let agg = match kind {
-            "hisafe" => AggSpec::HiSafe {
-                ell: agg_j.get("ell").and_then(Json::as_usize).ok_or("missing agg.ell")?,
-                intra: tie("intra")?,
-                inter: tie("inter")?,
-            },
+            "hisafe" => {
+                let precision = match agg_j.get("precision") {
+                    None => 2,
+                    Some(v) => {
+                        let q = v.as_usize().ok_or("agg.precision must be an integer")?;
+                        u8::try_from(q).map_err(|_| "agg.precision out of range".to_string())?
+                    }
+                };
+                crate::quant::check_precision(precision)
+                    .map_err(|e| format!("agg.precision: {e}"))?;
+                AggSpec::HiSafe {
+                    ell: agg_j.get("ell").and_then(Json::as_usize).ok_or("missing agg.ell")?,
+                    intra: tie("intra")?,
+                    inter: tie("inter")?,
+                    precision,
+                }
+            }
             "plain_mv" => AggSpec::PlainMv { policy: tie("policy")? },
             "dp_sign" => AggSpec::DpSign {
                 clip: agg_j.get("clip").and_then(Json::as_f64).unwrap_or(1.0),
@@ -199,6 +216,7 @@ pub fn preset(name: &str) -> Option<ExperimentConfig> {
             ell: if n == 24 { 6 } else { 3 },
             intra,
             inter: TiePolicy::OneBit,
+            precision: 2,
         },
         model: "linear".to_string(),
     };

@@ -56,7 +56,16 @@ pub struct ConfigCost {
 /// Cost of one subgroup of `n₁` users under `policy`.
 /// `sparse = false` reproduces the paper's Algorithm-1 accounting.
 pub fn group_cost(n1: usize, policy: TiePolicy, sparse: bool) -> GroupCost {
-    let mv = MvPolynomial::build_fermat(n1, policy);
+    group_cost_q(n1, 2, policy, sparse)
+}
+
+/// Per-precision subgroup cost: the same accounting over the q-level
+/// aggregation polynomial (field `p = next_prime(max(n₁,2)·(q−1))`,
+/// degree `p − 1` worth of Fermat indicators). `group_cost_q(n1, 2, …)`
+/// is [`group_cost`] exactly — same polynomial, same schedule, same
+/// bits — pinned by `q2_precision_cost_is_the_legacy_cost` below.
+pub fn group_cost_q(n1: usize, q: u8, policy: TiePolicy, sparse: bool) -> GroupCost {
+    let mv = MvPolynomial::build_fermat_q(n1, q, policy);
     let deg = mv.degree();
     let schedule = if sparse {
         PowerSchedule::sparse(&mv.poly.needed_powers())
@@ -120,6 +129,34 @@ pub fn optimal_ell(n: usize, policy: TiePolicy, sparse: bool) -> ConfigCost {
                 .then(b.ell.cmp(&a.ell)) // prefer larger ℓ on ties (lower C_u)
         })
         .expect("n ≥ 2 has at least ℓ = 1")
+}
+
+/// One row of the per-precision communication table (`hisafe tables`):
+/// the uplink/downlink bit costs a precision-`q` tenant pays per vote
+/// coordinate on a subgroup of `n₁`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrecisionCost {
+    pub q: u8,
+    pub group: GroupCost,
+    /// Packed wire bits per input coordinate (`⌈log₂(q+1)⌉`).
+    pub uplink_wire_bits: u32,
+    /// Broadcast bits per vote coordinate (`⌈log₂(2q−1)⌉`; policy-driven
+    /// 1/2 bits at `q = 2`).
+    pub downlink_bits: u32,
+}
+
+/// The per-precision cost column for a subgroup of `n₁` under `policy`:
+/// one [`PrecisionCost`] row per supported `q`, ascending.
+pub fn precision_costs(n1: usize, policy: TiePolicy, sparse: bool) -> Vec<PrecisionCost> {
+    crate::quant::PRECISIONS
+        .iter()
+        .map(|&q| PrecisionCost {
+            q,
+            group: group_cost_q(n1, q, policy, sparse),
+            uplink_wire_bits: crate::quant::uplink_bits(q),
+            downlink_bits: crate::quant::downlink_bits(q, policy),
+        })
+        .collect()
 }
 
 /// Percentage reduction of `x` relative to baseline `b` (paper's
@@ -306,6 +343,52 @@ mod tests {
     }
 
     #[test]
+    fn q2_precision_cost_is_the_legacy_cost() {
+        // The q = 2 row of the precision table must be the legacy cost
+        // model, field-for-field — including the headline n₁ = 3 numbers
+        // (p₁ = 5, deg = 3, R = 4, depth = 2, C_u = 12).
+        for n1 in 2..=8usize {
+            for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+                assert_eq!(
+                    group_cost_q(n1, 2, policy, false),
+                    group_cost(n1, policy, false),
+                    "n1={n1} {policy:?}"
+                );
+            }
+        }
+        let rows = precision_costs(3, TiePolicy::OneBit, false);
+        assert_eq!(rows[0].q, 2);
+        assert_eq!(rows[0].group.p1, 5);
+        assert_eq!(rows[0].group.deg, 3);
+        assert_eq!(rows[0].group.openings, 4);
+        assert_eq!(rows[0].group.depth, 2);
+        assert_eq!(rows[0].group.c_u_bits, 12);
+        assert_eq!(rows[0].uplink_wire_bits, 2);
+        assert_eq!(rows[0].downlink_bits, 1);
+    }
+
+    #[test]
+    fn precision_costs_grow_monotonically() {
+        // Higher q → bigger field → strictly more uplink bits; wire
+        // widths follow ⌈log₂⌉ exactly.
+        for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+            let rows = precision_costs(3, policy, false);
+            assert_eq!(
+                rows.iter().map(|r| r.q).collect::<Vec<_>>(),
+                vec![2, 4, 8, 16]
+            );
+            assert!(rows.windows(2).all(|w| w[0].group.c_u_bits < w[1].group.c_u_bits));
+            assert_eq!(
+                rows.iter().map(|r| r.uplink_wire_bits).collect::<Vec<_>>(),
+                vec![2, 3, 4, 5]
+            );
+            for r in &rows {
+                assert_eq!(r.group.p1, crate::field::next_prime(3 * (r.q as u64 - 1)));
+            }
+        }
+    }
+
+    #[test]
     fn measured_comm_matches_model() {
         // The protocol's byte counters must equal the analytic model —
         // this ties Tables VII–IX to the actual implementation.
@@ -314,7 +397,7 @@ mod tests {
             let n1 = g.usize_range(2, 6);
             let n = ell * n1;
             let policy = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
-            let cfg = HiSafeConfig { n, ell, intra: policy, inter: TiePolicy::OneBit, sparse: false };
+            let cfg = HiSafeConfig { n, ell, intra: policy, inter: TiePolicy::OneBit, sparse: false, precision: 2 };
             let d = g.usize_range(1, 4);
             let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
             let out = run_sync(&signs, cfg, g.u64());

@@ -101,7 +101,7 @@ use crate::metrics::CommStats;
 use crate::mpc::EvalPlan;
 use crate::poly::{MvPolynomial, TiePolicy};
 use crate::protocol::{
-    check_thresholds, churn_dealer_seed, group_dealer_seed, inter_group_vote, partition,
+    check_thresholds, churn_dealer_seed, group_dealer_seed, inter_group_vote_q, partition,
     recover_cohort_key, ChurnError, HiSafeConfig, ParticipantSet,
 };
 
@@ -234,7 +234,7 @@ pub(crate) fn analytic_stats(cfg: &HiSafeConfig, plan: &EvalPlan, d: usize) -> C
         elem_bits: plan.fp.bits(),
         subrounds: plan.schedule.depth() as u64,
         mults: ell * mults,
-        vote_bits: cfg.inter.downlink_bits(),
+        vote_bits: crate::quant::downlink_bits(cfg.precision, cfg.inter),
     }
 }
 
@@ -260,7 +260,7 @@ pub(crate) fn analytic_group_stats(
         elem_bits: plan.fp.bits(),
         subrounds: plan.schedule.depth() as u64,
         mults,
-        vote_bits: intra.downlink_bits(),
+        vote_bits: crate::quant::downlink_bits(plan.q, intra),
     }
 }
 
@@ -280,7 +280,7 @@ pub(crate) struct CohortState {
 impl CohortState {
     /// Build the plan + dealer for group `g`'s `k`-survivor cohort.
     pub fn build(cfg: &HiSafeConfig, d: usize, seed: u64, g: usize, k: usize, key: u64) -> CohortState {
-        let mv = MvPolynomial::build_fermat(k, cfg.intra);
+        let mv = MvPolynomial::build_fermat_q(k, cfg.precision, cfg.intra);
         let plan = Arc::new(EvalPlan::new(&mv, d, cfg.sparse));
         let dealer = Dealer::new(plan.fp, churn_dealer_seed(seed, g, key));
         CohortState { plan, dealer }
@@ -338,7 +338,7 @@ impl RoundEngine {
     /// per subgroup.
     pub fn new(cfg: HiSafeConfig, d: usize, seed: u64) -> RoundEngine {
         let n1 = cfg.n1();
-        let mv = MvPolynomial::build_fermat(n1, cfg.intra);
+        let mv = MvPolynomial::build_fermat_q(n1, cfg.precision, cfg.intra);
         let plan = Arc::new(EvalPlan::new(&mv, d, cfg.sparse));
         let dealers: Vec<Dealer> = (0..cfg.ell)
             .map(|g| Dealer::new(plan.fp, group_dealer_seed(seed, g)))
@@ -448,7 +448,8 @@ impl Engine for RoundEngine {
                 fp, &plan, &group_signs, &triples, d, chunk, threads,
             ));
         }
-        let global_vote = inter_group_vote(&subgroup_votes, self.cfg.inter);
+        let global_vote =
+            inter_group_vote_q(&subgroup_votes, self.cfg.precision, self.cfg.inter);
         let stats = analytic_stats(&self.cfg, &self.plan, d);
 
         self.rounds_run += 1;
@@ -518,8 +519,9 @@ impl Engine for RoundEngine {
             ));
             stats.merge(&analytic_group_stats(&plan, d, k, self.cfg.intra));
         }
-        let global_vote = inter_group_vote(&subgroup_votes, self.cfg.inter);
-        stats.vote_bits = self.cfg.inter.downlink_bits();
+        let global_vote =
+            inter_group_vote_q(&subgroup_votes, self.cfg.precision, self.cfg.inter);
+        stats.vote_bits = crate::quant::downlink_bits(self.cfg.precision, self.cfg.inter);
 
         self.rounds_run += 1;
         Ok(EngineOutcome { global_vote, subgroup_votes, stats })

@@ -97,7 +97,7 @@ use crate::metrics::{AdmissionStats, CommStats};
 use crate::mpc::EvalPlan;
 use crate::poly::MvPolynomial;
 use crate::protocol::{
-    check_thresholds, group_dealer_seed, inter_group_vote, partition, recover_cohort_key,
+    check_thresholds, group_dealer_seed, inter_group_vote_q, partition, recover_cohort_key,
     ChurnError, HiSafeConfig, ParticipantSet,
 };
 
@@ -846,7 +846,7 @@ impl AggScheduler {
         }
 
         let n1 = cfg.n1();
-        let mv = MvPolynomial::build_fermat(n1, cfg.intra);
+        let mv = MvPolynomial::build_fermat_q(n1, cfg.precision, cfg.intra);
         let plan = Arc::new(EvalPlan::new(&mv, d, cfg.sparse));
         let mults = plan.triples_needed();
         let mut dealers: Vec<Dealer> = (0..cfg.ell)
@@ -1483,7 +1483,8 @@ impl AggSession {
         // the in-flight gauge is provably drained between rounds.
         debug_assert_eq!(self.inflight_jobs(), 0, "in-flight gauge must drain per round");
 
-        let global_vote = inter_group_vote(&subgroup_votes, self.cfg.inter);
+        let global_vote =
+            inter_group_vote_q(&subgroup_votes, self.cfg.precision, self.cfg.inter);
         let stats = analytic_stats(&self.cfg, &self.plan, d);
         self.rounds_run += 1;
         self.admission.admitted_rounds += 1;
@@ -1625,8 +1626,9 @@ impl AggSession {
         }
         debug_assert_eq!(self.inflight_jobs(), 0, "in-flight gauge must drain per round");
 
-        let global_vote = inter_group_vote(&subgroup_votes, self.cfg.inter);
-        stats.vote_bits = self.cfg.inter.downlink_bits();
+        let global_vote =
+            inter_group_vote_q(&subgroup_votes, self.cfg.precision, self.cfg.inter);
+        stats.vote_bits = crate::quant::downlink_bits(self.cfg.precision, self.cfg.inter);
         self.rounds_run += 1;
         self.admission.admitted_rounds += 1;
         Ok(EngineOutcome { global_vote, subgroup_votes, stats })

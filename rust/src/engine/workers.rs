@@ -418,7 +418,7 @@ fn eval_span_scratch(
         }
         fp.vec_reduce_in_place(&mut out[..c]);
         for (v, &x) in votes[j0..j0 + c].iter_mut().zip(&out[..c]) {
-            *v = fp.sign_of(x);
+            *v = fp.level_of(x);
         }
         j0 += c;
     }

@@ -190,6 +190,21 @@ impl Fp {
         }
     }
 
+    /// Centered lift as a small vote value — the q-level readout. On the
+    /// sign-vote outputs `{0, 1, p−1}` this equals [`Self::sign_of`]; on
+    /// a q-level aggregation polynomial's outputs it recovers the level
+    /// in `[−(q−1), q−1]` directly. Debug-asserts the lift fits `i8`
+    /// (every aggregation polynomial's range does).
+    #[inline]
+    pub fn level_of(self, x: u64) -> i8 {
+        let l = self.lift(x);
+        debug_assert!(
+            (-(i8::MAX as i64)..=i8::MAX as i64).contains(&l),
+            "vote readout {l} outside the i8 level range"
+        );
+        l as i8
+    }
+
     // ---- vector (model-dimension) operations: the L3 hot path ----
     //
     // Kernel layout (§Perf). Every `vec_*` kernel below follows one
@@ -701,6 +716,15 @@ mod tests {
         assert_eq!(f.sign_of(f.from_i64(-3)), -1);
         assert_eq!(f.sign_of(f.from_i64(0)), 0);
         assert_eq!(f.sign_of(f.from_i64(5)), 1);
+        // level_of: the q-level readout equals sign_of on sign outputs
+        // and recovers multi-bit levels exactly.
+        for v in [-1i64, 0, 1] {
+            assert_eq!(f.level_of(f.from_i64(v)), f.sign_of(f.from_i64(v)));
+        }
+        let f31 = Fp::new(31);
+        for v in -15i64..=15 {
+            assert_eq!(f31.level_of(f31.from_i64(v)), v as i8);
+        }
     }
 
     #[test]

@@ -237,6 +237,15 @@ fn session_seed(cfg: &TrainConfig) -> u64 {
     cfg.seed ^ 0xa6_67e6
 }
 
+/// Per-gradient quantization scale for q > 2 tenants: one level step
+/// represents the mean coordinate magnitude (so typical coordinates
+/// land on the inner levels and outliers saturate), floored at 1.0 for
+/// an all-zero gradient.
+fn quant_scale(g: &[f32]) -> f32 {
+    let mean = g.iter().map(|x| x.abs()).sum::<f32>() / g.len().max(1) as f32;
+    if mean > 0.0 { mean } else { 1.0 }
+}
+
 /// One federation's in-flight training state: the per-round step of the
 /// classic [`train`] loop, factored out so single-, multi-, and
 /// remote-federation paths execute the identical code (and therefore
@@ -396,13 +405,31 @@ impl<'a, M: Model> FedRun<'a, M> {
         let mut throttled = 0u64;
         let mut aborted = false;
         let (direction, uplink_bits_per_user): (Vec<f32>, u64) = match &self.agg {
-            Aggregator::HiSafe(_) => {
+            Aggregator::HiSafe(hc) => {
                 // Full n-row sign matrix: absent users contribute a zero
                 // row the engine never reads (the wire shape is mask-
-                // independent; presence travels separately).
+                // independent; presence travels separately). At
+                // precision 2 this is the exact legacy sign path; a
+                // higher-precision tenant quantizes each gradient onto
+                // its q odd midrise levels instead, with a per-gradient
+                // scale (mean |gᵢ|) — a deterministic function of the
+                // gradient, so no RNG stream is touched and q = 2
+                // trajectories stay bit-identical to pre-quant builds.
+                let q = hc.precision;
                 let signs: Vec<Vec<i8>> = grads
                     .iter()
-                    .map(|g| g.as_ref().map(|g| sign_vec(g)).unwrap_or_else(|| vec![0i8; d]))
+                    .map(|g| {
+                        g.as_ref()
+                            .map(|g| {
+                                if q == 2 {
+                                    sign_vec(g)
+                                } else {
+                                    crate::quant::Quantizer::new(q, quant_scale(g))
+                                        .quantize_vec(g)
+                                }
+                            })
+                            .unwrap_or_else(|| vec![0i8; d])
+                    })
                     .collect();
                 // QoS-checked admission with blocking retry: training
                 // needs every round, so a throttle denial is a wait, not
@@ -736,6 +763,37 @@ mod tests {
         );
         assert_eq!(secure.final_params, plain.final_params);
         assert_eq!(secure.final_acc, plain.final_acc);
+    }
+
+    #[test]
+    fn quantized_training_runs_and_learns() {
+        // A precision-4 federation drives the q-level secure path end to
+        // end: gradients quantize onto {−3, −1, 1, 3}, every round logs
+        // measured comm from the wider-field polynomial, and the model
+        // still learns the non-IID task.
+        let (tr, te, shards) = quick_setup();
+        let m = LinearSoftmax::new(784, 10);
+        let cfg = quick_cfg(60);
+        let agg = Aggregator::HiSafe(
+            HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit).with_precision(4),
+        );
+        let res = train(&m, &tr, &te, &shards, agg, &cfg);
+        assert_eq!(res.logs.len(), 60);
+        assert!(
+            res.final_acc > 0.5,
+            "q=4 Hi-SAFE training reached only {}",
+            res.final_acc
+        );
+        // The q = 4 subgroup field (p = 11 for n₁ = 3) is wider than the
+        // legacy p = 5, so per-round uplink must exceed the q = 2 run's.
+        let q2 = train(
+            &m, &tr, &te, &shards,
+            Aggregator::HiSafe(HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit)),
+            &quick_cfg(1),
+        );
+        let q4_bits = res.logs[0].uplink_bits_per_user;
+        let q2_bits = q2.logs[0].uplink_bits_per_user;
+        assert!(q4_bits > q2_bits, "q4 {q4_bits} bits !> q2 {q2_bits} bits");
     }
 
     #[test]

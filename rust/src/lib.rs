@@ -45,6 +45,7 @@ pub mod metrics;
 pub mod mpc;
 pub mod poly;
 pub mod protocol;
+pub mod quant;
 pub mod runtime;
 pub mod security;
 pub mod service;

@@ -25,7 +25,7 @@ use hisafe::fl::trainer::{train, TrainConfig, TrainResult};
 use hisafe::metrics::CommStats;
 use hisafe::poly::{MvPolynomial, TiePolicy};
 use hisafe::protocol::{
-    plain_hierarchical_vote, plain_hierarchical_vote_present, HiSafeConfig, ParticipantSet,
+    plain_quant_aggregate, plain_quant_aggregate_present, HiSafeConfig, ParticipantSet,
 };
 use hisafe::security;
 use hisafe::service::{
@@ -77,10 +77,12 @@ fn print_help() {
            tables [--policy one_bit]       Tables VII/VIII/IX\n\
            fig6                            Fig. 6 cost/latency series\n\
            security [--n 24] [--ell 8]     leakage analysis\n\
-           sweep [--tenants 24x8x2048@3,...] [--rounds 5] [--threads N] [--out DIR]\n\
-                 [--rps R] [--tps T] [--queue-depth Q] [--churn P]\n\
+           sweep [--tenants 24x8x2048@3@q4,...] [--rounds 5] [--threads N] [--out DIR]\n\
+                 [--rps R] [--tps T] [--queue-depth Q] [--churn P] [--precision Q]\n\
                                            mixed-tenant scheduler workload with\n\
                                            per-tenant QoS (@W = dealing weight;\n\
+                                           @qQ = quantization precision 2|4|8|16,\n\
+                                           --precision sets the default;\n\
                                            rps/tps/queue-depth bound every tenant;\n\
                                            churn P drops each user per round with\n\
                                            probability P — below-threshold rounds\n\
@@ -302,6 +304,27 @@ fn cmd_tables(args: &Args) -> Result<(), String> {
             row.c_t
         );
     }
+    println!("\n=== Per-precision comm cost (q-level aggregation, per vote coordinate) ===");
+    println!(
+        "{:>4} {:>4} {:>5} {:>6} {:>6} {:>6} {:>8} {:>10} {:>12}",
+        "n1", "q", "p1", "logp", "depth", "R", "C_u", "uplink/bit", "downlink/bit"
+    );
+    for n1 in [3usize, 4] {
+        for row in cost::precision_costs(n1, policy, false) {
+            println!(
+                "{:>4} {:>4} {:>5} {:>6} {:>6} {:>6} {:>8} {:>10} {:>12}",
+                n1,
+                row.q,
+                row.group.p1,
+                row.group.elem_bits,
+                row.group.depth,
+                row.group.openings,
+                row.group.c_u_bits,
+                row.uplink_wire_bits,
+                row.downlink_bits
+            );
+        }
+    }
     Ok(())
 }
 
@@ -374,25 +397,39 @@ fn cmd_security(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// One `sweep` tenant: `NxL[xD][@W]` — `n` users in `ℓ` subgroups voting
-/// over `d` coordinates (default d = 4096) with weighted-round-robin
-/// dealing weight `W` (default 1), e.g. `24x8x2048@3`.
-fn parse_tenant(spec: &str) -> Result<(HiSafeConfig, usize, u32), String> {
-    let (shape, weight) = match spec.split_once('@') {
-        Some((shape, w)) => {
-            let weight: u32 = w.parse().map_err(|_| {
-                format!("tenant '{spec}': weight '{w}' must be a positive integer")
+/// One `sweep` tenant: `NxL[xD][@W][@qQ]` — `n` users in `ℓ` subgroups
+/// voting over `d` coordinates (default d = 4096) with weighted
+/// round-robin dealing weight `W` (default 1) at quantization precision
+/// `Q` (default `default_q`; the `--precision` flag), e.g.
+/// `24x8x2048@3@q4`. The `@` suffixes compose in any order: a token
+/// starting with `q` is a precision, a bare number is a weight.
+fn parse_tenant(spec: &str, default_q: u8) -> Result<(HiSafeConfig, usize, u32), String> {
+    let mut at_parts = spec.split('@');
+    let shape = at_parts.next().expect("split yields at least one token");
+    let mut weight: u32 = 1;
+    let mut precision: u8 = default_q;
+    for tok in at_parts {
+        if let Some(qs) = tok.strip_prefix('q') {
+            let q: u8 = qs.parse().map_err(|_| {
+                format!("tenant '{spec}': precision '@{tok}' must be @q2|@q4|@q8|@q16")
+            })?;
+            hisafe::quant::check_precision(q)
+                .map_err(|e| format!("tenant '{spec}': {e}"))?;
+            precision = q;
+        } else {
+            weight = tok.parse().map_err(|_| {
+                format!("tenant '{spec}': weight '{tok}' must be a positive integer")
             })?;
             if weight == 0 {
                 return Err(format!("tenant '{spec}': weight must be ≥ 1"));
             }
-            (shape, weight)
         }
-        None => (spec, 1),
-    };
+    }
     let parts: Vec<&str> = shape.split('x').collect();
     if parts.len() != 2 && parts.len() != 3 {
-        return Err(format!("tenant '{spec}' must be NxL[xD][@W], e.g. 24x8x2048@3"));
+        return Err(format!(
+            "tenant '{spec}' must be NxL[xD][@W][@qQ], e.g. 24x8x2048@3@q4"
+        ));
     }
     let num = |s: &str, what: &str| -> Result<usize, String> {
         s.parse::<usize>()
@@ -407,7 +444,43 @@ fn parse_tenant(spec: &str) -> Result<(HiSafeConfig, usize, u32), String> {
     if n % ell != 0 {
         return Err(format!("tenant '{spec}': ℓ = {ell} must divide n = {n}"));
     }
-    Ok((HiSafeConfig::hierarchical(n, ell, TiePolicy::OneBit), d, weight))
+    Ok((
+        HiSafeConfig::hierarchical(n, ell, TiePolicy::OneBit).with_precision(precision),
+        d,
+        weight,
+    ))
+}
+
+/// The sweep's tenant row label; q = 2 keeps the legacy `nN_lL_dD` form.
+fn tenant_label(cfg: &HiSafeConfig, d: usize) -> String {
+    if cfg.precision == 2 {
+        format!("n{}_l{}_d{}", cfg.n, cfg.ell, d)
+    } else {
+        format!("n{}_l{}_d{}_q{}", cfg.n, cfg.ell, d, cfg.precision)
+    }
+}
+
+/// Parse + validate the sweep's global `--precision Q` default (applied
+/// to every tenant without an explicit `@qQ` suffix).
+fn parse_precision(args: &Args) -> Result<u8, String> {
+    let q = args.get_usize("precision", 2)?;
+    let q = u8::try_from(q).map_err(|_| format!("--precision {q} out of range"))?;
+    hisafe::quant::check_precision(q)?;
+    Ok(q)
+}
+
+/// Draw one q-level vote coordinate: the legacy ±1 stream at `q = 2`
+/// (so plain sweeps stay bit-identical to pre-quantization builds), a
+/// uniform **odd** midrise level in `[−(q−1), q−1]` otherwise (`q` is a
+/// power of two, so the modulus draw is unbiased).
+fn gen_level(rng: &mut hisafe::util::rng::Xoshiro256pp, q: u8) -> i8 {
+    use hisafe::util::rng::Rng;
+    if q == 2 {
+        rng.gen_sign()
+    } else {
+        let idx = (rng.next_u64() % q as u64) as i64;
+        (2 * idx - (q as i64 - 1)) as i8
+    }
 }
 
 /// Parse + validate `--churn P` (a probability; 0 disables churn).
@@ -459,8 +532,8 @@ fn cmd_sweep_chaos(args: &Args) -> Result<(), String> {
     let report = hisafe::service::faults::run_schedule(seed);
     println!(
         "chaos seed {}: OK — {} vote(s) bit-identical to the reference, {} typed churn \
-         abort(s), faults applied: {:?}",
-        report.seed, report.votes_checked, report.typed_aborts, report.faults
+         abort(s), tenant precisions {:?}, faults applied: {:?}",
+        report.seed, report.votes_checked, report.typed_aborts, report.precisions, report.faults
     );
     Ok(())
 }
@@ -475,6 +548,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "tenants", "rounds", "threads", "seed", "out", "rps", "tps", "queue-depth",
         "churn", "remote", "codec", "stop-server", "chaos-seed", "verbose", "threaded", "jax",
+        "precision",
     ])?;
     if args.has("chaos-seed") {
         return cmd_sweep_chaos(args);
@@ -490,10 +564,11 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         return Err("--rounds must be ≥ 1".into());
     }
     let base_seed = args.get_u64("seed", 42)?;
+    let default_q = parse_precision(args)?;
     let tenant_specs = args.get_or("tenants", "24x8x2048,12x4x4096,6x2x8192");
     let shapes: Vec<(HiSafeConfig, usize, u32)> = tenant_specs
         .split(',')
-        .map(|s| parse_tenant(s.trim()))
+        .map(|s| parse_tenant(s.trim(), default_q))
         .collect::<Result<_, _>>()?;
     // Global QoS knobs (0 = unlimited), applied to every tenant; the
     // per-tenant `@W` weight suffix sets the dealing share.
@@ -535,7 +610,6 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         completed_rounds: u64,
         audited: bool,
     }
-    use hisafe::util::rng::Rng;
 
     let mut tenants: Vec<TenantRun> = Vec::with_capacity(shapes.len());
     for (i, &(cfg, d, weight)) in shapes.iter().enumerate() {
@@ -553,7 +627,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             .try_session(cfg, d, base_seed.wrapping_add(i as u64), qos)
             .map_err(|e| format!("tenant {i} not admitted: {e}"))?;
         tenants.push(TenantRun {
-            label: format!("n{}_l{}_d{}", cfg.n, cfg.ell, d),
+            label: tenant_label(&cfg, d),
             cfg,
             d,
             weight,
@@ -575,8 +649,9 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
 
     for _round in 0..rounds {
         for t in tenants.iter_mut() {
+            let q = t.cfg.precision;
             let signs: Vec<Vec<i8>> = (0..t.cfg.n)
-                .map(|_| (0..t.d).map(|_| t.rng.gen_sign()).collect())
+                .map(|_| (0..t.d).map(|_| gen_level(&mut t.rng, q)).collect())
                 .collect();
             // Per-round churn draw from a dedicated stream (the sign
             // stream is untouched, so --churn 0 sweeps are bit-identical
@@ -615,7 +690,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
                         if !t.audited {
                             assert_eq!(
                                 out.global_vote,
-                                plain_hierarchical_vote_present(&signs, &pset, t.cfg),
+                                plain_quant_aggregate_present(&signs, &pset, t.cfg),
                                 "tenant {} produced a wrong churned vote",
                                 t.label
                             );
@@ -636,7 +711,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
                 // equal the plaintext hierarchical majority vote.
                 assert_eq!(
                     out.global_vote,
-                    plain_hierarchical_vote(&signs, t.cfg),
+                    plain_quant_aggregate(&signs, t.cfg),
                     "tenant {} produced a wrong vote",
                     t.label
                 );
@@ -708,6 +783,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             .set("n", t.cfg.n)
             .set("ell", t.cfg.ell)
             .set("d", t.d)
+            .set("precision", t.cfg.precision as u32)
             .set("rounds", t.latencies_ms.len())
             .set("mean_ms", mean)
             .set("min_ms", min)
@@ -720,7 +796,21 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             .set("comm_total", t.comm_total.to_json())
             .set("survivors_per_round", t.survivors_per_round.clone())
             .set("completed_rounds", t.completed_rounds)
-            .set("aborted_rounds", t.aborted_rounds);
+            .set("aborted_rounds", t.aborted_rounds)
+            // Modeled packed-wire volume for this shape (a local sweep
+            // has no socket to measure): all-n uplink + broadcast
+            // downlink bits per round at this tenant's precision.
+            .set(
+                "uplink_wire_bits_per_round",
+                hisafe::quant::uplink_bits(t.cfg.precision) as u64
+                    * t.cfg.n as u64
+                    * t.d as u64,
+            )
+            .set(
+                "downlink_bits_per_round",
+                hisafe::quant::downlink_bits(t.cfg.precision, t.cfg.inter) as u64
+                    * t.d as u64,
+            );
         tenant_objs.push(o);
     }
     report
@@ -750,10 +840,11 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
         return Err("--rounds must be ≥ 1".into());
     }
     let base_seed = args.get_u64("seed", 42)?;
+    let default_q = parse_precision(args)?;
     let tenant_specs = args.get_or("tenants", "24x8x2048,12x4x4096,6x2x8192");
     let shapes: Vec<(HiSafeConfig, usize, u32)> = tenant_specs
         .split(',')
-        .map(|s| parse_tenant(s.trim()))
+        .map(|s| parse_tenant(s.trim(), default_q))
         .collect::<Result<_, _>>()?;
     let rps = args.get_f64("rps", 0.0)?;
     let tps = args.get_f64("tps", 0.0)?;
@@ -798,7 +889,6 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
         wire_bytes: u64,
         audited: bool,
     }
-    use hisafe::util::rng::Rng;
 
     let mut tenants: Vec<RemoteTenant> = Vec::with_capacity(shapes.len());
     for (i, &(cfg, d, weight)) in shapes.iter().enumerate() {
@@ -816,7 +906,7 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
             .open_session(cfg, d, base_seed.wrapping_add(i as u64), qos)
             .map_err(|e| format!("tenant {i} not admitted: {e}"))?;
         tenants.push(RemoteTenant {
-            label: format!("n{}_l{}_d{}", cfg.n, cfg.ell, d),
+            label: tenant_label(&cfg, d),
             cfg,
             d,
             weight,
@@ -839,8 +929,9 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
 
     for round in 0..rounds {
         for t in tenants.iter_mut() {
+            let q = t.cfg.precision;
             let signs: Vec<Vec<i8>> = (0..t.cfg.n)
-                .map(|_| (0..t.d).map(|_| t.rng.gen_sign()).collect())
+                .map(|_| (0..t.d).map(|_| gen_level(&mut t.rng, q)).collect())
                 .collect();
             // Same dedicated churn stream as the local sweep — identical
             // seeds draw identical masks, so a remote sweep reproduces
@@ -871,7 +962,7 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
                         if !t.audited {
                             assert_eq!(
                                 reply.global_vote,
-                                plain_hierarchical_vote_present(
+                                plain_quant_aggregate_present(
                                     &signs,
                                     &ParticipantSet::from_mask(mask),
                                     t.cfg,
@@ -898,7 +989,7 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
             if !t.audited && survivors == t.cfg.n {
                 assert_eq!(
                     reply.global_vote,
-                    plain_hierarchical_vote(&signs, t.cfg),
+                    plain_quant_aggregate(&signs, t.cfg),
                     "tenant {} produced a wrong vote over the wire",
                     t.label
                 );
@@ -971,6 +1062,7 @@ fn cmd_sweep_remote(args: &Args) -> Result<(), String> {
             .set("n", t.cfg.n)
             .set("ell", t.cfg.ell)
             .set("d", t.d)
+            .set("precision", t.cfg.precision as u32)
             .set("shard", shard)
             .set("rounds", t.latencies_ms.len())
             .set("mean_ms", mean)

@@ -34,6 +34,8 @@ pub struct EvalPlan {
     pub schedule: PowerSchedule,
     /// Tie policy the polynomial encodes (vote downlink width).
     pub policy: TiePolicy,
+    /// Quantization precision the polynomial encodes (2 = sign vote).
+    pub q: u8,
 }
 
 impl EvalPlan {
@@ -54,6 +56,7 @@ impl EvalPlan {
             coeffs: mv.poly.coeffs.clone(),
             schedule,
             policy: mv.policy,
+            q: mv.q,
         }
     }
 
@@ -347,10 +350,26 @@ pub fn secure_group_vote(
     sparse: bool,
     seed: u64,
 ) -> GroupVoteOutcome {
+    secure_group_vote_q(signs, 2, policy, sparse, seed)
+}
+
+/// q-level generalization of [`secure_group_vote`]: inputs are levels in
+/// `L_q` (`signs` keeps its name — at `q = 2` levels ARE signs), the
+/// polynomial interpolates the quantized aggregate
+/// ([`MvPolynomial::build_fermat_q`]), and the readout lifts the opened
+/// output back to a level. `q = 2` is byte-identical to the legacy path
+/// (same polynomial, same dealer stream, same transcript).
+pub fn secure_group_vote_q(
+    signs: &[Vec<i8>],
+    q: u8,
+    policy: TiePolicy,
+    sparse: bool,
+    seed: u64,
+) -> GroupVoteOutcome {
     let n = signs.len();
     assert!(n >= 1);
     let d = signs[0].len();
-    let mv = MvPolynomial::build_fermat(n, policy);
+    let mv = MvPolynomial::build_fermat_q(n, q, policy);
     let plan = Arc::new(EvalPlan::new(&mv, d, sparse));
 
     // Offline: dealer distributes triples.
@@ -403,8 +422,8 @@ pub fn secure_group_vote_prepared(
     // Final shares → vote.
     let finals: Vec<Vec<u64>> = parties.iter().map(|p| p.final_share()).collect();
     let raw = server.finalize(finals);
-    server.stats.vote_bits = policy.downlink_bits();
-    let votes: Vec<i8> = raw.iter().map(|&v| fp.sign_of(v)).collect();
+    server.stats.vote_bits = crate::quant::downlink_bits(plan.q, policy);
+    let votes: Vec<i8> = raw.iter().map(|&v| fp.level_of(v)).collect();
 
     // move the server's state out (transcripts are MBs at model dim — §Perf)
     let Server { stats, transcript, .. } = server;
@@ -418,6 +437,23 @@ pub fn plain_group_vote(signs: &[Vec<i8>], policy: TiePolicy) -> Vec<i8> {
         .map(|j| {
             let sum: i64 = signs.iter().map(|s| s[j] as i64).sum();
             policy.sign(sum) as i8
+        })
+        .collect()
+}
+
+/// q-level plaintext reference for one group: the quantized aggregate of
+/// the column sums ([`crate::quant::quant_aggregate`]). Equals
+/// [`plain_group_vote`] at `q = 2`.
+pub fn plain_quant_group_vote(signs: &[Vec<i8>], q: u8, policy: TiePolicy) -> Vec<i8> {
+    if q == 2 {
+        return plain_group_vote(signs, policy);
+    }
+    let n = signs.len();
+    let d = signs[0].len();
+    (0..d)
+        .map(|j| {
+            let sum: i64 = signs.iter().map(|s| s[j] as i64).sum();
+            crate::quant::quant_aggregate(sum, n, q, policy) as i8
         })
         .collect()
 }

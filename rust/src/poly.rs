@@ -208,7 +208,9 @@ pub struct MvPolynomial {
     pub n: usize,
     /// Tie policy it encodes.
     pub policy: TiePolicy,
-    /// `F_p` with `p = next_prime(n)`.
+    /// Quantization precision (number of levels; 2 = sign vote).
+    pub q: u8,
+    /// `F_p` with `p = next_prime(n·(q−1))` (`next_prime(n)` at q = 2).
     pub fp: Fp,
     /// The polynomial itself.
     pub poly: Poly,
@@ -246,7 +248,86 @@ impl MvPolynomial {
             }
             m += 2;
         }
-        MvPolynomial { n, policy, fp, poly: acc }
+        MvPolynomial { n, policy, q: 2, fp, poly: acc }
+    }
+
+    /// Generalized q-level construction: interpolate the quantized
+    /// aggregate `g(s)` ([`crate::quant::quant_aggregate`]) on the sum
+    /// support `S_q = {−n(q−1), …, n(q−1) step 2}` via the same Fermat
+    /// indicators as [`Self::build_fermat`], over
+    /// `p = next_prime(max(n,2)·(q−1))`.
+    ///
+    /// At `q = 2` the field, the support, and the target map all collapse
+    /// to the sign-vote construction, so the coefficients equal
+    /// [`Self::build_fermat`]'s exactly (pinned by
+    /// `fermat_q2_equals_legacy` below) — the q = 2 quant path IS the
+    /// legacy path, dealer streams and all.
+    pub fn build_fermat_q(n: usize, q: u8, policy: TiePolicy) -> MvPolynomial {
+        assert!(n >= 1, "group size must be ≥ 1");
+        crate::quant::validate_precision(q);
+        let qm1 = q as u64 - 1;
+        // Same primality requirements as build_fermat, scaled: the
+        // support has n(q−1)+1 points spaced 2 apart, pairwise distinct
+        // mod p for odd p > n(q−1); max(n,2) also guarantees
+        // p > 2(q−1), so every output level lifts unambiguously.
+        let fp = Fp::new(next_prime(n.max(2) as u64 * qm1));
+        let p = fp.modulus();
+        let mut acc = Poly::zero(fp);
+        let hi = (n as i64) * qm1 as i64;
+        let mut m = -hi;
+        while m <= hi {
+            let v = crate::quant::quant_aggregate(m, n, q, policy);
+            if v != 0 {
+                // indicator = 1 − (x − m)^(p−1), scaled by the level
+                let mut ind = Poly::constant(fp, 1);
+                let m_f = fp.from_i64(m);
+                for _ in 0..p - 1 {
+                    ind.mul_linear(m_f);
+                }
+                let v_f = fp.from_i64(v);
+                acc.add_scaled(v_f, &Poly::constant(fp, 1));
+                acc.add_scaled(fp.neg(v_f), &ind);
+            }
+            m += 2;
+        }
+        MvPolynomial { n, policy, q, fp, poly: acc }
+    }
+
+    /// Lagrange cross-check for [`Self::build_fermat_q`]: full-domain
+    /// interpolation of `g` on `S_q` and 0 elsewhere.
+    pub fn build_lagrange_q(n: usize, q: u8, policy: TiePolicy) -> MvPolynomial {
+        assert!(n >= 1, "group size must be ≥ 1");
+        crate::quant::validate_precision(q);
+        let qm1 = q as u64 - 1;
+        let fp = Fp::new(next_prime(n.max(2) as u64 * qm1));
+        let p = fp.modulus();
+        let mut target = vec![0u64; p as usize];
+        let hi = (n as i64) * qm1 as i64;
+        let mut m = -hi;
+        while m <= hi {
+            let v = crate::quant::quant_aggregate(m, n, q, policy);
+            target[fp.from_i64(m) as usize] = fp.from_i64(v);
+            m += 2;
+        }
+        let mut acc = Poly::zero(fp);
+        for v in 0..p {
+            let t = target[v as usize];
+            if t == 0 {
+                continue;
+            }
+            let mut basis = Poly::constant(fp, 1);
+            let mut denom = 1u64;
+            for w in 0..p {
+                if w == v {
+                    continue;
+                }
+                basis.mul_linear(w);
+                denom = fp.mul(denom, fp.sub(v, w));
+            }
+            let k = fp.mul(t, fp.inv(denom));
+            acc.add_scaled(k, &basis);
+        }
+        MvPolynomial { n, policy, q, fp, poly: acc }
     }
 
     /// Construct via full-domain Lagrange interpolation of the target
@@ -283,7 +364,7 @@ impl MvPolynomial {
             let k = fp.mul(t, fp.inv(denom));
             acc.add_scaled(k, &basis);
         }
-        MvPolynomial { n, policy, fp, poly: acc }
+        MvPolynomial { n, policy, q: 2, fp, poly: acc }
     }
 
     /// Degree of F (0 for a constant/zero polynomial).
@@ -299,9 +380,10 @@ impl MvPolynomial {
     }
 
     /// Ground-truth majority vote with this policy — what Lemma 1 says
-    /// `vote_of_sum` must equal on the support.
+    /// `vote_of_sum` must equal on the support. For a q-level polynomial
+    /// this is the quantized aggregate (the sign at `q = 2`).
     pub fn expected_vote(&self, sum: i64) -> i64 {
-        self.policy.sign(sum)
+        crate::quant::quant_aggregate(sum, self.n, self.q, self.policy)
     }
 }
 
@@ -462,6 +544,59 @@ mod tests {
                     a.poly.coeffs, b.poly.coeffs,
                     "constructions differ for n={n} {policy:?}"
                 );
+            }
+        }
+        // …and the q-level generalization, for every supported precision
+        // and both tie policies (smaller n range: p grows with n·(q−1)).
+        for q in crate::quant::PRECISIONS {
+            for n in 1..=6 {
+                for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+                    let a = MvPolynomial::build_fermat_q(n, q, policy);
+                    let b = MvPolynomial::build_lagrange_q(n, q, policy);
+                    assert_eq!(a.fp.modulus(), b.fp.modulus());
+                    assert_eq!(
+                        a.poly.coeffs, b.poly.coeffs,
+                        "q-level constructions differ for n={n} q={q} {policy:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The q = 2 quant polynomial IS the legacy sign-vote polynomial:
+    /// same prime, same coefficients — so every downstream consumer
+    /// (EvalPlan, schedules, dealer streams) is byte-identical.
+    #[test]
+    fn fermat_q2_equals_legacy() {
+        for n in 1..=16 {
+            for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+                let legacy = MvPolynomial::build_fermat(n, policy);
+                let quant = MvPolynomial::build_fermat_q(n, 2, policy);
+                assert_eq!(legacy.fp.modulus(), quant.fp.modulus(), "n={n} {policy:?}");
+                assert_eq!(legacy.poly.coeffs, quant.poly.coeffs, "n={n} {policy:?}");
+            }
+        }
+    }
+
+    /// Lemma 1 generalized: F_q(Σxᵢ) equals the quantized aggregate for
+    /// every achievable sum — exhaustive over the q-level support.
+    #[test]
+    fn lemma1_quantized_exhaustive() {
+        for q in crate::quant::PRECISIONS {
+            for n in 1..=5usize {
+                for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+                    let mv = MvPolynomial::build_fermat_q(n, q, policy);
+                    let hi = n as i64 * (q as i64 - 1);
+                    let mut sum = -hi;
+                    while sum <= hi {
+                        assert_eq!(
+                            mv.vote_of_sum(sum),
+                            crate::quant::quant_aggregate(sum, n, q, policy),
+                            "q={q} n={n} {policy:?} sum={sum}"
+                        );
+                        sum += 2;
+                    }
+                }
             }
         }
     }

@@ -26,8 +26,8 @@ use crate::beaver::Dealer;
 use crate::field::{next_prime, Fp};
 use crate::metrics::CommStats;
 use crate::mpc::{
-    plain_group_vote, secure_group_vote, BroadcastMsg, EvalPlan, Party, Server,
-    Transcript, UplinkMsg,
+    plain_group_vote, plain_quant_group_vote, secure_group_vote_q, BroadcastMsg, EvalPlan,
+    Party, Server, Transcript, UplinkMsg,
 };
 use crate::poly::{MvPolynomial, TiePolicy};
 use crate::shamir::{reconstruct, share};
@@ -46,19 +46,32 @@ pub struct HiSafeConfig {
     pub inter: TiePolicy,
     /// Use the sparse power schedule (ablation; paper = false).
     pub sparse: bool,
+    /// Quantization precision `q ∈ {2, 4, 8, 16}`: users vote with the
+    /// `q` midrise levels `L_q = {−(q−1), …, q−1}` ([`crate::quant`]).
+    /// `2` is the paper's 1-bit sign vote — byte-identical to the
+    /// pre-quantization code path.
+    pub precision: u8,
 }
 
 impl HiSafeConfig {
     /// Flat Hi-SAFE (Algorithm 2): one group of all `n` users.
     pub fn flat(n: usize, policy: TiePolicy) -> HiSafeConfig {
-        HiSafeConfig { n, ell: 1, intra: policy, inter: policy, sparse: false }
+        HiSafeConfig { n, ell: 1, intra: policy, inter: policy, sparse: false, precision: 2 }
     }
 
     /// Hierarchical Hi-SAFE (Algorithm 3) with the paper's preferred
     /// 1-bit-downlink configurations: `A-1` (intra OneBit) or `B-1`
     /// (intra TwoBit); global policy is OneBit in both.
     pub fn hierarchical(n: usize, ell: usize, intra: TiePolicy) -> HiSafeConfig {
-        HiSafeConfig { n, ell, intra, inter: TiePolicy::OneBit, sparse: false }
+        HiSafeConfig { n, ell, intra, inter: TiePolicy::OneBit, sparse: false, precision: 2 }
+    }
+
+    /// The same configuration at quantization precision `q` (panics
+    /// unless `q ∈ {2, 4, 8, 16}`).
+    pub fn with_precision(mut self, q: u8) -> HiSafeConfig {
+        crate::quant::validate_precision(q);
+        self.precision = q;
+        self
     }
 
     /// Subgroup size `n₁ = n/ℓ`. Panics unless `ℓ | n` (the paper assumes
@@ -79,7 +92,11 @@ impl HiSafeConfig {
             TiePolicy::OneBit => "1",
             TiePolicy::TwoBit => "2",
         };
-        format!("{a}-{b}")
+        if self.precision == 2 {
+            format!("{a}-{b}")
+        } else {
+            format!("{a}-{b}-q{}", self.precision)
+        }
     }
 
     /// Is this configuration compatible with SIGNSGD-MV's 1-bit global
@@ -135,6 +152,23 @@ pub fn inter_group_vote(subgroup_votes: &[Vec<i8>], inter: TiePolicy) -> Vec<i8>
         .collect()
 }
 
+/// q-level generalization of [`inter_group_vote`]: the quantized
+/// aggregate of the `ℓ` subgroup votes ([`crate::quant::quant_aggregate`]
+/// over `n = ℓ` inputs). `q = 2` takes the legacy sign path exactly.
+pub fn inter_group_vote_q(subgroup_votes: &[Vec<i8>], q: u8, inter: TiePolicy) -> Vec<i8> {
+    if q == 2 {
+        return inter_group_vote(subgroup_votes, inter);
+    }
+    let ell = subgroup_votes.len();
+    let d = subgroup_votes[0].len();
+    (0..d)
+        .map(|j| {
+            let sum: i64 = subgroup_votes.iter().map(|s| s[j] as i64).sum();
+            crate::quant::quant_aggregate(sum, ell, q, inter) as i8
+        })
+        .collect()
+}
+
 /// Run one Hi-SAFE round in-process (the trainer hot path).
 ///
 /// `signs[i]` is user `i`'s ±1 sign-gradient vector.
@@ -152,7 +186,13 @@ pub fn run_sync(signs: &[Vec<i8>], cfg: HiSafeConfig, seed: u64) -> RoundOutcome
     let run_group = |g: usize, members: &[usize]| {
         let group_signs: Vec<Vec<i8>> =
             members.iter().map(|&i| signs[i].clone()).collect();
-        secure_group_vote(&group_signs, cfg.intra, cfg.sparse, group_dealer_seed(seed, g))
+        secure_group_vote_q(
+            &group_signs,
+            cfg.precision,
+            cfg.intra,
+            cfg.sparse,
+            group_dealer_seed(seed, g),
+        )
     };
     let outcomes: Vec<crate::mpc::GroupVoteOutcome> = if parallel {
         std::thread::scope(|scope| {
@@ -177,8 +217,8 @@ pub fn run_sync(signs: &[Vec<i8>], cfg: HiSafeConfig, seed: u64) -> RoundOutcome
         subgroup_votes.push(out.votes);
         transcripts.push(out.transcript);
     }
-    let global_vote = inter_group_vote(&subgroup_votes, cfg.inter);
-    stats.vote_bits = cfg.inter.downlink_bits();
+    let global_vote = inter_group_vote_q(&subgroup_votes, cfg.precision, cfg.inter);
+    stats.vote_bits = crate::quant::downlink_bits(cfg.precision, cfg.inter);
     RoundOutcome { global_vote, subgroup_votes, stats, transcripts }
 }
 
@@ -198,6 +238,48 @@ pub fn plain_hierarchical_vote(
         })
         .collect();
     inter_group_vote(&subgroup_votes, cfg.inter)
+}
+
+/// Plaintext reference for the q-level hierarchy — what every secure
+/// path must reproduce bit-for-bit at `cfg.precision`: per subgroup the
+/// quantized aggregate of its members' levels, then the quantized
+/// aggregate of the subgroup votes. Equals [`plain_hierarchical_vote`]
+/// when `cfg.precision == 2` (pinned by the tests below).
+pub fn plain_quant_aggregate(signs: &[Vec<i8>], cfg: HiSafeConfig) -> Vec<i8> {
+    let groups = partition(cfg.n, cfg.ell);
+    let subgroup_votes: Vec<Vec<i8>> = groups
+        .iter()
+        .map(|members| {
+            let group_signs: Vec<Vec<i8>> =
+                members.iter().map(|&i| signs[i].clone()).collect();
+            plain_quant_group_vote(&group_signs, cfg.precision, cfg.intra)
+        })
+        .collect();
+    inter_group_vote_q(&subgroup_votes, cfg.precision, cfg.inter)
+}
+
+/// Survivor-set variant of [`plain_quant_aggregate`]: each subgroup
+/// aggregates over its *present* members only — the churn-path q-level
+/// reference (mirror of [`plain_hierarchical_vote_present`]).
+pub fn plain_quant_aggregate_present(
+    signs: &[Vec<i8>],
+    present: &ParticipantSet,
+    cfg: HiSafeConfig,
+) -> Vec<i8> {
+    let groups = partition(cfg.n, cfg.ell);
+    let subgroup_votes: Vec<Vec<i8>> = groups
+        .iter()
+        .map(|members| {
+            let group_signs: Vec<Vec<i8>> = present
+                .group_survivors(members)
+                .iter()
+                .map(|&i| signs[i].clone())
+                .collect();
+            assert!(!group_signs.is_empty(), "a group lost every member");
+            plain_quant_group_vote(&group_signs, cfg.precision, cfg.intra)
+        })
+        .collect();
+    inter_group_vote_q(&subgroup_votes, cfg.precision, cfg.inter)
 }
 
 // ------------------------------------------------------- participant sets
@@ -432,13 +514,20 @@ pub fn run_sync_with_dropouts(
         let out = if survivors.len() == members.len() {
             let group_signs: Vec<Vec<i8>> =
                 members.iter().map(|&i| signs[i].clone()).collect();
-            secure_group_vote(&group_signs, cfg.intra, cfg.sparse, group_dealer_seed(seed, g))
+            secure_group_vote_q(
+                &group_signs,
+                cfg.precision,
+                cfg.intra,
+                cfg.sparse,
+                group_dealer_seed(seed, g),
+            )
         } else {
             let key = recover_cohort_key(seed, g, members, present);
             let survivor_signs: Vec<Vec<i8>> =
                 survivors.iter().map(|&i| signs[i].clone()).collect();
-            secure_group_vote(
+            secure_group_vote_q(
                 &survivor_signs,
+                cfg.precision,
                 cfg.intra,
                 cfg.sparse,
                 churn_dealer_seed(seed, g, key),
@@ -448,8 +537,8 @@ pub fn run_sync_with_dropouts(
         subgroup_votes.push(out.votes);
         transcripts.push(out.transcript);
     }
-    let global_vote = inter_group_vote(&subgroup_votes, cfg.inter);
-    stats.vote_bits = cfg.inter.downlink_bits();
+    let global_vote = inter_group_vote_q(&subgroup_votes, cfg.precision, cfg.inter);
+    stats.vote_bits = crate::quant::downlink_bits(cfg.precision, cfg.inter);
     Ok(RoundOutcome { global_vote, subgroup_votes, stats, transcripts })
 }
 
@@ -503,7 +592,7 @@ pub fn run_threaded(signs: &[Vec<i8>], cfg: HiSafeConfig, seed: u64) -> RoundOut
 
     // Per-group plan + offline triples (same derivation as run_sync so the
     // outcomes match bit-for-bit).
-    let mv = MvPolynomial::build_fermat(n1, cfg.intra);
+    let mv = MvPolynomial::build_fermat_q(n1, cfg.precision, cfg.intra);
     let plan = Arc::new(EvalPlan::new(&mv, d, cfg.sparse));
     let fp = plan.fp;
     let depth = plan.schedule.depth();
@@ -592,14 +681,14 @@ pub fn run_threaded(signs: &[Vec<i8>], cfg: HiSafeConfig, seed: u64) -> RoundOut
         let shares: Vec<Vec<u64>> =
             finals[g].iter_mut().map(|s| s.take().expect("all finals")).collect();
         let raw = server.finalize(shares);
-        let votes: Vec<i8> = raw.iter().map(|&v| fp.sign_of(v)).collect();
-        server.stats.vote_bits = cfg.intra.downlink_bits();
+        let votes: Vec<i8> = raw.iter().map(|&v| fp.level_of(v)).collect();
+        server.stats.vote_bits = crate::quant::downlink_bits(cfg.precision, cfg.intra);
         stats.merge(&server.stats);
         subgroup_votes.push(votes);
         transcripts.push(server.transcript.clone());
     }
-    let global_vote = Arc::new(inter_group_vote(&subgroup_votes, cfg.inter));
-    stats.vote_bits = cfg.inter.downlink_bits();
+    let global_vote = Arc::new(inter_group_vote_q(&subgroup_votes, cfg.precision, cfg.inter));
+    stats.vote_bits = crate::quant::downlink_bits(cfg.precision, cfg.inter);
     for (_, tx, _) in &user_handles {
         tx.send(ToUser::GlobalVote(Arc::clone(&global_vote))).expect("user alive");
     }
@@ -631,7 +720,7 @@ mod tests {
             let d = g.usize_range(1, 16);
             let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
             let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
-            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
+            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool(), precision: 2 };
             let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
             let out = run_sync(&signs, cfg, g.u64());
             prop_assert_eq!(
@@ -714,7 +803,7 @@ mod tests {
     fn config_labels() {
         assert_eq!(HiSafeConfig::hierarchical(24, 8, TiePolicy::OneBit).label(), "A-1");
         assert_eq!(HiSafeConfig::hierarchical(24, 8, TiePolicy::TwoBit).label(), "B-1");
-        let b2 = HiSafeConfig { n: 24, ell: 8, intra: TiePolicy::TwoBit, inter: TiePolicy::TwoBit, sparse: false };
+        let b2 = HiSafeConfig { n: 24, ell: 8, intra: TiePolicy::TwoBit, inter: TiePolicy::TwoBit, sparse: false, precision: 2 };
         assert_eq!(b2.label(), "B-2");
         assert!(!b2.signsgd_compatible());
         assert!(HiSafeConfig::flat(24, TiePolicy::OneBit).signsgd_compatible());
@@ -789,6 +878,7 @@ mod tests {
                 intra: if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit },
                 inter: if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit },
                 sparse: g.bool(),
+                precision: 2,
             };
             let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
             let seed = g.u64();
@@ -824,6 +914,7 @@ mod tests {
                 intra: if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit },
                 inter: if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit },
                 sparse: g.bool(),
+                precision: 2,
             };
             let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
             let present = viable_mask(g, cfg);

@@ -1,0 +1,308 @@
+//! q-level quantized aggregation — the heterogeneous-precision
+//! generalization of the 1-bit majority vote (HeteroSAg/ScionFL-style
+//! multi-level quantization on Hi-SAFE's polynomial machinery).
+//!
+//! A precision-`q` tenant (`q ∈ {2, 4, 8, 16}`) votes with **midrise
+//! levels** `L_q = {−(q−1), −(q−3), …, q−1}` — the `q` odd integers
+//! centered on zero, step 2. For `q = 2` that is `{−1, +1}`: the sign
+//! vote, byte for byte.
+//!
+//! The aggregate of `n` levels summing to `s` is the level nearest the
+//! mean `s/n` ([`quant_aggregate`]); an exact midpoint (the mean lands
+//! halfway between two adjacent levels) resolves by [`TiePolicy`]:
+//! `OneBit` rounds to the **lower** level (matching the paper's
+//! `sign(0) = −1` at `q = 2`), `TwoBit` outputs the even midpoint value
+//! itself (matching `sign(0) = 0`). Because every input is odd, midpoints
+//! only occur when `n | s` with an even quotient — exactly the `q = 2`
+//! tie, generalized.
+//!
+//! The secure path interpolates this aggregate map over `F_p` with
+//! `p = next_prime(max(n,2)·(q−1))`
+//! ([`crate::poly::MvPolynomial::build_fermat_q`]); at `q = 2` the prime,
+//! the polynomial, and therefore the Beaver schedule and every dealer
+//! stream collapse to the legacy sign-vote construction — the equality is
+//! pinned coefficient-for-coefficient by the poly tests.
+
+use crate::poly::TiePolicy;
+
+/// The supported precisions: powers of two so level indices pack into
+/// whole bits on the wire.
+pub const PRECISIONS: [u8; 4] = [2, 4, 8, 16];
+
+/// Panic unless `q` is a supported precision.
+pub fn validate_precision(q: u8) {
+    assert!(
+        PRECISIONS.contains(&q),
+        "precision must be one of {PRECISIONS:?}, got {q}"
+    );
+}
+
+/// `Ok` iff `q` is a supported precision — the non-panicking check the
+/// service admission path uses.
+pub fn check_precision(q: u8) -> Result<(), String> {
+    if PRECISIONS.contains(&q) {
+        Ok(())
+    } else {
+        Err(format!("precision must be one of {PRECISIONS:?}, got {q}"))
+    }
+}
+
+/// The midrise level set `L_q = {−(q−1), −(q−3), …, q−1}` in ascending
+/// order. `levels(2) == [−1, 1]` — the sign alphabet.
+pub fn levels(q: u8) -> Vec<i64> {
+    validate_precision(q);
+    let qm1 = (q - 1) as i64;
+    (-qm1..=qm1).step_by(2).collect()
+}
+
+/// The q-level aggregate `g(s)` of `n` inputs summing to `s`: the level
+/// in `L_q` nearest `s/n`, with an exact midpoint resolved by `policy`
+/// (`OneBit` → lower level, `TwoBit` → the even midpoint value). Means
+/// beyond the extreme levels clamp. `quant_aggregate(s, n, 2, policy)`
+/// is exactly `policy.sign(s)`.
+pub fn quant_aggregate(sum: i64, n: usize, q: u8, policy: TiePolicy) -> i64 {
+    assert!(n >= 1, "aggregate of at least one input");
+    validate_precision(q);
+    let qm1 = (q - 1) as i64;
+    let n_i = n as i64;
+    // Scan the ≤ 16 levels ascending; |s − n·ℓ| is V-shaped in ℓ, so an
+    // equal distance can only be the two levels straddling s/n — the
+    // midpoint tie.
+    let mut best = -qm1;
+    let mut best_dist = (sum + n_i * qm1).abs();
+    let mut lvl = -qm1 + 2;
+    while lvl <= qm1 {
+        let dist = (sum - n_i * lvl).abs();
+        if dist < best_dist {
+            best = lvl;
+            best_dist = dist;
+        } else if dist == best_dist {
+            // exact midpoint between `best` (= lvl − 2) and `lvl`
+            return match policy {
+                TiePolicy::OneBit => best,
+                TiePolicy::TwoBit => lvl - 1,
+            };
+        }
+        lvl += 2;
+    }
+    best
+}
+
+/// Downlink bits per coordinate for a precision-`q` vote. At `q = 2`
+/// this is the legacy policy-driven 1/2-bit downlink; a `q > 2` vote can
+/// take any of the `2q − 1` values in `[−(q−1), q−1]` (even values at
+/// `TwoBit` midpoints), so it costs `⌈log₂(2q−1)⌉` bits regardless of
+/// policy.
+pub fn downlink_bits(q: u8, inter: TiePolicy) -> u32 {
+    validate_precision(q);
+    if q == 2 {
+        inter.downlink_bits()
+    } else {
+        let symbols = 2 * q as u32 - 1;
+        32 - (symbols - 1).leading_zeros()
+    }
+}
+
+/// Uplink bits per coordinate a precision-`q` *input* costs on the wire:
+/// `q` odd levels plus the absent/zero symbol pack into
+/// `⌈log₂(q+1)⌉` bits. `uplink_bits(2) == 2` — the legacy 2-bit sign
+/// packing.
+pub fn uplink_bits(q: u8) -> u32 {
+    validate_precision(q);
+    let symbols = q as u32 + 1;
+    32 - (symbols - 1).leading_zeros()
+}
+
+/// A per-tenant gradient quantizer onto `L_q`: `x ↦ level ≈ x / scale`.
+///
+/// Two rounding modes:
+/// * [`Quantizer::quantize`] — deterministic midrise: the level whose
+///   half-open cell `[2k, 2k+2)` contains `x/scale` (so at `q = 2` it is
+///   the sign with `0 ↦ +1`).
+/// * [`Quantizer::quantize_stochastic`] — unbiased stochastic rounding
+///   between the two bracketing levels; the caller supplies the uniform
+///   draw so every execution path stays a pure function of its streams.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quantizer {
+    /// Number of levels (`∈ {2, 4, 8, 16}`).
+    pub q: u8,
+    /// Per-tenant scale: the gradient magnitude one level step represents.
+    pub scale: f32,
+}
+
+impl Quantizer {
+    pub fn new(q: u8, scale: f32) -> Quantizer {
+        validate_precision(q);
+        assert!(scale > 0.0 && scale.is_finite(), "scale must be positive, got {scale}");
+        Quantizer { q, scale }
+    }
+
+    fn clamp(&self, lvl: i64) -> i8 {
+        let qm1 = (self.q - 1) as i64;
+        lvl.clamp(-qm1, qm1) as i8
+    }
+
+    /// Deterministic midrise quantization of one coordinate.
+    pub fn quantize(&self, x: f32) -> i8 {
+        let y = (x / self.scale) as f64;
+        // the odd integer whose cell [2k, 2k+2) contains y
+        self.clamp(2 * (y / 2.0).floor() as i64 + 1)
+    }
+
+    /// Unbiased stochastic rounding: round `x/scale` up to the next level
+    /// with probability proportional to its position in the level cell.
+    /// `u` is a uniform draw in `[0, 1)`.
+    pub fn quantize_stochastic(&self, x: f32, u: f64) -> i8 {
+        debug_assert!((0.0..1.0).contains(&u), "u must be a unit draw, got {u}");
+        let qm1 = (self.q - 1) as f64;
+        let y = ((x / self.scale) as f64).clamp(-qm1, qm1);
+        // largest level ≤ y, and its upper neighbor
+        let lo = 2.0 * ((y + 1.0) / 2.0).floor() - 1.0;
+        let up = (y - lo) / 2.0; // ∈ [0, 1)
+        self.clamp(if u < up { lo as i64 + 2 } else { lo as i64 })
+    }
+
+    /// Quantize a full vector deterministically.
+    pub fn quantize_vec(&self, xs: &[f32]) -> Vec<i8> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Map a level back to gradient space.
+    pub fn dequantize(&self, level: i8) -> f32 {
+        level as f32 * self.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_sets() {
+        assert_eq!(levels(2), vec![-1, 1]);
+        assert_eq!(levels(4), vec![-3, -1, 1, 3]);
+        assert_eq!(levels(8), vec![-7, -5, -3, -1, 1, 3, 5, 7]);
+        assert_eq!(levels(16).len(), 16);
+        assert_eq!(levels(16)[0], -15);
+        assert_eq!(*levels(16).last().unwrap(), 15);
+    }
+
+    #[test]
+    #[should_panic(expected = "precision must be one of")]
+    fn rejects_unsupported_precision() {
+        validate_precision(3);
+    }
+
+    /// `q = 2` collapses to the legacy sign with the policy tie — the
+    /// byte-for-byte anchor for the whole subsystem.
+    #[test]
+    fn q2_aggregate_is_the_policy_sign() {
+        for n in 1..=12usize {
+            for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+                for sum in -(n as i64)..=(n as i64) {
+                    assert_eq!(
+                        quant_aggregate(sum, n, 2, policy),
+                        policy.sign(sum),
+                        "n={n} sum={sum} {policy:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aggregate_is_nearest_level() {
+        // n = 2, q = 4: mean 2.0 is the midpoint of levels 1 and 3.
+        assert_eq!(quant_aggregate(4, 2, 4, TiePolicy::OneBit), 1);
+        assert_eq!(quant_aggregate(4, 2, 4, TiePolicy::TwoBit), 2);
+        // mean 2.5 → nearest level 3 under both policies
+        assert_eq!(quant_aggregate(5, 2, 4, TiePolicy::OneBit), 3);
+        assert_eq!(quant_aggregate(5, 2, 4, TiePolicy::TwoBit), 3);
+        // extreme sums clamp to the extreme level
+        assert_eq!(quant_aggregate(21, 3, 8, TiePolicy::OneBit), 7);
+        assert_eq!(quant_aggregate(-21, 3, 8, TiePolicy::OneBit), -7);
+    }
+
+    #[test]
+    fn aggregate_is_odd_symmetric_off_ties() {
+        // g(−s) = −g(s) whenever s is not a midpoint (OneBit breaks the
+        // symmetry only at ties, exactly like sign at 0).
+        for q in PRECISIONS {
+            for n in 1..=6usize {
+                let hi = n as i64 * (q as i64 - 1);
+                for s in -hi..=hi {
+                    let a = quant_aggregate(s, n, q, TiePolicy::TwoBit);
+                    let b = quant_aggregate(-s, n, q, TiePolicy::TwoBit);
+                    assert_eq!(a, -b, "q={q} n={n} s={s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wire_bit_widths() {
+        assert_eq!(uplink_bits(2), 2); // legacy 2-bit sign packing
+        assert_eq!(uplink_bits(4), 3);
+        assert_eq!(uplink_bits(8), 4);
+        assert_eq!(uplink_bits(16), 5);
+        assert_eq!(downlink_bits(2, TiePolicy::OneBit), 1);
+        assert_eq!(downlink_bits(2, TiePolicy::TwoBit), 2);
+        for policy in [TiePolicy::OneBit, TiePolicy::TwoBit] {
+            assert_eq!(downlink_bits(4, policy), 3);
+            assert_eq!(downlink_bits(8, policy), 4);
+            assert_eq!(downlink_bits(16, policy), 5);
+        }
+    }
+
+    #[test]
+    fn deterministic_quantizer_at_q2_is_the_sign() {
+        let z = Quantizer::new(2, 1.0);
+        assert_eq!(z.quantize(3.7), 1);
+        assert_eq!(z.quantize(-0.001), -1);
+        assert_eq!(z.quantize(0.0), 1); // midrise: 0 sits in the +1 cell
+    }
+
+    #[test]
+    fn deterministic_quantizer_hits_every_level() {
+        for q in PRECISIONS {
+            let z = Quantizer::new(q, 0.5);
+            for lvl in levels(q) {
+                // the cell center lvl·scale maps back to lvl
+                assert_eq!(z.quantize(lvl as f32 * 0.5), lvl as i8, "q={q} lvl={lvl}");
+                assert_eq!(z.dequantize(lvl as i8), lvl as f32 * 0.5);
+            }
+            // clamping beyond the extremes
+            assert_eq!(z.quantize(1e6), (q - 1) as i8);
+            assert_eq!(z.quantize(-1e6), -((q - 1) as i8));
+        }
+    }
+
+    #[test]
+    fn stochastic_quantizer_is_unbiased_and_bracketing() {
+        let z = Quantizer::new(8, 1.0);
+        // y = 2.5 sits between levels 1 and 3, 75% of the way up
+        assert_eq!(z.quantize_stochastic(2.5, 0.74), 3);
+        assert_eq!(z.quantize_stochastic(2.5, 0.76), 1);
+        // exactly on a level: never moves
+        for u in [0.0, 0.3, 0.99] {
+            assert_eq!(z.quantize_stochastic(3.0, u), 3);
+        }
+        // empirical mean over a deterministic low-discrepancy sweep
+        let y = 1.8f32;
+        let n = 10_000;
+        let mean: f64 = (0..n)
+            .map(|i| z.quantize_stochastic(y, (i as f64 + 0.5) / n as f64) as f64)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - y as f64).abs() < 1e-2, "mean {mean} vs {y}");
+    }
+
+    #[test]
+    fn stochastic_clamps_out_of_range() {
+        let z = Quantizer::new(4, 1.0);
+        for u in [0.0, 0.5, 0.999] {
+            assert_eq!(z.quantize_stochastic(100.0, u), 3);
+            assert_eq!(z.quantize_stochastic(-100.0, u), -3);
+        }
+    }
+}

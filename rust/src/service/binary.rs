@@ -27,10 +27,16 @@
 //!   shortest-round-trip printing it never even re-parses).
 //! * `String` — u32 byte length + UTF-8 bytes.
 //! * `Option<T>` — 1 flag byte (0 absent, 1 present) then `T`.
-//! * **Sign vectors** — u32 coordinate count + 2 bits per coordinate
-//!   (`00`=0, `01`=+1, `10`=−1, `11` rejected), 4 per byte: 4x smaller
-//!   than the JSON sign-chars, 4*8x smaller than number arrays. This is
-//!   the hot-path payload (`RoundSubmit` is ~n*d/4 bytes).
+//! * **Sign vectors** — u32 coordinate count + a width byte `b ∈ {2, 3,
+//!   4, 5}` + `b` bits per coordinate, packed LSB-first. `b = 2` is the
+//!   sign alphabet (`00`=0, `01`=+1, `10`=−1, `11` rejected) — every
+//!   q = 2 payload. `b > 2` carries quantized levels offset-encoded as
+//!   `symbol = v + (2^(b−1) − 1)` (the all-ones symbol is out of range
+//!   and rejected). Encoders MUST pick the minimal width for the row's
+//!   largest |v| (b=3 covers |v| ≤ 3, b=4 ≤ 7, b=5 ≤ 15) and decoders
+//!   reject wider-than-needed rows, so the encoding stays canonical.
+//!   This is the hot-path payload (`RoundSubmit` is ~n*d/4 bytes at
+//!   q = 2, ~n*d*b/8 at higher precisions — bytes scale with log2(q)).
 //! * **Participant masks** — u32 entry count + 1 bit per entry.
 //!
 //! Packed tails must be zero-padded: the encoding is canonical (one
@@ -56,7 +62,9 @@ pub const MAGIC: u8 = 0xB2;
 
 /// Binary framing version, carried in every frame header. Independent
 /// of the JSON envelope's `"v":1` — bumping one does not bump the other.
-pub const VERSION: u8 = 2;
+/// v3 added the quantization fields: a `precision` byte in every config
+/// and a width tag on every packed sign vector.
+pub const VERSION: u8 = 3;
 
 /// Bytes before the payload: magic + version + u32 length.
 pub const HEADER_LEN: usize = 6;
@@ -123,12 +131,32 @@ pub fn parse_header(hdr: &[u8]) -> Result<usize, ProtoError> {
     Ok(len)
 }
 
+/// The canonical (minimal) packing width for a vote row: 2 for sign
+/// rows (|v| ≤ 1), else the smallest of {3, 4, 5} whose offset range
+/// covers the row's largest |v|.
+///
+/// # Panics
+///
+/// On values outside `[−15, 15]` — the engines never produce them
+/// (precision 16 caps levels at ±15), same contract as the JSON codec's
+/// `signs_str`.
+fn sign_width(signs: &[i8]) -> u8 {
+    let max = signs.iter().map(|&v| v.unsigned_abs()).max().unwrap_or(0);
+    match max {
+        0..=1 => 2,
+        2..=3 => 3,
+        4..=7 => 4,
+        8..=15 => 5,
+        other => panic!("vote values must be in [-15, 15], got magnitude {other}"),
+    }
+}
+
 // ---------------------------------------------------------------- encode
 
 /// Payload writer: a `Vec<u8>` plus the primitive encodings the module
-/// doc fixes. Everything is append-only, so encoding never fails (sign
-/// values outside `{-1, 0, +1}` panic, same contract as the JSON
-/// codec's `signs_str`).
+/// doc fixes. Everything is append-only, so encoding never fails (vote
+/// values outside `[−15, 15]` panic, same contract as the JSON codec's
+/// `signs_str`).
 struct W {
     buf: Vec<u8>,
 }
@@ -167,26 +195,38 @@ impl W {
         self.u8(present as u8);
     }
 
-    /// Sign vector: u32 count + 2 bits/coordinate, 4 per byte,
-    /// low-order pairs first, zero-padded tail.
+    /// Sign vector: u32 count + width byte + `width` bits/coordinate,
+    /// packed LSB-first with a zero-padded tail. The width is the
+    /// minimal one for the row (see [`sign_width`]), so q = 2 rows
+    /// always ride at the legacy 2 bits/coordinate.
     fn signs(&mut self, signs: &[i8]) {
         self.u32(u32::try_from(signs.len()).expect("sign vector too long for the wire"));
-        let mut byte = 0u8;
-        for (i, &s) in signs.iter().enumerate() {
-            let bits = match s {
-                0 => 0b00u8,
-                1 => 0b01,
-                -1 => 0b10,
-                other => panic!("sign values must be in {{-1, 0, +1}}, got {other}"),
+        let width = sign_width(signs);
+        self.u8(width);
+        let offset = (1i32 << (width - 1)) - 1;
+        let mut acc = 0u32;
+        let mut nbits = 0u32;
+        for &s in signs {
+            let sym = if width == 2 {
+                match s {
+                    0 => 0b00u32,
+                    1 => 0b01,
+                    -1 => 0b10,
+                    _ => unreachable!("sign_width chose 2 for a non-sign value"),
+                }
+            } else {
+                (s as i32 + offset) as u32
             };
-            byte |= bits << ((i & 3) * 2);
-            if i & 3 == 3 {
-                self.buf.push(byte);
-                byte = 0;
+            acc |= sym << nbits;
+            nbits += width as u32;
+            while nbits >= 8 {
+                self.buf.push((acc & 0xff) as u8);
+                acc >>= 8;
+                nbits -= 8;
             }
         }
-        if signs.len() % 4 != 0 {
-            self.buf.push(byte);
+        if nbits > 0 {
+            self.buf.push(acc as u8);
         }
     }
 
@@ -234,6 +274,7 @@ impl W {
         self.tie(cfg.intra);
         self.tie(cfg.inter);
         self.u8(cfg.sparse as u8);
+        self.u8(cfg.precision);
     }
 
     fn qos(&mut self, qos: &QosPolicy) {
@@ -516,19 +557,57 @@ impl<'a> R<'a> {
 
     fn signs(&mut self) -> Result<Vec<i8>, ProtoError> {
         let n = self.u32()? as usize;
-        let nbytes = n.div_ceil(4);
+        let width = self.u8()?;
+        if !(2..=5).contains(&width) {
+            return Err(perr(format!("sign vector width must be in [2, 5], got {width}")));
+        }
+        let nbytes = (n * width as usize).div_ceil(8);
         let bytes = self.take(nbytes)?;
+        let offset = (1i32 << (width - 1)) - 1;
+        let mask = (1u32 << width) - 1;
         let mut v = Vec::with_capacity(n);
-        for i in 0..n {
-            v.push(match (bytes[i / 4] >> ((i & 3) * 2)) & 0b11 {
-                0b00 => 0i8,
-                0b01 => 1,
-                0b10 => -1,
-                _ => return Err(perr("sign coordinate 0b11 is not in {-1, 0, +1}")),
+        let mut acc = 0u32;
+        let mut nbits = 0u32;
+        let mut bi = 0usize;
+        for _ in 0..n {
+            while nbits < width as u32 {
+                acc |= (bytes[bi] as u32) << nbits;
+                bi += 1;
+                nbits += 8;
+            }
+            let sym = acc & mask;
+            acc >>= width;
+            nbits -= width as u32;
+            v.push(if width == 2 {
+                match sym {
+                    0b00 => 0i8,
+                    0b01 => 1,
+                    0b10 => -1,
+                    _ => return Err(perr("sign coordinate 0b11 is not in {-1, 0, +1}")),
+                }
+            } else {
+                if sym == mask {
+                    return Err(perr(format!(
+                        "vote symbol {sym} is out of range for width {width}"
+                    )));
+                }
+                (sym as i32 - offset) as i8
             });
         }
-        if n % 4 != 0 && bytes[nbytes - 1] >> ((n % 4) * 2) != 0 {
+        // Exactly nbytes were consumed (the while-pull is need-driven),
+        // and whatever is left in the accumulator is tail padding.
+        if acc != 0 {
             return Err(perr("sign vector tail padding must be zero"));
+        }
+        // Canonicality: a width the row does not need is a stray
+        // encoding of the same value — reject it like stray padding.
+        if width > 2 {
+            let needs = 1u8 << (width - 2); // 3→2, 4→4, 5→8
+            if !v.iter().any(|&x| x.unsigned_abs() >= needs) {
+                return Err(perr(format!(
+                    "non-canonical sign vector: width {width} but no |vote| ≥ {needs}"
+                )));
+            }
         }
         Ok(v)
     }
@@ -565,13 +644,14 @@ impl<'a> R<'a> {
     }
 
     fn cfg(&mut self) -> Result<crate::protocol::HiSafeConfig, ProtoError> {
-        Ok(crate::protocol::HiSafeConfig {
-            n: self.usize()?,
-            ell: self.usize()?,
-            intra: self.tie()?,
-            inter: self.tie()?,
-            sparse: self.bool()?,
-        })
+        let n = self.usize()?;
+        let ell = self.usize()?;
+        let intra = self.tie()?;
+        let inter = self.tie()?;
+        let sparse = self.bool()?;
+        let precision = self.u8()?;
+        crate::quant::check_precision(precision).map_err(perr)?;
+        Ok(crate::protocol::HiSafeConfig { n, ell, intra, inter, sparse, precision })
     }
 
     fn qos(&mut self) -> Result<QosPolicy, ProtoError> {
@@ -829,9 +909,13 @@ mod tests {
         let mut bad = frame.clone();
         bad[0] = b'{';
         assert!(parse_header(&bad).unwrap_err().msg.contains("magic"));
-        // Unknown framing version.
+        // Unknown framing version (v2 frames lack the quant fields, so
+        // the old version is as foreign as a future one).
         let mut bad = frame.clone();
-        bad[1] = 3;
+        bad[1] = VERSION - 1;
+        assert!(parse_header(&bad).unwrap_err().msg.contains("version"));
+        let mut bad = frame.clone();
+        bad[1] = VERSION + 1;
         assert!(parse_header(&bad).unwrap_err().msg.contains("version"));
         // A length past the cap must be refused before any read.
         let mut bad = frame.clone();
@@ -866,10 +950,14 @@ mod tests {
             present: None,
         });
         let mut payload = split(&frame).to_vec();
-        // Payload: tag(1) + sid(8) + rows(4) + count(4) = 17 bytes before
-        // the packed sign byte.
-        payload[17] = 0b1111_1111;
+        // Payload: tag(1) + sid(8) + rows(4) + count(4) + width(1) = 18
+        // bytes before the packed sign byte.
+        payload[18] = 0b1111_1111;
         assert!(decode_request(&payload).unwrap_err().msg.contains("0b11"));
+        // A width outside [2, 5] is a decode error.
+        let mut payload = split(&frame).to_vec();
+        payload[17] = 6;
+        assert!(decode_request(&payload).unwrap_err().msg.contains("width"));
         // Nonzero padding in a sign tail is non-canonical.
         let frame = encode_request(&Request::RoundSubmit {
             session: crate::engine::SessionId::new(1),
@@ -910,6 +998,62 @@ mod tests {
             prop_assert!(bin * 3 <= json, "VoteReply: {bin} vs {json} bytes");
             Ok(())
         });
+    }
+
+    #[test]
+    fn quantized_vote_rows_round_trip_at_minimal_width() {
+        // Each row rides at the minimal width for its largest |vote|:
+        // sign rows keep the legacy 2 bits/coordinate, q = 16 rows pay 5.
+        for (row, width) in [
+            (vec![1i8, -1, 0, 1], 2u8),
+            (vec![3, -2, 0, 1], 3),
+            (vec![7, -4, 2, -1], 4),
+            (vec![15, -15, 8, 0], 5),
+        ] {
+            let req = Request::RoundSubmit {
+                session: crate::engine::SessionId::new(1),
+                signs: vec![row.clone()],
+                present: None,
+            };
+            let frame = encode_request(&req);
+            let payload = split(&frame);
+            assert_eq!(payload[17], width, "width tag for row {row:?}");
+            assert_eq!(decode_request(payload).unwrap(), req);
+        }
+        // Mixed-width rows in one submit each carry their own tag.
+        let req = Request::RoundSubmit {
+            session: crate::engine::SessionId::new(1),
+            signs: vec![vec![1, -1], vec![9, -9]],
+            present: None,
+        };
+        assert_eq!(decode_request(split(&encode_request(&req))).unwrap(), req);
+
+        // Canonicality: a wider-than-needed row is rejected like stray
+        // padding. Hand-build a width-3 encoding of the pure-sign row
+        // [+1, -1] (offset symbols 4 and 2 → bits 010_100 → 0x14).
+        let mut w = W::new(2);
+        w.sid(crate::engine::SessionId::new(1));
+        w.u32(1); // one row
+        w.u32(2); // two coordinates
+        w.u8(3); // non-minimal width
+        w.u8(0b010_100);
+        w.flag(false); // no present mask
+        let frame = w.finish();
+        let err = decode_request(split(&frame)).unwrap_err();
+        assert!(err.msg.contains("non-canonical"), "got: {err}");
+
+        // The all-ones symbol (v = 2^(width−1), past the level range)
+        // is out of range at every width > 2.
+        let mut w = W::new(2);
+        w.sid(crate::engine::SessionId::new(1));
+        w.u32(1);
+        w.u32(2);
+        w.u8(3);
+        w.u8(0b111_100); // symbols 4 (= +1) then 7 (all-ones)
+        w.flag(false);
+        let frame = w.finish();
+        let err = decode_request(split(&frame)).unwrap_err();
+        assert!(err.msg.contains("out of range"), "got: {err}");
     }
 
     #[test]

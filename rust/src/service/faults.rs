@@ -11,9 +11,12 @@
 //! every fault:
 //!
 //! * every client-observed vote is **bit-identical** to the plaintext
-//!   reference ([`plain_hierarchical_vote`] /
-//!   [`plain_hierarchical_vote_present`], which `run_sync` is pinned to
-//!   elsewhere) over the plan's survivor sets;
+//!   reference ([`plain_quant_aggregate`] /
+//!   [`plain_quant_aggregate_present`], which the secure paths are
+//!   pinned to elsewhere — the legacy sign reference at precision 2)
+//!   over the plan's survivor sets and at each tenant's quantization
+//!   precision (plans draw per-tenant precisions from the seed stream,
+//!   and at least one q > 2 tenant is guaranteed per plan);
 //! * below-threshold churn rounds abort with the same **typed**
 //!   [`AdmissionError::ChurnBelowThreshold`] the local engine raises;
 //! * no schedule wedges the connection-worker pump (the run ends with a
@@ -28,8 +31,8 @@
 //! `hisafe sweep --chaos-seed <seed>` runs a single schedule from the
 //! CLI and prints its [`ChaosReport`].
 //!
-//! [`plain_hierarchical_vote`]: crate::protocol::plain_hierarchical_vote
-//! [`plain_hierarchical_vote_present`]: crate::protocol::plain_hierarchical_vote_present
+//! [`plain_quant_aggregate`]: crate::protocol::plain_quant_aggregate
+//! [`plain_quant_aggregate_present`]: crate::protocol::plain_quant_aggregate_present
 //! [`AdmissionError::ChurnBelowThreshold`]: crate::engine::AdmissionError::ChurnBelowThreshold
 
 use std::io::{Read, Write};
@@ -40,7 +43,7 @@ use std::time::{Duration, Instant};
 use crate::engine::{AdmissionError, QosPolicy, SessionId};
 use crate::poly::TiePolicy;
 use crate::protocol::{
-    group_threshold, plain_hierarchical_vote, plain_hierarchical_vote_present, HiSafeConfig,
+    group_threshold, plain_quant_aggregate, plain_quant_aggregate_present, HiSafeConfig,
     ParticipantSet,
 };
 use crate::util::rng::{Rng, Xoshiro256pp};
@@ -174,7 +177,7 @@ impl FaultPlan {
     /// one frame-level fault per plan.
     pub fn from_seed(seed: u64) -> FaultPlan {
         let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xc0a5_f00d_5eed_cafe);
-        let tenants = (0..TENANTS as u64)
+        let mut tenants: Vec<TenantPlan> = (0..TENANTS as u64)
             .map(|t| {
                 let cfg = match rng.gen_below(4) {
                     0 => HiSafeConfig::hierarchical(6, 2, TiePolicy::OneBit),
@@ -182,8 +185,12 @@ impl FaultPlan {
                     2 => HiSafeConfig::flat(3, TiePolicy::OneBit),
                     _ => HiSafeConfig::flat(4, TiePolicy::OneBit),
                 };
+                // Per-tenant quantization precision, from the same seed
+                // stream (kept small — q ≤ 8 — so chaos fields stay
+                // cheap; q = 16 coverage lives in the property suites).
+                let q = [2u8, 2, 4, 8][rng.gen_below(4) as usize];
                 TenantPlan {
-                    cfg,
+                    cfg: cfg.with_precision(q),
                     d: 3 + rng.gen_below(4) as usize,
                     // Distinct by construction: tenant index in the low
                     // bits, a plan-level draw above them.
@@ -191,6 +198,13 @@ impl FaultPlan {
                 }
             })
             .collect();
+        // Every plan exercises the quantized path at least once: if the
+        // draws came up all-legacy, promote one tenant (deterministic —
+        // still a pure function of the seed stream).
+        if tenants.iter().all(|t| t.cfg.precision == 2) {
+            let promote = rng.gen_below(TENANTS as u64) as usize;
+            tenants[promote].cfg = tenants[promote].cfg.with_precision(4);
+        }
         let rounds = 5 + rng.gen_below(4); // 5..=8
         let mut schedule: Vec<(u64, Fault)> = Vec::new();
 
@@ -281,14 +295,34 @@ pub struct ChaosReport {
     pub typed_aborts: u64,
     /// Kind labels ([`Fault::kind`]) of every fault applied, in order.
     pub faults: Vec<&'static str>,
+    /// Each tenant's quantization precision, in plan order — for
+    /// coverage accounting across a seed sweep (every plan carries at
+    /// least one q > 2 tenant by construction).
+    pub precisions: Vec<u8>,
 }
 
-/// Deterministic per-round sign matrix for one tenant.
-fn round_signs(plan_seed: u64, tenant: usize, round: u64, n: usize, d: usize) -> Vec<Vec<i8>> {
+/// Deterministic per-round vote matrix for one tenant: uniform over the
+/// `q` odd midrise levels (`{−1, +1}` at `q = 2` — inputs are always
+/// *levels*, never the even tie-merge outputs, matching what a real
+/// quantizer submits).
+fn round_signs(
+    plan_seed: u64,
+    tenant: usize,
+    round: u64,
+    n: usize,
+    d: usize,
+    q: u8,
+) -> Vec<Vec<i8>> {
     let mut rng = Xoshiro256pp::seed_from_u64(
         plan_seed ^ 0x5169_7e5a ^ ((tenant as u64) << 40) ^ (round << 8),
     );
-    (0..n).map(|_| (0..d).map(|_| rng.gen_sign()).collect()).collect()
+    (0..n)
+        .map(|_| {
+            (0..d)
+                .map(|_| (2 * rng.gen_below(q as u64) as i64 - (q as i64 - 1)) as i8)
+                .collect()
+        })
+        .collect()
 }
 
 /// One running serve host the harness can kill and revive in place.
@@ -427,6 +461,7 @@ pub fn run_schedule(seed: u64) -> ChaosReport {
         votes_checked: 0,
         typed_aborts: 0,
         faults: Vec::new(),
+        precisions: plan.tenants.iter().map(|t| t.cfg.precision).collect(),
     };
 
     let mut hosts: Vec<Host> = (0..HOSTS).map(|_| spawn_host("127.0.0.1:0")).collect();
@@ -533,7 +568,8 @@ pub fn run_schedule(seed: u64) -> ChaosReport {
         }
 
         for (t, tenant) in plan.tenants.iter().enumerate() {
-            let signs = round_signs(plan.seed, t, round, tenant.cfg.n, tenant.d);
+            let signs =
+                round_signs(plan.seed, t, round, tenant.cfg.n, tenant.d, tenant.cfg.precision);
             match churned {
                 Some((ct, below)) if ct == t => {
                     let mask = churn_mask(tenant.cfg, below);
@@ -562,7 +598,7 @@ pub fn run_schedule(seed: u64) -> ChaosReport {
                         let set = ParticipantSet::from_mask(mask);
                         assert_eq!(
                             vote.global_vote,
-                            plain_hierarchical_vote_present(&signs, &set, tenant.cfg),
+                            plain_quant_aggregate_present(&signs, &set, tenant.cfg),
                             "seed {seed}: tenant {t} round {round}: churn vote diverged"
                         );
                         report.votes_checked += 1;
@@ -575,9 +611,9 @@ pub fn run_schedule(seed: u64) -> ChaosReport {
                     });
                     assert_eq!(
                         vote.global_vote,
-                        plain_hierarchical_vote(&signs, tenant.cfg),
-                        "seed {seed}: tenant {t} round {round}: vote diverged from run_sync's \
-                         reference"
+                        plain_quant_aggregate(&signs, tenant.cfg),
+                        "seed {seed}: tenant {t} round {round}: vote diverged from the \
+                         plaintext reference"
                     );
                     assert_eq!(vote.session, sids[t], "replies carry the client's id");
                     report.votes_checked += 1;
@@ -700,6 +736,15 @@ mod tests {
             }
             // Tenants are distinguishable after a balancer rebuild.
             assert_ne!(plan.tenants[0].seed, plan.tenants[1].seed);
+            // Every plan exercises the quantized path: at least one
+            // tenant runs at q > 2, and every precision is supported.
+            assert!(
+                plan.tenants.iter().any(|t| t.cfg.precision > 2),
+                "seed {seed}: plan drew no q > 2 tenant"
+            );
+            for t in &plan.tenants {
+                crate::quant::validate_precision(t.cfg.precision);
+            }
         }
     }
 

@@ -141,6 +141,11 @@ pub(crate) fn tenant_key(cfg: &HiSafeConfig, d: usize, seed: u64) -> u64 {
     h = splitmix64(h ^ cfg.intra.downlink_bits() as u64);
     h = splitmix64(h ^ ((cfg.inter.downlink_bits() as u64) << 8));
     h = splitmix64(h ^ ((cfg.sparse as u64) << 16));
+    // Mixed only off the sign-vote default so every q = 2 tenant keeps
+    // the exact pre-quant key (and therefore its shard/host placement).
+    if cfg.precision != 2 {
+        h = splitmix64(h ^ ((cfg.precision as u64) << 24));
+    }
     splitmix64(h ^ d as u64)
 }
 
@@ -272,6 +277,9 @@ fn validate_shape(cfg: &HiSafeConfig, d: usize) -> Result<(), AdmissionError> {
     }
     if d == 0 || d > MAX_DIM {
         return bad(format!("d = {d} must be in [1, {MAX_DIM}]"));
+    }
+    if let Err(e) = crate::quant::check_precision(cfg.precision) {
+        return bad(e);
     }
     Ok(())
 }
@@ -680,8 +688,8 @@ impl AggFrontend {
                 // rejection for wire input. The sign matrix keeps its
                 // full n-row shape even under churn; the mask (when
                 // carried at all) must name every registered user.
-                let (n, d) = match self.lock_router().sessions.get(session) {
-                    Some(m) => (m.cfg.n, m.d),
+                let (n, d, precision) = match self.lock_router().sessions.get(session) {
+                    Some(m) => (m.cfg.n, m.d, m.cfg.precision),
                     None => {
                         return error_reply(Some(*session), Error::UnknownSession(*session))
                     }
@@ -691,6 +699,22 @@ impl AggFrontend {
                         Some(*session),
                         Error::Admission(AdmissionError::Rejected {
                             reason: format!("sign matrix must be {n} users x {d} coordinates"),
+                        }),
+                    );
+                }
+                // Value-range check against the session's precision: the
+                // wire alphabet is self-describing up to |v| = 15, so a
+                // q = 4 session could otherwise smuggle q = 16 levels
+                // into a polynomial that cannot represent them.
+                let max_level = (precision - 1) as i8;
+                if signs.iter().flatten().any(|&v| v.abs() > max_level) {
+                    return error_reply(
+                        Some(*session),
+                        Error::Admission(AdmissionError::Rejected {
+                            reason: format!(
+                                "vote values must be in [-{max_level}, {max_level}] \
+                                 for a precision-{precision} session"
+                            ),
                         }),
                     );
                 }

@@ -360,12 +360,18 @@ fn sid_json(sid: SessionId) -> Json {
     Json::Str(sid.to_string())
 }
 
-/// A sign/vote vector as one char per coordinate: `+` / `-` / `0`.
+/// A sign/vote vector as one char per coordinate: `+` / `-` / `0` for
+/// the legacy sign alphabet, and for q-level quantized payloads the
+/// extension `'A' + (v − 2)` for `v ∈ [2, 15]` / `'a' + (−v − 2)` for
+/// `v ∈ [−15, −2]`. The encoding is self-describing (each char carries
+/// its own value), so q = 2 vectors are byte-identical to the pre-quant
+/// wire form and decoders need no precision context.
 ///
 /// # Panics
 ///
-/// On values outside `{-1, 0, +1}` — the engines never produce them, and
-/// a client submitting them has a bug this surfaces loudly.
+/// On values outside `[−15, 15]` — the engines never produce them
+/// (precision 16 caps levels at ±15), and a client submitting them has
+/// a bug this surfaces loudly.
 fn signs_str(signs: &[i8]) -> Json {
     let s: String = signs
         .iter()
@@ -373,7 +379,9 @@ fn signs_str(signs: &[i8]) -> Json {
             1 => '+',
             -1 => '-',
             0 => '0',
-            other => panic!("sign values must be in {{-1, 0, +1}}, got {other}"),
+            2..=15 => (b'A' + (v as u8 - 2)) as char,
+            -15..=-2 => (b'a' + ((-v) as u8 - 2)) as char,
+            other => panic!("vote values must be in [-15, 15], got {other}"),
         })
         .collect();
     Json::Str(s)
@@ -407,6 +415,11 @@ fn cfg_json(cfg: &HiSafeConfig) -> Json {
         .set("intra", cfg.intra.name())
         .set("inter", cfg.inter.name())
         .set("sparse", cfg.sparse);
+    // Omitted at the sign-vote default so q = 2 configs stay
+    // byte-identical to the pre-quant wire form (v1 compat).
+    if cfg.precision != 2 {
+        j.set("precision", cfg.precision as usize);
+    }
     j
 }
 
@@ -797,8 +810,10 @@ fn parse_signs(v: &Json) -> Result<Vec<i8>, ProtoError> {
             '+' => Ok(1i8),
             '-' => Ok(-1i8),
             '0' => Ok(0i8),
+            'A'..='N' => Ok((c as u8 - b'A') as i8 + 2),
+            'a'..='n' => Ok(-((c as u8 - b'a') as i8 + 2)),
             other => Err(ProtoError::new(format!(
-                "sign vectors are strings over '+', '-', '0'; got {other:?}"
+                "sign vectors are strings over '+', '-', '0', 'A'-'N', 'a'-'n'; got {other:?}"
             ))),
         })
         .collect()
@@ -843,6 +858,18 @@ fn parse_tie(j: &Json, key: &str) -> Result<TiePolicy, ProtoError> {
 }
 
 fn parse_cfg(j: &Json) -> Result<HiSafeConfig, ProtoError> {
+    // Absent ⇒ 2: v1 peers never send the key, and q = 2 encoders omit
+    // it (see cfg_json), so legacy configs round-trip unchanged.
+    let precision = match j.get("precision") {
+        None => 2u8,
+        Some(v) => {
+            let q = v
+                .as_usize()
+                .ok_or_else(|| ProtoError::new("'precision' must be an integer"))?;
+            u8::try_from(q).map_err(|_| ProtoError::new("'precision' out of range"))?
+        }
+    };
+    crate::quant::check_precision(precision).map_err(ProtoError::new)?;
     Ok(HiSafeConfig {
         n: parse_usize(j, "n")?,
         ell: parse_usize(j, "ell")?,
@@ -851,6 +878,7 @@ fn parse_cfg(j: &Json) -> Result<HiSafeConfig, ProtoError> {
         sparse: field(j, "sparse")?
             .as_bool()
             .ok_or_else(|| ProtoError::new("'sparse' must be a bool"))?,
+        precision,
     })
 }
 
@@ -965,6 +993,7 @@ pub(crate) mod testgen {
             intra: if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit },
             inter: if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit },
             sparse: g.bool(),
+            precision: crate::quant::PRECISIONS[g.usize_range(0, 3)],
         }
     }
 
@@ -1263,6 +1292,22 @@ mod tests {
                 .to_json();
         assert_eq!(keys(&open_bin), ["cfg", "codec", "d", "qos", "seed", "type", "v"]);
         assert_eq!(open_bin.get("codec").unwrap().as_str().unwrap(), "binary");
+        // Quantized precision is additive the same way: q = 2 omits the
+        // key entirely (the sign-vote frames above stay byte-identical to
+        // v1), and a q > 2 open adds exactly `cfg.precision`.
+        let open_q = Request::SessionOpen {
+            cfg: cfg.with_precision(8),
+            d: 3,
+            seed: 7,
+            qos,
+            codec: None,
+        }
+        .to_json();
+        assert_eq!(
+            keys(open_q.get("cfg").unwrap()),
+            ["ell", "inter", "intra", "n", "precision", "sparse"]
+        );
+        assert_eq!(open_q.get("cfg").unwrap().get("precision").unwrap().as_usize(), Some(8));
 
         let sid = SessionId::new(1);
         // All-present submits omit `present` entirely — the frame stays
@@ -1421,6 +1466,29 @@ mod tests {
         let j = req.to_json();
         let arr = j.get("signs").unwrap().as_arr().unwrap();
         assert_eq!(arr[0].as_str().unwrap(), "+-0+");
+    }
+
+    #[test]
+    fn quantized_signs_use_the_extended_alphabet() {
+        // q-level payloads stay one self-describing char per coordinate:
+        // 'A' + (v−2) for v ≥ 2, 'a' + (−v−2) for v ≤ −2. The sign
+        // subset {−1, 0, +1} keeps its v1 bytes exactly.
+        let req = Request::RoundSubmit {
+            session: SessionId::new(0),
+            signs: vec![vec![2, -2, 15, -15, 1, -1, 0]],
+            present: None,
+        };
+        let j = req.to_json();
+        let arr = j.get("signs").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_str().unwrap(), "AaNn+-0");
+        // Every representable level round-trips through the alphabet.
+        let all: Vec<i8> = (-15i8..=15).collect();
+        let back = parse_signs(&signs_str(&all)).unwrap();
+        assert_eq!(back, all);
+        // Out-of-alphabet characters are a decode error.
+        assert!(parse_signs(&Json::Str("O".into())).is_err());
+        assert!(parse_signs(&Json::Str("o".into())).is_err());
+        assert!(parse_signs(&Json::Str("9".into())).is_err());
     }
 
     /// Frames are newline-delimited, so compact encodings must never

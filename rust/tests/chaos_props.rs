@@ -41,11 +41,14 @@ fn seeded_fault_schedules_preserve_votes_and_leak_nothing() {
     let schedules = env_u64("HISAFE_CHAOS_SCHEDULES").unwrap_or(32);
     let mut executed: BTreeSet<&'static str> = BTreeSet::new();
     let mut votes = 0u64;
+    let mut quant_tenants = 0u64;
     for seed in 0..schedules {
         match catch_unwind(|| run_schedule(seed)) {
             Ok(report) => {
                 votes += report.votes_checked;
                 executed.extend(report.faults.iter().copied());
+                quant_tenants +=
+                    report.precisions.iter().filter(|&&q| q > 2).count() as u64;
             }
             Err(payload) => {
                 eprintln!(
@@ -58,6 +61,12 @@ fn seeded_fault_schedules_preserve_votes_and_leak_nothing() {
         }
     }
     assert!(votes > 0, "the sweep must check real votes");
+    // Quantization coverage: plans guarantee ≥ 1 q > 2 tenant each, so
+    // every sweep drives the q-level secure path under faults.
+    assert!(
+        quant_tenants >= schedules,
+        "a {schedules}-schedule sweep ran only {quant_tenants} q > 2 tenant(s)"
+    );
 
     // Execution coverage. Every plan guarantees a kill/revive pair and
     // one frame-level fault drawn from three kinds; the draws are

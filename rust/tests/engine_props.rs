@@ -14,10 +14,21 @@ use hisafe::mpc::{plain_group_vote, secure_group_vote};
 use hisafe::poly::TiePolicy;
 use hisafe::prop_assert_eq;
 use hisafe::protocol::{
-    check_thresholds, plain_hierarchical_vote, plain_hierarchical_vote_present, run_sync,
-    run_sync_with_dropouts, HiSafeConfig, ParticipantSet,
+    check_thresholds, plain_hierarchical_vote, plain_hierarchical_vote_present,
+    plain_quant_aggregate, plain_quant_aggregate_present, run_sync, run_sync_with_dropouts,
+    HiSafeConfig, ParticipantSet,
 };
-use hisafe::util::prop::forall;
+use hisafe::util::prop::{forall, Gen};
+
+/// A vector of uniformly random quantization levels from `L_q` — the odd
+/// integers `{-(q-1), …, q-1}` the secure path aggregates (sign bits at
+/// `q = 2`). Even values never reach the wire, so generators must not
+/// emit them: the plaintext reference is only pinned on `L_q`.
+fn level_vec(g: &mut Gen, q: u8, d: usize) -> Vec<i8> {
+    (0..d)
+        .map(|_| (2 * g.usize_range(0, q as usize - 1) as i64 - (q as i64 - 1)) as i8)
+        .collect()
+}
 
 /// Build one engine implementation for a random workload — the factory
 /// the generic properties run over.
@@ -80,7 +91,7 @@ fn engine_vote_equals_hierarchical_reference() {
             let d = g.usize_range(1, 24);
             let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
             let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
-            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
+            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool(), precision: 2 };
             let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
             let seed = g.u64();
             let got = mk(cfg, d, seed).run_round(&signs);
@@ -122,7 +133,7 @@ fn pipelined_engine_pins_bit_identical_to_sequential_and_run_sync() {
         let d = g.usize_range(1, 32);
         let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
         let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
-        let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
+        let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool(), precision: 2 };
         let seed = g.u64();
         let mut seq = RoundEngine::new(cfg, d, seed);
         let mut piped = PipelinedEngine::new(cfg, d, seed)
@@ -162,7 +173,7 @@ fn engine_analytic_stats_equal_measured_field_for_field() {
             let d = g.usize_range(1, 24);
             let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
             let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
-            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
+            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool(), precision: 2 };
             let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
             let seed = g.u64();
             let reference = run_sync(&signs, cfg, seed);
@@ -240,7 +251,7 @@ fn engine_churn_survivor_votes_equal_reference_for_random_masks() {
             let d = g.usize_range(1, 24);
             let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
             let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
-            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
+            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool(), precision: 2 };
             let signs: Vec<Vec<i8>> = (0..n).map(|_| g.sign_vec(d)).collect();
             // ~3/4 of users answer; below-threshold masks arise naturally.
             let mask: Vec<bool> = (0..n).map(|_| g.usize_range(0, 3) > 0).collect();
@@ -303,7 +314,7 @@ fn engine_churned_and_full_rounds_interleave_bit_identically() {
             let d = g.usize_range(1, 24);
             let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
             let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
-            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool() };
+            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool(), precision: 2 };
             let seed = g.u64();
             let mut engine = mk(cfg, d, seed);
             for round in 0..5u64 {
@@ -339,6 +350,61 @@ fn engine_churned_and_full_rounds_interleave_bit_identically() {
                 );
             }
             prop_assert_eq!(engine.rounds_run(), 5u64, "{impl_name} aborts never counted");
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn engine_quantized_votes_equal_plain_reference_for_all_precisions() {
+    // The quantization subsystem, generic over every Engine: at each
+    // q ∈ {2, 4, 8, 16} the engines' votes are bit-identical to the
+    // plaintext q-level reference `plain_quant_aggregate` and to the
+    // message-passing `run_sync`, on full-present and churned rounds
+    // alike. Inputs are drawn from L_q only (odd levels).
+    for (impl_name, mk) in factories() {
+        forall(&format!("{impl_name} q-level ≡ plain_quant_aggregate"), 16, |g| {
+            let q = hisafe::quant::PRECISIONS[g.usize_range(0, 3)];
+            let ell = g.usize_range(1, 3);
+            let n1 = g.usize_range(2, 5); // n₁ ≥ 2 ⇒ one dropout always survives
+            let n = ell * n1;
+            let d = g.usize_range(1, 16);
+            let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let cfg = HiSafeConfig { n, ell, intra, inter, sparse: g.bool(), precision: q };
+            let signs: Vec<Vec<i8>> = (0..n).map(|_| level_vec(g, q, d)).collect();
+            let seed = g.u64();
+            let got = mk(cfg, d, seed).run_round(&signs);
+            prop_assert_eq!(
+                &got.global_vote,
+                &plain_quant_aggregate(&signs, cfg),
+                "{impl_name} q={q} cfg={cfg:?}"
+            );
+            let reference = run_sync(&signs, cfg, seed);
+            prop_assert_eq!(
+                &got.global_vote,
+                &reference.global_vote,
+                "{impl_name} q={q} vs run_sync"
+            );
+            prop_assert_eq!(
+                &got.subgroup_votes,
+                &reference.subgroup_votes,
+                "{impl_name} q={q} subgroups"
+            );
+            // A churned round on a fresh engine: one dropout, survivors
+            // must still match the q-level survivor-set reference.
+            let mut mask = vec![true; n];
+            mask[g.usize_range(0, n - 1)] = false;
+            let present = ParticipantSet::from_mask(mask);
+            let churned = mk(cfg, d, seed)
+                .run_round_present(&signs, &present)
+                .expect("one dropout stays above threshold for n1 >= 2");
+            prop_assert_eq!(
+                &churned.global_vote,
+                &plain_quant_aggregate_present(&signs, &present, cfg),
+                "{impl_name} q={q} churned cfg={cfg:?} mask={:?}",
+                present.mask()
+            );
             Ok(())
         });
     }

@@ -64,6 +64,7 @@ fn paper_sweep_configs_all_correct() {
             intra: TiePolicy::OneBit,
             inter: TiePolicy::OneBit,
             sparse: false,
+            precision: 2,
         };
         let signs: Vec<Vec<i8>> = (0..row.n).map(|_| vec![rng.gen_sign(), rng.gen_sign()]).collect();
         let out = run_sync(&signs, cfg, row.n as u64 * 7 + row.ell as u64);
@@ -166,7 +167,7 @@ fn tie_policy_matrix_outputs() {
     let signs: Vec<Vec<i8>> = vec![vec![1], vec![-1], vec![1], vec![-1]];
     for intra in [TiePolicy::OneBit, TiePolicy::TwoBit] {
         for inter in [TiePolicy::OneBit, TiePolicy::TwoBit] {
-            let cfg = HiSafeConfig { n: 4, ell: 2, intra, inter, sparse: false };
+            let cfg = HiSafeConfig { n: 4, ell: 2, intra, inter, sparse: false, precision: 2 };
             let out = run_sync(&signs, cfg, 3);
             let has_zero = out.global_vote.iter().any(|&v| v == 0);
             if inter == TiePolicy::OneBit {

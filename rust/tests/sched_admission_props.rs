@@ -34,7 +34,7 @@ fn rand_cfg(g: &mut Gen) -> HiSafeConfig {
     let n1 = g.usize_range(2, 4); // n₁ ≥ 2 so every tenant needs triples
     let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
     let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
-    HiSafeConfig { n: ell * n1, ell, intra, inter, sparse: g.bool() }
+    HiSafeConfig { n: ell * n1, ell, intra, inter, sparse: g.bool(), precision: 2 }
 }
 
 /// A QoS policy tight enough to exercise every admission path but

@@ -11,18 +11,27 @@ use hisafe::engine::{AdmissionError, AggScheduler, AggSession, Engine, Pipelined
 use hisafe::poly::TiePolicy;
 use hisafe::prop_assert_eq;
 use hisafe::protocol::{
-    check_thresholds, plain_hierarchical_vote, plain_hierarchical_vote_present, run_sync,
-    run_sync_with_dropouts, ChurnError, HiSafeConfig, ParticipantSet,
+    check_thresholds, plain_hierarchical_vote, plain_hierarchical_vote_present,
+    plain_quant_aggregate, plain_quant_aggregate_present, run_sync, run_sync_with_dropouts,
+    ChurnError, HiSafeConfig, ParticipantSet,
 };
 use hisafe::util::prop::{forall, Gen};
 use hisafe::util::rng::Rng;
+
+/// A vector of uniformly random quantization levels from `L_q` (the odd
+/// integers `{-(q-1), …, q-1}`; sign bits at `q = 2`).
+fn level_vec(g: &mut Gen, q: u8, d: usize) -> Vec<i8> {
+    (0..d)
+        .map(|_| (2 * g.usize_range(0, q as usize - 1) as i64 - (q as i64 - 1)) as i8)
+        .collect()
+}
 
 fn rand_cfg(g: &mut Gen) -> HiSafeConfig {
     let ell = g.usize_range(1, 3);
     let n1 = g.usize_range(1, 5);
     let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
     let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
-    HiSafeConfig { n: ell * n1, ell, intra, inter, sparse: g.bool() }
+    HiSafeConfig { n: ell * n1, ell, intra, inter, sparse: g.bool(), precision: 2 }
 }
 
 /// Visit order for one round: a random permutation of the tenants, so
@@ -213,6 +222,81 @@ fn churned_scheduler_rounds_match_reference_and_aborts_are_typed() {
             prop_assert_eq!(adm.admitted_rounds, t.completed, "tenant {ti} admitted");
             prop_assert_eq!(adm.rejected, t.aborted, "tenant {ti} rejected");
             prop_assert_eq!(adm.throttled, 0u64, "tenant {ti} unlimited QoS never throttles");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mixed_precision_tenants_interleave_without_cross_talk() {
+    // Quantization × scheduling: tenants at different q ∈ {2, 4, 8, 16}
+    // share one scheduler with randomly interleaved rounds, then each
+    // takes a churned round. Every vote must match the tenant's *own*
+    // q-level plaintext reference — one tenant's wider field, larger
+    // Fermat polynomial, and fatter triple stream must never bleed into
+    // a neighbour's dealing or evaluation.
+    forall("scheduler mixed-precision tenants", 8, |g| {
+        let sched = AggScheduler::with_threads(g.usize_range(1, 2));
+        struct Tenant {
+            cfg: HiSafeConfig,
+            d: usize,
+            session: AggSession,
+        }
+        let n_tenants = g.usize_range(2, 4);
+        let mut tenants: Vec<Tenant> = (0..n_tenants)
+            .map(|i| {
+                // Force precision diversity: tenant 0 stays legacy q=2,
+                // tenant 1 is always quantized, the rest draw randomly.
+                let q = match i {
+                    0 => 2u8,
+                    1 => [4u8, 8, 16][g.usize_range(0, 2)],
+                    _ => hisafe::quant::PRECISIONS[g.usize_range(0, 3)],
+                };
+                let cfg = rand_cfg(g).with_precision(q);
+                let d = g.usize_range(1, 12);
+                Tenant { cfg, d, session: sched.session(cfg, d, g.u64()) }
+            })
+            .collect();
+
+        for round in 0..3u64 {
+            for &ti in &rand_order(g, n_tenants) {
+                let t = &mut tenants[ti];
+                let q = t.cfg.precision;
+                let signs: Vec<Vec<i8>> =
+                    (0..t.cfg.n).map(|_| level_vec(g, q, t.d)).collect();
+                let cfg = t.cfg;
+                let got = t.session.run_round(&signs);
+                prop_assert_eq!(
+                    &got.global_vote,
+                    &plain_quant_aggregate(&signs, cfg),
+                    "tenant {ti} q={q} round {round} cfg={cfg:?}"
+                );
+            }
+        }
+
+        // One churned round per tenant, where a single dropout survives
+        // the threshold (n₁ ≥ 2): survivor votes still match the
+        // tenant's q-level survivor-set reference.
+        for (ti, t) in tenants.iter_mut().enumerate() {
+            if t.cfg.n / t.cfg.ell < 2 {
+                continue;
+            }
+            let q = t.cfg.precision;
+            let signs: Vec<Vec<i8>> = (0..t.cfg.n).map(|_| level_vec(g, q, t.d)).collect();
+            let mut mask = vec![true; t.cfg.n];
+            mask[g.usize_range(0, t.cfg.n - 1)] = false;
+            let present = ParticipantSet::from_mask(mask);
+            let cfg = t.cfg;
+            let got = t
+                .session
+                .try_run_round_present(&signs, &present)
+                .expect("one dropout stays above threshold for n1 >= 2");
+            prop_assert_eq!(
+                &got.global_vote,
+                &plain_quant_aggregate_present(&signs, &present, cfg),
+                "tenant {ti} q={q} churned cfg={cfg:?} mask={:?}",
+                present.mask()
+            );
         }
         Ok(())
     });

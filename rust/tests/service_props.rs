@@ -14,8 +14,9 @@ use hisafe::fl::model::LinearSoftmax;
 use hisafe::fl::trainer::{train, train_remote, Aggregator, FedSpec, TrainConfig};
 use hisafe::poly::TiePolicy;
 use hisafe::protocol::{
-    check_thresholds, plain_hierarchical_vote, plain_hierarchical_vote_present, run_sync,
-    run_sync_with_dropouts, ChurnError, HiSafeConfig, ParticipantSet,
+    check_thresholds, plain_hierarchical_vote, plain_hierarchical_vote_present,
+    plain_quant_aggregate, plain_quant_aggregate_present, run_sync, run_sync_with_dropouts,
+    ChurnError, HiSafeConfig, ParticipantSet,
 };
 use hisafe::service::{
     binary, AdmissionReply, AggFrontend, Codec, Error, Request, Response, ServiceClient,
@@ -31,13 +32,21 @@ fn rand_cfg(g: &mut Gen) -> HiSafeConfig {
     let n1 = g.usize_range(1, 5);
     let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
     let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
-    HiSafeConfig { n: ell * n1, ell, intra, inter, sparse: g.bool() }
+    HiSafeConfig { n: ell * n1, ell, intra, inter, sparse: g.bool(), precision: 2 }
 }
 
 fn rand_order(g: &mut Gen, k: usize) -> Vec<usize> {
     let mut order: Vec<usize> = (0..k).collect();
     g.rng().shuffle(&mut order);
     order
+}
+
+/// A vector of uniformly random quantization levels from `L_q` (the odd
+/// integers `{-(q-1), …, q-1}`; sign bits at `q = 2`).
+fn level_vec(g: &mut Gen, q: u8, d: usize) -> Vec<i8> {
+    (0..d)
+        .map(|_| (2 * g.usize_range(0, q as usize - 1) as i64 - (q as i64 - 1)) as i8)
+        .collect()
 }
 
 /// Spawn a server on an ephemeral loopback port. The handle is joined
@@ -733,6 +742,114 @@ fn killing_a_shard_mid_sweep_recovers_with_bit_identical_votes() {
                 other => return Err(format!("tenant {ti} stats: {other:?}")),
             }
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantized_wire_rounds_bit_identical_across_codecs_and_reference() {
+    // Quantization over the wire: a guaranteed q > 2 tenant and a q = 2
+    // sibling drive the same loopback server from a binary-negotiated
+    // client and a plain v1 JSON client. The packed b-bit binary
+    // payloads and the JSON char-per-level strings must decode to the
+    // same votes —
+    // equal to a dedicated engine and the q-level plaintext reference —
+    // on full-present and churned rounds alike.
+    forall("wire q-level ≡ plain_quant_aggregate (both codecs)", 5, |g| {
+        let (addr, server) = spawn_server(AggFrontend::new(g.usize_range(1, 3), 1));
+        let mut bin = ServiceClient::connect_with_codec(&addr, Codec::Binary)
+            .map_err(|e| e.to_string())?;
+        let mut v1 = ServiceClient::connect(&addr).map_err(|e| e.to_string())?;
+        prop_assert_eq!(bin.codec(), Codec::Binary, "binary server must ack the ask");
+        prop_assert_eq!(v1.codec(), Codec::Json, "a client that never asks stays on v1");
+
+        for q in [hisafe::quant::PRECISIONS[g.usize_range(1, 3)], 2u8] {
+            let ell = g.usize_range(1, 3);
+            let n1 = g.usize_range(2, 4); // n₁ ≥ 2 ⇒ one dropout always survives
+            let intra = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let inter = if g.bool() { TiePolicy::OneBit } else { TiePolicy::TwoBit };
+            let cfg = HiSafeConfig {
+                n: ell * n1,
+                ell,
+                intra,
+                inter,
+                sparse: g.bool(),
+                precision: q,
+            };
+            let d = g.usize_range(1, 12);
+            let seed = g.u64();
+            let sid_b = bin
+                .open_session(cfg, d, seed, QosPolicy::unlimited())
+                .map_err(|e| format!("q={q} open bin: {e}"))?;
+            let sid_j = v1
+                .open_session(cfg, d, seed, QosPolicy::unlimited())
+                .map_err(|e| format!("q={q} open v1: {e}"))?;
+            let mut dedicated = PipelinedEngine::new(cfg, d, seed);
+
+            for round in 0..3u64 {
+                let signs: Vec<Vec<i8>> = (0..cfg.n).map(|_| level_vec(g, q, d)).collect();
+                if round == 1 {
+                    // The churned round: one dropout, both codecs, and
+                    // the dedicated engine advances over the same set so
+                    // the triple streams stay in lockstep.
+                    let mut mask = vec![true; cfg.n];
+                    mask[g.usize_range(0, cfg.n - 1)] = false;
+                    let present = ParticipantSet::from_mask(mask.clone());
+                    let rb = bin
+                        .submit_round_present(sid_b, &signs, &mask)
+                        .map_err(|e| format!("q={q} churned bin: {e:?}"))?;
+                    let rj = v1
+                        .submit_round_present(sid_j, &signs, &mask)
+                        .map_err(|e| format!("q={q} churned v1: {e:?}"))?;
+                    let local = dedicated
+                        .run_round_present(&signs, &present)
+                        .expect("one dropout stays above threshold for n1 >= 2");
+                    prop_assert_eq!(&rb, &rj, "q={q} churned binary vs JSON");
+                    prop_assert_eq!(
+                        &rb.global_vote,
+                        &local.global_vote,
+                        "q={q} churned vs dedicated cfg={cfg:?}"
+                    );
+                    prop_assert_eq!(
+                        &rb.global_vote,
+                        &plain_quant_aggregate_present(&signs, &present, cfg),
+                        "q={q} churned vs survivor plaintext mask={mask:?}"
+                    );
+                } else {
+                    let rb = bin
+                        .submit_round(sid_b, &signs)
+                        .map_err(|e| format!("q={q} round {round} bin: {e:?}"))?;
+                    let rj = v1
+                        .submit_round(sid_j, &signs)
+                        .map_err(|e| format!("q={q} round {round} v1: {e:?}"))?;
+                    let local = dedicated.run_round(&signs);
+                    prop_assert_eq!(&rb, &rj, "q={q} round {round} binary vs JSON");
+                    prop_assert_eq!(
+                        &rb.global_vote,
+                        &local.global_vote,
+                        "q={q} round {round} vs dedicated cfg={cfg:?}"
+                    );
+                    prop_assert_eq!(
+                        &rb.subgroup_votes,
+                        &local.subgroup_votes,
+                        "q={q} round {round} subgroups"
+                    );
+                    prop_assert_eq!(
+                        &rb.global_vote,
+                        &plain_quant_aggregate(&signs, cfg),
+                        "q={q} round {round} vs plaintext reference"
+                    );
+                }
+            }
+            bin.close_session(sid_b).map_err(|e| format!("q={q} close bin: {e}"))?;
+            v1.close_session(sid_j).map_err(|e| format!("q={q} close v1: {e}"))?;
+        }
+        drop(bin); // the serve loop only exits once every connection is gone
+        v1.shutdown().map_err(|e| format!("shutdown: {e}"))?;
+        server
+            .join()
+            .map_err(|_| "serve thread panicked".to_string())?
+            .map_err(|e| format!("serve loop: {e}"))?;
         Ok(())
     });
 }
